@@ -1,0 +1,75 @@
+//! Large-batch scaling study (the Table 3 / Fig 5 scenario, interactive):
+//! scale the CNN workload from 8 to 32 workers with a linearly-scaled,
+//! warmed-up learning rate and compare ScaleCom with and without the
+//! low-pass filter against the uncompressed baseline.
+//!
+//! Run: `make artifacts && cargo run --release --example large_batch_scaling`
+
+use scalecom::config::train::{CompressConfig, TrainConfig};
+use scalecom::metrics::Table;
+use scalecom::trainer::{LrSchedule, Trainer};
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let steps = if quick { 50 } else { 200 };
+    let zoo = scalecom::models::zoo_model("cnn")?;
+    let base_workers = 8usize;
+    let workers = 32usize;
+    let base_lr = 0.05;
+    let peak_lr = base_lr * (workers as f64 / base_workers as f64); // Goyal scaling
+    let warmup = steps / 10;
+
+    println!(
+        "large-batch scaling: cnn, {base_workers} -> {workers} workers \
+         (global batch {} -> {}), lr {base_lr} -> {peak_lr} with {warmup}-step warmup\n",
+        base_workers * zoo.batch_per_worker,
+        workers * zoo.batch_per_worker
+    );
+
+    let mut table = Table::new(&["run", "final train loss", "eval loss", "eval acc"]);
+    for (label, scheme, beta) in [
+        ("dense baseline", "none", 1.0f32),
+        ("scalecom beta=1 (no filter)", "scalecom", 1.0),
+        ("scalecom beta=0.1 (low-pass)", "scalecom", 0.1),
+        ("scalecom beta=0.3", "scalecom", 0.3),
+    ] {
+        let cfg = TrainConfig {
+            model: "cnn".into(),
+            workers,
+            steps,
+            batch_per_worker: zoo.batch_per_worker,
+            lr: peak_lr,
+            eval_every: 0,
+            compress: CompressConfig {
+                scheme: scheme.into(),
+                rate: zoo.default_rate,
+                beta,
+                warmup_steps: if scheme == "none" { 0 } else { warmup },
+                use_flops_rule: true,
+            },
+            ..TrainConfig::default()
+        };
+        let mut trainer = Trainer::from_config(cfg)?;
+        trainer.schedule = LrSchedule::warmup_linear(base_lr, peak_lr, warmup);
+        let mut log = trainer.run()?;
+        log.name = format!(
+            "large_batch_cnn_{}_b{}",
+            scheme.replace('-', ""),
+            (beta * 10.0) as u32
+        );
+        log.save_csv(std::path::Path::new("results"))?;
+        let (eval_loss, eval_acc) = trainer.evaluate()?;
+        table.row(vec![
+            label.to_string(),
+            format!("{:.4}", log.tail_mean("loss", 20).unwrap()),
+            format!("{eval_loss:.4}"),
+            format!("{:.1}%", eval_acc * 100.0),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "paper Fig 5 / Table 3: at scaled LR the unfiltered run (beta=1)\n\
+         degrades; beta≈0.1-0.3 restores parity with the dense baseline."
+    );
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! System-performance explorer: sweep the analytic perf model (§5 /
+//! Appendix F) over every paper network, reporting where ScaleCom's
+//! constant-cost communication wins and by how much.
+//!
+//! Run: `cargo run --release --example perf_scaling` (no artifacts needed)
+
+use scalecom::metrics::Table;
+use scalecom::models::paper::{paper_net, ALL_PAPER_NETS};
+use scalecom::perfmodel::{speedup, step_time, Scheme, SystemConfig};
+
+fn main() -> anyhow::Result<()> {
+    println!("=== ScaleCom speedup across the paper's model zoo ===");
+    println!("(100 TFLOPs/worker, 32 GBps, minibatch/worker 8, rate per Table 2)\n");
+    let mut table = Table::new(&[
+        "network",
+        "params",
+        "comm frac (dense)",
+        "speedup @8w",
+        "speedup @128w",
+        "topk @128w",
+    ]);
+    for name in ALL_PAPER_NETS {
+        let net = paper_net(name)?;
+        let rate = net.paper_rate_std;
+        let mk = |workers| SystemConfig {
+            workers,
+            compression: rate,
+            minibatch_per_worker: if name == "transformer" { 512 } else { 8 },
+            ..SystemConfig::default()
+        };
+        let dense = step_time(&net, &mk(8), Scheme::None);
+        table.row(vec![
+            name.to_string(),
+            format!("{:.1}M", net.total_params() as f64 / 1e6),
+            format!("{:.0}%", dense.comm_fraction() * 100.0),
+            format!("{:.2}x", speedup(&net, &mk(8), Scheme::ScaleCom, Scheme::None)),
+            format!("{:.2}x", speedup(&net, &mk(128), Scheme::ScaleCom, Scheme::None)),
+            format!("{:.2}x", speedup(&net, &mk(128), Scheme::LocalTopK, Scheme::None)),
+        ]);
+    }
+    println!("{}", table.render());
+
+    println!("=== crossover analysis: when does compression stop paying? ===\n");
+    let net = paper_net("resnet50")?;
+    let mut table = Table::new(&[
+        "minibatch/worker",
+        "comm frac (dense)",
+        "scalecom speedup",
+    ]);
+    for mb in [1usize, 2, 4, 8, 16, 32, 64, 128] {
+        let sys = SystemConfig {
+            workers: 64,
+            minibatch_per_worker: mb,
+            ..SystemConfig::default()
+        };
+        let dense = step_time(&net, &sys, Scheme::None);
+        table.row(vec![
+            mb.to_string(),
+            format!("{:.0}%", dense.comm_fraction() * 100.0),
+            format!("{:.2}x", speedup(&net, &sys, Scheme::ScaleCom, Scheme::None)),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "larger per-worker minibatches amortize communication (Fig 6a: the\n\
+         56% -> 20% comm-fraction drop from mb 8 -> 32), shrinking ScaleCom's\n\
+         end-to-end win even at identical compression."
+    );
+    Ok(())
+}

@@ -1,0 +1,159 @@
+"""AOT lowering: jax/pallas -> HLO text artifacts + manifest.
+
+Runs once at build time (`make artifacts`); the Rust binary is
+self-contained afterwards. Per model it emits:
+
+  <name>.hlo.txt           train step  (params, x, y) -> (loss, grads)
+  <name>_eval.hlo.txt      eval step   (params, x, y) -> (loss, correct)
+  <name>_compress.hlo.txt  CLT-k leader (m, g, beta) -> (idx, vals, m')
+  <name>_apply.hlo.txt     CLT-k follower (m, g, idx, beta) -> (vals, m')
+  <name>_init.bin          initial flat parameters (f32 little-endian)
+
+plus a global `manifest.json` describing shapes, dtypes, the layer
+partition of the flat gradient, and the chunk size the compress kernel
+was lowered with.
+
+Interchange is HLO *text*, not serialized protos: jax >= 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 rejects;
+the text parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_to_file(fn, specs, path: str) -> int:
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_model(mdef: M.ModelDef, out_dir: str) -> dict:
+    """Lower all four artifacts for one model; return its manifest entry."""
+    flat, _ = M.flat_init(mdef)
+    dim = int(flat.shape[0])
+    k = -(-dim // mdef.chunk)
+
+    # initial parameters (identical on every worker, as in sync SGD)
+    init_path = os.path.join(out_dir, f"{mdef.name}_init.bin")
+    with open(init_path, "wb") as f:
+        import numpy as np
+
+        f.write(np.asarray(flat, dtype="<f4").tobytes())
+
+    pf = spec((dim,), jnp.float32)
+    x = spec(mdef.x_shape, mdef.x_dtype)
+    y = spec(mdef.y_shape, jnp.int32)
+    mv = spec((dim,), jnp.float32)
+    beta = spec((), jnp.float32)
+    idx = spec((k,), jnp.int32)
+
+    sizes = {}
+    sizes["train"] = lower_to_file(
+        M.make_train_fn(mdef), (pf, x, y), os.path.join(out_dir, f"{mdef.name}.hlo.txt")
+    )
+    sizes["eval"] = lower_to_file(
+        M.make_eval_fn(mdef),
+        (pf, x, y),
+        os.path.join(out_dir, f"{mdef.name}_eval.hlo.txt"),
+    )
+    sizes["compress"] = lower_to_file(
+        M.make_compress_fn(mdef, dim),
+        (mv, mv, beta),
+        os.path.join(out_dir, f"{mdef.name}_compress.hlo.txt"),
+    )
+    sizes["apply"] = lower_to_file(
+        M.make_apply_fn(mdef, dim),
+        (mv, mv, idx, beta),
+        os.path.join(out_dir, f"{mdef.name}_apply.hlo.txt"),
+    )
+
+    entry = {
+        "dim": dim,
+        "batch": mdef.batch,
+        "chunk": mdef.chunk,
+        "k": k,
+        "train": f"{mdef.name}.hlo.txt",
+        "eval": f"{mdef.name}_eval.hlo.txt",
+        "compress": f"{mdef.name}_compress.hlo.txt",
+        "apply": f"{mdef.name}_apply.hlo.txt",
+        "init_params": f"{mdef.name}_init.bin",
+        "x": {"shape": list(mdef.x_shape), "dtype": dtype_name(mdef.x_dtype)},
+        "y": {"shape": list(mdef.y_shape), "dtype": "i32"},
+        "layers": M.layer_partition(mdef),
+        "stands_in_for": mdef.stands_in_for,
+        "hlo_bytes": sizes,
+    }
+    return entry
+
+
+def dtype_name(dt) -> str:
+    return {jnp.float32: "f32", jnp.int32: "i32"}[dt]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--models",
+        default="all",
+        help="comma-separated model names, or 'all'",
+    )
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    reg = M.registry()
+    names = list(reg) if args.models == "all" else args.models.split(",")
+    # Merge with an existing manifest so partial re-lowering (e.g.
+    # `--models cnn`) doesn't drop the other models' entries.
+    man_path = os.path.join(args.out_dir, "manifest.json")
+    manifest = {"version": 1, "models": {}}
+    if os.path.exists(man_path):
+        try:
+            old = json.load(open(man_path))
+            if old.get("version") == 1:
+                manifest["models"].update(old.get("models", {}))
+        except (json.JSONDecodeError, OSError):
+            pass  # regenerate from scratch
+    for name in names:
+        if name not in reg:
+            print(f"unknown model '{name}' (have: {', '.join(reg)})", file=sys.stderr)
+            return 1
+        print(f"[aot] lowering {name} ...", flush=True)
+        manifest["models"][name] = build_model(reg[name], args.out_dir)
+        print(
+            f"[aot]   dim={manifest['models'][name]['dim']} "
+            f"k={manifest['models'][name]['k']}",
+            flush=True,
+        )
+
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"[aot] wrote {man_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

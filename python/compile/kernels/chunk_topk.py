@@ -1,0 +1,100 @@
+"""L1 Pallas kernel: chunk-wise top-1 selection (the compression hot-spot).
+
+The paper accelerates top-k with a chunked quasi-sort ([39], §4): the
+gradient buffer is cut into chunks of C elements and the single
+largest-magnitude element of each chunk is selected — O(1) work per
+element (~3 FLOPs: abs, compare, conditional update) and embarrassingly
+parallel across chunks.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the original is a
+GPU kernel with one threadblock per chunk batch in shared memory. On TPU
+the same insight maps to a VMEM-resident tile per grid step: we reshape
+the flat gradient to [K, C] and give each grid step a (R, C) block —
+R chunk rows resident in VMEM at once — reducing along the lane (C)
+dimension with the VPU. No MXU involvement: selection is bandwidth-bound,
+so the roofline target is HBM bandwidth, not FLOPs.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers the kernel to plain HLO so the same
+artifact runs under the Rust runtime (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Chunk rows per grid step. 8 rows x C lanes keeps the block well under
+# VMEM limits for every rate we use (C <= 512 -> 16 KiB/block at f32).
+ROWS_PER_BLOCK = 8
+
+
+def _chunk_top1_kernel(x_ref, idx_ref, val_ref, *, chunk_size, rows, total):
+    """One grid step: select the max-|x| element of each of `rows` chunks.
+
+    x_ref:   (rows, chunk_size) f32 block in VMEM
+    idx_ref: (rows,) i32 global indices of the winners
+    val_ref: (rows,) f32 winner values (signed)
+    """
+    pid = pl.program_id(0)
+    x = x_ref[...]
+    # Global flat position of every element in the block; positions past
+    # the real input (padding) get magnitude -1 so they can never win.
+    row_ids = pid * rows + jax.lax.broadcasted_iota(jnp.int32, (rows, chunk_size), 0)
+    col_ids = jax.lax.broadcasted_iota(jnp.int32, (rows, chunk_size), 1)
+    pos = row_ids * chunk_size + col_ids
+    mag = jnp.where(pos < total, jnp.abs(x), -1.0)
+    am = jnp.argmax(mag, axis=1)  # first occurrence on ties (lowest index)
+    r = jnp.arange(rows)
+    winner_pos = (pid * rows + r) * chunk_size + am
+    idx_ref[...] = winner_pos.astype(jnp.int32)
+    val_ref[...] = x[r, am]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_size",))
+def chunk_top1(x, chunk_size):
+    """Pallas chunk-wise top-1 of a flat vector.
+
+    Returns (idx [K] i32, vals [K] f32), K = ceil(P / chunk_size); matches
+    ``ref.chunk_top1_ref`` exactly.
+    """
+    p = x.shape[0]
+    c = int(chunk_size)
+    k = -(-p // c)
+    rows = min(ROWS_PER_BLOCK, k)
+    k_pad = -(-k // rows) * rows
+    # Pad the flat vector out to k_pad full chunks; in-kernel position
+    # masking guarantees padding never wins within a live chunk, and the
+    # rows beyond K are sliced off below.
+    xpad = jnp.pad(x, (0, k_pad * c - p)).reshape(k_pad, c)
+    grid = (k_pad // rows,)
+    kernel = functools.partial(
+        _chunk_top1_kernel, chunk_size=c, rows=rows, total=p
+    )
+    idx, vals = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((rows, c), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((rows,), lambda i: (i,)),
+            pl.BlockSpec((rows,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k_pad,), jnp.int32),
+            jax.ShapeDtypeStruct((k_pad,), jnp.float32),
+        ],
+        interpret=True,
+    )(xpad)
+    return idx[:k], vals[:k]
+
+
+def vmem_bytes_per_block(chunk_size, rows=ROWS_PER_BLOCK):
+    """Estimated VMEM footprint of one grid step (input block + outputs +
+    the two iota/position intermediates) — used by the L1 perf notes in
+    DESIGN.md/EXPERIMENTS.md §Perf."""
+    c = int(chunk_size)
+    block = rows * c * 4          # x tile (f32)
+    pos = 2 * rows * c * 4        # row/col iota (i32)
+    outs = 2 * rows * 4
+    return block + pos + outs

@@ -1,0 +1,60 @@
+"""L1 Pallas kernel: low-pass error-feedback memory update (Eqn. 5).
+
+Elementwise over the flat gradient:  m' = m + beta*g - beta*(m+g)*sel.
+Bandwidth-bound (3 reads + 1 write per element, ~4 FLOPs), so the TPU
+mapping is a plain 1-D VMEM tiling along the flat dimension; the block
+size keeps three f32 input tiles + one output tile under 1 MiB.
+
+interpret=True for the same reason as chunk_topk.py.
+"""
+
+
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 4096  # elements per grid step (4 tiles x 16 KiB = 64 KiB VMEM)
+
+
+def _lowpass_kernel(beta_ref, m_ref, g_ref, sel_ref, out_ref):
+    beta = beta_ref[0]
+    m = m_ref[...]
+    g = g_ref[...]
+    sel = sel_ref[...]
+    ef = m + g
+    out_ref[...] = m + beta * g - beta * ef * sel
+
+
+@jax.jit
+def lowpass_update(m, g, sel_mask, beta):
+    """Pallas low-pass memory update; matches ``ref.lowpass_update_ref``."""
+    p = m.shape[0]
+    block = min(BLOCK, p)
+    p_pad = -(-p // block) * block
+    pad = p_pad - p
+    mp = jnp.pad(m, (0, pad))
+    gp = jnp.pad(g, (0, pad))
+    sp = jnp.pad(sel_mask, (0, pad))
+    beta_arr = jnp.reshape(beta, (1,)).astype(jnp.float32)
+    out = pl.pallas_call(
+        _lowpass_kernel,
+        grid=(p_pad // block,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),  # beta broadcast
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((p_pad,), jnp.float32),
+        interpret=True,
+    )(beta_arr, mp, gp, sp)
+    return out[:p]
+
+
+def vmem_bytes_per_block(block=BLOCK):
+    """VMEM footprint of one grid step (3 input tiles + 1 output)."""
+    return 4 * block * 4 + 4
+
+

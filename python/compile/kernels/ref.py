@@ -1,0 +1,54 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: ``chunk_topk.py`` and
+``lowpass.py`` must match them exactly (pytest + hypothesis sweeps in
+``python/tests/``), and the Rust-native implementations in
+``rust/src/compress/`` are cross-checked against the same semantics in
+``rust/tests/kernel_parity.rs``.
+"""
+
+import jax.numpy as jnp
+
+
+def chunk_top1_ref(x, chunk_size):
+    """Indices+values of the max-|x| element of each chunk.
+
+    Ties break to the lowest index (jnp.argmax semantics, matching the
+    Rust implementation). The trailing partial chunk also contributes one
+    element. Returns (idx [K] i32, vals [K] f32) with K = ceil(P/C).
+    """
+    p = x.shape[0]
+    c = int(chunk_size)
+    k = -(-p // c)  # ceil
+    pad = k * c - p
+    mag = jnp.abs(x)
+    # padding positions must never win: magnitude -1
+    mag = jnp.pad(mag, (0, pad), constant_values=-1.0)
+    xpad = jnp.pad(x, (0, pad))
+    mag2 = mag.reshape(k, c)
+    am = jnp.argmax(mag2, axis=1)  # first occurrence on ties
+    idx = (jnp.arange(k) * c + am).astype(jnp.int32)
+    vals = xpad[idx]
+    return idx, vals
+
+
+def lowpass_update_ref(m, g, sel_mask, beta):
+    """Low-pass error-feedback memory update, Eqn. (5) of the paper.
+
+    m' = (1-beta)*m + beta*(m + g - sent)  with  sent = (m+g)*sel_mask
+       = m + beta*g - beta*(m+g)*sel_mask   (elementwise)
+
+    sel_mask is 1.0 on transmitted coordinates, 0.0 elsewhere.
+    """
+    ef = m + g
+    return m + beta * g - beta * ef * sel_mask
+
+
+def sparsify_ref(ef, idx):
+    """Gather ef[idx] — the follower-side compression of CLT-k."""
+    return jnp.take(ef, idx)
+
+
+def mask_from_indices_ref(idx, dim):
+    """0/1 mask of the selected coordinates."""
+    return jnp.zeros((dim,), jnp.float32).at[idx].set(1.0)

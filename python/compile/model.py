@@ -1,0 +1,236 @@
+"""L2 registry: every trainable model as `(params, x, y) -> (loss, ...)`
+jax functions plus the metadata `aot.py` needs to lower them.
+
+The registry dimensions mirror `rust/src/models/zoo.rs` exactly; the Rust
+trainer validates the manifest against its zoo entry at load time.
+"""
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Tuple
+
+import jax
+import jax.flatten_util
+import jax.numpy as jnp
+
+from compile.models import cnn, lstm, mlp, transformer
+
+
+@dataclass
+class ModelDef:
+    name: str
+    cfg: Dict[str, Any]
+    init: Callable  # key -> params pytree
+    loss_and_correct: Callable  # (params, x, y) -> (loss, correct)
+    batch: int
+    x_shape: Tuple[int, ...]  # includes batch dim
+    x_dtype: Any
+    y_shape: Tuple[int, ...]
+    # default chunk size == compression rate for the compress artifact
+    chunk: int = 100
+    # per-sample FLOPs multiplier for matmul leaves (seq positions)
+    seq_mult: int = 1
+    stands_in_for: str = ""
+
+
+def _mlp() -> ModelDef:
+    cfg = {"feature_dim": 32, "classes": 10}
+    return ModelDef(
+        name="mlp",
+        cfg=cfg,
+        init=functools.partial(mlp.init_params, cfg=cfg),
+        loss_and_correct=mlp.loss_and_correct,
+        batch=32,
+        x_shape=(32, 32),
+        x_dtype=jnp.float32,
+        y_shape=(32,),
+        chunk=92,
+        stands_in_for="ResNet34/CIFAR10",
+    )
+
+
+def _cnn() -> ModelDef:
+    cfg = {"classes": 10, "side": 16}
+    return ModelDef(
+        name="cnn",
+        cfg=cfg,
+        init=functools.partial(cnn.init_params, cfg=cfg),
+        loss_and_correct=functools.partial(cnn.loss_and_correct, side=16),
+        batch=32,
+        x_shape=(32, 256),
+        x_dtype=jnp.float32,
+        y_shape=(32,),
+        chunk=112,
+        seq_mult=196,  # ~H*W positions per conv application
+        stands_in_for="ResNet18-50+MobileNetV2/ImageNet",
+    )
+
+
+def _transformer(name="transformer", vocab=32, seq=16, d=64, layers=2, ffn=128,
+                 heads=4, batch=16, chunk=47, stands_in="Transformer-base/WMT14"):
+    cfg = {"vocab": vocab, "seq": seq, "d_model": d, "layers": layers, "ffn": ffn}
+    return ModelDef(
+        name=name,
+        cfg=cfg,
+        init=functools.partial(transformer.init_params, cfg=cfg),
+        loss_and_correct=functools.partial(transformer.loss_and_correct, heads=heads),
+        batch=batch,
+        x_shape=(batch, seq),
+        x_dtype=jnp.int32,
+        y_shape=(batch, seq),
+        chunk=chunk,
+        seq_mult=seq,
+        stands_in_for=stands_in,
+    )
+
+
+def _lstm() -> ModelDef:
+    cfg = {"feature_dim": 8, "hidden": 32, "classes": 6}
+    seq = 12
+    return ModelDef(
+        name="lstm",
+        cfg=cfg,
+        init=functools.partial(lstm.init_params, cfg=cfg),
+        loss_and_correct=functools.partial(
+            lstm.loss_and_correct, seq=seq, feat=8, hidden=32
+        ),
+        batch=32,
+        x_shape=(32, seq * 8),
+        x_dtype=jnp.float32,
+        y_shape=(32, seq),
+        chunk=400,
+        seq_mult=seq,
+        stands_in_for="4-bi-LSTM/SWB300",
+    )
+
+
+def registry() -> Dict[str, ModelDef]:
+    models = [
+        _mlp(),
+        _cnn(),
+        _transformer(),
+        _transformer(
+            name="transformer-med",
+            vocab=64,
+            seq=32,
+            d=128,
+            layers=4,
+            ffn=256,
+            heads=4,
+            batch=16,
+            chunk=47,
+            stands_in="Transformer-base/WMT14 (E2E driver)",
+        ),
+        _lstm(),
+    ]
+    return {m.name: m for m in models}
+
+
+# ----------------------------------------------------------------------
+# Flat-parameter plumbing
+# ----------------------------------------------------------------------
+
+
+def flat_init(mdef: ModelDef, seed: int = 0):
+    """Initial parameters as (flat f32 vector, unravel fn)."""
+    params = mdef.init(jax.random.PRNGKey(seed))
+    flat, unravel = jax.flatten_util.ravel_pytree(params)
+    return flat.astype(jnp.float32), unravel
+
+
+def layer_partition(mdef: ModelDef) -> List[Dict[str, Any]]:
+    """Flat-vector layer slices: (name, offset, len, flops_per_sample).
+
+    Matmul-like leaves (ndim >= 2) get 2*prod(shape)*seq_mult FLOPs per
+    sample; vectors (biases, LN scales) get 0, which makes the Rust
+    per-layer rate rule fall back to the model default for them.
+    """
+    params = mdef.init(jax.random.PRNGKey(0))
+    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    out = []
+    offset = 0
+    for path, leaf in leaves:
+        name = "/".join(_path_str(p) for p in path)
+        size = int(leaf.size)
+        flops = 2.0 * size * mdef.seq_mult if leaf.ndim >= 2 else 0.0
+        out.append(
+            {
+                "name": name,
+                "offset": offset,
+                "len": size,
+                "flops_per_sample": flops,
+                "compress": True,
+            }
+        )
+        offset += size
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+# ----------------------------------------------------------------------
+# The four artifact functions per model
+# ----------------------------------------------------------------------
+
+
+def make_train_fn(mdef: ModelDef):
+    """(params_flat, x, y) -> (loss, grads_flat)."""
+    _, unravel = flat_init(mdef)
+
+    def loss_only(pf, x, y):
+        loss, _ = mdef.loss_and_correct(unravel(pf), x, y)
+        return loss
+
+    def train_step(pf, x, y):
+        loss, grads = jax.value_and_grad(loss_only)(pf, x, y)
+        return loss, grads
+
+    return train_step
+
+
+def make_eval_fn(mdef: ModelDef):
+    """(params_flat, x, y) -> (loss, correct_count)."""
+    _, unravel = flat_init(mdef)
+
+    def eval_step(pf, x, y):
+        return mdef.loss_and_correct(unravel(pf), x, y)
+
+    return eval_step
+
+
+def make_compress_fn(mdef: ModelDef, dim: int):
+    """Leader-side CLT-k step on the L1 Pallas kernels:
+    (m, g, beta) -> (idx, vals, m_next)."""
+    from compile.kernels.chunk_topk import chunk_top1
+    from compile.kernels.lowpass import lowpass_update
+
+    chunk = mdef.chunk
+
+    def compress(m, g, beta):
+        ef = m + g
+        idx, vals = chunk_top1(ef, chunk)
+        mask = jnp.zeros((dim,), jnp.float32).at[idx].set(1.0)
+        m_next = lowpass_update(m, g, mask, beta)
+        return idx, vals, m_next
+
+    return compress
+
+
+def make_apply_fn(mdef: ModelDef, dim: int):
+    """Follower-side CLT-k step: (m, g, idx, beta) -> (vals, m_next)."""
+    from compile.kernels.lowpass import lowpass_update
+
+    def apply(m, g, idx, beta):
+        ef = m + g
+        vals = jnp.take(ef, idx)
+        mask = jnp.zeros((dim,), jnp.float32).at[idx].set(1.0)
+        m_next = lowpass_update(m, g, mask, beta)
+        return vals, m_next
+
+    return apply

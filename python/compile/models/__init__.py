@@ -1,0 +1,5 @@
+"""L2 model zoo: JAX forward/backward graphs lowered to HLO artifacts.
+
+Each module exposes ``init_params(key, cfg)`` and ``loss_and_correct``;
+``compile.model`` assembles them into the registry that ``aot.py`` lowers.
+"""

@@ -1,0 +1,73 @@
+"""Small conv net (vision stand-in, large — paper's ResNet/MobileNet slot).
+
+16x16x1 input -> conv3x3(8) ReLU -> maxpool2 -> conv3x3(16) ReLU ->
+maxpool2 -> flatten -> dense 64 -> classes. The conv stages give the
+model the high FLOPs-per-parameter profile that drives the paper's
+per-layer compression-rate rule (conv layers land in the gentle 25-50X
+bands, the dense head in the aggressive 400X band).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def init_params(key, cfg):
+    classes = cfg["classes"]
+    side = cfg.get("side", 16)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+
+    def conv(k, kh, kw, cin, cout):
+        w = jax.random.normal(k, (kh, kw, cin, cout), jnp.float32)
+        return {
+            "w": w * jnp.sqrt(2.0 / (kh * kw * cin)),
+            "b": jnp.zeros((cout,), jnp.float32),
+        }
+
+    flat = (side // 4) * (side // 4) * 16
+    wd = jax.random.normal(k3, (flat, 64), jnp.float32) * jnp.sqrt(2.0 / flat)
+    # small-scale logit head: keeps the initial loss near ln(classes)
+    wo = jax.random.normal(k4, (64, classes), jnp.float32) * 0.03
+    return {
+        "conv1": conv(k1, 3, 3, 1, 8),
+        "conv2": conv(k2, 3, 3, 8, 16),
+        "dense": {"w": wd, "b": jnp.zeros((64,), jnp.float32)},
+        "out": {"w": wo, "b": jnp.zeros((classes,), jnp.float32)},
+    }
+
+
+def _conv2d(x, w):
+    # x: [B, H, W, C], w: [kh, kw, cin, cout], SAME padding
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def logits_fn(params, x, side):
+    b = x.shape[0]
+    img = x.reshape(b, side, side, 1)
+    h = jax.nn.relu(_conv2d(img, params["conv1"]["w"]) + params["conv1"]["b"])
+    h = _maxpool2(h)
+    h = jax.nn.relu(_conv2d(h, params["conv2"]["w"]) + params["conv2"]["b"])
+    h = _maxpool2(h)
+    h = h.reshape(b, -1)
+    h = jax.nn.relu(h @ params["dense"]["w"] + params["dense"]["b"])
+    return h @ params["out"]["w"] + params["out"]["b"]
+
+
+def loss_and_correct(params, x, y, side=16):
+    """x: [B, side*side] f32, y: [B] i32."""
+    logits = logits_fn(params, x, side)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=1)[:, 0]
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return jnp.mean(nll), correct

@@ -1,0 +1,72 @@
+"""Bidirectional LSTM frame classifier (speech stand-in — SWB300 slot).
+
+One bi-LSTM layer (jax.lax.scan over time, both directions) followed by a
+per-frame dense softmax — the miniature of the paper's 4-bi-LSTM acoustic
+model. Per-frame cross-entropy, matching CD-HMM state classification.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def init_params(key, cfg):
+    feat, hidden, classes = cfg["feature_dim"], cfg["hidden"], cfg["classes"]
+    k1, k2, k3 = jax.random.split(key, 3)
+
+    def lstm_dir(k):
+        kw, ku = jax.random.split(k)
+        return {
+            # gates stacked [i, f, g, o]: inputs feat -> 4H, hidden H -> 4H
+            "wx": jax.random.normal(kw, (feat, 4 * hidden), jnp.float32)
+            * jnp.sqrt(1.0 / feat),
+            "wh": jax.random.normal(ku, (hidden, 4 * hidden), jnp.float32)
+            * jnp.sqrt(1.0 / hidden),
+            "b": jnp.zeros((4 * hidden,), jnp.float32),
+        }
+
+    wo = jax.random.normal(k3, (2 * hidden, classes), jnp.float32) * jnp.sqrt(
+        1.0 / (2 * hidden)
+    )
+    return {
+        "fwd": lstm_dir(k1),
+        "bwd": lstm_dir(k2),
+        "out": {"w": wo, "b": jnp.zeros((classes,), jnp.float32)},
+    }
+
+
+def _lstm_scan(p, xs, hidden):
+    """xs: [T, B, F] -> outputs [T, B, H]."""
+    b = xs.shape[1]
+    h0 = jnp.zeros((b, hidden), jnp.float32)
+    c0 = jnp.zeros((b, hidden), jnp.float32)
+
+    def step(carry, x_t):
+        h, c = carry
+        z = x_t @ p["wx"] + h @ p["wh"] + p["b"]
+        i, f, g, o = jnp.split(z, 4, axis=-1)
+        c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), h
+
+    _, hs = jax.lax.scan(step, (h0, c0), xs)
+    return hs
+
+
+def logits_fn(params, x, seq, feat, hidden):
+    # x: [B, T*F] flat frames -> [T, B, F]
+    b = x.shape[0]
+    xs = x.reshape(b, seq, feat).transpose(1, 0, 2)
+    h_f = _lstm_scan(params["fwd"], xs, hidden)
+    h_b = _lstm_scan(params["bwd"], xs[::-1], hidden)[::-1]
+    h = jnp.concatenate([h_f, h_b], axis=-1)  # [T, B, 2H]
+    logits = h @ params["out"]["w"] + params["out"]["b"]
+    return logits.transpose(1, 0, 2)  # [B, T, C]
+
+
+def loss_and_correct(params, x, y, seq=12, feat=8, hidden=32):
+    """x: [B, T*F] f32, y: [B, T] i32 frame labels."""
+    logits = logits_fn(params, x, seq, feat, hidden)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return jnp.mean(nll), correct

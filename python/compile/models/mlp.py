@@ -1,0 +1,38 @@
+"""MLP classifier (vision stand-in, small — paper's ResNet34/CIFAR10 slot).
+
+Architecture: feat -> 64 -> 32 -> classes, ReLU, softmax cross-entropy.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def init_params(key, cfg):
+    feat, classes = cfg["feature_dim"], cfg["classes"]
+    h1, h2 = cfg.get("hidden1", 64), cfg.get("hidden2", 32)
+    k1, k2, k3 = jax.random.split(key, 3)
+
+    def dense(k, fan_in, fan_out):
+        w = jax.random.normal(k, (fan_in, fan_out), jnp.float32)
+        return {"w": w * jnp.sqrt(2.0 / fan_in), "b": jnp.zeros((fan_out,), jnp.float32)}
+
+    return {
+        "l1": dense(k1, feat, h1),
+        "l2": dense(k2, h1, h2),
+        "l3": dense(k3, h2, classes),
+    }
+
+
+def logits_fn(params, x):
+    h = jax.nn.relu(x @ params["l1"]["w"] + params["l1"]["b"])
+    h = jax.nn.relu(h @ params["l2"]["w"] + params["l2"]["b"])
+    return h @ params["l3"]["w"] + params["l3"]["b"]
+
+
+def loss_and_correct(params, x, y):
+    """x: [B, F] f32, y: [B] i32 -> (mean CE loss, correct count f32)."""
+    logits = logits_fn(params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=1)[:, 0]
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return jnp.mean(nll), correct

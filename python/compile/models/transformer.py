@@ -1,0 +1,84 @@
+"""Decoder-only transformer LM (language stand-in — Transformer-base slot).
+
+Pre-LN blocks: LN -> causal MHA -> residual, LN -> FFN(GeLU) -> residual;
+learned positional embeddings; untied output projection. Cross-entropy
+over every position.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def init_params(key, cfg):
+    v, s, d = cfg["vocab"], cfg["seq"], cfg["d_model"]
+    n_layers, ffn = cfg["layers"], cfg["ffn"]
+    keys = jax.random.split(key, 4 + 6 * n_layers)
+    ki = iter(keys)
+
+    def mat(k, a, b, scale=None):
+        scale = scale if scale is not None else jnp.sqrt(1.0 / a)
+        return jax.random.normal(k, (a, b), jnp.float32) * scale
+
+    params = {
+        "embed": mat(next(ki), v, d, 0.02),
+        "pos": mat(next(ki), s, d, 0.02),
+        "ln_f": {"g": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)},
+        "out": mat(next(ki), d, v),
+        "blocks": [],
+    }
+    _ = next(ki)
+    for _layer in range(n_layers):
+        blk = {
+            "ln1": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+            "wq": mat(next(ki), d, d),
+            "wk": mat(next(ki), d, d),
+            "wv": mat(next(ki), d, d),
+            "wo": mat(next(ki), d, d),
+            "ln2": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+            "w1": mat(next(ki), d, ffn),
+            "w2": mat(next(ki), ffn, d),
+        }
+        params["blocks"].append(blk)
+    return params
+
+
+def _ln(x, p):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * p["g"] + p["b"]
+
+
+def _attn(h, blk, heads):
+    b, s, d = h.shape
+    hd = d // heads
+
+    def split(x):
+        return x.reshape(b, s, heads, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = split(h @ blk["wq"]), split(h @ blk["wk"]), split(h @ blk["wv"])
+    scores = q @ k.transpose(0, 1, 3, 2) / jnp.sqrt(hd)
+    mask = jnp.tril(jnp.ones((s, s), jnp.float32))
+    scores = jnp.where(mask[None, None] > 0, scores, -1e9)
+    attn = jax.nn.softmax(scores, axis=-1)
+    out = (attn @ v).transpose(0, 2, 1, 3).reshape(b, s, d)
+    return out @ blk["wo"]
+
+
+def logits_fn(params, tokens, heads):
+    # tokens: [B, S] i32
+    h = params["embed"][tokens] + params["pos"][None, :, :]
+    for blk in params["blocks"]:
+        h = h + _attn(_ln(h, blk["ln1"]), blk, heads)
+        ff = jax.nn.gelu(_ln(h, blk["ln2"]) @ blk["w1"]) @ blk["w2"]
+        h = h + ff
+    h = _ln(h, params["ln_f"])
+    return h @ params["out"]  # [B, S, V]
+
+
+def loss_and_correct(params, x, y, heads=4):
+    """x: [B, S] i32 tokens, y: [B, S] i32 next-token targets."""
+    logits = logits_fn(params, x, heads)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return jnp.mean(nll), correct

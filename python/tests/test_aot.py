@@ -1,0 +1,127 @@
+"""AOT pipeline: artifact emission, manifest schema, and the semantic
+equivalence of the compress/apply artifact functions with the reference
+compressor (the contract the Rust runtime relies on)."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+from compile.kernels.ref import chunk_top1_ref, lowpass_update_ref, mask_from_indices_ref
+
+REG = M.registry()
+
+
+@pytest.fixture(scope="module")
+def mlp_artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    entry = aot.build_model(REG["mlp"], str(out))
+    return out, entry
+
+
+def test_artifacts_written(mlp_artifacts):
+    out, entry = mlp_artifacts
+    for key in ["train", "eval", "compress", "apply"]:
+        path = out / entry[key]
+        assert path.exists(), key
+        text = path.read_text()
+        assert text.startswith("HloModule"), f"{key} is not HLO text"
+        assert len(text) > 1000
+    init = out / entry["init_params"]
+    assert init.stat().st_size == 4 * entry["dim"]
+
+
+def test_manifest_schema(mlp_artifacts):
+    _, entry = mlp_artifacts
+    assert entry["dim"] > 0
+    assert entry["k"] == -(-entry["dim"] // entry["chunk"])
+    assert entry["x"]["dtype"] in ("f32", "i32")
+    assert entry["y"]["dtype"] == "i32"
+    offset = 0
+    for l in entry["layers"]:
+        assert l["offset"] == offset
+        offset += l["len"]
+    assert offset == entry["dim"]
+
+
+def test_manifest_json_roundtrip(mlp_artifacts, tmp_path):
+    _, entry = mlp_artifacts
+    p = tmp_path / "m.json"
+    with open(p, "w") as f:
+        json.dump({"version": 1, "models": {"mlp": entry}}, f)
+    loaded = json.load(open(p))
+    assert loaded["models"]["mlp"]["dim"] == entry["dim"]
+
+
+def test_compress_fn_matches_reference():
+    """The lowered compress fn must equal ref-selection + ref-update."""
+    mdef = REG["mlp"]
+    flat, _ = M.flat_init(mdef)
+    dim = int(flat.shape[0])
+    compress = jax.jit(M.make_compress_fn(mdef, dim))
+    rng = np.random.default_rng(5)
+    m = jnp.asarray(rng.normal(size=dim).astype(np.float32))
+    g = jnp.asarray(rng.normal(size=dim).astype(np.float32))
+    idx, vals, m_next = compress(m, g, jnp.float32(0.1))
+    ef = m + g
+    ri, rv = chunk_top1_ref(ef, mdef.chunk)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ri))
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(rv), atol=1e-6)
+    mask = mask_from_indices_ref(ri, dim)
+    rm = lowpass_update_ref(m, g, mask, 0.1)
+    np.testing.assert_allclose(np.asarray(m_next), np.asarray(rm), atol=1e-6)
+
+
+def test_apply_fn_follows_leader_indices():
+    """Follower path: values gathered at the *leader's* indices and the
+    same low-pass memory update."""
+    mdef = REG["mlp"]
+    flat, _ = M.flat_init(mdef)
+    dim = int(flat.shape[0])
+    apply = jax.jit(M.make_apply_fn(mdef, dim))
+    rng = np.random.default_rng(7)
+    m = jnp.asarray(rng.normal(size=dim).astype(np.float32))
+    g = jnp.asarray(rng.normal(size=dim).astype(np.float32))
+    k = -(-dim // mdef.chunk)
+    leader_idx = jnp.asarray(
+        np.sort(rng.choice(dim, size=k, replace=False)).astype(np.int32)
+    )
+    vals, m_next = apply(m, g, leader_idx, jnp.float32(0.3))
+    ef = np.asarray(m + g)
+    np.testing.assert_allclose(np.asarray(vals), ef[np.asarray(leader_idx)], atol=1e-6)
+    mask = mask_from_indices_ref(leader_idx, dim)
+    rm = lowpass_update_ref(m, g, mask, 0.3)
+    np.testing.assert_allclose(np.asarray(m_next), np.asarray(rm), atol=1e-6)
+
+
+def test_commutativity_through_artifact_functions():
+    """CLT-k Definition (1) through the *lowered* functions: averaging the
+    per-worker sparsified values equals sparsifying the averaged EF
+    gradient at the leader's indices."""
+    mdef = REG["mlp"]
+    flat, _ = M.flat_init(mdef)
+    dim = int(flat.shape[0])
+    compress = jax.jit(M.make_compress_fn(mdef, dim))
+    apply = jax.jit(M.make_apply_fn(mdef, dim))
+    rng = np.random.default_rng(11)
+    n = 4
+    ms = [jnp.asarray(rng.normal(size=dim).astype(np.float32)) for _ in range(n)]
+    gs = [jnp.asarray(rng.normal(size=dim).astype(np.float32)) for _ in range(n)]
+    idx, vals0, _ = compress(ms[0], gs[0], jnp.float32(1.0))
+    avg_vals = np.asarray(vals0, dtype=np.float64)
+    for i in range(1, n):
+        vi, _ = apply(ms[i], gs[i], idx, jnp.float32(1.0))
+        avg_vals += np.asarray(vi, dtype=np.float64)
+    avg_vals /= n
+    ef_avg = sum(np.asarray(m + g, dtype=np.float64) for m, g in zip(ms, gs)) / n
+    np.testing.assert_allclose(avg_vals, ef_avg[np.asarray(idx)], atol=1e-5)
+
+
+def test_dtype_name_mapping():
+    assert aot.dtype_name(jnp.float32) == "f32"
+    assert aot.dtype_name(jnp.int32) == "i32"

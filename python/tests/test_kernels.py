@@ -1,0 +1,173 @@
+"""L1 kernel correctness: Pallas vs pure-jnp reference (the core
+correctness signal for the compression hot-spot), including hypothesis
+sweeps over shapes, chunk sizes and discount factors."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.chunk_topk import chunk_top1, vmem_bytes_per_block
+from compile.kernels.lowpass import lowpass_update
+from compile.kernels.ref import (
+    chunk_top1_ref,
+    lowpass_update_ref,
+    mask_from_indices_ref,
+    sparsify_ref,
+)
+
+
+def _rand(p, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0, scale, p).astype(np.float32))
+
+
+# ----------------------------------------------------------------------
+# chunk_top1
+# ----------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "p,c",
+    [(8, 4), (40, 4), (100, 7), (4000, 400), (37, 64), (8, 1), (65, 8), (1, 1), (5, 5)],
+)
+def test_chunk_top1_matches_ref(p, c):
+    x = _rand(p, seed=p * 31 + c)
+    ri, rv = chunk_top1_ref(x, c)
+    ki, kv = chunk_top1(x, c)
+    np.testing.assert_array_equal(np.asarray(ri), np.asarray(ki))
+    np.testing.assert_allclose(np.asarray(rv), np.asarray(kv))
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    p=st.integers(min_value=1, max_value=3000),
+    c=st.integers(min_value=1, max_value=512),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_chunk_top1_hypothesis_sweep(p, c, seed):
+    x = _rand(p, seed=seed)
+    ri, rv = chunk_top1_ref(x, c)
+    ki, kv = chunk_top1(x, c)
+    np.testing.assert_array_equal(np.asarray(ri), np.asarray(ki))
+    np.testing.assert_allclose(np.asarray(rv), np.asarray(kv))
+
+
+def test_chunk_top1_output_size_is_rate():
+    x = _rand(4000)
+    idx, vals = chunk_top1(x, 400)
+    assert idx.shape == (10,) and vals.shape == (10,)
+
+
+def test_chunk_top1_selects_argmax_per_chunk():
+    x = jnp.asarray([1.0, -3.0, 2.0, 0.5, 0.1, -0.2, 9.0, 0.0], jnp.float32)
+    idx, vals = chunk_top1(x, 4)
+    assert list(np.asarray(idx)) == [1, 6]
+    assert list(np.asarray(vals)) == [-3.0, 9.0]
+
+
+def test_chunk_top1_tie_prefers_lowest_index():
+    x = jnp.asarray([2.0, -2.0, 1.0, 0.0], jnp.float32)
+    idx, _ = chunk_top1(x, 4)
+    assert int(idx[0]) == 0
+
+
+def test_chunk_top1_all_zero_input():
+    x = jnp.zeros((16,), jnp.float32)
+    idx, vals = chunk_top1(x, 4)
+    assert list(np.asarray(idx)) == [0, 4, 8, 12]
+    assert np.all(np.asarray(vals) == 0.0)
+
+
+def test_chunk_top1_padding_never_wins():
+    # last chunk has 1 real element (0.0) + 3 padded: real must win
+    x = jnp.asarray([5.0, 1.0, 1.0, 1.0, 0.0], jnp.float32)
+    idx, vals = chunk_top1(x, 4)
+    assert list(np.asarray(idx)) == [0, 4]
+    assert int(idx[1]) < 5  # never an out-of-range padded index
+
+
+def test_chunk_top1_indices_within_range():
+    for p in [3, 17, 63, 1000]:
+        x = _rand(p, seed=p)
+        idx, _ = chunk_top1(x, 8)
+        assert np.all(np.asarray(idx) < p)
+
+
+def test_vmem_estimate_reasonable():
+    # single block stays far below the ~16 MiB VMEM of a TPU core
+    assert vmem_bytes_per_block(512) < 1 << 20
+
+
+# ----------------------------------------------------------------------
+# lowpass_update
+# ----------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("p", [1, 10, 4095, 4096, 4097, 20000])
+@pytest.mark.parametrize("beta", [0.1, 0.3, 1.0])
+def test_lowpass_matches_ref(p, beta):
+    m = _rand(p, seed=p)
+    g = _rand(p, seed=p + 1)
+    rng = np.random.default_rng(p + 2)
+    sel = jnp.asarray((rng.random(p) < 0.2).astype(np.float32))
+    r = lowpass_update_ref(m, g, sel, beta)
+    k = lowpass_update(m, g, sel, jnp.float32(beta))
+    np.testing.assert_allclose(np.asarray(r), np.asarray(k), atol=1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    p=st.integers(min_value=1, max_value=9000),
+    beta=st.floats(min_value=0.01, max_value=1.0),
+    frac=st.floats(min_value=0.0, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_lowpass_hypothesis_sweep(p, beta, frac, seed):
+    rng = np.random.default_rng(seed)
+    m = jnp.asarray(rng.normal(size=p).astype(np.float32))
+    g = jnp.asarray(rng.normal(size=p).astype(np.float32))
+    sel = jnp.asarray((rng.random(p) < frac).astype(np.float32))
+    r = lowpass_update_ref(m, g, sel, beta)
+    k = lowpass_update(m, g, sel, jnp.float32(beta))
+    np.testing.assert_allclose(np.asarray(r), np.asarray(k), atol=1e-5)
+
+
+def test_lowpass_beta1_is_classic_error_feedback():
+    # beta=1: selected coordinates zero out, unselected accumulate fully.
+    m = jnp.asarray([1.0, 2.0], jnp.float32)
+    g = jnp.asarray([0.5, 0.5], jnp.float32)
+    sel = jnp.asarray([1.0, 0.0], jnp.float32)
+    out = lowpass_update(m, g, sel, jnp.float32(1.0))
+    np.testing.assert_allclose(np.asarray(out), [0.0, 2.5], atol=1e-7)
+
+
+def test_lowpass_selected_decay_formula():
+    # selected coordinate: m' = (1-beta)*m_old
+    m = jnp.asarray([4.0], jnp.float32)
+    g = jnp.asarray([1.0], jnp.float32)
+    sel = jnp.asarray([1.0], jnp.float32)
+    out = lowpass_update(m, g, sel, jnp.float32(0.25))
+    np.testing.assert_allclose(np.asarray(out), [3.0], atol=1e-6)
+
+
+# ----------------------------------------------------------------------
+# composition: leader select + sparsify + memory update
+# ----------------------------------------------------------------------
+
+
+def test_clt_step_composition_conserves_when_beta1():
+    """m' + scatter(sent) == m + g when beta=1 (error-feedback identity)."""
+    p, c = 1000, 50
+    m = _rand(p, 1)
+    g = _rand(p, 2)
+    ef = m + g
+    idx, vals = chunk_top1(ef, c)
+    np.testing.assert_allclose(
+        np.asarray(vals), np.asarray(sparsify_ref(ef, idx)), atol=1e-6
+    )
+    mask = mask_from_indices_ref(idx, p)
+    m_next = lowpass_update(m, g, mask, jnp.float32(1.0))
+    recon = np.asarray(m_next).copy()
+    recon[np.asarray(idx)] += np.asarray(vals)
+    np.testing.assert_allclose(recon, np.asarray(ef), atol=1e-5)

@@ -1,0 +1,73 @@
+//! Collective benchmarks: wall time of the three reduce paths (dense,
+//! shared-index sparse, gather) vs worker count — the microbench behind
+//! Fig 1(a).
+
+use scalecom::bench::{black_box, Bencher};
+use scalecom::comm::{Fabric, FabricConfig, Topology};
+use scalecom::compress::SparseGrad;
+use scalecom::util::rng::Rng;
+
+fn fabric(n: usize, topo: Topology) -> Fabric {
+    Fabric::new(FabricConfig {
+        workers: n,
+        topology: topo,
+        ..FabricConfig::default()
+    })
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut b = if quick { Bencher::quick() } else { Bencher::new() };
+    let dim: usize = if quick { 100_000 } else { 1_000_000 };
+    let rate = 112;
+    let k = dim / rate;
+
+    for n in [4usize, 16, 64] {
+        let mut rng = Rng::new(n as u64);
+        let grads: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let mut g = vec![0.0f32; dim];
+                rng.fill_normal(&mut g, 1.0);
+                g
+            })
+            .collect();
+
+        b.bench(&format!("dense_allreduce/n{n}"), || {
+            let mut f = fabric(n, Topology::ParameterServer);
+            black_box(f.dense_allreduce_avg(&grads));
+        });
+
+        // shared-index (ScaleCom) path
+        let idx: Vec<u32> = (0..k as u32).map(|i| i * rate as u32).collect();
+        let sparses: Vec<SparseGrad> = grads
+            .iter()
+            .map(|g| SparseGrad::gather_from(g, &idx))
+            .collect();
+        b.bench(&format!("sparse_allreduce_shared/n{n}"), || {
+            let mut f = fabric(n, Topology::ParameterServer);
+            black_box(f.sparse_allreduce_shared(&sparses, 0));
+        });
+
+        // gather (local top-k) path with mostly-disjoint per-worker sets
+        let gathers: Vec<SparseGrad> = (0..n)
+            .map(|w| {
+                let mut ix: Vec<u32> = (0..k)
+                    .map(|i| ((w + i * n) % dim) as u32)
+                    .collect();
+                ix.sort_unstable();
+                ix.dedup();
+                SparseGrad::gather_from(&grads[w], &ix)
+            })
+            .collect();
+        b.bench(&format!("sparse_gather_avg/n{n}"), || {
+            let mut f = fabric(n, Topology::ParameterServer);
+            black_box(f.sparse_gather_avg(&gathers));
+        });
+
+        // ring topology variant for the shared path (Remark 3)
+        b.bench(&format!("sparse_allreduce_shared_ring/n{n}"), || {
+            let mut f = fabric(n, Topology::Ring);
+            black_box(f.sparse_allreduce_shared(&sparses, 0));
+        });
+    }
+}

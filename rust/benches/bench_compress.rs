@@ -1,0 +1,71 @@
+//! Compressor micro-benchmarks (Table 1 "overhead" column).
+//!
+//! Measures selection throughput per element for every scheme at the
+//! paper's gradient scale, plus the error-feedback memory update and the
+//! sparsify/gather primitives — the L3 compression hot path.
+
+use scalecom::bench::{black_box, Bencher};
+use scalecom::compress::chunk::chunk_top1_indices;
+use scalecom::compress::{schemes::make_compressor, sparsify, EfMemory};
+use scalecom::util::rng::Rng;
+use scalecom::util::select::{top_k_indices_by_magnitude, top_k_via_heap};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut b = if quick { Bencher::quick() } else { Bencher::new() };
+
+    // ResNet18-scale flat gradient (11.7M) is the paper's reference; use
+    // 2M to keep bench wall-time sane, report per-element.
+    let dim: usize = if quick { 200_000 } else { 2_000_000 };
+    let rate = 112usize;
+    let k = dim / rate;
+    let mut rng = Rng::new(1);
+    let mut grad = vec![0.0f32; dim];
+    rng.fill_normal(&mut grad, 1.0);
+
+    println!("# selection primitives over dim={dim} (k={k}, rate={rate}x)");
+    let r = b.bench("select/quickselect_topk", || {
+        black_box(top_k_indices_by_magnitude(&grad, k));
+    });
+    println!("#   -> {:.3} ns/elem", r.per_elem(dim));
+    let r = b.bench("select/heap_topk", || {
+        black_box(top_k_via_heap(&grad, k));
+    });
+    println!("#   -> {:.3} ns/elem", r.per_elem(dim));
+    let r = b.bench("select/chunk_top1 (paper quasi-sort)", || {
+        black_box(chunk_top1_indices(&grad, rate));
+    });
+    println!("#   -> {:.3} ns/elem", r.per_elem(dim));
+
+    println!("# full scheme selection, 4 workers");
+    let grads: Vec<Vec<f32>> = (0..4)
+        .map(|_| {
+            let mut g = vec![0.0f32; dim];
+            rng.fill_normal(&mut g, 1.0);
+            g
+        })
+        .collect();
+    let views: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+    for scheme in ["scalecom", "scalecom-exact", "local-topk", "true-topk", "random-k"] {
+        let mut c = make_compressor(scheme, rate, 1).unwrap();
+        let mut t = 0usize;
+        let r = b.bench(&format!("scheme/{scheme}"), || {
+            black_box(c.select(t, &views, k));
+            t += 1;
+        });
+        println!("#   -> {:.3} ns/elem", r.per_elem(dim));
+    }
+
+    println!("# error-feedback memory + sparsify");
+    let idx = chunk_top1_indices(&grad, rate);
+    let mut mem = EfMemory::new(dim, 0.1);
+    b.bench("memory/lowpass_update", || {
+        mem.update_after_send(&grad, &idx);
+    });
+    b.bench("memory/ef_grad", || {
+        black_box(mem.ef_grad(&grad));
+    });
+    b.bench("sparsify/gather_k", || {
+        black_box(sparsify(&grad, &idx));
+    });
+}

@@ -1,0 +1,58 @@
+//! Performance-model sweep benchmark: evaluates the full Fig 6/A8/A9
+//! grid (5 networks × schemes × worker counts × bandwidths) and times
+//! the analytic model itself (it must stay trivially cheap — it runs
+//! inside experiment sweeps).
+
+use scalecom::bench::{black_box, Bencher};
+use scalecom::models::paper::{paper_net, ALL_PAPER_NETS};
+use scalecom::perfmodel::{step_time, Scheme, SystemConfig};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut b = if quick { Bencher::quick() } else { Bencher::new() };
+
+    let nets: Vec<_> = ALL_PAPER_NETS
+        .iter()
+        .map(|n| paper_net(n).unwrap())
+        .collect();
+
+    b.bench("perfmodel/full_grid", || {
+        let mut acc = 0.0f64;
+        for net in &nets {
+            for &n in &[8usize, 32, 128] {
+                for &bw in &[32.0, 64.0] {
+                    for &mb in &[8usize, 32] {
+                        for scheme in [Scheme::None, Scheme::LocalTopK, Scheme::ScaleCom] {
+                            let sys = SystemConfig {
+                                workers: n,
+                                bandwidth_gbps: bw,
+                                minibatch_per_worker: mb,
+                                ..SystemConfig::default()
+                            };
+                            acc += step_time(net, &sys, scheme).total_s;
+                        }
+                    }
+                }
+            }
+        }
+        black_box(acc);
+    });
+
+    // print the headline numbers so `cargo bench` output doubles as a
+    // quick sanity table
+    let net = paper_net("resnet50").unwrap();
+    for (tflops, mb) in [(100.0, 8), (100.0, 32), (300.0, 8), (300.0, 32)] {
+        let sys = SystemConfig {
+            workers: 128,
+            peak_tflops: tflops,
+            minibatch_per_worker: mb,
+            ..SystemConfig::default()
+        };
+        let base = step_time(&net, &sys, Scheme::None).total_s;
+        let sc = step_time(&net, &sys, Scheme::ScaleCom).total_s;
+        println!(
+            "# resnet50 @{tflops:.0}T mb={mb}: scalecom speedup {:.2}x (paper: 2x/1.23x @100T, 4.1x/1.75x @300T)",
+            base / sc
+        );
+    }
+}

@@ -1,0 +1,50 @@
+//! End-to-end training-step benchmark (the Fig 6-style breakdown,
+//! measured on the real three-layer stack): PJRT forward/backward,
+//! compression, reduce, optimizer — per model, per scheme.
+//!
+//! Requires `make artifacts`.
+
+use scalecom::bench::Bencher;
+use scalecom::config::train::TrainConfig;
+use scalecom::trainer::Trainer;
+
+fn bench_model(b: &mut Bencher, model: &str, scheme: &str, workers: usize) {
+    let mut cfg = TrainConfig {
+        model: model.to_string(),
+        workers,
+        steps: 1,
+        ..TrainConfig::default()
+    };
+    if let Ok(zoo) = scalecom::models::zoo_model(model) {
+        cfg.batch_per_worker = zoo.batch_per_worker;
+        cfg.compress.rate = zoo.default_rate;
+    }
+    cfg.compress.scheme = scheme.to_string();
+    cfg.lr = 0.01;
+    let mut trainer = match Trainer::from_config(cfg) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("skipping {model}/{scheme}: {e:#} (run `make artifacts`?)");
+            return;
+        }
+    };
+    b.bench(&format!("trainstep/{model}/{scheme}/w{workers}"), || {
+        trainer.run().expect("train step");
+    });
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut b = if quick { Bencher::quick() } else { Bencher::new() };
+    b.measure_s = if quick { 0.2 } else { 2.0 };
+
+    for model in ["mlp", "cnn", "transformer", "lstm"] {
+        for scheme in ["none", "scalecom", "local-topk"] {
+            bench_model(&mut b, model, scheme, 4);
+        }
+    }
+    // worker scaling on the cheapest model
+    for workers in [2usize, 8, 16] {
+        bench_model(&mut b, "mlp", "scalecom", workers);
+    }
+}

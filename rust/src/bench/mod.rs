@@ -1,0 +1,165 @@
+//! Timing harness for the `cargo bench` targets (`harness = false`).
+//!
+//! criterion is unavailable offline, so this provides the essentials:
+//! warmup, fixed-duration sampling, median/p10/p90 reporting, and a
+//! black-box to defeat dead-code elimination. Output format is one line
+//! per benchmark:
+//!
+//! `bench <name> ... median 1.234 us/iter  (p10 1.1, p90 1.4, n=431)`
+
+use std::time::Instant;
+
+/// Prevent the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    pub iters: usize,
+}
+
+impl BenchResult {
+    pub fn per_elem(&self, elems: usize) -> f64 {
+        self.median_ns / elems as f64
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3} us", ns / 1e3)
+    } else {
+        format!("{ns:.1} ns")
+    }
+}
+
+/// Benchmark runner with a total time budget per benchmark.
+pub struct Bencher {
+    pub warmup_s: f64,
+    pub measure_s: f64,
+    pub min_iters: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup_s: 0.2,
+            measure_s: 1.0,
+            min_iters: 10,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick-mode bencher for CI/tests.
+    pub fn quick() -> Self {
+        Bencher {
+            warmup_s: 0.02,
+            measure_s: 0.1,
+            min_iters: 3,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` repeatedly; each call is one sample.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> BenchResult {
+        // Warmup.
+        let w = Instant::now();
+        while w.elapsed().as_secs_f64() < self.warmup_s {
+            f();
+        }
+        // Measure.
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let m = Instant::now();
+        while m.elapsed().as_secs_f64() < self.measure_s || samples_ns.len() < self.min_iters {
+            let t = Instant::now();
+            f();
+            samples_ns.push(t.elapsed().as_nanos() as f64);
+            if samples_ns.len() > 5_000_000 {
+                break;
+            }
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |p: f64| -> f64 {
+            let idx = ((samples_ns.len() - 1) as f64 * p).round() as usize;
+            samples_ns[idx]
+        };
+        let res = BenchResult {
+            name: name.to_string(),
+            median_ns: q(0.5),
+            p10_ns: q(0.1),
+            p90_ns: q(0.9),
+            iters: samples_ns.len(),
+        };
+        println!(
+            "bench {:<56} median {:>12}/iter  (p10 {}, p90 {}, n={})",
+            res.name,
+            fmt_ns(res.median_ns),
+            fmt_ns(res.p10_ns),
+            fmt_ns(res.p90_ns),
+            res.iters
+        );
+        self.results.push(res.clone());
+        res
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bencher::quick();
+        let r = b.bench("noop-ish", || {
+            let mut s = 0u64;
+            for i in 0..100u64 {
+                s = s.wrapping_add(black_box(i));
+            }
+            black_box(s);
+        });
+        assert!(r.median_ns > 0.0);
+        assert!(r.iters >= 3);
+        assert!(r.p10_ns <= r.median_ns && r.median_ns <= r.p90_ns);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn per_elem_scales() {
+        let r = BenchResult {
+            name: "x".into(),
+            median_ns: 1000.0,
+            p10_ns: 900.0,
+            p90_ns: 1100.0,
+            iters: 10,
+        };
+        assert_eq!(r.per_elem(100), 10.0);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(5.0).ends_with("ns"));
+        assert!(fmt_ns(5.0e3).ends_with("us"));
+        assert!(fmt_ns(5.0e6).ends_with("ms"));
+        assert!(fmt_ns(5.0e9).ends_with(" s"));
+    }
+}

@@ -1,0 +1,182 @@
+//! Command-line argument parsing (no clap offline — hand-rolled).
+//!
+//! Grammar: `scalecom <subcommand> [--key value] [--key=value] [--flag]`.
+//! A `--key` followed by a token not starting with `--` is a valued
+//! option; otherwise it is a boolean flag. Unknown keys are rejected by
+//! `finish()` so typos fail loudly.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    values: BTreeMap<String, String>,
+    flags: BTreeSet<String>,
+    consumed: BTreeSet<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> anyhow::Result<Args> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if rest.is_empty() {
+                    anyhow::bail!("bare '--' not supported");
+                }
+                if let Some(eq) = rest.find('=') {
+                    let (k, v) = rest.split_at(eq);
+                    out.values.insert(k.to_string(), v[1..].to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.values.insert(rest.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.insert(rest.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> anyhow::Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn str_opt(&mut self, key: &str) -> Option<String> {
+        self.consumed.insert(key.to_string());
+        self.values.get(key).cloned()
+    }
+
+    pub fn str_or(&mut self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize_or(&mut self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{s}'")),
+        }
+    }
+
+    pub fn f64_or(&mut self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got '{s}'")),
+        }
+    }
+
+    pub fn flag(&mut self, key: &str) -> bool {
+        self.consumed.insert(key.to_string());
+        self.flags.contains(key)
+    }
+
+    /// Error on any unconsumed option (call after all accessors).
+    pub fn finish(&self) -> anyhow::Result<()> {
+        let unknown: Vec<&String> = self
+            .values
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !self.consumed.contains(*k))
+            .collect();
+        if !unknown.is_empty() {
+            anyhow::bail!(
+                "unknown option(s): {}",
+                unknown
+                    .iter()
+                    .map(|k| format!("--{k}"))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            );
+        }
+        Ok(())
+    }
+}
+
+pub const USAGE: &str = "\
+scalecom — ScaleCom (NeurIPS 2020) reproduction: sparsified gradient
+compression for communication-efficient distributed training.
+
+USAGE:
+  scalecom <subcommand> [options]
+
+SUBCOMMANDS:
+  train            run a distributed training job
+                     --model mlp|cnn|transformer|transformer-med|lstm
+                     --workers N --steps N --scheme scalecom|local-topk|...
+                     --rate R --beta B --lr LR --topology ps|ring
+                     --config file.toml (flags override file)
+  experiment <id>  regenerate a paper table/figure:
+                     table1 fig1a fig1b fig1c fig2 fig3 table2 table3
+                     fig6 figA1 figA8  (or 'all')
+  perf-model       analytic end-to-end performance model
+                     --net resnet50 --workers N --batch B --tflops T
+  compress-bench   compressor micro-benchmarks (Table 1 overhead column)
+  artifacts-check  validate artifacts/ against the manifest and smoke-run
+  list             list models, schemes, paper networks, experiments
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_values() {
+        let mut a = parse(&["train", "--model", "mlp", "--steps=50", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.str_or("model", "x"), "mlp");
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 50);
+        assert!(a.flag("verbose"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn positional_after_subcommand() {
+        let a = parse(&["experiment", "fig2"]);
+        assert_eq!(a.subcommand.as_deref(), Some("experiment"));
+        assert_eq!(a.positional, vec!["fig2"]);
+    }
+
+    #[test]
+    fn flag_vs_value_disambiguation() {
+        let mut a = parse(&["x", "--quick", "--n", "3"]);
+        assert!(a.flag("quick"));
+        assert_eq!(a.usize_or("n", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn unknown_options_rejected() {
+        let mut a = parse(&["x", "--typo", "1"]);
+        let _ = a.str_opt("correct");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn bad_numbers_rejected() {
+        let mut a = parse(&["x", "--n", "abc"]);
+        assert!(a.usize_or("n", 0).is_err());
+        let mut a = parse(&["x", "--f", "x.y"]);
+        assert!(a.f64_or("f", 0.0).is_err());
+    }
+
+    #[test]
+    fn defaults_applied() {
+        let mut a = parse(&["x"]);
+        assert_eq!(a.str_or("missing", "d"), "d");
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+        assert_eq!(a.f64_or("missing", 1.5).unwrap(), 1.5);
+        assert!(!a.flag("missing"));
+    }
+}

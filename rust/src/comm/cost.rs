@@ -1,0 +1,94 @@
+//! Cost records for fabric operations.
+
+/// Cost of one collective operation.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CommCost {
+    pub op: &'static str,
+    /// Bytes one worker sends (max over workers — sync SGD waits for the
+    /// slowest).
+    pub bytes_up_per_worker: usize,
+    /// Bytes one worker receives.
+    pub bytes_down_per_worker: usize,
+    /// Bytes crossing the bottleneck link (PS port / busiest ring port).
+    pub bottleneck_bytes: usize,
+    /// Modeled wall time of the collective.
+    pub time_s: f64,
+    /// Serialized message count on the critical path (latency charges).
+    pub hops: usize,
+}
+
+/// Accumulated statistics over a run.
+#[derive(Debug, Clone, Default)]
+pub struct CommStats {
+    pub ops: Vec<CommCost>,
+}
+
+impl CommStats {
+    pub fn record(&mut self, c: CommCost) {
+        self.ops.push(c);
+    }
+
+    pub fn last_cost(&self) -> &CommCost {
+        self.ops.last().expect("no fabric ops recorded")
+    }
+
+    pub fn total_time_s(&self) -> f64 {
+        self.ops.iter().map(|c| c.time_s).sum()
+    }
+
+    pub fn total_bytes_up(&self) -> usize {
+        self.ops.iter().map(|c| c.bytes_up_per_worker).sum()
+    }
+
+    pub fn total_bytes_down(&self) -> usize {
+        self.ops.iter().map(|c| c.bytes_down_per_worker).sum()
+    }
+
+    pub fn total_bottleneck_bytes(&self) -> usize {
+        self.ops.iter().map(|c| c.bottleneck_bytes).sum()
+    }
+
+    pub fn reset(&mut self) {
+        self.ops.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_accumulate() {
+        let mut s = CommStats::default();
+        s.record(CommCost {
+            op: "a",
+            bytes_up_per_worker: 10,
+            bytes_down_per_worker: 20,
+            bottleneck_bytes: 30,
+            time_s: 1.0,
+            hops: 2,
+        });
+        s.record(CommCost {
+            op: "b",
+            bytes_up_per_worker: 1,
+            bytes_down_per_worker: 2,
+            bottleneck_bytes: 3,
+            time_s: 0.5,
+            hops: 1,
+        });
+        assert_eq!(s.total_bytes_up(), 11);
+        assert_eq!(s.total_bytes_down(), 22);
+        assert_eq!(s.total_bottleneck_bytes(), 33);
+        assert_eq!(s.total_time_s(), 1.5);
+        assert_eq!(s.last_cost().op, "b");
+        s.reset();
+        assert!(s.ops.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "no fabric ops")]
+    fn last_cost_panics_when_empty() {
+        let s = CommStats::default();
+        let _ = s.last_cost();
+    }
+}

@@ -1,0 +1,448 @@
+//! The fabric: functional collectives + cost model.
+
+use crate::comm::cost::{CommCost, CommStats};
+use crate::compress::SparseGrad;
+
+/// Interconnect topology. The paper presents Algorithm 1 against a
+/// parameter server "for simplicity" and notes CLT-k "can naturally be
+/// extended to ring all-reduce" (Remark 3) — both are modeled.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Topology {
+    ParameterServer,
+    Ring,
+}
+
+impl Topology {
+    pub fn parse(s: &str) -> anyhow::Result<Topology> {
+        match s {
+            "ps" | "parameter-server" => Ok(Topology::ParameterServer),
+            "ring" => Ok(Topology::Ring),
+            other => anyhow::bail!("unknown topology '{other}' (expected ps|ring)"),
+        }
+    }
+}
+
+/// Fault injection for the failure tests: synchronous SGD must fail
+/// loudly, never silently average a partial set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSpec {
+    None,
+    /// Worker `w`'s contribution is dropped starting at op index `op`.
+    DropWorker { worker: usize, from_op: usize },
+}
+
+#[derive(Debug, Clone)]
+pub struct FabricConfig {
+    pub workers: usize,
+    pub topology: Topology,
+    /// Per-link bandwidth in GB/s (paper evaluates 32 and 64 GBps).
+    pub bandwidth_gbps: f64,
+    /// Per-hop latency in microseconds.
+    pub latency_us: f64,
+    pub fault: FaultSpec,
+}
+
+impl Default for FabricConfig {
+    fn default() -> Self {
+        FabricConfig {
+            workers: 4,
+            topology: Topology::ParameterServer,
+            bandwidth_gbps: 32.0,
+            latency_us: 1.0,
+            fault: FaultSpec::None,
+        }
+    }
+}
+
+/// Simulated fabric. All collectives are synchronous over `workers`
+/// participants; inputs are slices indexed by worker id.
+pub struct Fabric {
+    cfg: FabricConfig,
+    stats: CommStats,
+    op_counter: usize,
+}
+
+impl Fabric {
+    pub fn new(cfg: FabricConfig) -> Self {
+        assert!(cfg.workers >= 1, "fabric needs at least one worker");
+        assert!(cfg.bandwidth_gbps > 0.0);
+        Fabric {
+            cfg,
+            stats: CommStats::default(),
+            op_counter: 0,
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.cfg.workers
+    }
+
+    pub fn stats(&self) -> &CommStats {
+        &self.stats
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats.reset();
+    }
+
+    pub fn config(&self) -> &FabricConfig {
+        &self.cfg
+    }
+
+    fn time_for(&self, bottleneck_bytes: usize, hops: usize) -> f64 {
+        let bw = self.cfg.bandwidth_gbps * 1e9; // bytes/s
+        self.cfg.latency_us * 1e-6 * hops as f64 + bottleneck_bytes as f64 / bw
+    }
+
+    fn check_contribution(&mut self, n_given: usize, op: &'static str) {
+        self.op_counter += 1;
+        if let FaultSpec::DropWorker { worker, from_op } = self.cfg.fault {
+            if self.op_counter > from_op {
+                panic!(
+                    "fabric fault: worker {worker} contribution missing in '{op}' \
+                     (synchronous training cannot proceed with a partial set)"
+                );
+            }
+        }
+        assert_eq!(
+            n_given, self.cfg.workers,
+            "'{op}' got {n_given} contributions for a {}-worker fabric",
+            self.cfg.workers
+        );
+    }
+
+    fn record(
+        &mut self,
+        op: &'static str,
+        up: usize,
+        down: usize,
+        bottleneck: usize,
+        hops: usize,
+    ) -> CommCost {
+        let cost = CommCost {
+            op,
+            bytes_up_per_worker: up,
+            bytes_down_per_worker: down,
+            bottleneck_bytes: bottleneck,
+            time_s: self.time_for(bottleneck, hops),
+            hops,
+        };
+        self.stats.record(cost.clone());
+        cost
+    }
+
+    // ------------------------------------------------------------------
+    // Dense all-reduce (uncompressed baseline)
+    // ------------------------------------------------------------------
+
+    /// Average dense gradients across workers.
+    pub fn dense_allreduce_avg(&mut self, grads: &[Vec<f32>]) -> Vec<f32> {
+        self.check_contribution(grads.len(), "dense_allreduce");
+        let n = grads.len();
+        let dim = grads[0].len();
+        assert!(grads.iter().all(|g| g.len() == dim), "dim mismatch");
+        let mut out = vec![0.0f32; dim];
+        for g in grads {
+            for (o, &v) in out.iter_mut().zip(g) {
+                *o += v;
+            }
+        }
+        let inv = 1.0 / n as f32;
+        out.iter_mut().for_each(|v| *v *= inv);
+
+        let bytes = dim * 4;
+        match self.cfg.topology {
+            Topology::ParameterServer => {
+                // Server port carries n uploads then n downloads.
+                self.record("dense_allreduce", bytes, bytes, 2 * n * bytes, 2);
+            }
+            Topology::Ring => {
+                // Standard ring: each port moves 2·(n-1)/n · bytes.
+                let per_port = 2 * bytes * (n - 1) / n.max(1);
+                self.record("dense_allreduce", per_port, per_port, per_port, 2 * (n - 1));
+            }
+        }
+        out
+    }
+
+    // ------------------------------------------------------------------
+    // ScaleCom path: shared-index sparse all-reduce
+    // ------------------------------------------------------------------
+
+    /// Reduce sparse gradients whose index sets are identical (the
+    /// commutative CLT-k case) and return the *averaged* sparse gradient.
+    ///
+    /// `leader` is the worker whose index set was broadcast; the index
+    /// broadcast cost (k·4 bytes, O(1) in n — §5 "cost of index
+    /// communication") is charged here.
+    pub fn sparse_allreduce_shared(
+        &mut self,
+        sparses: &[SparseGrad],
+        leader: usize,
+    ) -> SparseGrad {
+        self.check_contribution(sparses.len(), "sparse_allreduce_shared");
+        let n = sparses.len();
+        assert!(leader < n, "leader {leader} out of range");
+        let idx = &sparses[leader].indices;
+        for (w, s) in sparses.iter().enumerate() {
+            assert_eq!(
+                &s.indices, idx,
+                "worker {w} index set differs from leader — not a commutative reduce"
+            );
+        }
+        let k = idx.len();
+        let mut values = vec![0.0f32; k];
+        for s in sparses {
+            for (v, &x) in values.iter_mut().zip(&s.values) {
+                *v += x;
+            }
+        }
+        let inv = 1.0 / n as f32;
+        values.iter_mut().for_each(|v| *v *= inv);
+        let out = SparseGrad::new(sparses[0].dim, idx.clone(), values);
+
+        // Index broadcast: leader sends k·4 bytes once (tree/multicast);
+        // every follower receives k·4.
+        let idx_bytes = k * 4;
+        let val_bytes = k * 4;
+        match self.cfg.topology {
+            Topology::ParameterServer => {
+                // up: indices (leader) + values (all); server reduces
+                // in-place so the downlink carries only k values + the
+                // shared indices.
+                let up = idx_bytes + val_bytes;
+                let down = idx_bytes + val_bytes;
+                let bottleneck = n * val_bytes + idx_bytes // ingress
+                    + n * (val_bytes + idx_bytes); // egress
+                self.record("sparse_allreduce_shared", up, down, bottleneck, 3);
+            }
+            Topology::Ring => {
+                let per_port = idx_bytes + 2 * val_bytes * (n - 1) / n.max(1);
+                self.record(
+                    "sparse_allreduce_shared",
+                    per_port,
+                    per_port,
+                    per_port,
+                    2 * (n - 1) + 1,
+                );
+            }
+        }
+        out
+    }
+
+    // ------------------------------------------------------------------
+    // Local top-k path: gather (gradient build-up)
+    // ------------------------------------------------------------------
+
+    /// Gather per-worker sparse gradients (distinct index sets), reduce on
+    /// the server, and return the averaged result as a *dense* vector.
+    /// The reduced vector's nnz is the union of all index sets — this is
+    /// the Fig 1(a) build-up: downloads grow O(n).
+    pub fn sparse_gather_avg(&mut self, sparses: &[SparseGrad]) -> Vec<f32> {
+        self.check_contribution(sparses.len(), "sparse_gather");
+        let n = sparses.len();
+        let dim = sparses[0].dim;
+        assert!(sparses.iter().all(|s| s.dim == dim));
+        let mut acc = vec![0.0f32; dim];
+        for s in sparses {
+            s.add_into(&mut acc);
+        }
+        let inv = 1.0 / n as f32;
+        acc.iter_mut().for_each(|v| *v *= inv);
+
+        // Union nnz determines the downlink payload.
+        let union_nnz = {
+            let mut all: Vec<u32> = sparses.iter().flat_map(|s| s.indices.clone()).collect();
+            all.sort_unstable();
+            all.dedup();
+            all.len()
+        };
+        let up = sparses.iter().map(|s| s.wire_bytes()).max().unwrap_or(0);
+        let down = union_nnz * 8;
+        match self.cfg.topology {
+            Topology::ParameterServer => {
+                let ingress: usize = sparses.iter().map(|s| s.wire_bytes()).sum();
+                let egress = n * down;
+                self.record("sparse_gather", up, down, ingress + egress, 2);
+            }
+            Topology::Ring => {
+                // Gather around the ring: accumulated sparse unions grow as
+                // they travel; the busiest port carries ~the full union.
+                let per_port = down + up;
+                self.record("sparse_gather", per_port, per_port, per_port, n - 1);
+            }
+        }
+        acc
+    }
+
+    // ------------------------------------------------------------------
+    // Primitives used by gTop-k and index distribution
+    // ------------------------------------------------------------------
+
+    /// Broadcast `bytes` from one worker to all others (tree).
+    pub fn broadcast_bytes(&mut self, bytes: usize) -> CommCost {
+        self.check_contribution(self.cfg.workers, "broadcast");
+        let n = self.cfg.workers;
+        let hops = (usize::BITS - (n.max(1) - 1).leading_zeros()) as usize;
+        match self.cfg.topology {
+            Topology::ParameterServer => self.record("broadcast", bytes, bytes, n * bytes, 2),
+            Topology::Ring => self.record("broadcast", bytes, bytes, bytes, hops.max(1)),
+        }
+    }
+
+    /// gTop-k exchange: log2(n) rounds of pairwise sparse exchanges of
+    /// ~k entries each (cost only; the merge math lives in the scheme).
+    pub fn gtopk_exchange(&mut self, k: usize) -> CommCost {
+        self.check_contribution(self.cfg.workers, "gtopk_exchange");
+        let n = self.cfg.workers;
+        let rounds = (usize::BITS - (n.max(1) - 1).leading_zeros()) as usize;
+        let per_round = k * 8;
+        let up = rounds * per_round;
+        self.record("gtopk_exchange", up, up, up, rounds.max(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::check;
+    use crate::util::floats::allclose;
+
+    fn cfg(n: usize, topo: Topology) -> FabricConfig {
+        FabricConfig {
+            workers: n,
+            topology: topo,
+            bandwidth_gbps: 32.0,
+            latency_us: 1.0,
+            fault: FaultSpec::None,
+        }
+    }
+
+    #[test]
+    fn dense_allreduce_averages() {
+        let mut f = Fabric::new(cfg(2, Topology::ParameterServer));
+        let out = f.dense_allreduce_avg(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(out, vec![2.0, 3.0]);
+        assert_eq!(f.stats().last_cost().bytes_up_per_worker, 8);
+    }
+
+    #[test]
+    fn ring_dense_cheaper_per_port_than_ps_bottleneck() {
+        let g: Vec<Vec<f32>> = (0..8).map(|_| vec![1.0f32; 1000]).collect();
+        let mut ps = Fabric::new(cfg(8, Topology::ParameterServer));
+        let mut ring = Fabric::new(cfg(8, Topology::Ring));
+        ps.dense_allreduce_avg(&g);
+        ring.dense_allreduce_avg(&g);
+        assert!(
+            ring.stats().last_cost().bottleneck_bytes
+                < ps.stats().last_cost().bottleneck_bytes
+        );
+    }
+
+    #[test]
+    fn shared_sparse_reduce_matches_dense_on_mask() {
+        check("sparse reduce == dense reduce on mask", 80, |g| {
+            let n = g.usize_in(2..=8);
+            let dim = g.usize_in(8..=256);
+            let k = g.usize_in(1..=dim);
+            let grads: Vec<Vec<f32>> = (0..n).map(|_| g.f32_vec_len(dim, 1.0)).collect();
+            let idx = crate::util::select::top_k_indices_by_magnitude(&grads[0], k);
+            let sparses: Vec<SparseGrad> = grads
+                .iter()
+                .map(|w| SparseGrad::gather_from(w, &idx))
+                .collect();
+            let mut f = Fabric::new(cfg(n, Topology::ParameterServer));
+            let sparse_avg = f.sparse_allreduce_shared(&sparses, 0);
+            let dense_avg = {
+                let mut f2 = Fabric::new(cfg(n, Topology::ParameterServer));
+                f2.dense_allreduce_avg(&grads)
+            };
+            let expect: Vec<f32> = idx.iter().map(|&i| dense_avg[i as usize]).collect();
+            if let Err(i) = allclose(&sparse_avg.values, &expect, 1e-4, 1e-5) {
+                panic!("mismatch at {i}");
+            }
+        });
+    }
+
+    #[test]
+    fn gather_avg_matches_manual_union() {
+        let a = SparseGrad::new(5, vec![0, 2], vec![2.0, 4.0]);
+        let b = SparseGrad::new(5, vec![2, 3], vec![2.0, 6.0]);
+        let mut f = Fabric::new(cfg(2, Topology::ParameterServer));
+        let avg = f.sparse_gather_avg(&[a, b]);
+        assert_eq!(avg, vec![1.0, 0.0, 3.0, 3.0, 0.0]);
+        // union nnz = 3 → per-worker download 24 bytes
+        assert_eq!(f.stats().last_cost().bytes_down_per_worker, 24);
+    }
+
+    #[test]
+    #[should_panic(expected = "index set differs")]
+    fn shared_reduce_rejects_divergent_indices() {
+        let a = SparseGrad::new(4, vec![0], vec![1.0]);
+        let b = SparseGrad::new(4, vec![1], vec![1.0]);
+        let mut f = Fabric::new(cfg(2, Topology::ParameterServer));
+        let _ = f.sparse_allreduce_shared(&[a, b], 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "fabric fault")]
+    fn fault_injection_fails_loudly() {
+        let mut f = Fabric::new(FabricConfig {
+            fault: FaultSpec::DropWorker {
+                worker: 1,
+                from_op: 0,
+            },
+            ..cfg(2, Topology::ParameterServer)
+        });
+        let _ = f.dense_allreduce_avg(&[vec![1.0], vec![2.0]]);
+    }
+
+    #[test]
+    #[should_panic(expected = "contributions")]
+    fn wrong_worker_count_rejected() {
+        let mut f = Fabric::new(cfg(3, Topology::ParameterServer));
+        let _ = f.dense_allreduce_avg(&[vec![1.0], vec![2.0]]);
+    }
+
+    #[test]
+    fn index_broadcast_cost_constant_in_n() {
+        // §5: index communication is O(1) w.r.t. worker count per worker.
+        let k = 1000;
+        let mut costs = Vec::new();
+        for n in [4usize, 16, 64] {
+            let ix: Vec<u32> = (0..k as u32).collect();
+            let sp: Vec<SparseGrad> = (0..n)
+                .map(|_| SparseGrad::new(100_000, ix.clone(), vec![1.0; k]))
+                .collect();
+            let mut f = Fabric::new(cfg(n, Topology::Ring));
+            let _ = f.sparse_allreduce_shared(&sp, 0);
+            costs.push(f.stats().last_cost().bytes_down_per_worker);
+        }
+        // Ring per-port cost approaches 2·k·4 + idx as n grows; must not
+        // scale linearly (stay within 2x across 16x more workers).
+        assert!(costs[2] < costs[0] * 2);
+    }
+
+    #[test]
+    fn time_model_latency_plus_bandwidth() {
+        let mut f = Fabric::new(FabricConfig {
+            workers: 2,
+            topology: Topology::ParameterServer,
+            bandwidth_gbps: 1.0, // 1e9 B/s
+            latency_us: 100.0,
+            fault: FaultSpec::None,
+        });
+        let c = f.broadcast_bytes(1_000_000_000); // 1 GB through 2 workers
+        // bottleneck = 2 GB → 2 s, plus 2 hops · 100 us
+        assert!((c.time_s - 2.0002).abs() < 1e-6, "time={}", c.time_s);
+    }
+
+    #[test]
+    fn gtopk_exchange_scales_log_n() {
+        let mut f4 = Fabric::new(cfg(4, Topology::Ring));
+        let mut f16 = Fabric::new(cfg(16, Topology::Ring));
+        let c4 = f4.gtopk_exchange(100);
+        let c16 = f16.gtopk_exchange(100);
+        assert_eq!(c4.bytes_up_per_worker * 2, c16.bytes_up_per_worker);
+    }
+}

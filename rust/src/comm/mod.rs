@@ -1,0 +1,73 @@
+//! Simulated communication fabric with exact byte accounting and an
+//! analytic time model.
+//!
+//! The paper's scalability claims are about *communication volume* as a
+//! function of worker count (Fig 1a/b, Fig 6, A8/A9). The fabric executes
+//! every collective **functionally** (the trainer gets bit-exact averaged
+//! gradients) while recording, per operation:
+//!   - bytes each worker uploads / downloads,
+//!   - bytes crossing the bottleneck link (the parameter-server port for
+//!     PS topology; a worker's ring port for ring topology),
+//!   - modeled wall time = latency·hops + bottleneck_bytes / bandwidth.
+//!
+//! Three collectives correspond to the three schemes the paper evaluates:
+//!   - `dense_allreduce_avg` — uncompressed baseline,
+//!   - `sparse_allreduce_shared` — ScaleCom: identical index sets reduce,
+//!   - `sparse_gather_avg` — local top-k: per-worker sets must gather,
+//!     and the reduced union grows O(n) (gradient build-up).
+
+pub mod cost;
+pub mod fabric;
+
+pub use cost::{CommCost, CommStats};
+pub use fabric::{Fabric, FabricConfig, FaultSpec, Topology};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::SparseGrad;
+
+    fn mk_fabric(n: usize, topo: Topology) -> Fabric {
+        Fabric::new(FabricConfig {
+            workers: n,
+            topology: topo,
+            bandwidth_gbps: 32.0,
+            latency_us: 1.0,
+            fault: FaultSpec::None,
+        })
+    }
+
+    #[test]
+    fn scalecom_bytes_constant_in_n_but_gather_grows() {
+        // The core scaling claim (Fig 1a): per-worker download for the
+        // gather path grows with n; ScaleCom's stays constant.
+        let dim = 10_000;
+        let k = 100;
+        let mut per_worker_down_gather = Vec::new();
+        let mut per_worker_down_scalecom = Vec::new();
+        for n in [2usize, 4, 8, 16] {
+            // Disjoint index sets → worst-case build-up.
+            let sparses: Vec<SparseGrad> = (0..n)
+                .map(|w| {
+                    let ix: Vec<u32> = (0..k as u32).map(|i| (w * k) as u32 + i).collect();
+                    SparseGrad::new(dim, ix.clone(), vec![1.0; k])
+                })
+                .collect();
+            let mut f = mk_fabric(n, Topology::ParameterServer);
+            let _ = f.sparse_gather_avg(&sparses);
+            per_worker_down_gather.push(f.stats().last_cost().bytes_down_per_worker);
+
+            let shared_ix: Vec<u32> = (0..k as u32).collect();
+            let shared: Vec<SparseGrad> = (0..n)
+                .map(|_| SparseGrad::new(dim, shared_ix.clone(), vec![1.0; k]))
+                .collect();
+            let mut f2 = mk_fabric(n, Topology::ParameterServer);
+            let _ = f2.sparse_allreduce_shared(&shared, 0);
+            per_worker_down_scalecom.push(f2.stats().last_cost().bytes_down_per_worker);
+        }
+        // gather download grows ~linearly
+        assert!(per_worker_down_gather[3] > per_worker_down_gather[0] * 6);
+        // scalecom download constant
+        assert_eq!(per_worker_down_scalecom[0], per_worker_down_scalecom[3]);
+    }
+}

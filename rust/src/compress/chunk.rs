@@ -1,0 +1,199 @@
+//! Chunk-wise top-k selection — the paper's low-overhead "quasi-sort".
+//!
+//! §4: "We adopt [39] to accelerate sorting, which divides the whole
+//! buffer into chunks and parallelizes sorting in each chunk", and
+//! Table 1 credits ScaleCom with ~3 FLOPs/element (chunk-wise sort).
+//! Appendix E's MNIST demo shows the concrete scheme: the buffer is cut
+//! into chunks of `chunk_size` and the single largest-magnitude element
+//! of each chunk is selected (`num_send=1` of each `chunk_size=4`).
+//!
+//! Selecting 1-of-C gives a compression rate of C (e.g. C=400 → 400×)
+//! with exactly one |x| evaluation + one compare per element — O(1) per
+//! element, no global sort. The same scheme is what the L1 Pallas kernel
+//! (`python/compile/kernels/chunk_topk.py`) implements on-device; the two
+//! are cross-checked in `rust/tests/kernel_parity.rs`.
+
+/// Top-1-of-each-chunk selection. Returns sorted indices; the trailing
+/// partial chunk (if any) also contributes one element.
+///
+/// Perf notes (EXPERIMENTS.md §Perf): the scan is branch-light — NaN is
+/// excluded by IEEE `>` semantics (any comparison with NaN is false)
+/// instead of a per-element `is_nan` branch, and `best_m` starts at -∞
+/// so the first finite element always wins. Strict `>` keeps the lowest
+/// index on ties — deterministic, matching `util::select` and the
+/// Pallas kernel's argmax.
+pub fn chunk_top1_indices(xs: &[f32], chunk_size: usize) -> Vec<u32> {
+    assert!(chunk_size >= 1, "chunk_size must be >= 1");
+    let n = xs.len();
+    let mut out = Vec::with_capacity(n.div_ceil(chunk_size));
+    let mut start = 0;
+    while start < n {
+        let end = (start + chunk_size).min(n);
+        let mut best_i = start as u32;
+        let mut best_m = f32::NEG_INFINITY;
+        for (off, &x) in xs[start..end].iter().enumerate() {
+            let m = x.abs();
+            if m > best_m {
+                best_m = m;
+                best_i = (start + off) as u32;
+            }
+        }
+        out.push(best_i);
+        start = end;
+    }
+    out
+}
+
+/// Top-`per_chunk`-of-each-chunk generalization (the paper's demo uses
+/// `num_send: 1`, larger values trade rate for fidelity).
+pub fn chunk_topm_indices(xs: &[f32], chunk_size: usize, per_chunk: usize) -> Vec<u32> {
+    assert!(per_chunk >= 1 && per_chunk <= chunk_size);
+    if per_chunk == 1 {
+        return chunk_top1_indices(xs, chunk_size);
+    }
+    let n = xs.len();
+    let mut out = Vec::with_capacity(n.div_ceil(chunk_size) * per_chunk);
+    let mut start = 0;
+    while start < n {
+        let end = (start + chunk_size).min(n);
+        let m = per_chunk.min(end - start);
+        let local = crate::util::select::top_k_indices_by_magnitude(&xs[start..end], m);
+        out.extend(local.into_iter().map(|i| i + start as u32));
+        start = end;
+    }
+    out
+}
+
+#[inline]
+fn abs0(x: f32) -> f32 {
+    let a = x.abs();
+    if a.is_nan() {
+        0.0
+    } else {
+        a
+    }
+}
+
+/// Selection method used by a compressor when ranking a single worker's
+/// vector: exact top-k or the chunked quasi-sort.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChunkSelect {
+    /// Exact top-k via quickselect (O(n), higher constant).
+    Exact,
+    /// 1-of-C chunk max with a fixed chunk size, ~3 FLOPs/element.
+    Chunked { chunk_size: usize },
+    /// 1-of-C chunk max with C derived from the budget: C = ceil(len/k).
+    /// This is what per-layer compression needs — each layer's chunks
+    /// are sized so the layer yields its own k winners.
+    ChunkedAuto,
+}
+
+impl ChunkSelect {
+    /// Indices this method selects for budget `k` over `xs`.
+    /// For fixed `Chunked`, `k` is advisory: the method returns one index
+    /// per chunk (the caller sizes chunks so dim/chunk ≈ k).
+    pub fn select(&self, xs: &[f32], k: usize) -> Vec<u32> {
+        match *self {
+            ChunkSelect::Exact => {
+                crate::util::select::top_k_indices_by_magnitude(xs, k.min(xs.len()))
+            }
+            ChunkSelect::Chunked { chunk_size } => chunk_top1_indices(xs, chunk_size),
+            ChunkSelect::ChunkedAuto => {
+                let k = k.clamp(1, xs.len());
+                chunk_top1_indices(xs, xs.len().div_ceil(k))
+            }
+        }
+    }
+
+    /// Chunk size that realizes compression rate `rate` (1-of-C scheme).
+    pub fn for_rate(rate: usize) -> ChunkSelect {
+        ChunkSelect::Chunked {
+            chunk_size: rate.max(1),
+        }
+    }
+
+    pub fn k_for(&self, dim: usize, k: usize) -> usize {
+        match *self {
+            ChunkSelect::Exact => k.min(dim),
+            ChunkSelect::Chunked { chunk_size } => dim.div_ceil(chunk_size),
+            ChunkSelect::ChunkedAuto => {
+                let k = k.clamp(1, dim);
+                dim.div_ceil(dim.div_ceil(k))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_per_chunk_basic() {
+        let xs = [1.0f32, -3.0, 2.0, 0.5, 0.1, -0.2, 9.0, 0.0];
+        // chunks [0..4) and [4..8): max-mag are idx 1 (-3.0) and idx 6 (9.0)
+        assert_eq!(chunk_top1_indices(&xs, 4), vec![1, 6]);
+    }
+
+    #[test]
+    fn partial_trailing_chunk() {
+        let xs = [1.0f32, 2.0, 3.0, 4.0, -5.0];
+        assert_eq!(chunk_top1_indices(&xs, 2), vec![1, 3, 4]);
+    }
+
+    #[test]
+    fn tie_prefers_lowest_index() {
+        let xs = [2.0f32, -2.0, 1.0];
+        assert_eq!(chunk_top1_indices(&xs, 3), vec![0]);
+    }
+
+    #[test]
+    fn chunk_size_one_selects_all() {
+        let xs = [1.0f32, 0.0, 3.0];
+        assert_eq!(chunk_top1_indices(&xs, 1), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn rate_matches_chunk_count() {
+        let xs: Vec<f32> = (0..4000).map(|i| (i as f32 * 0.37).sin()).collect();
+        let ix = chunk_top1_indices(&xs, 400);
+        assert_eq!(ix.len(), 10); // 400x compression
+        // each selected index is the argmax of its chunk
+        for (c, &i) in ix.iter().enumerate() {
+            let lo = c * 400;
+            let hi = ((c + 1) * 400).min(xs.len());
+            let best = (lo..hi).max_by(|&a, &b| {
+                xs[a].abs().partial_cmp(&xs[b].abs()).unwrap()
+                    .then(b.cmp(&a)) // prefer lower index
+            }).unwrap();
+            assert_eq!(i as usize, best);
+        }
+    }
+
+    #[test]
+    fn topm_generalizes_top1() {
+        let xs = [5.0f32, 1.0, -4.0, 2.0, 0.0, 7.0, -6.0, 3.0];
+        assert_eq!(chunk_topm_indices(&xs, 4, 1), chunk_top1_indices(&xs, 4));
+        let two = chunk_topm_indices(&xs, 4, 2);
+        assert_eq!(two, vec![0, 2, 5, 6]);
+    }
+
+    #[test]
+    fn select_method_dispatch() {
+        let xs = [1.0f32, -3.0, 2.0, 0.5];
+        assert_eq!(ChunkSelect::Exact.select(&xs, 2), vec![1, 2]);
+        assert_eq!(
+            ChunkSelect::Chunked { chunk_size: 2 }.select(&xs, 0),
+            vec![1, 2]
+        );
+        assert_eq!(ChunkSelect::for_rate(2), ChunkSelect::Chunked { chunk_size: 2 });
+        assert_eq!(ChunkSelect::Exact.k_for(100, 7), 7);
+        assert_eq!(ChunkSelect::Chunked { chunk_size: 10 }.k_for(100, 0), 10);
+    }
+
+    #[test]
+    fn nan_never_selected_over_finite() {
+        let xs = [f32::NAN, 1.0, f32::NAN, 0.5];
+        assert_eq!(chunk_top1_indices(&xs, 4), vec![1]);
+    }
+}

@@ -1,0 +1,215 @@
+//! Error-feedback ("local") memory with the paper's low-pass filter.
+//!
+//! Algorithm 1 lines 6–7:
+//!   g_i^t    = CLT_{mod(t,n)}^k (m_i^t + ∇̂f_i(θ^t))
+//!   m_i^{t+1} = (1-β) m_i^t + β (m_i^t + ∇̂f_i(θ^t) − g_i^t)
+//!
+//! Because g_i equals (m_i + grad) exactly on the selected coordinates and
+//! 0 elsewhere, the update simplifies coordinate-wise to
+//!   selected:    m' = (1-β) · m           (sent energy leaves the memory)
+//!   unselected:  m' = m + β · grad        (incoming residue is low-passed)
+//! which is what `update_after_send` implements in a single O(p) pass.
+//! β=1 recovers classical error feedback (memory zeroed where sent).
+
+use crate::compress::SparseGrad;
+
+/// Per-worker error-feedback memory.
+#[derive(Debug, Clone)]
+pub struct EfMemory {
+    m: Vec<f32>,
+    beta: f32,
+}
+
+impl EfMemory {
+    pub fn new(dim: usize, beta: f32) -> Self {
+        assert!(
+            beta > 0.0 && beta <= 1.0,
+            "discount factor β must be in (0, 1], got {beta}"
+        );
+        EfMemory {
+            m: vec![0.0; dim],
+            beta,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.m.len()
+    }
+
+    pub fn beta(&self) -> f32 {
+        self.beta
+    }
+
+    /// Change β mid-training (Appendix E.2 raises β back to 1 at epoch 60
+    /// for ResNet50 once the LR has decayed).
+    pub fn set_beta(&mut self, beta: f32) {
+        assert!(beta > 0.0 && beta <= 1.0);
+        self.beta = beta;
+    }
+
+    pub fn memory(&self) -> &[f32] {
+        &self.m
+    }
+
+    /// Error-feedback gradient `m_i^t + grad` (Algorithm 1 line 6 input).
+    pub fn ef_grad(&self, grad: &[f32]) -> Vec<f32> {
+        assert_eq!(grad.len(), self.m.len());
+        self.m.iter().zip(grad).map(|(m, g)| m + g).collect()
+    }
+
+    /// Apply the low-pass memory update after `indices` were transmitted.
+    /// `grad` is this step's computed stochastic gradient.
+    pub fn update_after_send(&mut self, grad: &[f32], sent_indices: &[u32]) {
+        assert_eq!(grad.len(), self.m.len());
+        let beta = self.beta;
+        // Pass 1: unselected update for every coordinate...
+        for (m, &g) in self.m.iter_mut().zip(grad) {
+            *m += beta * g;
+        }
+        // Pass 2: ...then overwrite the selected ones with (1-β)·m_old.
+        // (m_old = m_new − β·g on those coordinates.)
+        for &i in sent_indices {
+            let i = i as usize;
+            let m_old = self.m[i] - beta * grad[i];
+            self.m[i] = (1.0 - beta) * m_old;
+        }
+    }
+
+    /// Reference (textbook) update used by tests: materializes g_i^t and
+    /// applies Eqn. (5) literally.
+    pub fn update_reference(&mut self, grad: &[f32], sent: &SparseGrad) {
+        let beta = self.beta;
+        let g_dense = sent.to_dense();
+        for i in 0..self.m.len() {
+            let residue = self.m[i] + grad[i] - g_dense[i];
+            self.m[i] = (1.0 - beta) * self.m[i] + beta * residue;
+        }
+    }
+
+    /// Replace the memory wholesale — used by the L1-kernel path, where
+    /// the Pallas `lowpass` artifact computes m^{t+1} on-device.
+    pub fn set_memory(&mut self, m: Vec<f32>) {
+        assert_eq!(m.len(), self.m.len(), "set_memory dim mismatch");
+        self.m = m;
+    }
+
+    /// Total residual energy ‖m‖₂ — logged for Fig 2-style diagnostics.
+    pub fn norm(&self) -> f64 {
+        crate::util::floats::l2_norm(&self.m)
+    }
+
+    /// Reset (used between experiments / at compression warmup start).
+    pub fn reset(&mut self) {
+        self.m.iter_mut().for_each(|x| *x = 0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::sparsify;
+    use crate::proptest::check;
+    use crate::util::floats::allclose;
+
+    #[test]
+    fn beta_one_is_classic_error_feedback() {
+        let mut mem = EfMemory::new(4, 1.0);
+        let grad = [1.0f32, -2.0, 3.0, 0.5];
+        let ef = mem.ef_grad(&grad);
+        assert_eq!(ef, grad.to_vec()); // memory starts at 0
+        mem.update_after_send(&grad, &[2]); // send coordinate 2
+        assert_eq!(mem.memory(), &[1.0, -2.0, 0.0, 0.5]);
+    }
+
+    #[test]
+    fn fast_update_matches_reference_formula() {
+        check("lowpass fast == Eqn.(5)", 150, |g| {
+            let dim = g.usize_in(1..=256);
+            let beta = g.f32_in(0.05, 1.0);
+            let grad = g.f32_vec_len(dim, 1.0);
+            let prev = g.f32_vec_len(dim, 0.5);
+            let k = g.usize_in(0..=dim);
+            let mut fast = EfMemory::new(dim, beta);
+            fast.m.copy_from_slice(&prev);
+            let mut refr = fast.clone();
+
+            let ef = fast.ef_grad(&grad);
+            let idx = crate::util::select::top_k_indices_by_magnitude(&ef, k);
+            let sent = sparsify(&ef, &idx);
+
+            fast.update_after_send(&grad, &idx);
+            refr.update_reference(&grad, &sent);
+            if let Err(i) = allclose(fast.memory(), refr.memory(), 1e-5, 1e-5) {
+                panic!(
+                    "mismatch at {i}: fast={} ref={} (beta={beta})",
+                    fast.memory()[i],
+                    refr.memory()[i]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn conservation_with_beta_one() {
+        // With β=1: m' + g_sent == m + grad (no energy lost or created).
+        check("EF conservation β=1", 100, |g| {
+            let dim = g.usize_in(1..=128);
+            let grad = g.f32_vec_len(dim, 1.0);
+            let mut mem = EfMemory::new(dim, 1.0);
+            mem.m.copy_from_slice(&g.f32_vec_len(dim, 1.0));
+            let before: Vec<f32> = mem.ef_grad(&grad);
+            let k = g.usize_in(0..=dim);
+            let idx = crate::util::select::top_k_indices_by_magnitude(&before, k);
+            let sent = sparsify(&before, &idx);
+            mem.update_after_send(&grad, &idx);
+            let mut reconstructed = sent.to_dense();
+            for (r, m) in reconstructed.iter_mut().zip(mem.memory()) {
+                *r += m;
+            }
+            if let Err(i) = allclose(&reconstructed, &before, 1e-5, 1e-5) {
+                panic!("conservation broken at {i}");
+            }
+        });
+    }
+
+    #[test]
+    fn low_pass_attenuates_unsent_noise() {
+        // β<1 must shrink how much of an incoming residue enters memory.
+        let grad = [10.0f32, 0.0];
+        let mut m_small_beta = EfMemory::new(2, 0.1);
+        let mut m_beta_one = EfMemory::new(2, 1.0);
+        // send nothing: residue = grad
+        m_small_beta.update_after_send(&grad, &[]);
+        m_beta_one.update_after_send(&grad, &[]);
+        assert!((m_small_beta.memory()[0] - 1.0).abs() < 1e-6);
+        assert!((m_beta_one.memory()[0] - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sent_coordinates_decay_not_zero_when_beta_lt_one() {
+        let mut mem = EfMemory::new(1, 0.25);
+        mem.m[0] = 4.0;
+        let grad = [1.0f32];
+        // ef = 5.0, send it
+        mem.update_after_send(&grad, &[0]);
+        // m' = (1-β)·m_old = 0.75·4 = 3.0
+        assert!((mem.memory()[0] - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "discount factor")]
+    fn rejects_bad_beta() {
+        let _ = EfMemory::new(4, 0.0);
+    }
+
+    #[test]
+    fn set_beta_and_reset() {
+        let mut mem = EfMemory::new(2, 0.1);
+        mem.set_beta(1.0);
+        assert_eq!(mem.beta(), 1.0);
+        mem.update_after_send(&[1.0, 2.0], &[]);
+        assert!(mem.norm() > 0.0);
+        mem.reset();
+        assert_eq!(mem.norm(), 0.0);
+    }
+}

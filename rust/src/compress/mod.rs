@@ -1,0 +1,259 @@
+//! Gradient sparsification: the paper's contribution (CLT-k + low-pass
+//! filtered error-feedback memory) plus every baseline compressor it is
+//! compared against in Table 1.
+//!
+//! Design: in fully-synchronous data-parallel training each step produces
+//! one error-feedback gradient per worker (`m_i + ∇f_i`). A compression
+//! *scheme* decides which coordinates each worker transmits. Commutative
+//! schemes (Definition (1) in the paper) give every worker the *same*
+//! index set, so sparse vectors can be **reduced** (added) by the fabric;
+//! non-commutative schemes force a **gather**, which is the gradient
+//! build-up problem of Figure 1(a).
+
+pub mod chunk;
+pub mod memory;
+pub mod rate;
+pub mod schemes;
+pub mod sketch;
+
+pub use chunk::{chunk_top1_indices, ChunkSelect};
+pub use memory::EfMemory;
+pub use rate::{rate_for_flops_ratio, LayerPartition};
+pub use schemes::{make_compressor, CltK, GTopK, LocalTopK, RandomK, TrueTopK};
+
+/// Sparse gradient: parallel arrays of (index, value), plus the dense
+/// dimension. Indices are sorted and unique.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparseGrad {
+    pub dim: usize,
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl SparseGrad {
+    pub fn new(dim: usize, indices: Vec<u32>, values: Vec<f32>) -> Self {
+        debug_assert_eq!(indices.len(), values.len());
+        debug_assert!(indices.windows(2).all(|w| w[0] < w[1]), "indices sorted+unique");
+        debug_assert!(indices.last().map_or(true, |&i| (i as usize) < dim));
+        SparseGrad {
+            dim,
+            indices,
+            values,
+        }
+    }
+
+    /// Extract `dense[indices]` as a sparse gradient.
+    pub fn gather_from(dense: &[f32], indices: &[u32]) -> Self {
+        let values = indices.iter().map(|&i| dense[i as usize]).collect();
+        SparseGrad::new(dense.len(), indices.to_vec(), values)
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Wire size in bytes: 4-byte index + 4-byte value per nonzero.
+    /// (The paper notes index traffic has the same degree of compression
+    /// as values — §5 "Cost of index communication".)
+    pub fn wire_bytes(&self) -> usize {
+        self.nnz() * 8
+    }
+
+    /// Scatter into a dense vector (unset coordinates zero).
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.dim];
+        for (&i, &v) in self.indices.iter().zip(&self.values) {
+            out[i as usize] = v;
+        }
+        out
+    }
+
+    /// Add into an accumulator dense vector.
+    pub fn add_into(&self, acc: &mut [f32]) {
+        assert_eq!(acc.len(), self.dim);
+        for (&i, &v) in self.indices.iter().zip(&self.values) {
+            acc[i as usize] += v;
+        }
+    }
+
+    /// Sum two sparse grads with identical index sets (the commutative
+    /// reduce). Panics if index sets differ — that would silently be a
+    /// gather, which callers must do explicitly.
+    pub fn add_same_indices(&self, other: &SparseGrad) -> SparseGrad {
+        assert_eq!(self.dim, other.dim);
+        assert_eq!(
+            self.indices, other.indices,
+            "add_same_indices requires identical index sets (commutative reduce)"
+        );
+        let values = self
+            .values
+            .iter()
+            .zip(&other.values)
+            .map(|(a, b)| a + b)
+            .collect();
+        SparseGrad::new(self.dim, self.indices.clone(), values)
+    }
+
+    /// Union-merge (the gather path): index sets may differ; values at
+    /// shared indices are summed. Complexity O(nnz_a + nnz_b).
+    pub fn merge_add(&self, other: &SparseGrad) -> SparseGrad {
+        assert_eq!(self.dim, other.dim);
+        let mut indices = Vec::with_capacity(self.nnz() + other.nnz());
+        let mut values = Vec::with_capacity(self.nnz() + other.nnz());
+        let (mut i, mut j) = (0, 0);
+        while i < self.nnz() || j < other.nnz() {
+            let take_a = j >= other.nnz()
+                || (i < self.nnz() && self.indices[i] <= other.indices[j]);
+            let take_b = i >= self.nnz()
+                || (j < other.nnz() && other.indices[j] <= self.indices[i]);
+            if take_a && take_b {
+                indices.push(self.indices[i]);
+                values.push(self.values[i] + other.values[j]);
+                i += 1;
+                j += 1;
+            } else if take_a {
+                indices.push(self.indices[i]);
+                values.push(self.values[i]);
+                i += 1;
+            } else {
+                indices.push(other.indices[j]);
+                values.push(other.values[j]);
+                j += 1;
+            }
+        }
+        SparseGrad::new(self.dim, indices, values)
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.values {
+            *v *= s;
+        }
+    }
+}
+
+/// Per-step index selection produced by a compression scheme.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Selection {
+    /// All workers transmit the same coordinates → fabric can reduce.
+    Shared(Vec<u32>),
+    /// Each worker picked its own coordinates → fabric must gather.
+    PerWorker(Vec<Vec<u32>>),
+}
+
+impl Selection {
+    pub fn indices_for(&self, worker: usize) -> &[u32] {
+        match self {
+            Selection::Shared(ix) => ix,
+            Selection::PerWorker(v) => &v[worker],
+        }
+    }
+
+    pub fn is_shared(&self) -> bool {
+        matches!(self, Selection::Shared(_))
+    }
+}
+
+/// A gradient compression scheme (Table 1 row).
+pub trait Compressor: Send {
+    /// Human-readable name for logs/benches.
+    fn name(&self) -> String;
+
+    /// Decide which coordinates each worker transmits this step.
+    ///
+    /// `ef_grads[i]` is worker i's error-feedback gradient
+    /// (`m_i^t + ∇̂f_i(θ^t)`), `k` the per-step budget. The in-process
+    /// simulator exposes all workers' vectors; implementations must only
+    /// look at what the real protocol could see (e.g. CLT-k reads only
+    /// the cyclic leader's vector; local top-k only each worker's own).
+    fn select(&mut self, step: usize, ef_grads: &[&[f32]], k: usize) -> Selection;
+
+    /// Commutative with averaging (Definition (1)): fabric may reduce.
+    fn is_commutative(&self) -> bool;
+
+    /// Approximate selection overhead in FLOPs per gradient element
+    /// (Table 1 "overhead" column).
+    fn overhead_flops_per_element(&self, dim: usize, k: usize) -> f64;
+}
+
+/// Compress a single worker's EF gradient with a chosen index set.
+pub fn sparsify(ef_grad: &[f32], indices: &[u32]) -> SparseGrad {
+    SparseGrad::gather_from(ef_grad, indices)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sg(dim: usize, ix: &[u32], vals: &[f32]) -> SparseGrad {
+        SparseGrad::new(dim, ix.to_vec(), vals.to_vec())
+    }
+
+    #[test]
+    fn gather_and_dense_roundtrip() {
+        let dense = [0.5f32, -1.0, 0.0, 2.0];
+        let s = SparseGrad::gather_from(&dense, &[1, 3]);
+        assert_eq!(s.values, vec![-1.0, 2.0]);
+        assert_eq!(s.to_dense(), vec![0.0, -1.0, 0.0, 2.0]);
+        assert_eq!(s.wire_bytes(), 16);
+    }
+
+    #[test]
+    fn add_same_indices_sums_values() {
+        let a = sg(4, &[0, 2], &[1.0, 2.0]);
+        let b = sg(4, &[0, 2], &[0.5, -1.0]);
+        let c = a.add_same_indices(&b);
+        assert_eq!(c.values, vec![1.5, 1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "identical index sets")]
+    fn add_same_indices_rejects_mismatch() {
+        let a = sg(4, &[0, 2], &[1.0, 2.0]);
+        let b = sg(4, &[1, 2], &[0.5, -1.0]);
+        let _ = a.add_same_indices(&b);
+    }
+
+    #[test]
+    fn merge_add_unions() {
+        let a = sg(6, &[0, 2, 5], &[1.0, 2.0, 3.0]);
+        let b = sg(6, &[1, 2], &[10.0, -1.0]);
+        let c = a.merge_add(&b);
+        assert_eq!(c.indices, vec![0, 1, 2, 5]);
+        assert_eq!(c.values, vec![1.0, 10.0, 1.0, 3.0]);
+        // merge is symmetric
+        assert_eq!(b.merge_add(&a), c);
+    }
+
+    #[test]
+    fn merge_add_grows_toward_buildup() {
+        // Disjoint index sets: nnz grows linearly — the Fig 1(a) effect.
+        let a = sg(100, &[0, 1], &[1.0, 1.0]);
+        let b = sg(100, &[50, 51], &[1.0, 1.0]);
+        assert_eq!(a.merge_add(&b).nnz(), 4);
+    }
+
+    #[test]
+    fn add_into_accumulates() {
+        let a = sg(3, &[1], &[2.0]);
+        let mut acc = vec![1.0f32; 3];
+        a.add_into(&mut acc);
+        assert_eq!(acc, vec![1.0, 3.0, 1.0]);
+    }
+
+    #[test]
+    fn selection_accessors() {
+        let s = Selection::Shared(vec![1, 2]);
+        assert!(s.is_shared());
+        assert_eq!(s.indices_for(7), &[1, 2]);
+        let p = Selection::PerWorker(vec![vec![0], vec![3]]);
+        assert!(!p.is_shared());
+        assert_eq!(p.indices_for(1), &[3]);
+    }
+
+    #[test]
+    fn scale_scales() {
+        let mut a = sg(3, &[0, 1], &[2.0, 4.0]);
+        a.scale(0.5);
+        assert_eq!(a.values, vec![1.0, 2.0]);
+    }
+}

@@ -1,0 +1,250 @@
+//! Per-layer compression-rate guidance and layer partitioning.
+//!
+//! §4: "A conservative engineering guidance is proposed for compression
+//! rate settings in each layer based upon the ratio FLOPs/gradient:
+//! 25X for ratio in [196, ∞]; 50X for [128, 196), and 400X for (0, 128]"
+//! (at reference per-worker mini-batch 32; the ratio scales linearly with
+//! per-worker batch because FLOPs do and the gradient size does not).
+//!
+//! `LayerPartition` maps a flat parameter/gradient vector into named layer
+//! slices so compression can run per layer with its own rate, exactly as
+//! the paper applies it (and so the first conv layer can be exempted, per
+//! Appendix E.1).
+
+/// Compression rate from the FLOPs-per-gradient-element ratio. The bands
+/// are stated at the reference per-worker batch of 32; callers scale the
+/// ratio by `batch/32` before calling (see `LayerPartition::per_layer_k`).
+pub fn rate_for_flops_ratio(flops_per_grad: f64) -> f64 {
+    if flops_per_grad >= 196.0 {
+        25.0
+    } else if flops_per_grad >= 128.0 {
+        50.0
+    } else {
+        400.0
+    }
+}
+
+/// One layer's slice of the flat gradient.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerSlice {
+    pub name: String,
+    pub offset: usize,
+    pub len: usize,
+    /// Forward FLOPs per sample for this layer (0 if unknown).
+    pub flops_per_sample: f64,
+    /// Layers marked uncompressed are sent dense (paper exempts the first
+    /// conv layer: "very sensitive to compression").
+    pub compress: bool,
+}
+
+/// Partition of a flat vector into layers.
+#[derive(Debug, Clone, Default)]
+pub struct LayerPartition {
+    pub layers: Vec<LayerSlice>,
+}
+
+impl LayerPartition {
+    /// Single pseudo-layer covering the whole vector.
+    pub fn single(dim: usize) -> Self {
+        LayerPartition {
+            layers: vec![LayerSlice {
+                name: "all".into(),
+                offset: 0,
+                len: dim,
+                flops_per_sample: 0.0,
+                compress: true,
+            }],
+        }
+    }
+
+    pub fn from_layers(layers: Vec<LayerSlice>) -> Self {
+        let p = LayerPartition { layers };
+        p.validate();
+        p
+    }
+
+    /// Fallible construction — used by manifest loading, where malformed
+    /// input must surface as an error rather than a panic.
+    pub fn try_from_layers(layers: Vec<LayerSlice>) -> anyhow::Result<Self> {
+        let p = LayerPartition { layers };
+        p.check()?;
+        Ok(p)
+    }
+
+    pub fn validate(&self) {
+        if let Err(e) = self.check() {
+            panic!("{e}");
+        }
+    }
+
+    pub fn check(&self) -> anyhow::Result<()> {
+        let mut expect = 0usize;
+        for l in &self.layers {
+            anyhow::ensure!(
+                l.offset == expect,
+                "layer '{}' offset {} != running total {}",
+                l.name,
+                l.offset,
+                expect
+            );
+            anyhow::ensure!(l.len > 0, "layer '{}' empty", l.name);
+            expect += l.len;
+        }
+        Ok(())
+    }
+
+    pub fn total_len(&self) -> usize {
+        self.layers.iter().map(|l| l.len).sum()
+    }
+
+    /// Per-layer k for a target overall rate using the paper's guidance.
+    /// If `use_flops_rule` and the layer has FLOPs info, its rate comes
+    /// from `rate_for_flops_ratio`; otherwise `default_rate` applies.
+    /// Uncompressed layers get k = len.
+    pub fn per_layer_k(
+        &self,
+        default_rate: f64,
+        per_worker_batch: usize,
+        use_flops_rule: bool,
+    ) -> Vec<usize> {
+        self.layers
+            .iter()
+            .map(|l| {
+                if !l.compress {
+                    return l.len;
+                }
+                let rate = if use_flops_rule && l.flops_per_sample > 0.0 {
+                    // bands defined at reference batch 32 (§4)
+                    let ratio = l.flops_per_sample * (per_worker_batch as f64 / 32.0)
+                        / l.len as f64;
+                    rate_for_flops_ratio(ratio)
+                } else {
+                    default_rate
+                };
+                ((l.len as f64 / rate).ceil() as usize).clamp(1, l.len)
+            })
+            .collect()
+    }
+
+    /// Effective overall compression rate for a choice of per-layer k.
+    pub fn effective_rate(&self, ks: &[usize]) -> f64 {
+        let total: usize = self.total_len();
+        let sent: usize = ks.iter().sum();
+        total as f64 / sent as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn guidance_bands_match_paper() {
+        assert_eq!(rate_for_flops_ratio(500.0), 25.0);
+        assert_eq!(rate_for_flops_ratio(196.0), 25.0);
+        assert_eq!(rate_for_flops_ratio(195.9), 50.0);
+        assert_eq!(rate_for_flops_ratio(128.0), 50.0);
+        assert_eq!(rate_for_flops_ratio(127.9), 400.0);
+        assert_eq!(rate_for_flops_ratio(1.0), 400.0);
+    }
+
+    #[test]
+    fn single_partition_covers_all() {
+        let p = LayerPartition::single(100);
+        assert_eq!(p.total_len(), 100);
+        let ks = p.per_layer_k(10.0, 32, false);
+        assert_eq!(ks, vec![10]);
+        assert_eq!(p.effective_rate(&ks), 10.0);
+    }
+
+    #[test]
+    fn flops_rule_selects_band_per_layer() {
+        // conv-like layer: many FLOPs per weight → gentle 25X
+        // fc-like layer: 1 FLOP per weight per sample → aggressive 400X
+        let p = LayerPartition::from_layers(vec![
+            LayerSlice {
+                name: "conv".into(),
+                offset: 0,
+                len: 1000,
+                flops_per_sample: 500_000.0, // ratio 500000/1000 = 500 @ bsz 32
+                compress: true,
+            },
+            LayerSlice {
+                name: "fc".into(),
+                offset: 1000,
+                len: 4000,
+                flops_per_sample: 4000.0, // ratio 1 @ bsz 32
+                compress: true,
+            },
+        ]);
+        let ks = p.per_layer_k(100.0, 32, true);
+        assert_eq!(ks[0], 40); // 1000/25
+        assert_eq!(ks[1], 10); // 4000/400
+
+        // quadrupling the batch pushes the fc ratio to 4 (still 400X) and
+        // the conv ratio to 2000 (still 25X) — but a layer at ratio 150
+        // would move bands:
+        let p2 = LayerPartition::from_layers(vec![LayerSlice {
+            name: "mid".into(),
+            offset: 0,
+            len: 1000,
+            flops_per_sample: 150_000.0, // ratio 150 @ 32 → 50X; 600 @ 128 → 25X
+            compress: true,
+        }]);
+        assert_eq!(p2.per_layer_k(100.0, 32, true), vec![20]);
+        assert_eq!(p2.per_layer_k(100.0, 128, true), vec![40]);
+    }
+
+    #[test]
+    fn uncompressed_layer_sent_dense() {
+        let p = LayerPartition::from_layers(vec![
+            LayerSlice {
+                name: "first_conv".into(),
+                offset: 0,
+                len: 64,
+                flops_per_sample: 0.0,
+                compress: false,
+            },
+            LayerSlice {
+                name: "rest".into(),
+                offset: 64,
+                len: 936,
+                flops_per_sample: 0.0,
+                compress: true,
+            },
+        ]);
+        let ks = p.per_layer_k(100.0, 32, false);
+        assert_eq!(ks[0], 64);
+        assert_eq!(ks[1], 10);
+        let rate = p.effective_rate(&ks);
+        assert!(rate > 10.0 && rate < 100.0);
+    }
+
+    #[test]
+    fn k_at_least_one() {
+        let p = LayerPartition::single(5);
+        let ks = p.per_layer_k(400.0, 32, false);
+        assert_eq!(ks, vec![1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "offset")]
+    fn validate_rejects_gaps() {
+        let _ = LayerPartition::from_layers(vec![
+            LayerSlice {
+                name: "a".into(),
+                offset: 0,
+                len: 10,
+                flops_per_sample: 0.0,
+                compress: true,
+            },
+            LayerSlice {
+                name: "b".into(),
+                offset: 20,
+                len: 10,
+                flops_per_sample: 0.0,
+                compress: true,
+            },
+        ]);
+    }
+}

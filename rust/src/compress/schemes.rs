@@ -1,0 +1,484 @@
+//! Compression schemes: ScaleCom's CLT-k and every Table-1 baseline.
+
+use crate::compress::chunk::ChunkSelect;
+use crate::compress::{Compressor, Selection};
+use crate::util::rng::Rng;
+use crate::util::select::top_k_indices_by_magnitude;
+
+/// Classical local top-k (Strom 2015 [21]): every worker independently
+/// selects its own top-k. Not commutative — the fabric must gather, and
+/// the reduced vector's nnz grows O(n) (gradient build-up, Fig 1a).
+pub struct LocalTopK {
+    pub select: ChunkSelect,
+}
+
+impl LocalTopK {
+    pub fn new() -> Self {
+        LocalTopK {
+            select: ChunkSelect::Exact,
+        }
+    }
+}
+
+impl Default for LocalTopK {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Compressor for LocalTopK {
+    fn name(&self) -> String {
+        match self.select {
+            ChunkSelect::Exact => "local-topk".into(),
+            ChunkSelect::Chunked { chunk_size } => format!("local-topk-chunk{chunk_size}"),
+            ChunkSelect::ChunkedAuto => "local-topk-chunked".into(),
+        }
+    }
+
+    fn select(&mut self, _step: usize, ef_grads: &[&[f32]], k: usize) -> Selection {
+        Selection::PerWorker(
+            ef_grads
+                .iter()
+                .map(|g| self.select.select(g, k))
+                .collect(),
+        )
+    }
+
+    fn is_commutative(&self) -> bool {
+        false
+    }
+
+    fn overhead_flops_per_element(&self, dim: usize, _k: usize) -> f64 {
+        match self.select {
+            // full sort: O(log p) comparisons per element (Table 1 row 1)
+            ChunkSelect::Exact => (dim as f64).log2(),
+            ChunkSelect::Chunked { .. } | ChunkSelect::ChunkedAuto => 3.0,
+        }
+    }
+}
+
+/// ScaleCom's cyclic local top-k (Eqn. 3). The leader for step t is
+/// `mod(t, n)`; its local top-k index set (computed with the chunk-wise
+/// quasi-sort, ~3 FLOPs/element) is broadcast and used by all workers.
+/// Commutative by construction: every worker sparsifies with the same set.
+pub struct CltK {
+    pub select: ChunkSelect,
+}
+
+impl CltK {
+    /// Exact top-k leader selection (used in similarity studies).
+    pub fn exact() -> Self {
+        CltK {
+            select: ChunkSelect::Exact,
+        }
+    }
+
+    /// Paper-default chunk-wise selection: fixed chunk size == the
+    /// compression rate (1-of-C). Matches the `<model>_compress` Pallas
+    /// artifact, which is lowered with the same chunk constant.
+    pub fn chunked(rate: usize) -> Self {
+        CltK {
+            select: ChunkSelect::for_rate(rate),
+        }
+    }
+
+    /// Budget-derived chunk size (C = ceil(len/k)) — what per-layer
+    /// compression needs, where each layer has its own k
+    /// (`coordinator::select_layered`).
+    pub fn chunked_auto() -> Self {
+        CltK {
+            select: ChunkSelect::ChunkedAuto,
+        }
+    }
+
+    pub fn leader(step: usize, n: usize) -> usize {
+        step % n
+    }
+}
+
+impl Compressor for CltK {
+    fn name(&self) -> String {
+        match self.select {
+            ChunkSelect::Exact => "scalecom-clt-k".into(),
+            ChunkSelect::Chunked { chunk_size } => format!("scalecom-clt-k-chunk{chunk_size}"),
+            ChunkSelect::ChunkedAuto => "scalecom-clt-k-chunked".into(),
+        }
+    }
+
+    fn select(&mut self, step: usize, ef_grads: &[&[f32]], k: usize) -> Selection {
+        let leader = Self::leader(step, ef_grads.len());
+        Selection::Shared(self.select.select(ef_grads[leader], k))
+    }
+
+    fn is_commutative(&self) -> bool {
+        true
+    }
+
+    fn overhead_flops_per_element(&self, dim: usize, _k: usize) -> f64 {
+        match self.select {
+            ChunkSelect::Exact => (dim as f64).log2(),
+            // Table 1: ~3 (chunk-wise sort)
+            ChunkSelect::Chunked { .. } | ChunkSelect::ChunkedAuto => 3.0,
+        }
+    }
+}
+
+/// Ideal "true top-k" (§2): top-k of the *averaged* error-feedback
+/// gradient. Impractical (needs the dense average first — no compression
+/// on the wire) but the contraction-property gold standard the paper
+/// compares CLT-k against in Figs 2(b)/3.
+pub struct TrueTopK;
+
+impl Compressor for TrueTopK {
+    fn name(&self) -> String {
+        "true-topk".into()
+    }
+
+    fn select(&mut self, _step: usize, ef_grads: &[&[f32]], k: usize) -> Selection {
+        let dim = ef_grads[0].len();
+        let n = ef_grads.len() as f32;
+        let mut avg = vec![0.0f32; dim];
+        for g in ef_grads {
+            for (a, &v) in avg.iter_mut().zip(g.iter()) {
+                *a += v;
+            }
+        }
+        for a in &mut avg {
+            *a /= n;
+        }
+        Selection::Shared(top_k_indices_by_magnitude(&avg, k.min(dim)))
+    }
+
+    fn is_commutative(&self) -> bool {
+        true
+    }
+
+    fn overhead_flops_per_element(&self, dim: usize, _k: usize) -> f64 {
+        // dense average (n adds) + full sort
+        (dim as f64).log2() + 1.0
+    }
+}
+
+/// Random-k with a shared per-step seed: all workers draw the same k
+/// random coordinates → commutative, but poor contraction (no energy
+/// targeting). Included as the classic cheap baseline from [28].
+pub struct RandomK {
+    seed: u64,
+}
+
+impl RandomK {
+    pub fn new(seed: u64) -> Self {
+        RandomK { seed }
+    }
+}
+
+impl Compressor for RandomK {
+    fn name(&self) -> String {
+        "random-k".into()
+    }
+
+    fn select(&mut self, step: usize, ef_grads: &[&[f32]], k: usize) -> Selection {
+        let dim = ef_grads[0].len();
+        let mut rng = Rng::for_stream(self.seed, step as u64);
+        Selection::Shared(rng.sample_indices(dim, k.min(dim)))
+    }
+
+    fn is_commutative(&self) -> bool {
+        true
+    }
+
+    fn overhead_flops_per_element(&self, _dim: usize, _k: usize) -> f64 {
+        // selection cost independent of gradient content; ~k draws total
+        0.1
+    }
+}
+
+/// gTop-k (Shi et al. [27]): tree-style merge of the workers' local top-k
+/// sparse vectors; at each of the ⌈log2 n⌉ rounds partner pairs exchange
+/// their current sparse vectors, add them, and re-select top-k. The final
+/// global winner set is broadcast. Approximates the top-k of the sum with
+/// O(k log n) communication.
+pub struct GTopK {
+    pub select: ChunkSelect,
+}
+
+impl GTopK {
+    pub fn new() -> Self {
+        GTopK {
+            select: ChunkSelect::Exact,
+        }
+    }
+
+    /// Number of merge rounds for n workers.
+    pub fn rounds(n: usize) -> usize {
+        (usize::BITS - (n.max(1) - 1).leading_zeros()) as usize
+    }
+}
+
+impl Default for GTopK {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Compressor for GTopK {
+    fn name(&self) -> String {
+        "gtop-k".into()
+    }
+
+    fn select(&mut self, _step: usize, ef_grads: &[&[f32]], k: usize) -> Selection {
+        let n = ef_grads.len();
+        let dim = ef_grads[0].len();
+        let k = k.min(dim);
+        // Each worker starts from its own local top-k sparse vector.
+        let mut current: Vec<crate::compress::SparseGrad> = ef_grads
+            .iter()
+            .map(|g| {
+                let idx = self.select.select(g, k);
+                crate::compress::SparseGrad::gather_from(g, &idx)
+            })
+            .collect();
+        // Binary-tree merge: stride doubles each round.
+        let mut stride = 1;
+        while stride < n {
+            for i in (0..n).step_by(stride * 2) {
+                let j = i + stride;
+                if j < n {
+                    let merged = current[i].merge_add(&current[j]);
+                    // re-select top-k of the merged vector
+                    let dense_vals = &merged.values;
+                    let local =
+                        top_k_indices_by_magnitude(dense_vals, k.min(dense_vals.len()));
+                    let indices: Vec<u32> =
+                        local.iter().map(|&p| merged.indices[p as usize]).collect();
+                    let values: Vec<f32> =
+                        local.iter().map(|&p| merged.values[p as usize]).collect();
+                    let mut pairs: Vec<(u32, f32)> =
+                        indices.into_iter().zip(values).collect();
+                    pairs.sort_unstable_by_key(|&(i, _)| i);
+                    current[i] = crate::compress::SparseGrad::new(
+                        merged.dim,
+                        pairs.iter().map(|&(i, _)| i).collect(),
+                        pairs.iter().map(|&(_, v)| v).collect(),
+                    );
+                }
+            }
+            stride *= 2;
+        }
+        // Root (worker 0) holds the approximate global top-k set.
+        Selection::Shared(current[0].indices.clone())
+    }
+
+    fn is_commutative(&self) -> bool {
+        // The *final* set is shared, but selection requires log(n)
+        // exchange rounds — Table 1 marks scalability O(log n).
+        true
+    }
+
+    fn overhead_flops_per_element(&self, dim: usize, k: usize) -> f64 {
+        // local sort + log n merge rounds over k-sized vectors
+        (dim as f64).log2() + (k as f64 * 2.0) / dim as f64
+    }
+}
+
+/// Construct a compressor by scheme name (CLI / config entry point).
+pub fn make_compressor(
+    scheme: &str,
+    rate: usize,
+    seed: u64,
+) -> anyhow::Result<Box<dyn Compressor>> {
+    Ok(match scheme {
+        "scalecom" | "clt-k" => Box::new(CltK::chunked(rate)),
+        "scalecom-auto" => Box::new(CltK::chunked_auto()),
+        "scalecom-exact" | "clt-k-exact" => Box::new(CltK::exact()),
+        "local-topk" => Box::new(LocalTopK::new()),
+        "local-topk-chunk" => Box::new(LocalTopK {
+            select: ChunkSelect::for_rate(rate),
+        }),
+        "true-topk" => Box::new(TrueTopK),
+        "random-k" => Box::new(RandomK::new(seed)),
+        "gtop-k" => Box::new(GTopK::new()),
+        "sketch-k" => Box::new(crate::compress::sketch::SketchK::default_for(seed)),
+        other => anyhow::bail!(
+            "unknown compression scheme '{other}' \
+             (expected scalecom|local-topk|true-topk|random-k|gtop-k|sketch-k)"
+        ),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::sparsify;
+    use crate::proptest::check;
+
+    fn views<'a>(vs: &'a [Vec<f32>]) -> Vec<&'a [f32]> {
+        vs.iter().map(|v| v.as_slice()).collect()
+    }
+
+    #[test]
+    fn clt_k_uses_cyclic_leader() {
+        let g0 = vec![9.0f32, 0.1, 0.1, 0.1];
+        let g1 = vec![0.1f32, 9.0, 0.1, 0.1];
+        let grads = vec![g0, g1];
+        let mut c = CltK::exact();
+        // step 0 → leader 0 → index 0; step 1 → leader 1 → index 1
+        assert_eq!(
+            c.select(0, &views(&grads), 1),
+            Selection::Shared(vec![0])
+        );
+        assert_eq!(
+            c.select(1, &views(&grads), 1),
+            Selection::Shared(vec![1])
+        );
+        assert_eq!(
+            c.select(2, &views(&grads), 1),
+            Selection::Shared(vec![0])
+        );
+        assert_eq!(CltK::leader(7, 3), 1);
+    }
+
+    #[test]
+    fn clt_k_commutativity_property() {
+        // sparse(avg(x_i)) == avg(sparse(x_i)) when all workers share the
+        // leader's index set — Definition (1).
+        check("CLT-k commutative", 100, |g| {
+            let n = g.usize_in(2..=8);
+            let dim = g.usize_in(4..=256);
+            let k = g.usize_in(1..=dim);
+            let grads: Vec<Vec<f32>> = (0..n).map(|_| g.f32_vec_len(dim, 1.0)).collect();
+            let mut c = CltK::exact();
+            let step = g.usize_in(0..=31);
+            let sel = c.select(step, &views(&grads), k);
+            let idx = match &sel {
+                Selection::Shared(ix) => ix.clone(),
+                _ => panic!("CLT-k must be shared"),
+            };
+            // avg then sparsify
+            let mut avg = vec![0.0f32; dim];
+            for w in &grads {
+                for (a, &v) in avg.iter_mut().zip(w) {
+                    *a += v / n as f32;
+                }
+            }
+            let lhs = sparsify(&avg, &idx).to_dense();
+            // sparsify then avg
+            let mut rhs = vec![0.0f32; dim];
+            for w in &grads {
+                let s = sparsify(w, &idx);
+                for (&i, &v) in s.indices.iter().zip(&s.values) {
+                    rhs[i as usize] += v / n as f32;
+                }
+            }
+            if let Err(i) = crate::util::floats::allclose(&lhs, &rhs, 1e-4, 1e-5) {
+                panic!("commutativity violated at {i}: {} vs {}", lhs[i], rhs[i]);
+            }
+        });
+    }
+
+    #[test]
+    fn local_topk_is_not_commutative_in_general() {
+        // Different workers select different indices → averaging then
+        // sparsifying differs from sparsifying then averaging.
+        let g0 = vec![9.0f32, 0.0, 0.0, 1.0];
+        let g1 = vec![0.0f32, 9.0, 0.0, 1.0];
+        let grads = vec![g0, g1];
+        let mut c = LocalTopK::new();
+        let sel = c.select(0, &views(&grads), 1);
+        match sel {
+            Selection::PerWorker(ix) => {
+                assert_eq!(ix[0], vec![0]);
+                assert_eq!(ix[1], vec![1]);
+            }
+            _ => panic!("local top-k must be per-worker"),
+        }
+        assert!(!c.is_commutative());
+    }
+
+    #[test]
+    fn true_topk_selects_top_of_average() {
+        // coordinate 2 is strong in the average even though no worker has
+        // it as its individual max.
+        let g0 = vec![10.0f32, 0.0, 6.0];
+        let g1 = vec![-10.0f32, 0.0, 6.0];
+        let grads = vec![g0, g1];
+        let mut c = TrueTopK;
+        assert_eq!(c.select(0, &views(&grads), 1), Selection::Shared(vec![2]));
+    }
+
+    #[test]
+    fn random_k_shared_and_step_dependent() {
+        let grads = vec![vec![0.0f32; 64], vec![0.0f32; 64]];
+        let mut c = RandomK::new(7);
+        let s0 = c.select(0, &views(&grads), 8);
+        let s0_again = c.select(0, &views(&grads), 8);
+        let s1 = c.select(1, &views(&grads), 8);
+        assert_eq!(s0, s0_again, "same step → same indices");
+        assert_ne!(s0, s1, "different step → different indices");
+        assert!(s0.is_shared());
+    }
+
+    #[test]
+    fn gtopk_matches_true_topk_when_sets_overlap() {
+        // If all workers agree on where the energy is, gTop-k must find
+        // the exact global top-k.
+        let g0 = vec![5.0f32, 4.0, 0.1, 0.1, 3.0, 0.1, 0.1, 0.1];
+        let g1 = vec![5.0f32, 4.0, 0.1, 0.1, 3.0, 0.1, 0.1, 0.1];
+        let g2 = vec![5.0f32, 4.0, 0.1, 0.1, 3.0, 0.1, 0.1, 0.1];
+        let g3 = vec![5.0f32, 4.0, 0.1, 0.1, 3.0, 0.1, 0.1, 0.1];
+        let grads = vec![g0, g1, g2, g3];
+        let mut c = GTopK::new();
+        assert_eq!(
+            c.select(0, &views(&grads), 3),
+            Selection::Shared(vec![0, 1, 4])
+        );
+        assert_eq!(GTopK::rounds(4), 2);
+        assert_eq!(GTopK::rounds(5), 3);
+        assert_eq!(GTopK::rounds(1), 0);
+    }
+
+    #[test]
+    fn gtopk_selection_size_bounded_by_k() {
+        check("gtopk |S| <= k", 50, |g| {
+            let n = g.usize_in(2..=8);
+            let dim = g.usize_in(8..=128);
+            let k = g.usize_in(1..=dim / 2);
+            let grads: Vec<Vec<f32>> = (0..n).map(|_| g.f32_vec_len(dim, 1.0)).collect();
+            let mut c = GTopK::new();
+            match c.select(0, &views(&grads), k) {
+                Selection::Shared(ix) => {
+                    assert!(ix.len() <= k);
+                    assert!(ix.windows(2).all(|w| w[0] < w[1]));
+                }
+                _ => panic!(),
+            }
+        });
+    }
+
+    #[test]
+    fn factory_constructs_all_schemes() {
+        for s in [
+            "scalecom",
+            "scalecom-exact",
+            "local-topk",
+            "local-topk-chunk",
+            "true-topk",
+            "random-k",
+            "gtop-k",
+            "sketch-k",
+        ] {
+            let c = make_compressor(s, 100, 1).unwrap();
+            assert!(!c.name().is_empty());
+        }
+        assert!(make_compressor("nope", 100, 1).is_err());
+    }
+
+    #[test]
+    fn overhead_table1_shape() {
+        // Table 1: CLT-k chunked ≈ 3 FLOPs/elem, top-k ≈ log p.
+        let clt = CltK::chunked(400);
+        assert_eq!(clt.overhead_flops_per_element(1 << 20, 1000), 3.0);
+        let topk = LocalTopK::new();
+        assert!((topk.overhead_flops_per_element(1 << 20, 1000) - 20.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,53 @@
+//! Configuration: a TOML-subset parser plus the typed configs the
+//! launcher consumes.
+//!
+//! Supported TOML subset (all the launcher needs): `[section]` and
+//! `[a.b]` headers, `key = value` with string / integer / float / bool /
+//! homogeneous scalar arrays, `#` comments. Files parse into a flat
+//! `"section.key" → Value` map with typed accessors; `TrainConfig`
+//! converts that (or CLI flags) into the trainer's settings.
+
+pub mod toml;
+pub mod train;
+
+pub use toml::{TomlDoc, Value};
+pub use train::{OptimizerKind, ScheduleKind, TrainConfig};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn end_to_end_train_config_from_toml() {
+        let doc = TomlDoc::parse(
+            r#"
+            # quickstart config
+            [train]
+            model = "mlp"
+            workers = 4
+            steps = 100
+            batch_per_worker = 32
+            lr = 0.1
+            seed = 7
+
+            [compress]
+            scheme = "scalecom"
+            rate = 92
+            beta = 0.1
+            warmup_steps = 10
+
+            [fabric]
+            topology = "ring"
+            bandwidth_gbps = 32.0
+            "#,
+        )
+        .unwrap();
+        let cfg = TrainConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.model, "mlp");
+        assert_eq!(cfg.workers, 4);
+        assert_eq!(cfg.compress.scheme, "scalecom");
+        assert_eq!(cfg.compress.rate, 92);
+        assert!((cfg.compress.beta - 0.1).abs() < 1e-6);
+        assert_eq!(cfg.fabric_topology, "ring");
+    }
+}

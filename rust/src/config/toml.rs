@@ -1,0 +1,276 @@
+//! TOML-subset parser (see module docs in `config`).
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Value::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: flat `"section.key"` map.
+#[derive(Debug, Clone, Default)]
+pub struct TomlDoc {
+    map: BTreeMap<String, Value>,
+}
+
+impl TomlDoc {
+    pub fn parse(src: &str) -> anyhow::Result<TomlDoc> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow::anyhow!("line {}: unclosed section", lineno + 1))?
+                    .trim();
+                if name.is_empty()
+                    || !name
+                        .chars()
+                        .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-' || c == '.')
+                {
+                    anyhow::bail!("line {}: bad section name '{name}'", lineno + 1);
+                }
+                section = name.to_string();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value", lineno + 1))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                anyhow::bail!("line {}: empty key", lineno + 1);
+            }
+            let val = parse_value(line[eq + 1..].trim())
+                .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            if map.insert(full.clone(), val).is_some() {
+                anyhow::bail!("line {}: duplicate key '{full}'", lineno + 1);
+            }
+        }
+        Ok(TomlDoc { map })
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<TomlDoc> {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Self::parse(&src)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.map.get(key)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.as_usize()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.map.keys()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> anyhow::Result<Value> {
+    if s.is_empty() {
+        anyhow::bail!("empty value");
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow::anyhow!("unterminated string"))?;
+        // minimal escapes
+        let mut out = String::new();
+        let mut chars = inner.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    other => anyhow::bail!("bad escape \\{other:?}"),
+                }
+            } else {
+                out.push(c);
+            }
+        }
+        return Ok(Value::Str(out));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow::anyhow!("unterminated array"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::Arr(Vec::new()));
+        }
+        // split on commas — strings with commas unsupported in the subset
+        let items: Result<Vec<Value>, _> =
+            inner.split(',').map(|p| parse_value(p.trim())).collect();
+        return Ok(Value::Arr(items?));
+    }
+    // numbers: int if no '.', 'e', 'E'
+    if s.contains('.') || s.contains('e') || s.contains('E') {
+        return s
+            .parse::<f64>()
+            .map(Value::Float)
+            .map_err(|_| anyhow::anyhow!("bad float '{s}'"));
+    }
+    s.parse::<i64>()
+        .map(Value::Int)
+        .map_err(|_| anyhow::anyhow!("bad value '{s}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let d = TomlDoc::parse(
+            r#"
+            top = 1
+            [a]
+            s = "hi"     # comment
+            i = -42
+            f = 2.5
+            b = true
+            arr = [1, 2, 3]
+            [a.b]
+            x = 1e3
+            "#,
+        )
+        .unwrap();
+        assert_eq!(d.get("top").unwrap().as_i64(), Some(1));
+        assert_eq!(d.get("a.s").unwrap().as_str(), Some("hi"));
+        assert_eq!(d.get("a.i").unwrap().as_i64(), Some(-42));
+        assert_eq!(d.get("a.f").unwrap().as_f64(), Some(2.5));
+        // 'b = true' in [a] and the [a.b] section coexist: "a.b" is the
+        // bool key, "a.b.x" the section entry.
+        assert_eq!(d.get("a.b").unwrap().as_bool(), Some(true));
+        assert_eq!(d.get("a.b.x").unwrap().as_f64(), Some(1000.0));
+        let arr = d.get("a.arr").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 3);
+    }
+
+    #[test]
+    fn string_with_hash_and_escapes() {
+        let d = TomlDoc::parse(r#"k = "a # not comment\n""#).unwrap();
+        assert_eq!(d.get("k").unwrap().as_str(), Some("a # not comment\n"));
+    }
+
+    #[test]
+    fn defaults_accessors() {
+        let d = TomlDoc::parse("x = 5").unwrap();
+        assert_eq!(d.usize_or("x", 0), 5);
+        assert_eq!(d.usize_or("missing", 9), 9);
+        assert_eq!(d.str_or("missing", "d"), "d");
+        assert_eq!(d.f64_or("x", 0.0), 5.0);
+        assert!(d.bool_or("missing", true));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(TomlDoc::parse("[unclosed").is_err());
+        assert!(TomlDoc::parse("novalue").is_err());
+        assert!(TomlDoc::parse("k = ").is_err());
+        assert!(TomlDoc::parse("k = \"open").is_err());
+        assert!(TomlDoc::parse("k = [1, 2").is_err());
+        assert!(TomlDoc::parse("k = 1\nk = 2").is_err());
+        assert!(TomlDoc::parse("[]").is_err());
+        assert!(TomlDoc::parse("[bad name]").is_err());
+    }
+
+    #[test]
+    fn negative_usize_rejected_by_accessor() {
+        let d = TomlDoc::parse("x = -1").unwrap();
+        assert_eq!(d.get("x").unwrap().as_usize(), None);
+    }
+}

@@ -1,0 +1,223 @@
+//! Typed training configuration (launcher-facing).
+
+use crate::config::toml::TomlDoc;
+
+/// Optimizer selection; Appendix E uses SGD+momentum for ResNets,
+/// RMSProp for MobileNetV2, Adam for the Transformer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptimizerKind {
+    Sgd,
+    SgdMomentum,
+    Adam,
+    RmsProp,
+}
+
+impl OptimizerKind {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "sgd" => OptimizerKind::Sgd,
+            "sgdm" | "sgd-momentum" => OptimizerKind::SgdMomentum,
+            "adam" => OptimizerKind::Adam,
+            "rmsprop" => OptimizerKind::RmsProp,
+            other => anyhow::bail!("unknown optimizer '{other}'"),
+        })
+    }
+}
+
+/// Learning-rate schedule. Large-batch runs linearly warm the LR up and
+/// then decay (Goyal et al. [7], Appendix E).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ScheduleKind {
+    Constant,
+    /// Multiply by `gamma` at each step listed (fractions of total steps).
+    StepDecay { gamma: f64 },
+    /// Linear warmup to peak over `warmup` steps, then constant.
+    LinearWarmup { warmup: usize },
+    /// Linear warmup then inverse-sqrt decay (Transformer style).
+    WarmupInvSqrt { warmup: usize },
+}
+
+/// Compression sub-config.
+#[derive(Debug, Clone)]
+pub struct CompressConfig {
+    /// scheme name for `make_compressor` (or "none").
+    pub scheme: String,
+    /// target compression rate (chunk size for chunked selection).
+    pub rate: usize,
+    /// low-pass filter discount factor β (1.0 = classic error feedback).
+    pub beta: f32,
+    /// steps of dense (uncompressed) warmup — paper uses 1–5 epochs.
+    pub warmup_steps: usize,
+    /// use the per-layer FLOPs/gradient rate rule instead of a flat rate.
+    pub use_flops_rule: bool,
+}
+
+impl Default for CompressConfig {
+    fn default() -> Self {
+        CompressConfig {
+            scheme: "scalecom".into(),
+            rate: 100,
+            beta: 1.0,
+            warmup_steps: 0,
+            use_flops_rule: false,
+        }
+    }
+}
+
+/// Full training-run configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub model: String,
+    pub workers: usize,
+    pub steps: usize,
+    pub batch_per_worker: usize,
+    pub lr: f64,
+    pub momentum: f64,
+    pub weight_decay: f64,
+    pub optimizer: OptimizerKind,
+    pub schedule: ScheduleKind,
+    pub seed: u64,
+    pub compress: CompressConfig,
+    pub fabric_topology: String,
+    pub fabric_bandwidth_gbps: f64,
+    /// Evaluate every `eval_every` steps (0 = never).
+    pub eval_every: usize,
+    /// Directory for artifacts (HLO + manifest).
+    pub artifacts_dir: String,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            model: "mlp".into(),
+            workers: 4,
+            steps: 100,
+            batch_per_worker: 32,
+            lr: 0.1,
+            momentum: 0.9,
+            weight_decay: 0.0,
+            optimizer: OptimizerKind::SgdMomentum,
+            schedule: ScheduleKind::Constant,
+            seed: 42,
+            compress: CompressConfig::default(),
+            fabric_topology: "ps".into(),
+            fabric_bandwidth_gbps: 32.0,
+            eval_every: 0,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn from_toml(doc: &TomlDoc) -> anyhow::Result<TrainConfig> {
+        let d = TrainConfig::default();
+        let optimizer =
+            OptimizerKind::parse(doc.str_or("train.optimizer", "sgd-momentum"))?;
+        let schedule = match doc.str_or("train.schedule", "constant") {
+            "constant" => ScheduleKind::Constant,
+            "step-decay" => ScheduleKind::StepDecay {
+                gamma: doc.f64_or("train.decay_gamma", 0.1),
+            },
+            "linear-warmup" => ScheduleKind::LinearWarmup {
+                warmup: doc.usize_or("train.warmup_steps", 0),
+            },
+            "warmup-invsqrt" => ScheduleKind::WarmupInvSqrt {
+                warmup: doc.usize_or("train.warmup_steps", 0),
+            },
+            other => anyhow::bail!("unknown schedule '{other}'"),
+        };
+        let cfg = TrainConfig {
+            model: doc.str_or("train.model", &d.model).to_string(),
+            workers: doc.usize_or("train.workers", d.workers),
+            steps: doc.usize_or("train.steps", d.steps),
+            batch_per_worker: doc.usize_or("train.batch_per_worker", d.batch_per_worker),
+            lr: doc.f64_or("train.lr", d.lr),
+            momentum: doc.f64_or("train.momentum", d.momentum),
+            weight_decay: doc.f64_or("train.weight_decay", d.weight_decay),
+            optimizer,
+            schedule,
+            seed: doc.usize_or("train.seed", d.seed as usize) as u64,
+            compress: CompressConfig {
+                scheme: doc.str_or("compress.scheme", "scalecom").to_string(),
+                rate: doc.usize_or("compress.rate", 100),
+                beta: doc.f64_or("compress.beta", 1.0) as f32,
+                warmup_steps: doc.usize_or("compress.warmup_steps", 0),
+                use_flops_rule: doc.bool_or("compress.use_flops_rule", false),
+            },
+            fabric_topology: doc.str_or("fabric.topology", &d.fabric_topology).to_string(),
+            fabric_bandwidth_gbps: doc.f64_or("fabric.bandwidth_gbps", 32.0),
+            eval_every: doc.usize_or("train.eval_every", 0),
+            artifacts_dir: doc.str_or("train.artifacts_dir", &d.artifacts_dir).to_string(),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.workers >= 1, "workers must be >= 1");
+        anyhow::ensure!(self.steps >= 1, "steps must be >= 1");
+        anyhow::ensure!(self.batch_per_worker >= 1, "batch_per_worker must be >= 1");
+        anyhow::ensure!(self.lr > 0.0, "lr must be positive");
+        anyhow::ensure!(
+            self.compress.beta > 0.0 && self.compress.beta <= 1.0,
+            "beta must be in (0, 1]"
+        );
+        anyhow::ensure!(self.compress.rate >= 1, "compression rate must be >= 1");
+        Ok(())
+    }
+
+    /// Global batch size (paper's "BSZ" column).
+    pub fn global_batch(&self) -> usize {
+        self.workers * self.batch_per_worker
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        TrainConfig::default().validate().unwrap();
+        assert_eq!(TrainConfig::default().global_batch(), 128);
+    }
+
+    #[test]
+    fn optimizer_parse() {
+        assert_eq!(OptimizerKind::parse("adam").unwrap(), OptimizerKind::Adam);
+        assert_eq!(
+            OptimizerKind::parse("sgd-momentum").unwrap(),
+            OptimizerKind::SgdMomentum
+        );
+        assert!(OptimizerKind::parse("lamb").is_err());
+    }
+
+    #[test]
+    fn schedule_from_toml() {
+        let doc = TomlDoc::parse(
+            "[train]\nschedule = \"warmup-invsqrt\"\nwarmup_steps = 40\n",
+        )
+        .unwrap();
+        let cfg = TrainConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.schedule, ScheduleKind::WarmupInvSqrt { warmup: 40 });
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut c = TrainConfig::default();
+        c.workers = 0;
+        assert!(c.validate().is_err());
+        let mut c = TrainConfig::default();
+        c.compress.beta = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = TrainConfig::default();
+        c.compress.rate = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn unknown_schedule_rejected() {
+        let doc = TomlDoc::parse("[train]\nschedule = \"cosine\"\n").unwrap();
+        assert!(TrainConfig::from_toml(&doc).is_err());
+    }
+}

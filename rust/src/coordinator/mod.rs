@@ -1,0 +1,511 @@
+//! Algorithm 1 — the ScaleCom coordination step, decoupled from PJRT.
+//!
+//! The `Coordinator` owns the per-worker error-feedback memories, the
+//! compression scheme, and the fabric; `step` consumes this iteration's
+//! stochastic gradients (however they were computed) and produces the
+//! averaged update `g^t` plus full per-step diagnostics. The PJRT trainer
+//! drives it with real gradients; unit/property tests drive it with
+//! synthetic ones.
+//!
+//! Per Algorithm 1:
+//!   line 6: g_i = CLT_{mod(t,n)}(m_i + ∇f_i)        → `select` + sparsify
+//!   line 7: m_i ← (1-β)m_i + β(m_i + ∇f_i − g_i)    → EfMemory update
+//!   lines 9-11: upload/reduce/download               → Fabric collectives
+//!   (warmup steps and uncompressed layers go dense, per §4)
+
+use crate::comm::{CommCost, Fabric};
+use crate::compress::{
+    sparsify, Compressor, EfMemory, LayerPartition, Selection, SparseGrad,
+};
+
+/// What happened in one coordination step (for metrics + experiments).
+pub struct StepResult {
+    /// averaged update g^t to feed the optimizer (dense, full dim)
+    pub update: Vec<f32>,
+    /// index selection used (None during dense warmup)
+    pub selection: Option<Selection>,
+    /// cyclic leader of this step
+    pub leader: usize,
+    /// communication cost of the gradient exchange
+    pub comm: CommCost,
+    /// achieved compression rate this step (dim / transmitted coords)
+    pub rate: f64,
+    /// whether the dense path was used (warmup / scheme none)
+    pub dense: bool,
+}
+
+/// Coordination mode.
+pub enum Mode {
+    /// No compression — dense all-reduce baseline.
+    Dense,
+    /// Error-feedback sparsification with the given scheme.
+    Compressed(Box<dyn Compressor>),
+}
+
+pub struct Coordinator {
+    n: usize,
+    dim: usize,
+    mode: Mode,
+    pub memories: Vec<EfMemory>,
+    pub fabric: Fabric,
+    /// flat per-step budget: either a single k over the whole vector...
+    pub k: usize,
+    /// ...or a per-layer budget (paper's FLOPs/gradient rule).
+    pub layered: Option<(LayerPartition, Vec<usize>)>,
+    /// dense warmup steps (paper: 1-5 epochs uncompressed)
+    pub warmup_steps: usize,
+}
+
+impl Coordinator {
+    pub fn new(
+        n: usize,
+        dim: usize,
+        mode: Mode,
+        beta: f32,
+        k: usize,
+        fabric: Fabric,
+        warmup_steps: usize,
+    ) -> Self {
+        assert!(n >= 1 && dim >= 1);
+        assert_eq!(fabric.workers(), n, "fabric sized for a different n");
+        let memories = (0..n).map(|_| EfMemory::new(dim, beta)).collect();
+        Coordinator {
+            n,
+            dim,
+            mode,
+            memories,
+            fabric,
+            k: k.clamp(1, dim),
+            layered: None,
+            warmup_steps,
+        }
+    }
+
+    pub fn with_layered(mut self, partition: LayerPartition, ks: Vec<usize>) -> Self {
+        assert_eq!(partition.total_len(), self.dim);
+        assert_eq!(partition.layers.len(), ks.len());
+        self.layered = Some((partition, ks));
+        self
+    }
+
+    pub fn workers(&self) -> usize {
+        self.n
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn set_beta(&mut self, beta: f32) {
+        for m in &mut self.memories {
+            m.set_beta(beta);
+        }
+    }
+
+    /// Error-feedback gradients m_i + ∇f_i for all workers.
+    pub fn ef_grads(&self, grads: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        assert_eq!(grads.len(), self.n);
+        self.memories
+            .iter()
+            .zip(grads)
+            .map(|(m, g)| m.ef_grad(g))
+            .collect()
+    }
+
+    /// One coordination step over this iteration's stochastic gradients.
+    pub fn step(&mut self, t: usize, grads: &[Vec<f32>]) -> StepResult {
+        assert_eq!(grads.len(), self.n, "need one gradient per worker");
+        for (w, g) in grads.iter().enumerate() {
+            assert_eq!(g.len(), self.dim, "worker {w} gradient dim");
+        }
+        let leader = t % self.n;
+
+        let dense_path = matches!(self.mode, Mode::Dense) || t < self.warmup_steps;
+        if dense_path {
+            let update = self.fabric.dense_allreduce_avg(grads);
+            let comm = self.fabric.stats().last_cost().clone();
+            return StepResult {
+                update,
+                selection: None,
+                leader,
+                comm,
+                rate: 1.0,
+                dense: true,
+            };
+        }
+
+        // --- compressed path -------------------------------------------
+        let efs = self.ef_grads(grads);
+        let ef_views: Vec<&[f32]> = efs.iter().map(|e| e.as_slice()).collect();
+        let compressor = match &mut self.mode {
+            Mode::Compressed(c) => c,
+            Mode::Dense => unreachable!(),
+        };
+        let selection = if let Some((partition, ks)) = &self.layered {
+            select_layered(compressor.as_mut(), t, &ef_views, partition, ks)
+        } else {
+            compressor.select(t, &ef_views, self.k)
+        };
+
+        let (update, comm, sent) = match &selection {
+            Selection::Shared(idx) => {
+                let sparses: Vec<SparseGrad> =
+                    efs.iter().map(|ef| sparsify(ef, idx)).collect();
+                let avg = self.fabric.sparse_allreduce_shared(&sparses, leader);
+                (
+                    avg.to_dense(),
+                    self.fabric.stats().last_cost().clone(),
+                    idx.len(),
+                )
+            }
+            Selection::PerWorker(per) => {
+                let sparses: Vec<SparseGrad> = efs
+                    .iter()
+                    .zip(per)
+                    .map(|(ef, idx)| sparsify(ef, idx))
+                    .collect();
+                let avg = self.fabric.sparse_gather_avg(&sparses);
+                let sent = per.iter().map(|p| p.len()).max().unwrap_or(0);
+                (avg, self.fabric.stats().last_cost().clone(), sent)
+            }
+        };
+
+        // memory update (Eqn. 5) with each worker's transmitted indices
+        for (w, mem) in self.memories.iter_mut().enumerate() {
+            mem.update_after_send(&grads[w], selection.indices_for(w));
+        }
+
+        StepResult {
+            update,
+            rate: self.dim as f64 / sent.max(1) as f64,
+            selection: Some(selection),
+            leader,
+            comm,
+            dense: false,
+        }
+    }
+}
+
+/// Apply a compressor independently per layer slice with per-layer k,
+/// concatenating the global index sets (the §4 per-layer rate rule).
+pub fn select_layered(
+    compressor: &mut dyn Compressor,
+    t: usize,
+    efs: &[&[f32]],
+    partition: &LayerPartition,
+    ks: &[usize],
+) -> Selection {
+    let n = efs.len();
+    let mut shared: Vec<u32> = Vec::new();
+    let mut per_worker: Vec<Vec<u32>> = vec![Vec::new(); n];
+    let mut any_per_worker = false;
+    for (layer, &k) in partition.layers.iter().zip(ks) {
+        let views: Vec<&[f32]> = efs
+            .iter()
+            .map(|ef| &ef[layer.offset..layer.offset + layer.len])
+            .collect();
+        let sel = if !layer.compress || k >= layer.len {
+            // dense layer: every coordinate selected
+            Selection::Shared((0..layer.len as u32).collect())
+        } else {
+            compressor.select(t, &views, k)
+        };
+        match sel {
+            Selection::Shared(idx) => {
+                let off = layer.offset as u32;
+                shared.extend(idx.iter().map(|&i| i + off));
+                for pw in &mut per_worker {
+                    pw.extend(idx.iter().map(|&i| i + off));
+                }
+            }
+            Selection::PerWorker(per) => {
+                any_per_worker = true;
+                let off = layer.offset as u32;
+                for (w, idx) in per.iter().enumerate() {
+                    per_worker[w].extend(idx.iter().map(|&i| i + off));
+                }
+            }
+        }
+    }
+    if any_per_worker {
+        Selection::PerWorker(per_worker)
+    } else {
+        Selection::Shared(shared)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{FabricConfig, Topology};
+    use crate::compress::rate::LayerSlice;
+    use crate::compress::schemes::{CltK, LocalTopK, TrueTopK};
+    use crate::proptest::check;
+    use crate::util::floats::allclose;
+    use crate::util::rng::Rng;
+
+    fn fabric(n: usize) -> Fabric {
+        Fabric::new(FabricConfig {
+            workers: n,
+            topology: Topology::ParameterServer,
+            ..FabricConfig::default()
+        })
+    }
+
+    fn rand_grads(rng: &mut Rng, n: usize, dim: usize) -> Vec<Vec<f32>> {
+        (0..n)
+            .map(|_| {
+                let mut v = vec![0.0; dim];
+                rng.fill_normal(&mut v, 1.0);
+                v
+            })
+            .collect()
+    }
+
+    #[test]
+    fn dense_mode_averages_exactly() {
+        let mut c = Coordinator::new(2, 3, Mode::Dense, 1.0, 3, fabric(2), 0);
+        let r = c.step(0, &[vec![1.0, 2.0, 3.0], vec![3.0, 2.0, 1.0]]);
+        assert_eq!(r.update, vec![2.0, 2.0, 2.0]);
+        assert!(r.dense);
+        assert_eq!(r.rate, 1.0);
+        assert!(r.selection.is_none());
+    }
+
+    #[test]
+    fn warmup_steps_go_dense_then_compress() {
+        let mut c = Coordinator::new(
+            2,
+            10,
+            Mode::Compressed(Box::new(CltK::exact())),
+            1.0,
+            2,
+            fabric(2),
+            3,
+        );
+        let mut rng = Rng::new(5);
+        for t in 0..5 {
+            let r = c.step(t, &rand_grads(&mut rng, 2, 10));
+            assert_eq!(r.dense, t < 3, "step {t}");
+        }
+    }
+
+    #[test]
+    fn clt_k_leader_cycles() {
+        let n = 3;
+        let mut c = Coordinator::new(
+            n,
+            12,
+            Mode::Compressed(Box::new(CltK::exact())),
+            1.0,
+            2,
+            fabric(n),
+            0,
+        );
+        let mut rng = Rng::new(7);
+        for t in 0..6 {
+            let r = c.step(t, &rand_grads(&mut rng, n, 12));
+            assert_eq!(r.leader, t % n);
+            assert!(matches!(r.selection, Some(Selection::Shared(_))));
+            assert_eq!(r.rate, 6.0);
+        }
+    }
+
+    #[test]
+    fn error_feedback_no_information_lost_beta1() {
+        // Invariant: with β=1, sum over steps of updates + final averaged
+        // memory == running average of all raw gradients, coordinate-wise.
+        check("EF conservation over trajectory", 25, |g| {
+            let n = g.usize_in(2..=4);
+            let dim = g.usize_in(4..=64);
+            let k = g.usize_in(1..=dim);
+            let steps = g.usize_in(1..=10);
+            let mut c = Coordinator::new(
+                n,
+                dim,
+                Mode::Compressed(Box::new(CltK::exact())),
+                1.0,
+                k,
+                fabric(n),
+                0,
+            );
+            let mut total_grads = vec![0.0f64; dim];
+            let mut total_updates = vec![0.0f64; dim];
+            for t in 0..steps {
+                let grads: Vec<Vec<f32>> =
+                    (0..n).map(|_| g.f32_vec_len(dim, 1.0)).collect();
+                for w in &grads {
+                    for (acc, &v) in total_grads.iter_mut().zip(w) {
+                        *acc += v as f64 / n as f64;
+                    }
+                }
+                let r = c.step(t, &grads);
+                for (acc, &v) in total_updates.iter_mut().zip(&r.update) {
+                    *acc += v as f64;
+                }
+            }
+            // add back what's still in memory (averaged over workers)
+            for mem in &c.memories {
+                for (acc, &v) in total_updates.iter_mut().zip(mem.memory()) {
+                    *acc += v as f64 / n as f64;
+                }
+            }
+            for i in 0..dim {
+                assert!(
+                    (total_grads[i] - total_updates[i]).abs() < 1e-3,
+                    "coord {i}: grads {} vs updates+memory {}",
+                    total_grads[i],
+                    total_updates[i]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn shared_vs_gather_byte_scaling() {
+        // CLT-k per-worker download constant in n; local top-k grows.
+        let dim = 2000;
+        let k = 20;
+        let mut scalecom_down = Vec::new();
+        let mut localtopk_down = Vec::new();
+        for n in [2usize, 8] {
+            let mut rng = Rng::new(3);
+            let grads = rand_grads(&mut rng, n, dim);
+            let mut c1 = Coordinator::new(
+                n,
+                dim,
+                Mode::Compressed(Box::new(CltK::exact())),
+                1.0,
+                k,
+                fabric(n),
+                0,
+            );
+            scalecom_down.push(c1.step(0, &grads).comm.bytes_down_per_worker);
+            let mut c2 = Coordinator::new(
+                n,
+                dim,
+                Mode::Compressed(Box::new(LocalTopK::new())),
+                1.0,
+                k,
+                fabric(n),
+                0,
+            );
+            localtopk_down.push(c2.step(0, &grads).comm.bytes_down_per_worker);
+        }
+        assert_eq!(scalecom_down[0], scalecom_down[1]);
+        assert!(localtopk_down[1] > localtopk_down[0] * 2);
+    }
+
+    #[test]
+    fn true_topk_contracts_at_least_as_well_as_clt_k() {
+        // γ̂(true top-k) ≤ γ̂(CLT-k) on the averaged EF gradient.
+        let n = 4;
+        let dim = 256;
+        let k = 16;
+        let mut rng = Rng::new(11);
+        let grads = rand_grads(&mut rng, n, dim);
+        let mk = |m: Mode| Coordinator::new(n, dim, m, 1.0, k, fabric(n), 0);
+        let mut c_true = mk(Mode::Compressed(Box::new(TrueTopK)));
+        let mut c_clt = mk(Mode::Compressed(Box::new(CltK::exact())));
+
+        let avg_ef = |c: &Coordinator, grads: &[Vec<f32>]| -> Vec<f32> {
+            let efs = c.ef_grads(grads);
+            let mut avg = vec![0.0f32; dim];
+            for e in &efs {
+                for (a, &v) in avg.iter_mut().zip(e) {
+                    *a += v / n as f32;
+                }
+            }
+            avg
+        };
+        let y = avg_ef(&c_true, &grads);
+        let sel_true = match c_true.step(0, &grads).selection.unwrap() {
+            Selection::Shared(ix) => ix,
+            _ => panic!(),
+        };
+        let sel_clt = match c_clt.step(0, &grads).selection.unwrap() {
+            Selection::Shared(ix) => ix,
+            _ => panic!(),
+        };
+        let g_true = crate::stats::contraction_coefficient(&y, &sel_true);
+        let g_clt = crate::stats::contraction_coefficient(&y, &sel_clt);
+        assert!(g_true <= g_clt + 1e-9, "{g_true} vs {g_clt}");
+    }
+
+    #[test]
+    fn layered_selection_respects_budgets_and_dense_layers() {
+        let partition = LayerPartition::from_layers(vec![
+            LayerSlice {
+                name: "first".into(),
+                offset: 0,
+                len: 8,
+                flops_per_sample: 0.0,
+                compress: false, // dense
+            },
+            LayerSlice {
+                name: "rest".into(),
+                offset: 8,
+                len: 32,
+                flops_per_sample: 0.0,
+                compress: true,
+            },
+        ]);
+        let ks = vec![8, 4];
+        let n = 2;
+        let mut c = Coordinator::new(
+            n,
+            40,
+            Mode::Compressed(Box::new(CltK::exact())),
+            1.0,
+            4,
+            fabric(n),
+            0,
+        )
+        .with_layered(partition, ks);
+        let mut rng = Rng::new(2);
+        let r = c.step(0, &rand_grads(&mut rng, n, 40));
+        match r.selection.unwrap() {
+            Selection::Shared(idx) => {
+                // dense first layer: indices 0..8 all present
+                for i in 0..8u32 {
+                    assert!(idx.contains(&i));
+                }
+                assert_eq!(idx.len(), 12); // 8 dense + 4 compressed
+            }
+            _ => panic!("CLT-k layered must stay shared"),
+        }
+    }
+
+    #[test]
+    fn update_matches_manual_average_on_shared_indices() {
+        check("update == masked average of EF grads", 40, |g| {
+            let n = g.usize_in(2..=5);
+            let dim = g.usize_in(4..=128);
+            let k = g.usize_in(1..=dim);
+            let grads: Vec<Vec<f32>> = (0..n).map(|_| g.f32_vec_len(dim, 1.0)).collect();
+            let mut c = Coordinator::new(
+                n,
+                dim,
+                Mode::Compressed(Box::new(CltK::exact())),
+                1.0,
+                k,
+                fabric(n),
+                0,
+            );
+            // memory is zero at t=0 → EF grads == grads
+            let r = c.step(0, &grads);
+            let idx = match r.selection.unwrap() {
+                Selection::Shared(ix) => ix,
+                _ => panic!(),
+            };
+            let mut expect = vec![0.0f32; dim];
+            for &i in &idx {
+                let i = i as usize;
+                expect[i] = grads.iter().map(|w| w[i]).sum::<f32>() / n as f32;
+            }
+            if let Err(i) = allclose(&r.update, &expect, 1e-4, 1e-5) {
+                panic!("coord {i}: {} vs {}", r.update[i], expect[i]);
+            }
+        });
+    }
+}

@@ -1,0 +1,86 @@
+//! Synthetic datasets standing in for the paper's corpora.
+//!
+//! Substitution map (see DESIGN.md §4): ImageNet/CIFAR10 → gaussian
+//! cluster classification; WMT14 En-De → a synthetic character-level
+//! corpus with Markov structure (so a language model has real signal to
+//! learn); SWB300 speech → smooth multi-sine sequences with frame labels
+//! (so a recurrent model must integrate temporal context).
+//!
+//! All generators are deterministic in `(seed)` and support worker
+//! sharding identical to the paper's fully-synchronized data-parallel
+//! setup: shard i of n sees sample indices ≡ i (mod n).
+
+pub mod lm;
+pub mod sequence;
+pub mod vectors;
+
+pub use lm::LmCorpus;
+pub use sequence::SequenceDataset;
+pub use vectors::{ClusterDataset, ImagePatternDataset};
+
+/// A mini-batch of flat features + integer labels.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    /// row-major [batch, feature_dim]
+    pub x: Vec<f32>,
+    /// [batch] class ids (or [batch*seq] for sequence tasks)
+    pub y: Vec<i32>,
+    pub batch: usize,
+    pub feature_dim: usize,
+}
+
+impl Batch {
+    pub fn validate(&self) {
+        assert_eq!(self.x.len(), self.batch * self.feature_dim);
+        assert!(self.y.len() % self.batch == 0);
+    }
+}
+
+/// Common interface: deterministic batch for (worker, step).
+pub trait Dataset: Send + Sync {
+    /// Distinct deterministic batch per (worker, step) pair; workers
+    /// always draw disjoint shards for the same step.
+    fn batch(&self, worker: usize, n_workers: usize, step: usize, batch_size: usize) -> Batch;
+
+    /// Held-out evaluation batch (same for all callers).
+    fn eval_batch(&self, batch_size: usize) -> Batch;
+
+    fn feature_dim(&self) -> usize;
+    fn num_classes(&self) -> usize;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_dataset(ds: &dyn Dataset) {
+        let b = ds.batch(0, 4, 0, 8);
+        b.validate();
+        assert_eq!(b.batch, 8);
+        assert_eq!(b.feature_dim, ds.feature_dim());
+        // determinism
+        let b2 = ds.batch(0, 4, 0, 8);
+        assert_eq!(b.x, b2.x);
+        assert_eq!(b.y, b2.y);
+        // different worker → different shard
+        let b3 = ds.batch(1, 4, 0, 8);
+        assert_ne!(b.x, b3.x);
+        // different step → different data
+        let b4 = ds.batch(0, 4, 1, 8);
+        assert_ne!(b.x, b4.x);
+        // labels in range
+        for &y in &b.y {
+            assert!(y >= 0 && (y as usize) < ds.num_classes());
+        }
+        let e = ds.eval_batch(16);
+        e.validate();
+    }
+
+    #[test]
+    fn all_datasets_satisfy_contract() {
+        check_dataset(&ClusterDataset::new(16, 10, 1234));
+        check_dataset(&ImagePatternDataset::new(8, 5, 1234));
+        check_dataset(&LmCorpus::new(32, 16, 1234));
+        check_dataset(&SequenceDataset::new(8, 12, 6, 1234));
+    }
+}

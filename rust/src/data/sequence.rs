@@ -1,0 +1,131 @@
+//! Smooth multi-sine sequences with frame labels (speech stand-in).
+//!
+//! Each sample is a `seq`-frame window of a multi-tone signal whose
+//! "phoneme" label per frame is the identity of the dominant tone —
+//! the label depends on temporal context (phase), so a recurrent model
+//! (our LSTM-lite) genuinely benefits from integrating over time, like
+//! an acoustic model does.
+
+use crate::data::{Batch, Dataset};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct SequenceDataset {
+    pub feat: usize,
+    pub seq: usize,
+    pub classes: usize,
+    seed: u64,
+    /// per-class tone frequencies (radians/frame) for each feature dim
+    freqs: Vec<Vec<f32>>,
+}
+
+impl SequenceDataset {
+    pub fn new(feat: usize, seq: usize, classes: usize, seed: u64) -> Self {
+        let mut rng = Rng::for_stream(seed, 0x5E9);
+        let freqs = (0..classes)
+            .map(|_| {
+                (0..feat)
+                    .map(|_| 0.2 + 1.2 * rng.next_f32())
+                    .collect::<Vec<f32>>()
+            })
+            .collect();
+        SequenceDataset {
+            feat,
+            seq,
+            classes,
+            seed,
+            freqs,
+        }
+    }
+
+    fn make_batch(&self, rng: &mut Rng, batch_size: usize) -> Batch {
+        // features: [batch, seq*feat] flattened frames
+        let mut x = Vec::with_capacity(batch_size * self.seq * self.feat);
+        let mut y = Vec::with_capacity(batch_size * self.seq);
+        for _ in 0..batch_size {
+            // piecewise-constant class sequence: segments of 3–6 frames
+            let mut t = 0usize;
+            let phase0 = rng.next_f32() * 6.28;
+            while t < self.seq {
+                let c = rng.next_below(self.classes as u64) as usize;
+                let seg = 3 + rng.next_below(4) as usize;
+                for _ in 0..seg.min(self.seq - t) {
+                    for f in 0..self.feat {
+                        let w = self.freqs[c][f];
+                        let v = (phase0 + w * t as f32).sin()
+                            + 0.1 * rng.next_normal_f32(0.0, 1.0);
+                        x.push(v);
+                    }
+                    y.push(c as i32);
+                    t += 1;
+                }
+            }
+        }
+        Batch {
+            x,
+            y,
+            batch: batch_size,
+            feature_dim: self.seq * self.feat,
+        }
+    }
+}
+
+impl Dataset for SequenceDataset {
+    fn batch(&self, worker: usize, n_workers: usize, step: usize, batch_size: usize) -> Batch {
+        assert!(worker < n_workers);
+        let stream = (step as u64) * (n_workers as u64) + worker as u64 + 1;
+        let mut rng = Rng::for_stream(self.seed ^ 0x5EC, stream);
+        self.make_batch(&mut rng, batch_size)
+    }
+
+    fn eval_batch(&self, batch_size: usize) -> Batch {
+        let mut rng = Rng::for_stream(self.seed ^ 0x5EC, 0xE7A1_0000_0002);
+        self.make_batch(&mut rng, batch_size)
+    }
+
+    fn feature_dim(&self) -> usize {
+        self.seq * self.feat
+    }
+
+    fn num_classes(&self) -> usize {
+        self.classes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_labels() {
+        let ds = SequenceDataset::new(4, 10, 5, 77);
+        let b = ds.batch(2, 4, 3, 6);
+        assert_eq!(b.x.len(), 6 * 10 * 4);
+        assert_eq!(b.y.len(), 6 * 10);
+        for &y in &b.y {
+            assert!(y >= 0 && y < 5);
+        }
+    }
+
+    #[test]
+    fn labels_piecewise_constant() {
+        let ds = SequenceDataset::new(2, 20, 4, 5);
+        let b = ds.batch(0, 1, 0, 8);
+        // count label changes per window: segments are ≥3 frames, so
+        // changes ≤ seq/3
+        for w in 0..8 {
+            let ys = &b.y[w * 20..(w + 1) * 20];
+            let changes = ys.windows(2).filter(|p| p[0] != p[1]).count();
+            assert!(changes <= 7, "too many label changes: {changes}");
+        }
+    }
+
+    #[test]
+    fn signal_bounded() {
+        let ds = SequenceDataset::new(4, 10, 5, 77);
+        let b = ds.eval_batch(4);
+        for &v in &b.x {
+            assert!(v.abs() < 2.5, "signal out of range: {v}");
+        }
+    }
+}

@@ -1,0 +1,104 @@
+//! Shared helpers for the experiment drivers.
+
+use crate::config::train::{CompressConfig, OptimizerKind, ScheduleKind, TrainConfig};
+use crate::metrics::RunLog;
+use crate::trainer::{LrSchedule, Trainer};
+use std::path::PathBuf;
+
+/// Where experiment CSVs land.
+pub fn results_dir() -> PathBuf {
+    let d = PathBuf::from("results");
+    let _ = std::fs::create_dir_all(&d);
+    d
+}
+
+/// Base config for a (model, scheme, workers) training run; experiment
+/// drivers tweak the rest.
+pub fn train_cfg(model: &str, scheme: &str, workers: usize, steps: usize) -> TrainConfig {
+    let zoo = crate::models::zoo_model(model).expect("zoo model");
+    TrainConfig {
+        model: model.to_string(),
+        workers,
+        steps,
+        batch_per_worker: zoo.batch_per_worker,
+        lr: default_lr(model),
+        momentum: 0.9,
+        weight_decay: 0.0,
+        optimizer: default_optimizer(model),
+        schedule: ScheduleKind::Constant,
+        seed: 42,
+        compress: CompressConfig {
+            scheme: scheme.to_string(),
+            rate: zoo.default_rate,
+            beta: 1.0,
+            warmup_steps: 0,
+            // conv nets need the paper's per-layer rate rule: flat
+            // chunking starves the small high-gradient conv layers
+            use_flops_rule: model == "cnn",
+        },
+        fabric_topology: "ps".into(),
+        fabric_bandwidth_gbps: 32.0,
+        eval_every: 0,
+        artifacts_dir: "artifacts".into(),
+    }
+}
+
+pub fn default_lr(model: &str) -> f64 {
+    match model {
+        "transformer" | "transformer-med" => 0.01, // adam
+        "lstm" => 0.5,
+        "cnn" => 0.05,
+        _ => 0.1,
+    }
+}
+
+pub fn default_optimizer(model: &str) -> OptimizerKind {
+    match model {
+        "transformer" | "transformer-med" => OptimizerKind::Adam,
+        _ => OptimizerKind::SgdMomentum,
+    }
+}
+
+/// Adam needs a gentler LR: scale large-batch LRs with sqrt for adam,
+/// linear for SGD (Goyal et al. [7]).
+pub fn scaled_lr(model: &str, base_workers: usize, workers: usize) -> f64 {
+    let base = default_lr(model);
+    let ratio = workers as f64 / base_workers as f64;
+    match default_optimizer(model) {
+        OptimizerKind::Adam => base * ratio.sqrt(),
+        _ => base * ratio,
+    }
+}
+
+/// Run a config to completion and return its log (convenience).
+pub fn run(cfg: TrainConfig) -> anyhow::Result<RunLog> {
+    let mut t = Trainer::from_config(cfg)?;
+    t.run()
+}
+
+/// Run with a large-batch warmup schedule (linear base→peak over the
+/// first `warmup` steps).
+pub fn run_with_warmup(
+    mut cfg: TrainConfig,
+    base_lr: f64,
+    peak_lr: f64,
+    warmup: usize,
+) -> anyhow::Result<RunLog> {
+    cfg.lr = peak_lr;
+    let mut t = Trainer::from_config(cfg)?;
+    t.schedule = LrSchedule::warmup_linear(base_lr, peak_lr, warmup);
+    t.run()
+}
+
+/// Smoothed final training loss (mean of last 20 steps).
+pub fn final_loss(log: &RunLog) -> f64 {
+    log.tail_mean("loss", 20).unwrap_or(f64::NAN)
+}
+
+pub fn fmt3(v: f64) -> String {
+    format!("{v:.3}")
+}
+
+pub fn fmt1(v: f64) -> String {
+    format!("{v:.1}")
+}

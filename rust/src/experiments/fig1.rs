@@ -1,0 +1,226 @@
+//! Figure 1 — the two scalability challenges.
+//!
+//! (a) gradient build-up: gathered sparse gradients cannot be reduced,
+//!     so the aggregated nnz (and per-worker download) grows O(n) while
+//!     ScaleCom's stays constant. Measured on the fabric.
+//! (b) communication fraction of step time vs worker count for the
+//!     ResNet50/ImageNet perf model (32 GBps, 112×) — server bottleneck.
+//! (c) local top-k divergence in large-batch training: with a scaled
+//!     learning rate, naive local top-k degrades while ScaleCom (β=0.1)
+//!     tracks the uncompressed baseline (transformer workload).
+
+use crate::comm::{Fabric, FabricConfig, Topology};
+use crate::compress::{schemes::make_compressor, sparsify, Selection, SparseGrad};
+use crate::experiments::common::{self, run_with_warmup, scaled_lr, train_cfg};
+use crate::metrics::Table;
+use crate::models::paper::paper_net;
+use crate::perfmodel::{step_time, Scheme, SystemConfig};
+use crate::util::rng::Rng;
+
+pub fn run_fig1a(quick: bool) -> anyhow::Result<()> {
+    println!("\n=== Fig 1(a): gradient build-up — gather vs reduce ===");
+    let dim = if quick { 100_000 } else { 1_000_000 };
+    let rate = 112;
+    let k = dim / rate;
+    let mut table = Table::new(&[
+        "workers",
+        "localtopk union nnz",
+        "localtopk down B/worker",
+        "scalecom nnz",
+        "scalecom down B/worker",
+    ]);
+    let mut rows = crate::metrics::RunLog::new(
+        "fig1a_buildup",
+        &["workers", "topk_union_nnz", "topk_down", "scalecom_down"],
+    );
+    for n in [2usize, 4, 8, 16, 32, 64] {
+        let mut rng = Rng::new(3);
+        let grads: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let mut v = vec![0.0f32; dim];
+                rng.fill_normal(&mut v, 1.0);
+                v
+            })
+            .collect();
+        let views: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+
+        let mut topk = make_compressor("local-topk", rate, 1)?;
+        let per = match topk.select(0, &views, k) {
+            Selection::PerWorker(p) => p,
+            _ => unreachable!(),
+        };
+        let sparses: Vec<SparseGrad> = grads
+            .iter()
+            .zip(&per)
+            .map(|(g, idx)| sparsify(g, idx))
+            .collect();
+        let mut fabric = Fabric::new(FabricConfig {
+            workers: n,
+            topology: Topology::ParameterServer,
+            ..FabricConfig::default()
+        });
+        let _ = fabric.sparse_gather_avg(&sparses);
+        let topk_down = fabric.stats().last_cost().bytes_down_per_worker;
+        let union_nnz = topk_down / 8;
+
+        let mut clt = make_compressor("scalecom", rate, 1)?;
+        let idx = match clt.select(0, &views, k) {
+            Selection::Shared(ix) => ix,
+            _ => unreachable!(),
+        };
+        let sparses: Vec<SparseGrad> = grads.iter().map(|g| sparsify(g, &idx)).collect();
+        let mut fabric2 = Fabric::new(FabricConfig {
+            workers: n,
+            topology: Topology::ParameterServer,
+            ..FabricConfig::default()
+        });
+        let _ = fabric2.sparse_allreduce_shared(&sparses, 0);
+        let sc_down = fabric2.stats().last_cost().bytes_down_per_worker;
+
+        table.row(vec![
+            n.to_string(),
+            union_nnz.to_string(),
+            topk_down.to_string(),
+            idx.len().to_string(),
+            sc_down.to_string(),
+        ]);
+        rows.push(vec![
+            n as f64,
+            union_nnz as f64,
+            topk_down as f64,
+            sc_down as f64,
+        ]);
+    }
+    println!("{}", table.render());
+    rows.save_csv(&common::results_dir())?;
+    println!("paper: gather grows O(n) (red curve in Fig 1a); ScaleCom constant.\n");
+    Ok(())
+}
+
+pub fn run_fig1b() -> anyhow::Result<()> {
+    println!("\n=== Fig 1(b): comm bottleneck vs workers (ResNet50 perf model) ===");
+    println!("bandwidth=32 GBps, compression 112x, minibatch/worker=8\n");
+    let net = paper_net("resnet50")?;
+    let mut table = Table::new(&[
+        "workers",
+        "compute ms",
+        "topk comm ms",
+        "topk comm frac",
+        "scalecom comm ms",
+        "scalecom comm frac",
+    ]);
+    let mut rows = crate::metrics::RunLog::new(
+        "fig1b_comm_fraction",
+        &["workers", "compute_ms", "topk_ms", "topk_frac", "scalecom_ms", "scalecom_frac"],
+    );
+    for n in [4usize, 8, 16, 32, 64, 128] {
+        let sys = SystemConfig {
+            workers: n,
+            ..SystemConfig::default()
+        };
+        let tk = step_time(&net, &sys, Scheme::LocalTopK);
+        let sc = step_time(&net, &sys, Scheme::ScaleCom);
+        table.row(vec![
+            n.to_string(),
+            common::fmt3(tk.compute_s * 1e3),
+            common::fmt3(tk.exposed_comm_s * 1e3),
+            format!("{:.0}%", tk.comm_fraction() * 100.0),
+            common::fmt3(sc.exposed_comm_s * 1e3),
+            format!("{:.0}%", sc.comm_fraction() * 100.0),
+        ]);
+        rows.push(vec![
+            n as f64,
+            tk.compute_s * 1e3,
+            tk.exposed_comm_s * 1e3,
+            tk.comm_fraction(),
+            sc.exposed_comm_s * 1e3,
+            sc.comm_fraction(),
+        ]);
+    }
+    println!("{}", table.render());
+    rows.save_csv(&common::results_dir())?;
+    println!(
+        "paper: as workers increase, PS→worker communication dominates for \
+         gathered top-k; ScaleCom stays flat.\n"
+    );
+    Ok(())
+}
+
+pub fn run_fig1c(quick: bool) -> anyhow::Result<()> {
+    println!("\n=== Fig 1(c): large-batch instability of unfiltered compression ===");
+    println!("(bi-LSTM speech stand-in; 4x workers with 4x-scaled SGD LR + warmup)\n");
+    // The paper's mechanism: error-feedback noise grows as α³ [28], so
+    // the scaled LR of large-batch SGD destabilizes naive (unfiltered,
+    // β=1) sparsified compression — Fig 1(c)'s divergence and the gray
+    // curves of Fig 5. The low-pass filter (β=0.1) restores convergence.
+    let model = "lstm";
+    let base_workers = 4;
+    let workers = if quick { 8 } else { 16 };
+    let steps = if quick { 60 } else { 200 };
+    let peak = scaled_lr(model, base_workers, workers); // 0.5 → 2.0
+    let base = common::default_lr(model);
+    let warmup = steps / 10;
+
+    let mut results = Vec::new();
+    for (label, scheme, beta) in [
+        ("baseline (dense)", "none", 1.0f32),
+        ("local top-k (unfiltered)", "local-topk", 1.0),
+        ("ScaleCom beta=1 (unfiltered)", "scalecom", 1.0),
+        ("ScaleCom beta=0.1 (low-pass)", "scalecom", 0.1),
+    ] {
+        let mut cfg = train_cfg(model, scheme, workers, steps);
+        cfg.compress.beta = beta;
+        cfg.compress.warmup_steps = if scheme == "none" { 0 } else { warmup };
+        let loss = match run_with_warmup(cfg, base, peak, warmup) {
+            Ok(mut log) => {
+                log.name = format!(
+                    "fig1c_{}_b{}",
+                    scheme.replace('-', ""),
+                    (beta * 10.0) as u32
+                );
+                log.save_csv(&common::results_dir())?;
+                common::final_loss(&log)
+            }
+            Err(_) => f64::INFINITY, // hard divergence (non-finite loss)
+        };
+        results.push((label, loss));
+    }
+    let baseline = results[0].1;
+    let mut table = Table::new(&["scheme", "final train loss", "vs baseline"]);
+    for (label, loss) in &results {
+        let status = if !loss.is_finite() || *loss > 10.0 * baseline.max(0.1) {
+            "DIVERGED".to_string()
+        } else {
+            format!("{:+.3}", loss - baseline)
+        };
+        table.row(vec![
+            label.to_string(),
+            if loss.is_finite() {
+                common::fmt3(*loss)
+            } else {
+                "inf".into()
+            },
+            status,
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "paper: naive compression diverges at 288k batch (Fig 1c) and the \
+         unfiltered gray curves of Fig 5 degrade; the β=0.1 low-pass \
+         filter restores baseline-tracking convergence.\n"
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fig1a_quick() {
+        super::run_fig1a(true).unwrap();
+    }
+
+    #[test]
+    fn fig1b_runs() {
+        super::run_fig1b().unwrap();
+    }
+}

@@ -1,0 +1,81 @@
+//! Figure 3 — normalized Hamming distance between true top-k and CLT-k.
+//!
+//! Measured during training (cnn stand-in, CLT-k at 400×): at each probed
+//! step, compare the cyclic leader's local top-k index set against the
+//! true top-k of the all-reduced error-feedback gradient. The paper
+//! observes d/k in 0.6–0.8 (i.e., 20–40% overlap) — enough overlap for
+//! the Lemma-1 contraction to hold — and that the distance stays below
+//! 1.0 even at per-worker batch 32 with many workers.
+
+use crate::experiments::common::{self, train_cfg};
+use crate::metrics::{RunLog, Table};
+use crate::stats::normalized_hamming;
+use crate::trainer::Trainer;
+use crate::util::select::top_k_indices_by_magnitude;
+use std::cell::RefCell;
+
+fn probe(workers: usize, steps: usize, rate: usize) -> anyhow::Result<Vec<(usize, f64)>> {
+    let mut cfg = train_cfg("cnn", "scalecom-exact", workers, steps);
+    cfg.compress.rate = rate;
+    let series = RefCell::new(Vec::new());
+    let mut trainer = Trainer::from_config(cfg)?;
+    trainer.set_hook(Box::new(|snap| {
+        if snap.t % 5 != 4 {
+            return;
+        }
+        let dim = snap.ef_grads[0].len();
+        let k = (dim / rate).max(1);
+        let n = snap.ef_grads.len();
+        let mut avg = vec![0.0f32; dim];
+        for ef in snap.ef_grads {
+            for (a, &v) in avg.iter_mut().zip(ef) {
+                *a += v / n as f32;
+            }
+        }
+        let true_idx = top_k_indices_by_magnitude(&avg, k);
+        // leader's local top-k (what CLT-k broadcasts)
+        let leader = snap.result.leader;
+        let clt_idx = top_k_indices_by_magnitude(&snap.ef_grads[leader], k);
+        series
+            .borrow_mut()
+            .push((snap.t, normalized_hamming(&true_idx, &clt_idx)));
+    }));
+    trainer.run()?;
+    drop(trainer);
+    Ok(series.into_inner())
+}
+
+pub fn run(quick: bool) -> anyhow::Result<()> {
+    println!("\n=== Fig 3: normalized Hamming distance true-top-k vs CLT-k ===");
+    println!("(cnn stand-in, compression 400x as in the paper's figure)\n");
+    let steps = if quick { 40 } else { 100 };
+    let worker_counts: &[usize] = if quick { &[4, 8] } else { &[4, 8, 16] };
+
+    let mut table = Table::new(&["workers", "d/k early", "d/k late", "d/k mean"]);
+    let mut log = RunLog::new("fig3_hamming", &["workers", "step", "dk"]);
+    for &n in worker_counts {
+        let series = probe(n, steps, 400)?;
+        for &(t, dk) in &series {
+            log.push(vec![n as f64, t as f64, dk]);
+        }
+        let early = series.first().map(|&(_, d)| d).unwrap_or(f64::NAN);
+        let late = series.last().map(|&(_, d)| d).unwrap_or(f64::NAN);
+        let mean =
+            series.iter().map(|&(_, d)| d).sum::<f64>() / series.len().max(1) as f64;
+        table.row(vec![
+            n.to_string(),
+            common::fmt3(early),
+            common::fmt3(late),
+            common::fmt3(mean),
+        ]);
+    }
+    println!("{}", table.render());
+    log.save_csv(&common::results_dir())?;
+    println!(
+        "paper: d/k ∈ [0.6, 0.8] at 400x — CLT-k's index set keeps 20-40% \
+         overlap with the true top-k, giving γ < 1 (Lemma 1) and stays \
+         < 1.0 even at small per-worker batches (§3 'Large datasets and \
+         small batch size').\n"
+    );
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Experiment drivers — one per paper table/figure (DESIGN.md §5).
+//!
+//! `scalecom experiment <id> [--quick]` regenerates the corresponding
+//! result, printing the paper-comparable rows/series and saving the raw
+//! data as CSV under `results/`.
+
+pub mod common;
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig6;
+pub mod figa1;
+pub mod table1;
+pub mod table23;
+
+pub const EXPERIMENTS: &[(&str, &str)] = &[
+    ("table1", "compressor comparison: scalability/overhead/rate (Table 1)"),
+    ("fig1a", "gradient build-up: gather vs reduce volume (Fig 1a)"),
+    ("fig1b", "comm fraction vs workers, ResNet50 perf model (Fig 1b)"),
+    ("fig1c", "large-batch divergence of naive local top-k (Fig 1c)"),
+    ("fig2", "local memory similarity + low-pass filter (Fig 2a-d)"),
+    ("fig3", "normalized Hamming distance CLT-k vs true top-k (Fig 3)"),
+    ("table2", "standard-batch accuracy parity suite (Table 2, Figs 4/A3-A7)"),
+    ("table3", "large-batch parity: beta ablation (Table 3, Fig 5)"),
+    ("fig6", "system perf vs minibatch & workers (Fig 6, A9)"),
+    ("figA8", "end-to-end speedup vs workers at 32/64 GBps (Fig A8)"),
+    ("figA1", "Q-Q memory similarity statistics (Fig A1)"),
+];
+
+/// Run one experiment (or `all`).
+pub fn run(id: &str, quick: bool) -> anyhow::Result<()> {
+    match id {
+        "table1" => table1::run(quick),
+        "fig1a" => fig1::run_fig1a(quick),
+        "fig1b" => fig1::run_fig1b(),
+        "fig1c" => fig1::run_fig1c(quick),
+        "fig2" => fig2::run(quick),
+        "fig3" => fig3::run(quick),
+        "table2" => table23::run_table2(quick),
+        "table3" => table23::run_table3(quick),
+        "fig6" => fig6::run_fig6(),
+        "figA8" | "figa8" => fig6::run_fig_a8(),
+        "figA1" | "figa1" => figa1::run(quick),
+        "all" => {
+            for (id, _) in EXPERIMENTS {
+                run(id, quick)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!(
+            "unknown experiment '{other}'; available: {}",
+            EXPERIMENTS
+                .iter()
+                .map(|(i, _)| *i)
+                .collect::<Vec<_>>()
+                .join(", ")
+        ),
+    }
+}
+
+pub fn list() -> &'static [(&'static str, &'static str)] {
+    EXPERIMENTS
+}

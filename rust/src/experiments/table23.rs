@@ -1,0 +1,146 @@
+//! Tables 2 & 3 + Figures 4 & 5 — accuracy parity under compression.
+//!
+//! Table 2 (standard batch): baseline vs ScaleCom (β=1) across the four
+//! domain stand-ins at their paper-guided compression rates.
+//! Table 3 (large batch): 4× the workers with linearly-scaled LR +
+//! warmup; ScaleCom needs β≈0.1 (the β=1 column shows the degradation
+//! the low-pass filter fixes — the gray curves of Fig 5).
+//!
+//! Training curves for every run are saved to results/ (Figures 4/5 and
+//! A3–A7 are these CSVs).
+
+use crate::experiments::common::{
+    self, final_loss, run_with_warmup, scaled_lr, train_cfg,
+};
+use crate::metrics::Table;
+
+/// (model, standard workers, steps)
+const SUITE: &[(&str, usize, usize)] = &[
+    ("mlp", 4, 200),
+    ("cnn", 8, 400),
+    ("transformer", 8, 800),
+    ("lstm", 4, 400),
+];
+
+pub fn run_table2(quick: bool) -> anyhow::Result<()> {
+    println!("\n=== Table 2: standard batch size — baseline vs ScaleCom ===\n");
+    let mut table = Table::new(&[
+        "model (stands in for)",
+        "workers",
+        "BSZ",
+        "rate",
+        "baseline loss",
+        "scalecom loss",
+        "baseline acc",
+        "scalecom acc",
+    ]);
+    for &(model, workers, steps) in SUITE {
+        let steps = if quick { steps / 4 } else { steps };
+        let zoo = crate::models::zoo_model(model)?;
+
+        let mut base_cfg = train_cfg(model, "none", workers, steps);
+        base_cfg.eval_every = (steps / 4).max(1);
+        let mut base_log = common::run(base_cfg)?;
+        base_log.name = format!("table2_{model}_baseline");
+        base_log.save_csv(&common::results_dir())?;
+
+        let mut comp_cfg = train_cfg(model, "scalecom", workers, steps);
+        comp_cfg.compress.warmup_steps = steps / 20; // <10% warmup, as §4
+        comp_cfg.eval_every = (steps / 4).max(1);
+        let mut comp_log = common::run(comp_cfg)?;
+        comp_log.name = format!("table2_{model}_scalecom");
+        comp_log.save_csv(&common::results_dir())?;
+
+        table.row(vec![
+            format!("{model} ({})", zoo.stands_in_for),
+            workers.to_string(),
+            (workers * zoo.batch_per_worker).to_string(),
+            format!("{}x", zoo.default_rate),
+            common::fmt3(final_loss(&base_log)),
+            common::fmt3(final_loss(&comp_log)),
+            fmt_acc(base_log.last("eval_acc")),
+            fmt_acc(comp_log.last("eval_acc")),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "paper Table 2: compression matches baseline within noise at \
+         65-400x across vision/language/speech.\n"
+    );
+    Ok(())
+}
+
+pub fn run_table3(quick: bool) -> anyhow::Result<()> {
+    println!("\n=== Table 3: large batch (scaled LR) — the low-pass filter matters ===\n");
+    let mut table = Table::new(&[
+        "model",
+        "workers",
+        "BSZ",
+        "baseline",
+        "scalecom b=1",
+        "scalecom b=0.1",
+        "gap b=1",
+        "gap b=0.1",
+    ]);
+    for &(model, base_workers, steps) in SUITE {
+        // half the standard-batch horizon: 4x the workers see 2x the
+        // samples overall, and three runs per model must stay tractable
+        let steps = if quick { steps / 8 } else { steps / 2 };
+        let workers = base_workers * 4; // 4x scale-out (paper: 8x-12x)
+        let zoo = crate::models::zoo_model(model)?;
+        let base_lr = common::default_lr(model);
+        let peak = scaled_lr(model, base_workers, workers);
+        let warmup = (steps / 10).max(1);
+
+        // A diverged run (non-finite loss) is reported as such — the
+        // instability of unfiltered compression at scaled LRs is the
+        // paper's Fig 1(c)/Fig 5 finding, not an error.
+        let run_one = |scheme: &str, beta: f32, tag: &str| -> anyhow::Result<f64> {
+            let mut cfg = train_cfg(model, scheme, workers, steps);
+            cfg.compress.beta = beta;
+            cfg.compress.warmup_steps = if scheme == "none" { 0 } else { warmup };
+            match run_with_warmup(cfg, base_lr, peak, warmup) {
+                Ok(mut log) => {
+                    log.name = format!("table3_{model}_{tag}");
+                    log.save_csv(&common::results_dir())?;
+                    Ok(final_loss(&log))
+                }
+                Err(_) => Ok(f64::INFINITY), // diverged
+            }
+        };
+
+        let baseline = run_one("none", 1.0, "baseline")?;
+        let beta1 = run_one("scalecom", 1.0, "beta1")?;
+        let beta01 = run_one("scalecom", 0.1, "beta01")?;
+        let fmt = |v: f64| {
+            if v.is_finite() {
+                common::fmt3(v)
+            } else {
+                "diverged".to_string()
+            }
+        };
+        table.row(vec![
+            model.to_string(),
+            workers.to_string(),
+            (workers * zoo.batch_per_worker).to_string(),
+            fmt(baseline),
+            fmt(beta1),
+            fmt(beta01),
+            format!("{:+.3}", beta1 - baseline),
+            format!("{:+.3}", beta01 - baseline),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "paper Table 3 / Fig 5: without filtering (beta=1) large datasets \
+         degrade under scaled LR; beta=0.1 restores baseline parity.\n"
+    );
+    Ok(())
+}
+
+fn fmt_acc(v: Option<f64>) -> String {
+    match v {
+        Some(a) if a.is_finite() => format!("{:.1}%", a * 100.0),
+        _ => "-".to_string(),
+    }
+}

@@ -1,0 +1,34 @@
+//! ScaleCom: Scalable Sparsified Gradient Compression for
+//! Communication-Efficient Distributed Training (NeurIPS 2020, IBM Research).
+//!
+//! Full-system reproduction. Three layers:
+//!  - L3 (this crate): distributed-training coordinator — workers, compressed
+//!    collectives, error-feedback memory with low-pass filtering, the CLT-k
+//!    compressor, optimizers, schedules, metrics, and an analytic performance
+//!    model reproducing the paper's system-performance figures.
+//!  - L2 (python/compile/model*.py): JAX forward/backward graphs for the
+//!    model zoo, AOT-lowered to HLO text and executed from Rust via PJRT.
+//!  - L1 (python/compile/kernels/*.py): Pallas kernels for the compression
+//!    hot-spot (chunk-wise top-k selection, low-pass memory update), lowered
+//!    into the same HLO artifacts.
+//!
+//! Python never runs on the training hot path: `make artifacts` runs once,
+//! the Rust binary is self-contained afterwards.
+
+pub mod bench;
+pub mod cli;
+pub mod comm;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod json;
+pub mod metrics;
+pub mod models;
+pub mod perfmodel;
+pub mod proptest;
+pub mod runtime;
+pub mod stats;
+pub mod trainer;
+pub mod util;

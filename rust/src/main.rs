@@ -1,0 +1,256 @@
+//! `scalecom` — launcher CLI for the ScaleCom (NeurIPS 2020) reproduction.
+//!
+//! Subcommands: train, experiment, perf-model, compress-bench,
+//! artifacts-check, list. See `cli::USAGE`.
+
+use anyhow::Result;
+use scalecom::cli::{Args, USAGE};
+use scalecom::config::{TomlDoc, TrainConfig};
+use scalecom::experiments;
+use scalecom::metrics::Table;
+use scalecom::models::paper::{paper_net, ALL_PAPER_NETS};
+use scalecom::models::zoo::ALL_ZOO_MODELS;
+use scalecom::perfmodel::{step_time, Scheme, SystemConfig};
+use scalecom::runtime::{default_artifacts_dir, Engine, Manifest};
+use scalecom::trainer::{LrSchedule, Trainer};
+
+fn main() {
+    let code = match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run() -> Result<()> {
+    let mut args = Args::from_env()?;
+    match args.subcommand.clone().as_deref() {
+        Some("train") => cmd_train(&mut args),
+        Some("experiment") => cmd_experiment(&mut args),
+        Some("perf-model") => cmd_perf_model(&mut args),
+        Some("compress-bench") => cmd_compress_bench(&mut args),
+        Some("artifacts-check") => cmd_artifacts_check(&mut args),
+        Some("list") => cmd_list(),
+        Some(other) => anyhow::bail!("unknown subcommand '{other}'\n\n{USAGE}"),
+        None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_train(args: &mut Args) -> Result<()> {
+    // start from file config if given, then apply flag overrides
+    let mut cfg = match args.str_opt("config") {
+        Some(path) => TrainConfig::from_toml(&TomlDoc::load(path.as_ref())?)?,
+        None => TrainConfig::default(),
+    };
+    if let Some(m) = args.str_opt("model") {
+        cfg.model = m;
+    }
+    // artifact batch is fixed per model; keep config in sync
+    if let Ok(zoo) = scalecom::models::zoo_model(&cfg.model) {
+        cfg.batch_per_worker = zoo.batch_per_worker;
+        cfg.compress.rate = zoo.default_rate;
+    }
+    cfg.workers = args.usize_or("workers", cfg.workers)?;
+    cfg.steps = args.usize_or("steps", cfg.steps)?;
+    cfg.lr = args.f64_or("lr", cfg.lr)?;
+    if let Some(s) = args.str_opt("scheme") {
+        cfg.compress.scheme = s;
+    }
+    cfg.compress.rate = args.usize_or("rate", cfg.compress.rate)?;
+    cfg.compress.beta = args.f64_or("beta", cfg.compress.beta as f64)? as f32;
+    cfg.compress.warmup_steps =
+        args.usize_or("compress-warmup", cfg.compress.warmup_steps)?;
+    cfg.compress.use_flops_rule = args.flag("flops-rule");
+    if let Some(t) = args.str_opt("topology") {
+        cfg.fabric_topology = t;
+    }
+    cfg.eval_every = args.usize_or("eval-every", cfg.steps.max(4) / 4)?;
+    cfg.seed = args.usize_or("seed", cfg.seed as usize)? as u64;
+    if let Some(dir) = args.str_opt("artifacts") {
+        cfg.artifacts_dir = dir;
+    }
+    let use_kernel = args.flag("kernel-compress");
+    let lr_warmup = args.usize_or("lr-warmup", 0)?;
+    let quiet = args.flag("quiet");
+    args.finish()?;
+
+    println!(
+        "training {} | workers={} steps={} scheme={} rate={}x beta={} topo={}{}",
+        cfg.model,
+        cfg.workers,
+        cfg.steps,
+        cfg.compress.scheme,
+        cfg.compress.rate,
+        cfg.compress.beta,
+        cfg.fabric_topology,
+        if use_kernel { " [L1-kernel compression]" } else { "" }
+    );
+    let peak = cfg.lr;
+    let mut trainer = Trainer::from_config(cfg)?;
+    trainer.use_kernel = use_kernel;
+    if lr_warmup > 0 {
+        trainer.schedule = LrSchedule::warmup_linear(peak / 8.0, peak, lr_warmup);
+    }
+    let log = trainer.run()?;
+    if !quiet {
+        let mut table = Table::new(&["step", "loss", "lr", "rate", "eval_loss", "eval_acc"]);
+        let every = (log.rows.len() / 12).max(1);
+        for row in log.rows.iter().step_by(every) {
+            table.row(vec![
+                format!("{:.0}", row[0]),
+                format!("{:.4}", row[1]),
+                format!("{:.4}", row[2]),
+                format!("{:.0}x", row[3]),
+                if row[7].is_nan() { "-".into() } else { format!("{:.4}", row[7]) },
+                if row[8].is_nan() { "-".into() } else { format!("{:.1}%", row[8] * 100.0) },
+            ]);
+        }
+        println!("{}", table.render());
+    }
+    let (eval_loss, eval_acc) = trainer.evaluate()?;
+    println!(
+        "final: train_loss={:.4} eval_loss={eval_loss:.4} eval_acc={:.1}% wall={:.1}s",
+        log.tail_mean("loss", 20).unwrap_or(f64::NAN),
+        eval_acc * 100.0,
+        log.last("wall_s").unwrap_or(0.0),
+    );
+    let path = log.save_csv(std::path::Path::new("results"))?;
+    println!("metrics: {}", path.display());
+    Ok(())
+}
+
+fn cmd_experiment(args: &mut Args) -> Result<()> {
+    let quick = args.flag("quick");
+    args.finish()?;
+    let id = args
+        .positional
+        .first()
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("usage: scalecom experiment <id> [--quick]"))?;
+    experiments::run(&id, quick)
+}
+
+fn cmd_perf_model(args: &mut Args) -> Result<()> {
+    let net_name = args.str_or("net", "resnet50");
+    let sys = SystemConfig {
+        workers: args.usize_or("workers", 64)?,
+        peak_tflops: args.f64_or("tflops", 100.0)?,
+        compute_efficiency: args.f64_or("efficiency", 0.2)?,
+        bandwidth_gbps: args.f64_or("bandwidth", 32.0)?,
+        minibatch_per_worker: args.usize_or("batch", 8)?,
+        compression: args.f64_or("compression", 112.0)?,
+        overlap: args.f64_or("overlap", 0.0)?,
+    };
+    args.finish()?;
+    let net = paper_net(&net_name)?;
+    println!(
+        "{} | {:.1}M params, {:.2} GFLOPs fwd/sample | {} workers, {} mb/worker, {} GBps",
+        net.name,
+        net.total_params() as f64 / 1e6,
+        net.total_fwd_flops() / 1e9,
+        sys.workers,
+        sys.minibatch_per_worker,
+        sys.bandwidth_gbps
+    );
+    let mut table = Table::new(&[
+        "scheme", "compute ms", "up ms", "down ms", "index ms", "total ms", "comm frac", "speedup",
+    ]);
+    let base = step_time(&net, &sys, Scheme::None).total_s;
+    for scheme in [Scheme::None, Scheme::LocalTopK, Scheme::ScaleCom] {
+        let t = step_time(&net, &sys, scheme);
+        table.row(vec![
+            t.scheme.label().to_string(),
+            format!("{:.3}", t.compute_s * 1e3),
+            format!("{:.3}", t.grad_up_s * 1e3),
+            format!("{:.3}", t.grad_down_s * 1e3),
+            format!("{:.3}", t.index_s * 1e3),
+            format!("{:.3}", t.total_s * 1e3),
+            format!("{:.1}%", t.comm_fraction() * 100.0),
+            format!("{:.2}x", base / t.total_s),
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_compress_bench(args: &mut Args) -> Result<()> {
+    let quick = args.flag("quick");
+    args.finish()?;
+    experiments::table1::run(quick)
+}
+
+fn cmd_artifacts_check(args: &mut Args) -> Result<()> {
+    let dir = args
+        .str_opt("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(default_artifacts_dir);
+    args.finish()?;
+    let manifest = Manifest::load(&dir)?;
+    println!("manifest: {} ({} models)", dir.display(), manifest.models.len());
+    let engine = Engine::cpu()?;
+    println!("pjrt platform: {}", engine.platform());
+    let mut table = Table::new(&["model", "dim", "k", "batch", "smoke loss"]);
+    for name in manifest.models.keys() {
+        let model = engine.load_model(&manifest, name)?;
+        let params = model.load_init_params()?;
+        let zoo = scalecom::models::zoo_model(name)?;
+        let ds = zoo.dataset(0);
+        let batch = ds.batch(0, 1, 0, model.mm.batch);
+        let (loss, grads) = model.train_step(&params, &batch)?;
+        anyhow::ensure!(grads.len() == model.mm.dim);
+        table.row(vec![
+            name.clone(),
+            model.mm.dim.to_string(),
+            model.mm.k.to_string(),
+            model.mm.batch.to_string(),
+            format!("{loss:.4}"),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("artifacts OK");
+    Ok(())
+}
+
+fn cmd_list() -> Result<()> {
+    println!("trainable models (artifact-backed):");
+    for m in ALL_ZOO_MODELS {
+        println!(
+            "  {:<16} {:<44} batch/worker={} default rate={}x",
+            m.name, m.stands_in_for, m.batch_per_worker, m.default_rate
+        );
+    }
+    println!("\ncompression schemes:");
+    for s in [
+        "scalecom (CLT-k, chunked quasi-sort)",
+        "scalecom-exact (CLT-k, exact top-k)",
+        "local-topk / local-topk-chunk",
+        "true-topk (oracle)",
+        "random-k",
+        "gtop-k",
+        "sketch-k",
+        "none (dense baseline)",
+    ] {
+        println!("  {s}");
+    }
+    println!("\npaper networks (perf model):");
+    for n in ALL_PAPER_NETS {
+        let net = paper_net(n)?;
+        println!(
+            "  {:<12} {:>6.1}M params  {:>6.2} GFLOPs fwd/sample",
+            n,
+            net.total_params() as f64 / 1e6,
+            net.total_fwd_flops() / 1e9
+        );
+    }
+    println!("\nexperiments:");
+    for (id, desc) in experiments::list() {
+        println!("  {id:<8} {desc}");
+    }
+    Ok(())
+}

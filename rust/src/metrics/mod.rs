@@ -1,0 +1,228 @@
+//! Run metrics: loss curves, communication counters, CSV/JSON output.
+//!
+//! Every experiment driver emits both a human-readable table on stdout
+//! and machine-readable CSV under `results/` so the paper's figures can
+//! be re-plotted from the raw series.
+
+use crate::json::{obj, Json};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// One training-run record: per-step scalars keyed by column name.
+#[derive(Debug, Clone, Default)]
+pub struct RunLog {
+    pub name: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<f64>>,
+    pub meta: Vec<(String, String)>,
+}
+
+impl RunLog {
+    pub fn new(name: &str, columns: &[&str]) -> Self {
+        RunLog {
+            name: name.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            meta: Vec::new(),
+        }
+    }
+
+    pub fn add_meta(&mut self, key: &str, value: &str) {
+        self.meta.push((key.to_string(), value.to_string()));
+    }
+
+    pub fn push(&mut self, row: Vec<f64>) {
+        assert_eq!(
+            row.len(),
+            self.columns.len(),
+            "row width {} != {} columns",
+            row.len(),
+            self.columns.len()
+        );
+        self.rows.push(row);
+    }
+
+    pub fn column(&self, name: &str) -> Option<Vec<f64>> {
+        let idx = self.columns.iter().position(|c| c == name)?;
+        Some(self.rows.iter().map(|r| r[idx]).collect())
+    }
+
+    pub fn last(&self, name: &str) -> Option<f64> {
+        self.column(name)?.last().copied()
+    }
+
+    /// Mean of the last `n` values of a column — smoothed final metric.
+    pub fn tail_mean(&self, name: &str, n: usize) -> Option<f64> {
+        let col = self.column(name)?;
+        if col.is_empty() {
+            return None;
+        }
+        let tail = &col[col.len().saturating_sub(n)..];
+        Some(tail.iter().sum::<f64>() / tail.len() as f64)
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::new();
+        for (k, v) in &self.meta {
+            s.push_str(&format!("# {k} = {v}\n"));
+        }
+        s.push_str(&self.columns.join(","));
+        s.push('\n');
+        for row in &self.rows {
+            let cells: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
+            s.push_str(&cells.join(","));
+            s.push('\n');
+        }
+        s
+    }
+
+    pub fn save_csv(&self, dir: &Path) -> anyhow::Result<PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.csv", self.name));
+        let mut f = std::fs::File::create(&path)?;
+        f.write_all(self.to_csv().as_bytes())?;
+        Ok(path)
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", Json::from(self.name.as_str())),
+            (
+                "meta",
+                Json::Obj(
+                    self.meta
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::from(v.as_str())))
+                        .collect(),
+                ),
+            ),
+            (
+                "columns",
+                Json::Arr(self.columns.iter().map(|c| Json::from(c.as_str())).collect()),
+            ),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| Json::Arr(r.iter().map(|&v| Json::Num(v)).collect()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Fixed-width console table used by the experiment drivers to print the
+/// paper's rows.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for i in 0..ncol {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                line.push_str(&format!("{:<width$}", cells[i], width = widths[i]));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncol - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runlog_push_and_columns() {
+        let mut l = RunLog::new("test", &["step", "loss"]);
+        l.push(vec![0.0, 2.0]);
+        l.push(vec![1.0, 1.0]);
+        assert_eq!(l.column("loss").unwrap(), vec![2.0, 1.0]);
+        assert_eq!(l.last("loss"), Some(1.0));
+        assert_eq!(l.tail_mean("loss", 2), Some(1.5));
+        assert_eq!(l.column("nope"), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn runlog_rejects_bad_row() {
+        let mut l = RunLog::new("test", &["a"]);
+        l.push(vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn csv_format() {
+        let mut l = RunLog::new("t", &["a", "b"]);
+        l.add_meta("model", "mlp");
+        l.push(vec![1.0, 2.5]);
+        let csv = l.to_csv();
+        assert!(csv.starts_with("# model = mlp\na,b\n1,2.5\n"));
+    }
+
+    #[test]
+    fn csv_roundtrip_to_disk() {
+        let dir = std::env::temp_dir().join("scalecom_test_metrics");
+        let mut l = RunLog::new("roundtrip", &["x"]);
+        l.push(vec![7.0]);
+        let p = l.save_csv(&dir).unwrap();
+        let content = std::fs::read_to_string(p).unwrap();
+        assert!(content.contains("7"));
+    }
+
+    #[test]
+    fn json_export_parses() {
+        let mut l = RunLog::new("j", &["a"]);
+        l.push(vec![1.0]);
+        let s = l.to_json().to_string();
+        let v = crate::json::Json::parse(&s).unwrap();
+        assert_eq!(v.get("name").unwrap().as_str(), Some("j"));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(vec!["x".into(), "1".into()]);
+        t.row(vec!["longer-name".into(), "2".into()]);
+        let r = t.render();
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("name"));
+        assert!(lines[3].starts_with("longer-name"));
+    }
+}

@@ -1,0 +1,10 @@
+//! Model registry: (a) the paper's five benchmark networks as per-layer
+//! parameter/FLOP tables (consumed by the analytic performance model and
+//! the compression-rate rule), and (b) the trainable model zoo backed by
+//! AOT artifacts (consumed by the trainer).
+
+pub mod paper;
+pub mod zoo;
+
+pub use paper::{paper_net, PaperLayer, PaperNet};
+pub use zoo::{zoo_model, ZooModel};

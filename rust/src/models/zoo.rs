@@ -1,0 +1,193 @@
+//! Trainable model zoo backed by AOT artifacts.
+//!
+//! Each entry names a model whose forward/backward graph was lowered by
+//! `python/compile/aot.py` into `artifacts/<name>.hlo.txt` (train step:
+//! `(params, x, y) → (loss, grads)`) and `artifacts/<name>_eval.hlo.txt`
+//! (`(params, x, y) → (loss, correct)`), with shapes/layout recorded in
+//! `artifacts/manifest.json`. The zoo holds the *experiment-facing*
+//! metadata: which synthetic dataset drives it and which paper workload
+//! it stands in for.
+
+use crate::data::{ClusterDataset, Dataset, ImagePatternDataset, LmCorpus, SequenceDataset};
+
+/// Task family — determines how batches map onto artifact inputs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskKind {
+    /// x: [B, F] f32, y: [B] i32
+    Classify,
+    /// x: [B, S] token ids (fed as i32), y: [B, S] i32
+    LanguageModel,
+    /// x: [B, S*F] f32 frames, y: [B, S] i32
+    SequenceLabel,
+}
+
+/// Zoo entry.
+#[derive(Debug, Clone)]
+pub struct ZooModel {
+    pub name: &'static str,
+    pub task: TaskKind,
+    /// paper workload this model stands in for (DESIGN.md §4)
+    pub stands_in_for: &'static str,
+    /// default per-worker batch the artifact was lowered with
+    pub batch_per_worker: usize,
+    /// dataset generator dimensions
+    pub feature_dim: usize,
+    pub seq_len: usize,
+    pub num_classes: usize,
+    /// default compression rate used in Table 2-style runs
+    pub default_rate: usize,
+}
+
+impl ZooModel {
+    /// Instantiate the model's synthetic dataset.
+    pub fn dataset(&self, seed: u64) -> Box<dyn Dataset> {
+        match self.task {
+            // the conv model gets spatially-structured images (oriented
+            // gratings); the mlp gets unstructured gaussian clusters
+            TaskKind::Classify if self.name == "cnn" => Box::new(
+                ImagePatternDataset::new(16, self.num_classes, seed),
+            ),
+            TaskKind::Classify => Box::new(ClusterDataset::new(
+                self.feature_dim,
+                self.num_classes,
+                seed,
+            )),
+            TaskKind::LanguageModel => {
+                Box::new(LmCorpus::new(self.num_classes, self.seq_len, seed))
+            }
+            TaskKind::SequenceLabel => Box::new(SequenceDataset::new(
+                self.feature_dim,
+                self.seq_len,
+                self.num_classes,
+                seed,
+            )),
+        }
+    }
+
+    pub fn train_artifact(&self) -> String {
+        format!("{}.hlo.txt", self.name)
+    }
+
+    pub fn eval_artifact(&self) -> String {
+        format!("{}_eval.hlo.txt", self.name)
+    }
+}
+
+/// Look up a zoo model.
+pub fn zoo_model(name: &str) -> anyhow::Result<ZooModel> {
+    ALL_ZOO_MODELS
+        .iter()
+        .find(|m| m.name == name)
+        .cloned()
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown zoo model '{name}' (expected one of: {})",
+                ALL_ZOO_MODELS
+                    .iter()
+                    .map(|m| m.name)
+                    .collect::<Vec<_>>()
+                    .join("|")
+            )
+        })
+}
+
+/// All trainable models. Sizes are chosen so a multi-worker run of a few
+/// hundred steps completes in seconds on the CPU PJRT backend while still
+/// exhibiting real SGD dynamics (see DESIGN.md §4 substitutions).
+pub const ALL_ZOO_MODELS: &[ZooModel] = &[
+    ZooModel {
+        name: "mlp",
+        task: TaskKind::Classify,
+        stands_in_for: "ResNet34/CIFAR10 (vision, small)",
+        batch_per_worker: 32,
+        feature_dim: 32,
+        seq_len: 1,
+        num_classes: 10,
+        default_rate: 92,
+    },
+    ZooModel {
+        name: "cnn",
+        task: TaskKind::Classify,
+        stands_in_for: "ResNet18-50+MobileNetV2/ImageNet (vision, large)",
+        batch_per_worker: 32,
+        feature_dim: 256, // 16x16 single-channel image
+        seq_len: 1,
+        num_classes: 10,
+        default_rate: 112,
+    },
+    ZooModel {
+        name: "transformer",
+        task: TaskKind::LanguageModel,
+        stands_in_for: "Transformer-base/WMT14 En-De (language)",
+        batch_per_worker: 16,
+        feature_dim: 16, // seq len
+        seq_len: 16,
+        num_classes: 32, // vocab
+        default_rate: 47,
+    },
+    ZooModel {
+        name: "transformer-med",
+        task: TaskKind::LanguageModel,
+        stands_in_for: "Transformer-base/WMT14 En-De (language, E2E driver)",
+        batch_per_worker: 16,
+        feature_dim: 32,
+        seq_len: 32,
+        num_classes: 64,
+        default_rate: 47,
+    },
+    ZooModel {
+        name: "lstm",
+        task: TaskKind::SequenceLabel,
+        stands_in_for: "4-bi-LSTM/SWB300 (speech)",
+        batch_per_worker: 32,
+        feature_dim: 8, // per-frame features
+        seq_len: 12,
+        num_classes: 6,
+        default_rate: 400,
+    },
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_and_artifacts() {
+        let m = zoo_model("mlp").unwrap();
+        assert_eq!(m.train_artifact(), "mlp.hlo.txt");
+        assert_eq!(m.eval_artifact(), "mlp_eval.hlo.txt");
+        assert!(zoo_model("alexnet").is_err());
+    }
+
+    #[test]
+    fn datasets_instantiate_with_matching_dims() {
+        for m in ALL_ZOO_MODELS {
+            let ds = m.dataset(1);
+            assert_eq!(ds.num_classes(), m.num_classes);
+            let b = ds.batch(0, 2, 0, 4);
+            b.validate();
+            match m.task {
+                TaskKind::Classify => {
+                    assert_eq!(b.feature_dim, m.feature_dim);
+                    assert_eq!(b.y.len(), 4);
+                }
+                TaskKind::LanguageModel => {
+                    assert_eq!(b.feature_dim, m.seq_len);
+                    assert_eq!(b.y.len(), 4 * m.seq_len);
+                }
+                TaskKind::SequenceLabel => {
+                    assert_eq!(b.feature_dim, m.seq_len * m.feature_dim);
+                    assert_eq!(b.y.len(), 4 * m.seq_len);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_model_covers_a_paper_domain() {
+        let domains: Vec<&str> = ALL_ZOO_MODELS.iter().map(|m| m.stands_in_for).collect();
+        assert!(domains.iter().any(|d| d.contains("vision")));
+        assert!(domains.iter().any(|d| d.contains("language")));
+        assert!(domains.iter().any(|d| d.contains("speech")));
+    }
+}

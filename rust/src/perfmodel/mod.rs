@@ -1,0 +1,275 @@
+//! Analytic end-to-end performance model (§5 / Appendix F).
+//!
+//! The paper estimates system performance with the bandwidth-centric
+//! framework of Venkataramani et al. [35]: given a system configuration
+//! (per-worker peak TFLOPs, accelerator↔parameter-server bandwidth,
+//! worker count, minibatch/worker) and a network's per-layer FLOPs/param
+//! table, step time decomposes into
+//!
+//!   t_step = t_compute + t_comm,
+//!   t_compute = train_FLOPs(minibatch) / (peak · efficiency),
+//!   t_comm    = gradient/weight exchange time per scheme.
+//!
+//! Schemes (Appendix F.1): `none` (dense reduce on the server — constant
+//! per-worker traffic), `local top-k` (compressed upload, but the reduced
+//! union grows with n → download ≈ n·k — the gradient build-up), and
+//! `ScaleCom` (constant k both ways + the O(1) index broadcast).
+//! Compute/communication overlap: the framework's software pipelining is
+//! modeled with an overlap factor (fraction of comm hidden under compute).
+
+use crate::models::paper::PaperNet;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scheme {
+    None,
+    LocalTopK,
+    ScaleCom,
+}
+
+impl Scheme {
+    pub fn parse(s: &str) -> anyhow::Result<Scheme> {
+        match s {
+            "none" | "baseline" => Ok(Scheme::None),
+            "local-topk" | "topk" => Ok(Scheme::LocalTopK),
+            "scalecom" | "clt-k" => Ok(Scheme::ScaleCom),
+            other => anyhow::bail!("unknown perf scheme '{other}'"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Scheme::None => "no-compression",
+            Scheme::LocalTopK => "local-topk",
+            Scheme::ScaleCom => "scalecom",
+        }
+    }
+}
+
+/// System configuration (Figure 6 / A8 / A9 axes).
+#[derive(Debug, Clone)]
+pub struct SystemConfig {
+    pub workers: usize,
+    /// per-worker peak compute, TFLOPs (paper: 100 and 300)
+    pub peak_tflops: f64,
+    /// achieved fraction of peak on DNN kernels. 0.2 calibrates the
+    /// model to the paper's Fig 6(a): ResNet50 @100 TFLOPs, mb/worker=8,
+    /// 32 GBps → communication ≈56% of step time (small per-core batches
+    /// under-utilize the systolic arrays).
+    pub compute_efficiency: f64,
+    /// accelerator ↔ parameter-server bandwidth, GB/s (paper: 32, 64)
+    pub bandwidth_gbps: f64,
+    /// minibatch per worker (paper: 8 and 32)
+    pub minibatch_per_worker: usize,
+    /// gradient compression ratio for the compressed schemes (~100×)
+    pub compression: f64,
+    /// fraction of communication hidden under compute (software
+    /// pipelining in [35]); 0 = fully exposed
+    pub overlap: f64,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        SystemConfig {
+            workers: 8,
+            peak_tflops: 100.0,
+            compute_efficiency: 0.2,
+            bandwidth_gbps: 32.0,
+            minibatch_per_worker: 8,
+            compression: 112.0,
+            overlap: 0.0,
+        }
+    }
+}
+
+/// Step-time breakdown in seconds (per training step).
+#[derive(Debug, Clone)]
+pub struct StepBreakdown {
+    pub scheme: Scheme,
+    pub compute_s: f64,
+    /// gradient upload (worker → server)
+    pub grad_up_s: f64,
+    /// reduced gradient / weight download (server → worker)
+    pub grad_down_s: f64,
+    /// index broadcast (ScaleCom only)
+    pub index_s: f64,
+    pub exposed_comm_s: f64,
+    pub total_s: f64,
+}
+
+impl StepBreakdown {
+    pub fn comm_fraction(&self) -> f64 {
+        self.exposed_comm_s / self.total_s
+    }
+}
+
+/// Model one training step.
+pub fn step_time(net: &PaperNet, sys: &SystemConfig, scheme: Scheme) -> StepBreakdown {
+    let flops = net.train_flops_per_sample() * sys.minibatch_per_worker as f64;
+    let effective = sys.peak_tflops * 1e12 * sys.compute_efficiency;
+    let compute_s = flops / effective;
+
+    let grad_bytes = net.gradient_bytes() as f64;
+    let bw = sys.bandwidth_gbps * 1e9;
+    let n = sys.workers as f64;
+
+    // Sparse payloads carry (index, value) pairs: 8 bytes per kept
+    // element vs 4 dense, i.e. wire size = 2·grad_bytes/compression.
+    let sparse_bytes = 2.0 * grad_bytes / sys.compression;
+
+    // Each worker has its own `bw` link to the parameter server (PCIe in
+    // the paper's testbed); the server reduces in place, so the dense
+    // baseline's per-worker traffic is constant in n — Appendix F.1:
+    // "the conventional uncompressed scheme scales quite well ... the
+    // accelerator to parameter server communication cost remains
+    // constant". What does NOT stay constant is the *reduced result
+    // size* under local top-k (the gradient build-up).
+    let (up, down, index) = match scheme {
+        // Dense: full gradient up, reduced gradient (same size) down.
+        Scheme::None => (grad_bytes / bw, grad_bytes / bw, 0.0),
+        // Local top-k: compressed upload, but the reduced union has
+        // ~n·k entries (capped at the dense pair size) → downloads grow
+        // linearly with the worker count.
+        Scheme::LocalTopK => {
+            let union_bytes = (n * sparse_bytes).min(2.0 * grad_bytes);
+            (sparse_bytes / bw, union_bytes / bw, 0.0)
+        }
+        // ScaleCom: shared indices reduce on the server; k pairs each
+        // way per worker plus the O(1) index broadcast (§5: ≈0.5% of
+        // baseline communication).
+        Scheme::ScaleCom => {
+            let idx_bytes = grad_bytes / sys.compression;
+            (sparse_bytes / bw, sparse_bytes / bw, idx_bytes / bw)
+        }
+    };
+    let comm = up + down + index;
+    let exposed = (comm - sys.overlap * comm.min(compute_s)).max(0.0);
+    StepBreakdown {
+        scheme,
+        compute_s,
+        grad_up_s: up,
+        grad_down_s: down,
+        index_s: index,
+        exposed_comm_s: exposed,
+        total_s: compute_s + exposed,
+    }
+}
+
+/// Speedup of `scheme` relative to `baseline` on the same system.
+pub fn speedup(net: &PaperNet, sys: &SystemConfig, scheme: Scheme, baseline: Scheme) -> f64 {
+    step_time(net, sys, baseline).total_s / step_time(net, sys, scheme).total_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::paper::paper_net;
+
+    fn sys(workers: usize, minibatch: usize, tflops: f64) -> SystemConfig {
+        SystemConfig {
+            workers,
+            minibatch_per_worker: minibatch,
+            peak_tflops: tflops,
+            ..SystemConfig::default()
+        }
+    }
+
+    #[test]
+    fn scheme_parse() {
+        assert_eq!(Scheme::parse("scalecom").unwrap(), Scheme::ScaleCom);
+        assert_eq!(Scheme::parse("none").unwrap(), Scheme::None);
+        assert!(Scheme::parse("x").is_err());
+    }
+
+    #[test]
+    fn fig1b_comm_fraction_grows_for_topk_not_scalecom() {
+        // Fig 1(b): ResNet50, 32 GBps, ~112x — as workers grow, local
+        // top-k communication dominates; ScaleCom stays flat.
+        let net = paper_net("resnet50").unwrap();
+        let mut topk_frac = Vec::new();
+        let mut scalecom_frac = Vec::new();
+        for n in [8usize, 32, 128] {
+            let s = sys(n, 8, 100.0);
+            topk_frac.push(step_time(&net, &s, Scheme::LocalTopK).comm_fraction());
+            scalecom_frac.push(step_time(&net, &s, Scheme::ScaleCom).comm_fraction());
+        }
+        assert!(topk_frac[2] > topk_frac[0] * 2.0, "{topk_frac:?}");
+        assert!((scalecom_frac[2] - scalecom_frac[0]).abs() < 0.02, "{scalecom_frac:?}");
+    }
+
+    #[test]
+    fn paper_section5_speedup_shape() {
+        // §5: with 100 TFLOPs/worker, ScaleCom speedup ≈2× at mb=8 and
+        // ≈1.23× at mb=32; with 300 TFLOPs, 4.1× → 1.75×. We assert the
+        // ordering and rough magnitudes (±40%) — the shape, not the
+        // authors' exact constants.
+        let net = paper_net("resnet50").unwrap();
+        let s_100_8 = speedup(&net, &sys(128, 8, 100.0), Scheme::ScaleCom, Scheme::None);
+        let s_100_32 = speedup(&net, &sys(128, 32, 100.0), Scheme::ScaleCom, Scheme::None);
+        let s_300_8 = speedup(&net, &sys(128, 8, 300.0), Scheme::ScaleCom, Scheme::None);
+        let s_300_32 = speedup(&net, &sys(128, 32, 300.0), Scheme::ScaleCom, Scheme::None);
+        assert!(s_100_8 > s_100_32, "more comm-bound at smaller minibatch");
+        assert!(s_300_8 > s_100_8, "more comm-bound at higher TFLOPs");
+        assert!((1.6..3.0).contains(&s_100_8), "s_100_8={s_100_8}");
+        assert!((1.0..1.8).contains(&s_100_32), "s_100_32={s_100_32}");
+        assert!((3.2..6.0).contains(&s_300_8), "s_300_8={s_300_8}");
+        assert!((1.5..2.6).contains(&s_300_32), "s_300_32={s_300_32}");
+    }
+
+    #[test]
+    fn scalecom_comm_constant_in_workers() {
+        let net = paper_net("resnet50").unwrap();
+        let t8 = step_time(&net, &sys(8, 8, 100.0), Scheme::ScaleCom);
+        let t128 = step_time(&net, &sys(128, 8, 100.0), Scheme::ScaleCom);
+        // per-worker comm time is independent of the worker count
+        let r8 = t8.exposed_comm_s;
+        let r128 = t128.exposed_comm_s;
+        assert!((r8 - r128).abs() / r8 < 1e-9, "{r8} vs {r128}");
+    }
+
+    #[test]
+    fn scalecom_comm_under_3pct_at_128_workers_mb8() {
+        // §5: "< 3% of total training time even with 128 workers and
+        // minibatch/worker = 8".
+        let net = paper_net("resnet50").unwrap();
+        let t = step_time(&net, &sys(128, 8, 100.0), Scheme::ScaleCom);
+        assert!(t.comm_fraction() < 0.03, "frac={}", t.comm_fraction());
+    }
+
+    #[test]
+    fn fig_a8_local_topk_gains_shrink_with_n() {
+        // A8: local top-k speedup 1.92x @8 workers decaying toward 1.2x
+        // @128; ScaleCom ≈2x flat.
+        let net = paper_net("resnet50").unwrap();
+        let tk8 = speedup(&net, &sys(8, 8, 100.0), Scheme::LocalTopK, Scheme::None);
+        let tk128 = speedup(&net, &sys(128, 8, 100.0), Scheme::LocalTopK, Scheme::None);
+        let sc8 = speedup(&net, &sys(8, 8, 100.0), Scheme::ScaleCom, Scheme::None);
+        let sc128 = speedup(&net, &sys(128, 8, 100.0), Scheme::ScaleCom, Scheme::None);
+        assert!(tk8 > 1.5, "tk8={tk8}");
+        assert!(tk128 < tk8 * 0.75, "tk128={tk128} tk8={tk8}");
+        assert!((sc128 - sc8).abs() / sc8 < 0.05, "scalecom flat");
+        assert!(sc128 > tk128, "scalecom beats top-k at scale");
+    }
+
+    #[test]
+    fn bandwidth_doubling_helps_dense_baseline() {
+        let net = paper_net("resnet50").unwrap();
+        let s32 = sys(64, 8, 100.0);
+        let mut s64 = s32.clone();
+        s64.bandwidth_gbps = 64.0;
+        let t32 = step_time(&net, &s32, Scheme::None).total_s;
+        let t64 = step_time(&net, &s64, Scheme::None).total_s;
+        // §F.1: ~1.35x improvement from 32→64 GBps
+        let gain = t32 / t64;
+        assert!(gain > 1.2 && gain < 2.0, "gain={gain}");
+    }
+
+    #[test]
+    fn overlap_hides_communication() {
+        let net = paper_net("resnet50").unwrap();
+        let mut s = sys(8, 32, 100.0);
+        let exposed = step_time(&net, &s, Scheme::None).exposed_comm_s;
+        s.overlap = 0.5;
+        let hidden = step_time(&net, &s, Scheme::None).exposed_comm_s;
+        assert!(hidden < exposed);
+    }
+}

@@ -1,0 +1,185 @@
+//! PJRT execution engine: loads HLO-text artifacts, compiles them on the
+//! CPU PJRT client, and exposes typed step calls to the trainer.
+//!
+//! Pattern follows /opt/xla-example/load_hlo.rs: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. All artifacts are lowered with
+//! `return_tuple=True`, so every output is one tuple literal.
+
+use crate::data::Batch;
+use crate::runtime::manifest::{Dtype, Manifest, ModelManifest};
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Owns the PJRT client and compiled executables for one model.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+
+    /// Load and compile all four artifacts of a model.
+    pub fn load_model(&self, manifest: &Manifest, name: &str) -> Result<LoadedModel> {
+        let mm = manifest.model(name)?.clone();
+        Ok(LoadedModel {
+            train: self.compile(&mm.train_hlo)?,
+            eval: self.compile(&mm.eval_hlo)?,
+            compress: self.compile(&mm.compress_hlo)?,
+            apply: self.compile(&mm.apply_hlo)?,
+            mm,
+        })
+    }
+}
+
+/// Compiled executables + manifest for one model.
+pub struct LoadedModel {
+    pub mm: ModelManifest,
+    train: xla::PjRtLoadedExecutable,
+    eval: xla::PjRtLoadedExecutable,
+    compress: xla::PjRtLoadedExecutable,
+    apply: xla::PjRtLoadedExecutable,
+}
+
+fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+fn run_tuple(
+    exe: &xla::PjRtLoadedExecutable,
+    inputs: &[xla::Literal],
+) -> Result<Vec<xla::Literal>> {
+    let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+    Ok(result.to_tuple()?)
+}
+
+impl LoadedModel {
+    /// Build the (x, y) literals from a dataset batch, converting token
+    /// features to i32 when the artifact expects integer inputs.
+    fn batch_literals(&self, batch: &Batch) -> Result<(xla::Literal, xla::Literal)> {
+        anyhow::ensure!(
+            batch.batch == self.mm.batch,
+            "batch size {} != artifact batch {} for model '{}'",
+            batch.batch,
+            self.mm.batch,
+            self.mm.name
+        );
+        anyhow::ensure!(
+            batch.x.len() == self.mm.x.elements(),
+            "x has {} elements, artifact expects {}",
+            batch.x.len(),
+            self.mm.x.elements()
+        );
+        let x = match self.mm.x.dtype {
+            Dtype::F32 => lit_f32(&batch.x, &self.mm.x.dims_i64())?,
+            Dtype::I32 => {
+                let toks: Vec<i32> = batch.x.iter().map(|&t| t as i32).collect();
+                lit_i32(&toks, &self.mm.x.dims_i64())?
+            }
+        };
+        anyhow::ensure!(
+            batch.y.len() == self.mm.y.elements(),
+            "y has {} elements, artifact expects {}",
+            batch.y.len(),
+            self.mm.y.elements()
+        );
+        let y = lit_i32(&batch.y, &self.mm.y.dims_i64())?;
+        Ok((x, y))
+    }
+
+    /// Forward+backward: `(params, x, y) → (loss, grads)`.
+    pub fn train_step(&self, params: &[f32], batch: &Batch) -> Result<(f32, Vec<f32>)> {
+        anyhow::ensure!(params.len() == self.mm.dim, "params dim mismatch");
+        let (x, y) = self.batch_literals(batch)?;
+        let p = lit_f32(params, &[self.mm.dim as i64])?;
+        let out = run_tuple(&self.train, &[p, x, y])?;
+        anyhow::ensure!(out.len() == 2, "train artifact returned {} outputs", out.len());
+        let loss = out[0].to_vec::<f32>()?[0];
+        let grads = out[1].to_vec::<f32>()?;
+        anyhow::ensure!(grads.len() == self.mm.dim, "grads dim mismatch");
+        anyhow::ensure!(loss.is_finite(), "non-finite loss {loss} (diverged?)");
+        Ok((loss, grads))
+    }
+
+    /// Evaluation: `(params, x, y) → (loss, correct_count)`.
+    pub fn eval_step(&self, params: &[f32], batch: &Batch) -> Result<(f32, f32)> {
+        let (x, y) = self.batch_literals(batch)?;
+        let p = lit_f32(params, &[self.mm.dim as i64])?;
+        let out = run_tuple(&self.eval, &[p, x, y])?;
+        anyhow::ensure!(out.len() == 2, "eval artifact returned {} outputs", out.len());
+        Ok((out[0].to_vec::<f32>()?[0], out[1].to_vec::<f32>()?[0]))
+    }
+
+    /// L1 leader kernel: `(m, g, β) → (idx, vals, m_next)` — Pallas
+    /// chunk-top-1 selection + low-pass memory update on-device.
+    pub fn kernel_compress(
+        &self,
+        m: &[f32],
+        g: &[f32],
+        beta: f32,
+    ) -> Result<(Vec<u32>, Vec<f32>, Vec<f32>)> {
+        let dim = self.mm.dim as i64;
+        let out = run_tuple(
+            &self.compress,
+            &[
+                lit_f32(m, &[dim])?,
+                lit_f32(g, &[dim])?,
+                xla::Literal::scalar(beta),
+            ],
+        )?;
+        anyhow::ensure!(out.len() == 3, "compress artifact returned {}", out.len());
+        let idx: Vec<u32> = out[0].to_vec::<i32>()?.iter().map(|&i| i as u32).collect();
+        let vals = out[1].to_vec::<f32>()?;
+        let m_next = out[2].to_vec::<f32>()?;
+        anyhow::ensure!(idx.len() == self.mm.k && vals.len() == self.mm.k);
+        Ok((idx, vals, m_next))
+    }
+
+    /// L1 follower kernel: `(m, g, idx, β) → (vals, m_next)`.
+    pub fn kernel_apply(
+        &self,
+        m: &[f32],
+        g: &[f32],
+        idx: &[u32],
+        beta: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        anyhow::ensure!(idx.len() == self.mm.k, "idx len != k");
+        let dim = self.mm.dim as i64;
+        let idx_i32: Vec<i32> = idx.iter().map(|&i| i as i32).collect();
+        let out = run_tuple(
+            &self.apply,
+            &[
+                lit_f32(m, &[dim])?,
+                lit_f32(g, &[dim])?,
+                lit_i32(&idx_i32, &[self.mm.k as i64])?,
+                xla::Literal::scalar(beta),
+            ],
+        )?;
+        anyhow::ensure!(out.len() == 2, "apply artifact returned {}", out.len());
+        Ok((out[0].to_vec::<f32>()?, out[1].to_vec::<f32>()?))
+    }
+
+    pub fn load_init_params(&self) -> Result<Vec<f32>> {
+        self.mm.load_init_params()
+    }
+}

@@ -1,0 +1,310 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime. Parsed with the in-repo JSON module and validated
+//! hard — schema drift must fail at load time, not mid-training.
+
+use crate::compress::rate::{LayerPartition, LayerSlice};
+use crate::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Tensor spec for an artifact input.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> anyhow::Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => anyhow::bail!("unknown dtype '{other}'"),
+        }
+    }
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn dims_i64(&self) -> Vec<i64> {
+        self.shape.iter().map(|&d| d as i64).collect()
+    }
+
+    fn from_json(v: &Json) -> anyhow::Result<TensorSpec> {
+        let shape = v
+            .req("shape")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("shape must be an array"))?
+            .iter()
+            .map(|d| {
+                d.as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("bad shape dim"))
+            })
+            .collect::<anyhow::Result<Vec<usize>>>()?;
+        let dtype = Dtype::parse(
+            v.req("dtype")?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("dtype must be a string"))?,
+        )?;
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One model's manifest entry.
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub name: String,
+    /// flat parameter/gradient dimension P
+    pub dim: usize,
+    /// per-worker batch the artifacts were lowered with
+    pub batch: usize,
+    /// chunk size of the compress artifact (== compression rate)
+    pub chunk: usize,
+    /// number of selected coordinates K = ceil(P/chunk)
+    pub k: usize,
+    pub train_hlo: PathBuf,
+    pub eval_hlo: PathBuf,
+    pub compress_hlo: PathBuf,
+    pub apply_hlo: PathBuf,
+    pub init_params: PathBuf,
+    pub x: TensorSpec,
+    pub y: TensorSpec,
+    pub layers: LayerPartition,
+}
+
+impl ModelManifest {
+    fn from_json(name: &str, v: &Json, dir: &Path) -> anyhow::Result<ModelManifest> {
+        let req_usize = |key: &str| -> anyhow::Result<usize> {
+            v.req(key)?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("field '{key}' must be a non-negative int"))
+        };
+        let req_path = |key: &str| -> anyhow::Result<PathBuf> {
+            Ok(dir.join(
+                v.req(key)?
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("field '{key}' must be a string"))?,
+            ))
+        };
+        let layers_json = v
+            .req("layers")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("layers must be an array"))?;
+        let mut layers = Vec::with_capacity(layers_json.len());
+        for l in layers_json {
+            layers.push(LayerSlice {
+                name: l
+                    .req("name")?
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("layer name"))?
+                    .to_string(),
+                offset: l
+                    .req("offset")?
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("layer offset"))?,
+                len: l
+                    .req("len")?
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("layer len"))?,
+                flops_per_sample: l
+                    .req("flops_per_sample")?
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("layer flops"))?,
+                compress: l.get("compress").and_then(|b| b.as_bool()).unwrap_or(true),
+            });
+        }
+        let m = ModelManifest {
+            name: name.to_string(),
+            dim: req_usize("dim")?,
+            batch: req_usize("batch")?,
+            chunk: req_usize("chunk")?,
+            k: req_usize("k")?,
+            train_hlo: req_path("train")?,
+            eval_hlo: req_path("eval")?,
+            compress_hlo: req_path("compress")?,
+            apply_hlo: req_path("apply")?,
+            init_params: req_path("init_params")?,
+            x: TensorSpec::from_json(v.req("x")?)?,
+            y: TensorSpec::from_json(v.req("y")?)?,
+            layers: LayerPartition::try_from_layers(layers)?,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.dim > 0, "dim must be positive");
+        anyhow::ensure!(
+            self.layers.total_len() == self.dim,
+            "layer partition covers {} of {} params",
+            self.layers.total_len(),
+            self.dim
+        );
+        anyhow::ensure!(
+            self.k == self.dim.div_ceil(self.chunk),
+            "k={} inconsistent with dim={} chunk={}",
+            self.k,
+            self.dim,
+            self.chunk
+        );
+        anyhow::ensure!(
+            self.x.shape.first() == Some(&self.batch),
+            "x batch dim mismatch"
+        );
+        Ok(())
+    }
+
+    /// Load the initial flat parameters (f32 little-endian).
+    pub fn load_init_params(&self) -> anyhow::Result<Vec<f32>> {
+        let bytes = std::fs::read(&self.init_params).map_err(|e| {
+            anyhow::anyhow!("reading {}: {e}", self.init_params.display())
+        })?;
+        anyhow::ensure!(
+            bytes.len() == self.dim * 4,
+            "init params file has {} bytes, expected {} (dim={})",
+            bytes.len(),
+            self.dim * 4,
+            self.dim
+        );
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// The full manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub models: BTreeMap<String, ModelManifest>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!(
+                "reading {}: {e} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        let v = Json::parse(&src).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let version = v.req("version")?.as_usize().unwrap_or(0);
+        anyhow::ensure!(version == 1, "unsupported manifest version {version}");
+        let mut models = BTreeMap::new();
+        for (name, entry) in v
+            .req("models")?
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("models must be an object"))?
+        {
+            models.insert(name.clone(), ModelManifest::from_json(name, entry, dir)?);
+        }
+        anyhow::ensure!(!models.is_empty(), "manifest has no models");
+        Ok(Manifest {
+            models,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn model(&self, name: &str) -> anyhow::Result<&ModelManifest> {
+        self.models.get(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "model '{name}' not in manifest (have: {})",
+                self.models.keys().cloned().collect::<Vec<_>>().join(", ")
+            )
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest_json() -> String {
+        r#"{
+          "version": 1,
+          "models": {
+            "tiny": {
+              "dim": 10, "batch": 2, "chunk": 5, "k": 2,
+              "train": "tiny.hlo.txt", "eval": "tiny_eval.hlo.txt",
+              "compress": "tiny_c.hlo.txt", "apply": "tiny_a.hlo.txt",
+              "init_params": "tiny_init.bin",
+              "x": {"shape": [2, 4], "dtype": "f32"},
+              "y": {"shape": [2], "dtype": "i32"},
+              "layers": [
+                {"name": "w", "offset": 0, "len": 8, "flops_per_sample": 16.0},
+                {"name": "b", "offset": 8, "len": 2, "flops_per_sample": 0.0}
+              ]
+            }
+          }
+        }"#
+        .to_string()
+    }
+
+    fn write_sample(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), sample_manifest_json()).unwrap();
+        let init: Vec<u8> = (0..10u32).flat_map(|i| (i as f32).to_le_bytes()).collect();
+        std::fs::write(dir.join("tiny_init.bin"), init).unwrap();
+    }
+
+    #[test]
+    fn loads_and_validates() {
+        let dir = std::env::temp_dir().join("scalecom_manifest_test1");
+        write_sample(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        let tiny = m.model("tiny").unwrap();
+        assert_eq!(tiny.dim, 10);
+        assert_eq!(tiny.x.dtype, Dtype::F32);
+        assert_eq!(tiny.x.elements(), 8);
+        assert_eq!(tiny.x.dims_i64(), vec![2, 4]);
+        assert_eq!(tiny.layers.layers.len(), 2);
+        let params = tiny.load_init_params().unwrap();
+        assert_eq!(params.len(), 10);
+        assert_eq!(params[3], 3.0);
+        assert!(m.model("missing").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_layer_cover() {
+        let dir = std::env::temp_dir().join("scalecom_manifest_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let bad = sample_manifest_json().replace("\"len\": 8", "\"len\": 7");
+        std::fs::write(dir.join("manifest.json"), bad).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn rejects_inconsistent_k() {
+        let dir = std::env::temp_dir().join("scalecom_manifest_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let bad = sample_manifest_json().replace("\"k\": 2", "\"k\": 3");
+        std::fs::write(dir.join("manifest.json"), bad).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_init_size() {
+        let dir = std::env::temp_dir().join("scalecom_manifest_test4");
+        write_sample(&dir);
+        std::fs::write(dir.join("tiny_init.bin"), vec![0u8; 12]).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.model("tiny").unwrap().load_init_params().is_err());
+    }
+
+    #[test]
+    fn missing_manifest_mentions_make_artifacts() {
+        let err = Manifest::load(Path::new("/nonexistent-dir-xyz")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

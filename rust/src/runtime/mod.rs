@@ -1,0 +1,31 @@
+//! Runtime: PJRT client wrapper + artifact manifest.
+//!
+//! `Engine` loads the HLO-text artifacts that `make artifacts` produced
+//! and exposes typed train/eval/compress/apply calls. Python never runs
+//! here — the Rust binary is self-contained once `artifacts/` exists.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, LoadedModel};
+pub use manifest::{Dtype, Manifest, ModelManifest, TensorSpec};
+
+use std::path::Path;
+
+/// Default artifacts directory (overridable via config / --artifacts).
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    // Look relative to CWD first, then next to the executable's repo root.
+    let cwd = Path::new("artifacts");
+    if cwd.join("manifest.json").exists() {
+        return cwd.to_path_buf();
+    }
+    if let Ok(exe) = std::env::current_exe() {
+        for anc in exe.ancestors() {
+            let cand = anc.join("artifacts");
+            if cand.join("manifest.json").exists() {
+                return cand;
+            }
+        }
+    }
+    cwd.to_path_buf()
+}

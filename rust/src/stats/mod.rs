@@ -1,0 +1,430 @@
+//! Statistical instrumentation behind Figures 2, 3 and A1.
+//!
+//! - cosine distance between workers' memories (Fig 2a/c)
+//! - normalized Hamming distance between index sets (Fig 3, Lemma 1)
+//! - log-scale magnitude histograms + overlap (Fig 2b/d)
+//! - Q-Q quantiles, linear-fit R², Spearman rank correlation (Fig A1)
+//! - contraction coefficient measurement (Lemma 1 empirics)
+
+use crate::util::floats::{dot, l2_norm};
+
+/// Cosine distance `1 − x·y / (‖x‖‖y‖)` (paper footnote 1).
+/// Returns 0 for two zero vectors, 1 if exactly one is zero.
+pub fn cosine_distance(x: &[f32], y: &[f32]) -> f64 {
+    assert_eq!(x.len(), y.len(), "cosine_distance: length mismatch");
+    let nx = l2_norm(x);
+    let ny = l2_norm(y);
+    if nx == 0.0 && ny == 0.0 {
+        return 0.0;
+    }
+    if nx == 0.0 || ny == 0.0 {
+        return 1.0;
+    }
+    1.0 - dot(x, y) / (nx * ny)
+}
+
+/// Mean pairwise cosine distance over all worker pairs.
+pub fn mean_pairwise_cosine_distance(vecs: &[Vec<f32>]) -> f64 {
+    let n = vecs.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let mut sum = 0.0;
+    let mut count = 0;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            sum += cosine_distance(&vecs[i], &vecs[j]);
+            count += 1;
+        }
+    }
+    sum / count as f64
+}
+
+/// Hamming distance between two k-index sets, per Eqn. (6):
+/// `H(I1, I2) = 2d` where `d = k − |I1 ∩ I2|`. Sets must be sorted.
+pub fn hamming_distance(a: &[u32], b: &[u32]) -> usize {
+    debug_assert!(a.windows(2).all(|w| w[0] < w[1]));
+    debug_assert!(b.windows(2).all(|w| w[0] < w[1]));
+    let overlap = sorted_intersection_size(a, b);
+    (a.len() - overlap) + (b.len() - overlap)
+}
+
+/// `d/k` from Fig 3: the normalized non-overlap of two k-sets
+/// (0 = identical, 1 = disjoint). For unequal sizes uses the max size.
+pub fn normalized_hamming(a: &[u32], b: &[u32]) -> f64 {
+    let k = a.len().max(b.len());
+    if k == 0 {
+        return 0.0;
+    }
+    let d = hamming_distance(a, b) as f64 / 2.0;
+    d / k as f64
+}
+
+/// |A ∩ B| for sorted unique slices, O(|A|+|B|).
+pub fn sorted_intersection_size(a: &[u32], b: &[u32]) -> usize {
+    let (mut i, mut j, mut c) = (0, 0, 0);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                c += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    c
+}
+
+/// Empirical contraction coefficient of Lemma 1:
+/// `γ̂ = ‖y − comp(y)‖² / ‖y‖²` where comp keeps only `indices`.
+pub fn contraction_coefficient(y: &[f32], indices: &[u32]) -> f64 {
+    let total: f64 = y.iter().map(|&v| (v as f64) * (v as f64)).sum();
+    if total == 0.0 {
+        return 0.0;
+    }
+    let kept: f64 = indices
+        .iter()
+        .map(|&i| {
+            let v = y[i as usize] as f64;
+            v * v
+        })
+        .sum();
+    (total - kept) / total
+}
+
+/// Lemma 1's bound: γ ≤ d/k + (1 − d/k)·γ0, with γ0 the top-k
+/// contraction of `y` itself.
+pub fn lemma1_bound(y: &[f32], indices: &[u32]) -> f64 {
+    let k = indices.len();
+    if k == 0 {
+        return 1.0;
+    }
+    let true_topk = crate::util::select::top_k_indices_by_magnitude(y, k.min(y.len()));
+    let gamma0 = contraction_coefficient(y, &true_topk);
+    let dk = normalized_hamming(&true_topk, indices);
+    dk + (1.0 - dk) * gamma0
+}
+
+// ---------------------------------------------------------------------
+// Histograms (Fig 2b/d)
+// ---------------------------------------------------------------------
+
+/// Log-scale magnitude histogram: buckets of |x| in decades
+/// [10^lo, 10^hi) split `bins_per_decade` per decade; zeros go to an
+/// underflow bucket.
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    pub lo_exp: i32,
+    pub hi_exp: i32,
+    pub bins_per_decade: usize,
+    pub counts: Vec<u64>,
+    pub underflow: u64,
+    pub overflow: u64,
+}
+
+impl LogHistogram {
+    pub fn new(lo_exp: i32, hi_exp: i32, bins_per_decade: usize) -> Self {
+        assert!(hi_exp > lo_exp && bins_per_decade >= 1);
+        let nbins = ((hi_exp - lo_exp) as usize) * bins_per_decade;
+        LogHistogram {
+            lo_exp,
+            hi_exp,
+            bins_per_decade,
+            counts: vec![0; nbins],
+            underflow: 0,
+            overflow: 0,
+        }
+    }
+
+    pub fn add_all(&mut self, xs: &[f32]) {
+        for &x in xs {
+            self.add(x);
+        }
+    }
+
+    pub fn add(&mut self, x: f32) {
+        let m = x.abs() as f64;
+        if m <= 0.0 || !m.is_finite() {
+            self.underflow += 1;
+            return;
+        }
+        let pos = (m.log10() - self.lo_exp as f64) * self.bins_per_decade as f64;
+        if pos < 0.0 {
+            self.underflow += 1;
+        } else if pos >= self.counts.len() as f64 {
+            self.overflow += 1;
+        } else {
+            self.counts[pos as usize] += 1;
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum::<u64>() + self.underflow + self.overflow
+    }
+
+    /// Histogram-overlap coefficient in [0,1]: Σ min(p_i, q_i) over
+    /// normalized bins. Fig 2(b): "true top-k area overlaps more than
+    /// 70% with local top-k" — we compute the analogous number.
+    pub fn overlap(&self, other: &LogHistogram) -> f64 {
+        assert_eq!(self.counts.len(), other.counts.len());
+        let ta = self.total().max(1) as f64;
+        let tb = other.total().max(1) as f64;
+        let mut s = (self.underflow as f64 / ta).min(other.underflow as f64 / tb)
+            + (self.overflow as f64 / ta).min(other.overflow as f64 / tb);
+        for (&a, &b) in self.counts.iter().zip(&other.counts) {
+            s += (a as f64 / ta).min(b as f64 / tb);
+        }
+        s
+    }
+}
+
+// ---------------------------------------------------------------------
+// Q-Q analysis (Fig A1)
+// ---------------------------------------------------------------------
+
+/// `q` evenly-spaced quantiles of |x| (sorted magnitudes).
+pub fn magnitude_quantiles(xs: &[f32], q: usize) -> Vec<f64> {
+    assert!(q >= 2);
+    let mut m: Vec<f64> = xs.iter().map(|&x| x.abs() as f64).collect();
+    m.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    if m.is_empty() {
+        return vec![0.0; q];
+    }
+    (0..q)
+        .map(|i| {
+            let pos = i as f64 / (q - 1) as f64 * (m.len() - 1) as f64;
+            let lo = pos.floor() as usize;
+            let hi = pos.ceil() as usize;
+            if lo == hi {
+                m[lo]
+            } else {
+                let frac = pos - lo as f64;
+                m[lo] * (1.0 - frac) + m[hi] * frac
+            }
+        })
+        .collect()
+}
+
+/// Least-squares fit y = a·x + b, returning (a, b, r²).
+pub fn linear_fit_r2(x: &[f64], y: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(x.len(), y.len());
+    let n = x.len() as f64;
+    assert!(n >= 2.0, "need at least 2 points");
+    let mx = x.iter().sum::<f64>() / n;
+    let my = y.iter().sum::<f64>() / n;
+    let sxx: f64 = x.iter().map(|&v| (v - mx) * (v - mx)).sum();
+    let sxy: f64 = x.iter().zip(y).map(|(&u, &v)| (u - mx) * (v - my)).sum();
+    let syy: f64 = y.iter().map(|&v| (v - my) * (v - my)).sum();
+    if sxx == 0.0 || syy == 0.0 {
+        return (0.0, my, if syy == 0.0 { 1.0 } else { 0.0 });
+    }
+    let a = sxy / sxx;
+    let b = my - a * mx;
+    let r2 = (sxy * sxy) / (sxx * syy);
+    (a, b, r2)
+}
+
+/// Spearman rank correlation of |x| vs |y| (Fig A1: ρ = 0.657 between a
+/// worker's EF-gradient magnitudes and the all-reduced ones).
+pub fn spearman_correlation(x: &[f32], y: &[f32]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let rx = ranks_of_magnitude(x);
+    let ry = ranks_of_magnitude(y);
+    let (_, _, r2) = linear_fit_r2(&rx, &ry);
+    // sign from the slope of the rank fit
+    let (a, _, _) = linear_fit_r2(&rx, &ry);
+    r2.sqrt() * a.signum()
+}
+
+fn ranks_of_magnitude(xs: &[f32]) -> Vec<f64> {
+    let n = xs.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        xs[a]
+            .abs()
+            .partial_cmp(&xs[b].abs())
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+    let mut ranks = vec![0.0; n];
+    // average ranks over ties
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && xs[order[j + 1]].abs() == xs[order[i]].abs() {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0;
+        for &o in &order[i..=j] {
+            ranks[o] = avg;
+        }
+        i = j + 1;
+    }
+    ranks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::check;
+
+    #[test]
+    fn cosine_distance_basics() {
+        assert!(cosine_distance(&[1.0, 0.0], &[1.0, 0.0]).abs() < 1e-12);
+        assert!((cosine_distance(&[1.0, 0.0], &[0.0, 1.0]) - 1.0).abs() < 1e-12);
+        assert!((cosine_distance(&[1.0, 0.0], &[-1.0, 0.0]) - 2.0).abs() < 1e-12);
+        assert_eq!(cosine_distance(&[0.0], &[0.0]), 0.0);
+        assert_eq!(cosine_distance(&[0.0], &[1.0]), 1.0);
+    }
+
+    #[test]
+    fn cosine_scale_invariant() {
+        check("cosine scale-invariant", 60, |g| {
+            let n = g.usize_in(1..=64);
+            let x = g.f32_vec_len(n, 1.0);
+            let y = g.f32_vec_len(n, 1.0);
+            let s = g.f32_in(0.1, 10.0);
+            let xs: Vec<f32> = x.iter().map(|&v| v * s).collect();
+            let d1 = cosine_distance(&x, &y);
+            let d2 = cosine_distance(&xs, &y);
+            assert!((d1 - d2).abs() < 1e-4, "{d1} vs {d2}");
+        });
+    }
+
+    #[test]
+    fn mean_pairwise_over_three() {
+        let v = vec![vec![1.0, 0.0], vec![1.0, 0.0], vec![0.0, 1.0]];
+        // pairs: (0,1)=0, (0,2)=1, (1,2)=1 → mean 2/3
+        assert!((mean_pairwise_cosine_distance(&v) - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(mean_pairwise_cosine_distance(&v[..1]), 0.0);
+    }
+
+    #[test]
+    fn hamming_eqn6() {
+        // identical sets → 0; disjoint k-sets → 2k
+        assert_eq!(hamming_distance(&[1, 2, 3], &[1, 2, 3]), 0);
+        assert_eq!(hamming_distance(&[1, 2], &[3, 4]), 4);
+        assert_eq!(hamming_distance(&[1, 2, 3], &[2, 3, 4]), 2);
+        assert_eq!(normalized_hamming(&[1, 2], &[3, 4]), 1.0);
+        assert_eq!(normalized_hamming(&[1, 2], &[1, 2]), 0.0);
+        assert_eq!(normalized_hamming(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn intersection_size_prop() {
+        check("intersection bounds", 60, |g| {
+            let n = g.usize_in(0..=64);
+            let m = g.usize_in(0..=64);
+            let dim = 128;
+            let a = g.rng().sample_indices(dim, n.min(dim));
+            let b = g.rng().sample_indices(dim, m.min(dim));
+            let c = sorted_intersection_size(&a, &b);
+            assert!(c <= a.len() && c <= b.len());
+            assert_eq!(sorted_intersection_size(&a, &a), a.len());
+        });
+    }
+
+    #[test]
+    fn contraction_zero_when_all_kept() {
+        let y = [1.0f32, -2.0, 3.0];
+        assert_eq!(contraction_coefficient(&y, &[0, 1, 2]), 0.0);
+        assert_eq!(contraction_coefficient(&y, &[]), 1.0);
+        assert_eq!(contraction_coefficient(&[0.0, 0.0], &[]), 0.0);
+    }
+
+    #[test]
+    fn lemma1_bound_holds_in_expectation() {
+        // Lemma 1 bounds E‖y − comp(y)‖² over the uniform choice of
+        // *which* k−d top-k coordinates stay in the overlap (A10–A12).
+        // Verify: draw many index sets with a fixed overlap size (k−d
+        // uniform from the true top-k, d arbitrary from outside) and
+        // compare the mean contraction against the bound.
+        check("Lemma 1 contraction bound (expectation)", 30, |g| {
+            let dim = g.usize_in(16..=128);
+            let k = g.usize_in(2..=dim / 2);
+            let d = g.usize_in(0..=k); // non-overlap size
+            let y = g.f32_vec_len(dim, 1.0);
+            let topk = crate::util::select::top_k_indices_by_magnitude(&y, k);
+            let outside: Vec<u32> = (0..dim as u32).filter(|i| !topk.contains(i)).collect();
+            let d = d.min(outside.len());
+            let trials = 300;
+            let mut mean_gamma = 0.0;
+            let mut bound = 0.0;
+            for _ in 0..trials {
+                // keep k−d uniform from topk
+                let mut kept: Vec<u32> = {
+                    let mut t = topk.clone();
+                    g.rng().shuffle(&mut t);
+                    t[..k - d].to_vec()
+                };
+                // fill with d arbitrary outside coordinates
+                let mut o = outside.clone();
+                g.rng().shuffle(&mut o);
+                kept.extend_from_slice(&o[..d]);
+                kept.sort_unstable();
+                mean_gamma += contraction_coefficient(&y, &kept) / trials as f64;
+                bound = lemma1_bound(&y, &kept); // same for all draws (same d/k)
+            }
+            assert!(
+                mean_gamma <= bound + 0.02,
+                "E[γ̂]={mean_gamma} > bound={bound} (dim={dim} k={k} d={d})"
+            );
+        });
+    }
+
+    #[test]
+    fn loghist_counts_and_overlap() {
+        let mut h1 = LogHistogram::new(-6, 2, 4);
+        h1.add_all(&[0.0, 1.0, -1.0, 10.0, 1e-8]);
+        assert_eq!(h1.total(), 5);
+        assert_eq!(h1.underflow, 2); // 0.0 and 1e-8
+        let mut h2 = LogHistogram::new(-6, 2, 4);
+        h2.add_all(&[0.0, 1.0, -1.0, 10.0, 1e-8]);
+        assert!((h1.overlap(&h2) - 1.0).abs() < 1e-12);
+        let mut h3 = LogHistogram::new(-6, 2, 4);
+        h3.add_all(&[1e5; 5]); // all overflow
+        assert!(h1.overlap(&h3) < 0.01);
+    }
+
+    #[test]
+    fn quantiles_monotone() {
+        check("quantiles monotone", 40, |g| {
+            let n = g.usize_in(1..=128);
+            let xs = g.f32_vec_len(n, 3.0);
+            let q = magnitude_quantiles(&xs, 11);
+            assert_eq!(q.len(), 11);
+            assert!(q.windows(2).all(|w| w[0] <= w[1] + 1e-12));
+        });
+    }
+
+    #[test]
+    fn linear_fit_exact_line() {
+        let x = [0.0, 1.0, 2.0, 3.0];
+        let y = [1.0, 3.0, 5.0, 7.0];
+        let (a, b, r2) = linear_fit_r2(&x, &y);
+        assert!((a - 2.0).abs() < 1e-12);
+        assert!((b - 1.0).abs() < 1e-12);
+        assert!((r2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_perfect_and_inverse() {
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let y = [2.0f32, 4.0, 6.0, 8.0];
+        assert!((spearman_correlation(&x, &y) - 1.0).abs() < 1e-9);
+        // inverse *magnitude* order
+        let z = [8.0f32, 6.0, 4.0, 2.0];
+        assert!((spearman_correlation(&x, &z) + 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spearman_ties_averaged() {
+        let x = [1.0f32, 1.0, 2.0];
+        let y = [1.0f32, 1.0, 2.0];
+        assert!((spearman_correlation(&x, &y) - 1.0).abs() < 1e-9);
+    }
+}
+
+pub mod theory;

@@ -1,0 +1,331 @@
+//! Synchronous data-parallel trainer: PJRT compute + Algorithm 1.
+//!
+//! Per step t (fully synchronous, as in the paper):
+//!   1. every worker computes (loss_i, ∇f_i) on its disjoint shard via
+//!      the AOT train artifact (L2 graph, PJRT CPU);
+//!   2. the `Coordinator` runs Algorithm 1 (CLT-k + low-pass memory +
+//!      compressed collectives) — or the dense baseline — producing the
+//!      averaged update g^t;
+//!   3. the optimizer applies θ ← θ − α_t · g^t (identically on every
+//!      worker, so one parameter copy suffices in simulation).
+//!
+//! Workers execute sequentially within a step: the simulation's subject
+//! is communication volume and convergence, which are scheduling-
+//! independent in fully-synchronous SGD; determinism is a feature.
+//!
+//! `use_kernel` routes compression through the L1 Pallas artifacts
+//! (`<model>_compress` / `<model>_apply`) instead of the native Rust
+//! compressor — same semantics (asserted by `rust/tests/kernel_parity`),
+//! demonstrating the three-layer hot path end to end.
+
+pub mod optimizer;
+pub mod schedule;
+
+pub use optimizer::{make_optimizer, Optimizer};
+pub use schedule::LrSchedule;
+
+use crate::comm::{Fabric, FabricConfig, Topology};
+use crate::compress::{schemes::make_compressor, EfMemory, Selection, SparseGrad};
+use crate::config::train::TrainConfig;
+use crate::coordinator::{Coordinator, Mode, StepResult};
+use crate::data::Dataset;
+use crate::metrics::RunLog;
+use crate::runtime::{Engine, LoadedModel, Manifest};
+use crate::util::timer::Timer;
+use anyhow::{Context, Result};
+
+/// Everything a per-step instrumentation hook can observe.
+pub struct StepSnapshot<'a> {
+    pub t: usize,
+    pub lr: f64,
+    pub losses: &'a [f32],
+    pub grads: &'a [Vec<f32>],
+    /// error-feedback gradients m_i + ∇f_i (pre-update)
+    pub ef_grads: &'a [Vec<f32>],
+    pub result: &'a StepResult,
+    pub memories: &'a [EfMemory],
+}
+
+pub type Hook<'h> = Box<dyn FnMut(&StepSnapshot) + 'h>;
+
+pub struct Trainer<'h> {
+    pub cfg: TrainConfig,
+    #[allow(dead_code)]
+    engine: Engine,
+    model: LoadedModel,
+    dataset: Box<dyn Dataset>,
+    pub coordinator: Coordinator,
+    optimizer: Box<dyn Optimizer>,
+    pub schedule: LrSchedule,
+    pub params: Vec<f32>,
+    /// route compression through the L1 Pallas artifacts
+    pub use_kernel: bool,
+    /// optional (step, new β) switch — Appendix E.2 raises β back to 1
+    /// once the LR has decayed
+    pub beta_switch: Option<(usize, f32)>,
+    hook: Option<Hook<'h>>,
+}
+
+impl<'h> Trainer<'h> {
+    /// Build a trainer from config, loading artifacts from
+    /// `cfg.artifacts_dir`.
+    pub fn from_config(cfg: TrainConfig) -> Result<Self> {
+        cfg.validate()?;
+        let dir = std::path::PathBuf::from(&cfg.artifacts_dir);
+        let dir = if dir.join("manifest.json").exists() {
+            dir
+        } else {
+            crate::runtime::default_artifacts_dir()
+        };
+        let manifest = Manifest::load(&dir)?;
+        let engine = Engine::cpu()?;
+        let model = engine
+            .load_model(&manifest, &cfg.model)
+            .with_context(|| format!("loading model '{}'", cfg.model))?;
+        anyhow::ensure!(
+            cfg.batch_per_worker == model.mm.batch,
+            "config batch_per_worker={} but artifact was lowered with batch={} — \
+             re-run `make artifacts` or adjust the config",
+            cfg.batch_per_worker,
+            model.mm.batch
+        );
+        let zoo = crate::models::zoo_model(&cfg.model)?;
+        let dataset = zoo.dataset(cfg.seed);
+
+        let dim = model.mm.dim;
+        let fabric = Fabric::new(FabricConfig {
+            workers: cfg.workers,
+            topology: Topology::parse(&cfg.fabric_topology)?,
+            bandwidth_gbps: cfg.fabric_bandwidth_gbps,
+            latency_us: 1.0,
+            fault: crate::comm::FaultSpec::None,
+        });
+        let k = (dim as f64 / cfg.compress.rate as f64).ceil() as usize;
+        let mode = if cfg.compress.scheme == "none" {
+            Mode::Dense
+        } else {
+            // per-layer budgets need budget-derived chunk sizes
+            let scheme = if cfg.compress.use_flops_rule && cfg.compress.scheme == "scalecom" {
+                "scalecom-auto"
+            } else {
+                cfg.compress.scheme.as_str()
+            };
+            Mode::Compressed(make_compressor(scheme, cfg.compress.rate, cfg.seed)?)
+        };
+        let mut coordinator = Coordinator::new(
+            cfg.workers,
+            dim,
+            mode,
+            cfg.compress.beta,
+            k.max(1),
+            fabric,
+            cfg.compress.warmup_steps,
+        );
+        if cfg.compress.use_flops_rule {
+            let partition = model.mm.layers.clone();
+            let ks = partition.per_layer_k(
+                cfg.compress.rate as f64,
+                cfg.batch_per_worker,
+                true,
+            );
+            coordinator = coordinator.with_layered(partition, ks);
+        }
+
+        let optimizer =
+            make_optimizer(cfg.optimizer, dim, cfg.momentum, cfg.weight_decay);
+        let params = model.load_init_params()?;
+        Ok(Trainer {
+            schedule: LrSchedule::constant(cfg.lr),
+            cfg,
+            engine,
+            model,
+            dataset,
+            coordinator,
+            optimizer,
+            params,
+            use_kernel: false,
+            beta_switch: None,
+            hook: None,
+        })
+    }
+
+    pub fn set_hook(&mut self, hook: Hook<'h>) {
+        self.hook = Some(hook);
+    }
+
+    pub fn dim(&self) -> usize {
+        self.model.mm.dim
+    }
+
+    /// Run the configured number of steps; returns the metrics log.
+    pub fn run(&mut self) -> Result<RunLog> {
+        let mut log = RunLog::new(
+            &format!(
+                "{}_{}_w{}",
+                self.cfg.model, self.cfg.compress.scheme, self.cfg.workers
+            ),
+            &[
+                "step",
+                "loss",
+                "lr",
+                "rate",
+                "bytes_up",
+                "bytes_down",
+                "comm_time_s",
+                "eval_loss",
+                "eval_acc",
+                "wall_s",
+            ],
+        );
+        log.add_meta("model", &self.cfg.model);
+        log.add_meta("scheme", &self.cfg.compress.scheme);
+        log.add_meta("workers", &self.cfg.workers.to_string());
+        log.add_meta("beta", &self.cfg.compress.beta.to_string());
+        log.add_meta("global_batch", &self.cfg.global_batch().to_string());
+
+        let timer = Timer::new();
+        let n = self.cfg.workers;
+        for t in 0..self.cfg.steps {
+            if let Some((at, beta)) = self.beta_switch {
+                if t == at {
+                    self.coordinator.set_beta(beta);
+                }
+            }
+            // (1) per-worker forward/backward on disjoint shards
+            let mut losses = Vec::with_capacity(n);
+            let mut grads = Vec::with_capacity(n);
+            for w in 0..n {
+                let batch = self
+                    .dataset
+                    .batch(w, n, t, self.cfg.batch_per_worker);
+                let (loss, g) = self.model.train_step(&self.params, &batch)?;
+                losses.push(loss);
+                grads.push(g);
+            }
+
+            // (2) Algorithm 1
+            let need_efs = self.hook.is_some();
+            let efs = if need_efs {
+                self.coordinator.ef_grads(&grads)
+            } else {
+                Vec::new()
+            };
+            let result = if self.use_kernel
+                && t >= self.cfg.compress.warmup_steps
+                && !self.dense_scheme()
+            {
+                self.kernel_step(t, &grads)?
+            } else {
+                self.coordinator.step(t, &grads)
+            };
+
+            // (3) optimizer
+            let lr = self.schedule.lr_at(t);
+            self.optimizer.step(&mut self.params, &result.update, lr);
+
+            if let Some(hook) = &mut self.hook {
+                hook(&StepSnapshot {
+                    t,
+                    lr,
+                    losses: &losses,
+                    grads: &grads,
+                    ef_grads: &efs,
+                    result: &result,
+                    memories: &self.coordinator.memories,
+                });
+            }
+
+            // (4) metrics
+            let mean_loss =
+                losses.iter().map(|&l| l as f64).sum::<f64>() / n as f64;
+            let (eval_loss, eval_acc) = if self.cfg.eval_every > 0
+                && (t + 1) % self.cfg.eval_every == 0
+            {
+                self.evaluate()?
+            } else {
+                (f64::NAN, f64::NAN)
+            };
+            log.push(vec![
+                t as f64,
+                mean_loss,
+                lr,
+                result.rate,
+                result.comm.bytes_up_per_worker as f64,
+                result.comm.bytes_down_per_worker as f64,
+                result.comm.time_s,
+                eval_loss,
+                eval_acc,
+                timer.elapsed_s(),
+            ]);
+        }
+        Ok(log)
+    }
+
+    fn dense_scheme(&self) -> bool {
+        self.cfg.compress.scheme == "none"
+    }
+
+    /// Held-out evaluation: (loss, accuracy in [0,1]).
+    pub fn evaluate(&self) -> Result<(f64, f64)> {
+        let batch = self.dataset.eval_batch(self.cfg.batch_per_worker);
+        let n_preds = batch.y.len() as f64;
+        let (loss, correct) = self.model.eval_step(&self.params, &batch)?;
+        Ok((loss as f64, correct as f64 / n_preds))
+    }
+
+    /// CLT-k step through the L1 Pallas artifacts (leader compresses +
+    /// selects, followers apply the leader's indices; memory updates come
+    /// back from the kernel).
+    fn kernel_step(&mut self, t: usize, grads: &[Vec<f32>]) -> Result<StepResult> {
+        let n = grads.len();
+        let dim = self.model.mm.dim;
+        let leader = t % n;
+        let beta = self.coordinator.memories[0].beta();
+
+        let (idx, leader_vals, leader_mem) = self.model.kernel_compress(
+            self.coordinator.memories[leader].memory(),
+            &grads[leader],
+            beta,
+        )?;
+        let mut sparses: Vec<Option<SparseGrad>> = (0..n).map(|_| None).collect();
+        sparses[leader] = Some(SparseGrad::new(dim, idx.clone(), leader_vals));
+        let mut new_mems: Vec<Option<Vec<f32>>> = (0..n).map(|_| None).collect();
+        new_mems[leader] = Some(leader_mem);
+        for w in 0..n {
+            if w == leader {
+                continue;
+            }
+            let (vals, mem) = self.model.kernel_apply(
+                self.coordinator.memories[w].memory(),
+                &grads[w],
+                &idx,
+                beta,
+            )?;
+            sparses[w] = Some(SparseGrad::new(dim, idx.clone(), vals));
+            new_mems[w] = Some(mem);
+        }
+        let sparses: Vec<SparseGrad> = sparses.into_iter().map(|s| s.unwrap()).collect();
+        let avg = self
+            .coordinator
+            .fabric
+            .sparse_allreduce_shared(&sparses, leader);
+        for (mem, new) in self
+            .coordinator
+            .memories
+            .iter_mut()
+            .zip(new_mems.into_iter())
+        {
+            mem.set_memory(new.unwrap());
+        }
+        let comm = self.coordinator.fabric.stats().last_cost().clone();
+        let sent = idx.len();
+        Ok(StepResult {
+            update: avg.to_dense(),
+            selection: Some(Selection::Shared(idx)),
+            leader,
+            comm,
+            rate: dim as f64 / sent.max(1) as f64,
+            dense: false,
+        })
+    }
+}

@@ -1,0 +1,231 @@
+//! Optimizers over the flat parameter vector.
+//!
+//! Matching Appendix E: non-Nesterov SGD+momentum for the vision models,
+//! RMSProp for MobileNetV2-like runs, Adam for the Transformer. The
+//! update consumes the *averaged, already-LR-free* gradient g^t and the
+//! current learning rate (Algorithm 1 applies α at line 12).
+
+use crate::config::train::OptimizerKind;
+
+pub trait Optimizer: Send {
+    fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f64);
+    fn name(&self) -> &'static str;
+}
+
+/// Plain SGD: θ ← θ − α·g (optionally with decoupled weight decay).
+pub struct Sgd {
+    pub weight_decay: f32,
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f64) {
+        let lr = lr as f32;
+        let wd = self.weight_decay;
+        for (p, &g) in params.iter_mut().zip(grad) {
+            *p -= lr * (g + wd * *p);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+}
+
+/// Non-Nesterov momentum SGD: v ← μv + g; θ ← θ − α·v.
+pub struct SgdMomentum {
+    pub momentum: f32,
+    pub weight_decay: f32,
+    v: Vec<f32>,
+}
+
+impl SgdMomentum {
+    pub fn new(dim: usize, momentum: f32, weight_decay: f32) -> Self {
+        SgdMomentum {
+            momentum,
+            weight_decay,
+            v: vec![0.0; dim],
+        }
+    }
+}
+
+impl Optimizer for SgdMomentum {
+    fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f64) {
+        let lr = lr as f32;
+        let mu = self.momentum;
+        let wd = self.weight_decay;
+        for ((p, &g), v) in params.iter_mut().zip(grad).zip(&mut self.v) {
+            let g = g + wd * *p;
+            *v = mu * *v + g;
+            *p -= lr * *v;
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "sgd-momentum"
+    }
+}
+
+/// Adam (Kingma & Ba) with bias correction.
+pub struct Adam {
+    b1: f32,
+    b2: f32,
+    eps: f32,
+    t: i32,
+    m: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl Adam {
+    pub fn new(dim: usize) -> Self {
+        Adam {
+            b1: 0.9,
+            b2: 0.98, // transformer setting (Vaswani et al.)
+            eps: 1e-9,
+            t: 0,
+            m: vec![0.0; dim],
+            v: vec![0.0; dim],
+        }
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f64) {
+        self.t += 1;
+        let lr = lr as f32;
+        let bc1 = 1.0 - self.b1.powi(self.t);
+        let bc2 = 1.0 - self.b2.powi(self.t);
+        for ((p, &g), (m, v)) in params
+            .iter_mut()
+            .zip(grad)
+            .zip(self.m.iter_mut().zip(&mut self.v))
+        {
+            *m = self.b1 * *m + (1.0 - self.b1) * g;
+            *v = self.b2 * *v + (1.0 - self.b2) * g * g;
+            let mh = *m / bc1;
+            let vh = *v / bc2;
+            *p -= lr * mh / (vh.sqrt() + self.eps);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+}
+
+/// RMSProp with momentum (the MobileNetV2 recipe: ε=1.0 in the paper's
+/// setup; we default to 1e-3 at our scale but keep it configurable).
+pub struct RmsProp {
+    decay: f32,
+    momentum: f32,
+    eps: f32,
+    sq: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl RmsProp {
+    pub fn new(dim: usize, eps: f32) -> Self {
+        RmsProp {
+            decay: 0.9,
+            momentum: 0.9,
+            eps,
+            sq: vec![0.0; dim],
+            v: vec![0.0; dim],
+        }
+    }
+}
+
+impl Optimizer for RmsProp {
+    fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f64) {
+        let lr = lr as f32;
+        for ((p, &g), (sq, v)) in params
+            .iter_mut()
+            .zip(grad)
+            .zip(self.sq.iter_mut().zip(&mut self.v))
+        {
+            *sq = self.decay * *sq + (1.0 - self.decay) * g * g;
+            let upd = g / (sq.sqrt() + self.eps);
+            *v = self.momentum * *v + lr * upd;
+            *p -= *v;
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "rmsprop"
+    }
+}
+
+/// Factory from config.
+pub fn make_optimizer(
+    kind: OptimizerKind,
+    dim: usize,
+    momentum: f64,
+    weight_decay: f64,
+) -> Box<dyn Optimizer> {
+    match kind {
+        OptimizerKind::Sgd => Box::new(Sgd {
+            weight_decay: weight_decay as f32,
+        }),
+        OptimizerKind::SgdMomentum => Box::new(SgdMomentum::new(
+            dim,
+            momentum as f32,
+            weight_decay as f32,
+        )),
+        OptimizerKind::Adam => Box::new(Adam::new(dim)),
+        OptimizerKind::RmsProp => Box::new(RmsProp::new(dim, 1e-3)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quadratic_converges(opt: &mut dyn Optimizer, lr: f64) -> f32 {
+        // minimize 0.5*||p||^2; gradient = p
+        let mut p = vec![1.0f32, -2.0, 3.0];
+        for _ in 0..200 {
+            let g = p.clone();
+            opt.step(&mut p, &g, lr);
+        }
+        p.iter().map(|x| x.abs()).fold(0.0, f32::max)
+    }
+
+    #[test]
+    fn all_optimizers_converge_on_quadratic() {
+        assert!(quadratic_converges(&mut Sgd { weight_decay: 0.0 }, 0.1) < 1e-3);
+        assert!(quadratic_converges(&mut SgdMomentum::new(3, 0.9, 0.0), 0.05) < 1e-3);
+        assert!(quadratic_converges(&mut Adam::new(3), 0.05) < 1e-2);
+        assert!(quadratic_converges(&mut RmsProp::new(3, 1e-3), 0.01) < 1e-2);
+    }
+
+    #[test]
+    fn momentum_accumulates_velocity() {
+        let mut opt = SgdMomentum::new(1, 0.9, 0.0);
+        let mut p = vec![0.0f32];
+        opt.step(&mut p, &[1.0], 1.0);
+        assert_eq!(p[0], -1.0);
+        opt.step(&mut p, &[1.0], 1.0);
+        // v = 0.9*1 + 1 = 1.9 → p = -1 - 1.9 = -2.9
+        assert!((p[0] + 2.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn weight_decay_shrinks_params() {
+        let mut opt = Sgd { weight_decay: 0.1 };
+        let mut p = vec![1.0f32];
+        opt.step(&mut p, &[0.0], 0.5);
+        assert!((p[0] - 0.95).abs() < 1e-6);
+    }
+
+    #[test]
+    fn factory_builds_each_kind() {
+        for kind in [
+            OptimizerKind::Sgd,
+            OptimizerKind::SgdMomentum,
+            OptimizerKind::Adam,
+            OptimizerKind::RmsProp,
+        ] {
+            let o = make_optimizer(kind, 4, 0.9, 0.0);
+            assert!(!o.name().is_empty());
+        }
+    }
+}

@@ -1,0 +1,143 @@
+//! Learning-rate schedules.
+//!
+//! Large-batch runs follow Goyal et al. [7] / Appendix E: linear warmup
+//! from base to peak over the first steps, then decay. The Transformer
+//! uses warmup + inverse-sqrt (Vaswani et al.).
+
+use crate::config::train::ScheduleKind;
+
+/// Resolved schedule: maps step → learning rate.
+#[derive(Debug, Clone)]
+pub struct LrSchedule {
+    pub kind: ScheduleKind,
+    pub base_lr: f64,
+    /// peak LR for warmup schedules (defaults to base_lr when no scaling)
+    pub peak_lr: f64,
+    pub total_steps: usize,
+    /// step-decay boundaries as fractions of total (ResNet-style 30/60/90)
+    pub decay_at: Vec<f64>,
+}
+
+impl LrSchedule {
+    pub fn constant(lr: f64) -> Self {
+        LrSchedule {
+            kind: ScheduleKind::Constant,
+            base_lr: lr,
+            peak_lr: lr,
+            total_steps: 0,
+            decay_at: vec![],
+        }
+    }
+
+    /// Paper-style large-batch schedule: linear warmup base→peak over
+    /// `warmup` steps, then constant at peak.
+    pub fn warmup_linear(base: f64, peak: f64, warmup: usize) -> Self {
+        LrSchedule {
+            kind: ScheduleKind::LinearWarmup { warmup },
+            base_lr: base,
+            peak_lr: peak,
+            total_steps: 0,
+            decay_at: vec![],
+        }
+    }
+
+    /// Step decay by `gamma` at the given fractions of `total_steps`.
+    pub fn step_decay(lr: f64, gamma: f64, total_steps: usize, at: Vec<f64>) -> Self {
+        LrSchedule {
+            kind: ScheduleKind::StepDecay { gamma },
+            base_lr: lr,
+            peak_lr: lr,
+            total_steps,
+            decay_at: at,
+        }
+    }
+
+    pub fn warmup_invsqrt(peak: f64, warmup: usize) -> Self {
+        LrSchedule {
+            kind: ScheduleKind::WarmupInvSqrt { warmup },
+            base_lr: 0.0,
+            peak_lr: peak,
+            total_steps: 0,
+            decay_at: vec![],
+        }
+    }
+
+    pub fn lr_at(&self, step: usize) -> f64 {
+        match self.kind {
+            ScheduleKind::Constant => self.base_lr,
+            ScheduleKind::StepDecay { gamma } => {
+                let mut lr = self.base_lr;
+                for &frac in &self.decay_at {
+                    if step as f64 >= frac * self.total_steps as f64 {
+                        lr *= gamma;
+                    }
+                }
+                lr
+            }
+            ScheduleKind::LinearWarmup { warmup } => {
+                if warmup == 0 || step >= warmup {
+                    self.peak_lr
+                } else {
+                    self.base_lr
+                        + (self.peak_lr - self.base_lr) * (step as f64 / warmup as f64)
+                }
+            }
+            ScheduleKind::WarmupInvSqrt { warmup } => {
+                let w = warmup.max(1) as f64;
+                let s = (step + 1) as f64;
+                if s <= w {
+                    self.peak_lr * s / w
+                } else {
+                    self.peak_lr * (w / s).sqrt()
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_constant() {
+        let s = LrSchedule::constant(0.1);
+        assert_eq!(s.lr_at(0), 0.1);
+        assert_eq!(s.lr_at(1000), 0.1);
+    }
+
+    #[test]
+    fn warmup_linear_ramps_then_holds() {
+        let s = LrSchedule::warmup_linear(0.1, 0.8, 10);
+        assert!((s.lr_at(0) - 0.1).abs() < 1e-12);
+        assert!((s.lr_at(5) - 0.45).abs() < 1e-12);
+        assert_eq!(s.lr_at(10), 0.8);
+        assert_eq!(s.lr_at(100), 0.8);
+    }
+
+    #[test]
+    fn step_decay_at_fractions() {
+        let s = LrSchedule::step_decay(1.0, 0.1, 100, vec![0.5, 0.75]);
+        assert_eq!(s.lr_at(0), 1.0);
+        assert_eq!(s.lr_at(49), 1.0);
+        assert!((s.lr_at(50) - 0.1).abs() < 1e-12);
+        assert!((s.lr_at(75) - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn invsqrt_peaks_at_warmup() {
+        let s = LrSchedule::warmup_invsqrt(0.4, 8);
+        let peak = s.lr_at(7);
+        assert!((peak - 0.4).abs() < 1e-12);
+        assert!(s.lr_at(3) < peak);
+        assert!(s.lr_at(31) < peak);
+        // invsqrt: lr(4w-1) = peak/2
+        assert!((s.lr_at(31) - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn warmup_zero_is_constant_peak() {
+        let s = LrSchedule::warmup_linear(0.1, 0.8, 0);
+        assert_eq!(s.lr_at(0), 0.8);
+    }
+}

@@ -1,0 +1,87 @@
+//! Float comparison and vector helpers shared by tests and stats.
+
+/// Relative-plus-absolute tolerance comparison, mirroring
+/// `numpy.allclose` semantics with rtol=1e-5, atol=1e-6.
+pub fn approx_eq(a: f32, b: f32) -> bool {
+    approx_eq_eps(a, b, 1e-5, 1e-6)
+}
+
+pub fn approx_eq_eps(a: f32, b: f32, rtol: f32, atol: f32) -> bool {
+    if a == b {
+        return true;
+    }
+    if a.is_nan() || b.is_nan() {
+        return false;
+    }
+    (a - b).abs() <= atol + rtol * b.abs().max(a.abs())
+}
+
+/// Elementwise allclose over slices; returns the first failing index.
+pub fn allclose(a: &[f32], b: &[f32], rtol: f32, atol: f32) -> Result<(), usize> {
+    assert_eq!(a.len(), b.len(), "allclose: length mismatch");
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        if !approx_eq_eps(x, y, rtol, atol) {
+            return Err(i);
+        }
+    }
+    Ok(())
+}
+
+/// L2 norm with f64 accumulation (gradients can have 1e7+ elements;
+/// f32 accumulation loses several digits there).
+pub fn l2_norm(xs: &[f32]) -> f64 {
+    xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+}
+
+/// Dot product with f64 accumulation.
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+}
+
+/// Mean of a slice (f64 accumulation).
+pub fn mean(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn approx_eq_basic() {
+        assert!(approx_eq(1.0, 1.0));
+        assert!(approx_eq(1.0, 1.0 + 1e-7));
+        assert!(!approx_eq(1.0, 1.01));
+        assert!(!approx_eq(f32::NAN, f32::NAN));
+        assert!(approx_eq(0.0, 1e-7));
+    }
+
+    #[test]
+    fn allclose_reports_first_bad_index() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [1.0f32, 2.5, 3.0];
+        assert_eq!(allclose(&a, &b, 1e-5, 1e-6), Err(1));
+        assert_eq!(allclose(&a, &a, 1e-5, 1e-6), Ok(()));
+    }
+
+    #[test]
+    fn l2_norm_known() {
+        assert!((l2_norm(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+        assert_eq!(l2_norm(&[]), 0.0);
+    }
+
+    #[test]
+    fn dot_known() {
+        assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+    }
+
+    #[test]
+    fn mean_known() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(mean(&[]), 0.0);
+    }
+}

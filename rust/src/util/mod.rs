@@ -1,0 +1,16 @@
+//! Small shared utilities: deterministic RNG, selection algorithms,
+//! float helpers and wall-clock timers.
+//!
+//! Everything here is dependency-free on purpose: the image has no
+//! crates.io access beyond the vendored set, so `rand`/`ordered-float`
+//! equivalents are implemented (and tested) in-repo.
+
+pub mod floats;
+pub mod rng;
+pub mod select;
+pub mod timer;
+
+pub use floats::{approx_eq, approx_eq_eps, l2_norm};
+pub use rng::Rng;
+pub use select::{kth_largest_magnitude, top_k_indices_by_magnitude};
+pub use timer::Timer;

@@ -1,0 +1,198 @@
+//! Magnitude-based selection primitives used by the compressors.
+//!
+//! The compression hot path needs "indices of the k largest |x_i|" without
+//! a full sort. We provide:
+//!  - `kth_largest_magnitude`: quickselect threshold (O(n) expected)
+//!  - `top_k_indices_by_magnitude`: exact top-k index set
+//!  - `top_k_via_heap`: bounded binary-heap variant (better for tiny k)
+//!
+//! All routines treat NaN as magnitude 0 so a corrupted gradient cannot
+//! poison the ordering (sync-SGD asserts catch NaNs separately).
+
+#[inline]
+fn mag(x: f32) -> f32 {
+    let a = x.abs();
+    if a.is_nan() {
+        0.0
+    } else {
+        a
+    }
+}
+
+/// Magnitude of the k-th largest |x| (1-indexed: k=1 → max).
+/// Expected O(n) via quickselect over a scratch copy of magnitudes.
+pub fn kth_largest_magnitude(xs: &[f32], k: usize) -> f32 {
+    assert!(k >= 1 && k <= xs.len(), "k={k} out of range n={}", xs.len());
+    let mut m: Vec<f32> = xs.iter().map(|&x| mag(x)).collect();
+    // select_nth_unstable_by puts the element with the given order index
+    // in place; index k-1 in descending order.
+    let idx = k - 1;
+    let (_, kth, _) =
+        m.select_nth_unstable_by(idx, |a, b| b.partial_cmp(a).unwrap());
+    *kth
+}
+
+/// Exact indices of the k largest-magnitude entries.
+///
+/// Ties at the threshold are broken by lowest index so the result is a
+/// deterministic function of the input — important because CLT-k
+/// broadcasts this set to every worker, and workers must agree.
+pub fn top_k_indices_by_magnitude(xs: &[f32], k: usize) -> Vec<u32> {
+    let n = xs.len();
+    assert!(k <= n, "k={k} > n={n}");
+    if k == 0 {
+        return Vec::new();
+    }
+    if k == n {
+        return (0..n as u32).collect();
+    }
+    let thresh = kth_largest_magnitude(xs, k);
+    // First take everything strictly above the threshold, then fill the
+    // remainder with ties (== thresh) in index order.
+    let mut out = Vec::with_capacity(k);
+    let mut ties = Vec::new();
+    for (i, &x) in xs.iter().enumerate() {
+        let m = mag(x);
+        if m > thresh {
+            out.push(i as u32);
+        } else if m == thresh {
+            ties.push(i as u32);
+        }
+    }
+    for &t in &ties {
+        if out.len() == k {
+            break;
+        }
+        out.push(t);
+    }
+    debug_assert_eq!(out.len(), k);
+    out.sort_unstable();
+    out
+}
+
+/// Heap-based exact top-k; O(n log k). Faster than quickselect when
+/// k ≪ n because it avoids the O(n) scratch copy. Same tie-breaking
+/// contract (lowest index wins among equal magnitudes).
+pub fn top_k_via_heap(xs: &[f32], k: usize) -> Vec<u32> {
+    use std::cmp::Ordering;
+    use std::collections::BinaryHeap;
+
+    // Min-heap of (magnitude, Reverse(index)): the root is the *weakest*
+    // kept element. An incoming element replaces the root if it has a
+    // strictly larger magnitude, or an equal magnitude with smaller index.
+    #[derive(PartialEq)]
+    struct Entry {
+        m: f32,
+        i: u32,
+    }
+    impl Eq for Entry {}
+    impl PartialOrd for Entry {
+        fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
+            Some(self.cmp(o))
+        }
+    }
+    impl Ord for Entry {
+        fn cmp(&self, o: &Self) -> Ordering {
+            // BinaryHeap is a max-heap; invert so the weakest is on top.
+            // weaker = smaller magnitude, or equal magnitude w/ larger idx.
+            o.m.partial_cmp(&self.m)
+                .unwrap()
+                .then_with(|| self.i.cmp(&o.i))
+        }
+    }
+
+    let n = xs.len();
+    assert!(k <= n, "k={k} > n={n}");
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut heap: BinaryHeap<Entry> = BinaryHeap::with_capacity(k + 1);
+    for (i, &x) in xs.iter().enumerate() {
+        let e = Entry {
+            m: mag(x),
+            i: i as u32,
+        };
+        if heap.len() < k {
+            heap.push(e);
+        } else {
+            let weakest = heap.peek().unwrap();
+            let stronger = e.m > weakest.m || (e.m == weakest.m && e.i < weakest.i);
+            if stronger {
+                heap.pop();
+                heap.push(e);
+            }
+        }
+    }
+    let mut out: Vec<u32> = heap.into_iter().map(|e| e.i).collect();
+    out.sort_unstable();
+    out
+}
+
+/// Oracle used by tests: full sort (stable w.r.t. index on ties).
+pub fn top_k_by_full_sort(xs: &[f32], k: usize) -> Vec<u32> {
+    let mut order: Vec<u32> = (0..xs.len() as u32).collect();
+    order.sort_by(|&a, &b| {
+        mag(xs[b as usize])
+            .partial_cmp(&mag(xs[a as usize]))
+            .unwrap()
+            .then_with(|| a.cmp(&b))
+    });
+    let mut out = order[..k].to_vec();
+    out.sort_unstable();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn kth_magnitude_simple() {
+        let xs = [1.0, -5.0, 3.0, -2.0];
+        assert_eq!(kth_largest_magnitude(&xs, 1), 5.0);
+        assert_eq!(kth_largest_magnitude(&xs, 2), 3.0);
+        assert_eq!(kth_largest_magnitude(&xs, 4), 1.0);
+    }
+
+    #[test]
+    fn top_k_matches_sort_oracle_random() {
+        let mut r = Rng::new(101);
+        for n in [1usize, 2, 7, 64, 999] {
+            let xs: Vec<f32> = (0..n).map(|_| r.next_normal_f32(0.0, 1.0)).collect();
+            for k in [0, 1, n / 3, n] {
+                assert_eq!(
+                    top_k_indices_by_magnitude(&xs, k),
+                    top_k_by_full_sort(&xs, k),
+                    "n={n} k={k}"
+                );
+                assert_eq!(
+                    top_k_via_heap(&xs, k),
+                    top_k_by_full_sort(&xs, k),
+                    "heap n={n} k={k}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ties_broken_by_lowest_index() {
+        let xs = [2.0f32, -2.0, 2.0, 1.0];
+        assert_eq!(top_k_indices_by_magnitude(&xs, 2), vec![0, 1]);
+        assert_eq!(top_k_via_heap(&xs, 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn nan_treated_as_zero() {
+        let xs = [f32::NAN, 1.0, -3.0];
+        assert_eq!(top_k_indices_by_magnitude(&xs, 2), vec![1, 2]);
+        assert_eq!(top_k_via_heap(&xs, 2), vec![1, 2]);
+    }
+
+    #[test]
+    fn k_zero_and_k_full() {
+        let xs = [1.0f32, 2.0];
+        assert!(top_k_indices_by_magnitude(&xs, 0).is_empty());
+        assert_eq!(top_k_indices_by_magnitude(&xs, 2), vec![0, 1]);
+    }
+}

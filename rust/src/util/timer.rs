@@ -1,0 +1,109 @@
+//! Wall-clock timing helper for coarse phase accounting in the trainer
+//! and the bench harness.
+
+use std::time::Instant;
+
+/// Simple stopwatch accumulating named phase durations.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Timer {
+    pub fn new() -> Self {
+        Timer {
+            start: Instant::now(),
+        }
+    }
+
+    /// Seconds since construction or last `reset`.
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ns(&self) -> u128 {
+        self.start.elapsed().as_nanos()
+    }
+
+    pub fn reset(&mut self) {
+        self.start = Instant::now();
+    }
+}
+
+/// Accumulates durations per named phase; used for the trainer's
+/// compute/compress/communicate breakdown.
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimes {
+    entries: Vec<(String, f64)>,
+}
+
+impl PhaseTimes {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, phase: &str, seconds: f64) {
+        if let Some(e) = self.entries.iter_mut().find(|(n, _)| n == phase) {
+            e.1 += seconds;
+        } else {
+            self.entries.push((phase.to_string(), seconds));
+        }
+    }
+
+    pub fn get(&self, phase: &str) -> f64 {
+        self.entries
+            .iter()
+            .find(|(n, _)| n == phase)
+            .map(|(_, s)| *s)
+            .unwrap_or(0.0)
+    }
+
+    pub fn total(&self) -> f64 {
+        self.entries.iter().map(|(_, s)| s).sum()
+    }
+
+    pub fn entries(&self) -> &[(String, f64)] {
+        &self.entries
+    }
+
+    pub fn merge(&mut self, other: &PhaseTimes) {
+        for (n, s) in &other.entries {
+            self.add(n, *s);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotonic() {
+        let t = Timer::new();
+        let a = t.elapsed_ns();
+        let b = t.elapsed_ns();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn phase_times_accumulate_and_merge() {
+        let mut p = PhaseTimes::new();
+        p.add("compute", 1.0);
+        p.add("compute", 0.5);
+        p.add("comm", 2.0);
+        assert_eq!(p.get("compute"), 1.5);
+        assert_eq!(p.get("missing"), 0.0);
+        assert_eq!(p.total(), 3.5);
+
+        let mut q = PhaseTimes::new();
+        q.add("comm", 1.0);
+        q.merge(&p);
+        assert_eq!(q.get("comm"), 3.0);
+    }
+}

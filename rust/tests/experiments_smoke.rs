@@ -1,0 +1,46 @@
+//! Smoke tests for the analytic (non-training) experiment drivers and
+//! the CLI surface; the training drivers are exercised by their own
+//! `--quick` paths in examples/EXPERIMENTS runs.
+
+#[test]
+fn perfmodel_experiments_run() {
+    scalecom::experiments::run("fig1b", true).unwrap();
+    scalecom::experiments::run("fig6", true).unwrap();
+    scalecom::experiments::run("figA8", true).unwrap();
+}
+
+#[test]
+fn fig1a_runs_quick() {
+    scalecom::experiments::run("fig1a", true).unwrap();
+}
+
+#[test]
+fn unknown_experiment_rejected() {
+    let err = scalecom::experiments::run("fig99", true).unwrap_err();
+    assert!(err.to_string().contains("unknown experiment"));
+}
+
+#[test]
+fn experiment_list_covers_all_paper_items() {
+    let ids: Vec<&str> = scalecom::experiments::list().iter().map(|(i, _)| *i).collect();
+    for required in [
+        "table1", "fig1a", "fig1b", "fig1c", "fig2", "fig3", "table2", "table3",
+        "fig6", "figA8", "figA1",
+    ] {
+        assert!(ids.contains(&required), "missing {required}");
+    }
+}
+
+#[test]
+fn perf_model_headline_numbers_sane() {
+    use scalecom::models::paper::paper_net;
+    use scalecom::perfmodel::{speedup, Scheme, SystemConfig};
+    let net = paper_net("resnet50").unwrap();
+    let sys = SystemConfig {
+        workers: 128,
+        minibatch_per_worker: 8,
+        ..SystemConfig::default()
+    };
+    let s = speedup(&net, &sys, Scheme::ScaleCom, Scheme::None);
+    assert!(s > 1.5 && s < 3.5, "headline 2x claim, got {s}");
+}

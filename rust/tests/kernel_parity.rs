@@ -1,0 +1,150 @@
+//! L1/L3 parity: the Pallas compress/apply artifacts must agree exactly
+//! with the native Rust compressor + low-pass memory, and the kernel-
+//! routed trainer must reproduce the native trainer's trajectory.
+//! Requires `make artifacts`.
+
+use scalecom::compress::chunk::chunk_top1_indices;
+use scalecom::compress::EfMemory;
+use scalecom::config::train::{CompressConfig, TrainConfig};
+use scalecom::runtime::{default_artifacts_dir, Engine, Manifest};
+use scalecom::trainer::Trainer;
+use scalecom::util::floats::allclose;
+use scalecom::util::rng::Rng;
+
+fn load(model: &str) -> (Engine, scalecom::runtime::LoadedModel) {
+    let manifest = Manifest::load(&default_artifacts_dir()).expect("make artifacts first");
+    let engine = Engine::cpu().unwrap();
+    let lm = engine.load_model(&manifest, model).unwrap();
+    (engine, lm)
+}
+
+#[test]
+fn kernel_compress_matches_native_chunk_top1() {
+    let (_e, lm) = load("mlp");
+    let dim = lm.mm.dim;
+    let mut rng = Rng::new(3);
+    let mut m = vec![0.0f32; dim];
+    let mut g = vec![0.0f32; dim];
+    rng.fill_normal(&mut m, 0.5);
+    rng.fill_normal(&mut g, 1.0);
+
+    let (idx, vals, m_next) = lm.kernel_compress(&m, &g, 0.1).unwrap();
+
+    // native selection on the same EF gradient
+    let ef: Vec<f32> = m.iter().zip(&g).map(|(a, b)| a + b).collect();
+    let native_idx = chunk_top1_indices(&ef, lm.mm.chunk);
+    assert_eq!(idx, native_idx, "selection parity");
+    let native_vals: Vec<f32> = native_idx.iter().map(|&i| ef[i as usize]).collect();
+    assert!(allclose(&vals, &native_vals, 1e-5, 1e-6).is_ok());
+
+    // native memory update
+    let mut mem = EfMemory::new(dim, 0.1);
+    mem.set_memory(m.clone());
+    mem.update_after_send(&g, &idx);
+    if let Err(i) = allclose(&m_next, mem.memory(), 1e-4, 1e-5) {
+        panic!(
+            "memory parity failed at {i}: kernel={} native={}",
+            m_next[i],
+            mem.memory()[i]
+        );
+    }
+}
+
+#[test]
+fn kernel_apply_matches_native_follower() {
+    let (_e, lm) = load("mlp");
+    let dim = lm.mm.dim;
+    let k = lm.mm.k;
+    let mut rng = Rng::new(5);
+    let mut m = vec![0.0f32; dim];
+    let mut g = vec![0.0f32; dim];
+    rng.fill_normal(&mut m, 0.5);
+    rng.fill_normal(&mut g, 1.0);
+    let idx = rng.sample_indices(dim, k);
+
+    let (vals, m_next) = lm.kernel_apply(&m, &g, &idx, 0.3).unwrap();
+    let ef: Vec<f32> = m.iter().zip(&g).map(|(a, b)| a + b).collect();
+    let native_vals: Vec<f32> = idx.iter().map(|&i| ef[i as usize]).collect();
+    assert!(allclose(&vals, &native_vals, 1e-5, 1e-6).is_ok());
+
+    let mut mem = EfMemory::new(dim, 0.3);
+    mem.set_memory(m.clone());
+    mem.update_after_send(&g, &idx);
+    assert!(allclose(&m_next, mem.memory(), 1e-4, 1e-5).is_ok());
+}
+
+#[test]
+fn kernel_trainer_matches_native_trainer_trajectory() {
+    let zoo = scalecom::models::zoo_model("mlp").unwrap();
+    let cfg = TrainConfig {
+        model: "mlp".into(),
+        workers: 3,
+        steps: 15,
+        batch_per_worker: zoo.batch_per_worker,
+        compress: CompressConfig {
+            scheme: "scalecom".into(),
+            rate: zoo.default_rate,
+            beta: 0.1,
+            ..CompressConfig::default()
+        },
+        ..TrainConfig::default()
+    };
+    let native = Trainer::from_config(cfg.clone()).unwrap().run().unwrap();
+    let mut kt = Trainer::from_config(cfg).unwrap();
+    kt.use_kernel = true;
+    let kernel = kt.run().unwrap();
+
+    let nl = native.column("loss").unwrap();
+    let kl = kernel.column("loss").unwrap();
+    for (t, (a, b)) in nl.iter().zip(&kl).enumerate() {
+        assert!(
+            (a - b).abs() < 2e-3 * (1.0 + a.abs()),
+            "step {t}: native {a} vs kernel {b}"
+        );
+    }
+    // same per-step compression rate
+    assert_eq!(native.column("rate"), kernel.column("rate"));
+}
+
+#[test]
+fn eval_artifact_counts_correct_predictions() {
+    let (_e, lm) = load("mlp");
+    let params = lm.load_init_params().unwrap();
+    let zoo = scalecom::models::zoo_model("mlp").unwrap();
+    let ds = zoo.dataset(1);
+    let batch = ds.eval_batch(lm.mm.batch);
+    let (loss, correct) = lm.eval_step(&params, &batch).unwrap();
+    assert!(loss > 0.0 && loss.is_finite());
+    assert!(correct >= 0.0 && correct <= lm.mm.batch as f32);
+}
+
+#[test]
+fn train_step_rejects_wrong_shapes() {
+    let (_e, lm) = load("mlp");
+    let params = lm.load_init_params().unwrap();
+    let zoo = scalecom::models::zoo_model("mlp").unwrap();
+    let ds = zoo.dataset(1);
+    let mut batch = ds.batch(0, 1, 0, lm.mm.batch);
+    batch.x.pop(); // corrupt
+    assert!(lm.train_step(&params, &batch).is_err());
+
+    let short_params = vec![0.0f32; lm.mm.dim - 1];
+    let batch2 = ds.batch(0, 1, 0, lm.mm.batch);
+    assert!(lm.train_step(&short_params, &batch2).is_err());
+}
+
+#[test]
+fn gradients_differ_across_worker_shards() {
+    let (_e, lm) = load("mlp");
+    let params = lm.load_init_params().unwrap();
+    let zoo = scalecom::models::zoo_model("mlp").unwrap();
+    let ds = zoo.dataset(1);
+    let b0 = ds.batch(0, 2, 0, lm.mm.batch);
+    let b1 = ds.batch(1, 2, 0, lm.mm.batch);
+    let (_, g0) = lm.train_step(&params, &b0).unwrap();
+    let (_, g1) = lm.train_step(&params, &b1).unwrap();
+    assert_ne!(g0, g1, "different shards must give different gradients");
+    // but statistically correlated (same distribution) — cosine < 1
+    let cos = scalecom::stats::cosine_distance(&g0, &g1);
+    assert!(cos < 0.9, "shard gradients should correlate, dist={cos}");
+}

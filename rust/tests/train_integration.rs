@@ -1,0 +1,178 @@
+//! Integration tests over the full three-layer stack (PJRT artifacts +
+//! coordinator + trainer). Requires `make artifacts`.
+
+use scalecom::config::train::{CompressConfig, TrainConfig};
+use scalecom::trainer::Trainer;
+
+fn base_cfg(model: &str, scheme: &str, workers: usize, steps: usize) -> TrainConfig {
+    let zoo = scalecom::models::zoo_model(model).unwrap();
+    TrainConfig {
+        model: model.to_string(),
+        workers,
+        steps,
+        batch_per_worker: zoo.batch_per_worker,
+        compress: CompressConfig {
+            scheme: scheme.to_string(),
+            rate: zoo.default_rate,
+            ..CompressConfig::default()
+        },
+        ..TrainConfig::default()
+    }
+}
+
+#[test]
+fn mlp_dense_baseline_learns() {
+    let log = Trainer::from_config(base_cfg("mlp", "none", 2, 60))
+        .unwrap()
+        .run()
+        .unwrap();
+    let first = log.rows.first().unwrap()[1];
+    let last = log.tail_mean("loss", 10).unwrap();
+    assert!(
+        last < first * 0.3,
+        "loss should drop sharply: {first} -> {last}"
+    );
+}
+
+#[test]
+fn mlp_scalecom_reaches_parity_with_dense() {
+    let dense = Trainer::from_config(base_cfg("mlp", "none", 4, 200))
+        .unwrap()
+        .run()
+        .unwrap();
+    // table-2 recipe: short dense warmup (<10% of steps) then compress
+    let mut comp_cfg = base_cfg("mlp", "scalecom", 4, 200);
+    comp_cfg.compress.warmup_steps = 10;
+    let comp = Trainer::from_config(comp_cfg).unwrap().run().unwrap();
+    let dense_loss = dense.tail_mean("loss", 20).unwrap();
+    let comp_loss = comp.tail_mean("loss", 20).unwrap();
+    // Table-2-style parity: compressed within a small absolute gap.
+    assert!(
+        (comp_loss - dense_loss).abs() < 0.35,
+        "dense={dense_loss:.4} scalecom={comp_loss:.4}"
+    );
+}
+
+#[test]
+fn training_is_deterministic_for_fixed_seed() {
+    let a = Trainer::from_config(base_cfg("mlp", "scalecom", 3, 20))
+        .unwrap()
+        .run()
+        .unwrap();
+    let b = Trainer::from_config(base_cfg("mlp", "scalecom", 3, 20))
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(a.column("loss"), b.column("loss"));
+    let mut cfg = base_cfg("mlp", "scalecom", 3, 20);
+    cfg.seed = 7;
+    let c = Trainer::from_config(cfg).unwrap().run().unwrap();
+    assert_ne!(a.column("loss"), c.column("loss"));
+}
+
+#[test]
+fn ring_and_ps_topologies_give_identical_updates() {
+    let mut ps_cfg = base_cfg("mlp", "scalecom", 4, 30);
+    ps_cfg.fabric_topology = "ps".into();
+    let mut ring_cfg = base_cfg("mlp", "scalecom", 4, 30);
+    ring_cfg.fabric_topology = "ring".into();
+    let ps = Trainer::from_config(ps_cfg).unwrap().run().unwrap();
+    let ring = Trainer::from_config(ring_cfg).unwrap().run().unwrap();
+    // Functionally identical reduction; only the cost model differs.
+    assert_eq!(ps.column("loss"), ring.column("loss"));
+    assert_ne!(ps.column("comm_time_s"), ring.column("comm_time_s"));
+}
+
+#[test]
+fn compression_warmup_goes_dense_first() {
+    let mut cfg = base_cfg("mlp", "scalecom", 2, 10);
+    cfg.compress.warmup_steps = 5;
+    let log = Trainer::from_config(cfg).unwrap().run().unwrap();
+    let rates = log.column("rate").unwrap();
+    for t in 0..5 {
+        assert_eq!(rates[t], 1.0, "step {t} should be dense warmup");
+    }
+    for t in 5..10 {
+        assert!(rates[t] > 10.0, "step {t} should be compressed");
+    }
+}
+
+#[test]
+fn comm_bytes_reflect_compression_rate() {
+    let dense = Trainer::from_config(base_cfg("mlp", "none", 4, 5))
+        .unwrap()
+        .run()
+        .unwrap();
+    let comp = Trainer::from_config(base_cfg("mlp", "scalecom", 4, 5))
+        .unwrap()
+        .run()
+        .unwrap();
+    let dense_up = dense.last("bytes_up").unwrap();
+    let comp_up = comp.last("bytes_up").unwrap();
+    // ~92x rate, 8B sparse pairs vs 4B dense → ~46x fewer bytes
+    assert!(
+        dense_up / comp_up > 20.0,
+        "dense {dense_up} vs compressed {comp_up}"
+    );
+}
+
+#[test]
+fn eval_reports_high_accuracy_after_training() {
+    let mut cfg = base_cfg("mlp", "scalecom", 4, 120);
+    cfg.eval_every = 0;
+    let mut t = Trainer::from_config(cfg).unwrap();
+    t.run().unwrap();
+    let (_, acc) = t.evaluate().unwrap();
+    assert!(acc > 0.9, "eval accuracy {acc}");
+}
+
+#[test]
+fn all_schemes_run_end_to_end_briefly() {
+    for scheme in [
+        "none",
+        "scalecom",
+        "scalecom-exact",
+        "local-topk",
+        "true-topk",
+        "random-k",
+        "gtop-k",
+    ] {
+        let log = Trainer::from_config(base_cfg("mlp", scheme, 3, 6))
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(log.rows.len(), 6, "{scheme}");
+        let loss = log.last("loss").unwrap();
+        assert!(loss.is_finite(), "{scheme} produced loss {loss}");
+    }
+}
+
+#[test]
+fn per_layer_flops_rule_runs_and_reports_rate() {
+    let mut cfg = base_cfg("cnn", "scalecom", 2, 6);
+    cfg.compress.use_flops_rule = true;
+    let log = Trainer::from_config(cfg).unwrap().run().unwrap();
+    let rate = log.last("rate").unwrap();
+    assert!(rate > 5.0, "layered rate {rate}");
+}
+
+#[test]
+fn beta_switch_takes_effect() {
+    let mut cfg = base_cfg("mlp", "scalecom", 2, 10);
+    cfg.compress.beta = 0.1;
+    let mut t = Trainer::from_config(cfg).unwrap();
+    t.beta_switch = Some((5, 1.0));
+    t.run().unwrap();
+    assert_eq!(t.coordinator.memories[0].beta(), 1.0);
+}
+
+#[test]
+fn batch_size_mismatch_is_rejected() {
+    let mut cfg = base_cfg("mlp", "none", 2, 5);
+    cfg.batch_per_worker = 7; // artifact was lowered with 32
+    let err = match Trainer::from_config(cfg) {
+        Err(e) => e,
+        Ok(_) => panic!("mismatched batch size must be rejected"),
+    };
+    assert!(err.to_string().contains("artifact"), "{err}");
+}
