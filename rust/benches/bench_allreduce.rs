@@ -1,10 +1,21 @@
 //! Collective benchmarks: wall time of the three reduce paths (dense,
 //! shared-index sparse, gather) vs worker count — the microbench behind
-//! Fig 1(a).
+//! Fig 1(a) — plus the end-to-end compressed pipeline (chunked top-k
+//! select → sparsify → reduce → memory update) on both execution
+//! backends.
+//!
+//! Usage:
+//!   cargo bench --bench bench_allreduce [-- --quick] [-- --backend sequential|threaded]
+//!
+//! Without `--backend`, the pipeline section runs both backends so the
+//! speedup is visible side by side; the acceptance target is ≥2x for
+//! `pipeline/threaded/n8` over `pipeline/sequential/n8`.
 
 use scalecom::bench::{black_box, Bencher};
-use scalecom::comm::{Fabric, FabricConfig, Topology};
+use scalecom::comm::{Backend, Fabric, FabricConfig, Topology};
+use scalecom::compress::schemes::CltK;
 use scalecom::compress::SparseGrad;
+use scalecom::coordinator::{Coordinator, Mode};
 use scalecom::util::rng::Rng;
 
 fn fabric(n: usize, topo: Topology) -> Fabric {
@@ -15,22 +26,53 @@ fn fabric(n: usize, topo: Topology) -> Fabric {
     })
 }
 
+fn rand_grads(rng: &mut Rng, n: usize, dim: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|_| {
+            let mut g = vec![0.0f32; dim];
+            rng.fill_normal(&mut g, 1.0);
+            g
+        })
+        .collect()
+}
+
+/// One full compressed step — CLT-k chunked selection over the ring —
+/// on the chosen backend. This is the "chunked top-k + ring reduce" path
+/// the threaded engine is built to accelerate.
+fn bench_pipeline(b: &mut Bencher, backend: Backend, n: usize, dim: usize, rate: usize) {
+    let mut coord = Coordinator::new(
+        n,
+        dim,
+        Mode::Compressed(Box::new(CltK::chunked(rate))),
+        0.5,
+        (dim / rate).max(1),
+        fabric(n, Topology::Ring),
+        0,
+    )
+    .with_backend(backend);
+    let mut rng = Rng::new(n as u64);
+    let grads = rand_grads(&mut rng, n, dim);
+    let mut t = 0usize;
+    b.bench(&format!("pipeline/{}/n{n}", backend.label()), || {
+        black_box(coord.step(t, &grads));
+        t += 1;
+    });
+}
+
 fn main() {
-    let quick = std::env::args().any(|a| a == "--quick");
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let backends = scalecom::comm::parallel::backends_from_args(&args);
+
     let mut b = if quick { Bencher::quick() } else { Bencher::new() };
     let dim: usize = if quick { 100_000 } else { 1_000_000 };
     let rate = 112;
     let k = dim / rate;
 
+    // --- raw collectives (cost-model fabric, sequential execution) ------
     for n in [4usize, 16, 64] {
         let mut rng = Rng::new(n as u64);
-        let grads: Vec<Vec<f32>> = (0..n)
-            .map(|_| {
-                let mut g = vec![0.0f32; dim];
-                rng.fill_normal(&mut g, 1.0);
-                g
-            })
-            .collect();
+        let grads = rand_grads(&mut rng, n, dim);
 
         b.bench(&format!("dense_allreduce/n{n}"), || {
             let mut f = fabric(n, Topology::ParameterServer);
@@ -69,5 +111,32 @@ fn main() {
             let mut f = fabric(n, Topology::Ring);
             black_box(f.sparse_allreduce_shared(&sparses, 0));
         });
+
+        // threaded channel collective over real worker threads
+        b.bench(&format!("threaded_dense_allreduce/n{n}"), || {
+            black_box(scalecom::runtime::threaded::dense_allreduce_avg(&grads));
+        });
+    }
+
+    // --- full pipeline: backend comparison ------------------------------
+    println!("# pipeline = EF-grad + chunked top-k select + sparsify + ring reduce + memory update");
+    for n in [2usize, 8] {
+        for &backend in &backends {
+            bench_pipeline(&mut b, backend, n, dim, rate);
+        }
+    }
+    if backends.len() == 2 {
+        let find = |name: &str| {
+            b.results()
+                .iter()
+                .find(|r| r.name == name)
+                .map(|r| r.median_ns)
+        };
+        if let (Some(seq), Some(thr)) = (
+            find("pipeline/sequential/n8"),
+            find("pipeline/threaded/n8"),
+        ) {
+            println!("# pipeline n8 speedup (threaded vs sequential): {:.2}x", seq / thr);
+        }
     }
 }

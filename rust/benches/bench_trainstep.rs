@@ -1,18 +1,31 @@
 //! End-to-end training-step benchmark (the Fig 6-style breakdown,
 //! measured on the real three-layer stack): PJRT forward/backward,
-//! compression, reduce, optimizer — per model, per scheme.
+//! compression, reduce, optimizer — per model, per scheme, per backend.
 //!
 //! Requires `make artifacts`.
+//!
+//! Usage:
+//!   cargo bench --bench bench_trainstep [-- --quick] [-- --backend sequential|threaded]
+//!
+//! Without `--backend`, every configuration runs on both backends.
 
 use scalecom::bench::Bencher;
+use scalecom::comm::Backend;
 use scalecom::config::train::TrainConfig;
 use scalecom::trainer::Trainer;
 
-fn bench_model(b: &mut Bencher, model: &str, scheme: &str, workers: usize) {
+fn bench_model(
+    b: &mut Bencher,
+    model: &str,
+    scheme: &str,
+    workers: usize,
+    backend: Backend,
+) {
     let mut cfg = TrainConfig {
         model: model.to_string(),
         workers,
         steps: 1,
+        backend: backend.label().to_string(),
         ..TrainConfig::default()
     };
     if let Ok(zoo) = scalecom::models::zoo_model(model) {
@@ -28,23 +41,31 @@ fn bench_model(b: &mut Bencher, model: &str, scheme: &str, workers: usize) {
             return;
         }
     };
-    b.bench(&format!("trainstep/{model}/{scheme}/w{workers}"), || {
-        trainer.run().expect("train step");
-    });
+    b.bench(
+        &format!("trainstep/{model}/{scheme}/w{workers}/{}", backend.label()),
+        || {
+            trainer.run().expect("train step");
+        },
+    );
 }
 
 fn main() {
-    let quick = std::env::args().any(|a| a == "--quick");
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let backends = scalecom::comm::parallel::backends_from_args(&args);
+
     let mut b = if quick { Bencher::quick() } else { Bencher::new() };
     b.measure_s = if quick { 0.2 } else { 2.0 };
 
-    for model in ["mlp", "cnn", "transformer", "lstm"] {
-        for scheme in ["none", "scalecom", "local-topk"] {
-            bench_model(&mut b, model, scheme, 4);
+    for &backend in &backends {
+        for model in ["mlp", "cnn", "transformer", "lstm"] {
+            for scheme in ["none", "scalecom", "local-topk"] {
+                bench_model(&mut b, model, scheme, 4, backend);
+            }
         }
-    }
-    // worker scaling on the cheapest model
-    for workers in [2usize, 8, 16] {
-        bench_model(&mut b, "mlp", "scalecom", workers);
+        // worker scaling on the cheapest model
+        for workers in [2usize, 8, 16] {
+            bench_model(&mut b, "mlp", "scalecom", workers, backend);
+        }
     }
 }

@@ -113,6 +113,7 @@ SUBCOMMANDS:
                      --model mlp|cnn|transformer|transformer-med|lstm
                      --workers N --steps N --scheme scalecom|local-topk|...
                      --rate R --beta B --lr LR --topology ps|ring
+                     --backend sequential|threaded (thread-per-worker engine)
                      --config file.toml (flags override file)
   experiment <id>  regenerate a paper table/figure:
                      table1 fig1a fig1b fig1c fig2 fig3 table2 table3

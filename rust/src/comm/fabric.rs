@@ -54,6 +54,39 @@ impl Default for FabricConfig {
     }
 }
 
+/// Wire-shape summary of one gather of per-worker sparse gradients —
+/// everything the analytic cost model needs, separated from the payloads
+/// so both backends (sequential loop / threaded root) can produce it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GatherStats {
+    /// number of workers that contributed
+    pub contributions: usize,
+    /// largest single upload (sync SGD waits for the slowest worker)
+    pub max_wire_bytes: usize,
+    /// total ingress at the reducing server
+    pub total_wire_bytes: usize,
+    /// nnz of the union of all index sets (the build-up payload)
+    pub union_nnz: usize,
+}
+
+impl GatherStats {
+    pub fn from_sparses(sparses: &[SparseGrad]) -> GatherStats {
+        let union_nnz = {
+            let mut all: Vec<u32> =
+                sparses.iter().flat_map(|s| s.indices.iter().copied()).collect();
+            all.sort_unstable();
+            all.dedup();
+            all.len()
+        };
+        GatherStats {
+            contributions: sparses.len(),
+            max_wire_bytes: sparses.iter().map(|s| s.wire_bytes()).max().unwrap_or(0),
+            total_wire_bytes: sparses.iter().map(|s| s.wire_bytes()).sum(),
+            union_nnz,
+        }
+    }
+}
+
 /// Simulated fabric. All collectives are synchronous over `workers`
 /// participants; inputs are slices indexed by worker id.
 pub struct Fabric {
@@ -132,15 +165,99 @@ impl Fabric {
     }
 
     // ------------------------------------------------------------------
+    // Analytic cost entry points
+    //
+    // The cost of a collective is a pure function of its shape (worker
+    // count, payload size, topology), not of who executed it. These
+    // `record_*` methods charge that cost — plus the synchronous-SGD
+    // contribution/fault checks — without performing the reduction, so
+    // the threaded backend (`runtime::threaded`), which executes the op
+    // on worker threads via channel collectives, books *identical*
+    // `CommStats` to the sequential methods below.
+    // ------------------------------------------------------------------
+
+    /// Charge one dense all-reduce over `dim`-element f32 gradients.
+    pub fn record_dense_allreduce(&mut self, n_given: usize, dim: usize) -> CommCost {
+        self.check_contribution(n_given, "dense_allreduce");
+        let n = self.cfg.workers;
+        let bytes = dim * 4;
+        match self.cfg.topology {
+            Topology::ParameterServer => {
+                // Server port carries n uploads then n downloads.
+                self.record("dense_allreduce", bytes, bytes, 2 * n * bytes, 2)
+            }
+            Topology::Ring => {
+                // Standard ring: each port moves 2·(n-1)/n · bytes.
+                let per_port = 2 * bytes * (n - 1) / n.max(1);
+                self.record("dense_allreduce", per_port, per_port, per_port, 2 * (n - 1))
+            }
+        }
+    }
+
+    /// Charge one shared-index sparse all-reduce of `k` coordinates.
+    pub fn record_sparse_allreduce_shared(&mut self, n_given: usize, k: usize) -> CommCost {
+        self.check_contribution(n_given, "sparse_allreduce_shared");
+        let n = self.cfg.workers;
+        // Index broadcast: leader sends k·4 bytes once (tree/multicast);
+        // every follower receives k·4.
+        let idx_bytes = k * 4;
+        let val_bytes = k * 4;
+        match self.cfg.topology {
+            Topology::ParameterServer => {
+                // up: indices (leader) + values (all); server reduces
+                // in-place so the downlink carries only k values + the
+                // shared indices.
+                let up = idx_bytes + val_bytes;
+                let down = idx_bytes + val_bytes;
+                let bottleneck = n * val_bytes + idx_bytes // ingress
+                    + n * (val_bytes + idx_bytes); // egress
+                self.record("sparse_allreduce_shared", up, down, bottleneck, 3)
+            }
+            Topology::Ring => {
+                let per_port = idx_bytes + 2 * val_bytes * (n - 1) / n.max(1);
+                self.record(
+                    "sparse_allreduce_shared",
+                    per_port,
+                    per_port,
+                    per_port,
+                    2 * (n - 1) + 1,
+                )
+            }
+        }
+    }
+
+    /// Charge one gather of per-worker sparse gradients (gradient
+    /// build-up: the downlink payload is the union nnz).
+    pub fn record_sparse_gather(&mut self, gs: &GatherStats) -> CommCost {
+        self.check_contribution(gs.contributions, "sparse_gather");
+        let n = self.cfg.workers;
+        let up = gs.max_wire_bytes;
+        let down = gs.union_nnz * 8;
+        match self.cfg.topology {
+            Topology::ParameterServer => {
+                let egress = n * down;
+                self.record("sparse_gather", up, down, gs.total_wire_bytes + egress, 2)
+            }
+            Topology::Ring => {
+                // Gather around the ring: accumulated sparse unions grow as
+                // they travel; the busiest port carries ~the full union.
+                let per_port = down + up;
+                self.record("sparse_gather", per_port, per_port, per_port, n - 1)
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
     // Dense all-reduce (uncompressed baseline)
     // ------------------------------------------------------------------
 
     /// Average dense gradients across workers.
     pub fn dense_allreduce_avg(&mut self, grads: &[Vec<f32>]) -> Vec<f32> {
-        self.check_contribution(grads.len(), "dense_allreduce");
         let n = grads.len();
+        assert!(n >= 1, "dense_allreduce over no gradients");
         let dim = grads[0].len();
         assert!(grads.iter().all(|g| g.len() == dim), "dim mismatch");
+        self.record_dense_allreduce(n, dim);
         let mut out = vec![0.0f32; dim];
         for g in grads {
             for (o, &v) in out.iter_mut().zip(g) {
@@ -149,19 +266,6 @@ impl Fabric {
         }
         let inv = 1.0 / n as f32;
         out.iter_mut().for_each(|v| *v *= inv);
-
-        let bytes = dim * 4;
-        match self.cfg.topology {
-            Topology::ParameterServer => {
-                // Server port carries n uploads then n downloads.
-                self.record("dense_allreduce", bytes, bytes, 2 * n * bytes, 2);
-            }
-            Topology::Ring => {
-                // Standard ring: each port moves 2·(n-1)/n · bytes.
-                let per_port = 2 * bytes * (n - 1) / n.max(1);
-                self.record("dense_allreduce", per_port, per_port, per_port, 2 * (n - 1));
-            }
-        }
         out
     }
 
@@ -180,8 +284,8 @@ impl Fabric {
         sparses: &[SparseGrad],
         leader: usize,
     ) -> SparseGrad {
-        self.check_contribution(sparses.len(), "sparse_allreduce_shared");
         let n = sparses.len();
+        assert!(n >= 1, "sparse_allreduce over no gradients");
         assert!(leader < n, "leader {leader} out of range");
         let idx = &sparses[leader].indices;
         for (w, s) in sparses.iter().enumerate() {
@@ -191,6 +295,7 @@ impl Fabric {
             );
         }
         let k = idx.len();
+        self.record_sparse_allreduce_shared(n, k);
         let mut values = vec![0.0f32; k];
         for s in sparses {
             for (v, &x) in values.iter_mut().zip(&s.values) {
@@ -199,35 +304,7 @@ impl Fabric {
         }
         let inv = 1.0 / n as f32;
         values.iter_mut().for_each(|v| *v *= inv);
-        let out = SparseGrad::new(sparses[0].dim, idx.clone(), values);
-
-        // Index broadcast: leader sends k·4 bytes once (tree/multicast);
-        // every follower receives k·4.
-        let idx_bytes = k * 4;
-        let val_bytes = k * 4;
-        match self.cfg.topology {
-            Topology::ParameterServer => {
-                // up: indices (leader) + values (all); server reduces
-                // in-place so the downlink carries only k values + the
-                // shared indices.
-                let up = idx_bytes + val_bytes;
-                let down = idx_bytes + val_bytes;
-                let bottleneck = n * val_bytes + idx_bytes // ingress
-                    + n * (val_bytes + idx_bytes); // egress
-                self.record("sparse_allreduce_shared", up, down, bottleneck, 3);
-            }
-            Topology::Ring => {
-                let per_port = idx_bytes + 2 * val_bytes * (n - 1) / n.max(1);
-                self.record(
-                    "sparse_allreduce_shared",
-                    per_port,
-                    per_port,
-                    per_port,
-                    2 * (n - 1) + 1,
-                );
-            }
-        }
-        out
+        SparseGrad::new(sparses[0].dim, idx.clone(), values)
     }
 
     // ------------------------------------------------------------------
@@ -239,39 +316,18 @@ impl Fabric {
     /// The reduced vector's nnz is the union of all index sets — this is
     /// the Fig 1(a) build-up: downloads grow O(n).
     pub fn sparse_gather_avg(&mut self, sparses: &[SparseGrad]) -> Vec<f32> {
-        self.check_contribution(sparses.len(), "sparse_gather");
         let n = sparses.len();
+        assert!(n >= 1, "sparse_gather over no gradients");
         let dim = sparses[0].dim;
         assert!(sparses.iter().all(|s| s.dim == dim));
+        let gs = GatherStats::from_sparses(sparses);
+        self.record_sparse_gather(&gs);
         let mut acc = vec![0.0f32; dim];
         for s in sparses {
             s.add_into(&mut acc);
         }
         let inv = 1.0 / n as f32;
         acc.iter_mut().for_each(|v| *v *= inv);
-
-        // Union nnz determines the downlink payload.
-        let union_nnz = {
-            let mut all: Vec<u32> = sparses.iter().flat_map(|s| s.indices.clone()).collect();
-            all.sort_unstable();
-            all.dedup();
-            all.len()
-        };
-        let up = sparses.iter().map(|s| s.wire_bytes()).max().unwrap_or(0);
-        let down = union_nnz * 8;
-        match self.cfg.topology {
-            Topology::ParameterServer => {
-                let ingress: usize = sparses.iter().map(|s| s.wire_bytes()).sum();
-                let egress = n * down;
-                self.record("sparse_gather", up, down, ingress + egress, 2);
-            }
-            Topology::Ring => {
-                // Gather around the ring: accumulated sparse unions grow as
-                // they travel; the busiest port carries ~the full union.
-                let per_port = down + up;
-                self.record("sparse_gather", per_port, per_port, per_port, n - 1);
-            }
-        }
         acc
     }
 

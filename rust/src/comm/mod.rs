@@ -18,9 +18,11 @@
 
 pub mod cost;
 pub mod fabric;
+pub mod parallel;
 
 pub use cost::{CommCost, CommStats};
-pub use fabric::{Fabric, FabricConfig, FaultSpec, Topology};
+pub use fabric::{Fabric, FabricConfig, FaultSpec, GatherStats, Topology};
+pub use parallel::Backend;
 
 #[cfg(test)]
 mod tests {

@@ -1,0 +1,385 @@
+//! Message-passing collectives for the threaded backend.
+//!
+//! The sequential backend executes every collective as a loop on the
+//! calling thread. This module provides the concurrent counterpart: each
+//! worker runs on its own OS thread and exchanges data over `mpsc`
+//! channels wired into two fixed topologies:
+//!
+//!   - a **ring** (each worker owns one sender to its right neighbor and
+//!     one receiver from its left) carrying the commutative reduce —
+//!     standard reduce-scatter + all-gather, the algorithm Remark 3 says
+//!     CLT-k "can naturally be extended to";
+//!   - a **star** (workers → root) carrying the gather that
+//!     non-commutative schemes (local top-k) are forced into.
+//!
+//! Message counts mirror the analytic `CommCost` model: a ring all-reduce
+//! moves 2·(n−1) chunk messages of ≈len/n elements per port, exactly the
+//! `2·bytes·(n−1)/n` per-port term `Fabric` charges.
+//!
+//! ## Determinism contract
+//!
+//! Every receiver has exactly one producer and channels are FIFO, so the
+//! dataflow — and therefore every floating-point reduction order — is a
+//! pure function of (n, payload), independent of OS scheduling. Repeated
+//! threaded runs are bit-identical. Against the *sequential* backend the
+//! reduction order differs (ring order is a rotation per chunk, the
+//! sequential loop always sums worker 0..n), so f32 sums may differ by
+//! rounding; `rust/tests/backend_parity.rs` pins the tolerance
+//! (rtol 1e-5, atol 1e-6). Index sets, byte accounting, and `CommStats`
+//! match exactly.
+
+use crate::compress::SparseGrad;
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+/// Execution backend for the coordination step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Backend {
+    /// Single-threaded loops over workers (the reference semantics).
+    #[default]
+    Sequential,
+    /// Thread-per-worker engine with channel collectives.
+    Threaded,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> anyhow::Result<Backend> {
+        match s {
+            "sequential" | "seq" => Ok(Backend::Sequential),
+            "threaded" | "thr" => Ok(Backend::Threaded),
+            other => {
+                anyhow::bail!("unknown backend '{other}' (expected sequential|threaded)")
+            }
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Backend::Sequential => "sequential",
+            Backend::Threaded => "threaded",
+        }
+    }
+}
+
+/// Shared bench-CLI helper: resolve a `--backend <name>` argument into
+/// the set of backends to run — both when the flag is absent, so every
+/// bench compares them side by side by default.
+pub fn backends_from_args(args: &[String]) -> Vec<Backend> {
+    match args.iter().position(|a| a == "--backend") {
+        Some(i) => {
+            let value = args
+                .get(i + 1)
+                .expect("--backend requires a value (sequential|threaded)");
+            vec![Backend::parse(value).expect("--backend sequential|threaded")]
+        }
+        None => vec![Backend::Sequential, Backend::Threaded],
+    }
+}
+
+/// One worker's endpoints in a unidirectional ring of `n` workers.
+pub struct RingNode {
+    pub id: usize,
+    pub n: usize,
+    tx_right: Sender<Vec<f32>>,
+    rx_left: Receiver<Vec<f32>>,
+}
+
+/// Build the ring: channel `i` carries messages worker `i` → `(i+1)%n`.
+pub fn ring(n: usize) -> Vec<RingNode> {
+    assert!(n >= 1);
+    let mut txs = Vec::with_capacity(n);
+    let mut rxs: Vec<Option<Receiver<Vec<f32>>>> = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = channel();
+        txs.push(tx);
+        rxs.push(Some(rx));
+    }
+    txs.into_iter()
+        .enumerate()
+        .map(|(id, tx_right)| RingNode {
+            id,
+            n,
+            tx_right,
+            rx_left: rxs[(id + n - 1) % n].take().expect("ring wiring"),
+        })
+        .collect()
+}
+
+/// Balanced chunk boundaries: chunk `c` covers `[c*len/n, (c+1)*len/n)`.
+fn chunk_bounds(len: usize, n: usize) -> Vec<(usize, usize)> {
+    (0..n).map(|c| (c * len / n, (c + 1) * len / n)).collect()
+}
+
+impl RingNode {
+    /// Ring all-reduce; `finish` is applied to this worker's fully-reduced
+    /// chunk between the reduce-scatter and all-gather phases (e.g. the
+    /// 1/n averaging scale).
+    fn allreduce_with(&self, buf: &mut [f32], finish: impl Fn(&mut [f32])) {
+        let n = self.n;
+        if n == 1 {
+            finish(buf);
+            return;
+        }
+        let bounds = chunk_bounds(buf.len(), n);
+        // Reduce-scatter: after step s, the chunk received from the left
+        // holds s+2 contributions; after n-1 steps worker w owns the
+        // complete sum of chunk (w+1)%n.
+        for s in 0..n - 1 {
+            let send_c = (self.id + n - s) % n;
+            let recv_c = (self.id + n - s - 1) % n;
+            let (lo, hi) = bounds[send_c];
+            self.tx_right.send(buf[lo..hi].to_vec()).expect("ring send");
+            let incoming = self.rx_left.recv().expect("ring recv");
+            let (lo, hi) = bounds[recv_c];
+            debug_assert_eq!(hi - lo, incoming.len());
+            for (b, v) in buf[lo..hi].iter_mut().zip(&incoming) {
+                *b += v;
+            }
+        }
+        let (lo, hi) = bounds[(self.id + 1) % n];
+        finish(&mut buf[lo..hi]);
+        // All-gather: circulate the completed chunks.
+        for s in 0..n - 1 {
+            let send_c = (self.id + 1 + n - s) % n;
+            let recv_c = (self.id + n - s) % n;
+            let (lo, hi) = bounds[send_c];
+            self.tx_right.send(buf[lo..hi].to_vec()).expect("ring send");
+            let incoming = self.rx_left.recv().expect("ring recv");
+            let (lo, hi) = bounds[recv_c];
+            debug_assert_eq!(hi - lo, incoming.len());
+            buf[lo..hi].copy_from_slice(&incoming);
+        }
+    }
+
+    /// In-place sum-all-reduce over all ring participants.
+    pub fn allreduce_sum(&self, buf: &mut [f32]) {
+        self.allreduce_with(buf, |_| {});
+    }
+
+    /// In-place average-all-reduce (sum then scale by 1/n, with the scale
+    /// applied once per chunk on its owning worker — the same `*= 1/n as
+    /// f32` the sequential fabric performs).
+    pub fn allreduce_avg(&self, buf: &mut [f32]) {
+        let inv = 1.0 / self.n as f32;
+        self.allreduce_with(buf, |chunk| {
+            chunk.iter_mut().for_each(|v| *v *= inv);
+        });
+    }
+}
+
+/// One worker's endpoint in a gather star rooted at worker 0.
+pub struct StarNode {
+    pub id: usize,
+    pub n: usize,
+    /// workers 1..n: channel to the root
+    to_root: Option<Sender<SparseGrad>>,
+    /// root only: one receiver per worker 1..n, in worker order
+    from_workers: Option<Vec<Receiver<SparseGrad>>>,
+}
+
+/// Build the star: a dedicated channel from every worker to worker 0, so
+/// the root drains contributions in worker order regardless of scheduling.
+pub fn star(n: usize) -> Vec<StarNode> {
+    assert!(n >= 1);
+    let mut senders = Vec::with_capacity(n.saturating_sub(1));
+    let mut receivers = Vec::with_capacity(n.saturating_sub(1));
+    for _ in 1..n {
+        let (tx, rx) = channel();
+        senders.push(Some(tx));
+        receivers.push(rx);
+    }
+    (0..n)
+        .map(|id| StarNode {
+            id,
+            n,
+            to_root: if id == 0 {
+                None
+            } else {
+                senders[id - 1].take()
+            },
+            from_workers: if id == 0 { Some(receivers.drain(..).collect()) } else { None },
+        })
+        .collect()
+}
+
+impl StarNode {
+    /// Gather every worker's sparse gradient at the root. Returns
+    /// `Some(contributions)` on the root — ordered by worker id, the
+    /// root's own first — and `None` on the other workers.
+    pub fn gather(&self, contribution: SparseGrad) -> Option<Vec<SparseGrad>> {
+        match &self.from_workers {
+            Some(rxs) => {
+                let mut all = Vec::with_capacity(self.n);
+                all.push(contribution);
+                for rx in rxs {
+                    all.push(rx.recv().expect("gather recv"));
+                }
+                Some(all)
+            }
+            None => {
+                self.to_root
+                    .as_ref()
+                    .expect("non-root star node has a root sender")
+                    .send(contribution)
+                    .expect("gather send");
+                None
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::floats::allclose;
+    use crate::util::rng::Rng;
+
+    /// Run `f(node, w)` on one thread per ring node, returning results in
+    /// worker order.
+    fn on_ring<T: Send>(
+        n: usize,
+        f: impl Fn(&RingNode, usize) -> T + Sync,
+    ) -> Vec<T> {
+        let nodes = ring(n);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = nodes
+                .into_iter()
+                .map(|node| {
+                    let f = &f;
+                    s.spawn(move || f(&node, node.id))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("worker")).collect()
+        })
+    }
+
+    #[test]
+    fn ring_allreduce_sums_across_lengths_and_ns() {
+        for n in [1usize, 2, 3, 4, 7, 8] {
+            for len in [0usize, 1, 2, n.saturating_sub(1), n, 3 * n + 1, 100] {
+                let mut rng = Rng::new((n * 1000 + len) as u64);
+                let inputs: Vec<Vec<f32>> = (0..n)
+                    .map(|_| {
+                        let mut v = vec![0.0f32; len];
+                        rng.fill_normal(&mut v, 1.0);
+                        v
+                    })
+                    .collect();
+                let mut expect = vec![0.0f32; len];
+                for v in &inputs {
+                    for (e, &x) in expect.iter_mut().zip(v) {
+                        *e += x;
+                    }
+                }
+                let inputs_ref = &inputs;
+                let results = on_ring(n, |node, w| {
+                    let mut buf = inputs_ref[w].clone();
+                    node.allreduce_sum(&mut buf);
+                    buf
+                });
+                for (w, r) in results.iter().enumerate() {
+                    if let Err(i) = allclose(r, &expect, 1e-5, 1e-5) {
+                        panic!("n={n} len={len} worker {w} coord {i}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ring_allreduce_avg_divides_by_n() {
+        let n = 4;
+        let results = on_ring(n, |node, w| {
+            let mut buf = vec![(w + 1) as f32; 8];
+            node.allreduce_avg(&mut buf);
+            buf
+        });
+        // avg of 1,2,3,4 = 2.5 everywhere, on every worker
+        for r in &results {
+            assert!(r.iter().all(|&v| (v - 2.5).abs() < 1e-6), "{r:?}");
+        }
+    }
+
+    #[test]
+    fn ring_is_deterministic_across_runs() {
+        let run = || {
+            on_ring(5, |node, w| {
+                let mut buf: Vec<f32> = (0..31)
+                    .map(|i| ((w * 31 + i) as f32 * 0.7).sin())
+                    .collect();
+                node.allreduce_avg(&mut buf);
+                buf
+            })
+        };
+        let a = run();
+        let b = run();
+        // bit-identical, not just close: the dataflow fixes the fp order
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn star_gathers_in_worker_order() {
+        let n = 6;
+        let nodes = star(n);
+        let gathered = std::thread::scope(|s| {
+            let handles: Vec<_> = nodes
+                .into_iter()
+                .map(|node| {
+                    s.spawn(move || {
+                        let sg = SparseGrad::new(
+                            8,
+                            vec![node.id as u32],
+                            vec![node.id as f32],
+                        );
+                        node.gather(sg)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .filter_map(|h| h.join().expect("worker"))
+                .next()
+                .expect("root result")
+        });
+        assert_eq!(gathered.len(), n);
+        for (w, sg) in gathered.iter().enumerate() {
+            assert_eq!(sg.indices, vec![w as u32], "order must follow worker id");
+        }
+    }
+
+    #[test]
+    fn backends_from_args_resolves_filter_or_both() {
+        let to = |v: &[&str]| v.iter().map(|s| s.to_string()).collect::<Vec<String>>();
+        assert_eq!(
+            backends_from_args(&to(&["bench", "--quick"])),
+            vec![Backend::Sequential, Backend::Threaded]
+        );
+        assert_eq!(
+            backends_from_args(&to(&["bench", "--backend", "threaded"])),
+            vec![Backend::Threaded]
+        );
+        assert_eq!(
+            backends_from_args(&to(&["bench", "--backend", "seq"])),
+            vec![Backend::Sequential]
+        );
+    }
+
+    #[test]
+    fn backend_parse_roundtrip() {
+        assert_eq!(Backend::parse("sequential").unwrap(), Backend::Sequential);
+        assert_eq!(Backend::parse("seq").unwrap(), Backend::Sequential);
+        assert_eq!(Backend::parse("threaded").unwrap(), Backend::Threaded);
+        assert!(Backend::parse("gpu").is_err());
+        assert_eq!(Backend::Threaded.label(), "threaded");
+        assert_eq!(Backend::default(), Backend::Sequential);
+    }
+
+    #[test]
+    fn single_worker_ring_is_identity_for_sum() {
+        let results = on_ring(1, |node, _| {
+            let mut buf = vec![1.5f32, -2.0];
+            node.allreduce_sum(&mut buf);
+            buf
+        });
+        assert_eq!(results[0], vec![1.5, -2.0]);
+    }
+}

@@ -44,6 +44,48 @@ pub fn chunk_top1_indices(xs: &[f32], chunk_size: usize) -> Vec<u32> {
     out
 }
 
+/// Parallel `chunk_top1_indices`: fans the scan out over `threads` OS
+/// threads on spans aligned to chunk boundaries, so each chunk is scanned
+/// by exactly one thread and the concatenated result is **bit-identical**
+/// to the sequential scan (chunk argmax is chunk-local). Small inputs
+/// fall back to the sequential scan — thread spawn would dominate.
+pub fn chunk_top1_indices_parallel(
+    xs: &[f32],
+    chunk_size: usize,
+    threads: usize,
+) -> Vec<u32> {
+    assert!(chunk_size >= 1, "chunk_size must be >= 1");
+    let n = xs.len();
+    let total_chunks = n.div_ceil(chunk_size);
+    if threads <= 1 || total_chunks < 2 * threads || n < (1 << 13) {
+        return chunk_top1_indices(xs, chunk_size);
+    }
+    let span_elems = total_chunks.div_ceil(threads) * chunk_size;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                s.spawn(move || {
+                    let lo = (t * span_elems).min(n);
+                    let hi = ((t + 1) * span_elems).min(n);
+                    if lo >= hi {
+                        return Vec::new();
+                    }
+                    let mut ix = chunk_top1_indices(&xs[lo..hi], chunk_size);
+                    for i in &mut ix {
+                        *i += lo as u32;
+                    }
+                    ix
+                })
+            })
+            .collect();
+        let mut out = Vec::with_capacity(total_chunks);
+        for h in handles {
+            out.extend(h.join().expect("chunk-scan thread panicked"));
+        }
+        out
+    })
+}
+
 /// Top-`per_chunk`-of-each-chunk generalization (the paper's demo uses
 /// `num_send: 1`, larger values trade rate for fidelity).
 pub fn chunk_topm_indices(xs: &[f32], chunk_size: usize, per_chunk: usize) -> Vec<u32> {
@@ -101,6 +143,27 @@ impl ChunkSelect {
             ChunkSelect::ChunkedAuto => {
                 let k = k.clamp(1, xs.len());
                 chunk_top1_indices(xs, xs.len().div_ceil(k))
+            }
+        }
+    }
+
+    /// Multi-threaded `select` with identical output (the threaded
+    /// backend's hot path). Both chunk variants are chunk-local and
+    /// bit-identical under parallel scan; exact top-k merges per-span
+    /// candidates with the same global tie-breaking rule.
+    pub fn select_parallel(&self, xs: &[f32], k: usize, threads: usize) -> Vec<u32> {
+        match *self {
+            ChunkSelect::Exact => crate::util::select::top_k_indices_by_magnitude_parallel(
+                xs,
+                k.min(xs.len()),
+                threads,
+            ),
+            ChunkSelect::Chunked { chunk_size } => {
+                chunk_top1_indices_parallel(xs, chunk_size, threads)
+            }
+            ChunkSelect::ChunkedAuto => {
+                let k = k.clamp(1, xs.len());
+                chunk_top1_indices_parallel(xs, xs.len().div_ceil(k), threads)
             }
         }
     }
@@ -195,5 +258,41 @@ mod tests {
     fn nan_never_selected_over_finite() {
         let xs = [f32::NAN, 1.0, f32::NAN, 0.5];
         assert_eq!(chunk_top1_indices(&xs, 4), vec![1]);
+    }
+
+    #[test]
+    fn parallel_chunk_scan_bit_identical_to_sequential() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(42);
+        for n in [0usize, 1, 399, 400, 401, 20_000, 100_003] {
+            let xs: Vec<f32> = (0..n).map(|_| rng.next_normal_f32(0.0, 1.0)).collect();
+            for chunk in [1usize, 3, 400] {
+                for threads in [1usize, 2, 4, 7] {
+                    assert_eq!(
+                        chunk_top1_indices_parallel(&xs, chunk, threads),
+                        chunk_top1_indices(&xs, chunk),
+                        "n={n} chunk={chunk} threads={threads}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_dispatch_matches_select() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(9);
+        let xs: Vec<f32> = (0..50_000).map(|_| rng.next_normal_f32(0.0, 1.0)).collect();
+        for sel in [
+            ChunkSelect::Exact,
+            ChunkSelect::Chunked { chunk_size: 100 },
+            ChunkSelect::ChunkedAuto,
+        ] {
+            assert_eq!(
+                sel.select_parallel(&xs, 500, 4),
+                sel.select(&xs, 500),
+                "{sel:?}"
+            );
+        }
     }
 }

@@ -167,6 +167,21 @@ pub trait Compressor: Send {
     /// the cyclic leader's vector; local top-k only each worker's own).
     fn select(&mut self, step: usize, ef_grads: &[&[f32]], k: usize) -> Selection;
 
+    /// Multi-threaded `select` used by the threaded backend. The contract
+    /// is **identical output** — the backends are parity-locked — so the
+    /// default just delegates; schemes whose ranking decomposes across
+    /// spans (chunk scans, per-worker top-k) override it to fan the scan
+    /// out over `threads` worker threads.
+    fn select_parallel(
+        &mut self,
+        step: usize,
+        ef_grads: &[&[f32]],
+        k: usize,
+        _threads: usize,
+    ) -> Selection {
+        self.select(step, ef_grads, k)
+    }
+
     /// Commutative with averaging (Definition (1)): fabric may reduce.
     fn is_commutative(&self) -> bool;
 

@@ -44,6 +44,41 @@ impl Compressor for LocalTopK {
         )
     }
 
+    fn select_parallel(
+        &mut self,
+        _step: usize,
+        ef_grads: &[&[f32]],
+        k: usize,
+        threads: usize,
+    ) -> Selection {
+        // Per-worker selections are independent; batch the workers so at
+        // most `threads` OS threads run, preserving worker order.
+        let n = ef_grads.len();
+        if threads <= 1 || n <= 1 {
+            return self.select(_step, ef_grads, k);
+        }
+        let method = self.select;
+        let batch = n.div_ceil(threads.min(n));
+        let per: Vec<Vec<u32>> = std::thread::scope(|s| {
+            let handles: Vec<_> = ef_grads
+                .chunks(batch)
+                .map(|group| {
+                    s.spawn(move || {
+                        group
+                            .iter()
+                            .map(|&g| method.select(g, k))
+                            .collect::<Vec<Vec<u32>>>()
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("local top-k worker panicked"))
+                .collect()
+        });
+        Selection::PerWorker(per)
+    }
+
     fn is_commutative(&self) -> bool {
         false
     }
@@ -108,6 +143,19 @@ impl Compressor for CltK {
     fn select(&mut self, step: usize, ef_grads: &[&[f32]], k: usize) -> Selection {
         let leader = Self::leader(step, ef_grads.len());
         Selection::Shared(self.select.select(ef_grads[leader], k))
+    }
+
+    fn select_parallel(
+        &mut self,
+        step: usize,
+        ef_grads: &[&[f32]],
+        k: usize,
+        threads: usize,
+    ) -> Selection {
+        // Only the cyclic leader ranks; its chunk scan fans out across
+        // the worker threads (bit-identical — chunks are scan-local).
+        let leader = Self::leader(step, ef_grads.len());
+        Selection::Shared(self.select.select_parallel(ef_grads[leader], k, threads))
     }
 
     fn is_commutative(&self) -> bool {

@@ -80,6 +80,9 @@ pub struct TrainConfig {
     pub compress: CompressConfig,
     pub fabric_topology: String,
     pub fabric_bandwidth_gbps: f64,
+    /// Execution backend for the coordination step:
+    /// "sequential" | "threaded" (`comm::parallel::Backend`).
+    pub backend: String,
     /// Evaluate every `eval_every` steps (0 = never).
     pub eval_every: usize,
     /// Directory for artifacts (HLO + manifest).
@@ -102,6 +105,7 @@ impl Default for TrainConfig {
             compress: CompressConfig::default(),
             fabric_topology: "ps".into(),
             fabric_bandwidth_gbps: 32.0,
+            backend: "sequential".into(),
             eval_every: 0,
             artifacts_dir: "artifacts".into(),
         }
@@ -146,6 +150,7 @@ impl TrainConfig {
             },
             fabric_topology: doc.str_or("fabric.topology", &d.fabric_topology).to_string(),
             fabric_bandwidth_gbps: doc.f64_or("fabric.bandwidth_gbps", 32.0),
+            backend: doc.str_or("train.backend", &d.backend).to_string(),
             eval_every: doc.usize_or("train.eval_every", 0),
             artifacts_dir: doc.str_or("train.artifacts_dir", &d.artifacts_dir).to_string(),
         };
@@ -163,6 +168,7 @@ impl TrainConfig {
             "beta must be in (0, 1]"
         );
         anyhow::ensure!(self.compress.rate >= 1, "compression rate must be >= 1");
+        crate::comm::Backend::parse(&self.backend)?;
         Ok(())
     }
 
@@ -219,5 +225,16 @@ mod tests {
     fn unknown_schedule_rejected() {
         let doc = TomlDoc::parse("[train]\nschedule = \"cosine\"\n").unwrap();
         assert!(TrainConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn backend_from_toml_and_validation() {
+        let doc = TomlDoc::parse("[train]\nbackend = \"threaded\"\n").unwrap();
+        let cfg = TrainConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.backend, "threaded");
+        let mut c = TrainConfig::default();
+        assert_eq!(c.backend, "sequential");
+        c.backend = "gpu".into();
+        assert!(c.validate().is_err());
     }
 }

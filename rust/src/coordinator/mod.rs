@@ -13,10 +13,11 @@
 //!   lines 9-11: upload/reduce/download               → Fabric collectives
 //!   (warmup steps and uncompressed layers go dense, per §4)
 
-use crate::comm::{CommCost, Fabric};
+use crate::comm::{Backend, CommCost, Fabric};
 use crate::compress::{
     sparsify, Compressor, EfMemory, LayerPartition, Selection, SparseGrad,
 };
+use crate::runtime::threaded;
 
 /// What happened in one coordination step (for metrics + experiments).
 pub struct StepResult {
@@ -54,6 +55,9 @@ pub struct Coordinator {
     pub layered: Option<(LayerPartition, Vec<usize>)>,
     /// dense warmup steps (paper: 1-5 epochs uncompressed)
     pub warmup_steps: usize,
+    /// execution backend: sequential loops or thread-per-worker engine
+    /// (parity-locked in `rust/tests/backend_parity.rs`)
+    pub backend: Backend,
 }
 
 impl Coordinator {
@@ -78,6 +82,7 @@ impl Coordinator {
             k: k.clamp(1, dim),
             layered: None,
             warmup_steps,
+            backend: Backend::Sequential,
         }
     }
 
@@ -85,6 +90,12 @@ impl Coordinator {
         assert_eq!(partition.total_len(), self.dim);
         assert_eq!(partition.layers.len(), ks.len());
         self.layered = Some((partition, ks));
+        self
+    }
+
+    /// Select the execution backend (defaults to `Sequential`).
+    pub fn with_backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
         self
     }
 
@@ -122,7 +133,14 @@ impl Coordinator {
 
         let dense_path = matches!(self.mode, Mode::Dense) || t < self.warmup_steps;
         if dense_path {
-            let update = self.fabric.dense_allreduce_avg(grads);
+            let update = match self.backend {
+                Backend::Sequential => self.fabric.dense_allreduce_avg(grads),
+                Backend::Threaded => {
+                    let out = threaded::dense_allreduce_avg(grads);
+                    self.fabric.record_dense_allreduce(grads.len(), self.dim);
+                    out
+                }
+            };
             let comm = self.fabric.stats().last_cost().clone();
             return StepResult {
                 update,
@@ -135,20 +153,37 @@ impl Coordinator {
         }
 
         // --- compressed path -------------------------------------------
-        let efs = self.ef_grads(grads);
+        let efs = match self.backend {
+            Backend::Sequential => self.ef_grads(grads),
+            Backend::Threaded => threaded::parallel_ef_grads(&self.memories, grads),
+        };
         let ef_views: Vec<&[f32]> = efs.iter().map(|e| e.as_slice()).collect();
+        let backend = self.backend;
+        let n = self.n;
+        // Selection fan-out follows the machine, not the simulated worker
+        // count: 64 simulated workers on a 4-core box must not spawn 64
+        // scan threads (results are thread-count-independent by the
+        // `select_parallel` contract).
+        let threads = match backend {
+            Backend::Sequential => 1,
+            Backend::Threaded => std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(1),
+        };
         let compressor = match &mut self.mode {
             Mode::Compressed(c) => c,
             Mode::Dense => unreachable!(),
         };
         let selection = if let Some((partition, ks)) = &self.layered {
-            select_layered(compressor.as_mut(), t, &ef_views, partition, ks)
+            select_layered(compressor.as_mut(), t, &ef_views, partition, ks, threads)
+        } else if threads > 1 {
+            compressor.select_parallel(t, &ef_views, self.k, threads)
         } else {
             compressor.select(t, &ef_views, self.k)
         };
 
-        let (update, comm, sent) = match &selection {
-            Selection::Shared(idx) => {
+        let (update, comm, sent) = match (&selection, backend) {
+            (Selection::Shared(idx), Backend::Sequential) => {
                 let sparses: Vec<SparseGrad> =
                     efs.iter().map(|ef| sparsify(ef, idx)).collect();
                 let avg = self.fabric.sparse_allreduce_shared(&sparses, leader);
@@ -158,7 +193,15 @@ impl Coordinator {
                     idx.len(),
                 )
             }
-            Selection::PerWorker(per) => {
+            (Selection::Shared(idx), Backend::Threaded) => {
+                // sparsify + ring reduce + memory update on worker threads
+                let vals =
+                    threaded::exchange_shared(&mut self.memories, grads, &efs, idx);
+                let comm = self.fabric.record_sparse_allreduce_shared(n, idx.len());
+                let avg = SparseGrad::new(self.dim, idx.clone(), vals);
+                (avg.to_dense(), comm, idx.len())
+            }
+            (Selection::PerWorker(per), Backend::Sequential) => {
                 let sparses: Vec<SparseGrad> = efs
                     .iter()
                     .zip(per)
@@ -168,11 +211,23 @@ impl Coordinator {
                 let sent = per.iter().map(|p| p.len()).max().unwrap_or(0);
                 (avg, self.fabric.stats().last_cost().clone(), sent)
             }
+            (Selection::PerWorker(per), Backend::Threaded) => {
+                // sparsify + star gather + memory update on worker threads
+                let (avg, gs) =
+                    threaded::exchange_gather(&mut self.memories, grads, &efs, per);
+                let comm = self.fabric.record_sparse_gather(&gs);
+                let sent = per.iter().map(|p| p.len()).max().unwrap_or(0);
+                (avg, comm, sent)
+            }
         };
 
-        // memory update (Eqn. 5) with each worker's transmitted indices
-        for (w, mem) in self.memories.iter_mut().enumerate() {
-            mem.update_after_send(&grads[w], selection.indices_for(w));
+        // memory update (Eqn. 5) with each worker's transmitted indices —
+        // the threaded exchanges already updated each memory on its
+        // worker's thread.
+        if backend == Backend::Sequential {
+            for (w, mem) in self.memories.iter_mut().enumerate() {
+                mem.update_after_send(&grads[w], selection.indices_for(w));
+            }
         }
 
         StepResult {
@@ -188,12 +243,16 @@ impl Coordinator {
 
 /// Apply a compressor independently per layer slice with per-layer k,
 /// concatenating the global index sets (the §4 per-layer rate rule).
+/// `threads > 1` routes each layer's scan through `select_parallel`
+/// (identical output — the parity contract), so the threaded backend's
+/// selection speedup also applies to flops-rule configs.
 pub fn select_layered(
     compressor: &mut dyn Compressor,
     t: usize,
     efs: &[&[f32]],
     partition: &LayerPartition,
     ks: &[usize],
+    threads: usize,
 ) -> Selection {
     let n = efs.len();
     let mut shared: Vec<u32> = Vec::new();
@@ -207,6 +266,8 @@ pub fn select_layered(
         let sel = if !layer.compress || k >= layer.len {
             // dense layer: every coordinate selected
             Selection::Shared((0..layer.len as u32).collect())
+        } else if threads > 1 {
+            compressor.select_parallel(t, &views, k, threads)
         } else {
             compressor.select(t, &views, k)
         };

@@ -70,6 +70,9 @@ fn cmd_train(args: &mut Args) -> Result<()> {
     if let Some(t) = args.str_opt("topology") {
         cfg.fabric_topology = t;
     }
+    if let Some(b) = args.str_opt("backend") {
+        cfg.backend = b;
+    }
     cfg.eval_every = args.usize_or("eval-every", cfg.steps.max(4) / 4)?;
     cfg.seed = args.usize_or("seed", cfg.seed as usize)? as u64;
     if let Some(dir) = args.str_opt("artifacts") {
@@ -81,7 +84,7 @@ fn cmd_train(args: &mut Args) -> Result<()> {
     args.finish()?;
 
     println!(
-        "training {} | workers={} steps={} scheme={} rate={}x beta={} topo={}{}",
+        "training {} | workers={} steps={} scheme={} rate={}x beta={} topo={} backend={}{}",
         cfg.model,
         cfg.workers,
         cfg.steps,
@@ -89,6 +92,7 @@ fn cmd_train(args: &mut Args) -> Result<()> {
         cfg.compress.rate,
         cfg.compress.beta,
         cfg.fabric_topology,
+        cfg.backend,
         if use_kernel { " [L1-kernel compression]" } else { "" }
     );
     let peak = cfg.lr;

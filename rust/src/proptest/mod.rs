@@ -130,6 +130,145 @@ pub fn check_seeded<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(
     }
 }
 
+/// Definition (1) invariants, property-tested across every registered
+/// scheme: commutative compressors must hand all workers ONE shared index
+/// set whose sparse reduce is permutation-invariant; non-commutative
+/// compressors must produce per-worker sets and therefore route through
+/// the gather (build-up) collective, never the reduce.
+#[cfg(test)]
+mod definition1 {
+    use super::check;
+    use crate::comm::{Fabric, FabricConfig};
+    use crate::compress::{schemes::make_compressor, sparsify, Selection, SparseGrad};
+    use crate::coordinator::{Coordinator, Mode};
+
+    const COMMUTATIVE: &[&str] = &[
+        "scalecom",
+        "scalecom-exact",
+        "true-topk",
+        "random-k",
+        "gtop-k",
+        "sketch-k",
+    ];
+    const NON_COMMUTATIVE: &[&str] = &["local-topk"];
+
+    #[test]
+    fn commutative_schemes_share_one_set_and_reduce_is_permutation_invariant() {
+        for &scheme in COMMUTATIVE {
+            check(&format!("Definition 1: {scheme}"), 30, |g| {
+                let n = g.usize_in(2..=8);
+                let dim = g.usize_in(8..=128);
+                let k = g.usize_in(1..=dim / 2);
+                let step = g.usize_in(0..=17);
+                let grads: Vec<Vec<f32>> =
+                    (0..n).map(|_| g.f32_vec_len(dim, 1.0)).collect();
+                let views: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+                let mut c = make_compressor(scheme, dim.div_ceil(k), 9).unwrap();
+                assert!(c.is_commutative(), "{scheme} claims commutativity");
+                let idx = match c.select(step, &views, k) {
+                    Selection::Shared(ix) => ix,
+                    Selection::PerWorker(_) => {
+                        panic!("{scheme}: commutative scheme must share one index set")
+                    }
+                };
+                // Every worker sparsifies with the same set; summing the
+                // sparse vectors must not depend on worker order.
+                let sparses: Vec<SparseGrad> =
+                    grads.iter().map(|w| sparsify(w, &idx)).collect();
+                let sum_in = |order: &[usize]| -> Vec<f32> {
+                    let mut acc = sparses[order[0]].clone();
+                    for &w in &order[1..] {
+                        acc = acc.add_same_indices(&sparses[w]);
+                    }
+                    acc.values
+                };
+                let natural: Vec<usize> = (0..n).collect();
+                let mut shuffled = natural.clone();
+                g.rng().shuffle(&mut shuffled);
+                let a = sum_in(&natural);
+                let b = sum_in(&shuffled);
+                for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                    assert!(
+                        (x - y).abs() <= 1e-6 * x.abs().max(1.0),
+                        "{scheme}: reduce not permutation-invariant at {i}: {x} vs {y} \
+                         (order {shuffled:?})"
+                    );
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn non_commutative_schemes_produce_per_worker_sets() {
+        for &scheme in NON_COMMUTATIVE {
+            check(&format!("non-commutative: {scheme}"), 30, |g| {
+                let n = g.usize_in(2..=8);
+                let dim = g.usize_in(8..=128);
+                let k = g.usize_in(1..=dim / 2);
+                let grads: Vec<Vec<f32>> =
+                    (0..n).map(|_| g.f32_vec_len(dim, 1.0)).collect();
+                let views: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+                let mut c = make_compressor(scheme, dim.div_ceil(k), 9).unwrap();
+                assert!(!c.is_commutative());
+                match c.select(0, &views, k) {
+                    Selection::PerWorker(per) => assert_eq!(per.len(), n),
+                    Selection::Shared(_) => {
+                        panic!("{scheme}: non-commutative scheme must not share a set")
+                    }
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn fabric_routing_reduce_for_commutative_gather_for_non_commutative() {
+        // Through the coordinator, commutative schemes must only ever hit
+        // the reduce collective and non-commutative ones only the gather.
+        let n = 4;
+        let dim = 64;
+        let mk = |scheme: &str| {
+            let fabric = Fabric::new(FabricConfig {
+                workers: n,
+                ..FabricConfig::default()
+            });
+            Coordinator::new(
+                n,
+                dim,
+                Mode::Compressed(make_compressor(scheme, 8, 3).unwrap()),
+                1.0,
+                8,
+                fabric,
+                0,
+            )
+        };
+        let mut rng = crate::util::rng::Rng::new(4);
+        for (&scheme, expect_op) in COMMUTATIVE
+            .iter()
+            .map(|s| (s, "sparse_allreduce_shared"))
+            .chain(NON_COMMUTATIVE.iter().map(|s| (s, "sparse_gather")))
+        {
+            let mut c = mk(scheme);
+            for t in 0..3 {
+                let grads: Vec<Vec<f32>> = (0..n)
+                    .map(|_| {
+                        let mut v = vec![0.0; dim];
+                        rng.fill_normal(&mut v, 1.0);
+                        v
+                    })
+                    .collect();
+                let _ = c.step(t, &grads);
+            }
+            for op in &c.fabric.stats().ops {
+                assert_eq!(
+                    op.op, expect_op,
+                    "{scheme} routed through '{}' instead of '{expect_op}'",
+                    op.op
+                );
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -150,8 +289,6 @@ mod tests {
 
     #[test]
     fn ramp_grows_sizes() {
-        let mut max_early = 0;
-        let mut max_late = 0;
         check("ramp", 100, |g| {
             let n = g.usize_in(0..=1000);
             // capture via thread-local-free trick: can't mutate captured
@@ -169,8 +306,8 @@ mod tests {
             case: 99,
             cases: 100,
         };
-        max_early = g_early.ramp(0, 1000);
-        max_late = g_late.ramp(0, 1000);
+        let max_early = g_early.ramp(0, 1000);
+        let max_late = g_late.ramp(0, 1000);
         assert!(max_early < max_late);
         assert_eq!(max_late, 1000);
     }

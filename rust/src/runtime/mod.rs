@@ -1,16 +1,27 @@
-//! Runtime: PJRT client wrapper + artifact manifest.
+//! Runtime: PJRT client wrapper, artifact manifest, and the threaded
+//! worker engine.
 //!
 //! `Engine` loads the HLO-text artifacts that `make artifacts` produced
 //! and exposes typed train/eval/compress/apply calls. Python never runs
 //! here — the Rust binary is self-contained once `artifacts/` exists.
+//! `threaded` is the thread-per-worker execution backend behind
+//! `Backend::Threaded` (see `comm::parallel` for the collectives).
 
 pub mod engine;
 pub mod manifest;
+pub mod threaded;
 
 pub use engine::{Engine, LoadedModel};
 pub use manifest::{Dtype, Manifest, ModelManifest, TensorSpec};
 
 use std::path::Path;
+
+/// True when the PJRT artifacts exist. Bare checkouts don't have them
+/// (they come from `make artifacts`), so artifact-dependent integration
+/// tests call this and skip with a message instead of failing.
+pub fn artifacts_present() -> bool {
+    default_artifacts_dir().join("manifest.json").exists()
+}
 
 /// Default artifacts directory (overridable via config / --artifacts).
 pub fn default_artifacts_dir() -> std::path::PathBuf {

@@ -1,0 +1,288 @@
+//! Threaded backend: thread-per-worker execution of Algorithm 1.
+//!
+//! The sequential coordinator iterates workers on one thread. This engine
+//! runs every per-worker stage — error-feedback gradient, sparsify,
+//! collective exchange, low-pass memory update — on a dedicated OS thread
+//! per worker, with the exchange going through the real channel
+//! collectives in `comm::parallel` (ring reduce-scatter/all-gather for
+//! the commutative shared-index path, star gather for the build-up path).
+//!
+//! Worker state stays owned by the `Coordinator` (its `memories` are part
+//! of the public API — trainers, hooks, and tests introspect them), so
+//! each step borrows the per-worker pieces into `std::thread::scope`
+//! threads instead of moving them into long-lived workers; every closure
+//! touches only its own worker's memory, gradient, and mesh endpoints.
+//!
+//! Semantics vs the sequential backend (locked by
+//! `rust/tests/backend_parity.rs`):
+//!   - EF gradients, selections, memory updates: bit-identical (the math
+//!     is per-worker and order-free);
+//!   - gather reduction: bit-identical (the root reduces in worker order,
+//!     exactly like `Fabric::sparse_gather_avg`);
+//!   - ring reductions: equal up to f32 reduction-order rounding
+//!     (rtol 1e-5 / atol 1e-6) — see the determinism contract in
+//!     `comm::parallel`.
+
+use crate::comm::parallel::{ring, star};
+use crate::comm::GatherStats;
+use crate::compress::{sparsify, EfMemory};
+
+/// Error-feedback gradients `m_i + ∇f_i`, one worker thread each.
+/// Identical to `Coordinator::ef_grads` output.
+pub fn parallel_ef_grads(memories: &[EfMemory], grads: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    assert_eq!(memories.len(), grads.len());
+    if memories.len() <= 1 {
+        return memories.iter().zip(grads).map(|(m, g)| m.ef_grad(g)).collect();
+    }
+    std::thread::scope(|s| {
+        let handles: Vec<_> = memories
+            .iter()
+            .zip(grads)
+            .map(|(m, g)| s.spawn(move || m.ef_grad(g)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("ef-grad worker panicked"))
+            .collect()
+    })
+}
+
+/// Dense all-reduce average over worker threads via the ring.
+pub fn dense_allreduce_avg(grads: &[Vec<f32>]) -> Vec<f32> {
+    let n = grads.len();
+    assert!(n >= 1, "dense_allreduce over no gradients");
+    let nodes = ring(n);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = nodes
+            .into_iter()
+            .zip(grads)
+            .map(|(node, g)| {
+                s.spawn(move || {
+                    let mut buf = g.clone();
+                    node.allreduce_avg(&mut buf);
+                    (node.id == 0).then_some(buf)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .filter_map(|h| h.join().expect("dense-allreduce worker panicked"))
+            .next()
+            .expect("ring root result")
+    })
+}
+
+/// Shared-index exchange (the commutative CLT-k path): every worker
+/// sparsifies its EF gradient with the broadcast index set `idx`,
+/// ring-all-reduces the k values, and applies its low-pass memory update
+/// — all inside its own thread. Returns the averaged values aligned with
+/// `idx`.
+pub fn exchange_shared(
+    memories: &mut [EfMemory],
+    grads: &[Vec<f32>],
+    efs: &[Vec<f32>],
+    idx: &[u32],
+) -> Vec<f32> {
+    let n = memories.len();
+    assert!(n >= 1 && grads.len() == n && efs.len() == n);
+    let nodes = ring(n);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = nodes
+            .into_iter()
+            .zip(memories.iter_mut())
+            .zip(grads.iter().zip(efs))
+            .map(|((node, mem), (grad, ef))| {
+                s.spawn(move || {
+                    let mut vals: Vec<f32> =
+                        idx.iter().map(|&i| ef[i as usize]).collect();
+                    node.allreduce_avg(&mut vals);
+                    // memory update (Eqn. 5) with the transmitted indices
+                    mem.update_after_send(grad, idx);
+                    (node.id == 0).then_some(vals)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .filter_map(|h| h.join().expect("shared-exchange worker panicked"))
+            .next()
+            .expect("ring root result")
+    })
+}
+
+/// Per-worker-index exchange (the non-commutative build-up path): each
+/// worker sparsifies with its own set and sends it to the root over the
+/// star; the root reduces in worker order — the exact order and
+/// arithmetic of `Fabric::sparse_gather_avg`, so the result is
+/// bit-identical to the sequential backend. Memory updates run on each
+/// worker's thread. Returns the dense average plus the wire-shape summary
+/// for the analytic cost model.
+pub fn exchange_gather(
+    memories: &mut [EfMemory],
+    grads: &[Vec<f32>],
+    efs: &[Vec<f32>],
+    per: &[Vec<u32>],
+) -> (Vec<f32>, GatherStats) {
+    let n = memories.len();
+    assert!(n >= 1 && grads.len() == n && efs.len() == n && per.len() == n);
+    let dim = efs[0].len();
+    let nodes = star(n);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = nodes
+            .into_iter()
+            .zip(memories.iter_mut())
+            .zip(grads.iter().zip(efs.iter().zip(per)))
+            .map(|((node, mem), (grad, (ef, idx)))| {
+                s.spawn(move || {
+                    let sg = sparsify(ef, idx);
+                    let gathered = node.gather(sg);
+                    mem.update_after_send(grad, idx);
+                    gathered.map(|all| {
+                        let gs = GatherStats::from_sparses(&all);
+                        let mut acc = vec![0.0f32; dim];
+                        for contribution in &all {
+                            contribution.add_into(&mut acc);
+                        }
+                        let inv = 1.0 / n as f32;
+                        acc.iter_mut().for_each(|v| *v *= inv);
+                        (acc, gs)
+                    })
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .filter_map(|h| h.join().expect("gather-exchange worker panicked"))
+            .next()
+            .expect("star root result")
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::floats::allclose;
+    use crate::util::rng::Rng;
+
+    fn rand_grads(seed: u64, n: usize, dim: usize) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                let mut v = vec![0.0; dim];
+                rng.fill_normal(&mut v, 1.0);
+                v
+            })
+            .collect()
+    }
+
+    #[test]
+    fn parallel_ef_grads_matches_sequential() {
+        for n in [1usize, 2, 5] {
+            let dim = 37;
+            let grads = rand_grads(n as u64, n, dim);
+            let mut memories: Vec<EfMemory> =
+                (0..n).map(|_| EfMemory::new(dim, 0.5)).collect();
+            for (m, g) in memories.iter_mut().zip(&grads) {
+                m.update_after_send(g, &[0, 3]);
+            }
+            let seq: Vec<Vec<f32>> = memories
+                .iter()
+                .zip(&grads)
+                .map(|(m, g)| m.ef_grad(g))
+                .collect();
+            let par = parallel_ef_grads(&memories, &grads);
+            // per-worker math, no cross-worker reduction → bit-identical
+            assert_eq!(seq, par);
+        }
+    }
+
+    #[test]
+    fn threaded_dense_allreduce_matches_sequential_within_tolerance() {
+        for n in [1usize, 2, 3, 8] {
+            let dim = 101;
+            let grads = rand_grads(7 + n as u64, n, dim);
+            let mut expect = vec![0.0f32; dim];
+            for g in &grads {
+                for (e, &v) in expect.iter_mut().zip(g) {
+                    *e += v;
+                }
+            }
+            let inv = 1.0 / n as f32;
+            expect.iter_mut().for_each(|v| *v *= inv);
+            let got = dense_allreduce_avg(&grads);
+            if let Err(i) = allclose(&got, &expect, 1e-5, 1e-6) {
+                panic!("n={n} coord {i}: {} vs {}", got[i], expect[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn exchange_shared_updates_memories_like_sequential() {
+        let n = 4;
+        let dim = 64;
+        let k = 8;
+        let grads = rand_grads(11, n, dim);
+        let mut mem_thr: Vec<EfMemory> =
+            (0..n).map(|_| EfMemory::new(dim, 0.25)).collect();
+        let mut mem_seq = mem_thr.clone();
+        let efs: Vec<Vec<f32>> = mem_thr
+            .iter()
+            .zip(&grads)
+            .map(|(m, g)| m.ef_grad(g))
+            .collect();
+        let idx = crate::util::select::top_k_indices_by_magnitude(&efs[0], k);
+
+        let vals = exchange_shared(&mut mem_thr, &grads, &efs, &idx);
+
+        // reference: sequential sum + per-worker update
+        let mut expect = vec![0.0f32; k];
+        for ef in &efs {
+            for (e, &i) in expect.iter_mut().zip(&idx) {
+                *e += ef[i as usize];
+            }
+        }
+        expect.iter_mut().for_each(|v| *v /= n as f32);
+        for mem in mem_seq.iter_mut().zip(&grads) {
+            mem.0.update_after_send(mem.1, &idx);
+        }
+        assert!(allclose(&vals, &expect, 1e-5, 1e-6).is_ok());
+        for (a, b) in mem_thr.iter().zip(&mem_seq) {
+            assert_eq!(a.memory(), b.memory(), "memory updates are per-worker");
+        }
+    }
+
+    #[test]
+    fn exchange_gather_is_bit_identical_to_fabric_reduction() {
+        use crate::comm::{Fabric, FabricConfig};
+        let n = 5;
+        let dim = 48;
+        let grads = rand_grads(13, n, dim);
+        let mut memories: Vec<EfMemory> =
+            (0..n).map(|_| EfMemory::new(dim, 1.0)).collect();
+        let efs: Vec<Vec<f32>> = memories
+            .iter()
+            .zip(&grads)
+            .map(|(m, g)| m.ef_grad(g))
+            .collect();
+        let per: Vec<Vec<u32>> = efs
+            .iter()
+            .map(|ef| crate::util::select::top_k_indices_by_magnitude(ef, 6))
+            .collect();
+
+        let (avg, gs) = exchange_gather(&mut memories, &grads, &efs, &per);
+
+        let sparses: Vec<_> = efs
+            .iter()
+            .zip(&per)
+            .map(|(ef, idx)| sparsify(ef, idx))
+            .collect();
+        let mut fabric = Fabric::new(FabricConfig {
+            workers: n,
+            ..FabricConfig::default()
+        });
+        let expect = fabric.sparse_gather_avg(&sparses);
+        // same reduction order, same arithmetic → exactly equal
+        assert_eq!(avg, expect);
+        assert_eq!(gs, GatherStats::from_sparses(&sparses));
+    }
+}

@@ -9,9 +9,12 @@
 //!   3. the optimizer applies θ ← θ − α_t · g^t (identically on every
 //!      worker, so one parameter copy suffices in simulation).
 //!
-//! Workers execute sequentially within a step: the simulation's subject
-//! is communication volume and convergence, which are scheduling-
-//! independent in fully-synchronous SGD; determinism is a feature.
+//! The coordination step runs on the configured `Backend`: `sequential`
+//! loops over workers on one thread; `threaded` runs a thread per worker
+//! with channel collectives (`comm::parallel`). Both are deterministic —
+//! the threaded dataflow fixes every reduction order — and parity-locked
+//! by `rust/tests/backend_parity.rs`, so communication volume and
+//! convergence results are backend-independent.
 //!
 //! `use_kernel` routes compression through the L1 Pallas artifacts
 //! (`<model>_compress` / `<model>_apply`) instead of the native Rust
@@ -24,7 +27,7 @@ pub mod schedule;
 pub use optimizer::{make_optimizer, Optimizer};
 pub use schedule::LrSchedule;
 
-use crate::comm::{Fabric, FabricConfig, Topology};
+use crate::comm::{Backend, Fabric, FabricConfig, Topology};
 use crate::compress::{schemes::make_compressor, EfMemory, Selection, SparseGrad};
 use crate::config::train::TrainConfig;
 use crate::coordinator::{Coordinator, Mode, StepResult};
@@ -120,7 +123,8 @@ impl<'h> Trainer<'h> {
             k.max(1),
             fabric,
             cfg.compress.warmup_steps,
-        );
+        )
+        .with_backend(Backend::parse(&cfg.backend)?);
         if cfg.compress.use_flops_rule {
             let partition = model.mm.layers.clone();
             let ks = partition.per_layer_k(
@@ -159,6 +163,12 @@ impl<'h> Trainer<'h> {
 
     /// Run the configured number of steps; returns the metrics log.
     pub fn run(&mut self) -> Result<RunLog> {
+        anyhow::ensure!(
+            !(self.use_kernel && self.coordinator.backend == Backend::Threaded),
+            "--kernel-compress runs the L1 Pallas path on the sequential \
+             collectives only; use --backend sequential (backend dispatch for \
+             the kernel path is a ROADMAP item)"
+        );
         let mut log = RunLog::new(
             &format!(
                 "{}_{}_w{}",

@@ -128,6 +128,63 @@ pub fn top_k_via_heap(xs: &[f32], k: usize) -> Vec<u32> {
     out
 }
 
+/// Multi-threaded exact top-k with output identical to
+/// `top_k_indices_by_magnitude`.
+///
+/// Each of `threads` spans computes its local top-k (any global top-k
+/// member beats at most k−1 elements overall, hence at most k−1 within
+/// its own span, so it survives the span-local cut); the ≤ threads·k
+/// candidates are then ranked with the global rule — magnitude
+/// descending, lowest index wins ties — which is exactly the sequential
+/// selection criterion, so the merged result matches bit-for-bit.
+pub fn top_k_indices_by_magnitude_parallel(
+    xs: &[f32],
+    k: usize,
+    threads: usize,
+) -> Vec<u32> {
+    let n = xs.len();
+    assert!(k <= n, "k={k} > n={n}");
+    // Fall back when the candidate pool (≈ threads·k) would approach n:
+    // every span would return most of its contents and the merge sort
+    // would cost more than the sequential O(n) quickselect.
+    if threads <= 1 || k == 0 || n < (1 << 14) || k.saturating_mul(threads) >= n {
+        return top_k_indices_by_magnitude(xs, k);
+    }
+    let span = n.div_ceil(threads);
+    let mut candidates: Vec<u32> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                s.spawn(move || {
+                    let lo = (t * span).min(n);
+                    let hi = ((t + 1) * span).min(n);
+                    if lo >= hi {
+                        return Vec::new();
+                    }
+                    let local_k = k.min(hi - lo);
+                    let mut ix = top_k_via_heap(&xs[lo..hi], local_k);
+                    for i in &mut ix {
+                        *i += lo as u32;
+                    }
+                    ix
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("top-k span thread panicked"))
+            .collect()
+    });
+    candidates.sort_unstable_by(|&a, &b| {
+        mag(xs[b as usize])
+            .partial_cmp(&mag(xs[a as usize]))
+            .unwrap()
+            .then_with(|| a.cmp(&b))
+    });
+    candidates.truncate(k);
+    candidates.sort_unstable();
+    candidates
+}
+
 /// Oracle used by tests: full sort (stable w.r.t. index on ties).
 pub fn top_k_by_full_sort(xs: &[f32], k: usize) -> Vec<u32> {
     let mut order: Vec<u32> = (0..xs.len() as u32).collect();
@@ -194,5 +251,37 @@ mod tests {
         let xs = [1.0f32, 2.0];
         assert!(top_k_indices_by_magnitude(&xs, 0).is_empty());
         assert_eq!(top_k_indices_by_magnitude(&xs, 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn parallel_topk_bit_identical_to_sequential() {
+        let mut r = Rng::new(77);
+        for n in [1usize, 100, 16_384, 60_001] {
+            let xs: Vec<f32> = (0..n).map(|_| r.next_normal_f32(0.0, 1.0)).collect();
+            for k in [0usize, 1, 7, n / 10, n] {
+                for threads in [1usize, 2, 4, 9] {
+                    assert_eq!(
+                        top_k_indices_by_magnitude_parallel(&xs, k, threads),
+                        top_k_indices_by_magnitude(&xs, k),
+                        "n={n} k={k} threads={threads}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_topk_ties_and_nans_match_sequential() {
+        // adversarial: many exact ties crossing span boundaries + NaNs
+        let mut xs = vec![1.0f32; 40_000];
+        xs[33] = f32::NAN;
+        xs[20_000] = 5.0;
+        for k in [1usize, 100, 39_000] {
+            assert_eq!(
+                top_k_indices_by_magnitude_parallel(&xs, k, 4),
+                top_k_indices_by_magnitude(&xs, k),
+                "k={k}"
+            );
+        }
     }
 }

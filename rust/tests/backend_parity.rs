@@ -1,0 +1,218 @@
+//! Backend parity lock: the threaded (thread-per-worker, channel
+//! collectives) backend must be indistinguishable from the sequential
+//! reference across every compression scheme, worker count, and step.
+//!
+//! Determinism contract (see `comm::parallel` module docs):
+//!   - selections, leaders, rates, byte accounting, `CommStats`: EXACT;
+//!   - memory states and gather-path updates: EXACT (per-worker math /
+//!     worker-order reductions);
+//!   - ring-reduced f32 values: equal within reduction-order tolerance
+//!     rtol = 1e-5, atol = 1e-6 (ring chunk order is a rotation of the
+//!     sequential 0..n order);
+//!   - threaded runs are bit-identical to each other (fixed dataflow).
+
+use scalecom::comm::{Backend, Fabric, FabricConfig, Topology};
+use scalecom::compress::rate::LayerSlice;
+use scalecom::compress::{schemes::make_compressor, LayerPartition};
+use scalecom::coordinator::{Coordinator, Mode, StepResult};
+use scalecom::util::floats::allclose;
+use scalecom::util::rng::Rng;
+
+/// Documented f32 reduction-order tolerance for ring-reduced values.
+const RTOL: f32 = 1e-5;
+const ATOL: f32 = 1e-6;
+
+const SCHEMES: &[&str] = &[
+    "scalecom",       // CLT-k, chunked quasi-sort
+    "scalecom-exact", // CLT-k, exact top-k
+    "true-topk",
+    "local-topk",
+    "gtop-k",
+    "random-k",
+    "sketch-k",
+];
+
+fn coordinator(
+    scheme: &str,
+    n: usize,
+    dim: usize,
+    rate: usize,
+    warmup: usize,
+    topo: Topology,
+    backend: Backend,
+) -> Coordinator {
+    let fabric = Fabric::new(FabricConfig {
+        workers: n,
+        topology: topo,
+        ..FabricConfig::default()
+    });
+    let mode = if scheme == "none" {
+        Mode::Dense
+    } else {
+        Mode::Compressed(make_compressor(scheme, rate, 7).unwrap())
+    };
+    let k = (dim / rate).max(1);
+    Coordinator::new(n, dim, mode, 0.5, k, fabric, warmup).with_backend(backend)
+}
+
+fn rand_grads(rng: &mut Rng, n: usize, dim: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|_| {
+            let mut v = vec![0.0; dim];
+            rng.fill_normal(&mut v, 1.0);
+            v
+        })
+        .collect()
+}
+
+fn assert_step_parity(scheme: &str, n: usize, t: usize, a: &StepResult, b: &StepResult) {
+    let ctx = || format!("scheme={scheme} n={n} t={t}");
+    assert_eq!(a.selection, b.selection, "selection mismatch ({})", ctx());
+    assert_eq!(a.leader, b.leader, "leader mismatch ({})", ctx());
+    assert_eq!(a.dense, b.dense, "dense flag mismatch ({})", ctx());
+    assert_eq!(a.rate, b.rate, "rate mismatch ({})", ctx());
+    assert_eq!(a.comm, b.comm, "comm cost mismatch ({})", ctx());
+    if let Err(i) = allclose(&a.update, &b.update, RTOL, ATOL) {
+        panic!(
+            "update mismatch at coord {i} ({}): seq={} thr={}",
+            ctx(),
+            a.update[i],
+            b.update[i]
+        );
+    }
+}
+
+/// Drive both backends through identical gradient streams and compare
+/// every observable per step plus the final memory/comm ledgers.
+fn run_parity(scheme: &str, n: usize, dim: usize, rate: usize, steps: usize, warmup: usize) {
+    let topo = if n % 2 == 0 { Topology::Ring } else { Topology::ParameterServer };
+    let mut seq = coordinator(scheme, n, dim, rate, warmup, topo, Backend::Sequential);
+    let mut thr = coordinator(scheme, n, dim, rate, warmup, topo, Backend::Threaded);
+    let mut rng = Rng::for_stream(0xBACC, n as u64);
+    for t in 0..steps {
+        let grads = rand_grads(&mut rng, n, dim);
+        let a = seq.step(t, &grads);
+        let b = thr.step(t, &grads);
+        assert_step_parity(scheme, n, t, &a, &b);
+    }
+    // error-feedback memories stay in lockstep (bit-exact: per-worker math)
+    for (w, (ma, mb)) in seq.memories.iter().zip(&thr.memories).enumerate() {
+        if let Err(i) = allclose(ma.memory(), mb.memory(), RTOL, ATOL) {
+            panic!(
+                "memory divergence scheme={scheme} n={n} worker={w} coord {i}: {} vs {}",
+                ma.memory()[i],
+                mb.memory()[i]
+            );
+        }
+    }
+    // byte-exact communication ledger
+    assert_eq!(
+        seq.fabric.stats().ops,
+        thr.fabric.stats().ops,
+        "CommStats mismatch scheme={scheme} n={n}"
+    );
+}
+
+#[test]
+fn all_schemes_match_across_worker_counts_over_50_steps() {
+    for &scheme in SCHEMES {
+        for n in [2usize, 4, 8, 16] {
+            run_parity(scheme, n, 96, 8, 50, 0);
+        }
+    }
+}
+
+#[test]
+fn dense_mode_and_warmup_transition_match() {
+    for n in [2usize, 3, 8] {
+        run_parity("none", n, 128, 4, 50, 0);
+        // warmup: dense steps 0..5, compressed after — covers the switch
+        run_parity("scalecom", n, 128, 4, 50, 5);
+    }
+}
+
+#[test]
+fn single_worker_degenerate_case_matches() {
+    for scheme in ["none", "scalecom", "local-topk", "true-topk"] {
+        run_parity(scheme, 1, 64, 4, 50, 0);
+    }
+}
+
+#[test]
+fn layered_selection_matches_across_backends() {
+    let partition = || {
+        LayerPartition::from_layers(vec![
+            LayerSlice {
+                name: "first".into(),
+                offset: 0,
+                len: 16,
+                flops_per_sample: 0.0,
+                compress: false, // dense layer
+            },
+            LayerSlice {
+                name: "rest".into(),
+                offset: 16,
+                len: 112,
+                flops_per_sample: 0.0,
+                compress: true,
+            },
+        ])
+    };
+    let n = 4;
+    let dim = 128;
+    let mut seq = coordinator("scalecom-auto", n, dim, 8, 0, Topology::Ring, Backend::Sequential)
+        .with_layered(partition(), vec![16, 14]);
+    let mut thr = coordinator("scalecom-auto", n, dim, 8, 0, Topology::Ring, Backend::Threaded)
+        .with_layered(partition(), vec![16, 14]);
+    let mut rng = Rng::new(55);
+    for t in 0..50 {
+        let grads = rand_grads(&mut rng, n, dim);
+        let a = seq.step(t, &grads);
+        let b = thr.step(t, &grads);
+        assert_step_parity("scalecom-auto(layered)", n, t, &a, &b);
+    }
+}
+
+#[test]
+fn threaded_backend_is_deterministic_run_to_run() {
+    // The channel dataflow fixes every reduction order: two threaded runs
+    // must agree bit-for-bit, independent of OS scheduling.
+    let run = || {
+        let n = 8;
+        let dim = 256;
+        let mut c =
+            coordinator("scalecom", n, dim, 16, 0, Topology::Ring, Backend::Threaded);
+        let mut rng = Rng::new(99);
+        let mut updates = Vec::new();
+        for t in 0..20 {
+            let grads = rand_grads(&mut rng, n, dim);
+            updates.push(c.step(t, &grads).update);
+        }
+        updates
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "threaded backend must be bit-deterministic");
+}
+
+#[test]
+fn gather_path_is_bit_identical_not_just_close() {
+    // The build-up path reduces at the root in worker order — the exact
+    // sequential arithmetic — so parity here is equality, not tolerance.
+    let n = 8;
+    let dim = 160;
+    let mut seq =
+        coordinator("local-topk", n, dim, 8, 0, Topology::ParameterServer, Backend::Sequential);
+    let mut thr =
+        coordinator("local-topk", n, dim, 8, 0, Topology::ParameterServer, Backend::Threaded);
+    let mut rng = Rng::new(31);
+    for t in 0..50 {
+        let grads = rand_grads(&mut rng, n, dim);
+        let a = seq.step(t, &grads);
+        let b = thr.step(t, &grads);
+        assert_eq!(a.update, b.update, "t={t}");
+        for (ma, mb) in seq.memories.iter().zip(&thr.memories) {
+            assert_eq!(ma.memory(), mb.memory(), "t={t}");
+        }
+    }
+}

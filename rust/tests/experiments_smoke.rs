@@ -1,6 +1,8 @@
 //! Smoke tests for the analytic (non-training) experiment drivers and
 //! the CLI surface; the training drivers are exercised by their own
-//! `--quick` paths in examples/EXPERIMENTS runs.
+//! `--quick` paths in examples/EXPERIMENTS runs. The analytic drivers
+//! below need no artifacts; the one training-backed smoke test gates on
+//! artifact presence so a bare checkout stays green.
 
 #[test]
 fn perfmodel_experiments_run() {
@@ -29,6 +31,18 @@ fn experiment_list_covers_all_paper_items() {
     ] {
         assert!(ids.contains(&required), "missing {required}");
     }
+}
+
+#[test]
+fn training_experiment_runs_quick_when_artifacts_present() {
+    if !scalecom::runtime::artifacts_present() {
+        eprintln!(
+            "skipping training experiment smoke: artifacts/manifest.json not \
+             found — run `make artifacts`"
+        );
+        return;
+    }
+    scalecom::experiments::run("fig2", true).unwrap();
 }
 
 #[test]

@@ -1,7 +1,7 @@
 //! L1/L3 parity: the Pallas compress/apply artifacts must agree exactly
 //! with the native Rust compressor + low-pass memory, and the kernel-
 //! routed trainer must reproduce the native trainer's trajectory.
-//! Requires `make artifacts`.
+//! Requires `make artifacts`; skips (green) on a bare checkout.
 
 use scalecom::compress::chunk::chunk_top1_indices;
 use scalecom::compress::EfMemory;
@@ -10,6 +10,19 @@ use scalecom::runtime::{default_artifacts_dir, Engine, Manifest};
 use scalecom::trainer::Trainer;
 use scalecom::util::floats::allclose;
 use scalecom::util::rng::Rng;
+
+/// Skip (pass vacuously, with a note) when artifacts are absent.
+macro_rules! require_artifacts {
+    () => {
+        if !scalecom::runtime::artifacts_present() {
+            eprintln!(
+                "skipping {}: artifacts/manifest.json not found — run `make artifacts`",
+                module_path!()
+            );
+            return;
+        }
+    };
+}
 
 fn load(model: &str) -> (Engine, scalecom::runtime::LoadedModel) {
     let manifest = Manifest::load(&default_artifacts_dir()).expect("make artifacts first");
@@ -20,6 +33,7 @@ fn load(model: &str) -> (Engine, scalecom::runtime::LoadedModel) {
 
 #[test]
 fn kernel_compress_matches_native_chunk_top1() {
+    require_artifacts!();
     let (_e, lm) = load("mlp");
     let dim = lm.mm.dim;
     let mut rng = Rng::new(3);
@@ -52,6 +66,7 @@ fn kernel_compress_matches_native_chunk_top1() {
 
 #[test]
 fn kernel_apply_matches_native_follower() {
+    require_artifacts!();
     let (_e, lm) = load("mlp");
     let dim = lm.mm.dim;
     let k = lm.mm.k;
@@ -75,6 +90,7 @@ fn kernel_apply_matches_native_follower() {
 
 #[test]
 fn kernel_trainer_matches_native_trainer_trajectory() {
+    require_artifacts!();
     let zoo = scalecom::models::zoo_model("mlp").unwrap();
     let cfg = TrainConfig {
         model: "mlp".into(),
@@ -108,6 +124,7 @@ fn kernel_trainer_matches_native_trainer_trajectory() {
 
 #[test]
 fn eval_artifact_counts_correct_predictions() {
+    require_artifacts!();
     let (_e, lm) = load("mlp");
     let params = lm.load_init_params().unwrap();
     let zoo = scalecom::models::zoo_model("mlp").unwrap();
@@ -120,6 +137,7 @@ fn eval_artifact_counts_correct_predictions() {
 
 #[test]
 fn train_step_rejects_wrong_shapes() {
+    require_artifacts!();
     let (_e, lm) = load("mlp");
     let params = lm.load_init_params().unwrap();
     let zoo = scalecom::models::zoo_model("mlp").unwrap();
@@ -135,6 +153,7 @@ fn train_step_rejects_wrong_shapes() {
 
 #[test]
 fn gradients_differ_across_worker_shards() {
+    require_artifacts!();
     let (_e, lm) = load("mlp");
     let params = lm.load_init_params().unwrap();
     let zoo = scalecom::models::zoo_model("mlp").unwrap();

@@ -1,8 +1,23 @@
 //! Integration tests over the full three-layer stack (PJRT artifacts +
-//! coordinator + trainer). Requires `make artifacts`.
+//! coordinator + trainer). Requires `make artifacts`; on a bare checkout
+//! (no `artifacts/manifest.json`) every test skips with a message so
+//! `cargo test -q` stays green.
 
 use scalecom::config::train::{CompressConfig, TrainConfig};
 use scalecom::trainer::Trainer;
+
+/// Skip (pass vacuously, with a note) when artifacts are absent.
+macro_rules! require_artifacts {
+    () => {
+        if !scalecom::runtime::artifacts_present() {
+            eprintln!(
+                "skipping {}: artifacts/manifest.json not found — run `make artifacts`",
+                module_path!()
+            );
+            return;
+        }
+    };
+}
 
 fn base_cfg(model: &str, scheme: &str, workers: usize, steps: usize) -> TrainConfig {
     let zoo = scalecom::models::zoo_model(model).unwrap();
@@ -22,6 +37,7 @@ fn base_cfg(model: &str, scheme: &str, workers: usize, steps: usize) -> TrainCon
 
 #[test]
 fn mlp_dense_baseline_learns() {
+    require_artifacts!();
     let log = Trainer::from_config(base_cfg("mlp", "none", 2, 60))
         .unwrap()
         .run()
@@ -36,6 +52,7 @@ fn mlp_dense_baseline_learns() {
 
 #[test]
 fn mlp_scalecom_reaches_parity_with_dense() {
+    require_artifacts!();
     let dense = Trainer::from_config(base_cfg("mlp", "none", 4, 200))
         .unwrap()
         .run()
@@ -55,6 +72,7 @@ fn mlp_scalecom_reaches_parity_with_dense() {
 
 #[test]
 fn training_is_deterministic_for_fixed_seed() {
+    require_artifacts!();
     let a = Trainer::from_config(base_cfg("mlp", "scalecom", 3, 20))
         .unwrap()
         .run()
@@ -72,6 +90,7 @@ fn training_is_deterministic_for_fixed_seed() {
 
 #[test]
 fn ring_and_ps_topologies_give_identical_updates() {
+    require_artifacts!();
     let mut ps_cfg = base_cfg("mlp", "scalecom", 4, 30);
     ps_cfg.fabric_topology = "ps".into();
     let mut ring_cfg = base_cfg("mlp", "scalecom", 4, 30);
@@ -85,6 +104,7 @@ fn ring_and_ps_topologies_give_identical_updates() {
 
 #[test]
 fn compression_warmup_goes_dense_first() {
+    require_artifacts!();
     let mut cfg = base_cfg("mlp", "scalecom", 2, 10);
     cfg.compress.warmup_steps = 5;
     let log = Trainer::from_config(cfg).unwrap().run().unwrap();
@@ -99,6 +119,7 @@ fn compression_warmup_goes_dense_first() {
 
 #[test]
 fn comm_bytes_reflect_compression_rate() {
+    require_artifacts!();
     let dense = Trainer::from_config(base_cfg("mlp", "none", 4, 5))
         .unwrap()
         .run()
@@ -118,6 +139,7 @@ fn comm_bytes_reflect_compression_rate() {
 
 #[test]
 fn eval_reports_high_accuracy_after_training() {
+    require_artifacts!();
     let mut cfg = base_cfg("mlp", "scalecom", 4, 120);
     cfg.eval_every = 0;
     let mut t = Trainer::from_config(cfg).unwrap();
@@ -128,6 +150,7 @@ fn eval_reports_high_accuracy_after_training() {
 
 #[test]
 fn all_schemes_run_end_to_end_briefly() {
+    require_artifacts!();
     for scheme in [
         "none",
         "scalecom",
@@ -149,6 +172,7 @@ fn all_schemes_run_end_to_end_briefly() {
 
 #[test]
 fn per_layer_flops_rule_runs_and_reports_rate() {
+    require_artifacts!();
     let mut cfg = base_cfg("cnn", "scalecom", 2, 6);
     cfg.compress.use_flops_rule = true;
     let log = Trainer::from_config(cfg).unwrap().run().unwrap();
@@ -158,6 +182,7 @@ fn per_layer_flops_rule_runs_and_reports_rate() {
 
 #[test]
 fn beta_switch_takes_effect() {
+    require_artifacts!();
     let mut cfg = base_cfg("mlp", "scalecom", 2, 10);
     cfg.compress.beta = 0.1;
     let mut t = Trainer::from_config(cfg).unwrap();
@@ -167,7 +192,31 @@ fn beta_switch_takes_effect() {
 }
 
 #[test]
+fn threaded_backend_trains_to_the_same_losses_as_sequential() {
+    require_artifacts!();
+    let mut seq_cfg = base_cfg("mlp", "scalecom", 4, 30);
+    seq_cfg.backend = "sequential".into();
+    let mut thr_cfg = base_cfg("mlp", "scalecom", 4, 30);
+    thr_cfg.backend = "threaded".into();
+    let seq = Trainer::from_config(seq_cfg).unwrap().run().unwrap();
+    let thr = Trainer::from_config(thr_cfg).unwrap().run().unwrap();
+    let sl = seq.column("loss").unwrap();
+    let tl = thr.column("loss").unwrap();
+    for (t, (a, b)) in sl.iter().zip(&tl).enumerate() {
+        // f32 reduction-order tolerance, amplified a little by training
+        assert!(
+            (a - b).abs() < 1e-3 * (1.0 + a.abs()),
+            "step {t}: sequential {a} vs threaded {b}"
+        );
+    }
+    // identical bytes on the wire
+    assert_eq!(seq.column("bytes_up"), thr.column("bytes_up"));
+    assert_eq!(seq.column("bytes_down"), thr.column("bytes_down"));
+}
+
+#[test]
 fn batch_size_mismatch_is_rejected() {
+    require_artifacts!();
     let mut cfg = base_cfg("mlp", "none", 2, 5);
     cfg.batch_per_worker = 7; // artifact was lowered with 32
     let err = match Trainer::from_config(cfg) {

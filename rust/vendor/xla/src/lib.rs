@@ -1,0 +1,134 @@
+//! Compile-only stub of the `xla-rs` PJRT bindings.
+//!
+//! The build image carries no XLA/PJRT native libraries, so this crate
+//! mirrors exactly the API surface `scalecom::runtime::engine` uses and
+//! fails **at runtime** with a clear message instead of failing the build.
+//! Everything that does not require executing HLO (literal construction,
+//! reshape bookkeeping) behaves normally; client creation and execution
+//! return [`Error`].
+//!
+//! The trainer only reaches this code after `artifacts/manifest.json` has
+//! been found, and all artifact-dependent tests skip when artifacts are
+//! absent, so a bare checkout builds and tests green. To actually execute
+//! artifacts, point the `xla` path dependency in `rust/Cargo.toml` at the
+//! real bindings.
+
+use std::fmt;
+
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "xla stub: {what} is unavailable — this build vendors a compile-only \
+         PJRT stub (no XLA native libraries in the image); substitute the real \
+         `xla` crate in rust/Cargo.toml to execute artifacts"
+    ))
+}
+
+/// Element types literals can carry.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+
+/// Host literal. The stub tracks nothing — it only needs to typecheck the
+/// build path; any attempt to read values back errors.
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn scalar(_value: f32) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal)
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runtime_entry_points_error_loudly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let lit = Literal::vec1(&[1.0f32, 2.0]).reshape(&[2]).unwrap();
+        assert!(lit.to_vec::<f32>().is_err());
+        let msg = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(msg.contains("stub"));
+    }
+}
