@@ -5,9 +5,15 @@
 //! Requires `make artifacts`.
 //!
 //! Usage:
-//!   cargo bench --bench bench_trainstep [-- --quick] [-- --backend sequential|threaded]
+//!   cargo bench --bench bench_trainstep [-- --quick] [-- --backend sequential|threaded|pipelined]
 //!
-//! Without `--backend`, every configuration runs on both backends.
+//! Without `--backend`, every configuration runs on all backends
+//! (`Backend::ALL` via `backends_from_args`, which routes the flag
+//! through `Backend::parse`). The trainer drives the pipelined pool in
+//! its synchronous mode (the optimizer needs g^t before the next
+//! forward/backward); the measured end-to-end overlap efficiency lives
+//! in `bench_allreduce`'s overlap section, where the gradient stream is
+//! independent of the updates.
 
 use scalecom::bench::Bencher;
 use scalecom::comm::Backend;

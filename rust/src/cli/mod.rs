@@ -113,7 +113,9 @@ SUBCOMMANDS:
                      --model mlp|cnn|transformer|transformer-med|lstm
                      --workers N --steps N --scheme scalecom|local-topk|...
                      --rate R --beta B --lr LR --topology ps|ring
-                     --backend sequential|threaded (thread-per-worker engine)
+                     --backend sequential|threaded|pipelined
+                       (threaded: scoped thread-per-worker engine;
+                        pipelined: persistent pool, overlaps compute/comm)
                      --config file.toml (flags override file)
   experiment <id>  regenerate a paper table/figure:
                      table1 fig1a fig1b fig1c fig2 fig3 table2 table3

@@ -28,8 +28,10 @@
 //! (rtol 1e-5, atol 1e-6). Index sets, byte accounting, and `CommStats`
 //! match exactly.
 
+use crate::comm::GatherStats;
 use crate::compress::SparseGrad;
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
 
 /// Execution backend for the coordination step.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -37,17 +39,30 @@ pub enum Backend {
     /// Single-threaded loops over workers (the reference semantics).
     #[default]
     Sequential,
-    /// Thread-per-worker engine with channel collectives.
+    /// Thread-per-worker engine with channel collectives; threads are
+    /// scoped per step.
     Threaded,
+    /// Persistent worker pool (spawned once per run) that double-buffers
+    /// steps: step t+1's EF-gradient/selection compute overlaps step t's
+    /// in-flight collective (`runtime::pipelined`).
+    Pipelined,
 }
 
 impl Backend {
+    /// Every selectable backend, in documentation order. The single
+    /// source of truth for bench CLIs and the label/parse round-trip.
+    pub const ALL: [Backend; 3] =
+        [Backend::Sequential, Backend::Threaded, Backend::Pipelined];
+
     pub fn parse(s: &str) -> anyhow::Result<Backend> {
         match s {
             "sequential" | "seq" => Ok(Backend::Sequential),
             "threaded" | "thr" => Ok(Backend::Threaded),
+            "pipelined" | "pipe" => Ok(Backend::Pipelined),
             other => {
-                anyhow::bail!("unknown backend '{other}' (expected sequential|threaded)")
+                anyhow::bail!(
+                    "unknown backend '{other}' (expected sequential|threaded|pipelined)"
+                )
             }
         }
     }
@@ -56,22 +71,23 @@ impl Backend {
         match self {
             Backend::Sequential => "sequential",
             Backend::Threaded => "threaded",
+            Backend::Pipelined => "pipelined",
         }
     }
 }
 
 /// Shared bench-CLI helper: resolve a `--backend <name>` argument into
-/// the set of backends to run — both when the flag is absent, so every
-/// bench compares them side by side by default.
+/// the set of backends to run — all of `Backend::ALL` when the flag is
+/// absent, so every bench compares them side by side by default.
 pub fn backends_from_args(args: &[String]) -> Vec<Backend> {
     match args.iter().position(|a| a == "--backend") {
         Some(i) => {
             let value = args
                 .get(i + 1)
-                .expect("--backend requires a value (sequential|threaded)");
-            vec![Backend::parse(value).expect("--backend sequential|threaded")]
+                .expect("--backend requires a value (sequential|threaded|pipelined)");
+            vec![Backend::parse(value).expect("--backend sequential|threaded|pipelined")]
         }
-        None => vec![Backend::Sequential, Backend::Threaded],
+        None => Backend::ALL.to_vec(),
     }
 }
 
@@ -227,6 +243,148 @@ impl StarNode {
     }
 }
 
+// ----------------------------------------------------------------------
+// Staged (non-blocking) collectives for the pipelined backend
+// ----------------------------------------------------------------------
+
+/// One collective's payload, submitted per worker to its comm lane.
+/// Every worker of a step must carry the same job kind.
+pub enum CommJob {
+    /// In-place ring all-reduce **average** of this worker's buffer.
+    RingAvg(Vec<f32>),
+    /// Star-gather this worker's sparse contribution; the root reduces
+    /// in worker order (the exact `Fabric::sparse_gather_avg` arithmetic).
+    Gather(SparseGrad),
+}
+
+/// Completion of one staged collective, delivered by the root lane in
+/// submission order.
+pub enum CollectiveResult {
+    /// Ring all-reduce: the fully reduced (averaged) buffer.
+    Reduced(Vec<f32>),
+    /// Star gather: root-reduced dense average + the wire-shape summary
+    /// for the analytic cost model.
+    Gathered(Vec<f32>, GatherStats),
+}
+
+/// Persistent staged-collective engine: one long-lived comm thread per
+/// worker, each owning its ring and star endpoints for the whole run
+/// (PR 1's scoped engine rebuilt the channel mesh every step). Jobs
+/// execute FIFO per lane; because each mesh channel has a single
+/// producer, a lane may already be sending step t+1's chunks while a
+/// neighbor is still reducing step t — receivers drain messages in step
+/// order, so in-flight steps never mix. The dataflow (and therefore
+/// every f32 reduction order) stays a pure function of (n, payloads):
+/// the `comm::parallel` determinism contract is unchanged.
+///
+/// `submit` returns immediately (the non-blocking half of the handle);
+/// `wait` blocks for the oldest in-flight collective's result.
+pub struct CommLanes {
+    jobs: Vec<Sender<CommJob>>,
+    results: Receiver<CollectiveResult>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl CommLanes {
+    pub fn new(n: usize) -> CommLanes {
+        assert!(n >= 1, "comm lanes need at least one worker");
+        let rings = ring(n);
+        let stars = star(n);
+        let (root_tx, results) = channel();
+        let mut jobs = Vec::with_capacity(n);
+        let mut threads = Vec::with_capacity(n);
+        for (ring_node, star_node) in rings.into_iter().zip(stars) {
+            let (tx, rx) = channel::<CommJob>();
+            // Worker 0 roots both topologies (exactly like the scoped
+            // engine), so it alone reports results.
+            let root = (ring_node.id == 0).then(|| root_tx.clone());
+            threads.push(std::thread::spawn(move || {
+                comm_lane_loop(ring_node, star_node, rx, root, n)
+            }));
+            jobs.push(tx);
+        }
+        CommLanes {
+            jobs,
+            results,
+            threads,
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// Launch one collective: one job per worker, all the same kind.
+    /// Returns as soon as the jobs are enqueued — the exchange runs on
+    /// the lane threads while the caller computes.
+    pub fn submit(&self, jobs: Vec<CommJob>) {
+        assert_eq!(jobs.len(), self.jobs.len(), "one job per worker");
+        for (tx, job) in self.jobs.iter().zip(jobs) {
+            tx.send(job).expect("comm lane send");
+        }
+    }
+
+    /// A clone of worker `w`'s job queue, for embedding inside a worker
+    /// thread that forwards its own jobs (the pipelined pool).
+    pub fn job_sender(&self, w: usize) -> Sender<CommJob> {
+        self.jobs[w].clone()
+    }
+
+    /// Block until the oldest in-flight collective completes.
+    pub fn wait(&self) -> CollectiveResult {
+        self.results.recv().expect("comm lane result")
+    }
+}
+
+impl Drop for CommLanes {
+    fn drop(&mut self) {
+        // Dropping the job senders ends each lane loop; external
+        // `job_sender` clones (pool compute lanes) must be dropped by
+        // their owners first — `WorkerPool::drop` joins its compute
+        // threads before dropping its `CommLanes`.
+        self.jobs.clear();
+        for h in self.threads.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn comm_lane_loop(
+    ring_node: RingNode,
+    star_node: StarNode,
+    rx: Receiver<CommJob>,
+    root: Option<Sender<CollectiveResult>>,
+    n: usize,
+) {
+    while let Ok(job) = rx.recv() {
+        match job {
+            CommJob::RingAvg(mut buf) => {
+                ring_node.allreduce_avg(&mut buf);
+                if let Some(tx) = &root {
+                    let _ = tx.send(CollectiveResult::Reduced(buf));
+                }
+            }
+            CommJob::Gather(sg) => {
+                let dim = sg.dim;
+                if let Some(all) = star_node.gather(sg) {
+                    // Root reduction in worker order — bit-identical to
+                    // `Fabric::sparse_gather_avg` / `threaded::exchange_gather`.
+                    let gs = GatherStats::from_sparses(&all);
+                    let mut acc = vec![0.0f32; dim];
+                    for contribution in &all {
+                        contribution.add_into(&mut acc);
+                    }
+                    let inv = 1.0 / n as f32;
+                    acc.iter_mut().for_each(|v| *v *= inv);
+                    if let Some(tx) = &root {
+                        let _ = tx.send(CollectiveResult::Gathered(acc, gs));
+                    }
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -347,11 +505,11 @@ mod tests {
     }
 
     #[test]
-    fn backends_from_args_resolves_filter_or_both() {
+    fn backends_from_args_resolves_filter_or_all() {
         let to = |v: &[&str]| v.iter().map(|s| s.to_string()).collect::<Vec<String>>();
         assert_eq!(
             backends_from_args(&to(&["bench", "--quick"])),
-            vec![Backend::Sequential, Backend::Threaded]
+            Backend::ALL.to_vec()
         );
         assert_eq!(
             backends_from_args(&to(&["bench", "--backend", "threaded"])),
@@ -361,6 +519,10 @@ mod tests {
             backends_from_args(&to(&["bench", "--backend", "seq"])),
             vec![Backend::Sequential]
         );
+        assert_eq!(
+            backends_from_args(&to(&["bench", "--backend", "pipelined"])),
+            vec![Backend::Pipelined]
+        );
     }
 
     #[test]
@@ -368,9 +530,108 @@ mod tests {
         assert_eq!(Backend::parse("sequential").unwrap(), Backend::Sequential);
         assert_eq!(Backend::parse("seq").unwrap(), Backend::Sequential);
         assert_eq!(Backend::parse("threaded").unwrap(), Backend::Threaded);
+        assert_eq!(Backend::parse("pipe").unwrap(), Backend::Pipelined);
         assert!(Backend::parse("gpu").is_err());
         assert_eq!(Backend::Threaded.label(), "threaded");
         assert_eq!(Backend::default(), Backend::Sequential);
+    }
+
+    #[test]
+    fn every_backend_label_roundtrips_through_parse() {
+        // Benches route --backend through `Backend::parse`; every label a
+        // bench can print must parse back to the same variant.
+        for b in Backend::ALL {
+            assert_eq!(Backend::parse(b.label()).unwrap(), b, "{}", b.label());
+        }
+    }
+
+    #[test]
+    fn comm_lanes_ring_avg_matches_scoped_ring() {
+        for n in [1usize, 2, 3, 8] {
+            let len = 41;
+            let mut rng = Rng::new(n as u64 + 77);
+            let inputs: Vec<Vec<f32>> = (0..n)
+                .map(|_| {
+                    let mut v = vec![0.0f32; len];
+                    rng.fill_normal(&mut v, 1.0);
+                    v
+                })
+                .collect();
+            // scoped reference (the threaded engine's path)
+            let inputs_ref = &inputs;
+            let expect = on_ring(n, |node, w| {
+                let mut buf = inputs_ref[w].clone();
+                node.allreduce_avg(&mut buf);
+                (node.id == 0).then_some(buf)
+            })
+            .into_iter()
+            .flatten()
+            .next()
+            .expect("ring root");
+            // staged lanes
+            let lanes = CommLanes::new(n);
+            lanes.submit(inputs.iter().map(|v| CommJob::RingAvg(v.clone())).collect());
+            match lanes.wait() {
+                CollectiveResult::Reduced(got) => {
+                    // same ring, same chunk schedule → bit-identical
+                    assert_eq!(got, expect, "n={n}");
+                }
+                CollectiveResult::Gathered(..) => panic!("expected ring result"),
+            }
+        }
+    }
+
+    #[test]
+    fn comm_lanes_pipeline_two_steps_in_flight_stay_ordered() {
+        // Submit two collectives back-to-back before waiting: the mesh
+        // channels carry both steps' chunks concurrently, and results
+        // must come back in submission order with correct values.
+        let n = 4;
+        let step = |base: f32| -> Vec<CommJob> {
+            (0..n)
+                .map(|w| CommJob::RingAvg(vec![base + w as f32; 16]))
+                .collect()
+        };
+        let lanes = CommLanes::new(n);
+        lanes.submit(step(1.0)); // avg of 1,2,3,4 = 2.5
+        lanes.submit(step(10.0)); // avg of 10,11,12,13 = 11.5
+        for expect in [2.5f32, 11.5] {
+            match lanes.wait() {
+                CollectiveResult::Reduced(v) => {
+                    assert!(v.iter().all(|&x| (x - expect).abs() < 1e-6), "{v:?}");
+                }
+                CollectiveResult::Gathered(..) => panic!("expected ring result"),
+            }
+        }
+    }
+
+    #[test]
+    fn comm_lanes_gather_is_bit_identical_to_fabric() {
+        use crate::comm::{Fabric, FabricConfig};
+        let n = 5;
+        let dim = 32;
+        let mut rng = Rng::new(21);
+        let sparses: Vec<SparseGrad> = (0..n)
+            .map(|w| {
+                let mut vals = vec![0.0f32; 4];
+                rng.fill_normal(&mut vals, 1.0);
+                let idx: Vec<u32> = (0..4u32).map(|i| i * 3 + w as u32).collect();
+                SparseGrad::new(dim, idx, vals)
+            })
+            .collect();
+        let lanes = CommLanes::new(n);
+        lanes.submit(sparses.iter().map(|s| CommJob::Gather(s.clone())).collect());
+        let (avg, gs) = match lanes.wait() {
+            CollectiveResult::Gathered(v, gs) => (v, gs),
+            CollectiveResult::Reduced(_) => panic!("expected gather result"),
+        };
+        let mut fabric = Fabric::new(FabricConfig {
+            workers: n,
+            ..FabricConfig::default()
+        });
+        let expect = fabric.sparse_gather_avg(&sparses);
+        assert_eq!(avg, expect);
+        assert_eq!(gs, GatherStats::from_sparses(&sparses));
     }
 
     #[test]

@@ -80,8 +80,9 @@ pub struct TrainConfig {
     pub compress: CompressConfig,
     pub fabric_topology: String,
     pub fabric_bandwidth_gbps: f64,
-    /// Execution backend for the coordination step:
-    /// "sequential" | "threaded" (`comm::parallel::Backend`).
+    /// Execution backend for the coordination step: "sequential" |
+    /// "threaded" | "pipelined" (`comm::parallel::Backend`). `pipelined`
+    /// runs the persistent double-buffering worker pool.
     pub backend: String,
     /// Evaluate every `eval_every` steps (0 = never).
     pub eval_every: usize,
@@ -236,5 +237,18 @@ mod tests {
         assert_eq!(c.backend, "sequential");
         c.backend = "gpu".into();
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn every_backend_label_validates() {
+        // config strings route through `Backend::parse` — each label of
+        // `Backend::ALL` must be accepted, including "pipelined"
+        for b in crate::comm::Backend::ALL {
+            let mut c = TrainConfig::default();
+            c.backend = b.label().to_string();
+            c.validate().unwrap();
+        }
+        let doc = TomlDoc::parse("[train]\nbackend = \"pipelined\"\n").unwrap();
+        assert_eq!(TrainConfig::from_toml(&doc).unwrap().backend, "pipelined");
     }
 }

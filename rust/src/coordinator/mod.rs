@@ -12,12 +12,29 @@
 //!   line 7: m_i ← (1-β)m_i + β(m_i + ∇f_i − g_i)    → EfMemory update
 //!   lines 9-11: upload/reduce/download               → Fabric collectives
 //!   (warmup steps and uncompressed layers go dense, per §4)
+//!
+//! ## Execution backends and memory ownership
+//!
+//! On the `sequential` and `threaded` backends the coordinator holds the
+//! memories itself; the `pipelined` backend moves them into a persistent
+//! worker pool (`runtime::pipelined::WorkerPool`) whose long-lived lanes
+//! own them for the whole run. Trainers, hooks, and tests therefore
+//! introspect memories through [`Coordinator::memory_snapshot`] — the
+//! backend-independent API — instead of a public field.
+//!
+//! The pipelined backend additionally supports a **double-buffered**
+//! driving mode ([`Coordinator::step_overlapped`]): step t+1's
+//! EF-gradient + top-k selection compute runs while step t's collective
+//! is still in flight on the comm lanes, which is the compute/comm
+//! overlap the paper's scalability story depends on (Remark 3 / §5).
 
 use crate::comm::{Backend, CommCost, Fabric};
 use crate::compress::{
     sparsify, Compressor, EfMemory, LayerPartition, Selection, SparseGrad,
 };
+use crate::runtime::pipelined::WorkerPool;
 use crate::runtime::threaded;
+use std::collections::VecDeque;
 
 /// What happened in one coordination step (for metrics + experiments).
 pub struct StepResult {
@@ -43,11 +60,26 @@ pub enum Mode {
     Compressed(Box<dyn Compressor>),
 }
 
+/// Where the per-worker error-feedback memories live.
+enum Workers {
+    /// In the coordinator (sequential + scoped-threaded backends).
+    Local(Vec<EfMemory>),
+    /// On the persistent pipelined worker pool's compute lanes.
+    Pool(WorkerPool),
+}
+
+/// A step submitted to the pool whose collective has not been waited yet.
+struct Pending {
+    leader: usize,
+    selection: Option<Selection>,
+    dense: bool,
+}
+
 pub struct Coordinator {
     n: usize,
     dim: usize,
     mode: Mode,
-    pub memories: Vec<EfMemory>,
+    workers: Workers,
     pub fabric: Fabric,
     /// flat per-step budget: either a single k over the whole vector...
     pub k: usize,
@@ -55,9 +87,14 @@ pub struct Coordinator {
     pub layered: Option<(LayerPartition, Vec<usize>)>,
     /// dense warmup steps (paper: 1-5 epochs uncompressed)
     pub warmup_steps: usize,
-    /// execution backend: sequential loops or thread-per-worker engine
-    /// (parity-locked in `rust/tests/backend_parity.rs`)
-    pub backend: Backend,
+    /// execution backend (parity-locked in `rust/tests/backend_parity.rs`)
+    backend: Backend,
+    /// pipelined steps submitted but not yet waited (≤ 1 in the
+    /// double-buffered driving mode)
+    pending: VecDeque<Pending>,
+    /// eagerly-computed results buffered by `step_overlapped` on the
+    /// non-pipelined backends (same observable stream, no lookahead)
+    ready: VecDeque<StepResult>,
 }
 
 impl Coordinator {
@@ -77,12 +114,14 @@ impl Coordinator {
             n,
             dim,
             mode,
-            memories,
+            workers: Workers::Local(memories),
             fabric,
             k: k.clamp(1, dim),
             layered: None,
             warmup_steps,
             backend: Backend::Sequential,
+            pending: VecDeque::new(),
+            ready: VecDeque::new(),
         }
     }
 
@@ -95,8 +134,37 @@ impl Coordinator {
 
     /// Select the execution backend (defaults to `Sequential`).
     pub fn with_backend(mut self, backend: Backend) -> Self {
-        self.backend = backend;
+        self.set_backend(backend);
         self
+    }
+
+    /// Switch execution backend, migrating the per-worker memories
+    /// between the coordinator and the persistent pool. Must not be
+    /// called with overlapped steps in flight.
+    pub fn set_backend(&mut self, backend: Backend) {
+        assert!(
+            !self.in_flight(),
+            "cannot switch backends with steps in flight"
+        );
+        if self.backend == backend {
+            return;
+        }
+        let memories =
+            match std::mem::replace(&mut self.workers, Workers::Local(Vec::new())) {
+                Workers::Local(m) => m,
+                // Snapshot out of the pool, then drop it (joins lanes).
+                Workers::Pool(pool) => pool.snapshot(),
+            };
+        self.workers = if backend == Backend::Pipelined {
+            Workers::Pool(WorkerPool::new(memories))
+        } else {
+            Workers::Local(memories)
+        };
+        self.backend = backend;
+    }
+
+    pub fn backend(&self) -> Backend {
+        self.backend
     }
 
     pub fn workers(&self) -> usize {
@@ -107,28 +175,255 @@ impl Coordinator {
         self.dim
     }
 
+    /// True when `step_overlapped` has a step in flight (or buffered)
+    /// that `finish_overlapped` has not drained yet.
+    pub fn in_flight(&self) -> bool {
+        !self.pending.is_empty() || !self.ready.is_empty()
+    }
+
+    fn pool(&self) -> &WorkerPool {
+        match &self.workers {
+            Workers::Pool(p) => p,
+            Workers::Local(_) => panic!("pipelined backend without a worker pool"),
+        }
+    }
+
+    /// Direct borrow of the error-feedback memories. Only the in-process
+    /// backends keep them in the coordinator — on `pipelined` they live
+    /// on the worker pool; use [`Coordinator::memory_snapshot`] there.
+    pub fn memories(&self) -> &[EfMemory] {
+        match &self.workers {
+            Workers::Local(m) => m,
+            Workers::Pool(_) => panic!(
+                "pipelined memories live on the worker pool; use memory_snapshot()"
+            ),
+        }
+    }
+
+    /// Mutable counterpart of [`Coordinator::memories`] (kernel path,
+    /// sequential backend only).
+    pub fn memories_mut(&mut self) -> &mut [EfMemory] {
+        match &mut self.workers {
+            Workers::Local(m) => m,
+            Workers::Pool(_) => panic!(
+                "pipelined memories live on the worker pool; use memory_snapshot()"
+            ),
+        }
+    }
+
+    /// Backend-independent snapshot of every worker's error-feedback
+    /// memory. On the pipelined backend this is served by the pool's
+    /// lanes in FIFO order, so it reflects every step submitted so far —
+    /// including ones whose collective is still in flight (their memory
+    /// update never depends on the reduced values).
+    pub fn memory_snapshot(&self) -> Vec<EfMemory> {
+        match &self.workers {
+            Workers::Local(m) => m.clone(),
+            Workers::Pool(p) => p.snapshot(),
+        }
+    }
+
     pub fn set_beta(&mut self, beta: f32) {
-        for m in &mut self.memories {
-            m.set_beta(beta);
+        match &mut self.workers {
+            Workers::Local(ms) => {
+                for m in ms {
+                    m.set_beta(beta);
+                }
+            }
+            Workers::Pool(p) => p.set_beta(beta),
         }
     }
 
     /// Error-feedback gradients m_i + ∇f_i for all workers.
     pub fn ef_grads(&self, grads: &[Vec<f32>]) -> Vec<Vec<f32>> {
         assert_eq!(grads.len(), self.n);
-        self.memories
-            .iter()
-            .zip(grads)
-            .map(|(m, g)| m.ef_grad(g))
-            .collect()
+        match &self.workers {
+            Workers::Local(ms) => {
+                ms.iter().zip(grads).map(|(m, g)| m.ef_grad(g)).collect()
+            }
+            Workers::Pool(p) => p.ef_grads(grads),
+        }
     }
 
-    /// One coordination step over this iteration's stochastic gradients.
-    pub fn step(&mut self, t: usize, grads: &[Vec<f32>]) -> StepResult {
+    fn validate_grads(&self, grads: &[Vec<f32>]) {
         assert_eq!(grads.len(), self.n, "need one gradient per worker");
         for (w, g) in grads.iter().enumerate() {
             assert_eq!(g.len(), self.dim, "worker {w} gradient dim");
         }
+    }
+
+    /// One coordination step over this iteration's stochastic gradients.
+    pub fn step(&mut self, t: usize, grads: &[Vec<f32>]) -> StepResult {
+        assert!(
+            !self.in_flight(),
+            "step() with overlapped steps in flight; drain finish_overlapped() first"
+        );
+        match self.backend {
+            Backend::Pipelined => {
+                self.submit(t, grads);
+                self.wait_oldest().expect("step was just submitted")
+            }
+            _ => self.step_eager(t, grads),
+        }
+    }
+
+    /// Double-buffered driving mode: submit step `t`, then return step
+    /// `t−1`'s result (None on the first call). On the pipelined backend
+    /// step t's EF-gradient/selection compute and memory updates overlap
+    /// step t−1's in-flight collective; the other backends execute
+    /// eagerly and just delay the result by one call, so all three
+    /// produce the identical stream (the backend-matrix parity lock).
+    /// Call [`Coordinator::finish_overlapped`] to drain the last step.
+    pub fn step_overlapped(&mut self, t: usize, grads: &[Vec<f32>]) -> Option<StepResult> {
+        match self.backend {
+            Backend::Pipelined => {
+                self.submit(t, grads);
+                if self.pending.len() > 1 {
+                    self.wait_oldest()
+                } else {
+                    None
+                }
+            }
+            _ => {
+                let r = self.step_eager(t, grads);
+                self.ready.push_back(r);
+                if self.ready.len() > 1 {
+                    self.ready.pop_front()
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// Drain every step still in flight (or buffered), in step order.
+    pub fn finish_overlapped(&mut self) -> Vec<StepResult> {
+        let mut out: Vec<StepResult> = self.ready.drain(..).collect();
+        while let Some(r) = self.wait_oldest() {
+            out.push(r);
+        }
+        out
+    }
+
+    /// Submit one step to the worker pool without waiting for its
+    /// collective: EF gradients + stash on the compute lanes, selection
+    /// on the calling thread, payload forwarded to the comm lanes,
+    /// memory updates applied lane-side.
+    fn submit(&mut self, t: usize, grads: &[Vec<f32>]) {
+        self.validate_grads(grads);
+        let leader = t % self.n;
+        let dense_path = matches!(self.mode, Mode::Dense) || t < self.warmup_steps;
+        if dense_path {
+            self.pool().dense_step(grads);
+            self.pending.push_back(Pending {
+                leader,
+                selection: None,
+                dense: true,
+            });
+            return;
+        }
+        let efs = self.pool().begin_step(grads);
+        let selection = self.select_indices(t, &efs);
+        match &selection {
+            Selection::Shared(idx) => {
+                let vals: Vec<Vec<f32>> = efs
+                    .iter()
+                    .map(|ef| idx.iter().map(|&i| ef[i as usize]).collect())
+                    .collect();
+                self.pool().finish_shared(idx, vals);
+            }
+            Selection::PerWorker(per) => {
+                let sparses: Vec<SparseGrad> = efs
+                    .iter()
+                    .zip(per)
+                    .map(|(ef, idx)| sparsify(ef, idx))
+                    .collect();
+                self.pool().finish_gather(sparses);
+            }
+        }
+        self.pending.push_back(Pending {
+            leader,
+            selection: Some(selection),
+            dense: false,
+        });
+    }
+
+    /// Wait for the oldest submitted step's collective, book its
+    /// communication cost (identical shape accounting to the other
+    /// backends), and assemble the `StepResult`.
+    fn wait_oldest(&mut self) -> Option<StepResult> {
+        let p = self.pending.pop_front()?;
+        if p.dense {
+            let update = self.pool().wait_reduced();
+            self.fabric.record_dense_allreduce(self.n, self.dim);
+            let comm = self.fabric.stats().last_cost().clone();
+            return Some(StepResult {
+                update,
+                selection: None,
+                leader: p.leader,
+                comm,
+                rate: 1.0,
+                dense: true,
+            });
+        }
+        let selection = p.selection.expect("compressed step carries a selection");
+        let (update, comm, sent) = match &selection {
+            Selection::Shared(idx) => {
+                let vals = self.pool().wait_reduced();
+                let comm = self.fabric.record_sparse_allreduce_shared(self.n, idx.len());
+                let avg = SparseGrad::new(self.dim, idx.clone(), vals);
+                (avg.to_dense(), comm, idx.len())
+            }
+            Selection::PerWorker(per) => {
+                let (avg, gs) = self.pool().wait_gathered();
+                let comm = self.fabric.record_sparse_gather(&gs);
+                let sent = per.iter().map(|p| p.len()).max().unwrap_or(0);
+                (avg, comm, sent)
+            }
+        };
+        Some(StepResult {
+            update,
+            rate: self.dim as f64 / sent.max(1) as f64,
+            selection: Some(selection),
+            leader: p.leader,
+            comm,
+            dense: false,
+        })
+    }
+
+    /// Run the compression scheme over this step's EF gradients (the
+    /// selection compute the pipelined backend overlaps with the
+    /// previous step's collective).
+    fn select_indices(&mut self, t: usize, efs: &[Vec<f32>]) -> Selection {
+        let ef_views: Vec<&[f32]> = efs.iter().map(|e| e.as_slice()).collect();
+        // Selection fan-out follows the machine, not the simulated worker
+        // count: 64 simulated workers on a 4-core box must not spawn 64
+        // scan threads (results are thread-count-independent by the
+        // `select_parallel` contract).
+        let threads = match self.backend {
+            Backend::Sequential => 1,
+            Backend::Threaded | Backend::Pipelined => {
+                std::thread::available_parallelism()
+                    .map(|p| p.get())
+                    .unwrap_or(1)
+            }
+        };
+        let compressor = match &mut self.mode {
+            Mode::Compressed(c) => c,
+            Mode::Dense => unreachable!("selection on the dense path"),
+        };
+        if let Some((partition, ks)) = &self.layered {
+            select_layered(compressor.as_mut(), t, &ef_views, partition, ks, threads)
+        } else if threads > 1 {
+            compressor.select_parallel(t, &ef_views, self.k, threads)
+        } else {
+            compressor.select(t, &ef_views, self.k)
+        }
+    }
+
+    /// Synchronous step on the in-process backends (the PR 1 semantics).
+    fn step_eager(&mut self, t: usize, grads: &[Vec<f32>]) -> StepResult {
+        self.validate_grads(grads);
         let leader = t % self.n;
 
         let dense_path = matches!(self.mode, Mode::Dense) || t < self.warmup_steps;
@@ -140,6 +435,7 @@ impl Coordinator {
                     self.fabric.record_dense_allreduce(grads.len(), self.dim);
                     out
                 }
+                Backend::Pipelined => unreachable!("pipelined steps go through submit"),
             };
             let comm = self.fabric.stats().last_cost().clone();
             return StepResult {
@@ -155,32 +451,12 @@ impl Coordinator {
         // --- compressed path -------------------------------------------
         let efs = match self.backend {
             Backend::Sequential => self.ef_grads(grads),
-            Backend::Threaded => threaded::parallel_ef_grads(&self.memories, grads),
+            Backend::Threaded => threaded::parallel_ef_grads(self.memories(), grads),
+            Backend::Pipelined => unreachable!("pipelined steps go through submit"),
         };
-        let ef_views: Vec<&[f32]> = efs.iter().map(|e| e.as_slice()).collect();
         let backend = self.backend;
         let n = self.n;
-        // Selection fan-out follows the machine, not the simulated worker
-        // count: 64 simulated workers on a 4-core box must not spawn 64
-        // scan threads (results are thread-count-independent by the
-        // `select_parallel` contract).
-        let threads = match backend {
-            Backend::Sequential => 1,
-            Backend::Threaded => std::thread::available_parallelism()
-                .map(|p| p.get())
-                .unwrap_or(1),
-        };
-        let compressor = match &mut self.mode {
-            Mode::Compressed(c) => c,
-            Mode::Dense => unreachable!(),
-        };
-        let selection = if let Some((partition, ks)) = &self.layered {
-            select_layered(compressor.as_mut(), t, &ef_views, partition, ks, threads)
-        } else if threads > 1 {
-            compressor.select_parallel(t, &ef_views, self.k, threads)
-        } else {
-            compressor.select(t, &ef_views, self.k)
-        };
+        let selection = self.select_indices(t, &efs);
 
         let (update, comm, sent) = match (&selection, backend) {
             (Selection::Shared(idx), Backend::Sequential) => {
@@ -195,8 +471,12 @@ impl Coordinator {
             }
             (Selection::Shared(idx), Backend::Threaded) => {
                 // sparsify + ring reduce + memory update on worker threads
-                let vals =
-                    threaded::exchange_shared(&mut self.memories, grads, &efs, idx);
+                let vals = threaded::exchange_shared(
+                    self.local_memories_mut(),
+                    grads,
+                    &efs,
+                    idx,
+                );
                 let comm = self.fabric.record_sparse_allreduce_shared(n, idx.len());
                 let avg = SparseGrad::new(self.dim, idx.clone(), vals);
                 (avg.to_dense(), comm, idx.len())
@@ -213,19 +493,25 @@ impl Coordinator {
             }
             (Selection::PerWorker(per), Backend::Threaded) => {
                 // sparsify + star gather + memory update on worker threads
-                let (avg, gs) =
-                    threaded::exchange_gather(&mut self.memories, grads, &efs, per);
+                let (avg, gs) = threaded::exchange_gather(
+                    self.local_memories_mut(),
+                    grads,
+                    &efs,
+                    per,
+                );
                 let comm = self.fabric.record_sparse_gather(&gs);
                 let sent = per.iter().map(|p| p.len()).max().unwrap_or(0);
                 (avg, comm, sent)
             }
+            (_, Backend::Pipelined) => unreachable!("pipelined steps go through submit"),
         };
 
         // memory update (Eqn. 5) with each worker's transmitted indices —
         // the threaded exchanges already updated each memory on its
         // worker's thread.
         if backend == Backend::Sequential {
-            for (w, mem) in self.memories.iter_mut().enumerate() {
+            let memories = self.local_memories_mut();
+            for (w, mem) in memories.iter_mut().enumerate() {
                 mem.update_after_send(&grads[w], selection.indices_for(w));
             }
         }
@@ -237,6 +523,15 @@ impl Coordinator {
             leader,
             comm,
             dense: false,
+        }
+    }
+
+    fn local_memories_mut(&mut self) -> &mut Vec<EfMemory> {
+        match &mut self.workers {
+            Workers::Local(m) => m,
+            Workers::Pool(_) => {
+                unreachable!("in-process step on the pipelined backend")
+            }
         }
     }
 }
@@ -406,7 +701,7 @@ mod tests {
                 }
             }
             // add back what's still in memory (averaged over workers)
-            for mem in &c.memories {
+            for mem in &c.memory_snapshot() {
                 for (acc, &v) in total_updates.iter_mut().zip(mem.memory()) {
                     *acc += v as f64 / n as f64;
                 }
@@ -568,5 +863,120 @@ mod tests {
                 panic!("coord {i}: {} vs {}", r.update[i], expect[i]);
             }
         });
+    }
+
+    #[test]
+    fn pipelined_synchronous_step_matches_sequential() {
+        let n = 4;
+        let dim = 64;
+        let mk = |backend| {
+            Coordinator::new(
+                n,
+                dim,
+                Mode::Compressed(Box::new(CltK::exact())),
+                0.5,
+                8,
+                fabric(n),
+                2, // cover the dense-warmup → compressed transition
+            )
+            .with_backend(backend)
+        };
+        let mut seq = mk(Backend::Sequential);
+        let mut pipe = mk(Backend::Pipelined);
+        let mut rng = Rng::new(17);
+        for t in 0..8 {
+            let grads = rand_grads(&mut rng, n, dim);
+            let a = seq.step(t, &grads);
+            let b = pipe.step(t, &grads);
+            assert_eq!(a.selection, b.selection, "t={t}");
+            assert_eq!(a.dense, b.dense, "t={t}");
+            assert_eq!(a.comm, b.comm, "t={t}");
+            assert!(allclose(&a.update, &b.update, 1e-5, 1e-6).is_ok(), "t={t}");
+        }
+        for (a, b) in seq.memory_snapshot().iter().zip(&pipe.memory_snapshot()) {
+            assert!(allclose(a.memory(), b.memory(), 1e-6, 1e-7).is_ok());
+        }
+    }
+
+    #[test]
+    fn overlapped_stream_lags_by_one_and_drains() {
+        // On every backend: step_overlapped(t) returns step t−1's result,
+        // and finish_overlapped returns the final step.
+        for backend in Backend::ALL {
+            let n = 3;
+            let dim = 32;
+            let mut eager = Coordinator::new(
+                n,
+                dim,
+                Mode::Compressed(Box::new(CltK::exact())),
+                1.0,
+                4,
+                fabric(n),
+                0,
+            );
+            let mut lagged = Coordinator::new(
+                n,
+                dim,
+                Mode::Compressed(Box::new(CltK::exact())),
+                1.0,
+                4,
+                fabric(n),
+                0,
+            )
+            .with_backend(backend);
+            let mut rng = Rng::new(23);
+            let steps = 6;
+            let mut streamed = Vec::new();
+            for t in 0..steps {
+                let grads = rand_grads(&mut rng, n, dim);
+                let _ = eager.step(t, &grads);
+                if t == 0 {
+                    assert!(lagged.step_overlapped(t, &grads).is_none());
+                } else {
+                    streamed.push(
+                        lagged
+                            .step_overlapped(t, &grads)
+                            .expect("one-step lag after t=0"),
+                    );
+                }
+                assert!(lagged.in_flight());
+            }
+            streamed.extend(lagged.finish_overlapped());
+            assert!(!lagged.in_flight());
+            assert_eq!(streamed.len(), steps, "backend {}", backend.label());
+            for (t, r) in streamed.iter().enumerate() {
+                assert_eq!(r.leader, t % n, "backend {}", backend.label());
+            }
+            // identical comm ledger to the eager reference
+            assert_eq!(eager.fabric.stats().ops, lagged.fabric.stats().ops);
+        }
+    }
+
+    #[test]
+    fn set_backend_migrates_memories_between_pool_and_local() {
+        let n = 2;
+        let dim = 16;
+        let mut c = Coordinator::new(
+            n,
+            dim,
+            Mode::Compressed(Box::new(CltK::exact())),
+            1.0,
+            4,
+            fabric(n),
+            0,
+        );
+        let mut rng = Rng::new(3);
+        let _ = c.step(0, &rand_grads(&mut rng, n, dim));
+        let before = c.memory_snapshot();
+        assert!(before.iter().any(|m| m.norm() > 0.0));
+        // local → pool → local round-trips the exact memory state
+        c.set_backend(Backend::Pipelined);
+        for (a, b) in before.iter().zip(&c.memory_snapshot()) {
+            assert_eq!(a.memory(), b.memory());
+        }
+        let _ = c.step(1, &rand_grads(&mut rng, n, dim));
+        c.set_backend(Backend::Sequential);
+        assert_eq!(c.backend(), Backend::Sequential);
+        assert_eq!(c.memories().len(), n);
     }
 }

@@ -154,6 +154,27 @@ pub fn step_time(net: &PaperNet, sys: &SystemConfig, scheme: Scheme) -> StepBrea
     }
 }
 
+/// Step time under the fully-pipelined (double-buffered) engine: the
+/// next step's gradient/selection compute runs while the current step's
+/// exchange is in flight, so instead of the serial sum the step costs
+///
+///   t_step = max(t_compute, t_comm)
+///
+/// (`overlap = 1` in [`step_time`]'s exposed-communication formula; with
+/// comm ≤ compute the exchange is completely hidden). This is the
+/// analytic model for the `pipelined` execution backend
+/// (`runtime::pipelined`); `bench_allreduce` compares its measured
+/// overlap efficiency against this prediction.
+pub fn step_time_overlapped(
+    net: &PaperNet,
+    sys: &SystemConfig,
+    scheme: Scheme,
+) -> StepBreakdown {
+    let mut s = sys.clone();
+    s.overlap = 1.0;
+    step_time(net, &s, scheme)
+}
+
 /// Speedup of `scheme` relative to `baseline` on the same system.
 pub fn speedup(net: &PaperNet, sys: &SystemConfig, scheme: Scheme, baseline: Scheme) -> f64 {
     step_time(net, sys, baseline).total_s / step_time(net, sys, scheme).total_s
@@ -271,5 +292,29 @@ mod tests {
         s.overlap = 0.5;
         let hidden = step_time(&net, &s, Scheme::None).exposed_comm_s;
         assert!(hidden < exposed);
+    }
+
+    #[test]
+    fn overlapped_step_is_max_of_compute_and_comm_not_sum() {
+        let net = paper_net("resnet50").unwrap();
+        for (n, mb) in [(8usize, 8usize), (64, 8), (64, 32), (128, 8)] {
+            for scheme in [Scheme::None, Scheme::LocalTopK, Scheme::ScaleCom] {
+                let s = sys(n, mb, 100.0);
+                let serial = step_time(&net, &s, scheme);
+                let over = step_time_overlapped(&net, &s, scheme);
+                let comm = serial.grad_up_s + serial.grad_down_s + serial.index_s;
+                assert!(
+                    (serial.total_s - (serial.compute_s + comm)).abs() < 1e-12,
+                    "serial model is the sum"
+                );
+                assert!(
+                    (over.total_s - serial.compute_s.max(comm)).abs() < 1e-12,
+                    "overlapped model is max(compute, comm): {} vs {}",
+                    over.total_s,
+                    serial.compute_s.max(comm)
+                );
+                assert!(over.total_s <= serial.total_s);
+            }
+        }
     }
 }

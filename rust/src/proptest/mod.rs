@@ -269,6 +269,130 @@ mod definition1 {
     }
 }
 
+/// Pipelined-engine properties: the persistent pool's double-buffer must
+/// keep the exact Algorithm-1 semantics.
+///
+///   (a) **one-step-lag EF math** — step t's EF-gradient/selection
+///       compute reads exactly the post-step-(t−1) memory, even while
+///       step t−1's collective is still in flight;
+///   (b) **shutdown/drain** — stopping the run at a random step leaves no
+///       step partially applied: every submitted step's memory update is
+///       complete (FIFO drain), and dropping the pool with results still
+///       in flight neither hangs nor panics.
+#[cfg(test)]
+mod pipeline {
+    use super::check;
+    use crate::comm::{Backend, Fabric, FabricConfig, Topology};
+    use crate::compress::schemes::make_compressor;
+    use crate::coordinator::{Coordinator, Mode};
+    use crate::util::floats::allclose;
+
+    fn coord(scheme: &str, n: usize, dim: usize, k: usize, backend: Backend) -> Coordinator {
+        let fabric = Fabric::new(FabricConfig {
+            workers: n,
+            topology: Topology::Ring,
+            ..FabricConfig::default()
+        });
+        let mode = Mode::Compressed(make_compressor(scheme, dim.div_ceil(k), 9).unwrap());
+        Coordinator::new(n, dim, mode, 0.5, k, fabric, 0).with_backend(backend)
+    }
+
+    #[test]
+    fn pipelined_compute_reads_exactly_post_previous_step_memory() {
+        check("one-step-lag EF math", 20, |g| {
+            let n = g.usize_in(2..=6);
+            let dim = g.usize_in(8..=96);
+            let k = g.usize_in(1..=(dim / 2).max(1));
+            let steps = g.usize_in(2..=12);
+            // cover both exchange kinds: shared ring + per-worker gather
+            let scheme = if g.bool() { "scalecom-exact" } else { "local-topk" };
+            let mut seq = coord(scheme, n, dim, k, Backend::Sequential);
+            let mut pipe = coord(scheme, n, dim, k, Backend::Pipelined);
+            let mut seq_results = Vec::new();
+            let mut streamed = Vec::new();
+            for t in 0..steps {
+                let grads: Vec<Vec<f32>> =
+                    (0..n).map(|_| g.f32_vec_len(dim, 1.0)).collect();
+                seq_results.push(seq.step(t, &grads));
+                if let Some(r) = pipe.step_overlapped(t, &grads) {
+                    streamed.push(r);
+                }
+                // The pool snapshot is FIFO-ordered behind step t's
+                // submission: it must equal the sequential post-step-t
+                // state — exactly what step t+1's compute will read.
+                let ps = pipe.memory_snapshot();
+                let ss = seq.memory_snapshot();
+                for (w, (a, b)) in ps.iter().zip(&ss).enumerate() {
+                    if let Err(i) = allclose(a.memory(), b.memory(), 1e-6, 1e-7) {
+                        panic!(
+                            "{scheme} n={n} t={t} worker={w} coord {i}: \
+                             pipelined memory {} vs sequential {}",
+                            a.memory()[i],
+                            b.memory()[i]
+                        );
+                    }
+                }
+            }
+            streamed.extend(pipe.finish_overlapped());
+            assert_eq!(streamed.len(), steps);
+            for (t, (a, b)) in seq_results.iter().zip(&streamed).enumerate() {
+                // selections are a pure function of the EF gradients: a
+                // stale or torn memory read would change the top-k sets
+                assert_eq!(
+                    a.selection, b.selection,
+                    "{scheme} n={n} t={t}: selection lag mismatch"
+                );
+                if let Err(i) = allclose(&a.update, &b.update, 1e-5, 1e-6) {
+                    panic!(
+                        "{scheme} n={n} t={t} coord {i}: {} vs {}",
+                        a.update[i], b.update[i]
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn pool_shutdown_drain_leaves_no_step_partially_applied() {
+        check("pipelined early-stop drain", 20, |g| {
+            let n = g.usize_in(2..=5);
+            let dim = g.usize_in(8..=64);
+            let k = g.usize_in(1..=(dim / 2).max(1));
+            let total = g.usize_in(1..=12);
+            let stop = g.usize_in(1..=total); // inject an early stop
+            let scheme = if g.bool() { "scalecom-exact" } else { "local-topk" };
+            let mut seq = coord(scheme, n, dim, k, Backend::Sequential);
+            let mut pipe = coord(scheme, n, dim, k, Backend::Pipelined);
+            for t in 0..stop {
+                let grads: Vec<Vec<f32>> =
+                    (0..n).map(|_| g.f32_vec_len(dim, 1.0)).collect();
+                let _ = seq.step(t, &grads);
+                let _ = pipe.step_overlapped(t, &grads);
+            }
+            // The last step's collective is still in flight and its
+            // result is never collected — yet the memory state must
+            // already reflect ALL submitted steps (memory updates never
+            // depend on the reduced values), i.e. no partial application.
+            let ps = pipe.memory_snapshot();
+            let ss = seq.memory_snapshot();
+            for (w, (a, b)) in ps.iter().zip(&ss).enumerate() {
+                if let Err(i) = allclose(a.memory(), b.memory(), 1e-6, 1e-7) {
+                    panic!(
+                        "{scheme} n={n} stop={stop} worker={w} coord {i}: \
+                         drained memory {} vs sequential {}",
+                        a.memory()[i],
+                        b.memory()[i]
+                    );
+                }
+            }
+            // Drop with a result still pending: lanes must drain their
+            // queues and join cleanly (a hang here fails the test by
+            // timeout; a panic fails it loudly).
+            drop(pipe);
+        });
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

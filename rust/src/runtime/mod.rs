@@ -1,18 +1,22 @@
-//! Runtime: PJRT client wrapper, artifact manifest, and the threaded
-//! worker engine.
+//! Runtime: PJRT client wrapper, artifact manifest, and the worker
+//! execution engines.
 //!
 //! `Engine` loads the HLO-text artifacts that `make artifacts` produced
 //! and exposes typed train/eval/compress/apply calls. Python never runs
 //! here — the Rust binary is self-contained once `artifacts/` exists.
-//! `threaded` is the thread-per-worker execution backend behind
-//! `Backend::Threaded` (see `comm::parallel` for the collectives).
+//! `threaded` is the scoped thread-per-worker execution backend behind
+//! `Backend::Threaded`; `pipelined` is the persistent double-buffering
+//! worker pool behind `Backend::Pipelined` (see `comm::parallel` for the
+//! collectives both run on).
 
 pub mod engine;
 pub mod manifest;
+pub mod pipelined;
 pub mod threaded;
 
 pub use engine::{Engine, LoadedModel};
 pub use manifest::{Dtype, Manifest, ModelManifest, TensorSpec};
+pub use pipelined::WorkerPool;
 
 use std::path::Path;
 

@@ -1,0 +1,483 @@
+//! Pipelined backend: a persistent worker pool that double-buffers steps.
+//!
+//! The threaded backend (PR 1) spawns scoped threads and rebuilds the
+//! channel mesh every step, and runs each step's compute strictly before
+//! its exchange. This engine spawns every thread **once per run**:
+//!
+//!   - a **compute lane** per worker — a long-lived thread that *owns*
+//!     the worker's `EfMemory` (the coordinator talks to it through the
+//!     handle API below) and executes, FIFO: EF gradient, value
+//!     extraction forwarding, and the low-pass memory update;
+//!   - a **comm lane** per worker (`comm::parallel::CommLanes`) — a
+//!     long-lived thread owning the worker's ring and star endpoints,
+//!     running the blocking collectives off the compute path.
+//!
+//! Double-buffering falls out of the lane split: as soon as a compute
+//! lane has forwarded step t's payload to its comm lane it applies the
+//! memory update and is free to compute step t+1's EF gradient — while
+//! step t's ring reduce-scatter/all-gather (or star gather) is still in
+//! flight. Because each lane's command queue is FIFO, step t+1's EF
+//! gradient always reads exactly the post-step-t memory (the one-step-lag
+//! contract, property-tested in `crate::proptest`).
+//!
+//! Semantics are inside PR 1's determinism contract (locked by
+//! `rust/tests/backend_parity.rs`): EF gradients, selections, and memory
+//! updates are bit-identical to the sequential backend; the gather-path
+//! root reduction is bit-identical; ring-reduced f32 values match within
+//! rtol 1e-5 / atol 1e-6; pipelined runs are bit-identical to each other.
+
+use crate::comm::parallel::{CollectiveResult, CommJob, CommLanes};
+use crate::comm::GatherStats;
+use crate::compress::{EfMemory, SparseGrad};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// Commands a compute lane executes in FIFO order.
+enum Cmd {
+    /// Start a step: compute `ef = m + grad`, stash `grad` for this
+    /// step's memory update, reply with `ef`.
+    BeginStep {
+        grad: Vec<f32>,
+        reply: Sender<Vec<f32>>,
+    },
+    /// Finish a shared-index step: forward the k selected values into
+    /// the ring, then apply the low-pass memory update with the stashed
+    /// gradient and the broadcast index set.
+    FinishShared { idx: Arc<Vec<u32>>, vals: Vec<f32> },
+    /// Finish a per-worker-index step: forward the sparse contribution
+    /// to the star, then apply the memory update with its index set.
+    FinishGather { sparse: SparseGrad },
+    /// Dense (warmup / no-compression) step: forward the full gradient
+    /// into the ring; memory is not involved.
+    Dense { grad: Vec<f32> },
+    /// Pure EF-gradient query (trainer hooks, tests) — touches no step
+    /// state.
+    EfQuery {
+        grad: Vec<f32>,
+        reply: Sender<Vec<f32>>,
+    },
+    /// Reply with a clone of the current memory. FIFO ⇒ the snapshot
+    /// reflects every step submitted before this command.
+    Snapshot { reply: Sender<EfMemory> },
+    SetBeta(f32),
+}
+
+/// Handle to the persistent worker pool. Owned by the `Coordinator` for
+/// the pipelined backend; dropping it drains every queued command (no
+/// step is left partially applied), then joins all lane threads.
+pub struct WorkerPool {
+    cmds: Vec<Sender<Cmd>>,
+    lanes: CommLanes,
+    compute: Vec<JoinHandle<()>>,
+    n: usize,
+    dim: usize,
+}
+
+impl WorkerPool {
+    /// Spawn the pool, moving each worker's error-feedback memory into
+    /// its compute lane.
+    pub fn new(memories: Vec<EfMemory>) -> WorkerPool {
+        let n = memories.len();
+        assert!(n >= 1, "worker pool needs at least one worker");
+        let dim = memories[0].dim();
+        assert!(
+            memories.iter().all(|m| m.dim() == dim),
+            "worker memories must share one dimension"
+        );
+        let lanes = CommLanes::new(n);
+        let mut cmds = Vec::with_capacity(n);
+        let mut compute = Vec::with_capacity(n);
+        for (w, mem) in memories.into_iter().enumerate() {
+            let (tx, rx) = channel::<Cmd>();
+            let job_tx = lanes.job_sender(w);
+            compute.push(std::thread::spawn(move || {
+                compute_lane_loop(mem, rx, job_tx)
+            }));
+            cmds.push(tx);
+        }
+        WorkerPool {
+            cmds,
+            lanes,
+            compute,
+            n,
+            dim,
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.n
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn fan_out_ef(&self, grads: &[Vec<f32>], stash: bool) -> Vec<Vec<f32>> {
+        assert_eq!(grads.len(), self.n, "one gradient per worker");
+        let replies: Vec<Receiver<Vec<f32>>> = self
+            .cmds
+            .iter()
+            .zip(grads)
+            .map(|(tx, g)| {
+                let (rtx, rrx) = channel();
+                let cmd = if stash {
+                    Cmd::BeginStep {
+                        grad: g.clone(),
+                        reply: rtx,
+                    }
+                } else {
+                    Cmd::EfQuery {
+                        grad: g.clone(),
+                        reply: rtx,
+                    }
+                };
+                tx.send(cmd).expect("pool command send");
+                rrx
+            })
+            .collect();
+        replies
+            .iter()
+            .map(|r| r.recv().expect("pool ef reply"))
+            .collect()
+    }
+
+    /// EF gradients `m_i + ∇f_i` on every worker lane (pure query).
+    pub fn ef_grads(&self, grads: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        self.fan_out_ef(grads, false)
+    }
+
+    /// Start a compressed step: every lane stashes its gradient for the
+    /// upcoming memory update and returns its EF gradient.
+    pub fn begin_step(&self, grads: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        self.fan_out_ef(grads, true)
+    }
+
+    /// Finish a shared-index step (CLT-k path): `vals[w]` are worker w's
+    /// EF-gradient values at the broadcast indices. Non-blocking — the
+    /// ring reduce runs on the comm lanes; collect it with
+    /// [`WorkerPool::wait_reduced`].
+    pub fn finish_shared(&self, idx: &[u32], vals: Vec<Vec<f32>>) {
+        assert_eq!(vals.len(), self.n, "one value set per worker");
+        let idx = Arc::new(idx.to_vec());
+        for (tx, v) in self.cmds.iter().zip(vals) {
+            tx.send(Cmd::FinishShared {
+                idx: idx.clone(),
+                vals: v,
+            })
+            .expect("pool command send");
+        }
+    }
+
+    /// Finish a per-worker-index step (build-up path): `sparses[w]` is
+    /// worker w's sparsified contribution. Non-blocking — collect with
+    /// [`WorkerPool::wait_gathered`].
+    pub fn finish_gather(&self, sparses: Vec<SparseGrad>) {
+        assert_eq!(sparses.len(), self.n, "one contribution per worker");
+        for (tx, sg) in self.cmds.iter().zip(sparses) {
+            tx.send(Cmd::FinishGather { sparse: sg })
+                .expect("pool command send");
+        }
+    }
+
+    /// Dense step: ring all-reduce of the full gradients. Non-blocking —
+    /// collect with [`WorkerPool::wait_reduced`].
+    pub fn dense_step(&self, grads: &[Vec<f32>]) {
+        assert_eq!(grads.len(), self.n, "one gradient per worker");
+        for (tx, g) in self.cmds.iter().zip(grads) {
+            tx.send(Cmd::Dense { grad: g.clone() })
+                .expect("pool command send");
+        }
+    }
+
+    /// Wait for the oldest in-flight ring collective (shared or dense).
+    pub fn wait_reduced(&self) -> Vec<f32> {
+        match self.lanes.wait() {
+            CollectiveResult::Reduced(v) => v,
+            CollectiveResult::Gathered(..) => {
+                panic!("expected a ring result, got a gather result")
+            }
+        }
+    }
+
+    /// Wait for the oldest in-flight star gather.
+    pub fn wait_gathered(&self) -> (Vec<f32>, GatherStats) {
+        match self.lanes.wait() {
+            CollectiveResult::Gathered(v, gs) => (v, gs),
+            CollectiveResult::Reduced(_) => {
+                panic!("expected a gather result, got a ring result")
+            }
+        }
+    }
+
+    /// Clone every worker's memory out of its lane. FIFO with respect to
+    /// step commands: the snapshot reflects all steps submitted before
+    /// this call, even ones whose collective is still in flight.
+    pub fn snapshot(&self) -> Vec<EfMemory> {
+        let replies: Vec<Receiver<EfMemory>> = self
+            .cmds
+            .iter()
+            .map(|tx| {
+                let (rtx, rrx) = channel();
+                tx.send(Cmd::Snapshot { reply: rtx })
+                    .expect("pool command send");
+                rrx
+            })
+            .collect();
+        replies
+            .iter()
+            .map(|r| r.recv().expect("pool snapshot reply"))
+            .collect()
+    }
+
+    /// Change β on every worker's memory (takes effect after every step
+    /// already submitted, before any step submitted later).
+    pub fn set_beta(&self, beta: f32) {
+        assert!(
+            beta > 0.0 && beta <= 1.0,
+            "discount factor β must be in (0, 1], got {beta}"
+        );
+        for tx in &self.cmds {
+            tx.send(Cmd::SetBeta(beta)).expect("pool command send");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Close the command queues; each compute lane drains what is
+        // already enqueued (finishing any submitted step's update — no
+        // partial application), then exits, dropping its comm-job
+        // sender. `self.lanes` drops afterwards and joins the comm
+        // threads once their queues drain too.
+        self.cmds.clear();
+        for h in self.compute.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn compute_lane_loop(mut mem: EfMemory, rx: Receiver<Cmd>, job_tx: Sender<CommJob>) {
+    // This step's gradient, held between BeginStep and Finish*.
+    let mut stash: Option<Vec<f32>> = None;
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Cmd::BeginStep { grad, reply } => {
+                let ef = mem.ef_grad(&grad);
+                stash = Some(grad);
+                let _ = reply.send(ef);
+            }
+            Cmd::EfQuery { grad, reply } => {
+                let _ = reply.send(mem.ef_grad(&grad));
+            }
+            Cmd::FinishShared { idx, vals } => {
+                // Forward first so the collective starts while this lane
+                // applies the memory update (Eqn. 5) — the update depends
+                // only on (grad, idx), never on the reduced values.
+                job_tx.send(CommJob::RingAvg(vals)).expect("comm lane send");
+                let grad = stash.take().expect("FinishShared without BeginStep");
+                mem.update_after_send(&grad, idx.as_slice());
+            }
+            Cmd::FinishGather { sparse } => {
+                let idx = sparse.indices.clone();
+                job_tx.send(CommJob::Gather(sparse)).expect("comm lane send");
+                let grad = stash.take().expect("FinishGather without BeginStep");
+                mem.update_after_send(&grad, &idx);
+            }
+            Cmd::Dense { grad } => {
+                job_tx.send(CommJob::RingAvg(grad)).expect("comm lane send");
+            }
+            Cmd::Snapshot { reply } => {
+                let _ = reply.send(mem.clone());
+            }
+            Cmd::SetBeta(beta) => mem.set_beta(beta),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{Fabric, FabricConfig};
+    use crate::compress::sparsify;
+    use crate::util::floats::allclose;
+    use crate::util::rng::Rng;
+
+    fn rand_grads(seed: u64, n: usize, dim: usize) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                let mut v = vec![0.0; dim];
+                rng.fill_normal(&mut v, 1.0);
+                v
+            })
+            .collect()
+    }
+
+    fn pool_of(n: usize, dim: usize, beta: f32) -> WorkerPool {
+        WorkerPool::new((0..n).map(|_| EfMemory::new(dim, beta)).collect())
+    }
+
+    #[test]
+    fn pool_ef_grads_match_sequential() {
+        for n in [1usize, 2, 5] {
+            let dim = 37;
+            let grads = rand_grads(n as u64, n, dim);
+            let mut memories: Vec<EfMemory> =
+                (0..n).map(|_| EfMemory::new(dim, 0.5)).collect();
+            for (m, g) in memories.iter_mut().zip(&grads) {
+                m.update_after_send(g, &[0, 3]);
+            }
+            let seq: Vec<Vec<f32>> = memories
+                .iter()
+                .zip(&grads)
+                .map(|(m, g)| m.ef_grad(g))
+                .collect();
+            let pool = WorkerPool::new(memories);
+            let par = pool.ef_grads(&grads);
+            // per-worker math, no cross-worker reduction → bit-identical
+            assert_eq!(seq, par);
+        }
+    }
+
+    #[test]
+    fn pool_shared_exchange_matches_sequential_reference() {
+        let n = 4;
+        let dim = 64;
+        let k = 8;
+        let grads = rand_grads(11, n, dim);
+        let pool = pool_of(n, dim, 0.25);
+        let mut mem_seq: Vec<EfMemory> =
+            (0..n).map(|_| EfMemory::new(dim, 0.25)).collect();
+
+        let efs = pool.begin_step(&grads);
+        let idx = crate::util::select::top_k_indices_by_magnitude(&efs[0], k);
+        let vals: Vec<Vec<f32>> = efs
+            .iter()
+            .map(|ef| idx.iter().map(|&i| ef[i as usize]).collect())
+            .collect();
+        pool.finish_shared(&idx, vals);
+        let reduced = pool.wait_reduced();
+
+        // reference: sequential sum + per-worker update
+        let mut expect = vec![0.0f32; k];
+        for ef in &efs {
+            for (e, &i) in expect.iter_mut().zip(&idx) {
+                *e += ef[i as usize];
+            }
+        }
+        expect.iter_mut().for_each(|v| *v /= n as f32);
+        for (mem, g) in mem_seq.iter_mut().zip(&grads) {
+            mem.update_after_send(g, &idx);
+        }
+        assert!(allclose(&reduced, &expect, 1e-5, 1e-6).is_ok());
+        for (a, b) in pool.snapshot().iter().zip(&mem_seq) {
+            assert_eq!(a.memory(), b.memory(), "memory updates are per-worker");
+        }
+    }
+
+    #[test]
+    fn pool_gather_is_bit_identical_to_fabric_reduction() {
+        let n = 5;
+        let dim = 48;
+        let grads = rand_grads(13, n, dim);
+        let pool = pool_of(n, dim, 1.0);
+        let efs = pool.begin_step(&grads);
+        let per: Vec<Vec<u32>> = efs
+            .iter()
+            .map(|ef| crate::util::select::top_k_indices_by_magnitude(ef, 6))
+            .collect();
+        let sparses: Vec<SparseGrad> = efs
+            .iter()
+            .zip(&per)
+            .map(|(ef, idx)| sparsify(ef, idx))
+            .collect();
+        pool.finish_gather(sparses.clone());
+        let (avg, gs) = pool.wait_gathered();
+
+        let mut fabric = Fabric::new(FabricConfig {
+            workers: n,
+            ..FabricConfig::default()
+        });
+        let expect = fabric.sparse_gather_avg(&sparses);
+        // same reduction order, same arithmetic → exactly equal
+        assert_eq!(avg, expect);
+        assert_eq!(gs, GatherStats::from_sparses(&sparses));
+    }
+
+    #[test]
+    fn pool_double_buffers_two_steps_without_waiting() {
+        // Submit step 0 and step 1 fully (step 1's EF gradients read the
+        // post-step-0 memory) before collecting either result — the
+        // double-buffer the pipelined coordinator runs on.
+        let n = 3;
+        let dim = 24;
+        let k = 4;
+        let pool = pool_of(n, dim, 1.0);
+        let mut mem_seq: Vec<EfMemory> =
+            (0..n).map(|_| EfMemory::new(dim, 1.0)).collect();
+        let mut expected_rounds = Vec::new();
+        for t in 0..2u64 {
+            let grads = rand_grads(100 + t, n, dim);
+            let efs = pool.begin_step(&grads);
+            // sequential reference for this round
+            let efs_seq: Vec<Vec<f32>> = mem_seq
+                .iter()
+                .zip(&grads)
+                .map(|(m, g)| m.ef_grad(g))
+                .collect();
+            assert_eq!(efs, efs_seq, "t={t}: EF must read post-previous-step memory");
+            let idx = crate::util::select::top_k_indices_by_magnitude(&efs[0], k);
+            let vals: Vec<Vec<f32>> = efs
+                .iter()
+                .map(|ef| idx.iter().map(|&i| ef[i as usize]).collect())
+                .collect();
+            let mut expect = vec![0.0f32; k];
+            for ef in &efs {
+                for (e, &i) in expect.iter_mut().zip(&idx) {
+                    *e += ef[i as usize];
+                }
+            }
+            expect.iter_mut().for_each(|v| *v /= n as f32);
+            expected_rounds.push(expect);
+            pool.finish_shared(&idx, vals);
+            for (mem, g) in mem_seq.iter_mut().zip(&grads) {
+                mem.update_after_send(g, &idx);
+            }
+        }
+        // both collectives complete, in submission order
+        for expect in &expected_rounds {
+            let got = pool.wait_reduced();
+            assert!(allclose(&got, expect, 1e-5, 1e-6).is_ok());
+        }
+    }
+
+    #[test]
+    fn pool_drop_with_result_in_flight_does_not_hang() {
+        let n = 4;
+        let dim = 16;
+        let pool = pool_of(n, dim, 1.0);
+        let grads = rand_grads(7, n, dim);
+        let efs = pool.begin_step(&grads);
+        let idx: Vec<u32> = vec![0, 5];
+        let vals: Vec<Vec<f32>> = efs
+            .iter()
+            .map(|ef| idx.iter().map(|&i| ef[i as usize]).collect())
+            .collect();
+        pool.finish_shared(&idx, vals);
+        // snapshot (queued after the finish) must show the applied update
+        let snap = pool.snapshot();
+        let mut mem_seq = EfMemory::new(dim, 1.0);
+        mem_seq.update_after_send(&grads[0], &idx);
+        assert_eq!(snap[0].memory(), mem_seq.memory());
+        drop(pool); // reduced values never collected — drop must drain cleanly
+    }
+
+    #[test]
+    fn pool_set_beta_applies_between_steps() {
+        let pool = pool_of(2, 8, 1.0);
+        pool.set_beta(0.5);
+        let snap = pool.snapshot();
+        assert!(snap.iter().all(|m| (m.beta() - 0.5).abs() < 1e-6));
+    }
+}

@@ -7,11 +7,13 @@
 //! collectives in `comm::parallel` (ring reduce-scatter/all-gather for
 //! the commutative shared-index path, star gather for the build-up path).
 //!
-//! Worker state stays owned by the `Coordinator` (its `memories` are part
-//! of the public API — trainers, hooks, and tests introspect them), so
-//! each step borrows the per-worker pieces into `std::thread::scope`
-//! threads instead of moving them into long-lived workers; every closure
-//! touches only its own worker's memory, gradient, and mesh endpoints.
+//! Worker state stays owned by the `Coordinator`, so each step borrows
+//! the per-worker pieces into `std::thread::scope` threads instead of
+//! moving them into long-lived workers; every closure touches only its
+//! own worker's memory, gradient, and mesh endpoints. (The `pipelined`
+//! backend in `runtime::pipelined` is the long-lived-worker counterpart:
+//! lanes own their memories behind `Coordinator::memory_snapshot`, and
+//! steps double-buffer against in-flight collectives.)
 //!
 //! Semantics vs the sequential backend (locked by
 //! `rust/tests/backend_parity.rs`):

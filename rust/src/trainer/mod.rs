@@ -10,11 +10,18 @@
 //!      worker, so one parameter copy suffices in simulation).
 //!
 //! The coordination step runs on the configured `Backend`: `sequential`
-//! loops over workers on one thread; `threaded` runs a thread per worker
-//! with channel collectives (`comm::parallel`). Both are deterministic —
-//! the threaded dataflow fixes every reduction order — and parity-locked
-//! by `rust/tests/backend_parity.rs`, so communication volume and
-//! convergence results are backend-independent.
+//! loops over workers on one thread; `threaded` runs a scoped thread per
+//! worker with channel collectives (`comm::parallel`); `pipelined` runs
+//! a persistent worker pool (`runtime::pipelined`) whose lanes own the
+//! error-feedback memories and overlap each step's memory update with
+//! its in-flight collective. All three are deterministic — the channel
+//! dataflow fixes every reduction order — and parity-locked by
+//! `rust/tests/backend_parity.rs`, so communication volume and
+//! convergence results are backend-independent. (The trainer drives
+//! steps synchronously because the optimizer needs g^t before the next
+//! forward/backward; the double-buffered `step_overlapped` mode is
+//! exercised by the collective benches, where the gradient stream does
+//! not depend on the updates.)
 //!
 //! `use_kernel` routes compression through the L1 Pallas artifacts
 //! (`<model>_compress` / `<model>_apply`) instead of the native Rust
@@ -164,7 +171,7 @@ impl<'h> Trainer<'h> {
     /// Run the configured number of steps; returns the metrics log.
     pub fn run(&mut self) -> Result<RunLog> {
         anyhow::ensure!(
-            !(self.use_kernel && self.coordinator.backend == Backend::Threaded),
+            !(self.use_kernel && self.coordinator.backend() != Backend::Sequential),
             "--kernel-compress runs the L1 Pallas path on the sequential \
              collectives only; use --backend sequential (backend dispatch for \
              the kernel path is a ROADMAP item)"
@@ -234,6 +241,17 @@ impl<'h> Trainer<'h> {
             self.optimizer.step(&mut self.params, &result.update, lr);
 
             if let Some(hook) = &mut self.hook {
+                // The pipelined pool owns its memories on worker lanes, so
+                // hooks get a snapshot there; the in-process backends keep
+                // the zero-copy borrow.
+                let snapshot;
+                let memories: &[EfMemory] =
+                    if self.coordinator.backend() == Backend::Pipelined {
+                        snapshot = self.coordinator.memory_snapshot();
+                        &snapshot
+                    } else {
+                        self.coordinator.memories()
+                    };
                 hook(&StepSnapshot {
                     t,
                     lr,
@@ -241,7 +259,7 @@ impl<'h> Trainer<'h> {
                     grads: &grads,
                     ef_grads: &efs,
                     result: &result,
-                    memories: &self.coordinator.memories,
+                    memories,
                 });
             }
 
@@ -290,10 +308,12 @@ impl<'h> Trainer<'h> {
         let n = grads.len();
         let dim = self.model.mm.dim;
         let leader = t % n;
-        let beta = self.coordinator.memories[0].beta();
+        // kernel path is sequential-backend-only (guarded in `run`), so
+        // the memories are coordinator-local and directly borrowable
+        let beta = self.coordinator.memories()[0].beta();
 
         let (idx, leader_vals, leader_mem) = self.model.kernel_compress(
-            self.coordinator.memories[leader].memory(),
+            self.coordinator.memories()[leader].memory(),
             &grads[leader],
             beta,
         )?;
@@ -306,7 +326,7 @@ impl<'h> Trainer<'h> {
                 continue;
             }
             let (vals, mem) = self.model.kernel_apply(
-                self.coordinator.memories[w].memory(),
+                self.coordinator.memories()[w].memory(),
                 &grads[w],
                 &idx,
                 beta,
@@ -321,7 +341,7 @@ impl<'h> Trainer<'h> {
             .sparse_allreduce_shared(&sparses, leader);
         for (mem, new) in self
             .coordinator
-            .memories
+            .memories_mut()
             .iter_mut()
             .zip(new_mems.into_iter())
         {

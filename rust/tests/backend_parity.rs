@@ -1,6 +1,8 @@
-//! Backend parity lock: the threaded (thread-per-worker, channel
-//! collectives) backend must be indistinguishable from the sequential
-//! reference across every compression scheme, worker count, and step.
+//! Backend-matrix parity lock: every concurrent backend — `threaded`
+//! (scoped thread-per-worker, per-step channel mesh) and `pipelined`
+//! (persistent double-buffering worker pool) — must be indistinguishable
+//! from the sequential reference across every compression scheme, worker
+//! count, and step.
 //!
 //! Determinism contract (see `comm::parallel` module docs):
 //!   - selections, leaders, rates, byte accounting, `CommStats`: EXACT;
@@ -9,7 +11,16 @@
 //!   - ring-reduced f32 values: equal within reduction-order tolerance
 //!     rtol = 1e-5, atol = 1e-6 (ring chunk order is a rotation of the
 //!     sequential 0..n order);
-//!   - threaded runs are bit-identical to each other (fixed dataflow).
+//!   - concurrent-backend runs are bit-identical to each other (fixed
+//!     dataflow), including the pipelined double-buffered mode.
+//!
+//! The matrix includes a **mid-run memory-snapshot equivalence check**
+//! so the persistent pool (whose lanes own the memories) cannot silently
+//! drift from the scoped-thread semantics between step 0 and the end of
+//! a run.
+//!
+//! CI runs this suite once per backend via `SCALECOM_TEST_BACKENDS`
+//! (comma-separated labels); unset, every concurrent backend is tested.
 
 use scalecom::comm::{Backend, Fabric, FabricConfig, Topology};
 use scalecom::compress::rate::LayerSlice;
@@ -31,6 +42,34 @@ const SCHEMES: &[&str] = &[
     "random-k",
     "sketch-k",
 ];
+
+const WORKER_COUNTS: &[usize] = &[2, 4, 8, 16];
+
+/// Concurrent backends under test, filterable per CI matrix job with
+/// `SCALECOM_TEST_BACKENDS=threaded` / `=pipelined` / `=threaded,pipelined`.
+/// `sequential` is always the reference side of every comparison, so a
+/// selection that leaves nothing to compare is a misconfiguration — fail
+/// loudly instead of passing the whole parity lock vacuously.
+fn backends_under_test() -> Vec<Backend> {
+    let backends: Vec<Backend> = match std::env::var("SCALECOM_TEST_BACKENDS") {
+        Ok(s) => s
+            .split(',')
+            .map(|b| {
+                Backend::parse(b.trim())
+                    .expect("SCALECOM_TEST_BACKENDS holds backend labels")
+            })
+            .filter(|&b| b != Backend::Sequential)
+            .collect(),
+        Err(_) => vec![Backend::Threaded, Backend::Pipelined],
+    };
+    assert!(
+        !backends.is_empty(),
+        "SCALECOM_TEST_BACKENDS selected no concurrent backend — the parity \
+         matrix would pass without comparing anything (sequential is always \
+         the reference side; pick threaded and/or pipelined)"
+    );
+    backends
+}
 
 fn coordinator(
     scheme: &str,
@@ -65,76 +104,99 @@ fn rand_grads(rng: &mut Rng, n: usize, dim: usize) -> Vec<Vec<f32>> {
         .collect()
 }
 
-fn assert_step_parity(scheme: &str, n: usize, t: usize, a: &StepResult, b: &StepResult) {
-    let ctx = || format!("scheme={scheme} n={n} t={t}");
-    assert_eq!(a.selection, b.selection, "selection mismatch ({})", ctx());
-    assert_eq!(a.leader, b.leader, "leader mismatch ({})", ctx());
-    assert_eq!(a.dense, b.dense, "dense flag mismatch ({})", ctx());
-    assert_eq!(a.rate, b.rate, "rate mismatch ({})", ctx());
-    assert_eq!(a.comm, b.comm, "comm cost mismatch ({})", ctx());
+fn assert_step_parity(ctx: &str, t: usize, a: &StepResult, b: &StepResult) {
+    assert_eq!(a.selection, b.selection, "selection mismatch ({ctx} t={t})");
+    assert_eq!(a.leader, b.leader, "leader mismatch ({ctx} t={t})");
+    assert_eq!(a.dense, b.dense, "dense flag mismatch ({ctx} t={t})");
+    assert_eq!(a.rate, b.rate, "rate mismatch ({ctx} t={t})");
+    assert_eq!(a.comm, b.comm, "comm cost mismatch ({ctx} t={t})");
     if let Err(i) = allclose(&a.update, &b.update, RTOL, ATOL) {
         panic!(
-            "update mismatch at coord {i} ({}): seq={} thr={}",
-            ctx(),
-            a.update[i],
-            b.update[i]
+            "update mismatch at coord {i} ({ctx} t={t}): seq={} other={}",
+            a.update[i], b.update[i]
         );
     }
 }
 
-/// Drive both backends through identical gradient streams and compare
-/// every observable per step plus the final memory/comm ledgers.
-fn run_parity(scheme: &str, n: usize, dim: usize, rate: usize, steps: usize, warmup: usize) {
+fn assert_memory_parity(ctx: &str, seq: &Coordinator, other: &Coordinator) {
+    let ma = seq.memory_snapshot();
+    let mb = other.memory_snapshot();
+    for (w, (a, b)) in ma.iter().zip(&mb).enumerate() {
+        if let Err(i) = allclose(a.memory(), b.memory(), RTOL, ATOL) {
+            panic!(
+                "memory divergence {ctx} worker={w} coord {i}: {} vs {}",
+                a.memory()[i],
+                b.memory()[i]
+            );
+        }
+    }
+}
+
+/// Drive the sequential reference and `backend` through identical
+/// gradient streams and compare every observable per step, the memory
+/// snapshots at mid-run and at the end, and the full comm ledger.
+fn run_parity(
+    scheme: &str,
+    n: usize,
+    dim: usize,
+    rate: usize,
+    steps: usize,
+    warmup: usize,
+    backend: Backend,
+) {
     let topo = if n % 2 == 0 { Topology::Ring } else { Topology::ParameterServer };
+    let ctx = format!("scheme={scheme} n={n} backend={}", backend.label());
     let mut seq = coordinator(scheme, n, dim, rate, warmup, topo, Backend::Sequential);
-    let mut thr = coordinator(scheme, n, dim, rate, warmup, topo, Backend::Threaded);
+    let mut other = coordinator(scheme, n, dim, rate, warmup, topo, backend);
     let mut rng = Rng::for_stream(0xBACC, n as u64);
     for t in 0..steps {
         let grads = rand_grads(&mut rng, n, dim);
         let a = seq.step(t, &grads);
-        let b = thr.step(t, &grads);
-        assert_step_parity(scheme, n, t, &a, &b);
-    }
-    // error-feedback memories stay in lockstep (bit-exact: per-worker math)
-    for (w, (ma, mb)) in seq.memories.iter().zip(&thr.memories).enumerate() {
-        if let Err(i) = allclose(ma.memory(), mb.memory(), RTOL, ATOL) {
-            panic!(
-                "memory divergence scheme={scheme} n={n} worker={w} coord {i}: {} vs {}",
-                ma.memory()[i],
-                mb.memory()[i]
-            );
+        let b = other.step(t, &grads);
+        assert_step_parity(&ctx, t, &a, &b);
+        if t == steps / 2 {
+            // mid-run: the persistent pool must be in lockstep *during*
+            // the run, not just after draining it
+            assert_memory_parity(&format!("{ctx} (mid-run t={t})"), &seq, &other);
         }
     }
+    assert_memory_parity(&format!("{ctx} (final)"), &seq, &other);
     // byte-exact communication ledger
     assert_eq!(
         seq.fabric.stats().ops,
-        thr.fabric.stats().ops,
-        "CommStats mismatch scheme={scheme} n={n}"
+        other.fabric.stats().ops,
+        "CommStats mismatch {ctx}"
     );
 }
 
 #[test]
 fn all_schemes_match_across_worker_counts_over_50_steps() {
-    for &scheme in SCHEMES {
-        for n in [2usize, 4, 8, 16] {
-            run_parity(scheme, n, 96, 8, 50, 0);
+    for backend in backends_under_test() {
+        for &scheme in SCHEMES {
+            for &n in WORKER_COUNTS {
+                run_parity(scheme, n, 96, 8, 50, 0, backend);
+            }
         }
     }
 }
 
 #[test]
 fn dense_mode_and_warmup_transition_match() {
-    for n in [2usize, 3, 8] {
-        run_parity("none", n, 128, 4, 50, 0);
-        // warmup: dense steps 0..5, compressed after — covers the switch
-        run_parity("scalecom", n, 128, 4, 50, 5);
+    for backend in backends_under_test() {
+        for n in [2usize, 3, 8] {
+            run_parity("none", n, 128, 4, 50, 0, backend);
+            // warmup: dense steps 0..5, compressed after — covers the switch
+            run_parity("scalecom", n, 128, 4, 50, 5, backend);
+        }
     }
 }
 
 #[test]
 fn single_worker_degenerate_case_matches() {
-    for scheme in ["none", "scalecom", "local-topk", "true-topk"] {
-        run_parity(scheme, 1, 64, 4, 50, 0);
+    for backend in backends_under_test() {
+        for scheme in ["none", "scalecom", "local-topk", "true-topk"] {
+            run_parity(scheme, 1, 64, 4, 50, 0, backend);
+        }
     }
 }
 
@@ -158,61 +220,123 @@ fn layered_selection_matches_across_backends() {
             },
         ])
     };
-    let n = 4;
-    let dim = 128;
-    let mut seq = coordinator("scalecom-auto", n, dim, 8, 0, Topology::Ring, Backend::Sequential)
-        .with_layered(partition(), vec![16, 14]);
-    let mut thr = coordinator("scalecom-auto", n, dim, 8, 0, Topology::Ring, Backend::Threaded)
-        .with_layered(partition(), vec![16, 14]);
-    let mut rng = Rng::new(55);
-    for t in 0..50 {
-        let grads = rand_grads(&mut rng, n, dim);
-        let a = seq.step(t, &grads);
-        let b = thr.step(t, &grads);
-        assert_step_parity("scalecom-auto(layered)", n, t, &a, &b);
+    for backend in backends_under_test() {
+        let n = 4;
+        let dim = 128;
+        let mut seq =
+            coordinator("scalecom-auto", n, dim, 8, 0, Topology::Ring, Backend::Sequential)
+                .with_layered(partition(), vec![16, 14]);
+        let mut other = coordinator("scalecom-auto", n, dim, 8, 0, Topology::Ring, backend)
+            .with_layered(partition(), vec![16, 14]);
+        let mut rng = Rng::new(55);
+        let ctx = format!("scalecom-auto(layered) backend={}", backend.label());
+        for t in 0..50 {
+            let grads = rand_grads(&mut rng, n, dim);
+            let a = seq.step(t, &grads);
+            let b = other.step(t, &grads);
+            assert_step_parity(&ctx, t, &a, &b);
+        }
     }
 }
 
 #[test]
-fn threaded_backend_is_deterministic_run_to_run() {
-    // The channel dataflow fixes every reduction order: two threaded runs
-    // must agree bit-for-bit, independent of OS scheduling.
-    let run = || {
-        let n = 8;
-        let dim = 256;
-        let mut c =
-            coordinator("scalecom", n, dim, 16, 0, Topology::Ring, Backend::Threaded);
-        let mut rng = Rng::new(99);
-        let mut updates = Vec::new();
-        for t in 0..20 {
-            let grads = rand_grads(&mut rng, n, dim);
-            updates.push(c.step(t, &grads).update);
+fn concurrent_backends_are_deterministic_run_to_run() {
+    // The channel dataflow fixes every reduction order: two runs of the
+    // same concurrent backend must agree bit-for-bit, independent of OS
+    // scheduling — including the pipelined double-buffered mode.
+    for backend in backends_under_test() {
+        let run = || {
+            let n = 8;
+            let dim = 256;
+            let mut c = coordinator("scalecom", n, dim, 16, 0, Topology::Ring, backend);
+            let mut rng = Rng::new(99);
+            let mut updates = Vec::new();
+            for t in 0..20 {
+                let grads = rand_grads(&mut rng, n, dim);
+                if backend == Backend::Pipelined {
+                    if let Some(r) = c.step_overlapped(t, &grads) {
+                        updates.push(r.update);
+                    }
+                } else {
+                    updates.push(c.step(t, &grads).update);
+                }
+            }
+            updates.extend(c.finish_overlapped().into_iter().map(|r| r.update));
+            updates
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(
+            a,
+            b,
+            "{} backend must be bit-deterministic",
+            backend.label()
+        );
+    }
+}
+
+#[test]
+fn pipelined_streaming_matches_sequential_per_step() {
+    // The double-buffered driving mode (submit t+1 while t's collective
+    // is in flight) must produce the exact same per-step stream as the
+    // sequential reference — the one-step-lag contract.
+    for &scheme in &["scalecom", "local-topk", "none"] {
+        for &n in &[2usize, 4, 8] {
+            let dim = 96;
+            let topo = Topology::Ring;
+            let ctx = format!("streaming scheme={scheme} n={n}");
+            let mut seq =
+                coordinator(scheme, n, dim, 8, 2, topo, Backend::Sequential);
+            let mut pipe = coordinator(scheme, n, dim, 8, 2, topo, Backend::Pipelined);
+            let mut rng = Rng::for_stream(0xF1FE, n as u64);
+            let steps = 30;
+            let mut seq_results = Vec::new();
+            let mut streamed = Vec::new();
+            for t in 0..steps {
+                let grads = rand_grads(&mut rng, n, dim);
+                seq_results.push(seq.step(t, &grads));
+                if let Some(r) = pipe.step_overlapped(t, &grads) {
+                    streamed.push(r);
+                }
+            }
+            streamed.extend(pipe.finish_overlapped());
+            assert_eq!(streamed.len(), steps, "{ctx}");
+            for (t, (a, b)) in seq_results.iter().zip(&streamed).enumerate() {
+                assert_step_parity(&ctx, t, a, b);
+            }
+            assert_memory_parity(&ctx, &seq, &pipe);
+            assert_eq!(seq.fabric.stats().ops, pipe.fabric.stats().ops, "{ctx}");
         }
-        updates
-    };
-    let a = run();
-    let b = run();
-    assert_eq!(a, b, "threaded backend must be bit-deterministic");
+    }
 }
 
 #[test]
 fn gather_path_is_bit_identical_not_just_close() {
     // The build-up path reduces at the root in worker order — the exact
     // sequential arithmetic — so parity here is equality, not tolerance.
-    let n = 8;
-    let dim = 160;
-    let mut seq =
-        coordinator("local-topk", n, dim, 8, 0, Topology::ParameterServer, Backend::Sequential);
-    let mut thr =
-        coordinator("local-topk", n, dim, 8, 0, Topology::ParameterServer, Backend::Threaded);
-    let mut rng = Rng::new(31);
-    for t in 0..50 {
-        let grads = rand_grads(&mut rng, n, dim);
-        let a = seq.step(t, &grads);
-        let b = thr.step(t, &grads);
-        assert_eq!(a.update, b.update, "t={t}");
-        for (ma, mb) in seq.memories.iter().zip(&thr.memories) {
-            assert_eq!(ma.memory(), mb.memory(), "t={t}");
+    for backend in backends_under_test() {
+        let n = 8;
+        let dim = 160;
+        let mut seq = coordinator(
+            "local-topk",
+            n,
+            dim,
+            8,
+            0,
+            Topology::ParameterServer,
+            Backend::Sequential,
+        );
+        let mut other =
+            coordinator("local-topk", n, dim, 8, 0, Topology::ParameterServer, backend);
+        let mut rng = Rng::new(31);
+        for t in 0..50 {
+            let grads = rand_grads(&mut rng, n, dim);
+            let a = seq.step(t, &grads);
+            let b = other.step(t, &grads);
+            assert_eq!(a.update, b.update, "backend={} t={t}", backend.label());
+            for (ma, mb) in seq.memory_snapshot().iter().zip(&other.memory_snapshot()) {
+                assert_eq!(ma.memory(), mb.memory(), "backend={} t={t}", backend.label());
+            }
         }
     }
 }

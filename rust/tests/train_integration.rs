@@ -188,30 +188,32 @@ fn beta_switch_takes_effect() {
     let mut t = Trainer::from_config(cfg).unwrap();
     t.beta_switch = Some((5, 1.0));
     t.run().unwrap();
-    assert_eq!(t.coordinator.memories[0].beta(), 1.0);
+    assert_eq!(t.coordinator.memory_snapshot()[0].beta(), 1.0);
 }
 
 #[test]
-fn threaded_backend_trains_to_the_same_losses_as_sequential() {
+fn concurrent_backends_train_to_the_same_losses_as_sequential() {
     require_artifacts!();
     let mut seq_cfg = base_cfg("mlp", "scalecom", 4, 30);
     seq_cfg.backend = "sequential".into();
-    let mut thr_cfg = base_cfg("mlp", "scalecom", 4, 30);
-    thr_cfg.backend = "threaded".into();
     let seq = Trainer::from_config(seq_cfg).unwrap().run().unwrap();
-    let thr = Trainer::from_config(thr_cfg).unwrap().run().unwrap();
     let sl = seq.column("loss").unwrap();
-    let tl = thr.column("loss").unwrap();
-    for (t, (a, b)) in sl.iter().zip(&tl).enumerate() {
-        // f32 reduction-order tolerance, amplified a little by training
-        assert!(
-            (a - b).abs() < 1e-3 * (1.0 + a.abs()),
-            "step {t}: sequential {a} vs threaded {b}"
-        );
+    for backend in ["threaded", "pipelined"] {
+        let mut cfg = base_cfg("mlp", "scalecom", 4, 30);
+        cfg.backend = backend.into();
+        let other = Trainer::from_config(cfg).unwrap().run().unwrap();
+        let ol = other.column("loss").unwrap();
+        for (t, (a, b)) in sl.iter().zip(&ol).enumerate() {
+            // f32 reduction-order tolerance, amplified a little by training
+            assert!(
+                (a - b).abs() < 1e-3 * (1.0 + a.abs()),
+                "step {t}: sequential {a} vs {backend} {b}"
+            );
+        }
+        // identical bytes on the wire
+        assert_eq!(seq.column("bytes_up"), other.column("bytes_up"));
+        assert_eq!(seq.column("bytes_down"), other.column("bytes_down"));
     }
-    // identical bytes on the wire
-    assert_eq!(seq.column("bytes_up"), thr.column("bytes_up"));
-    assert_eq!(seq.column("bytes_down"), thr.column("bytes_down"));
 }
 
 #[test]
