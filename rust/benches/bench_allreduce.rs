@@ -6,11 +6,14 @@
 //! pipelined engine against the analytic `max(compute, comm)` model.
 //!
 //! Usage:
-//!   cargo bench --bench bench_allreduce [-- --quick] [-- --backend sequential|threaded|pipelined]
+//!   cargo bench --bench bench_allreduce [-- --quick] [-- --backend sequential|threaded|pipelined|socket]
 //!
 //! Without `--backend`, the pipeline section runs all backends so the
-//! speedups are visible side by side. Acceptance targets on the chunked
-//! top-k + ring path at n=8:
+//! speedups are visible side by side — including `socket`, the same
+//! persistent pool with every collective hop crossing a loopback TCP
+//! socket through the wire codec (its step-time gap vs `pipelined` IS
+//! the framing + kernel cost of a real transport). Acceptance targets on
+//! the chunked top-k + ring path at n=8:
 //!   - `pipeline/threaded/n8`  ≥ 2x over `pipeline/sequential/n8`;
 //!   - `pipeline/pipelined/n8` step time ≤ 0.75x `pipeline/threaded/n8`
 //!     (the persistent pool + double-buffer win).
@@ -65,15 +68,16 @@ fn pipeline_coord(backend: Backend, n: usize, dim: usize, rate: usize) -> Coordi
 /// One full compressed step — CLT-k chunked selection over the ring —
 /// on the chosen backend. This is the "chunked top-k + ring reduce" path
 /// the threaded and pipelined engines are built to accelerate. The
-/// pipelined backend runs in its double-buffered streaming mode (step
-/// t+1's EF/selection compute overlaps step t's in-flight collective).
+/// pooled backends (pipelined/socket) run in their double-buffered
+/// streaming mode (step t+1's EF/selection compute overlaps step t's
+/// in-flight collective).
 fn bench_pipeline(b: &mut Bencher, backend: Backend, n: usize, dim: usize, rate: usize) {
     let mut coord = pipeline_coord(backend, n, dim, rate);
     let mut rng = Rng::new(n as u64);
     let grads = rand_grads(&mut rng, n, dim);
     let mut t = 0usize;
     let name = format!("pipeline/{}/n{n}", backend.label());
-    if backend == Backend::Pipelined {
+    if backend.is_pooled() {
         b.bench(&name, || {
             black_box(coord.step_overlapped(t, &grads));
             t += 1;
@@ -103,7 +107,7 @@ fn bench_overlap(b: &mut Bencher, n: usize, dim: usize, rate: usize) {
                 CollectiveResult::Reduced(v) => {
                     black_box(v);
                 }
-                CollectiveResult::Gathered(..) => unreachable!(),
+                other => unreachable!("expected ring result, got {other:?}"),
             }
         })
         .median_ns;
@@ -242,6 +246,16 @@ fn main() {
              (step-time ratio {:.2}, target ≤ 0.75)",
             thr / pipe,
             pipe / thr
+        );
+    }
+    if let (Some(pipe), Some(sock)) = (
+        find(&b, "pipeline/pipelined/n8"),
+        find(&b, "pipeline/socket/n8"),
+    ) {
+        println!(
+            "# pipeline n8 transport cost (socket vs pipelined): {:.2}x step \
+             time — the price of real framing + kernel round-trips",
+            sock / pipe
         );
     }
     if assert_overlap {

@@ -113,10 +113,22 @@ SUBCOMMANDS:
                      --model mlp|cnn|transformer|transformer-med|lstm
                      --workers N --steps N --scheme scalecom|local-topk|...
                      --rate R --beta B --lr LR --topology ps|ring
-                     --backend sequential|threaded|pipelined
+                     --backend sequential|threaded|pipelined|socket
                        (threaded: scoped thread-per-worker engine;
-                        pipelined: persistent pool, overlaps compute/comm)
+                        pipelined: persistent pool, overlaps compute/comm;
+                        socket: that pool over loopback TCP — needs
+                        --peers loopback)
                      --config file.toml (flags override file)
+  node             one node of a multi-process socket ring (N processes,
+                   localhost or N hosts); rank 0 emits the parity digest
+                     --role coordinator|worker
+                     --bind HOST:PORT (this node's address)
+                     --peers ADDR0,ADDR1,... (every node, coordinator
+                       first, identical on every node; rank = position
+                       of --bind in the list)
+                     --scheme S --dim N --rate R --steps N --seed S
+                     --beta B --compress-warmup N --topology ps|ring
+                     --timeout-secs N --step-delay-ms N
   experiment <id>  regenerate a paper table/figure:
                      table1 fig1a fig1b fig1c fig2 fig3 table2 table3
                      fig6 figA1 figA8  (or 'all')

@@ -69,6 +69,29 @@ pub struct GatherStats {
     pub union_nnz: usize,
 }
 
+/// The gather path's root reduction: sum the contributions into a dense
+/// accumulator **in worker order**, then scale by 1/n — plus the
+/// wire-shape summary the cost model charges. This is THE definition of
+/// the gather arithmetic: the sequential fabric
+/// ([`Fabric::sparse_gather_avg`]), the staged comm lanes
+/// (`comm::parallel`), and the multi-process socket driver
+/// (`runtime::socket`) all call it, so their results are bit-identical
+/// by construction. Panics (via `SparseGrad::add_into`) if a
+/// contribution's dim differs from `dim` — callers on untrusted inputs
+/// (the wire) must validate dims first.
+pub fn reduce_gathered(sparses: &[SparseGrad], dim: usize) -> (Vec<f32>, GatherStats) {
+    let n = sparses.len();
+    assert!(n >= 1, "gather reduction over no contributions");
+    let gs = GatherStats::from_sparses(sparses);
+    let mut acc = vec![0.0f32; dim];
+    for s in sparses {
+        s.add_into(&mut acc);
+    }
+    let inv = 1.0 / n as f32;
+    acc.iter_mut().for_each(|v| *v *= inv);
+    (acc, gs)
+}
+
 impl GatherStats {
     pub fn from_sparses(sparses: &[SparseGrad]) -> GatherStats {
         let union_nnz = {
@@ -320,14 +343,8 @@ impl Fabric {
         assert!(n >= 1, "sparse_gather over no gradients");
         let dim = sparses[0].dim;
         assert!(sparses.iter().all(|s| s.dim == dim));
-        let gs = GatherStats::from_sparses(sparses);
+        let (acc, gs) = reduce_gathered(sparses, dim);
         self.record_sparse_gather(&gs);
-        let mut acc = vec![0.0f32; dim];
-        for s in sparses {
-            s.add_into(&mut acc);
-        }
-        let inv = 1.0 / n as f32;
-        acc.iter_mut().for_each(|v| *v *= inv);
         acc
     }
 

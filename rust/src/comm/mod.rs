@@ -19,6 +19,8 @@
 pub mod cost;
 pub mod fabric;
 pub mod parallel;
+pub mod socket;
+pub mod wire;
 
 pub use cost::{CommCost, CommStats};
 pub use fabric::{Fabric, FabricConfig, FaultSpec, GatherStats, Topology};

@@ -46,22 +46,34 @@ pub enum Backend {
     /// steps: step t+1's EF-gradient/selection compute overlaps step t's
     /// in-flight collective (`runtime::pipelined`).
     Pipelined,
+    /// The pipelined pool with its lane internals swapped for a real TCP
+    /// transport: every ring/star hop crosses a loopback socket through
+    /// the `comm::wire` framing codec (`comm::socket`). Same staged
+    /// `submit`/`wait` seam, same determinism contract; multi-process
+    /// rings are launched per-node via `scalecom node`
+    /// (`runtime::socket`).
+    Socket,
 }
 
 impl Backend {
     /// Every selectable backend, in documentation order. The single
     /// source of truth for bench CLIs and the label/parse round-trip.
-    pub const ALL: [Backend; 3] =
-        [Backend::Sequential, Backend::Threaded, Backend::Pipelined];
+    pub const ALL: [Backend; 4] = [
+        Backend::Sequential,
+        Backend::Threaded,
+        Backend::Pipelined,
+        Backend::Socket,
+    ];
 
     pub fn parse(s: &str) -> anyhow::Result<Backend> {
         match s {
             "sequential" | "seq" => Ok(Backend::Sequential),
             "threaded" | "thr" => Ok(Backend::Threaded),
             "pipelined" | "pipe" => Ok(Backend::Pipelined),
+            "socket" | "sock" => Ok(Backend::Socket),
             other => {
                 anyhow::bail!(
-                    "unknown backend '{other}' (expected sequential|threaded|pipelined)"
+                    "unknown backend '{other}' (expected sequential|threaded|pipelined|socket)"
                 )
             }
         }
@@ -72,7 +84,15 @@ impl Backend {
             Backend::Sequential => "sequential",
             Backend::Threaded => "threaded",
             Backend::Pipelined => "pipelined",
+            Backend::Socket => "socket",
         }
+    }
+
+    /// Backends that run on the persistent worker pool — lane-owned
+    /// memories, staged collectives, `step_overlapped` lookahead
+    /// (`runtime::pipelined::WorkerPool`).
+    pub fn is_pooled(&self) -> bool {
+        matches!(self, Backend::Pipelined | Backend::Socket)
     }
 }
 
@@ -84,8 +104,8 @@ pub fn backends_from_args(args: &[String]) -> Vec<Backend> {
         Some(i) => {
             let value = args
                 .get(i + 1)
-                .expect("--backend requires a value (sequential|threaded|pipelined)");
-            vec![Backend::parse(value).expect("--backend sequential|threaded|pipelined")]
+                .expect("--backend requires a value (sequential|threaded|pipelined|socket)");
+            vec![Backend::parse(value).expect("--backend sequential|threaded|pipelined|socket")]
         }
         None => Backend::ALL.to_vec(),
     }
@@ -125,45 +145,85 @@ fn chunk_bounds(len: usize, n: usize) -> Vec<(usize, usize)> {
     (0..n).map(|c| (c * len / n, (c + 1) * len / n)).collect()
 }
 
+/// The ring all-reduce schedule, generic over how a chunk crosses to the
+/// neighbor — the transport seam. The channel mesh (`RingNode`) and the
+/// TCP mesh (`comm::socket::SocketRingNode`) both run exactly this code,
+/// so their chunk schedules — and therefore every f32 reduction order —
+/// are identical by construction, not by parallel maintenance.
+///
+/// `finish` is applied to this worker's fully-reduced chunk between the
+/// reduce-scatter and all-gather phases (e.g. the 1/n averaging scale).
+pub(crate) fn ring_allreduce_generic(
+    id: usize,
+    n: usize,
+    buf: &mut [f32],
+    finish: &dyn Fn(&mut [f32]),
+    send: &mut dyn FnMut(&[f32]) -> anyhow::Result<()>,
+    recv: &mut dyn FnMut() -> anyhow::Result<Vec<f32>>,
+) -> anyhow::Result<()> {
+    if n == 1 {
+        finish(buf);
+        return Ok(());
+    }
+    let bounds = chunk_bounds(buf.len(), n);
+    // Reduce-scatter: after step s, the chunk received from the left
+    // holds s+2 contributions; after n-1 steps worker w owns the
+    // complete sum of chunk (w+1)%n.
+    for s in 0..n - 1 {
+        let send_c = (id + n - s) % n;
+        let recv_c = (id + n - s - 1) % n;
+        let (lo, hi) = bounds[send_c];
+        send(&buf[lo..hi])?;
+        let incoming = recv()?;
+        let (lo, hi) = bounds[recv_c];
+        anyhow::ensure!(
+            hi - lo == incoming.len(),
+            "ring chunk size mismatch: expected {}, got {} (peer out of sync)",
+            hi - lo,
+            incoming.len()
+        );
+        for (b, v) in buf[lo..hi].iter_mut().zip(&incoming) {
+            *b += v;
+        }
+    }
+    let (lo, hi) = bounds[(id + 1) % n];
+    finish(&mut buf[lo..hi]);
+    // All-gather: circulate the completed chunks.
+    for s in 0..n - 1 {
+        let send_c = (id + 1 + n - s) % n;
+        let recv_c = (id + n - s) % n;
+        let (lo, hi) = bounds[send_c];
+        send(&buf[lo..hi])?;
+        let incoming = recv()?;
+        let (lo, hi) = bounds[recv_c];
+        anyhow::ensure!(
+            hi - lo == incoming.len(),
+            "ring chunk size mismatch: expected {}, got {} (peer out of sync)",
+            hi - lo,
+            incoming.len()
+        );
+        buf[lo..hi].copy_from_slice(&incoming);
+    }
+    Ok(())
+}
+
 impl RingNode {
     /// Ring all-reduce; `finish` is applied to this worker's fully-reduced
     /// chunk between the reduce-scatter and all-gather phases (e.g. the
     /// 1/n averaging scale).
     fn allreduce_with(&self, buf: &mut [f32], finish: impl Fn(&mut [f32])) {
-        let n = self.n;
-        if n == 1 {
-            finish(buf);
-            return;
-        }
-        let bounds = chunk_bounds(buf.len(), n);
-        // Reduce-scatter: after step s, the chunk received from the left
-        // holds s+2 contributions; after n-1 steps worker w owns the
-        // complete sum of chunk (w+1)%n.
-        for s in 0..n - 1 {
-            let send_c = (self.id + n - s) % n;
-            let recv_c = (self.id + n - s - 1) % n;
-            let (lo, hi) = bounds[send_c];
-            self.tx_right.send(buf[lo..hi].to_vec()).expect("ring send");
-            let incoming = self.rx_left.recv().expect("ring recv");
-            let (lo, hi) = bounds[recv_c];
-            debug_assert_eq!(hi - lo, incoming.len());
-            for (b, v) in buf[lo..hi].iter_mut().zip(&incoming) {
-                *b += v;
-            }
-        }
-        let (lo, hi) = bounds[(self.id + 1) % n];
-        finish(&mut buf[lo..hi]);
-        // All-gather: circulate the completed chunks.
-        for s in 0..n - 1 {
-            let send_c = (self.id + 1 + n - s) % n;
-            let recv_c = (self.id + n - s) % n;
-            let (lo, hi) = bounds[send_c];
-            self.tx_right.send(buf[lo..hi].to_vec()).expect("ring send");
-            let incoming = self.rx_left.recv().expect("ring recv");
-            let (lo, hi) = bounds[recv_c];
-            debug_assert_eq!(hi - lo, incoming.len());
-            buf[lo..hi].copy_from_slice(&incoming);
-        }
+        let mut send = |chunk: &[f32]| -> anyhow::Result<()> {
+            self.tx_right
+                .send(chunk.to_vec())
+                .map_err(|_| anyhow::anyhow!("ring send: right neighbor gone"))
+        };
+        let mut recv = || -> anyhow::Result<Vec<f32>> {
+            self.rx_left
+                .recv()
+                .map_err(|_| anyhow::anyhow!("ring recv: left neighbor gone"))
+        };
+        ring_allreduce_generic(self.id, self.n, buf, &finish, &mut send, &mut recv)
+            .expect("channel ring failed (every endpoint lives in-process)");
     }
 
     /// In-place sum-all-reduce over all ring participants.
@@ -259,12 +319,62 @@ pub enum CommJob {
 
 /// Completion of one staged collective, delivered by the root lane in
 /// submission order.
+#[derive(Debug)]
 pub enum CollectiveResult {
     /// Ring all-reduce: the fully reduced (averaged) buffer.
     Reduced(Vec<f32>),
     /// Star gather: root-reduced dense average + the wire-shape summary
     /// for the analytic cost model.
     Gathered(Vec<f32>, GatherStats),
+    /// The collective failed on a lane (socket transport only: a dead or
+    /// mis-framed peer). The channel mesh cannot produce this.
+    Failed(String),
+}
+
+/// What the lane mesh is made of. The collectives, the staged
+/// `submit`/`wait` seam, and the determinism contract are identical —
+/// only the bytes' carrier changes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum LaneTransport {
+    /// In-process mpsc channels (backends `threaded` / `pipelined`).
+    #[default]
+    Channel,
+    /// Loopback TCP sockets through the `comm::wire` codec (backend
+    /// `socket`): every hop pays real framing + kernel round-trips.
+    Socket,
+}
+
+/// A lane's ring endpoint on either transport.
+enum LaneRing {
+    Channel(RingNode),
+    Socket(crate::comm::socket::SocketRingNode),
+}
+
+impl LaneRing {
+    fn allreduce_avg(&mut self, buf: &mut [f32]) -> anyhow::Result<()> {
+        match self {
+            LaneRing::Channel(r) => {
+                r.allreduce_avg(buf);
+                Ok(())
+            }
+            LaneRing::Socket(r) => r.allreduce_avg(buf),
+        }
+    }
+}
+
+/// A lane's star endpoint on either transport.
+enum LaneStar {
+    Channel(StarNode),
+    Socket(crate::comm::socket::SocketStarNode),
+}
+
+impl LaneStar {
+    fn gather(&mut self, sg: SparseGrad) -> anyhow::Result<Option<Vec<SparseGrad>>> {
+        match self {
+            LaneStar::Channel(s) => Ok(s.gather(sg)),
+            LaneStar::Socket(s) => s.gather(sg),
+        }
+    }
 }
 
 /// Persistent staged-collective engine: one long-lived comm thread per
@@ -287,27 +397,52 @@ pub struct CommLanes {
 
 impl CommLanes {
     pub fn new(n: usize) -> CommLanes {
+        Self::with_transport(n, LaneTransport::Channel)
+            .expect("the channel mesh needs no OS resources and cannot fail")
+    }
+
+    /// Build the lane mesh on the chosen transport. `Socket` binds one
+    /// loopback TCP pair per mesh edge (ephemeral ports), which can fail
+    /// if the OS refuses the sockets.
+    pub fn with_transport(n: usize, transport: LaneTransport) -> anyhow::Result<CommLanes> {
         assert!(n >= 1, "comm lanes need at least one worker");
-        let rings = ring(n);
-        let stars = star(n);
+        let (rings, stars): (Vec<LaneRing>, Vec<LaneStar>) = match transport {
+            LaneTransport::Channel => (
+                ring(n).into_iter().map(LaneRing::Channel).collect(),
+                star(n).into_iter().map(LaneStar::Channel).collect(),
+            ),
+            LaneTransport::Socket => {
+                let timeout = crate::comm::socket::default_timeout();
+                (
+                    crate::comm::socket::local_ring(n, timeout)?
+                        .into_iter()
+                        .map(LaneRing::Socket)
+                        .collect(),
+                    crate::comm::socket::local_star(n, timeout)?
+                        .into_iter()
+                        .map(LaneStar::Socket)
+                        .collect(),
+                )
+            }
+        };
         let (root_tx, results) = channel();
         let mut jobs = Vec::with_capacity(n);
         let mut threads = Vec::with_capacity(n);
-        for (ring_node, star_node) in rings.into_iter().zip(stars) {
+        for (w, (ring_node, star_node)) in rings.into_iter().zip(stars).enumerate() {
             let (tx, rx) = channel::<CommJob>();
             // Worker 0 roots both topologies (exactly like the scoped
             // engine), so it alone reports results.
-            let root = (ring_node.id == 0).then(|| root_tx.clone());
+            let root = (w == 0).then(|| root_tx.clone());
             threads.push(std::thread::spawn(move || {
-                comm_lane_loop(ring_node, star_node, rx, root, n)
+                comm_lane_loop(ring_node, star_node, rx, root)
             }));
             jobs.push(tx);
         }
-        CommLanes {
+        Ok(CommLanes {
             jobs,
             results,
             threads,
-        }
+        })
     }
 
     pub fn workers(&self) -> usize {
@@ -350,36 +485,45 @@ impl Drop for CommLanes {
 }
 
 fn comm_lane_loop(
-    ring_node: RingNode,
-    star_node: StarNode,
+    mut ring_node: LaneRing,
+    mut star_node: LaneStar,
     rx: Receiver<CommJob>,
     root: Option<Sender<CollectiveResult>>,
-    n: usize,
 ) {
     while let Ok(job) = rx.recv() {
-        match job {
-            CommJob::RingAvg(mut buf) => {
-                ring_node.allreduce_avg(&mut buf);
-                if let Some(tx) = &root {
-                    let _ = tx.send(CollectiveResult::Reduced(buf));
-                }
-            }
+        let outcome: anyhow::Result<Option<CollectiveResult>> = match job {
+            CommJob::RingAvg(mut buf) => ring_node
+                .allreduce_avg(&mut buf)
+                .map(|()| Some(CollectiveResult::Reduced(buf))),
             CommJob::Gather(sg) => {
                 let dim = sg.dim;
-                if let Some(all) = star_node.gather(sg) {
-                    // Root reduction in worker order — bit-identical to
-                    // `Fabric::sparse_gather_avg` / `threaded::exchange_gather`.
-                    let gs = GatherStats::from_sparses(&all);
-                    let mut acc = vec![0.0f32; dim];
-                    for contribution in &all {
-                        contribution.add_into(&mut acc);
-                    }
-                    let inv = 1.0 / n as f32;
-                    acc.iter_mut().for_each(|v| *v *= inv);
-                    if let Some(tx) = &root {
-                        let _ = tx.send(CollectiveResult::Gathered(acc, gs));
-                    }
+                star_node.gather(sg).map(|gathered| {
+                    gathered.map(|all| {
+                        // One shared definition of the gather arithmetic
+                        // (worker-order root reduction) for every backend.
+                        let (acc, gs) = crate::comm::fabric::reduce_gathered(&all, dim);
+                        CollectiveResult::Gathered(acc, gs)
+                    })
+                })
+            }
+        };
+        match outcome {
+            Ok(Some(result)) => {
+                if let Some(tx) = &root {
+                    let _ = tx.send(result);
                 }
+            }
+            Ok(None) => {} // non-root gather participant
+            Err(e) => {
+                // A socket lane lost a peer (or saw garbage): report once
+                // if we root the mesh, then stop — the stream is
+                // mis-framed beyond recovery. Closing our endpoints
+                // propagates EOFs around the ring so every lane halts
+                // within one read timeout instead of hanging.
+                if let Some(tx) = &root {
+                    let _ = tx.send(CollectiveResult::Failed(format!("{e:#}")));
+                }
+                break;
             }
         }
     }
@@ -523,6 +667,10 @@ mod tests {
             backends_from_args(&to(&["bench", "--backend", "pipelined"])),
             vec![Backend::Pipelined]
         );
+        assert_eq!(
+            backends_from_args(&to(&["bench", "--backend", "socket"])),
+            vec![Backend::Socket]
+        );
     }
 
     #[test]
@@ -531,9 +679,14 @@ mod tests {
         assert_eq!(Backend::parse("seq").unwrap(), Backend::Sequential);
         assert_eq!(Backend::parse("threaded").unwrap(), Backend::Threaded);
         assert_eq!(Backend::parse("pipe").unwrap(), Backend::Pipelined);
+        assert_eq!(Backend::parse("socket").unwrap(), Backend::Socket);
+        assert_eq!(Backend::parse("sock").unwrap(), Backend::Socket);
         assert!(Backend::parse("gpu").is_err());
         assert_eq!(Backend::Threaded.label(), "threaded");
+        assert_eq!(Backend::Socket.label(), "socket");
         assert_eq!(Backend::default(), Backend::Sequential);
+        assert!(Backend::Socket.is_pooled() && Backend::Pipelined.is_pooled());
+        assert!(!Backend::Sequential.is_pooled() && !Backend::Threaded.is_pooled());
     }
 
     #[test]
@@ -576,7 +729,7 @@ mod tests {
                     // same ring, same chunk schedule → bit-identical
                     assert_eq!(got, expect, "n={n}");
                 }
-                CollectiveResult::Gathered(..) => panic!("expected ring result"),
+                other => panic!("expected ring result, got {other:?}"),
             }
         }
     }
@@ -600,7 +753,7 @@ mod tests {
                 CollectiveResult::Reduced(v) => {
                     assert!(v.iter().all(|&x| (x - expect).abs() < 1e-6), "{v:?}");
                 }
-                CollectiveResult::Gathered(..) => panic!("expected ring result"),
+                other => panic!("expected ring result, got {other:?}"),
             }
         }
     }
@@ -623,7 +776,7 @@ mod tests {
         lanes.submit(sparses.iter().map(|s| CommJob::Gather(s.clone())).collect());
         let (avg, gs) = match lanes.wait() {
             CollectiveResult::Gathered(v, gs) => (v, gs),
-            CollectiveResult::Reduced(_) => panic!("expected gather result"),
+            other => panic!("expected gather result, got {other:?}"),
         };
         let mut fabric = Fabric::new(FabricConfig {
             workers: n,
@@ -632,6 +785,55 @@ mod tests {
         let expect = fabric.sparse_gather_avg(&sparses);
         assert_eq!(avg, expect);
         assert_eq!(gs, GatherStats::from_sparses(&sparses));
+    }
+
+    #[test]
+    fn socket_lanes_match_channel_lanes_bit_for_bit() {
+        // Same staged seam, same chunk schedule, bit-exact wire: the two
+        // transports must be indistinguishable on both collective kinds.
+        for n in [1usize, 2, 4] {
+            let dim = 33;
+            let mut rng = Rng::new(n as u64 + 5);
+            let inputs: Vec<Vec<f32>> = (0..n)
+                .map(|_| {
+                    let mut v = vec![0.0f32; dim];
+                    rng.fill_normal(&mut v, 1.0);
+                    v
+                })
+                .collect();
+            let sparses: Vec<SparseGrad> = (0..n)
+                .map(|w| {
+                    SparseGrad::new(
+                        dim,
+                        vec![w as u32, (w + n) as u32],
+                        vec![1.0 + w as f32, -0.5],
+                    )
+                })
+                .collect();
+            let chan = CommLanes::new(n);
+            let sock = CommLanes::with_transport(n, LaneTransport::Socket)
+                .expect("loopback socket mesh");
+            for lanes in [&chan, &sock] {
+                lanes.submit(inputs.iter().map(|v| CommJob::RingAvg(v.clone())).collect());
+                lanes.submit(sparses.iter().map(|s| CommJob::Gather(s.clone())).collect());
+            }
+            match (chan.wait(), sock.wait()) {
+                (CollectiveResult::Reduced(a), CollectiveResult::Reduced(b)) => {
+                    assert_eq!(a, b, "ring n={n}");
+                }
+                other => panic!("expected two ring results, got {other:?}"),
+            }
+            match (chan.wait(), sock.wait()) {
+                (
+                    CollectiveResult::Gathered(a, ga),
+                    CollectiveResult::Gathered(b, gb),
+                ) => {
+                    assert_eq!(a, b, "gather n={n}");
+                    assert_eq!(ga, gb, "gather stats n={n}");
+                }
+                other => panic!("expected two gather results, got {other:?}"),
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,775 @@
+//! TCP transport for the collectives: the same ring / star dataflow as
+//! the mpsc mesh in `comm::parallel`, with every hop crossing a real
+//! socket through the `comm::wire` framing codec.
+//!
+//! Two deployment shapes share this module:
+//!
+//! - **loopback mesh** ([`local_ring`] / [`local_star`]): all endpoints
+//!   live in one process, wired over `127.0.0.1` socket pairs — the lane
+//!   internals behind `Backend::Socket` (see `CommLanes::with_transport`);
+//! - **multi-process mesh** ([`form_mesh`]): one process per worker,
+//!   rendezvousing over a static peer list (`runtime::socket` drives it).
+//!
+//! ## Design notes
+//!
+//! - **No send-side blocking.** A ring step has every node sending and
+//!   receiving at once; if sends wrote to the socket on the caller's
+//!   thread, n full kernel buffers could deadlock the ring. Every
+//!   outgoing link therefore owns a writer thread ([`FramedSender`])
+//!   fed by an unbounded queue — `send` never blocks, mirroring the
+//!   unbounded mpsc channels of the in-process mesh, so the staged
+//!   (pipelined) driving mode works unchanged over sockets.
+//! - **Bounded waiting.** Every receiver carries a read timeout and
+//!   every sender's stream a write timeout ([`default_timeout`],
+//!   override with `SCALECOM_SOCKET_TIMEOUT_SECS`), and a killed peer
+//!   surfaces as EOF/reset immediately: a fault — dead *or* wedged
+//!   peer — ends a collective with a clean `anyhow` error, never a
+//!   hang. Errors propagate around the ring as EOFs, so every surviving
+//!   node fails within one timeout.
+//! - **Bit-identical reduction.** The ring schedule is literally the
+//!   same code as the channel mesh (`ring_allreduce_generic`), and f32
+//!   payloads travel as raw IEEE-754 bits, so socket-backend results are
+//!   bit-identical to the pipelined backend's and sit inside the same
+//!   parity contract vs sequential (rtol 1e-5 / atol 1e-6 on ring f32).
+
+use crate::comm::parallel::ring_allreduce_generic;
+use crate::comm::wire::{self, Purpose, WireMsg};
+use crate::compress::SparseGrad;
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Read/rendezvous timeout: `SCALECOM_SOCKET_TIMEOUT_SECS` (integer
+/// seconds, min 1) or 30 s. Bounds every blocking socket wait, so a
+/// wedged peer becomes a clean error instead of a hang.
+pub fn default_timeout() -> Duration {
+    let secs = std::env::var("SCALECOM_SOCKET_TIMEOUT_SECS")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(30)
+        .max(1);
+    Duration::from_secs(secs)
+}
+
+// ----------------------------------------------------------------------
+// Framed endpoints
+// ----------------------------------------------------------------------
+
+/// Non-blocking framed sender: messages are handed to a dedicated writer
+/// thread over an unbounded queue. A write failure is latched and
+/// reported by the next `send`; dropping the sender flushes what was
+/// queued and joins the thread. The stream gets a **write timeout** so
+/// a stalled-but-alive peer (full receive buffer, wedged host) errors
+/// the writer thread out instead of blocking it forever — without it,
+/// `Drop`'s join could hang the node and break the bounded-waiting
+/// contract.
+pub struct FramedSender {
+    tx: Option<Sender<WireMsg>>,
+    err: Arc<Mutex<Option<String>>>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl FramedSender {
+    pub fn new(stream: TcpStream, write_timeout: Duration) -> anyhow::Result<FramedSender> {
+        stream.set_write_timeout(Some(write_timeout.max(Duration::from_millis(1))))?;
+        let (tx, rx) = channel::<WireMsg>();
+        let err = Arc::new(Mutex::new(None));
+        let latch = err.clone();
+        let thread = std::thread::spawn(move || {
+            let mut w = BufWriter::new(stream);
+            while let Ok(msg) = rx.recv() {
+                let res = wire::write_msg(&mut w, &msg)
+                    .and_then(|()| w.flush().map_err(anyhow::Error::from));
+                if let Err(e) = res {
+                    *latch.lock().expect("writer error latch") = Some(format!("{e:#}"));
+                    break;
+                }
+            }
+        });
+        Ok(FramedSender {
+            tx: Some(tx),
+            err,
+            thread: Some(thread),
+        })
+    }
+
+    /// Queue one message. Never blocks; fails if the writer thread has
+    /// already hit a socket error (e.g. the peer died).
+    pub fn send(&self, msg: WireMsg) -> anyhow::Result<()> {
+        if let Some(e) = self.err.lock().expect("writer error latch").clone() {
+            anyhow::bail!("socket send failed: {e}");
+        }
+        self.tx
+            .as_ref()
+            .expect("sender queue alive until drop")
+            .send(msg)
+            .map_err(|_| anyhow::anyhow!("socket writer thread exited (peer closed?)"))
+    }
+}
+
+impl Drop for FramedSender {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // ends the writer loop after the queue drains
+        if let Some(h) = self.thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Blocking framed receiver with a read timeout.
+pub struct FramedReceiver {
+    r: BufReader<TcpStream>,
+    timeout: Duration,
+}
+
+impl FramedReceiver {
+    pub fn new(stream: TcpStream, timeout: Duration) -> anyhow::Result<FramedReceiver> {
+        stream.set_read_timeout(Some(timeout.max(Duration::from_millis(1))))?;
+        Ok(FramedReceiver {
+            r: BufReader::new(stream),
+            timeout,
+        })
+    }
+
+    pub fn recv(&mut self) -> anyhow::Result<WireMsg> {
+        use anyhow::Context;
+        wire::read_msg(&mut self.r).with_context(|| {
+            format!(
+                "socket read failed (peer dead, stalled past the {:?} timeout, \
+                 or mis-framed)",
+                self.timeout
+            )
+        })
+    }
+}
+
+// ----------------------------------------------------------------------
+// Ring / star nodes over sockets
+// ----------------------------------------------------------------------
+
+/// One worker's endpoints in a unidirectional TCP ring — the socket
+/// counterpart of `comm::parallel::RingNode`, with fallible collectives.
+/// For `n == 1` both links are absent and every collective degenerates
+/// to the local finish.
+pub struct SocketRingNode {
+    pub id: usize,
+    pub n: usize,
+    tx_right: Option<FramedSender>,
+    rx_left: Option<FramedReceiver>,
+}
+
+/// Send on a ring node's right link. A free function (not a method) so
+/// the ring collective can borrow the send and receive halves of one
+/// node simultaneously — the single definition of the link's error
+/// wording for both the collectives and the index broadcast.
+fn ring_send(tx: &Option<FramedSender>, id: usize, n: usize, msg: WireMsg) -> anyhow::Result<()> {
+    use anyhow::Context;
+    tx.as_ref()
+        .expect("n > 1 ring has a right link")
+        .send(msg)
+        .with_context(|| format!("ring node {id}/{n}: send to right neighbor"))
+}
+
+/// Receive from a ring node's left link (counterpart of [`ring_send`]).
+fn ring_recv(rx: &mut Option<FramedReceiver>, id: usize, n: usize) -> anyhow::Result<WireMsg> {
+    use anyhow::Context;
+    rx.as_mut()
+        .expect("n > 1 ring has a left link")
+        .recv()
+        .with_context(|| format!("ring node {id}/{n}: recv from left neighbor"))
+}
+
+impl SocketRingNode {
+    pub fn new(
+        id: usize,
+        n: usize,
+        tx_right: Option<FramedSender>,
+        rx_left: Option<FramedReceiver>,
+    ) -> SocketRingNode {
+        assert!(id < n);
+        assert_eq!(tx_right.is_some(), n > 1, "right link iff n > 1");
+        assert_eq!(rx_left.is_some(), n > 1, "left link iff n > 1");
+        SocketRingNode {
+            id,
+            n,
+            tx_right,
+            rx_left,
+        }
+    }
+
+    fn send_right(&self, msg: WireMsg) -> anyhow::Result<()> {
+        ring_send(&self.tx_right, self.id, self.n, msg)
+    }
+
+    fn recv_left(&mut self) -> anyhow::Result<WireMsg> {
+        ring_recv(&mut self.rx_left, self.id, self.n)
+    }
+
+    fn allreduce_with(
+        &mut self,
+        buf: &mut [f32],
+        finish: impl Fn(&mut [f32]),
+    ) -> anyhow::Result<()> {
+        let (id, n) = (self.id, self.n);
+        let tx = &self.tx_right;
+        let rx = &mut self.rx_left;
+        let mut send = |chunk: &[f32]| -> anyhow::Result<()> {
+            ring_send(tx, id, n, WireMsg::DenseChunk(chunk.to_vec()))
+        };
+        let mut recv = || -> anyhow::Result<Vec<f32>> {
+            match ring_recv(rx, id, n)? {
+                WireMsg::DenseChunk(v) => Ok(v),
+                other => anyhow::bail!(
+                    "ring node {id}/{n}: expected a dense chunk, got {other:?}"
+                ),
+            }
+        };
+        ring_allreduce_generic(id, n, buf, &finish, &mut send, &mut recv)
+    }
+
+    /// In-place sum-all-reduce (same chunk schedule as the channel ring).
+    pub fn allreduce_sum(&mut self, buf: &mut [f32]) -> anyhow::Result<()> {
+        self.allreduce_with(buf, |_| {})
+    }
+
+    /// In-place average-all-reduce (scale applied once per chunk on its
+    /// owning worker — identical arithmetic to the channel ring).
+    pub fn allreduce_avg(&mut self, buf: &mut [f32]) -> anyhow::Result<()> {
+        let inv = 1.0 / self.n as f32;
+        self.allreduce_with(buf, |chunk| {
+            chunk.iter_mut().for_each(|v| *v *= inv);
+        })
+    }
+
+    /// Circulate the step leader's index set around the ring (n−1 hops).
+    /// The leader passes `Some(indices)`; everyone else receives from the
+    /// left and forwards right (unless the right neighbor *is* the
+    /// leader). Returns the broadcast set on every node.
+    pub fn broadcast_indices(
+        &mut self,
+        leader: usize,
+        own: Option<&[u32]>,
+    ) -> anyhow::Result<Vec<u32>> {
+        assert!(leader < self.n, "leader {leader} out of range for n={}", self.n);
+        if self.id == leader {
+            let idx = own
+                .expect("the broadcast leader must provide its index set")
+                .to_vec();
+            if self.n > 1 {
+                self.send_right(WireMsg::Indices(idx.clone()))?;
+            }
+            Ok(idx)
+        } else {
+            let idx = match self.recv_left()? {
+                WireMsg::Indices(v) => v,
+                other => anyhow::bail!(
+                    "ring node {}/{}: expected an index broadcast, got {other:?}",
+                    self.id,
+                    self.n
+                ),
+            };
+            if (self.id + 1) % self.n != leader {
+                self.send_right(WireMsg::Indices(idx.clone()))?;
+            }
+            Ok(idx)
+        }
+    }
+}
+
+/// One worker's endpoint in a TCP gather star rooted at worker 0 — the
+/// socket counterpart of `comm::parallel::StarNode`.
+pub struct SocketStarNode {
+    pub id: usize,
+    pub n: usize,
+    /// workers 1..n: link to the root
+    to_root: Option<FramedSender>,
+    /// root only: one receiver per worker 1..n, in worker order
+    from_workers: Option<Vec<FramedReceiver>>,
+}
+
+impl SocketStarNode {
+    pub fn new(
+        id: usize,
+        n: usize,
+        to_root: Option<FramedSender>,
+        from_workers: Option<Vec<FramedReceiver>>,
+    ) -> SocketStarNode {
+        assert!(id < n);
+        if id == 0 {
+            assert_eq!(
+                from_workers.as_ref().map(|v| v.len()),
+                Some(n - 1),
+                "root holds one receiver per worker 1..n"
+            );
+            assert!(to_root.is_none());
+        } else {
+            assert!(to_root.is_some() && from_workers.is_none());
+        }
+        SocketStarNode {
+            id,
+            n,
+            to_root,
+            from_workers,
+        }
+    }
+
+    /// Gather every worker's sparse gradient at the root, draining the
+    /// per-worker links in worker order (the deterministic reduction
+    /// order of the channel star). Returns `Some(contributions)` on the
+    /// root, `None` on the other workers.
+    pub fn gather(&mut self, contribution: SparseGrad) -> anyhow::Result<Option<Vec<SparseGrad>>> {
+        use anyhow::Context;
+        match &mut self.from_workers {
+            Some(rxs) => {
+                let mut all = Vec::with_capacity(self.n);
+                all.push(contribution);
+                for (i, rx) in rxs.iter_mut().enumerate() {
+                    let msg = rx
+                        .recv()
+                        .with_context(|| format!("star root: gather from worker {}", i + 1))?;
+                    match msg {
+                        WireMsg::Sparse(sg) => all.push(sg),
+                        other => anyhow::bail!(
+                            "star root: expected a sparse contribution from worker {}, got {other:?}",
+                            i + 1
+                        ),
+                    }
+                }
+                Ok(Some(all))
+            }
+            None => {
+                self.to_root
+                    .as_ref()
+                    .expect("non-root star node has a root link")
+                    .send(WireMsg::Sparse(contribution))
+                    .with_context(|| format!("star worker {}: send to root", self.id))?;
+                Ok(None)
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// Loopback mesh (single process, Backend::Socket)
+// ----------------------------------------------------------------------
+
+/// One connected 127.0.0.1 stream pair: `(connect_side, accept_side)`.
+fn loopback_pair() -> anyhow::Result<(TcpStream, TcpStream)> {
+    use anyhow::Context;
+    let listener =
+        TcpListener::bind(("127.0.0.1", 0)).context("bind loopback listener (127.0.0.1:0)")?;
+    let addr = listener.local_addr()?;
+    let connect = TcpStream::connect(addr).context("connect loopback pair")?;
+    let (accept, _) = listener.accept().context("accept loopback pair")?;
+    connect.set_nodelay(true)?;
+    accept.set_nodelay(true)?;
+    Ok((connect, accept))
+}
+
+/// Build an in-process TCP ring: link `i` carries worker `i` →
+/// `(i+1) % n`, exactly the channel mesh's wiring.
+pub fn local_ring(n: usize, timeout: Duration) -> anyhow::Result<Vec<SocketRingNode>> {
+    assert!(n >= 1);
+    if n == 1 {
+        return Ok(vec![SocketRingNode::new(0, 1, None, None)]);
+    }
+    let mut senders: Vec<Option<FramedSender>> = Vec::with_capacity(n);
+    let mut receivers: Vec<Option<FramedReceiver>> = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (w, r) = loopback_pair()?;
+        senders.push(Some(FramedSender::new(w, timeout)?));
+        receivers.push(Some(FramedReceiver::new(r, timeout)?));
+    }
+    Ok((0..n)
+        .map(|id| {
+            SocketRingNode::new(
+                id,
+                n,
+                senders[id].take(),
+                receivers[(id + n - 1) % n].take(),
+            )
+        })
+        .collect())
+}
+
+/// Build an in-process TCP gather star rooted at worker 0.
+pub fn local_star(n: usize, timeout: Duration) -> anyhow::Result<Vec<SocketStarNode>> {
+    assert!(n >= 1);
+    let mut to_root: Vec<Option<FramedSender>> = Vec::with_capacity(n.saturating_sub(1));
+    let mut from_workers = Vec::with_capacity(n.saturating_sub(1));
+    for _ in 1..n {
+        let (w, r) = loopback_pair()?;
+        to_root.push(Some(FramedSender::new(w, timeout)?));
+        from_workers.push(FramedReceiver::new(r, timeout)?);
+    }
+    Ok((0..n)
+        .map(|id| {
+            if id == 0 {
+                SocketStarNode::new(0, n, None, Some(std::mem::take(&mut from_workers)))
+            } else {
+                SocketStarNode::new(id, n, to_root[id - 1].take(), None)
+            }
+        })
+        .collect())
+}
+
+// ----------------------------------------------------------------------
+// Multi-process mesh (rendezvous over a static peer list)
+// ----------------------------------------------------------------------
+
+/// Connect to `addr`, retrying until `deadline` — peers of a ring may
+/// start in any order, so early connects wait for late listeners.
+pub fn connect_with_retry(addr: &str, deadline: Instant) -> anyhow::Result<TcpStream> {
+    let mut last_err = String::from("never attempted");
+    loop {
+        match addr.to_socket_addrs() {
+            Ok(addrs) => {
+                // Try every resolved address, like `TcpStream::connect`
+                // does — a hostname may resolve to [::1, 127.0.0.1] with
+                // only one of them actually listening.
+                let mut any = false;
+                for sa in addrs {
+                    any = true;
+                    match TcpStream::connect_timeout(&sa, Duration::from_millis(500)) {
+                        Ok(s) => {
+                            s.set_nodelay(true)?;
+                            return Ok(s);
+                        }
+                        Err(e) => last_err = format!("{sa}: {e}"),
+                    }
+                }
+                if !any {
+                    last_err = format!("'{addr}' resolved to no address");
+                }
+            }
+            Err(e) => last_err = format!("cannot resolve '{addr}': {e}"),
+        }
+        if Instant::now() >= deadline {
+            anyhow::bail!("rendezvous with {addr} timed out: {last_err}");
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+/// Form this rank's ring + star endpoints against a static peer list
+/// (`peers[r]` is rank r's bind address; the coordinator/star root is
+/// rank 0). `listener` must already be bound to `peers[rank]` — binding
+/// first and connecting second is what makes the rendezvous
+/// deadlock-free regardless of process start order.
+///
+/// Every outbound connection introduces itself with a `Hello` frame, and
+/// inbound connections are classified by it, so accept order does not
+/// matter. All waits are bounded by `timeout`.
+pub fn form_mesh(
+    rank: usize,
+    peers: &[String],
+    listener: TcpListener,
+    timeout: Duration,
+) -> anyhow::Result<(SocketRingNode, SocketStarNode)> {
+    use anyhow::Context;
+    let n = peers.len();
+    assert!(rank < n);
+    if n == 1 {
+        return Ok((
+            SocketRingNode::new(0, 1, None, None),
+            SocketStarNode::new(0, 1, None, Some(Vec::new())),
+        ));
+    }
+    let deadline = Instant::now() + timeout;
+
+    // Outbound: ring-right always; star uplink from every worker to rank 0.
+    let right = (rank + 1) % n;
+    let mut ring_tx_stream = connect_with_retry(&peers[right], deadline)
+        .with_context(|| format!("rank {rank}: connect ring-right to rank {right}"))?;
+    wire::write_msg(
+        &mut ring_tx_stream,
+        &WireMsg::Hello {
+            rank: rank as u32,
+            purpose: Purpose::Ring,
+        },
+    )?;
+    let mut star_tx_stream = if rank > 0 {
+        let mut s = connect_with_retry(&peers[0], deadline)
+            .with_context(|| format!("rank {rank}: connect star uplink to rank 0"))?;
+        wire::write_msg(
+            &mut s,
+            &WireMsg::Hello {
+                rank: rank as u32,
+                purpose: Purpose::Star,
+            },
+        )?;
+        Some(s)
+    } else {
+        None
+    };
+
+    // Inbound: one ring stream from the left neighbor, plus (root only)
+    // one star stream per worker 1..n.
+    let left = (rank + n - 1) % n;
+    let mut ring_rx: Option<FramedReceiver> = None;
+    let mut star_rx: Vec<Option<FramedReceiver>> = (1..n).map(|_| None).collect();
+    let expected = 1 + if rank == 0 { n - 1 } else { 0 };
+    let mut got = 0usize;
+    listener
+        .set_nonblocking(true)
+        .context("nonblocking rendezvous accept")?;
+    while got < expected {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stream.set_nonblocking(false)?;
+                stream.set_nodelay(true)?;
+                stream.set_read_timeout(Some(timeout))?;
+                let mut s = stream;
+                let hello = wire::read_msg(&mut s)
+                    .with_context(|| format!("rank {rank}: handshake on inbound connection"))?;
+                match hello {
+                    WireMsg::Hello {
+                        rank: from,
+                        purpose: Purpose::Ring,
+                    } => {
+                        anyhow::ensure!(
+                            from as usize == left,
+                            "rank {rank}: ring hello from rank {from}, expected left \
+                             neighbor {left} — check that every node got the same --peers list"
+                        );
+                        anyhow::ensure!(ring_rx.is_none(), "rank {rank}: duplicate ring link");
+                        ring_rx = Some(FramedReceiver::new(s, timeout)?);
+                    }
+                    WireMsg::Hello {
+                        rank: from,
+                        purpose: Purpose::Star,
+                    } => {
+                        let from = from as usize;
+                        anyhow::ensure!(
+                            rank == 0,
+                            "rank {rank}: unexpected star uplink from rank {from} \
+                             (only rank 0 roots the star)"
+                        );
+                        anyhow::ensure!(
+                            (1..n).contains(&from),
+                            "rank 0: star hello from invalid rank {from}"
+                        );
+                        anyhow::ensure!(
+                            star_rx[from - 1].is_none(),
+                            "rank 0: duplicate star uplink from rank {from}"
+                        );
+                        star_rx[from - 1] = Some(FramedReceiver::new(s, timeout)?);
+                    }
+                    other => anyhow::bail!(
+                        "rank {rank}: inbound connection sent {other:?} instead of a Hello"
+                    ),
+                }
+                got += 1;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                anyhow::ensure!(
+                    Instant::now() < deadline,
+                    "rank {rank}: rendezvous timed out with {got}/{expected} inbound \
+                     connections — are all {n} nodes running with the same --peers list?"
+                );
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => return Err(anyhow::Error::from(e).context("rendezvous accept")),
+        }
+    }
+
+    let ring = SocketRingNode::new(
+        rank,
+        n,
+        Some(FramedSender::new(ring_tx_stream, timeout)?),
+        Some(ring_rx.expect("ring inbound link present")),
+    );
+    let star = if rank == 0 {
+        let rxs: Vec<FramedReceiver> = star_rx
+            .into_iter()
+            .map(|r| r.expect("star inbound links present"))
+            .collect();
+        SocketStarNode::new(0, n, None, Some(rxs))
+    } else {
+        SocketStarNode::new(
+            rank,
+            n,
+            Some(FramedSender::new(
+                star_tx_stream.take().expect("worker star uplink"),
+                timeout,
+            )?),
+            None,
+        )
+    };
+    Ok((ring, star))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::parallel;
+    use crate::util::rng::Rng;
+
+    const T: Duration = Duration::from_secs(10);
+
+    /// Run `f(node, w)` on one thread per socket ring node.
+    fn on_ring<TOut: Send>(
+        n: usize,
+        f: impl Fn(&mut SocketRingNode, usize) -> TOut + Sync,
+    ) -> Vec<TOut> {
+        let nodes = local_ring(n, T).expect("loopback ring");
+        std::thread::scope(|s| {
+            let handles: Vec<_> = nodes
+                .into_iter()
+                .map(|mut node| {
+                    let f = &f;
+                    s.spawn(move || {
+                        let id = node.id;
+                        f(&mut node, id)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("worker")).collect()
+        })
+    }
+
+    #[test]
+    fn socket_ring_is_bit_identical_to_channel_ring() {
+        for n in [1usize, 2, 3, 5, 8] {
+            for len in [0usize, 1, n, 3 * n + 1, 100] {
+                let mut rng = Rng::new((n * 7919 + len) as u64);
+                let inputs: Vec<Vec<f32>> = (0..n)
+                    .map(|_| {
+                        let mut v = vec![0.0f32; len];
+                        rng.fill_normal(&mut v, 1.0);
+                        v
+                    })
+                    .collect();
+                // channel reference
+                let chan_nodes = parallel::ring(n);
+                let inputs_ref = &inputs;
+                let expect: Vec<Vec<f32>> = std::thread::scope(|s| {
+                    let handles: Vec<_> = chan_nodes
+                        .into_iter()
+                        .map(|node| {
+                            s.spawn(move || {
+                                let mut buf = inputs_ref[node.id].clone();
+                                node.allreduce_avg(&mut buf);
+                                buf
+                            })
+                        })
+                        .collect();
+                    handles.into_iter().map(|h| h.join().unwrap()).collect()
+                });
+                let got = on_ring(n, |node, w| {
+                    let mut buf = inputs_ref[w].clone();
+                    node.allreduce_avg(&mut buf).expect("socket allreduce");
+                    buf
+                });
+                // identical schedule + bit-exact wire → bit-identical
+                assert_eq!(got, expect, "n={n} len={len}");
+            }
+        }
+    }
+
+    #[test]
+    fn socket_star_gathers_in_worker_order() {
+        let n = 5;
+        let nodes = local_star(n, T).expect("loopback star");
+        let gathered = std::thread::scope(|s| {
+            let handles: Vec<_> = nodes
+                .into_iter()
+                .map(|mut node| {
+                    s.spawn(move || {
+                        let sg = SparseGrad::new(8, vec![node.id as u32], vec![node.id as f32]);
+                        node.gather(sg).expect("gather")
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .filter_map(|h| h.join().expect("worker"))
+                .next()
+                .expect("root result")
+        });
+        assert_eq!(gathered.len(), n);
+        for (w, sg) in gathered.iter().enumerate() {
+            assert_eq!(sg.indices, vec![w as u32], "worker order");
+        }
+    }
+
+    #[test]
+    fn broadcast_indices_reaches_every_node() {
+        let n = 6;
+        for leader in [0usize, 2, n - 1] {
+            let idx: Vec<u32> = vec![4, 8, 15, 16, 23, 42];
+            let idx_ref = &idx;
+            let got = on_ring(n, |node, w| {
+                let own = (w == leader).then_some(idx_ref.as_slice());
+                node.broadcast_indices(leader, own).expect("broadcast")
+            });
+            for (w, g) in got.iter().enumerate() {
+                assert_eq!(g, idx_ref, "leader={leader} worker={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn dead_peer_errors_instead_of_hanging() {
+        // Node 1 drops its endpoints without participating: node 0's recv
+        // must fail (EOF from the dropped writer) within the timeout.
+        let mut nodes =
+            local_ring(2, Duration::from_secs(2)).expect("loopback ring");
+        let n1 = nodes.remove(1);
+        let mut n0 = nodes.remove(0);
+        drop(n1);
+        let start = Instant::now();
+        let err = n0.allreduce_avg(&mut vec![1.0f32; 8]).unwrap_err();
+        assert!(start.elapsed() < Duration::from_secs(5), "bounded failure");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("recv from left neighbor"), "{msg}");
+    }
+
+    #[test]
+    fn multiprocess_mesh_forms_on_threads() {
+        // The rendezvous path (static peer list + Hello classification),
+        // exercised in one process with one thread per rank.
+        let n = 4;
+        let listeners: Vec<TcpListener> = (0..n)
+            .map(|_| TcpListener::bind(("127.0.0.1", 0)).unwrap())
+            .collect();
+        let peers: Vec<String> = listeners
+            .iter()
+            .map(|l| l.local_addr().unwrap().to_string())
+            .collect();
+        let peers_ref = &peers;
+        let results: Vec<Vec<f32>> = std::thread::scope(|s| {
+            let handles: Vec<_> = listeners
+                .into_iter()
+                .enumerate()
+                .map(|(rank, listener)| {
+                    s.spawn(move || {
+                        let (mut ring, mut star) =
+                            form_mesh(rank, peers_ref, listener, T).expect("mesh");
+                        let mut buf = vec![(rank + 1) as f32; 12];
+                        ring.allreduce_avg(&mut buf).expect("ring over mesh");
+                        let sg =
+                            SparseGrad::new(4, vec![rank as u32], vec![1.0]);
+                        let gathered = star.gather(sg).expect("star over mesh");
+                        if rank == 0 {
+                            let all = gathered.expect("root sees all");
+                            assert_eq!(all.len(), n);
+                            for (w, s) in all.iter().enumerate() {
+                                assert_eq!(s.indices, vec![w as u32]);
+                            }
+                        }
+                        buf
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("rank")).collect()
+        });
+        // avg of 1,2,3,4 = 2.5 on every rank
+        for r in &results {
+            assert!(r.iter().all(|&v| (v - 2.5).abs() < 1e-6), "{r:?}");
+        }
+    }
+}

@@ -81,8 +81,10 @@ pub struct TrainConfig {
     pub fabric_topology: String,
     pub fabric_bandwidth_gbps: f64,
     /// Execution backend for the coordination step: "sequential" |
-    /// "threaded" | "pipelined" (`comm::parallel::Backend`). `pipelined`
-    /// runs the persistent double-buffering worker pool.
+    /// "threaded" | "pipelined" | "socket" (`comm::parallel::Backend`).
+    /// `pipelined` runs the persistent double-buffering worker pool;
+    /// `socket` is that pool over a loopback TCP mesh (multi-process
+    /// rings launch via `scalecom node`, which needs `--peers`).
     pub backend: String,
     /// Evaluate every `eval_every` steps (0 = never).
     pub eval_every: usize,

@@ -16,18 +16,21 @@
 //! ## Execution backends and memory ownership
 //!
 //! On the `sequential` and `threaded` backends the coordinator holds the
-//! memories itself; the `pipelined` backend moves them into a persistent
-//! worker pool (`runtime::pipelined::WorkerPool`) whose long-lived lanes
-//! own them for the whole run. Trainers, hooks, and tests therefore
-//! introspect memories through [`Coordinator::memory_snapshot`] — the
+//! memories itself; the pooled backends (`pipelined`, and `socket` —
+//! the same pool with its comm lanes over loopback TCP through the wire
+//! codec) move them into a persistent worker pool
+//! (`runtime::pipelined::WorkerPool`) whose long-lived lanes own them
+//! for the whole run. Trainers, hooks, and tests therefore introspect
+//! memories through [`Coordinator::memory_snapshot`] — the
 //! backend-independent API — instead of a public field.
 //!
-//! The pipelined backend additionally supports a **double-buffered**
+//! The pooled backends additionally support a **double-buffered**
 //! driving mode ([`Coordinator::step_overlapped`]): step t+1's
 //! EF-gradient + top-k selection compute runs while step t's collective
 //! is still in flight on the comm lanes, which is the compute/comm
 //! overlap the paper's scalability story depends on (Remark 3 / §5).
 
+use crate::comm::parallel::LaneTransport;
 use crate::comm::{Backend, CommCost, Fabric};
 use crate::compress::{
     sparsify, Compressor, EfMemory, LayerPartition, Selection, SparseGrad,
@@ -64,7 +67,8 @@ pub enum Mode {
 enum Workers {
     /// In the coordinator (sequential + scoped-threaded backends).
     Local(Vec<EfMemory>),
-    /// On the persistent pipelined worker pool's compute lanes.
+    /// On the persistent worker pool's compute lanes (pipelined +
+    /// socket backends).
     Pool(WorkerPool),
 }
 
@@ -132,35 +136,62 @@ impl Coordinator {
         self
     }
 
-    /// Select the execution backend (defaults to `Sequential`).
+    /// Select the execution backend (defaults to `Sequential`). Panics
+    /// if the backend's resources cannot be set up — CLI paths should
+    /// use [`Coordinator::try_set_backend`] instead.
     pub fn with_backend(mut self, backend: Backend) -> Self {
         self.set_backend(backend);
         self
     }
 
+    /// Infallible [`Coordinator::try_set_backend`] for contexts that
+    /// treat a failed mesh setup as a bug (tests, benches).
+    pub fn set_backend(&mut self, backend: Backend) {
+        self.try_set_backend(backend)
+            .expect("backend switch (socket backend binds a loopback TCP mesh)");
+    }
+
     /// Switch execution backend, migrating the per-worker memories
     /// between the coordinator and the persistent pool. Must not be
-    /// called with overlapped steps in flight.
-    pub fn set_backend(&mut self, backend: Backend) {
+    /// called with overlapped steps in flight. Fails — instead of
+    /// panicking — when the socket backend cannot build its loopback
+    /// mesh (fd limits, ephemeral-port exhaustion), so launcher code can
+    /// surface a clean error.
+    pub fn try_set_backend(&mut self, backend: Backend) -> anyhow::Result<()> {
         assert!(
             !self.in_flight(),
             "cannot switch backends with steps in flight"
         );
         if self.backend == backend {
-            return;
+            return Ok(());
         }
+        // Build the fallible part (the socket mesh) BEFORE moving the
+        // memories, so a failure leaves the coordinator fully usable on
+        // its current backend.
+        let socket_lanes = if backend == Backend::Socket {
+            Some(crate::comm::parallel::CommLanes::with_transport(
+                self.n,
+                LaneTransport::Socket,
+            )?)
+        } else {
+            None
+        };
         let memories =
             match std::mem::replace(&mut self.workers, Workers::Local(Vec::new())) {
                 Workers::Local(m) => m,
                 // Snapshot out of the pool, then drop it (joins lanes).
                 Workers::Pool(pool) => pool.snapshot(),
             };
-        self.workers = if backend == Backend::Pipelined {
-            Workers::Pool(WorkerPool::new(memories))
-        } else {
-            Workers::Local(memories)
+        self.workers = match backend {
+            Backend::Pipelined => Workers::Pool(WorkerPool::new(memories)),
+            Backend::Socket => Workers::Pool(WorkerPool::with_lanes(
+                memories,
+                socket_lanes.expect("socket lanes built above"),
+            )),
+            Backend::Sequential | Backend::Threaded => Workers::Local(memories),
         };
         self.backend = backend;
+        Ok(())
     }
 
     pub fn backend(&self) -> Backend {
@@ -184,18 +215,19 @@ impl Coordinator {
     fn pool(&self) -> &WorkerPool {
         match &self.workers {
             Workers::Pool(p) => p,
-            Workers::Local(_) => panic!("pipelined backend without a worker pool"),
+            Workers::Local(_) => panic!("pooled backend without a worker pool"),
         }
     }
 
     /// Direct borrow of the error-feedback memories. Only the in-process
-    /// backends keep them in the coordinator — on `pipelined` they live
-    /// on the worker pool; use [`Coordinator::memory_snapshot`] there.
+    /// backends keep them in the coordinator — on the pooled backends
+    /// (`pipelined`/`socket`) they live on the worker pool; use
+    /// [`Coordinator::memory_snapshot`] there.
     pub fn memories(&self) -> &[EfMemory] {
         match &self.workers {
             Workers::Local(m) => m,
             Workers::Pool(_) => panic!(
-                "pipelined memories live on the worker pool; use memory_snapshot()"
+                "pooled-backend memories live on the worker pool; use memory_snapshot()"
             ),
         }
     }
@@ -206,7 +238,7 @@ impl Coordinator {
         match &mut self.workers {
             Workers::Local(m) => m,
             Workers::Pool(_) => panic!(
-                "pipelined memories live on the worker pool; use memory_snapshot()"
+                "pooled-backend memories live on the worker pool; use memory_snapshot()"
             ),
         }
     }
@@ -258,40 +290,37 @@ impl Coordinator {
             !self.in_flight(),
             "step() with overlapped steps in flight; drain finish_overlapped() first"
         );
-        match self.backend {
-            Backend::Pipelined => {
-                self.submit(t, grads);
-                self.wait_oldest().expect("step was just submitted")
-            }
-            _ => self.step_eager(t, grads),
+        if self.backend.is_pooled() {
+            self.submit(t, grads);
+            self.wait_oldest().expect("step was just submitted")
+        } else {
+            self.step_eager(t, grads)
         }
     }
 
     /// Double-buffered driving mode: submit step `t`, then return step
-    /// `t−1`'s result (None on the first call). On the pipelined backend
-    /// step t's EF-gradient/selection compute and memory updates overlap
-    /// step t−1's in-flight collective; the other backends execute
-    /// eagerly and just delay the result by one call, so all three
-    /// produce the identical stream (the backend-matrix parity lock).
-    /// Call [`Coordinator::finish_overlapped`] to drain the last step.
+    /// `t−1`'s result (None on the first call). On the pooled backends
+    /// (pipelined/socket) step t's EF-gradient/selection compute and
+    /// memory updates overlap step t−1's in-flight collective; the other
+    /// backends execute eagerly and just delay the result by one call,
+    /// so every backend produces the identical stream (the backend-matrix
+    /// parity lock). Call [`Coordinator::finish_overlapped`] to drain the
+    /// last step.
     pub fn step_overlapped(&mut self, t: usize, grads: &[Vec<f32>]) -> Option<StepResult> {
-        match self.backend {
-            Backend::Pipelined => {
-                self.submit(t, grads);
-                if self.pending.len() > 1 {
-                    self.wait_oldest()
-                } else {
-                    None
-                }
+        if self.backend.is_pooled() {
+            self.submit(t, grads);
+            if self.pending.len() > 1 {
+                self.wait_oldest()
+            } else {
+                None
             }
-            _ => {
-                let r = self.step_eager(t, grads);
-                self.ready.push_back(r);
-                if self.ready.len() > 1 {
-                    self.ready.pop_front()
-                } else {
-                    None
-                }
+        } else {
+            let r = self.step_eager(t, grads);
+            self.ready.push_back(r);
+            if self.ready.len() > 1 {
+                self.ready.pop_front()
+            } else {
+                None
             }
         }
     }
@@ -402,7 +431,7 @@ impl Coordinator {
         // `select_parallel` contract).
         let threads = match self.backend {
             Backend::Sequential => 1,
-            Backend::Threaded | Backend::Pipelined => {
+            Backend::Threaded | Backend::Pipelined | Backend::Socket => {
                 std::thread::available_parallelism()
                     .map(|p| p.get())
                     .unwrap_or(1)
@@ -435,7 +464,9 @@ impl Coordinator {
                     self.fabric.record_dense_allreduce(grads.len(), self.dim);
                     out
                 }
-                Backend::Pipelined => unreachable!("pipelined steps go through submit"),
+                Backend::Pipelined | Backend::Socket => {
+                    unreachable!("pooled-backend steps go through submit")
+                }
             };
             let comm = self.fabric.stats().last_cost().clone();
             return StepResult {
@@ -452,7 +483,9 @@ impl Coordinator {
         let efs = match self.backend {
             Backend::Sequential => self.ef_grads(grads),
             Backend::Threaded => threaded::parallel_ef_grads(self.memories(), grads),
-            Backend::Pipelined => unreachable!("pipelined steps go through submit"),
+            Backend::Pipelined | Backend::Socket => {
+                unreachable!("pooled-backend steps go through submit")
+            }
         };
         let backend = self.backend;
         let n = self.n;
@@ -503,7 +536,9 @@ impl Coordinator {
                 let sent = per.iter().map(|p| p.len()).max().unwrap_or(0);
                 (avg, comm, sent)
             }
-            (_, Backend::Pipelined) => unreachable!("pipelined steps go through submit"),
+            (_, Backend::Pipelined | Backend::Socket) => {
+                unreachable!("pooled-backend steps go through submit")
+            }
         };
 
         // memory update (Eqn. 5) with each worker's transmitted indices —
@@ -530,7 +565,7 @@ impl Coordinator {
         match &mut self.workers {
             Workers::Local(m) => m,
             Workers::Pool(_) => {
-                unreachable!("in-process step on the pipelined backend")
+                unreachable!("in-process step on a pooled backend")
             }
         }
     }

@@ -5,14 +5,17 @@
 
 use anyhow::Result;
 use scalecom::cli::{Args, USAGE};
+use scalecom::comm::{Backend, Topology};
 use scalecom::config::{TomlDoc, TrainConfig};
 use scalecom::experiments;
 use scalecom::metrics::Table;
 use scalecom::models::paper::{paper_net, ALL_PAPER_NETS};
 use scalecom::models::zoo::ALL_ZOO_MODELS;
 use scalecom::perfmodel::{step_time, Scheme, SystemConfig};
+use scalecom::runtime::socket::{run_node, NodeSpec, NodeWorkload};
 use scalecom::runtime::{default_artifacts_dir, Engine, Manifest};
 use scalecom::trainer::{LrSchedule, Trainer};
+use std::time::Duration;
 
 fn main() {
     let code = match run() {
@@ -29,6 +32,7 @@ fn run() -> Result<()> {
     let mut args = Args::from_env()?;
     match args.subcommand.clone().as_deref() {
         Some("train") => cmd_train(&mut args),
+        Some("node") => cmd_node(&mut args),
         Some("experiment") => cmd_experiment(&mut args),
         Some("perf-model") => cmd_perf_model(&mut args),
         Some("compress-bench") => cmd_compress_bench(&mut args),
@@ -72,6 +76,28 @@ fn cmd_train(args: &mut Args) -> Result<()> {
     }
     if let Some(b) = args.str_opt("backend") {
         cfg.backend = b;
+    }
+    // The socket backend wants an explicit deployment choice: loopback
+    // (in-process TCP mesh) or a real multi-process ring via `node`.
+    let peers = args.str_opt("peers");
+    if Backend::parse(&cfg.backend)? == Backend::Socket {
+        match peers.as_deref() {
+            None => anyhow::bail!(
+                "--backend socket needs --peers: pass --peers loopback to run the \
+                 coordination step over an in-process localhost TCP mesh, or \
+                 launch one process per worker with `scalecom node --role ... \
+                 --bind ... --peers ...` (see the README's multi-node section)"
+            ),
+            Some("loopback") | Some("local") => {}
+            Some(other) => anyhow::bail!(
+                "`train` runs every worker in one process; --peers {other} looks \
+                 like a multi-process peer list, which `scalecom node` launches \
+                 (one process per peer). For in-process socket training pass \
+                 --peers loopback"
+            ),
+        }
+    } else if peers.is_some() {
+        anyhow::bail!("--peers only applies to --backend socket (or `scalecom node`)");
     }
     cfg.eval_every = args.usize_or("eval-every", cfg.steps.max(4) / 4)?;
     cfg.seed = args.usize_or("seed", cfg.seed as usize)? as u64;
@@ -127,6 +153,34 @@ fn cmd_train(args: &mut Args) -> Result<()> {
     let path = log.save_csv(std::path::Path::new("results"))?;
     println!("metrics: {}", path.display());
     Ok(())
+}
+
+/// One node of a multi-process socket ring: rendezvous over --peers,
+/// run the deterministic synthetic coordination workload on real TCP
+/// collectives, and (on the coordinator) emit the parity digest.
+fn cmd_node(args: &mut Args) -> Result<()> {
+    let role = args.str_opt("role");
+    let bind = args.str_opt("bind");
+    let peers = args.str_opt("peers");
+    // One source of truth for defaults: NodeWorkload::default() (its
+    // topology is Ring, matching the "ring" string fallback).
+    let d = NodeWorkload::default();
+    let wl = NodeWorkload {
+        scheme: args.str_or("scheme", &d.scheme),
+        dim: args.usize_or("dim", d.dim)?,
+        rate: args.usize_or("rate", d.rate)?,
+        steps: args.usize_or("steps", d.steps)?,
+        warmup: args.usize_or("compress-warmup", d.warmup)?,
+        seed: args.usize_or("seed", d.seed as usize)? as u64,
+        beta: args.f64_or("beta", d.beta as f64)? as f32,
+        topology: Topology::parse(&args.str_or("topology", "ring"))?,
+        step_delay_ms: args.usize_or("step-delay-ms", d.step_delay_ms as usize)? as u64,
+    };
+    let timeout = Duration::from_secs(args.usize_or("timeout-secs", 30)?.max(1) as u64);
+    args.finish()?;
+    let spec = NodeSpec::from_flags(role.as_deref(), bind.as_deref(), peers.as_deref(), timeout)?;
+    let stdout = std::io::stdout();
+    run_node(&spec, &wl, &mut stdout.lock())
 }
 
 fn cmd_experiment(args: &mut Args) -> Result<()> {

@@ -354,15 +354,19 @@ mod pipeline {
 
     #[test]
     fn pool_shutdown_drain_leaves_no_step_partially_applied() {
-        check("pipelined early-stop drain", 20, |g| {
+        check("pooled-backend early-stop drain", 20, |g| {
             let n = g.usize_in(2..=5);
             let dim = g.usize_in(8..=64);
             let k = g.usize_in(1..=(dim / 2).max(1));
             let total = g.usize_in(1..=12);
             let stop = g.usize_in(1..=total); // inject an early stop
             let scheme = if g.bool() { "scalecom-exact" } else { "local-topk" };
+            // Both pooled backends share the drain contract; the socket
+            // pool must additionally tear its TCP mesh down cleanly with
+            // a collective's result still uncollected.
+            let backend = if g.bool() { Backend::Pipelined } else { Backend::Socket };
             let mut seq = coord(scheme, n, dim, k, Backend::Sequential);
-            let mut pipe = coord(scheme, n, dim, k, Backend::Pipelined);
+            let mut pipe = coord(scheme, n, dim, k, backend);
             for t in 0..stop {
                 let grads: Vec<Vec<f32>> =
                     (0..n).map(|_| g.f32_vec_len(dim, 1.0)).collect();
@@ -389,6 +393,150 @@ mod pipeline {
             // queues and join cleanly (a hang here fails the test by
             // timeout; a panic fails it loudly).
             drop(pipe);
+        });
+    }
+}
+
+/// Wire-codec properties (the socket transport's framing layer): any
+/// `SparseGrad`/dense/control message round-trips bit-exactly; decoding
+/// under adversity — split reads at every byte boundary, truncated
+/// frames, hostile lengths, random garbage — never panics or mis-frames.
+#[cfg(test)]
+mod wire_codec {
+    use super::check;
+    use crate::comm::wire::{
+        decode_body, encode, read_msg, FrameDecoder, Purpose, WireMsg, MAX_FRAME_BYTES,
+    };
+    use crate::compress::SparseGrad;
+
+    /// Draw an arbitrary message (all variants reachable).
+    fn arb_msg(g: &mut super::Gen) -> WireMsg {
+        match g.usize_in(0..=3) {
+            0 => WireMsg::DenseChunk(g.f32_vec(0..=64, 10.0)),
+            1 => {
+                let dim = g.usize_in(1..=256);
+                let nnz = g.usize_in(0..=dim.min(32));
+                // strictly increasing indices in range
+                let mut idx: Vec<u32> = Vec::with_capacity(nnz);
+                let mut next = 0u32;
+                for _ in 0..nnz {
+                    let room = dim as u32 - next;
+                    if room == 0 {
+                        break;
+                    }
+                    let i = next + g.usize_in(0..=(room as usize - 1) / 2) as u32;
+                    idx.push(i);
+                    next = i + 1;
+                }
+                let vals = g.f32_vec_len(idx.len(), 5.0);
+                WireMsg::Sparse(SparseGrad::new(dim, idx, vals))
+            }
+            2 => WireMsg::Hello {
+                rank: g.usize_in(0..=1024) as u32,
+                purpose: if g.bool() { Purpose::Ring } else { Purpose::Star },
+            },
+            _ => WireMsg::Indices(
+                (0..g.usize_in(0..=48)).map(|_| g.usize_in(0..=u16::MAX as usize) as u32).collect(),
+            ),
+        }
+    }
+
+    fn bits_equal(a: &WireMsg, b: &WireMsg) -> bool {
+        // PartialEq on f32 treats NaN != NaN and -0.0 == 0.0; compare
+        // float payloads by bits so the property is about the *codec*.
+        match (a, b) {
+            (WireMsg::DenseChunk(x), WireMsg::DenseChunk(y)) => {
+                x.len() == y.len()
+                    && x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits())
+            }
+            (WireMsg::Sparse(x), WireMsg::Sparse(y)) => {
+                x.dim == y.dim
+                    && x.indices == y.indices
+                    && x.values.len() == y.values.len()
+                    && x.values
+                        .iter()
+                        .zip(&y.values)
+                        .all(|(p, q)| p.to_bits() == q.to_bits())
+            }
+            _ => a == b,
+        }
+    }
+
+    #[test]
+    fn arbitrary_messages_roundtrip_bit_exactly() {
+        check("wire roundtrip", 200, |g| {
+            let msg = arb_msg(g);
+            let frame = encode(&msg);
+            let back = decode_body(&frame[4..]).expect("well-formed frame decodes");
+            assert!(bits_equal(&msg, &back), "{msg:?} vs {back:?}");
+            // and via the blocking reader
+            let mut r = frame.as_slice();
+            let back2 = read_msg(&mut r).expect("read_msg");
+            assert!(bits_equal(&msg, &back2));
+            assert!(r.is_empty(), "read_msg must consume exactly one frame");
+        });
+    }
+
+    #[test]
+    fn split_reads_at_every_byte_boundary_reassemble() {
+        check("wire split reads", 60, |g| {
+            // a short burst of messages, fed to one decoder in two pieces
+            // cut at EVERY byte boundary of the concatenated stream
+            let msgs: Vec<WireMsg> = (0..g.usize_in(1..=3)).map(|_| arb_msg(g)).collect();
+            let stream: Vec<u8> = msgs.iter().flat_map(encode).collect();
+            for cut in 0..=stream.len() {
+                let mut d = FrameDecoder::new();
+                let mut got = d.push(&stream[..cut]).expect("prefix never errors");
+                got.extend(d.push(&stream[cut..]).expect("suffix completes"));
+                assert_eq!(got.len(), msgs.len(), "cut={cut}");
+                for (a, b) in msgs.iter().zip(&got) {
+                    assert!(bits_equal(a, b), "cut={cut}");
+                }
+                assert_eq!(d.pending(), 0, "cut={cut}: no bytes left over");
+            }
+        });
+    }
+
+    #[test]
+    fn truncated_frames_never_yield_or_panic() {
+        check("wire truncation", 120, |g| {
+            let msg = arb_msg(g);
+            let frame = encode(&msg);
+            let cut = g.usize_in(0..=frame.len().saturating_sub(1));
+            let mut d = FrameDecoder::new();
+            let got = d.push(&frame[..cut]).expect("a truncated frame just waits");
+            assert!(got.is_empty(), "cut={cut}: partial frame must not yield");
+            assert_eq!(d.pending(), cut);
+            // the blocking reader reports an error (EOF), never hangs/panics
+            assert!(read_msg(&mut &frame[..cut]).is_err());
+        });
+    }
+
+    #[test]
+    fn hostile_lengths_and_garbage_never_panic() {
+        check("wire adversity", 200, |g| {
+            // random garbage through the incremental decoder: Err or Ok,
+            // never a panic, never an over-allocation
+            let len = g.usize_in(0..=64);
+            let bytes: Vec<u8> = (0..len).map(|_| g.usize_in(0..=255) as u8).collect();
+            let mut d = FrameDecoder::new();
+            let _ = d.push(&bytes);
+            // an oversized length field is rejected up front
+            let huge = ((MAX_FRAME_BYTES + 1) as u32).to_le_bytes();
+            let mut d = FrameDecoder::new();
+            assert!(d.push(&huge).is_err());
+            // bit-flipped well-formed frames: decode may fail but must
+            // not panic; if it succeeds it consumed the whole body
+            let mut frame = encode(&arb_msg(g));
+            if !frame.is_empty() {
+                let pos = g.usize_in(4.min(frame.len() - 1)..=frame.len() - 1);
+                frame[pos] ^= 1 << g.usize_in(0..=7);
+                let body_len =
+                    u32::from_le_bytes([frame[0], frame[1], frame[2], frame[3]]) as usize;
+                if body_len == frame.len() - 4 {
+                    let _ = decode_body(&frame[4..]);
+                }
+            }
         });
     }
 }

@@ -7,11 +7,15 @@
 //! `threaded` is the scoped thread-per-worker execution backend behind
 //! `Backend::Threaded`; `pipelined` is the persistent double-buffering
 //! worker pool behind `Backend::Pipelined` (see `comm::parallel` for the
-//! collectives both run on).
+//! collectives both run on; the same pool serves `Backend::Socket` over
+//! a loopback TCP mesh). `socket` is the multi-process runtime behind
+//! `scalecom node`: rendezvous, the per-node driver, and the parity
+//! digest.
 
 pub mod engine;
 pub mod manifest;
 pub mod pipelined;
+pub mod socket;
 pub mod threaded;
 
 pub use engine::{Engine, LoadedModel};

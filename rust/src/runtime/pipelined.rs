@@ -26,7 +26,7 @@
 //! root reduction is bit-identical; ring-reduced f32 values match within
 //! rtol 1e-5 / atol 1e-6; pipelined runs are bit-identical to each other.
 
-use crate::comm::parallel::{CollectiveResult, CommJob, CommLanes};
+use crate::comm::parallel::{CollectiveResult, CommJob, CommLanes, LaneTransport};
 use crate::comm::GatherStats;
 use crate::compress::{EfMemory, SparseGrad};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -75,17 +75,38 @@ pub struct WorkerPool {
 }
 
 impl WorkerPool {
-    /// Spawn the pool, moving each worker's error-feedback memory into
-    /// its compute lane.
+    /// Spawn the pool on the channel-transport mesh, moving each
+    /// worker's error-feedback memory into its compute lane.
     pub fn new(memories: Vec<EfMemory>) -> WorkerPool {
+        Self::with_transport(memories, LaneTransport::Channel)
+            .expect("the channel mesh needs no OS resources and cannot fail")
+    }
+
+    /// Spawn the pool with its comm lanes on the chosen transport
+    /// (`Backend::Socket` = `LaneTransport::Socket`: a loopback TCP mesh
+    /// through the wire codec; mesh setup can fail if the OS refuses the
+    /// sockets).
+    pub fn with_transport(
+        memories: Vec<EfMemory>,
+        transport: LaneTransport,
+    ) -> anyhow::Result<WorkerPool> {
+        let lanes = CommLanes::with_transport(memories.len(), transport)?;
+        Ok(Self::with_lanes(memories, lanes))
+    }
+
+    /// Spawn the pool on pre-built comm lanes. Splitting mesh
+    /// construction (the only fallible part) from lane spawning lets
+    /// `Coordinator::try_set_backend` build the mesh *before* moving the
+    /// memories, so a failed setup leaves the coordinator untouched.
+    pub fn with_lanes(memories: Vec<EfMemory>, lanes: CommLanes) -> WorkerPool {
         let n = memories.len();
         assert!(n >= 1, "worker pool needs at least one worker");
+        assert_eq!(lanes.workers(), n, "lanes sized for a different worker count");
         let dim = memories[0].dim();
         assert!(
             memories.iter().all(|m| m.dim() == dim),
             "worker memories must share one dimension"
         );
-        let lanes = CommLanes::new(n);
         let mut cmds = Vec::with_capacity(n);
         let mut compute = Vec::with_capacity(n);
         for (w, mem) in memories.into_iter().enumerate() {
@@ -191,21 +212,37 @@ impl WorkerPool {
     }
 
     /// Wait for the oldest in-flight ring collective (shared or dense).
+    ///
+    /// A `Failed` lane result — only the socket transport can produce
+    /// one, and for the in-process loopback mesh it means the host
+    /// itself is broken (fd exhaustion mid-run, a wedge past the read
+    /// timeout) — is treated as fatal: bounded, loud panic, never a
+    /// hang. The *multi-process* runtime (`runtime::socket`), where peer
+    /// death is an expected fault, propagates `anyhow` errors instead;
+    /// threading `Result` through the pooled `Coordinator::step` API is
+    /// a ROADMAP follow-up.
     pub fn wait_reduced(&self) -> Vec<f32> {
         match self.lanes.wait() {
             CollectiveResult::Reduced(v) => v,
             CollectiveResult::Gathered(..) => {
                 panic!("expected a ring result, got a gather result")
             }
+            CollectiveResult::Failed(e) => {
+                panic!("loopback socket collective failed: {e}")
+            }
         }
     }
 
-    /// Wait for the oldest in-flight star gather.
+    /// Wait for the oldest in-flight star gather (same fault contract
+    /// as [`WorkerPool::wait_reduced`]).
     pub fn wait_gathered(&self) -> (Vec<f32>, GatherStats) {
         match self.lanes.wait() {
             CollectiveResult::Gathered(v, gs) => (v, gs),
             CollectiveResult::Reduced(_) => {
                 panic!("expected a gather result, got a ring result")
+            }
+            CollectiveResult::Failed(e) => {
+                panic!("loopback socket collective failed: {e}")
             }
         }
     }

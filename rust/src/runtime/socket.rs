@@ -1,0 +1,905 @@
+//! Multi-process socket runtime: rendezvous, the per-node coordination
+//! driver behind `scalecom node`, and the parity digest.
+//!
+//! One `scalecom` binary runs an N-process ring on localhost or N hosts:
+//!
+//! ```text
+//! scalecom node --role coordinator --bind 127.0.0.1:7400 \
+//!     --peers 127.0.0.1:7400,127.0.0.1:7401,127.0.0.1:7402,127.0.0.1:7403
+//! scalecom node --role worker --bind 127.0.0.1:7401 --peers <same list>
+//! ... (one process per peer)
+//! ```
+//!
+//! Every node gets the same `--peers` list (rank = position of its own
+//! `--bind` in it; the coordinator is rank 0) and runs the same
+//! deterministic synthetic coordination workload — the per-step
+//! protocol of Algorithm 1 with the collectives on real TCP
+//! (`comm::socket`): EF gradient, selection (the CLT-k leader broadcasts
+//! its index set around the ring), ring all-reduce of the selected
+//! values or star gather of per-worker sparse sets, low-pass memory
+//! update.
+//!
+//! ## The parity digest
+//!
+//! The coordinator books every collective through the same
+//! `Fabric::record_*` entry points as the in-process backends and emits
+//! a line-oriented **digest** on stdout: per step, the leader, the index
+//! selection, the reduced values at the transmitted coordinates, and
+//! the booked `CommCost`; at the end, rank 0's error-feedback memory.
+//! [`sequential_digest`] produces the same structure from an in-process
+//! sequential `Coordinator` run over the identical gradient stream, and
+//! [`compare_digests`] holds the two to the backend parity contract
+//! (selections/leaders/`CommCost` exact, gather values bit-identical,
+//! ring-reduced f32 within rtol/atol) — that is what
+//! `rust/tests/socket_multiprocess.rs` asserts over 4 real processes.
+//!
+//! Faults are part of the contract: every socket wait is bounded (read
+//! timeouts + EOF on peer death), so killing a worker mid-run surfaces
+//! as a clean `anyhow` error on every surviving node — never a hang.
+
+use crate::comm::socket::form_mesh;
+use crate::comm::{CommCost, Fabric, FabricConfig, Topology};
+use crate::compress::{schemes::make_compressor, sparsify, EfMemory, Selection};
+use crate::coordinator::{Coordinator, Mode};
+use crate::util::rng::Rng;
+use std::io::Write;
+use std::net::TcpListener;
+use std::time::Duration;
+
+/// Which side of the rendezvous this process is. Rank 0 — first in
+/// `--peers` — is the coordinator: it roots the gather star and emits
+/// the digest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    Coordinator,
+    Worker,
+}
+
+impl Role {
+    pub fn parse(s: &str) -> anyhow::Result<Role> {
+        match s {
+            "coordinator" | "coord" => Ok(Role::Coordinator),
+            "worker" => Ok(Role::Worker),
+            other => anyhow::bail!("unknown role '{other}' (expected coordinator|worker)"),
+        }
+    }
+}
+
+/// A validated node identity: who we are, where we listen, who the
+/// peers are. Built by [`NodeSpec::from_flags`], which turns every
+/// misconfiguration — most importantly a missing `--peers` — into a
+/// clear `anyhow` error instead of a panic.
+#[derive(Debug, Clone)]
+pub struct NodeSpec {
+    pub role: Role,
+    pub bind: String,
+    /// Every node's bind address, coordinator first; identical on every
+    /// node (rank = index of `bind` in it).
+    pub peers: Vec<String>,
+    pub rank: usize,
+    pub timeout: Duration,
+}
+
+impl NodeSpec {
+    pub fn from_flags(
+        role: Option<&str>,
+        bind: Option<&str>,
+        peers: Option<&str>,
+        timeout: Duration,
+    ) -> anyhow::Result<NodeSpec> {
+        let role = Role::parse(role.ok_or_else(|| {
+            anyhow::anyhow!("the socket runtime needs --role coordinator|worker")
+        })?)?;
+        let peers_str = peers.ok_or_else(|| {
+            anyhow::anyhow!(
+                "the socket runtime needs --peers: a comma-separated list of every \
+                 node's address with the coordinator first, identical on every node \
+                 (e.g. --peers 127.0.0.1:7400,127.0.0.1:7401)"
+            )
+        })?;
+        let peers: Vec<String> = peers_str
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+        anyhow::ensure!(!peers.is_empty(), "--peers lists no addresses");
+        for (i, a) in peers.iter().enumerate() {
+            anyhow::ensure!(
+                !peers[..i].contains(a),
+                "--peers lists '{a}' twice (every node needs its own address)"
+            );
+        }
+        let bind = bind
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "the socket runtime needs --bind: this node's own address, \
+                     which must appear in --peers"
+                )
+            })?
+            .trim()
+            .to_string();
+        let rank = peers.iter().position(|p| p == &bind).ok_or_else(|| {
+            anyhow::anyhow!(
+                "--bind {bind} does not appear in --peers [{}] — every node's bind \
+                 address must be listed so ranks are well-defined",
+                peers.join(", ")
+            )
+        })?;
+        match role {
+            Role::Coordinator => anyhow::ensure!(
+                rank == 0,
+                "the coordinator must be first in --peers, but --bind {bind} is \
+                 entry {rank}"
+            ),
+            Role::Worker => anyhow::ensure!(
+                rank != 0,
+                "--bind {bind} is first in --peers, which makes this node the \
+                 coordinator — launch it with --role coordinator"
+            ),
+        }
+        Ok(NodeSpec {
+            role,
+            bind,
+            peers,
+            rank,
+            timeout,
+        })
+    }
+
+    pub fn workers(&self) -> usize {
+        self.peers.len()
+    }
+}
+
+/// The deterministic synthetic coordination workload every node runs —
+/// the knobs of the backend-parity harness, CLI-settable.
+#[derive(Debug, Clone)]
+pub struct NodeWorkload {
+    pub scheme: String,
+    pub dim: usize,
+    pub rate: usize,
+    pub steps: usize,
+    pub warmup: usize,
+    pub seed: u64,
+    pub beta: f32,
+    pub topology: Topology,
+    /// Artificial per-step delay (fault-injection tests use it to hold
+    /// a run open long enough to kill a worker mid-run).
+    pub step_delay_ms: u64,
+}
+
+impl Default for NodeWorkload {
+    fn default() -> Self {
+        NodeWorkload {
+            scheme: "scalecom".into(),
+            dim: 96,
+            rate: 8,
+            steps: 50,
+            warmup: 0,
+            seed: 42,
+            beta: 0.5,
+            topology: Topology::Ring,
+            step_delay_ms: 0,
+        }
+    }
+}
+
+/// Schemes whose selection is computable from what a real node can see
+/// (its own EF gradient, plus the leader's broadcast index set). The
+/// oracle/tree schemes (true-topk, gtop-k, sketch-k) need cross-worker
+/// dense state the wire protocol does not carry.
+const SUPPORTED_SCHEMES: &[&str] = &[
+    "none",
+    "scalecom",
+    "clt-k",
+    "scalecom-exact",
+    "clt-k-exact",
+    "random-k",
+    "local-topk",
+    "local-topk-chunk",
+];
+
+impl NodeWorkload {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.dim >= 1, "--dim must be >= 1");
+        anyhow::ensure!(self.rate >= 1, "--rate must be >= 1");
+        anyhow::ensure!(self.steps >= 1, "--steps must be >= 1");
+        anyhow::ensure!(
+            self.beta > 0.0 && self.beta <= 1.0,
+            "--beta must be in (0, 1]"
+        );
+        anyhow::ensure!(
+            SUPPORTED_SCHEMES.contains(&self.scheme.as_str()),
+            "scheme '{}' is not runnable on the multi-process socket driver (its \
+             selection needs cross-worker dense state); supported: {}",
+            self.scheme,
+            SUPPORTED_SCHEMES.join("|")
+        );
+        Ok(())
+    }
+
+    fn k(&self) -> usize {
+        (self.dim / self.rate).max(1)
+    }
+}
+
+// ----------------------------------------------------------------------
+// Digest: what a run did, comparable across implementations
+// ----------------------------------------------------------------------
+
+/// One step's exchange shape.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StepKind {
+    /// Dense warmup / no-compression all-reduce.
+    Dense,
+    /// Shared-index sparse all-reduce (the broadcast index set).
+    Shared(Vec<u32>),
+    /// Per-worker gather (each worker's index set, worker order).
+    Gather(Vec<Vec<u32>>),
+}
+
+/// One step of the digest: everything the parity contract constrains.
+#[derive(Debug, Clone)]
+pub struct StepDigest {
+    pub t: usize,
+    pub leader: usize,
+    pub kind: StepKind,
+    /// The reduced values at the transmitted coordinates: the full dense
+    /// average for `Dense`, the k reduced values (index order) for
+    /// `Shared`, the averaged values at the sorted union for `Gather`.
+    pub values: Vec<f32>,
+    pub comm: CommCost,
+}
+
+/// A whole run's digest, as emitted by the coordinator (rank 0).
+#[derive(Debug, Clone)]
+pub struct NodeDigest {
+    pub workers: usize,
+    pub steps: Vec<StepDigest>,
+    /// Rank 0's final error-feedback memory.
+    pub final_memory_rank0: Vec<f32>,
+}
+
+fn fmt_f32s(vals: &[f32]) -> String {
+    if vals.is_empty() {
+        return "-".into();
+    }
+    vals.iter()
+        .map(|v| format!("{v}"))
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+fn fmt_u32s(vals: &[u32]) -> String {
+    if vals.is_empty() {
+        return "-".into();
+    }
+    vals.iter()
+        .map(|v| v.to_string())
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+fn parse_f32s(s: &str) -> anyhow::Result<Vec<f32>> {
+    if s == "-" {
+        return Ok(Vec::new());
+    }
+    s.split(',')
+        .map(|v| {
+            v.parse::<f32>()
+                .map_err(|_| anyhow::anyhow!("digest: bad f32 '{v}'"))
+        })
+        .collect()
+}
+
+fn parse_u32s(s: &str) -> anyhow::Result<Vec<u32>> {
+    if s == "-" {
+        return Ok(Vec::new());
+    }
+    s.split(',')
+        .map(|v| {
+            v.parse::<u32>()
+                .map_err(|_| anyhow::anyhow!("digest: bad u32 '{v}'"))
+        })
+        .collect()
+}
+
+/// Map a parsed op name back to the `&'static str` the fabric uses.
+fn op_static(name: &str) -> anyhow::Result<&'static str> {
+    Ok(match name {
+        "dense_allreduce" => "dense_allreduce",
+        "sparse_allreduce_shared" => "sparse_allreduce_shared",
+        "sparse_gather" => "sparse_gather",
+        other => anyhow::bail!("digest: unknown op '{other}'"),
+    })
+}
+
+fn emit_step<W: Write>(out: &mut W, s: &StepDigest) -> anyhow::Result<()> {
+    let (kind, sel) = match &s.kind {
+        StepKind::Dense => ("dense".to_string(), "-".to_string()),
+        StepKind::Shared(ix) => ("shared".to_string(), fmt_u32s(ix)),
+        StepKind::Gather(per) => (
+            "gather".to_string(),
+            per.iter().map(|ix| fmt_u32s(ix)).collect::<Vec<_>>().join(";"),
+        ),
+    };
+    writeln!(
+        out,
+        "step t={} leader={} kind={kind} sel={sel} vals={} op={} up={} down={} bn={} hops={} time={}",
+        s.t,
+        s.leader,
+        fmt_f32s(&s.values),
+        s.comm.op,
+        s.comm.bytes_up_per_worker,
+        s.comm.bytes_down_per_worker,
+        s.comm.bottleneck_bytes,
+        s.comm.hops,
+        s.comm.time_s,
+    )?;
+    out.flush()?;
+    Ok(())
+}
+
+/// Key=value accessor over one digest line's tokens.
+fn kv<'a>(tokens: &'a [&'a str], key: &str) -> anyhow::Result<&'a str> {
+    tokens
+        .iter()
+        .find_map(|t| t.strip_prefix(key).and_then(|r| r.strip_prefix('=')))
+        .ok_or_else(|| anyhow::anyhow!("digest: missing {key}= field"))
+}
+
+/// Parse a coordinator's stdout back into a [`NodeDigest`]. Tolerates
+/// interleaved non-digest lines; fails on a truncated digest (no
+/// `digest-end`), which is how the tests detect a crashed coordinator.
+pub fn parse_digest(text: &str) -> anyhow::Result<NodeDigest> {
+    let mut workers: Option<usize> = None;
+    let mut steps: Vec<StepDigest> = Vec::new();
+    let mut final_memory: Option<Vec<f32>> = None;
+    let mut ended = false;
+    for line in text.lines() {
+        let tokens: Vec<&str> = line.split_whitespace().collect();
+        match tokens.first().copied() {
+            Some("digest") => {
+                workers = Some(kv(&tokens, "workers")?.parse()?);
+            }
+            Some("step") => {
+                let t: usize = kv(&tokens, "t")?.parse()?;
+                let leader: usize = kv(&tokens, "leader")?.parse()?;
+                let sel = kv(&tokens, "sel")?;
+                let kind = match kv(&tokens, "kind")? {
+                    "dense" => StepKind::Dense,
+                    "shared" => StepKind::Shared(parse_u32s(sel)?),
+                    "gather" => StepKind::Gather(
+                        sel.split(';')
+                            .map(parse_u32s)
+                            .collect::<anyhow::Result<Vec<_>>>()?,
+                    ),
+                    other => anyhow::bail!("digest: unknown step kind '{other}'"),
+                };
+                let comm = CommCost {
+                    op: op_static(kv(&tokens, "op")?)?,
+                    bytes_up_per_worker: kv(&tokens, "up")?.parse()?,
+                    bytes_down_per_worker: kv(&tokens, "down")?.parse()?,
+                    bottleneck_bytes: kv(&tokens, "bn")?.parse()?,
+                    hops: kv(&tokens, "hops")?.parse()?,
+                    time_s: kv(&tokens, "time")?.parse()?,
+                };
+                anyhow::ensure!(t == steps.len(), "digest: step {t} out of order");
+                steps.push(StepDigest {
+                    t,
+                    leader,
+                    kind,
+                    values: parse_f32s(kv(&tokens, "vals")?)?,
+                    comm,
+                });
+            }
+            Some("mem0") => {
+                final_memory = Some(parse_f32s(kv(&tokens, "vals")?)?);
+            }
+            Some("digest-end") => {
+                let declared: usize = kv(&tokens, "steps")?.parse()?;
+                anyhow::ensure!(
+                    declared == steps.len(),
+                    "digest: declared {declared} steps but parsed {}",
+                    steps.len()
+                );
+                ended = true;
+            }
+            _ => {} // foreign output interleaved with the digest
+        }
+    }
+    anyhow::ensure!(ended, "digest: truncated (no digest-end line)");
+    Ok(NodeDigest {
+        workers: workers.ok_or_else(|| anyhow::anyhow!("digest: no header line"))?,
+        steps,
+        final_memory_rank0: final_memory
+            .ok_or_else(|| anyhow::anyhow!("digest: no mem0 line"))?,
+    })
+}
+
+/// Hold two digests to the backend parity contract:
+/// selections/leaders/`CommCost` **exact**; gather values and the final
+/// memory **bit-identical** (worker-order reductions / per-worker local
+/// math); dense- and shared-path values within the ring
+/// reduction-order tolerance.
+pub fn compare_digests(
+    got: &NodeDigest,
+    want: &NodeDigest,
+    rtol: f32,
+    atol: f32,
+) -> anyhow::Result<()> {
+    use crate::util::floats::allclose;
+    anyhow::ensure!(
+        got.workers == want.workers,
+        "workers: {} vs {}",
+        got.workers,
+        want.workers
+    );
+    anyhow::ensure!(
+        got.steps.len() == want.steps.len(),
+        "step count: {} vs {}",
+        got.steps.len(),
+        want.steps.len()
+    );
+    for (a, b) in got.steps.iter().zip(&want.steps) {
+        let t = b.t;
+        anyhow::ensure!(a.leader == b.leader, "t={t}: leader {} vs {}", a.leader, b.leader);
+        anyhow::ensure!(a.kind == b.kind, "t={t}: selection mismatch");
+        anyhow::ensure!(
+            a.comm == b.comm,
+            "t={t}: CommCost mismatch: {:?} vs {:?}",
+            a.comm,
+            b.comm
+        );
+        anyhow::ensure!(
+            a.values.len() == b.values.len(),
+            "t={t}: value count {} vs {}",
+            a.values.len(),
+            b.values.len()
+        );
+        match &b.kind {
+            StepKind::Gather(_) => anyhow::ensure!(
+                a.values == b.values,
+                "t={t}: gather values must be bit-identical"
+            ),
+            _ => {
+                if let Err(i) = allclose(&a.values, &b.values, rtol, atol) {
+                    anyhow::bail!(
+                        "t={t}: ring value {i} out of tolerance: {} vs {}",
+                        a.values[i],
+                        b.values[i]
+                    );
+                }
+            }
+        }
+    }
+    anyhow::ensure!(
+        got.final_memory_rank0 == want.final_memory_rank0,
+        "final rank-0 memory diverged (it is pure per-worker math and must be \
+         bit-identical)"
+    );
+    Ok(())
+}
+
+// ----------------------------------------------------------------------
+// The gradient stream and the two digest producers
+// ----------------------------------------------------------------------
+
+/// The run's gradient stream: one continuous RNG, `n` worker gradients
+/// drawn in worker order each step — every node regenerates the same
+/// stream locally, so no gradient bytes cross the wire.
+fn step_grads(rng: &mut Rng, n: usize, dim: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|_| {
+            let mut v = vec![0.0f32; dim];
+            rng.fill_normal(&mut v, 1.0);
+            v
+        })
+        .collect()
+}
+
+/// Run the workload on the in-process sequential backend and digest it —
+/// the reference side of the multi-process parity lock.
+pub fn sequential_digest(wl: &NodeWorkload, n: usize) -> anyhow::Result<NodeDigest> {
+    wl.validate()?;
+    anyhow::ensure!(n >= 1, "need at least one worker");
+    let fabric = Fabric::new(FabricConfig {
+        workers: n,
+        topology: wl.topology,
+        ..FabricConfig::default()
+    });
+    let mode = if wl.scheme == "none" {
+        Mode::Dense
+    } else {
+        Mode::Compressed(make_compressor(&wl.scheme, wl.rate, wl.seed)?)
+    };
+    let mut coord = Coordinator::new(n, wl.dim, mode, wl.beta, wl.k(), fabric, wl.warmup);
+    let mut rng = Rng::for_stream(wl.seed, n as u64);
+    let mut steps = Vec::with_capacity(wl.steps);
+    for t in 0..wl.steps {
+        let grads = step_grads(&mut rng, n, wl.dim);
+        let r = coord.step(t, &grads);
+        let (kind, values) = if r.dense {
+            (StepKind::Dense, r.update.clone())
+        } else {
+            match r.selection.as_ref().expect("compressed step has a selection") {
+                Selection::Shared(ix) => (
+                    StepKind::Shared(ix.clone()),
+                    ix.iter().map(|&i| r.update[i as usize]).collect(),
+                ),
+                Selection::PerWorker(per) => {
+                    let mut union: Vec<u32> = per.iter().flatten().copied().collect();
+                    union.sort_unstable();
+                    union.dedup();
+                    (
+                        StepKind::Gather(per.clone()),
+                        union.iter().map(|&i| r.update[i as usize]).collect(),
+                    )
+                }
+            }
+        };
+        steps.push(StepDigest {
+            t,
+            leader: r.leader,
+            kind,
+            values,
+            comm: r.comm.clone(),
+        });
+    }
+    Ok(NodeDigest {
+        workers: n,
+        steps,
+        final_memory_rank0: coord.memory_snapshot()[0].memory().to_vec(),
+    })
+}
+
+/// Run one node of the multi-process ring: bind, rendezvous, execute the
+/// workload over the socket collectives. The coordinator (rank 0) books
+/// the analytic `CommCost` through the same `Fabric::record_*` entry
+/// points as every in-process backend and writes the digest to `out`;
+/// workers only report completion.
+pub fn run_node<W: Write>(spec: &NodeSpec, wl: &NodeWorkload, out: &mut W) -> anyhow::Result<()> {
+    use anyhow::Context;
+    wl.validate()?;
+    let rank = spec.rank;
+    let n = spec.workers();
+    let listener = TcpListener::bind(spec.bind.as_str())
+        .with_context(|| format!("rank {rank}: bind {}", spec.bind))?;
+    writeln!(out, "node rank={rank} n={n} bound={}", spec.bind)?;
+    out.flush()?;
+    let (mut ring, mut star) = form_mesh(rank, &spec.peers, listener, spec.timeout)?;
+
+    let k = wl.k();
+    let mut compressor = if wl.scheme == "none" {
+        None
+    } else {
+        Some(make_compressor(&wl.scheme, wl.rate, wl.seed)?)
+    };
+    let mut mem = EfMemory::new(wl.dim, wl.beta);
+    let mut fabric = (rank == 0).then(|| {
+        Fabric::new(FabricConfig {
+            workers: n,
+            topology: wl.topology,
+            ..FabricConfig::default()
+        })
+    });
+    if rank == 0 {
+        writeln!(
+            out,
+            "digest v1 workers={n} steps={} scheme={} dim={} rate={} seed={} warmup={}",
+            wl.steps, wl.scheme, wl.dim, wl.rate, wl.seed, wl.warmup
+        )?;
+        out.flush()?;
+    }
+
+    let mut rng = Rng::for_stream(wl.seed, n as u64);
+    for t in 0..wl.steps {
+        let grads = step_grads(&mut rng, n, wl.dim);
+        let grad = &grads[rank];
+        let leader = t % n;
+        let dense = compressor.is_none() || t < wl.warmup;
+        if dense {
+            let mut buf = grad.clone();
+            ring.allreduce_avg(&mut buf)
+                .with_context(|| format!("step {t}: dense ring all-reduce"))?;
+            if let Some(f) = fabric.as_mut() {
+                let comm = f.record_dense_allreduce(n, wl.dim);
+                emit_step(
+                    out,
+                    &StepDigest {
+                        t,
+                        leader,
+                        kind: StepKind::Dense,
+                        values: buf,
+                        comm,
+                    },
+                )?;
+            }
+        } else {
+            let comp = compressor.as_mut().expect("compressed path has a scheme");
+            let ef = mem.ef_grad(grad);
+            if comp.is_commutative() {
+                // Shared-index path: the cyclic leader selects on its own
+                // EF gradient and broadcasts the set around the ring
+                // (Algorithm 1 line 6 / Eqn. 3).
+                let own_sel = if rank == leader {
+                    // `CltK::select` reads `ef_grads[t % n]`; handing it n
+                    // views of the leader's own vector makes that exactly
+                    // this node's EF gradient — what a real leader sees.
+                    let views: Vec<&[f32]> = vec![ef.as_slice(); n];
+                    match comp.select(t, &views, k) {
+                        Selection::Shared(ix) => Some(ix),
+                        Selection::PerWorker(_) => anyhow::bail!(
+                            "scheme '{}' is commutative but produced per-worker sets",
+                            wl.scheme
+                        ),
+                    }
+                } else {
+                    None
+                };
+                let idx = ring
+                    .broadcast_indices(leader, own_sel.as_deref())
+                    .with_context(|| format!("step {t}: index broadcast"))?;
+                // Every legitimate selection is strictly increasing and
+                // in-range; duplicates would silently double-apply the
+                // EF-memory update, so reject malformed broadcasts here.
+                anyhow::ensure!(
+                    idx.iter().all(|&i| (i as usize) < wl.dim)
+                        && idx.windows(2).all(|w| w[0] < w[1]),
+                    "step {t}: malformed index broadcast (must be strictly \
+                     increasing and < dim {})",
+                    wl.dim
+                );
+                let mut vals: Vec<f32> = idx.iter().map(|&i| ef[i as usize]).collect();
+                ring.allreduce_avg(&mut vals)
+                    .with_context(|| format!("step {t}: sparse ring all-reduce"))?;
+                mem.update_after_send(grad, &idx);
+                if let Some(f) = fabric.as_mut() {
+                    let comm = f.record_sparse_allreduce_shared(n, idx.len());
+                    emit_step(
+                        out,
+                        &StepDigest {
+                            t,
+                            leader,
+                            kind: StepKind::Shared(idx),
+                            values: vals,
+                            comm,
+                        },
+                    )?;
+                }
+            } else {
+                // Per-worker path (local top-k): own selection, star
+                // gather at the coordinator — the gradient build-up.
+                let own_idx = match comp.select(t, &[ef.as_slice()], k) {
+                    Selection::PerWorker(mut per) => per.remove(0),
+                    Selection::Shared(_) => anyhow::bail!(
+                        "scheme '{}' is non-commutative but produced a shared set",
+                        wl.scheme
+                    ),
+                };
+                let gathered = star
+                    .gather(sparsify(&ef, &own_idx))
+                    .with_context(|| format!("step {t}: star gather"))?;
+                mem.update_after_send(grad, &own_idx);
+                if let Some(f) = fabric.as_mut() {
+                    let all = gathered.expect("rank 0 roots the star");
+                    // A peer launched with a different --dim would send
+                    // contributions the reduction cannot hold — surface
+                    // the misconfiguration instead of panicking on it.
+                    for (w, s) in all.iter().enumerate() {
+                        anyhow::ensure!(
+                            s.dim == wl.dim,
+                            "step {t}: worker {w} sent a dim-{} contribution into a \
+                             dim-{} run — every node must be launched with the same \
+                             --dim",
+                            s.dim,
+                            wl.dim
+                        );
+                    }
+                    // One shared definition of the gather arithmetic
+                    // (worker-order root reduction) for every backend.
+                    let (acc, gs) = crate::comm::fabric::reduce_gathered(&all, wl.dim);
+                    let mut union: Vec<u32> =
+                        all.iter().flat_map(|s| s.indices.iter().copied()).collect();
+                    union.sort_unstable();
+                    union.dedup();
+                    let values = union.iter().map(|&i| acc[i as usize]).collect();
+                    let comm = f.record_sparse_gather(&gs);
+                    emit_step(
+                        out,
+                        &StepDigest {
+                            t,
+                            leader,
+                            kind: StepKind::Gather(
+                                all.iter().map(|s| s.indices.clone()).collect(),
+                            ),
+                            values,
+                            comm,
+                        },
+                    )?;
+                }
+            }
+        }
+        if wl.step_delay_ms > 0 {
+            std::thread::sleep(Duration::from_millis(wl.step_delay_ms));
+        }
+    }
+    if rank == 0 {
+        writeln!(out, "mem0 vals={}", fmt_f32s(mem.memory()))?;
+        writeln!(out, "digest-end steps={}", wl.steps)?;
+    } else {
+        writeln!(out, "node rank={rank} done steps={}", wl.steps)?;
+    }
+    out.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn free_addrs(k: usize) -> Vec<String> {
+        // Bind ephemeral listeners to reserve distinct ports, then free
+        // them for run_node to re-bind (tiny race, negligible in tests).
+        let listeners: Vec<TcpListener> = (0..k)
+            .map(|_| TcpListener::bind(("127.0.0.1", 0)).unwrap())
+            .collect();
+        listeners
+            .iter()
+            .map(|l| l.local_addr().unwrap().to_string())
+            .collect()
+    }
+
+    fn spec_for(peers: &[String], rank: usize) -> NodeSpec {
+        let role = if rank == 0 { "coordinator" } else { "worker" };
+        NodeSpec::from_flags(
+            Some(role),
+            Some(&peers[rank]),
+            Some(&peers.join(",")),
+            Duration::from_secs(20),
+        )
+        .expect("valid spec")
+    }
+
+    /// Drive every rank on a thread inside this process; return the
+    /// coordinator's parsed digest.
+    fn run_all_ranks(wl: &NodeWorkload, n: usize) -> NodeDigest {
+        let peers = free_addrs(n);
+        let outputs: Vec<Vec<u8>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..n)
+                .map(|rank| {
+                    let peers = &peers;
+                    let wl = wl.clone();
+                    s.spawn(move || {
+                        let spec = spec_for(peers, rank);
+                        let mut out = Vec::new();
+                        run_node(&spec, &wl, &mut out)
+                            .unwrap_or_else(|e| panic!("rank {rank}: {e:#}"));
+                        out
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("rank")).collect()
+        });
+        parse_digest(&String::from_utf8(outputs[0].clone()).unwrap()).expect("digest")
+    }
+
+    #[test]
+    fn spec_rejects_missing_or_inconsistent_flags_cleanly() {
+        let t = Duration::from_secs(1);
+        let err = NodeSpec::from_flags(Some("coordinator"), Some("a:1"), None, t).unwrap_err();
+        assert!(err.to_string().contains("--peers"), "{err}");
+        let err = NodeSpec::from_flags(None, Some("a:1"), Some("a:1"), t).unwrap_err();
+        assert!(err.to_string().contains("--role"), "{err}");
+        let err =
+            NodeSpec::from_flags(Some("coordinator"), None, Some("a:1,b:2"), t).unwrap_err();
+        assert!(err.to_string().contains("--bind"), "{err}");
+        let err = NodeSpec::from_flags(Some("coordinator"), Some("c:3"), Some("a:1,b:2"), t)
+            .unwrap_err();
+        assert!(err.to_string().contains("does not appear"), "{err}");
+        let err = NodeSpec::from_flags(Some("worker"), Some("a:1"), Some("a:1,b:2"), t)
+            .unwrap_err();
+        assert!(err.to_string().contains("coordinator"), "{err}");
+        let err = NodeSpec::from_flags(Some("coordinator"), Some("b:2"), Some("a:1,b:2"), t)
+            .unwrap_err();
+        assert!(err.to_string().contains("first in --peers"), "{err}");
+        let err = NodeSpec::from_flags(Some("coordinator"), Some("a:1"), Some("a:1,a:1"), t)
+            .unwrap_err();
+        assert!(err.to_string().contains("twice"), "{err}");
+        let ok = NodeSpec::from_flags(Some("worker"), Some("b:2"), Some("a:1, b:2"), t).unwrap();
+        assert_eq!(ok.rank, 1);
+        assert_eq!(ok.workers(), 2);
+    }
+
+    #[test]
+    fn workload_rejects_unsupported_schemes() {
+        let wl = NodeWorkload {
+            scheme: "true-topk".into(),
+            ..NodeWorkload::default()
+        };
+        let err = wl.validate().unwrap_err();
+        assert!(err.to_string().contains("not runnable"), "{err}");
+        NodeWorkload::default().validate().unwrap();
+    }
+
+    #[test]
+    fn in_process_nodes_match_sequential_digest_shared_path() {
+        let wl = NodeWorkload {
+            steps: 20,
+            warmup: 3, // cover the dense → compressed transition
+            ..NodeWorkload::default()
+        };
+        for n in [1usize, 2, 4] {
+            let got = run_all_ranks(&wl, n);
+            let want = sequential_digest(&wl, n).unwrap();
+            compare_digests(&got, &want, 1e-5, 1e-6)
+                .unwrap_or_else(|e| panic!("n={n}: {e:#}"));
+        }
+    }
+
+    #[test]
+    fn in_process_nodes_match_sequential_digest_gather_path() {
+        let wl = NodeWorkload {
+            scheme: "local-topk".into(),
+            steps: 15,
+            ..NodeWorkload::default()
+        };
+        let got = run_all_ranks(&wl, 3);
+        let want = sequential_digest(&wl, 3).unwrap();
+        compare_digests(&got, &want, 1e-5, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn in_process_nodes_match_sequential_digest_dense_and_random() {
+        for scheme in ["none", "random-k"] {
+            let wl = NodeWorkload {
+                scheme: scheme.into(),
+                steps: 10,
+                ..NodeWorkload::default()
+            };
+            let got = run_all_ranks(&wl, 2);
+            let want = sequential_digest(&wl, 2).unwrap();
+            compare_digests(&got, &want, 1e-5, 1e-6)
+                .unwrap_or_else(|e| panic!("{scheme}: {e:#}"));
+        }
+    }
+
+    #[test]
+    fn digest_parse_detects_truncation() {
+        let wl = NodeWorkload {
+            steps: 4,
+            ..NodeWorkload::default()
+        };
+        let want = sequential_digest(&wl, 2).unwrap();
+        // emit a full digest, then chop the tail off
+        let mut buf = Vec::new();
+        writeln!(buf, "digest v1 workers=2 steps=4 scheme=x dim=96 rate=8 seed=42 warmup=0")
+            .unwrap();
+        for s in &want.steps {
+            emit_step(&mut buf, s).unwrap();
+        }
+        let full = String::from_utf8(buf).unwrap();
+        let err = parse_digest(&full).unwrap_err();
+        assert!(err.to_string().contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn digest_emit_parse_roundtrips_exactly() {
+        let wl = NodeWorkload {
+            steps: 6,
+            warmup: 2,
+            ..NodeWorkload::default()
+        };
+        let want = sequential_digest(&wl, 3).unwrap();
+        let mut buf = Vec::new();
+        writeln!(buf, "digest v1 workers=3").unwrap();
+        for s in &want.steps {
+            emit_step(&mut buf, s).unwrap();
+        }
+        writeln!(buf, "mem0 vals={}", fmt_f32s(&want.final_memory_rank0)).unwrap();
+        writeln!(buf, "digest-end steps={}", want.steps.len()).unwrap();
+        let parsed = parse_digest(&String::from_utf8(buf).unwrap()).unwrap();
+        // text round-trip must be lossless: compare at zero tolerance
+        compare_digests(&parsed, &want, 0.0, 0.0).unwrap();
+    }
+}

@@ -139,16 +139,9 @@ pub fn exchange_gather(
                     let sg = sparsify(ef, idx);
                     let gathered = node.gather(sg);
                     mem.update_after_send(grad, idx);
-                    gathered.map(|all| {
-                        let gs = GatherStats::from_sparses(&all);
-                        let mut acc = vec![0.0f32; dim];
-                        for contribution in &all {
-                            contribution.add_into(&mut acc);
-                        }
-                        let inv = 1.0 / n as f32;
-                        acc.iter_mut().for_each(|v| *v *= inv);
-                        (acc, gs)
-                    })
+                    // One shared definition of the gather arithmetic
+                    // (worker-order root reduction) for every backend.
+                    gathered.map(|all| crate::comm::fabric::reduce_gathered(&all, dim))
                 })
             })
             .collect();

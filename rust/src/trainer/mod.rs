@@ -14,10 +14,13 @@
 //! worker with channel collectives (`comm::parallel`); `pipelined` runs
 //! a persistent worker pool (`runtime::pipelined`) whose lanes own the
 //! error-feedback memories and overlap each step's memory update with
-//! its in-flight collective. All three are deterministic — the channel
-//! dataflow fixes every reduction order — and parity-locked by
-//! `rust/tests/backend_parity.rs`, so communication volume and
-//! convergence results are backend-independent. (The trainer drives
+//! its in-flight collective; `socket` is the same pool with every
+//! collective hop crossing a loopback TCP socket through the wire codec
+//! (`comm::socket` — multi-process rings launch via `scalecom node`).
+//! All four are deterministic — the mesh dataflow fixes every reduction
+//! order — and parity-locked by `rust/tests/backend_parity.rs`, so
+//! communication volume and convergence results are
+//! backend-independent. (The trainer drives
 //! steps synchronously because the optimizer needs g^t before the next
 //! forward/backward; the double-buffered `step_overlapped` mode is
 //! exercised by the collective benches, where the gradient stream does
@@ -130,8 +133,10 @@ impl<'h> Trainer<'h> {
             k.max(1),
             fabric,
             cfg.compress.warmup_steps,
-        )
-        .with_backend(Backend::parse(&cfg.backend)?);
+        );
+        // Fallible switch: the socket backend binds a loopback TCP mesh,
+        // and a refused mesh should be a clean CLI error, not a panic.
+        coordinator.try_set_backend(Backend::parse(&cfg.backend)?)?;
         if cfg.compress.use_flops_rule {
             let partition = model.mm.layers.clone();
             let ks = partition.per_layer_k(
@@ -241,12 +246,13 @@ impl<'h> Trainer<'h> {
             self.optimizer.step(&mut self.params, &result.update, lr);
 
             if let Some(hook) = &mut self.hook {
-                // The pipelined pool owns its memories on worker lanes, so
-                // hooks get a snapshot there; the in-process backends keep
-                // the zero-copy borrow.
+                // The pooled backends (pipelined/socket) own their
+                // memories on worker lanes, so hooks get a snapshot
+                // there; the in-process backends keep the zero-copy
+                // borrow.
                 let snapshot;
                 let memories: &[EfMemory] =
-                    if self.coordinator.backend() == Backend::Pipelined {
+                    if self.coordinator.backend().is_pooled() {
                         snapshot = self.coordinator.memory_snapshot();
                         &snapshot
                     } else {

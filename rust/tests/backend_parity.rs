@@ -1,8 +1,12 @@
 //! Backend-matrix parity lock: every concurrent backend — `threaded`
-//! (scoped thread-per-worker, per-step channel mesh) and `pipelined`
-//! (persistent double-buffering worker pool) — must be indistinguishable
-//! from the sequential reference across every compression scheme, worker
-//! count, and step.
+//! (scoped thread-per-worker, per-step channel mesh), `pipelined`
+//! (persistent double-buffering worker pool), and `socket` (the same
+//! pool with every collective hop crossing a loopback TCP socket
+//! through the wire codec) — must be indistinguishable from the
+//! sequential reference across every compression scheme, worker count,
+//! and step. (The multi-process socket deployment is parity-locked
+//! separately, against real processes, in
+//! `rust/tests/socket_multiprocess.rs`.)
 //!
 //! Determinism contract (see `comm::parallel` module docs):
 //!   - selections, leaders, rates, byte accounting, `CommStats`: EXACT;
@@ -46,10 +50,11 @@ const SCHEMES: &[&str] = &[
 const WORKER_COUNTS: &[usize] = &[2, 4, 8, 16];
 
 /// Concurrent backends under test, filterable per CI matrix job with
-/// `SCALECOM_TEST_BACKENDS=threaded` / `=pipelined` / `=threaded,pipelined`.
-/// `sequential` is always the reference side of every comparison, so a
-/// selection that leaves nothing to compare is a misconfiguration — fail
-/// loudly instead of passing the whole parity lock vacuously.
+/// `SCALECOM_TEST_BACKENDS=threaded` / `=pipelined` / `=socket` / a
+/// comma list. `sequential` is always the reference side of every
+/// comparison, so a selection that leaves nothing to compare is a
+/// misconfiguration — fail loudly instead of passing the whole parity
+/// lock vacuously.
 fn backends_under_test() -> Vec<Backend> {
     let backends: Vec<Backend> = match std::env::var("SCALECOM_TEST_BACKENDS") {
         Ok(s) => s
@@ -60,13 +65,13 @@ fn backends_under_test() -> Vec<Backend> {
             })
             .filter(|&b| b != Backend::Sequential)
             .collect(),
-        Err(_) => vec![Backend::Threaded, Backend::Pipelined],
+        Err(_) => vec![Backend::Threaded, Backend::Pipelined, Backend::Socket],
     };
     assert!(
         !backends.is_empty(),
         "SCALECOM_TEST_BACKENDS selected no concurrent backend — the parity \
          matrix would pass without comparing anything (sequential is always \
-         the reference side; pick threaded and/or pipelined)"
+         the reference side; pick threaded, pipelined, and/or socket)"
     );
     backends
 }
@@ -253,7 +258,7 @@ fn concurrent_backends_are_deterministic_run_to_run() {
             let mut updates = Vec::new();
             for t in 0..20 {
                 let grads = rand_grads(&mut rng, n, dim);
-                if backend == Backend::Pipelined {
+                if backend.is_pooled() {
                     if let Some(r) = c.step_overlapped(t, &grads) {
                         updates.push(r.update);
                     }
@@ -279,15 +284,18 @@ fn concurrent_backends_are_deterministic_run_to_run() {
 fn pipelined_streaming_matches_sequential_per_step() {
     // The double-buffered driving mode (submit t+1 while t's collective
     // is in flight) must produce the exact same per-step stream as the
-    // sequential reference — the one-step-lag contract.
-    for &scheme in &["scalecom", "local-topk", "none"] {
+    // sequential reference — the one-step-lag contract. Both pooled
+    // backends (pipelined: channel lanes; socket: loopback TCP lanes)
+    // carry it.
+    for backend in [Backend::Pipelined, Backend::Socket] {
+        for &scheme in &["scalecom", "local-topk", "none"] {
         for &n in &[2usize, 4, 8] {
             let dim = 96;
             let topo = Topology::Ring;
-            let ctx = format!("streaming scheme={scheme} n={n}");
+            let ctx = format!("streaming scheme={scheme} n={n} backend={}", backend.label());
             let mut seq =
                 coordinator(scheme, n, dim, 8, 2, topo, Backend::Sequential);
-            let mut pipe = coordinator(scheme, n, dim, 8, 2, topo, Backend::Pipelined);
+            let mut pipe = coordinator(scheme, n, dim, 8, 2, topo, backend);
             let mut rng = Rng::for_stream(0xF1FE, n as u64);
             let steps = 30;
             let mut seq_results = Vec::new();
@@ -306,6 +314,7 @@ fn pipelined_streaming_matches_sequential_per_step() {
             }
             assert_memory_parity(&ctx, &seq, &pipe);
             assert_eq!(seq.fabric.stats().ops, pipe.fabric.stats().ops, "{ctx}");
+        }
         }
     }
 }

@@ -1,0 +1,273 @@
+//! Multi-process socket-transport lock: N real `scalecom node` processes
+//! on localhost must reproduce the sequential backend's coordination
+//! exactly — and fail *cleanly* when a process dies.
+//!
+//! - **Parity**: a 4-process ring (1 coordinator + 3 workers) runs the
+//!   synthetic workload per scheme family; the coordinator's digest
+//!   (selections, leaders, reduced values, per-step `CommCost` booked
+//!   through `Fabric::record_*`) is parsed from its stdout and held to
+//!   `runtime::socket::sequential_digest` under the backend parity
+//!   contract: selections/`CommCost` exact, gather values bit-identical,
+//!   ring f32 within rtol 1e-5 / atol 1e-6.
+//! - **Fault injection**: kill one worker process mid-run; the
+//!   coordinator must exit non-zero with a clean `anyhow` error on
+//!   stderr within a bounded timeout — a dead peer may never hang the
+//!   ring.
+//!
+//! Every child is spawned from `CARGO_BIN_EXE_scalecom` and hard-killed
+//! on drop, so a failing assertion cannot leak processes into CI.
+
+use scalecom::runtime::socket::{compare_digests, parse_digest, sequential_digest, NodeWorkload};
+use std::io::{BufRead, BufReader, Read};
+use std::net::TcpListener;
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_scalecom")
+}
+
+/// Reserve `k` distinct loopback ports by binding and releasing them.
+fn free_addrs(k: usize) -> Vec<String> {
+    let listeners: Vec<TcpListener> = (0..k)
+        .map(|_| TcpListener::bind(("127.0.0.1", 0)).expect("reserve port"))
+        .collect();
+    listeners
+        .iter()
+        .map(|l| l.local_addr().expect("addr").to_string())
+        .collect()
+}
+
+/// Children that are guaranteed dead after the test, pass or fail.
+struct Cluster {
+    children: Vec<Child>,
+}
+
+impl Drop for Cluster {
+    fn drop(&mut self) {
+        for c in &mut self.children {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+fn spawn_node(peers: &[String], rank: usize, wl: &NodeWorkload, timeout_secs: u64) -> Child {
+    let mut cmd = Command::new(bin());
+    cmd.arg("node")
+        .arg("--role")
+        .arg(if rank == 0 { "coordinator" } else { "worker" })
+        .arg("--bind")
+        .arg(&peers[rank])
+        .arg("--peers")
+        .arg(peers.join(","))
+        .arg("--scheme")
+        .arg(&wl.scheme)
+        .arg("--dim")
+        .arg(wl.dim.to_string())
+        .arg("--rate")
+        .arg(wl.rate.to_string())
+        .arg("--steps")
+        .arg(wl.steps.to_string())
+        .arg("--compress-warmup")
+        .arg(wl.warmup.to_string())
+        .arg("--seed")
+        .arg(wl.seed.to_string())
+        .arg("--beta")
+        .arg(wl.beta.to_string())
+        .arg("--topology")
+        .arg("ring")
+        .arg("--step-delay-ms")
+        .arg(wl.step_delay_ms.to_string())
+        .arg("--timeout-secs")
+        .arg(timeout_secs.to_string())
+        .stdin(Stdio::null())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped());
+    cmd.spawn().expect("spawn scalecom node")
+}
+
+/// Drain a child's stdout on a thread (a full pipe must never stall the
+/// run) and return a handle that yields the full text.
+fn capture_stdout(child: &mut Child) -> std::thread::JoinHandle<String> {
+    let stdout = child.stdout.take().expect("piped stdout");
+    std::thread::spawn(move || {
+        let mut s = String::new();
+        let _ = BufReader::new(stdout).read_to_string(&mut s);
+        s
+    })
+}
+
+fn capture_stderr(child: &mut Child) -> std::thread::JoinHandle<String> {
+    let stderr = child.stderr.take().expect("piped stderr");
+    std::thread::spawn(move || {
+        let mut s = String::new();
+        let _ = BufReader::new(stderr).read_to_string(&mut s);
+        s
+    })
+}
+
+fn wait_with_deadline(child: &mut Child, deadline: Instant, what: &str) -> std::process::ExitStatus {
+    loop {
+        if let Some(status) = child.try_wait().expect("try_wait") {
+            return status;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "{what}: still running at the deadline — the socket runtime hung"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+/// Launch a 4-process localhost ring for `wl`, assert every process
+/// exits cleanly, and return the coordinator's stdout.
+fn run_cluster(wl: &NodeWorkload) -> String {
+    let n = 4;
+    let peers = free_addrs(n);
+    let mut cluster = Cluster {
+        children: (0..n).map(|rank| spawn_node(&peers, rank, wl, 60)).collect(),
+    };
+    let outputs: Vec<std::thread::JoinHandle<String>> = cluster
+        .children
+        .iter_mut()
+        .map(capture_stdout)
+        .collect();
+    let errs: Vec<std::thread::JoinHandle<String>> = cluster
+        .children
+        .iter_mut()
+        .map(capture_stderr)
+        .collect();
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let statuses: Vec<_> = cluster
+        .children
+        .iter_mut()
+        .enumerate()
+        .map(|(rank, c)| wait_with_deadline(c, deadline, &format!("rank {rank}")))
+        .collect();
+    let outputs: Vec<String> = outputs.into_iter().map(|h| h.join().expect("reader")).collect();
+    let errs: Vec<String> = errs.into_iter().map(|h| h.join().expect("reader")).collect();
+    for (rank, status) in statuses.iter().enumerate() {
+        assert!(
+            status.success(),
+            "rank {rank} failed ({status}): stderr:\n{}",
+            errs[rank]
+        );
+    }
+    outputs.into_iter().next().expect("coordinator stdout")
+}
+
+#[test]
+fn four_process_ring_matches_sequential_digest_shared_path() {
+    // CLT-k with a dense warmup: covers the dense all-reduce, the leader
+    // index broadcast, and the shared-index sparse ring reduce.
+    let wl = NodeWorkload {
+        steps: 40,
+        warmup: 5,
+        ..NodeWorkload::default()
+    };
+    let stdout = run_cluster(&wl);
+    let got = parse_digest(&stdout).expect("coordinator digest");
+    let want = sequential_digest(&wl, 4).expect("sequential reference");
+    compare_digests(&got, &want, 1e-5, 1e-6)
+        .unwrap_or_else(|e| panic!("multi-process vs sequential: {e:#}\n---\n{stdout}"));
+}
+
+#[test]
+fn four_process_ring_matches_sequential_digest_gather_path() {
+    // Local top-k: per-worker selections, star gather at the
+    // coordinator, gradient build-up accounting.
+    let wl = NodeWorkload {
+        scheme: "local-topk".into(),
+        steps: 30,
+        ..NodeWorkload::default()
+    };
+    let stdout = run_cluster(&wl);
+    let got = parse_digest(&stdout).expect("coordinator digest");
+    let want = sequential_digest(&wl, 4).expect("sequential reference");
+    compare_digests(&got, &want, 1e-5, 1e-6)
+        .unwrap_or_else(|e| panic!("multi-process vs sequential: {e:#}\n---\n{stdout}"));
+}
+
+#[test]
+fn four_process_ring_matches_sequential_digest_dense() {
+    let wl = NodeWorkload {
+        scheme: "none".into(),
+        steps: 25,
+        ..NodeWorkload::default()
+    };
+    let stdout = run_cluster(&wl);
+    let got = parse_digest(&stdout).expect("coordinator digest");
+    let want = sequential_digest(&wl, 4).expect("sequential reference");
+    compare_digests(&got, &want, 1e-5, 1e-6)
+        .unwrap_or_else(|e| panic!("multi-process vs sequential: {e:#}\n---\n{stdout}"));
+}
+
+#[test]
+fn killed_worker_fails_the_coordinator_cleanly_without_hanging() {
+    // A run long enough (step delay × steps ≈ 7 min) that it cannot
+    // finish before we kill a worker; short socket timeouts so the
+    // bounded-failure claim is actually exercised.
+    let wl = NodeWorkload {
+        steps: 200_000,
+        step_delay_ms: 2,
+        ..NodeWorkload::default()
+    };
+    let n = 4;
+    let peers = free_addrs(n);
+    let mut cluster = Cluster {
+        children: (0..n).map(|rank| spawn_node(&peers, rank, &wl, 15)).collect(),
+    };
+    // Stream the coordinator's stdout line by line so we can kill a
+    // worker only once the run is demonstrably mid-flight.
+    let stdout = cluster.children[0].stdout.take().expect("piped stdout");
+    let (line_tx, line_rx) = mpsc::channel::<String>();
+    let reader = std::thread::spawn(move || {
+        for line in BufReader::new(stdout).lines() {
+            match line {
+                Ok(l) => {
+                    if line_tx.send(l).is_err() {
+                        break;
+                    }
+                }
+                Err(_) => break,
+            }
+        }
+    });
+    let stderr_handle = capture_stderr(&mut cluster.children[0]);
+
+    let start = Instant::now();
+    let mut steps_seen = 0;
+    while steps_seen < 3 {
+        match line_rx.recv_timeout(Duration::from_secs(30)) {
+            Ok(line) => {
+                if line.starts_with("step ") {
+                    steps_seen += 1;
+                }
+            }
+            Err(_) => panic!(
+                "coordinator produced no step lines within 30s of {:?}",
+                start.elapsed()
+            ),
+        }
+    }
+
+    // Kill worker rank 2 mid-run. Its sockets close; the failure must
+    // propagate around the ring to the coordinator as a clean error.
+    cluster.children[2].kill().expect("kill worker 2");
+    let _ = cluster.children[2].wait();
+
+    let deadline = Instant::now() + Duration::from_secs(45);
+    let status = wait_with_deadline(&mut cluster.children[0], deadline, "coordinator after kill");
+    assert!(
+        !status.success(),
+        "coordinator must fail when a worker dies mid-run"
+    );
+    let stderr = stderr_handle.join().expect("stderr reader");
+    assert!(
+        stderr.contains("error:"),
+        "coordinator must surface a clean error, got stderr:\n{stderr}"
+    );
+    drop(reader); // detached: the pipe closes with the child
+}
