@@ -118,6 +118,11 @@ SUBCOMMANDS:
                         pipelined: persistent pool, overlaps compute/comm;
                         socket: that pool over loopback TCP — needs
                         --peers loopback)
+                     --bucket-bytes N  bucketed gradient exchange: cap for
+                       the layer-aligned buckets scheduled per step, so
+                       each bucket's collective overlaps the next bucket's
+                       selection compute (0 = monolithic; implies
+                       per-layer budgets)
                      --config file.toml (flags override file)
   node             one node of a multi-process socket ring (N processes,
                    localhost or N hosts); rank 0 emits the parity digest

@@ -1,0 +1,380 @@
+//! Layer-aligned gradient buckets: the partition the bucketed exchange
+//! schedules over.
+//!
+//! DGC (Lin et al., 2018) and the systems study of Agarwal et al. (2021)
+//! both observe that sparsified compression only pays off in wall-clock
+//! when the gradient exchange is **bucketed** — groups of layers reduced
+//! as soon as backprop produces them, overlapping communication with the
+//! rest of the backward pass. A [`BucketPlan`] carves the flat gradient
+//! vector into contiguous, **layer-aligned** buckets by greedy
+//! size-capped grouping over a [`LayerPartition`] (`--bucket-bytes`):
+//! consecutive layers are packed into a bucket until adding the next
+//! layer would exceed the byte cap; a single layer larger than the cap
+//! gets a bucket of its own.
+//!
+//! Layer alignment is what makes bucketing **semantics-free**: the §4
+//! per-layer rate rule (`select_layered`) already applies the compressor
+//! independently per layer, so selecting per bucket — each bucket running
+//! `select_layered` over its own layer span — produces exactly the same
+//! index sets as the monolithic pass. The determinism contract
+//! (`rust/tests/backend_parity.rs`) holds bucketed runs to that:
+//! selections and byte accounting exact per bucket, gather reductions
+//! bit-identical, ring f32 values within the usual reduction-order
+//! tolerance.
+//!
+//! Invariants (checked by [`BucketPlan::check`] /
+//! [`BucketPlan::check_aligned`], property-tested below): buckets tile
+//! the gradient exactly — no gap, no overlap, every layer wholly inside
+//! exactly one bucket.
+
+use crate::compress::rate::LayerSlice;
+use crate::compress::LayerPartition;
+
+/// One contiguous bucket of the flat gradient vector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Bucket {
+    /// Position in the plan (== the wire-level bucket tag).
+    pub id: usize,
+    /// First coordinate of the bucket in the flat vector.
+    pub offset: usize,
+    /// Number of coordinates.
+    pub len: usize,
+    /// Half-open range of layer indices (into the source
+    /// `LayerPartition`) this bucket covers.
+    pub layers: (usize, usize),
+}
+
+impl Bucket {
+    /// The bucket's span in the flat vector.
+    pub fn range(&self) -> std::ops::Range<usize> {
+        self.offset..self.offset + self.len
+    }
+}
+
+/// A layer-aligned partition of the gradient vector into buckets.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BucketPlan {
+    dim: usize,
+    buckets: Vec<Bucket>,
+}
+
+impl BucketPlan {
+    /// Trivial plan: the whole vector in one bucket (the monolithic
+    /// exchange — `step_bucketed` falls back to `step`).
+    pub fn single(dim: usize) -> BucketPlan {
+        Self::from_partition(&LayerPartition::single(dim), 0)
+    }
+
+    /// Greedy size-capped grouping: walk the layers in order, close the
+    /// current bucket whenever adding the next layer would push it past
+    /// `bucket_bytes` (4 bytes per f32 coordinate). `bucket_bytes == 0`
+    /// means unbounded — one bucket over everything.
+    pub fn from_partition(partition: &LayerPartition, bucket_bytes: usize) -> BucketPlan {
+        assert!(
+            !partition.layers.is_empty(),
+            "bucket plan needs at least one layer"
+        );
+        let cap_elems = if bucket_bytes == 0 {
+            usize::MAX
+        } else {
+            (bucket_bytes / 4).max(1)
+        };
+        let mut buckets: Vec<Bucket> = Vec::new();
+        let mut start_layer = 0usize;
+        let mut offset = 0usize;
+        let mut len = 0usize;
+        for (i, l) in partition.layers.iter().enumerate() {
+            if len > 0 && len + l.len > cap_elems {
+                buckets.push(Bucket {
+                    id: buckets.len(),
+                    offset,
+                    len,
+                    layers: (start_layer, i),
+                });
+                start_layer = i;
+                offset += len;
+                len = 0;
+            }
+            len += l.len;
+        }
+        buckets.push(Bucket {
+            id: buckets.len(),
+            offset,
+            len,
+            layers: (start_layer, partition.layers.len()),
+        });
+        let plan = BucketPlan {
+            dim: partition.total_len(),
+            buckets,
+        };
+        plan.check().expect("greedy grouping tiles by construction");
+        plan
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn num_buckets(&self) -> usize {
+        self.buckets.len()
+    }
+
+    /// True for the trivial one-bucket plan (monolithic exchange).
+    pub fn is_single(&self) -> bool {
+        self.buckets.len() == 1
+    }
+
+    pub fn buckets(&self) -> &[Bucket] {
+        &self.buckets
+    }
+
+    pub fn bucket(&self, b: usize) -> &Bucket {
+        &self.buckets[b]
+    }
+
+    /// Structural invariant: buckets tile `[0, dim)` exactly — ids
+    /// sequential, offsets consecutive, every bucket non-empty, no gap,
+    /// no overlap — and layer ranges are consecutive.
+    pub fn check(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.buckets.is_empty(), "bucket plan has no buckets");
+        let mut expect_offset = 0usize;
+        let mut expect_layer = 0usize;
+        for (i, b) in self.buckets.iter().enumerate() {
+            anyhow::ensure!(b.id == i, "bucket {i} carries id {}", b.id);
+            anyhow::ensure!(
+                b.offset == expect_offset,
+                "bucket {i} offset {} != running total {expect_offset} (gap or overlap)",
+                b.offset
+            );
+            anyhow::ensure!(b.len > 0, "bucket {i} is empty");
+            let (lo, hi) = b.layers;
+            anyhow::ensure!(
+                lo == expect_layer && hi > lo,
+                "bucket {i} layer range [{lo}, {hi}) not consecutive after {expect_layer}"
+            );
+            expect_offset += b.len;
+            expect_layer = hi;
+        }
+        anyhow::ensure!(
+            expect_offset == self.dim,
+            "buckets cover {expect_offset} of {} coordinates",
+            self.dim
+        );
+        Ok(())
+    }
+
+    /// Alignment invariant against the source partition: every bucket's
+    /// span is exactly the concatenation of its layer range — i.e. every
+    /// layer lies wholly inside exactly one bucket.
+    pub fn check_aligned(&self, partition: &LayerPartition) -> anyhow::Result<()> {
+        self.check()?;
+        anyhow::ensure!(
+            self.dim == partition.total_len(),
+            "plan dim {} != partition dim {}",
+            self.dim,
+            partition.total_len()
+        );
+        let n_layers = partition.layers.len();
+        for b in &self.buckets {
+            let (lo, hi) = b.layers;
+            anyhow::ensure!(
+                hi <= n_layers,
+                "bucket {} references layer {hi} of a {n_layers}-layer partition",
+                b.id
+            );
+            let span: usize = partition.layers[lo..hi].iter().map(|l| l.len).sum();
+            anyhow::ensure!(
+                partition.layers[lo].offset == b.offset && span == b.len,
+                "bucket {} span [{}, {}) misaligned with layers [{lo}, {hi})",
+                b.id,
+                b.offset,
+                b.offset + b.len
+            );
+        }
+        anyhow::ensure!(
+            self.buckets.last().map(|b| b.layers.1) == Some(n_layers),
+            "plan does not cover every layer"
+        );
+        Ok(())
+    }
+
+    /// Bucket `b`'s slice of a layered selection config: its layers with
+    /// offsets rebased to the bucket start, plus the matching per-layer
+    /// budgets. Running `select_layered` over this sub-config yields
+    /// exactly the monolithic pass's selections for these layers (the
+    /// compressors are pure functions of `(step, views, k)`).
+    pub fn bucket_config(
+        &self,
+        b: usize,
+        partition: &LayerPartition,
+        ks: &[usize],
+    ) -> (LayerPartition, Vec<usize>) {
+        assert_eq!(
+            ks.len(),
+            partition.layers.len(),
+            "one budget per layer of the source partition"
+        );
+        let bucket = &self.buckets[b];
+        let (lo, hi) = bucket.layers;
+        assert!(
+            hi <= partition.layers.len(),
+            "bucket plan built from a different partition"
+        );
+        let layers: Vec<LayerSlice> = partition.layers[lo..hi]
+            .iter()
+            .map(|l| LayerSlice {
+                name: l.name.clone(),
+                offset: l.offset - bucket.offset,
+                len: l.len,
+                flops_per_sample: l.flops_per_sample,
+                compress: l.compress,
+            })
+            .collect();
+        (LayerPartition::from_layers(layers), ks[lo..hi].to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::check;
+
+    fn layer(name: &str, offset: usize, len: usize) -> LayerSlice {
+        LayerSlice {
+            name: name.into(),
+            offset,
+            len,
+            flops_per_sample: 0.0,
+            compress: true,
+        }
+    }
+
+    fn partition_of(lens: &[usize]) -> LayerPartition {
+        let mut layers = Vec::new();
+        let mut off = 0;
+        for (i, &len) in lens.iter().enumerate() {
+            layers.push(layer(&format!("l{i}"), off, len));
+            off += len;
+        }
+        LayerPartition::from_layers(layers)
+    }
+
+    #[test]
+    fn single_plan_is_one_bucket_over_everything() {
+        let p = BucketPlan::single(100);
+        assert!(p.is_single());
+        assert_eq!(p.num_buckets(), 1);
+        assert_eq!(p.dim(), 100);
+        assert_eq!(p.bucket(0).range(), 0..100);
+        p.check().unwrap();
+    }
+
+    #[test]
+    fn greedy_grouping_respects_the_byte_cap() {
+        // layers of 10 elements = 40 bytes each; cap 100 bytes = 25 elems
+        // → two layers per bucket
+        let p = partition_of(&[10, 10, 10, 10, 10]);
+        let plan = BucketPlan::from_partition(&p, 100);
+        assert_eq!(plan.num_buckets(), 3);
+        assert_eq!(plan.bucket(0).range(), 0..20);
+        assert_eq!(plan.bucket(1).range(), 20..40);
+        assert_eq!(plan.bucket(2).range(), 40..50);
+        plan.check_aligned(&p).unwrap();
+    }
+
+    #[test]
+    fn oversized_layer_gets_its_own_bucket_never_split() {
+        let p = partition_of(&[4, 1000, 4]);
+        let plan = BucketPlan::from_partition(&p, 64);
+        // layer boundaries are never crossed: the big layer is one bucket
+        assert_eq!(plan.num_buckets(), 3);
+        assert_eq!(plan.bucket(1).len, 1000);
+        plan.check_aligned(&p).unwrap();
+    }
+
+    #[test]
+    fn zero_cap_means_one_bucket() {
+        let p = partition_of(&[7, 9, 11]);
+        let plan = BucketPlan::from_partition(&p, 0);
+        assert!(plan.is_single());
+        assert_eq!(plan.bucket(0).layers, (0, 3));
+        plan.check_aligned(&p).unwrap();
+    }
+
+    #[test]
+    fn bucket_config_rebases_offsets_and_slices_budgets() {
+        let p = partition_of(&[8, 8, 16]);
+        let ks = vec![2usize, 3, 4];
+        let plan = BucketPlan::from_partition(&p, 64); // 16 elems per bucket
+        assert_eq!(plan.num_buckets(), 2);
+        let (sub, sub_ks) = plan.bucket_config(1, &p, &ks);
+        assert_eq!(sub.layers.len(), 1);
+        assert_eq!(sub.layers[0].offset, 0);
+        assert_eq!(sub.layers[0].len, 16);
+        assert_eq!(sub_ks, vec![4]);
+        let (sub0, sub0_ks) = plan.bucket_config(0, &p, &ks);
+        assert_eq!(sub0.layers.len(), 2);
+        assert_eq!(sub0.total_len(), 16);
+        assert_eq!(sub0_ks, vec![2, 3]);
+    }
+
+    #[test]
+    fn check_rejects_gaps_overlaps_and_misalignment() {
+        let mut plan = BucketPlan::from_partition(&partition_of(&[10, 10]), 40);
+        assert_eq!(plan.num_buckets(), 2);
+        plan.buckets[1].offset = 11; // gap
+        assert!(plan.check().is_err());
+        plan.buckets[1].offset = 10;
+        plan.check().unwrap();
+        // aligned against the wrong partition
+        let other = partition_of(&[5, 15]);
+        assert!(plan.check_aligned(&other).is_err());
+    }
+
+    #[test]
+    fn bucket_partitioning_tiles_the_gradient_exactly() {
+        // The satellite property: for ANY layer partition and ANY byte
+        // cap, buckets tile the gradient with no gap/overlap, stay
+        // layer-aligned, and every layer lands wholly in exactly one
+        // bucket.
+        check("bucket plan tiles exactly", 120, |g| {
+            let n_layers = g.usize_in(1..=12);
+            let lens: Vec<usize> = (0..n_layers).map(|_| g.usize_in(1..=64)).collect();
+            let p = partition_of(&lens);
+            let bucket_bytes = g.usize_in(0..=512);
+            let plan = BucketPlan::from_partition(&p, bucket_bytes);
+            plan.check().expect("structural tiling");
+            plan.check_aligned(&p).expect("layer alignment");
+            // every coordinate covered exactly once
+            let mut covered = vec![0u8; p.total_len()];
+            for b in plan.buckets() {
+                for c in covered[b.range()].iter_mut() {
+                    *c += 1;
+                }
+            }
+            assert!(covered.iter().all(|&c| c == 1), "gap or overlap");
+            // every layer inside exactly one bucket
+            for l in &p.layers {
+                let holders = plan
+                    .buckets()
+                    .iter()
+                    .filter(|b| b.offset <= l.offset && l.offset + l.len <= b.offset + b.len)
+                    .count();
+                assert_eq!(holders, 1, "layer '{}' split across buckets", l.name);
+            }
+            // the byte cap is respected whenever a bucket has > 1 layer
+            if bucket_bytes > 0 {
+                for b in plan.buckets() {
+                    let (lo, hi) = b.layers;
+                    if hi - lo > 1 {
+                        assert!(
+                            b.len * 4 <= bucket_bytes.max(4),
+                            "multi-layer bucket {} exceeds the cap",
+                            b.id
+                        );
+                    }
+                }
+            }
+        });
+    }
+}

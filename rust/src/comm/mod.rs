@@ -16,12 +16,14 @@
 //!   - `sparse_gather_avg` — local top-k: per-worker sets must gather,
 //!     and the reduced union grows O(n) (gradient build-up).
 
+pub mod bucket;
 pub mod cost;
 pub mod fabric;
 pub mod parallel;
 pub mod socket;
 pub mod wire;
 
+pub use bucket::{Bucket, BucketPlan};
 pub use cost::{CommCost, CommStats};
 pub use fabric::{Fabric, FabricConfig, FaultSpec, GatherStats, Topology};
 pub use parallel::Backend;

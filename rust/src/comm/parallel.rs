@@ -308,24 +308,33 @@ impl StarNode {
 // ----------------------------------------------------------------------
 
 /// One collective's payload, submitted per worker to its comm lane.
-/// Every worker of a step must carry the same job kind.
+/// Every worker of a step must carry the same job kind and bucket tag.
+/// Monolithic collectives use bucket 0; the bucketed exchange submits
+/// one tagged job set per bucket and the lanes multiplex them — FIFO per
+/// lane, so per-bucket collectives complete in submission order, and on
+/// the socket transport every wire frame carries the tag (verified on
+/// receive) so interleaved buckets can never mix.
 pub enum CommJob {
     /// In-place ring all-reduce **average** of this worker's buffer.
-    RingAvg(Vec<f32>),
+    RingAvg { bucket: u32, buf: Vec<f32> },
     /// Star-gather this worker's sparse contribution; the root reduces
     /// in worker order (the exact `Fabric::sparse_gather_avg` arithmetic).
-    Gather(SparseGrad),
+    Gather { bucket: u32, sparse: SparseGrad },
 }
 
 /// Completion of one staged collective, delivered by the root lane in
-/// submission order.
+/// submission order, echoing the submission's bucket tag.
 #[derive(Debug)]
 pub enum CollectiveResult {
     /// Ring all-reduce: the fully reduced (averaged) buffer.
-    Reduced(Vec<f32>),
+    Reduced { bucket: u32, vals: Vec<f32> },
     /// Star gather: root-reduced dense average + the wire-shape summary
     /// for the analytic cost model.
-    Gathered(Vec<f32>, GatherStats),
+    Gathered {
+        bucket: u32,
+        vals: Vec<f32>,
+        stats: GatherStats,
+    },
     /// The collective failed on a lane (socket transport only: a dead or
     /// mis-framed peer). The channel mesh cannot produce this.
     Failed(String),
@@ -351,13 +360,18 @@ enum LaneRing {
 }
 
 impl LaneRing {
-    fn allreduce_avg(&mut self, buf: &mut [f32]) -> anyhow::Result<()> {
+    fn allreduce_avg(&mut self, bucket: u32, buf: &mut [f32]) -> anyhow::Result<()> {
         match self {
+            // The channel mesh needs no tags: each edge is a dedicated
+            // FIFO channel, so in-flight buckets cannot interleave out
+            // of order by construction.
             LaneRing::Channel(r) => {
                 r.allreduce_avg(buf);
                 Ok(())
             }
-            LaneRing::Socket(r) => r.allreduce_avg(buf),
+            // The socket mesh stamps (and verifies) the tag on every
+            // frame — see `comm::wire`.
+            LaneRing::Socket(r) => r.allreduce_avg_bucket(bucket, buf),
         }
     }
 }
@@ -369,10 +383,10 @@ enum LaneStar {
 }
 
 impl LaneStar {
-    fn gather(&mut self, sg: SparseGrad) -> anyhow::Result<Option<Vec<SparseGrad>>> {
+    fn gather(&mut self, bucket: u32, sg: SparseGrad) -> anyhow::Result<Option<Vec<SparseGrad>>> {
         match self {
             LaneStar::Channel(s) => Ok(s.gather(sg)),
-            LaneStar::Socket(s) => s.gather(sg),
+            LaneStar::Socket(s) => s.gather_bucket(bucket, sg),
         }
     }
 }
@@ -492,17 +506,21 @@ fn comm_lane_loop(
 ) {
     while let Ok(job) = rx.recv() {
         let outcome: anyhow::Result<Option<CollectiveResult>> = match job {
-            CommJob::RingAvg(mut buf) => ring_node
-                .allreduce_avg(&mut buf)
-                .map(|()| Some(CollectiveResult::Reduced(buf))),
-            CommJob::Gather(sg) => {
-                let dim = sg.dim;
-                star_node.gather(sg).map(|gathered| {
+            CommJob::RingAvg { bucket, mut buf } => ring_node
+                .allreduce_avg(bucket, &mut buf)
+                .map(|()| Some(CollectiveResult::Reduced { bucket, vals: buf })),
+            CommJob::Gather { bucket, sparse } => {
+                let dim = sparse.dim;
+                star_node.gather(bucket, sparse).map(|gathered| {
                     gathered.map(|all| {
                         // One shared definition of the gather arithmetic
                         // (worker-order root reduction) for every backend.
                         let (acc, gs) = crate::comm::fabric::reduce_gathered(&all, dim);
-                        CollectiveResult::Gathered(acc, gs)
+                        CollectiveResult::Gathered {
+                            bucket,
+                            vals: acc,
+                            stats: gs,
+                        }
                     })
                 })
             }
@@ -723,11 +741,17 @@ mod tests {
             .expect("ring root");
             // staged lanes
             let lanes = CommLanes::new(n);
-            lanes.submit(inputs.iter().map(|v| CommJob::RingAvg(v.clone())).collect());
+            lanes.submit(
+                inputs
+                    .iter()
+                    .map(|v| CommJob::RingAvg { bucket: 0, buf: v.clone() })
+                    .collect(),
+            );
             match lanes.wait() {
-                CollectiveResult::Reduced(got) => {
+                CollectiveResult::Reduced { bucket, vals } => {
                     // same ring, same chunk schedule → bit-identical
-                    assert_eq!(got, expect, "n={n}");
+                    assert_eq!(bucket, 0);
+                    assert_eq!(vals, expect, "n={n}");
                 }
                 other => panic!("expected ring result, got {other:?}"),
             }
@@ -740,18 +764,22 @@ mod tests {
         // channels carry both steps' chunks concurrently, and results
         // must come back in submission order with correct values.
         let n = 4;
-        let step = |base: f32| -> Vec<CommJob> {
+        let step = |bucket: u32, base: f32| -> Vec<CommJob> {
             (0..n)
-                .map(|w| CommJob::RingAvg(vec![base + w as f32; 16]))
+                .map(|w| CommJob::RingAvg {
+                    bucket,
+                    buf: vec![base + w as f32; 16],
+                })
                 .collect()
         };
         let lanes = CommLanes::new(n);
-        lanes.submit(step(1.0)); // avg of 1,2,3,4 = 2.5
-        lanes.submit(step(10.0)); // avg of 10,11,12,13 = 11.5
-        for expect in [2.5f32, 11.5] {
+        lanes.submit(step(3, 1.0)); // avg of 1,2,3,4 = 2.5
+        lanes.submit(step(4, 10.0)); // avg of 10,11,12,13 = 11.5
+        for (want_bucket, expect) in [(3u32, 2.5f32), (4, 11.5)] {
             match lanes.wait() {
-                CollectiveResult::Reduced(v) => {
-                    assert!(v.iter().all(|&x| (x - expect).abs() < 1e-6), "{v:?}");
+                CollectiveResult::Reduced { bucket, vals } => {
+                    assert_eq!(bucket, want_bucket, "results echo submission tags in order");
+                    assert!(vals.iter().all(|&x| (x - expect).abs() < 1e-6), "{vals:?}");
                 }
                 other => panic!("expected ring result, got {other:?}"),
             }
@@ -773,9 +801,17 @@ mod tests {
             })
             .collect();
         let lanes = CommLanes::new(n);
-        lanes.submit(sparses.iter().map(|s| CommJob::Gather(s.clone())).collect());
+        lanes.submit(
+            sparses
+                .iter()
+                .map(|s| CommJob::Gather { bucket: 0, sparse: s.clone() })
+                .collect(),
+        );
         let (avg, gs) = match lanes.wait() {
-            CollectiveResult::Gathered(v, gs) => (v, gs),
+            CollectiveResult::Gathered { bucket, vals, stats } => {
+                assert_eq!(bucket, 0);
+                (vals, stats)
+            }
             other => panic!("expected gather result, got {other:?}"),
         };
         let mut fabric = Fabric::new(FabricConfig {
@@ -814,20 +850,35 @@ mod tests {
             let sock = CommLanes::with_transport(n, LaneTransport::Socket)
                 .expect("loopback socket mesh");
             for lanes in [&chan, &sock] {
-                lanes.submit(inputs.iter().map(|v| CommJob::RingAvg(v.clone())).collect());
-                lanes.submit(sparses.iter().map(|s| CommJob::Gather(s.clone())).collect());
+                lanes.submit(
+                    inputs
+                        .iter()
+                        .map(|v| CommJob::RingAvg { bucket: 2, buf: v.clone() })
+                        .collect(),
+                );
+                lanes.submit(
+                    sparses
+                        .iter()
+                        .map(|s| CommJob::Gather { bucket: 5, sparse: s.clone() })
+                        .collect(),
+                );
             }
             match (chan.wait(), sock.wait()) {
-                (CollectiveResult::Reduced(a), CollectiveResult::Reduced(b)) => {
+                (
+                    CollectiveResult::Reduced { bucket: ba, vals: a },
+                    CollectiveResult::Reduced { bucket: bb, vals: b },
+                ) => {
+                    assert_eq!((ba, bb), (2, 2), "ring tags n={n}");
                     assert_eq!(a, b, "ring n={n}");
                 }
                 other => panic!("expected two ring results, got {other:?}"),
             }
             match (chan.wait(), sock.wait()) {
                 (
-                    CollectiveResult::Gathered(a, ga),
-                    CollectiveResult::Gathered(b, gb),
+                    CollectiveResult::Gathered { bucket: ba, vals: a, stats: ga },
+                    CollectiveResult::Gathered { bucket: bb, vals: b, stats: gb },
                 ) => {
+                    assert_eq!((ba, bb), (5, 5), "gather tags n={n}");
                     assert_eq!(a, b, "gather n={n}");
                     assert_eq!(ga, gb, "gather stats n={n}");
                 }

@@ -210,6 +210,7 @@ impl SocketRingNode {
 
     fn allreduce_with(
         &mut self,
+        bucket: u32,
         buf: &mut [f32],
         finish: impl Fn(&mut [f32]),
     ) -> anyhow::Result<()> {
@@ -217,11 +218,30 @@ impl SocketRingNode {
         let tx = &self.tx_right;
         let rx = &mut self.rx_left;
         let mut send = |chunk: &[f32]| -> anyhow::Result<()> {
-            ring_send(tx, id, n, WireMsg::DenseChunk(chunk.to_vec()))
+            ring_send(
+                tx,
+                id,
+                n,
+                WireMsg::DenseChunk {
+                    bucket,
+                    vals: chunk.to_vec(),
+                },
+            )
         };
         let mut recv = || -> anyhow::Result<Vec<f32>> {
             match ring_recv(rx, id, n)? {
-                WireMsg::DenseChunk(v) => Ok(v),
+                WireMsg::DenseChunk { bucket: got, vals } => {
+                    // Several per-bucket collectives can be in flight on
+                    // one stream (the bucketed exchange); a tag mismatch
+                    // means the peer is executing a different collective
+                    // — mis-framed beyond recovery, fail at frame one.
+                    anyhow::ensure!(
+                        got == bucket,
+                        "ring node {id}/{n}: bucket tag mismatch: executing bucket \
+                         {bucket} but received a chunk for bucket {got} (peer out of sync)"
+                    );
+                    Ok(vals)
+                }
                 other => anyhow::bail!(
                     "ring node {id}/{n}: expected a dense chunk, got {other:?}"
                 ),
@@ -232,14 +252,23 @@ impl SocketRingNode {
 
     /// In-place sum-all-reduce (same chunk schedule as the channel ring).
     pub fn allreduce_sum(&mut self, buf: &mut [f32]) -> anyhow::Result<()> {
-        self.allreduce_with(buf, |_| {})
+        self.allreduce_with(0, buf, |_| {})
     }
 
     /// In-place average-all-reduce (scale applied once per chunk on its
     /// owning worker — identical arithmetic to the channel ring).
+    /// Monolithic collectives carry bucket tag 0.
     pub fn allreduce_avg(&mut self, buf: &mut [f32]) -> anyhow::Result<()> {
+        self.allreduce_avg_bucket(0, buf)
+    }
+
+    /// Bucket-tagged average-all-reduce: every wire frame carries
+    /// `bucket`, and arriving chunks are verified against it, so the
+    /// per-bucket collectives of a bucketed step interleave safely on
+    /// the stream.
+    pub fn allreduce_avg_bucket(&mut self, bucket: u32, buf: &mut [f32]) -> anyhow::Result<()> {
         let inv = 1.0 / self.n as f32;
-        self.allreduce_with(buf, |chunk| {
+        self.allreduce_with(bucket, buf, |chunk| {
             chunk.iter_mut().for_each(|v| *v *= inv);
         })
     }
@@ -319,8 +348,20 @@ impl SocketStarNode {
     /// Gather every worker's sparse gradient at the root, draining the
     /// per-worker links in worker order (the deterministic reduction
     /// order of the channel star). Returns `Some(contributions)` on the
-    /// root, `None` on the other workers.
+    /// root, `None` on the other workers. Monolithic gathers carry
+    /// bucket tag 0.
     pub fn gather(&mut self, contribution: SparseGrad) -> anyhow::Result<Option<Vec<SparseGrad>>> {
+        self.gather_bucket(0, contribution)
+    }
+
+    /// Bucket-tagged gather (see [`SocketRingNode::allreduce_avg_bucket`]
+    /// for the tagging rationale): the root verifies every arriving
+    /// contribution against the bucket it is gathering.
+    pub fn gather_bucket(
+        &mut self,
+        bucket: u32,
+        contribution: SparseGrad,
+    ) -> anyhow::Result<Option<Vec<SparseGrad>>> {
         use anyhow::Context;
         match &mut self.from_workers {
             Some(rxs) => {
@@ -331,7 +372,15 @@ impl SocketStarNode {
                         .recv()
                         .with_context(|| format!("star root: gather from worker {}", i + 1))?;
                     match msg {
-                        WireMsg::Sparse(sg) => all.push(sg),
+                        WireMsg::Sparse { bucket: got, grad } => {
+                            anyhow::ensure!(
+                                got == bucket,
+                                "star root: bucket tag mismatch from worker {}: gathering \
+                                 bucket {bucket} but received bucket {got} (peer out of sync)",
+                                i + 1
+                            );
+                            all.push(grad);
+                        }
                         other => anyhow::bail!(
                             "star root: expected a sparse contribution from worker {}, got {other:?}",
                             i + 1
@@ -344,7 +393,10 @@ impl SocketStarNode {
                 self.to_root
                     .as_ref()
                     .expect("non-root star node has a root link")
-                    .send(WireMsg::Sparse(contribution))
+                    .send(WireMsg::Sparse {
+                        bucket,
+                        grad: contribution,
+                    })
                     .with_context(|| format!("star worker {}: send to root", self.id))?;
                 Ok(None)
             }
@@ -710,6 +762,75 @@ mod tests {
                 assert_eq!(g, idx_ref, "leader={leader} worker={w}");
             }
         }
+    }
+
+    #[test]
+    fn back_to_back_bucket_collectives_stay_ordered_and_exact() {
+        // Two per-bucket collectives launched back-to-back on the same
+        // ring (the bucketed exchange's wire pattern): both must reduce
+        // exactly, in order, with their tags intact.
+        let n = 4;
+        let got = on_ring(n, |node, w| {
+            let mut b5 = vec![(w + 1) as f32; 8];
+            let mut b6 = vec![(w + 1) as f32 * 10.0; 8];
+            node.allreduce_avg_bucket(5, &mut b5).expect("bucket 5");
+            node.allreduce_avg_bucket(6, &mut b6).expect("bucket 6");
+            (b5, b6)
+        });
+        for (b5, b6) in &got {
+            assert!(b5.iter().all(|&v| (v - 2.5).abs() < 1e-6), "{b5:?}");
+            assert!(b6.iter().all(|&v| (v - 25.0).abs() < 1e-6), "{b6:?}");
+        }
+    }
+
+    #[test]
+    fn bucket_tag_mismatch_is_detected_not_mixed() {
+        // Node 0 reduces bucket 1 while node 1 reduces bucket 2: the
+        // first cross frame must fail the collective with a tag error
+        // instead of silently reducing one bucket into the other.
+        let mut nodes = local_ring(2, Duration::from_secs(5)).expect("loopback ring");
+        let n1 = nodes.remove(1);
+        let n0 = nodes.remove(0);
+        let errs = std::thread::scope(|s| {
+            let h0 = s.spawn(move || {
+                let mut n0 = n0;
+                n0.allreduce_avg_bucket(1, &mut vec![1.0f32; 8]).unwrap_err()
+            });
+            let h1 = s.spawn(move || {
+                let mut n1 = n1;
+                n1.allreduce_avg_bucket(2, &mut vec![1.0f32; 8]).unwrap_err()
+            });
+            [h0.join().expect("node 0"), h1.join().expect("node 1")]
+        });
+        for e in &errs {
+            let msg = format!("{e:#}");
+            assert!(msg.contains("bucket tag mismatch"), "{msg}");
+        }
+    }
+
+    #[test]
+    fn star_bucket_tag_mismatch_is_detected() {
+        let nodes = local_star(2, Duration::from_secs(5)).expect("loopback star");
+        let mut it = nodes.into_iter();
+        let root = it.next().expect("root");
+        let worker = it.next().expect("worker");
+        let err = std::thread::scope(|s| {
+            s.spawn(move || {
+                let mut w = worker;
+                // worker contributes under bucket 9...
+                w.gather_bucket(9, SparseGrad::new(4, vec![1], vec![1.0]))
+                    .expect("worker send");
+            });
+            let mut r = root;
+            // ...while the root gathers bucket 3
+            s.spawn(move || {
+                r.gather_bucket(3, SparseGrad::new(4, vec![0], vec![1.0]))
+                    .unwrap_err()
+            })
+            .join()
+            .expect("root")
+        });
+        assert!(format!("{err:#}").contains("bucket tag mismatch"), "{err:#}");
     }
 
     #[test]

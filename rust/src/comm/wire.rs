@@ -7,16 +7,23 @@
 //! body = [ u8 tag ][ tag-specific fields, all little-endian ]
 //! ```
 //!
-//! | tag | message      | fields                                            |
-//! |-----|--------------|---------------------------------------------------|
-//! | 1   | `DenseChunk` | u32 count, count × f32                            |
-//! | 2   | `Sparse`     | u32 dim, u32 nnz, nnz × u32 idx, nnz × f32 vals   |
-//! | 3   | `Hello`      | u32 rank, u8 purpose (0 = ring, 1 = star)         |
-//! | 4   | `Indices`    | u32 count, count × u32                            |
+//! | tag | message      | fields                                                        |
+//! |-----|--------------|---------------------------------------------------------------|
+//! | 1   | `DenseChunk` | u32 bucket, u32 count, count × f32                            |
+//! | 2   | `Sparse`     | u32 bucket, u32 dim, u32 nnz, nnz × u32 idx, nnz × f32 vals   |
+//! | 3   | `Hello`      | u32 rank, u8 purpose (0 = ring, 1 = star)                     |
+//! | 4   | `Indices`    | u32 count, count × u32                                        |
 //!
 //! `DenseChunk` carries the ring reduce-scatter/all-gather payloads,
 //! `Sparse` the star-gather contributions, and the control tags the
-//! rendezvous handshake plus the CLT-k leader's index broadcast. There
+//! rendezvous handshake plus the CLT-k leader's index broadcast. Both
+//! payload frames lead with a **bucket id**: the bucketed exchange
+//! (`comm::bucket`) keeps several per-bucket collectives in flight on
+//! one stream, and the tag lets a receiver verify that an arriving chunk
+//! belongs to the collective it is executing — a mismatch is a
+//! mis-framed stream (peer out of sync), detected at the first frame
+//! instead of silently reducing bucket b's values into bucket b+1's.
+//! Monolithic (un-bucketed) collectives use bucket id 0. There
 //! is deliberately no shutdown message: an orderly end of run is a
 //! flushed socket close, observed by the peer as EOF. f32/f64 values
 //! travel as raw IEEE-754 bits, so a value is **bit-identical** after a
@@ -77,10 +84,12 @@ impl Purpose {
 #[derive(Debug, Clone, PartialEq)]
 pub enum WireMsg {
     /// A ring hop's dense f32 payload (one reduce-scatter or all-gather
-    /// chunk, or a broadcast segment).
-    DenseChunk(Vec<f32>),
-    /// A star worker's sparsified contribution.
-    Sparse(SparseGrad),
+    /// chunk, or a broadcast segment), tagged with the bucket it belongs
+    /// to (0 for monolithic collectives).
+    DenseChunk { bucket: u32, vals: Vec<f32> },
+    /// A star worker's sparsified contribution, bucket-tagged like
+    /// [`WireMsg::DenseChunk`].
+    Sparse { bucket: u32, grad: SparseGrad },
     /// Rendezvous handshake: sent once by the connecting side so the
     /// accepting side can classify the stream.
     Hello { rank: u32, purpose: Purpose },
@@ -105,8 +114,8 @@ fn put_f32(out: &mut Vec<u8>, v: f32) {
 fn frame_len(msg: &WireMsg) -> usize {
     4 + 1
         + match msg {
-            WireMsg::DenseChunk(vals) => 4 + 4 * vals.len(),
-            WireMsg::Sparse(sg) => 8 + 8 * sg.indices.len(),
+            WireMsg::DenseChunk { vals, .. } => 8 + 4 * vals.len(),
+            WireMsg::Sparse { grad, .. } => 12 + 8 * grad.indices.len(),
             WireMsg::Hello { .. } => 5,
             WireMsg::Indices(idx) => 4 + 4 * idx.len(),
         }
@@ -119,21 +128,23 @@ pub fn encode(msg: &WireMsg) -> Vec<u8> {
     let mut out = Vec::with_capacity(frame_len(msg));
     out.extend_from_slice(&[0u8; 4]); // header patched below
     match msg {
-        WireMsg::DenseChunk(vals) => {
+        WireMsg::DenseChunk { bucket, vals } => {
             out.push(TAG_DENSE);
+            put_u32(&mut out, *bucket);
             put_u32(&mut out, vals.len() as u32);
             for &v in vals {
                 put_f32(&mut out, v);
             }
         }
-        WireMsg::Sparse(sg) => {
+        WireMsg::Sparse { bucket, grad } => {
             out.push(TAG_SPARSE);
-            put_u32(&mut out, sg.dim as u32);
-            put_u32(&mut out, sg.indices.len() as u32);
-            for &i in &sg.indices {
+            put_u32(&mut out, *bucket);
+            put_u32(&mut out, grad.dim as u32);
+            put_u32(&mut out, grad.indices.len() as u32);
+            for &i in &grad.indices {
                 put_u32(&mut out, i);
             }
-            for &v in &sg.values {
+            for &v in &grad.values {
                 put_f32(&mut out, v);
             }
         }
@@ -235,13 +246,15 @@ pub fn decode_body(body: &[u8]) -> anyhow::Result<WireMsg> {
     let tag = c.u8()?;
     let msg = match tag {
         TAG_DENSE => {
+            let bucket = c.u32()?;
             let count = c.u32()?;
             let count = check_count(&c, count, 4, "dense element")?;
             let vals = c.f32s(count)?;
             c.done()?;
-            WireMsg::DenseChunk(vals)
+            WireMsg::DenseChunk { bucket, vals }
         }
         TAG_SPARSE => {
+            let bucket = c.u32()?;
             let dim = c.u32()? as usize;
             let nnz = c.u32()?;
             let nnz = check_count(&c, nnz, 8, "sparse nnz")?;
@@ -258,7 +271,10 @@ pub fn decode_body(body: &[u8]) -> anyhow::Result<WireMsg> {
                     "wire: sparse index {last} out of range for dim {dim}"
                 );
             }
-            WireMsg::Sparse(SparseGrad::new(dim, indices, values))
+            WireMsg::Sparse {
+                bucket,
+                grad: SparseGrad::new(dim, indices, values),
+            }
         }
         TAG_HELLO => {
             let rank = c.u32()?;
@@ -378,10 +394,19 @@ mod tests {
 
     #[test]
     fn every_variant_roundtrips() {
-        roundtrip(WireMsg::DenseChunk(vec![]));
-        roundtrip(WireMsg::DenseChunk(vec![1.5, -0.0, f32::MIN, f32::MAX]));
-        roundtrip(WireMsg::Sparse(SparseGrad::new(10, vec![0, 3, 9], vec![1.0, -2.0, 0.5])));
-        roundtrip(WireMsg::Sparse(SparseGrad::new(0, vec![], vec![])));
+        roundtrip(WireMsg::DenseChunk { bucket: 0, vals: vec![] });
+        roundtrip(WireMsg::DenseChunk {
+            bucket: 7,
+            vals: vec![1.5, -0.0, f32::MIN, f32::MAX],
+        });
+        roundtrip(WireMsg::Sparse {
+            bucket: 0,
+            grad: SparseGrad::new(10, vec![0, 3, 9], vec![1.0, -2.0, 0.5]),
+        });
+        roundtrip(WireMsg::Sparse {
+            bucket: u32::MAX,
+            grad: SparseGrad::new(0, vec![], vec![]),
+        });
         roundtrip(WireMsg::Hello { rank: 7, purpose: Purpose::Ring });
         roundtrip(WireMsg::Hello { rank: 0, purpose: Purpose::Star });
         roundtrip(WireMsg::Indices(vec![5, 1, 5, 0])); // codec-level: duplicates frame fine
@@ -389,11 +414,23 @@ mod tests {
     }
 
     #[test]
+    fn bucket_tags_survive_the_wire() {
+        for bucket in [0u32, 1, 42, u32::MAX] {
+            let frame = encode(&WireMsg::DenseChunk { bucket, vals: vec![1.0] });
+            match decode_body(&frame[4..]).unwrap() {
+                WireMsg::DenseChunk { bucket: got, .. } => assert_eq!(got, bucket),
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
     fn f32_payloads_are_bit_exact() {
         let vals = vec![f32::NAN, -0.0, 1e-42, f32::INFINITY];
-        let frame = encode(&WireMsg::DenseChunk(vals.clone()));
+        let frame = encode(&WireMsg::DenseChunk { bucket: 3, vals: vals.clone() });
         match decode_body(&frame[4..]).unwrap() {
-            WireMsg::DenseChunk(got) => {
+            WireMsg::DenseChunk { bucket, vals: got } => {
+                assert_eq!(bucket, 3);
                 for (a, b) in vals.iter().zip(&got) {
                     assert_eq!(a.to_bits(), b.to_bits());
                 }
@@ -406,7 +443,7 @@ mod tests {
     fn read_write_through_a_byte_stream() {
         let msgs = vec![
             WireMsg::Indices(vec![1, 2, 3]),
-            WireMsg::DenseChunk(vec![0.25; 7]),
+            WireMsg::DenseChunk { bucket: 1, vals: vec![0.25; 7] },
             WireMsg::Hello { rank: 3, purpose: Purpose::Star },
         ];
         let mut stream = Vec::new();
@@ -440,8 +477,13 @@ mod tests {
     fn mismatched_counts_rejected() {
         // dense count says 4 elements but body carries 1
         let mut body = vec![TAG_DENSE];
+        body.extend_from_slice(&0u32.to_le_bytes()); // bucket
         body.extend_from_slice(&4u32.to_le_bytes());
         body.extend_from_slice(&1.0f32.to_le_bytes());
+        assert!(decode_body(&body).is_err());
+        // a dense frame truncated before the count field
+        let mut body = vec![TAG_DENSE];
+        body.extend_from_slice(&0u32.to_le_bytes()); // bucket only
         assert!(decode_body(&body).is_err());
         // trailing garbage after a complete message
         let mut body = vec![TAG_INDICES];
@@ -454,6 +496,7 @@ mod tests {
     fn malformed_sparse_rejected() {
         // unsorted indices
         let mut body = vec![TAG_SPARSE];
+        body.extend_from_slice(&0u32.to_le_bytes()); // bucket
         body.extend_from_slice(&8u32.to_le_bytes()); // dim
         body.extend_from_slice(&2u32.to_le_bytes()); // nnz
         for i in [3u32, 1] {
@@ -465,6 +508,7 @@ mod tests {
         assert!(decode_body(&body).is_err());
         // index out of range for dim
         let mut body = vec![TAG_SPARSE];
+        body.extend_from_slice(&0u32.to_le_bytes()); // bucket
         body.extend_from_slice(&2u32.to_le_bytes()); // dim
         body.extend_from_slice(&1u32.to_le_bytes()); // nnz
         body.extend_from_slice(&5u32.to_le_bytes());

@@ -57,21 +57,57 @@ impl EfMemory {
         self.m.iter().zip(grad).map(|(m, g)| m + g).collect()
     }
 
+    /// Error-feedback gradient restricted to one contiguous slice of the
+    /// flat vector: `m[offset..offset+grad.len()] + grad`. The math is
+    /// coordinate-wise, so this is bit-identical to the matching slice of
+    /// [`EfMemory::ef_grad`] — the bucketed exchange depends on that.
+    pub fn ef_grad_range(&self, offset: usize, grad: &[f32]) -> Vec<f32> {
+        assert!(
+            offset + grad.len() <= self.m.len(),
+            "ef_grad_range [{offset}, {}) out of bounds for dim {}",
+            offset + grad.len(),
+            self.m.len()
+        );
+        self.m[offset..offset + grad.len()]
+            .iter()
+            .zip(grad)
+            .map(|(m, g)| m + g)
+            .collect()
+    }
+
     /// Apply the low-pass memory update after `indices` were transmitted.
     /// `grad` is this step's computed stochastic gradient.
     pub fn update_after_send(&mut self, grad: &[f32], sent_indices: &[u32]) {
         assert_eq!(grad.len(), self.m.len());
+        self.update_after_send_range(0, grad, sent_indices);
+    }
+
+    /// The low-pass update restricted to one contiguous slice (a bucket):
+    /// `grad` covers `[offset, offset + grad.len())` and `sent_local`
+    /// holds slice-relative indices. Disjoint slices commute, and each
+    /// slice's math is bit-identical to the matching span of the
+    /// full-vector [`EfMemory::update_after_send`] — so a bucketed step
+    /// (one call per bucket, any order) leaves exactly the memory a
+    /// monolithic step would.
+    pub fn update_after_send_range(&mut self, offset: usize, grad: &[f32], sent_local: &[u32]) {
+        assert!(
+            offset + grad.len() <= self.m.len(),
+            "update range [{offset}, {}) out of bounds for dim {}",
+            offset + grad.len(),
+            self.m.len()
+        );
         let beta = self.beta;
+        let m = &mut self.m[offset..offset + grad.len()];
         // Pass 1: unselected update for every coordinate...
-        for (m, &g) in self.m.iter_mut().zip(grad) {
-            *m += beta * g;
+        for (mi, &g) in m.iter_mut().zip(grad) {
+            *mi += beta * g;
         }
         // Pass 2: ...then overwrite the selected ones with (1-β)·m_old.
         // (m_old = m_new − β·g on those coordinates.)
-        for &i in sent_indices {
+        for &i in sent_local {
             let i = i as usize;
-            let m_old = self.m[i] - beta * grad[i];
-            self.m[i] = (1.0 - beta) * m_old;
+            let m_old = m[i] - beta * grad[i];
+            m[i] = (1.0 - beta) * m_old;
         }
     }
 
@@ -194,6 +230,45 @@ mod tests {
         mem.update_after_send(&grad, &[0]);
         // m' = (1-β)·m_old = 0.75·4 = 3.0
         assert!((mem.memory()[0] - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn range_ops_tile_to_the_full_vector_bit_exactly() {
+        // Splitting the vector into arbitrary contiguous slices and
+        // applying the range ops per slice must be bit-identical to the
+        // full-vector ops — the bucketed-exchange determinism contract.
+        check("EF range ops == full-vector ops", 80, |g| {
+            let dim = g.usize_in(1..=128);
+            let beta = g.f32_in(0.05, 1.0);
+            let grad = g.f32_vec_len(dim, 1.0);
+            let prev = g.f32_vec_len(dim, 0.5);
+            let mut full = EfMemory::new(dim, beta);
+            full.m.copy_from_slice(&prev);
+            let mut split = full.clone();
+            // random contiguous slicing
+            let mut cuts: Vec<usize> = (0..g.usize_in(0..=4)).map(|_| g.usize_in(0..=dim)).collect();
+            cuts.push(0);
+            cuts.push(dim);
+            cuts.sort_unstable();
+            cuts.dedup();
+            // one global selection, split per slice
+            let ef = full.ef_grad(&grad);
+            let k = g.usize_in(0..=dim);
+            let idx = crate::util::select::top_k_indices_by_magnitude(&ef, k);
+            full.update_after_send(&grad, &idx);
+            for w in cuts.windows(2) {
+                let (lo, hi) = (w[0], w[1]);
+                let local: Vec<u32> = idx
+                    .iter()
+                    .filter(|&&i| (i as usize) >= lo && (i as usize) < hi)
+                    .map(|&i| i - lo as u32)
+                    .collect();
+                // range EF read matches the full read on this span
+                assert_eq!(split.ef_grad_range(lo, &grad[lo..hi]), ef[lo..hi].to_vec());
+                split.update_after_send_range(lo, &grad[lo..hi], &local);
+            }
+            assert_eq!(full.memory(), split.memory(), "range tiling must be exact");
+        });
     }
 
     #[test]

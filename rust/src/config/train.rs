@@ -86,6 +86,12 @@ pub struct TrainConfig {
     /// `socket` is that pool over a loopback TCP mesh (multi-process
     /// rings launch via `scalecom node`, which needs `--peers`).
     pub backend: String,
+    /// Bucketed gradient exchange: cap (bytes) for the layer-aligned
+    /// buckets `Coordinator::step_bucketed` schedules per step, so each
+    /// bucket's collective overlaps the next bucket's selection compute.
+    /// 0 = monolithic exchange (the pre-bucketing behavior). Implies
+    /// per-layer budgets (buckets are layer-aligned).
+    pub bucket_bytes: usize,
     /// Evaluate every `eval_every` steps (0 = never).
     pub eval_every: usize,
     /// Directory for artifacts (HLO + manifest).
@@ -109,6 +115,7 @@ impl Default for TrainConfig {
             fabric_topology: "ps".into(),
             fabric_bandwidth_gbps: 32.0,
             backend: "sequential".into(),
+            bucket_bytes: 0,
             eval_every: 0,
             artifacts_dir: "artifacts".into(),
         }
@@ -154,6 +161,7 @@ impl TrainConfig {
             fabric_topology: doc.str_or("fabric.topology", &d.fabric_topology).to_string(),
             fabric_bandwidth_gbps: doc.f64_or("fabric.bandwidth_gbps", 32.0),
             backend: doc.str_or("train.backend", &d.backend).to_string(),
+            bucket_bytes: doc.usize_or("train.bucket_bytes", d.bucket_bytes),
             eval_every: doc.usize_or("train.eval_every", 0),
             artifacts_dir: doc.str_or("train.artifacts_dir", &d.artifacts_dir).to_string(),
         };
@@ -171,6 +179,12 @@ impl TrainConfig {
             "beta must be in (0, 1]"
         );
         anyhow::ensure!(self.compress.rate >= 1, "compression rate must be >= 1");
+        anyhow::ensure!(
+            !(self.bucket_bytes > 0 && self.compress.scheme == "none"),
+            "bucket_bytes only applies to compressed schemes (the bucketed \
+             exchange rides on per-layer budgets); the dense baseline's \
+             exchange is monolithic — drop --bucket-bytes or pick a scheme"
+        );
         crate::comm::Backend::parse(&self.backend)?;
         Ok(())
     }
@@ -239,6 +253,27 @@ mod tests {
         assert_eq!(c.backend, "sequential");
         c.backend = "gpu".into();
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn bucket_bytes_from_toml_defaults_to_monolithic() {
+        assert_eq!(TrainConfig::default().bucket_bytes, 0);
+        let doc = TomlDoc::parse("[train]\nbucket_bytes = 262144\n").unwrap();
+        let cfg = TrainConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.bucket_bytes, 262144);
+    }
+
+    #[test]
+    fn bucket_bytes_with_dense_scheme_rejected() {
+        // Silently ignoring --bucket-bytes on the dense baseline would
+        // let the run banner advertise an overlap that never happened.
+        let mut c = TrainConfig::default();
+        c.bucket_bytes = 4096;
+        c.compress.scheme = "none".into();
+        let err = c.validate().unwrap_err();
+        assert!(err.to_string().contains("bucket_bytes"), "{err}");
+        c.compress.scheme = "scalecom".into();
+        c.validate().unwrap();
     }
 
     #[test]

@@ -31,10 +31,11 @@
 //! overlap the paper's scalability story depends on (Remark 3 / §5).
 
 use crate::comm::parallel::LaneTransport;
-use crate::comm::{Backend, CommCost, Fabric};
+use crate::comm::{Backend, BucketPlan, CommCost, Fabric};
 use crate::compress::{
     sparsify, Compressor, EfMemory, LayerPartition, Selection, SparseGrad,
 };
+use crate::runtime::bucketed;
 use crate::runtime::pipelined::WorkerPool;
 use crate::runtime::threaded;
 use std::collections::VecDeque;
@@ -89,6 +90,9 @@ pub struct Coordinator {
     pub k: usize,
     /// ...or a per-layer budget (paper's FLOPs/gradient rule).
     pub layered: Option<(LayerPartition, Vec<usize>)>,
+    /// layer-aligned bucket plan for [`Coordinator::step_bucketed`]
+    /// (None / single bucket = monolithic exchange).
+    bucket_plan: Option<BucketPlan>,
     /// dense warmup steps (paper: 1-5 epochs uncompressed)
     pub warmup_steps: usize,
     /// execution backend (parity-locked in `rust/tests/backend_parity.rs`)
@@ -99,6 +103,11 @@ pub struct Coordinator {
     /// eagerly-computed results buffered by `step_overlapped` on the
     /// non-pipelined backends (same observable stream, no lookahead)
     ready: VecDeque<StepResult>,
+    /// Set when a pooled collective faulted mid-step: the lanes may
+    /// still hold results of other in-flight (bucketed) collectives, so
+    /// consuming from them again would hand a later step stale data.
+    /// Every subsequent step fails fast instead.
+    poisoned: bool,
 }
 
 impl Coordinator {
@@ -122,18 +131,59 @@ impl Coordinator {
             fabric,
             k: k.clamp(1, dim),
             layered: None,
+            bucket_plan: None,
             warmup_steps,
             backend: Backend::Sequential,
             pending: VecDeque::new(),
             ready: VecDeque::new(),
+            poisoned: false,
         }
     }
 
     pub fn with_layered(mut self, partition: LayerPartition, ks: Vec<usize>) -> Self {
         assert_eq!(partition.total_len(), self.dim);
         assert_eq!(partition.layers.len(), ks.len());
+        // An already-installed bucket plan must align with the new
+        // partition (the same check set_bucket_plan runs when layered is
+        // configured first) — configuration order must not weaken the
+        // fail-at-setup guarantee.
+        if let Some(plan) = &self.bucket_plan {
+            plan.check_aligned(&partition)
+                .expect("bucket plan misaligned with the layer partition");
+        }
         self.layered = Some((partition, ks));
         self
+    }
+
+    /// Install a layer-aligned bucket plan for
+    /// [`Coordinator::step_bucketed`]. The plan must tile this
+    /// coordinator's gradient dimension; when a layered config is
+    /// present the plan must align with its partition (checked here, so
+    /// a mismatched `--bucket-bytes`/partition pair fails at setup, not
+    /// mid-run).
+    pub fn with_buckets(mut self, plan: BucketPlan) -> Self {
+        self.set_bucket_plan(Some(plan));
+        self
+    }
+
+    /// Install or clear the bucket plan (see [`Coordinator::with_buckets`]).
+    pub fn set_bucket_plan(&mut self, plan: Option<BucketPlan>) {
+        if let Some(p) = &plan {
+            assert_eq!(
+                p.dim(),
+                self.dim,
+                "bucket plan tiles a different gradient dimension"
+            );
+            if let Some((partition, _)) = &self.layered {
+                p.check_aligned(partition)
+                    .expect("bucket plan misaligned with the layer partition");
+            }
+        }
+        self.bucket_plan = plan;
+    }
+
+    pub fn bucket_plan(&self) -> Option<&BucketPlan> {
+        self.bucket_plan.as_ref()
     }
 
     /// Select the execution backend (defaults to `Sequential`). Panics
@@ -191,6 +241,10 @@ impl Coordinator {
             Backend::Sequential | Backend::Threaded => Workers::Local(memories),
         };
         self.backend = backend;
+        // The switch tore the old lanes down and built fresh ones (or
+        // left lane-free local workers) — any earlier fault poisoning no
+        // longer describes live state.
+        self.poisoned = false;
         Ok(())
     }
 
@@ -285,17 +339,41 @@ impl Coordinator {
     }
 
     /// One coordination step over this iteration's stochastic gradients.
-    pub fn step(&mut self, t: usize, grads: &[Vec<f32>]) -> StepResult {
+    /// A lane fault on the socket transport (dead, wedged, or mis-framed
+    /// peer) surfaces as an `anyhow` error — launcher paths (`train
+    /// --backend socket`) report it cleanly instead of panicking.
+    pub fn try_step(&mut self, t: usize, grads: &[Vec<f32>]) -> anyhow::Result<StepResult> {
         assert!(
             !self.in_flight(),
             "step() with overlapped steps in flight; drain finish_overlapped() first"
         );
+        self.ensure_healthy()?;
         if self.backend.is_pooled() {
             self.submit(t, grads);
-            self.wait_oldest().expect("step was just submitted")
+            let r = self.wait_oldest()?;
+            Ok(r.expect("step was just submitted"))
         } else {
-            self.step_eager(t, grads)
+            Ok(self.step_eager(t, grads))
         }
+    }
+
+    /// Fail fast after a mid-step collective fault: the lanes may still
+    /// carry other in-flight collectives' (bucket-tagged) results, and
+    /// consuming them for a new step would silently corrupt it.
+    fn ensure_healthy(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            !self.poisoned,
+            "coordinator poisoned by an earlier collective fault — lane state \
+             is unrecoverable; rebuild the coordinator (or restart the run)"
+        );
+        Ok(())
+    }
+
+    /// Infallible [`Coordinator::try_step`] for tests/benches, where a
+    /// lane fault on the in-process mesh means the host itself is broken
+    /// and a loud panic is the right outcome.
+    pub fn step(&mut self, t: usize, grads: &[Vec<f32>]) -> StepResult {
+        self.try_step(t, grads).expect("coordination step failed")
     }
 
     /// Double-buffered driving mode: submit step `t`, then return step
@@ -305,33 +383,303 @@ impl Coordinator {
     /// backends execute eagerly and just delay the result by one call,
     /// so every backend produces the identical stream (the backend-matrix
     /// parity lock). Call [`Coordinator::finish_overlapped`] to drain the
-    /// last step.
-    pub fn step_overlapped(&mut self, t: usize, grads: &[Vec<f32>]) -> Option<StepResult> {
+    /// last step. Faults propagate like [`Coordinator::try_step`].
+    pub fn try_step_overlapped(
+        &mut self,
+        t: usize,
+        grads: &[Vec<f32>],
+    ) -> anyhow::Result<Option<StepResult>> {
+        self.ensure_healthy()?;
         if self.backend.is_pooled() {
             self.submit(t, grads);
             if self.pending.len() > 1 {
                 self.wait_oldest()
             } else {
-                None
+                Ok(None)
             }
         } else {
             let r = self.step_eager(t, grads);
             self.ready.push_back(r);
             if self.ready.len() > 1 {
-                self.ready.pop_front()
+                Ok(self.ready.pop_front())
             } else {
-                None
+                Ok(None)
             }
         }
     }
 
+    /// Infallible [`Coordinator::try_step_overlapped`] (tests/benches).
+    pub fn step_overlapped(&mut self, t: usize, grads: &[Vec<f32>]) -> Option<StepResult> {
+        self.try_step_overlapped(t, grads)
+            .expect("overlapped coordination step failed")
+    }
+
     /// Drain every step still in flight (or buffered), in step order.
-    pub fn finish_overlapped(&mut self) -> Vec<StepResult> {
+    /// On a lane fault the remaining in-flight steps are lost (the
+    /// stream is mis-framed beyond recovery) and the error is returned.
+    pub fn try_finish_overlapped(&mut self) -> anyhow::Result<Vec<StepResult>> {
         let mut out: Vec<StepResult> = self.ready.drain(..).collect();
-        while let Some(r) = self.wait_oldest() {
+        while let Some(r) = self.wait_oldest()? {
             out.push(r);
         }
-        out
+        Ok(out)
+    }
+
+    /// Infallible [`Coordinator::try_finish_overlapped`] (tests/benches).
+    pub fn finish_overlapped(&mut self) -> Vec<StepResult> {
+        self.try_finish_overlapped()
+            .expect("overlapped drain failed")
+    }
+
+    /// One coordination step driven **per bucket** (the compute/comm
+    /// overlap the trainer runs on): walk the bucket plan in backward
+    /// order — mirroring backprop, which finishes the last layers'
+    /// gradients first — and on the pooled backends submit bucket b's
+    /// collective to the comm lanes as soon as its EF-gradient/CLT-k
+    /// selection is done, so it is in flight while bucket b−1's
+    /// selection computes; completed buckets are then applied into the
+    /// dense update in the same order as each lands. The in-process
+    /// backends execute the identical per-bucket schedule eagerly, so
+    /// all four backends produce the same observable stream (the
+    /// bucketed axis of `rust/tests/backend_parity.rs`).
+    ///
+    /// Requires a layered config (`with_layered`): buckets are
+    /// layer-aligned, and because every compressor's selection is a pure
+    /// function of `(step, layer views, k)`, per-bucket selection over
+    /// the bucket's layer span reproduces the monolithic layered
+    /// selection exactly. Without a multi-bucket plan — or on the dense
+    /// path (warmup / `Mode::Dense`) — this delegates to
+    /// [`Coordinator::try_step`].
+    ///
+    /// ## Comm accounting vs the monolithic step
+    ///
+    /// Selections, values, and per-worker rates match the monolithic
+    /// step, but the ledger is **per bucket** (one `record_*` entry per
+    /// bucket, aggregated into an `op = "bucketed_exchange"` total), and
+    /// each bucket picks its own exchange kind: a bucket whose layers
+    /// all stayed shared — e.g. a dense-exempt layer alone in its bucket
+    /// under a non-commutative scheme — rides the cheap commutative ring
+    /// reduce, where the monolithic step would have dragged those
+    /// coordinates into the one big gather. That is a deliberate
+    /// improvement bucketing unlocks (locked by
+    /// `mixed_kind_buckets_split_the_exchange_by_bucket`), not drift:
+    /// exact byte parity with the monolithic gather is unattainable
+    /// anyway (its `up` is a max over whole-vector contributions, which
+    /// no per-bucket sum reproduces). Across backends the per-bucket
+    /// ledger is exact, per the parity matrix.
+    pub fn try_step_bucketed(&mut self, t: usize, grads: &[Vec<f32>]) -> anyhow::Result<StepResult> {
+        assert!(
+            !self.in_flight(),
+            "step_bucketed() with overlapped steps in flight; drain finish_overlapped() first"
+        );
+        let multi = self.bucket_plan.as_ref().map_or(false, |p| !p.is_single());
+        let dense_path = matches!(self.mode, Mode::Dense) || t < self.warmup_steps;
+        if !multi || dense_path {
+            return self.try_step(t, grads);
+        }
+        self.ensure_healthy()?;
+        self.validate_grads(grads);
+        anyhow::ensure!(
+            self.layered.is_some(),
+            "bucketed exchange needs per-layer budgets: configure the coordinator \
+             with with_layered (buckets are layer-aligned, so selection must \
+             decompose per layer to stay exact)"
+        );
+        let plan = self.bucket_plan.clone().expect("multi-bucket plan checked above");
+        // A fault below leaves other in-flight buckets' results queued on
+        // the lanes — poison the coordinator so no later step consumes
+        // them as its own.
+        let r = self.run_bucketed(t, grads, plan);
+        if r.is_err() {
+            self.poisoned = true;
+        }
+        r
+    }
+
+    /// The multi-bucket driver behind [`Coordinator::try_step_bucketed`]
+    /// (which owns the delegation, config checks, and fault poisoning).
+    fn run_bucketed(
+        &mut self,
+        t: usize,
+        grads: &[Vec<f32>],
+        plan: BucketPlan,
+    ) -> anyhow::Result<StepResult> {
+        let leader = t % self.n;
+        let n = self.n;
+        let dim = self.dim;
+        let backend = self.backend;
+        let threads = self.scan_threads();
+        let order = bucketed::backward_order(&plan);
+        let nb = plan.num_buckets();
+        let mut selections: Vec<Option<Selection>> = (0..nb).map(|_| None).collect();
+        let mut update = vec![0.0f32; dim];
+        let mut costs: Vec<CommCost> = Vec::with_capacity(nb);
+
+        // Disjoint field borrows: the compressor (self.mode), the layered
+        // config (self.layered), the workers, and the fabric are used
+        // side by side below — all direct field accesses, never whole-self
+        // method calls.
+        let (partition, ks) = self.layered.as_ref().expect("ensured above");
+        let compressor = match &mut self.mode {
+            Mode::Compressed(c) => c.as_mut(),
+            Mode::Dense => unreachable!("dense path handled above"),
+        };
+        match &mut self.workers {
+            Workers::Pool(pool) => {
+                // Submission sweep: bucket b's collective goes onto the
+                // lanes before bucket b−1's selection starts computing.
+                for &b in &order {
+                    let bucket = *plan.bucket(b);
+                    let (sub_partition, sub_ks) = plan.bucket_config(b, partition, ks);
+                    let slices: Vec<Vec<f32>> =
+                        grads.iter().map(|g| g[bucket.range()].to_vec()).collect();
+                    let efs = pool.begin_bucket(b as u32, bucket.offset, slices);
+                    let ef_views: Vec<&[f32]> = efs.iter().map(|e| e.as_slice()).collect();
+                    let sel =
+                        select_layered(compressor, t, &ef_views, &sub_partition, &sub_ks, threads);
+                    match &sel {
+                        Selection::Shared(idx) => {
+                            let vals: Vec<Vec<f32>> = efs
+                                .iter()
+                                .map(|ef| idx.iter().map(|&i| ef[i as usize]).collect())
+                                .collect();
+                            pool.finish_shared_bucket(b as u32, idx, vals);
+                        }
+                        Selection::PerWorker(per) => {
+                            let sparses: Vec<SparseGrad> = efs
+                                .iter()
+                                .zip(per)
+                                .map(|(ef, idx)| sparsify(ef, idx))
+                                .collect();
+                            pool.finish_gather_bucket(b as u32, sparses);
+                        }
+                    }
+                    selections[b] = Some(sel);
+                }
+                // Completion sweep: lanes complete FIFO, so buckets land
+                // in submission order; each is applied as it arrives.
+                for &b in &order {
+                    let bucket = *plan.bucket(b);
+                    match selections[b].as_ref().expect("submitted above") {
+                        Selection::Shared(idx) => {
+                            let (tag, vals) = pool.try_wait_reduced()?;
+                            anyhow::ensure!(
+                                tag == b as u32,
+                                "bucket results out of order: waiting on bucket {b}, got {tag}"
+                            );
+                            for (&i, &v) in idx.iter().zip(&vals) {
+                                update[bucket.offset + i as usize] = v;
+                            }
+                            costs.push(self.fabric.record_sparse_allreduce_shared(n, idx.len()));
+                        }
+                        Selection::PerWorker(_) => {
+                            let (tag, avg_local, gs) = pool.try_wait_gathered()?;
+                            anyhow::ensure!(
+                                tag == b as u32,
+                                "bucket results out of order: waiting on bucket {b}, got {tag}"
+                            );
+                            update[bucket.range()].copy_from_slice(&avg_local);
+                            costs.push(self.fabric.record_sparse_gather(&gs));
+                        }
+                    }
+                }
+            }
+            Workers::Local(memories) => {
+                // Eager per-bucket schedule in the identical order — the
+                // parity reference (sequential) and the scoped-thread
+                // engine (threaded: real ring collective per bucket).
+                for &b in &order {
+                    let bucket = *plan.bucket(b);
+                    let (sub_partition, sub_ks) = plan.bucket_config(b, partition, ks);
+                    let efs: Vec<Vec<f32>> = memories
+                        .iter()
+                        .zip(grads)
+                        .map(|(m, g)| m.ef_grad_range(bucket.offset, &g[bucket.range()]))
+                        .collect();
+                    let ef_views: Vec<&[f32]> = efs.iter().map(|e| e.as_slice()).collect();
+                    let sel =
+                        select_layered(compressor, t, &ef_views, &sub_partition, &sub_ks, threads);
+                    match &sel {
+                        Selection::Shared(idx) => {
+                            let reduced = match backend {
+                                // the fabric's own shared reduce — ONE
+                                // definition of the worker-order
+                                // arithmetic and its cost booking
+                                Backend::Sequential => {
+                                    let sparses: Vec<SparseGrad> =
+                                        efs.iter().map(|ef| sparsify(ef, idx)).collect();
+                                    self.fabric.sparse_allreduce_shared(&sparses, leader).values
+                                }
+                                // real channel-ring collective on scoped
+                                // worker threads, identical cost booking
+                                Backend::Threaded => {
+                                    let vals: Vec<Vec<f32>> = efs
+                                        .iter()
+                                        .map(|ef| {
+                                            idx.iter().map(|&i| ef[i as usize]).collect()
+                                        })
+                                        .collect();
+                                    let out = threaded::dense_allreduce_avg(&vals);
+                                    self.fabric.record_sparse_allreduce_shared(n, idx.len());
+                                    out
+                                }
+                                Backend::Pipelined | Backend::Socket => {
+                                    unreachable!("pooled backends take the Pool arm")
+                                }
+                            };
+                            for (&i, &v) in idx.iter().zip(&reduced) {
+                                update[bucket.offset + i as usize] = v;
+                            }
+                            costs.push(self.fabric.stats().last_cost().clone());
+                        }
+                        Selection::PerWorker(per) => {
+                            let sparses: Vec<SparseGrad> = efs
+                                .iter()
+                                .zip(per)
+                                .map(|(ef, idx)| sparsify(ef, idx))
+                                .collect();
+                            // the shared worker-order gather reduction —
+                            // bit-identical on every backend
+                            let (avg_local, gs) =
+                                crate::comm::fabric::reduce_gathered(&sparses, bucket.len);
+                            update[bucket.range()].copy_from_slice(&avg_local);
+                            costs.push(self.fabric.record_sparse_gather(&gs));
+                        }
+                    }
+                    // slice memory update (Eqn. 5) with each worker's
+                    // bucket-local transmitted indices
+                    for (w, (mem, g)) in memories.iter_mut().zip(grads).enumerate() {
+                        mem.update_after_send_range(
+                            bucket.offset,
+                            &g[bucket.range()],
+                            sel.indices_for(w),
+                        );
+                    }
+                    selections[b] = Some(sel);
+                }
+            }
+        }
+
+        let per_bucket: Vec<Selection> = selections
+            .into_iter()
+            .map(|s| s.expect("every bucket selected"))
+            .collect();
+        let merged = bucketed::merge_selections(&plan, &per_bucket, n);
+        let sent = bucketed::sent_coords(&merged);
+        Ok(StepResult {
+            update,
+            rate: dim as f64 / sent.max(1) as f64,
+            selection: Some(merged),
+            leader,
+            comm: bucketed::aggregate_comm(&costs),
+            dense: false,
+        })
+    }
+
+    /// Infallible [`Coordinator::try_step_bucketed`] (tests/benches).
+    pub fn step_bucketed(&mut self, t: usize, grads: &[Vec<f32>]) -> StepResult {
+        self.try_step_bucketed(t, grads)
+            .expect("bucketed coordination step failed")
     }
 
     /// Submit one step to the worker pool without waiting for its
@@ -379,14 +727,28 @@ impl Coordinator {
 
     /// Wait for the oldest submitted step's collective, book its
     /// communication cost (identical shape accounting to the other
-    /// backends), and assemble the `StepResult`.
-    fn wait_oldest(&mut self) -> Option<StepResult> {
-        let p = self.pending.pop_front()?;
+    /// backends), and assemble the `StepResult`. On a lane fault the
+    /// remaining pending steps are dropped (the stream is mis-framed
+    /// beyond recovery) and the error propagates.
+    fn wait_oldest(&mut self) -> anyhow::Result<Option<StepResult>> {
+        let Some(p) = self.pending.pop_front() else {
+            return Ok(None);
+        };
+        let r = self.wait_pending(p);
+        if r.is_err() {
+            self.pending.clear();
+            self.poisoned = true;
+        }
+        r.map(Some)
+    }
+
+    fn wait_pending(&mut self, p: Pending) -> anyhow::Result<StepResult> {
         if p.dense {
-            let update = self.pool().wait_reduced();
+            let (bucket, update) = self.pool().try_wait_reduced()?;
+            debug_assert_eq!(bucket, 0, "monolithic steps carry bucket 0");
             self.fabric.record_dense_allreduce(self.n, self.dim);
             let comm = self.fabric.stats().last_cost().clone();
-            return Some(StepResult {
+            return Ok(StepResult {
                 update,
                 selection: None,
                 leader: p.leader,
@@ -398,19 +760,21 @@ impl Coordinator {
         let selection = p.selection.expect("compressed step carries a selection");
         let (update, comm, sent) = match &selection {
             Selection::Shared(idx) => {
-                let vals = self.pool().wait_reduced();
+                let (bucket, vals) = self.pool().try_wait_reduced()?;
+                debug_assert_eq!(bucket, 0, "monolithic steps carry bucket 0");
                 let comm = self.fabric.record_sparse_allreduce_shared(self.n, idx.len());
                 let avg = SparseGrad::new(self.dim, idx.clone(), vals);
                 (avg.to_dense(), comm, idx.len())
             }
             Selection::PerWorker(per) => {
-                let (avg, gs) = self.pool().wait_gathered();
+                let (bucket, avg, gs) = self.pool().try_wait_gathered()?;
+                debug_assert_eq!(bucket, 0, "monolithic steps carry bucket 0");
                 let comm = self.fabric.record_sparse_gather(&gs);
                 let sent = per.iter().map(|p| p.len()).max().unwrap_or(0);
                 (avg, comm, sent)
             }
         };
-        Some(StepResult {
+        Ok(StepResult {
             update,
             rate: self.dim as f64 / sent.max(1) as f64,
             selection: Some(selection),
@@ -420,23 +784,28 @@ impl Coordinator {
         })
     }
 
-    /// Run the compression scheme over this step's EF gradients (the
-    /// selection compute the pipelined backend overlaps with the
-    /// previous step's collective).
-    fn select_indices(&mut self, t: usize, efs: &[Vec<f32>]) -> Selection {
-        let ef_views: Vec<&[f32]> = efs.iter().map(|e| e.as_slice()).collect();
-        // Selection fan-out follows the machine, not the simulated worker
-        // count: 64 simulated workers on a 4-core box must not spawn 64
-        // scan threads (results are thread-count-independent by the
-        // `select_parallel` contract).
-        let threads = match self.backend {
+    /// Selection fan-out follows the machine, not the simulated worker
+    /// count: 64 simulated workers on a 4-core box must not spawn 64
+    /// scan threads (results are thread-count-independent by the
+    /// `select_parallel` contract). One rule for both the monolithic
+    /// (`select_indices`) and bucketed (`try_step_bucketed`) drivers.
+    fn scan_threads(&self) -> usize {
+        match self.backend {
             Backend::Sequential => 1,
             Backend::Threaded | Backend::Pipelined | Backend::Socket => {
                 std::thread::available_parallelism()
                     .map(|p| p.get())
                     .unwrap_or(1)
             }
-        };
+        }
+    }
+
+    /// Run the compression scheme over this step's EF gradients (the
+    /// selection compute the pipelined backend overlaps with the
+    /// previous step's collective).
+    fn select_indices(&mut self, t: usize, efs: &[Vec<f32>]) -> Selection {
+        let ef_views: Vec<&[f32]> = efs.iter().map(|e| e.as_slice()).collect();
+        let threads = self.scan_threads();
         let compressor = match &mut self.mode {
             Mode::Compressed(c) => c,
             Mode::Dense => unreachable!("selection on the dense path"),
@@ -985,6 +1354,321 @@ mod tests {
             // identical comm ledger to the eager reference
             assert_eq!(eager.fabric.stats().ops, lagged.fabric.stats().ops);
         }
+    }
+
+    fn two_layer_partition(dim: usize) -> (LayerPartition, Vec<usize>) {
+        assert!(dim % 4 == 0);
+        let first = dim / 4;
+        let partition = LayerPartition::from_layers(vec![
+            LayerSlice {
+                name: "first".into(),
+                offset: 0,
+                len: first,
+                flops_per_sample: 0.0,
+                compress: true,
+            },
+            LayerSlice {
+                name: "rest".into(),
+                offset: first,
+                len: dim - first,
+                flops_per_sample: 0.0,
+                compress: true,
+            },
+        ]);
+        let ks = vec![(first / 4).max(1), ((dim - first) / 8).max(1)];
+        (partition, ks)
+    }
+
+    #[test]
+    fn bucketed_step_matches_monolithic_layered_step() {
+        // Same layered config, same gradient stream: the bucketed step's
+        // selections are exactly the monolithic ones, shared-path updates
+        // agree within the ring tolerance, and the memories stay in
+        // lockstep over many steps.
+        let n = 3;
+        let dim = 64;
+        let (partition, ks) = two_layer_partition(dim);
+        let plan = crate::comm::BucketPlan::from_partition(&partition, partition.layers[0].len * 4);
+        assert_eq!(plan.num_buckets(), 2);
+        let mk = || {
+            Coordinator::new(
+                n,
+                dim,
+                Mode::Compressed(Box::new(CltK::exact())),
+                0.5,
+                4,
+                fabric(n),
+                2, // cover the dense-warmup fallback
+            )
+            .with_layered(partition.clone(), ks.clone())
+        };
+        let mut mono = mk();
+        let mut buck = mk().with_buckets(plan);
+        let mut rng = Rng::new(41);
+        for t in 0..10 {
+            let grads = rand_grads(&mut rng, n, dim);
+            let a = mono.step(t, &grads);
+            let b = buck.step_bucketed(t, &grads);
+            assert_eq!(a.selection, b.selection, "t={t}: bucketing must not change selection");
+            assert_eq!(a.leader, b.leader, "t={t}");
+            assert_eq!(a.dense, b.dense, "t={t}");
+            assert_eq!(a.rate, b.rate, "t={t}");
+            assert!(allclose(&a.update, &b.update, 1e-5, 1e-6).is_ok(), "t={t}");
+            // total transported bytes agree (per-bucket bookings sum to
+            // the monolithic volume on the shared path: same k overall)
+            if !a.dense {
+                assert_eq!(
+                    a.comm.bytes_up_per_worker
+                        + a.comm.bytes_down_per_worker,
+                    b.comm.bytes_up_per_worker + b.comm.bytes_down_per_worker,
+                    "t={t}: bucketing must not change transported volume"
+                );
+            }
+        }
+        for (a, b) in mono.memory_snapshot().iter().zip(&buck.memory_snapshot()) {
+            assert!(allclose(a.memory(), b.memory(), 1e-6, 1e-7).is_ok());
+        }
+    }
+
+    #[test]
+    fn single_bucket_plan_is_bit_identical_to_monolithic() {
+        let n = 2;
+        let dim = 32;
+        let (partition, ks) = two_layer_partition(dim);
+        let mk = || {
+            Coordinator::new(
+                n,
+                dim,
+                Mode::Compressed(Box::new(CltK::exact())),
+                1.0,
+                4,
+                fabric(n),
+                0,
+            )
+            .with_layered(partition.clone(), ks.clone())
+        };
+        let mut mono = mk();
+        let mut single = mk().with_buckets(crate::comm::BucketPlan::from_partition(&partition, 0));
+        let mut rng = Rng::new(9);
+        for t in 0..6 {
+            let grads = rand_grads(&mut rng, n, dim);
+            let a = mono.step(t, &grads);
+            let b = single.step_bucketed(t, &grads);
+            // the single-bucket plan takes the monolithic path: equality
+            // is exact, not tolerance
+            assert_eq!(a.update, b.update, "t={t}");
+            assert_eq!(a.selection, b.selection, "t={t}");
+            assert_eq!(a.comm, b.comm, "t={t}");
+        }
+        assert_eq!(
+            mono.fabric.stats().ops,
+            single.fabric.stats().ops,
+            "single-bucket ledger must be the monolithic ledger"
+        );
+    }
+
+    #[test]
+    fn bucketed_gather_path_is_bit_identical_to_monolithic() {
+        // The gather path reduces per coordinate in worker order on both
+        // drivers — equality, not tolerance.
+        let n = 4;
+        let dim = 64;
+        let (partition, ks) = two_layer_partition(dim);
+        let plan = crate::comm::BucketPlan::from_partition(&partition, partition.layers[0].len * 4);
+        let mk = || {
+            Coordinator::new(
+                n,
+                dim,
+                Mode::Compressed(Box::new(LocalTopK::new())),
+                1.0,
+                4,
+                fabric(n),
+                0,
+            )
+            .with_layered(partition.clone(), ks.clone())
+        };
+        let mut mono = mk();
+        let mut buck = mk().with_buckets(plan);
+        let mut rng = Rng::new(77);
+        for t in 0..8 {
+            let grads = rand_grads(&mut rng, n, dim);
+            let a = mono.step(t, &grads);
+            let b = buck.step_bucketed(t, &grads);
+            assert_eq!(a.selection, b.selection, "t={t}");
+            assert_eq!(a.update, b.update, "t={t}: gather must be bit-identical");
+        }
+        for (a, b) in mono.memory_snapshot().iter().zip(&buck.memory_snapshot()) {
+            assert_eq!(a.memory(), b.memory());
+        }
+    }
+
+    #[test]
+    fn mixed_kind_buckets_split_the_exchange_by_bucket() {
+        // A dense-exempt layer alone in its bucket under a non-commutative
+        // scheme: the monolithic step drags its coordinates into the one
+        // big gather, while the bucketed step rides the commutative ring
+        // reduce for that bucket — selections and values still match; the
+        // ledger records one shared reduce + one gather per step.
+        let n = 3;
+        let dim = 32;
+        let partition = LayerPartition::from_layers(vec![
+            LayerSlice {
+                name: "exempt".into(),
+                offset: 0,
+                len: 8,
+                flops_per_sample: 0.0,
+                compress: false, // dense → Shared selection
+            },
+            LayerSlice {
+                name: "compressed".into(),
+                offset: 8,
+                len: 24,
+                flops_per_sample: 0.0,
+                compress: true, // local-topk → PerWorker selection
+            },
+        ]);
+        let ks = vec![8usize, 4];
+        let plan = crate::comm::BucketPlan::from_partition(&partition, 8 * 4);
+        assert_eq!(plan.num_buckets(), 2);
+        let mk = || {
+            Coordinator::new(
+                n,
+                dim,
+                Mode::Compressed(Box::new(LocalTopK::new())),
+                1.0,
+                4,
+                fabric(n),
+                0,
+            )
+            .with_layered(partition.clone(), ks.clone())
+        };
+        let mut mono = mk();
+        let mut buck = mk().with_buckets(plan);
+        let mut rng = Rng::new(19);
+        for t in 0..6 {
+            let grads = rand_grads(&mut rng, n, dim);
+            let a = mono.step(t, &grads);
+            let b = buck.step_bucketed(t, &grads);
+            // merged selection identical (dense indices replicated to
+            // every worker either way)
+            assert_eq!(a.selection, b.selection, "t={t}");
+            assert_eq!(a.rate, b.rate, "t={t}");
+            // values agree within the ring tolerance on the shared
+            // bucket, bit-exactly on the gathered one
+            assert!(allclose(&a.update, &b.update, 1e-5, 1e-6).is_ok(), "t={t}");
+            assert_eq!(a.update[8..], b.update[8..], "gathered bucket bit-exact t={t}");
+        }
+        // ledger shape: monolithic = one gather per step; bucketed = one
+        // shared reduce (the dense bucket) + one gather per step
+        assert!(mono
+            .fabric
+            .stats()
+            .ops
+            .iter()
+            .all(|c| c.op == "sparse_gather"));
+        let buck_ops: Vec<&str> = buck.fabric.stats().ops.iter().map(|c| c.op).collect();
+        assert_eq!(buck_ops.iter().filter(|&&o| o == "sparse_gather").count(), 6);
+        assert_eq!(
+            buck_ops
+                .iter()
+                .filter(|&&o| o == "sparse_allreduce_shared")
+                .count(),
+            6
+        );
+    }
+
+    #[test]
+    fn bucketed_step_without_layered_config_is_a_clean_error() {
+        let dim = 32;
+        let (partition, _) = two_layer_partition(dim);
+        let plan = crate::comm::BucketPlan::from_partition(&partition, partition.layers[0].len * 4);
+        let mut c = Coordinator::new(
+            2,
+            dim,
+            Mode::Compressed(Box::new(CltK::exact())),
+            1.0,
+            4,
+            fabric(2),
+            0,
+        )
+        .with_buckets(plan);
+        let mut rng = Rng::new(1);
+        let err = c.try_step_bucketed(0, &rand_grads(&mut rng, 2, dim)).unwrap_err();
+        assert!(err.to_string().contains("per-layer budgets"), "{err}");
+    }
+
+    #[test]
+    #[should_panic(expected = "misaligned")]
+    fn misaligned_bucket_plan_rejected_at_setup() {
+        let dim = 32;
+        let (partition, ks) = two_layer_partition(dim);
+        // a plan built from a DIFFERENT partition (single layer) cannot
+        // align with the two-layer config
+        let other = LayerPartition::from_layers(vec![
+            LayerSlice {
+                name: "a".into(),
+                offset: 0,
+                len: 20,
+                flops_per_sample: 0.0,
+                compress: true,
+            },
+            LayerSlice {
+                name: "b".into(),
+                offset: 20,
+                len: 12,
+                flops_per_sample: 0.0,
+                compress: true,
+            },
+        ]);
+        let plan = crate::comm::BucketPlan::from_partition(&other, 80);
+        let _ = Coordinator::new(
+            2,
+            dim,
+            Mode::Compressed(Box::new(CltK::exact())),
+            1.0,
+            4,
+            fabric(2),
+            0,
+        )
+        .with_layered(partition, ks)
+        .with_buckets(plan);
+    }
+
+    #[test]
+    #[should_panic(expected = "misaligned")]
+    fn misaligned_plan_rejected_regardless_of_configuration_order() {
+        // with_buckets BEFORE with_layered must hit the same
+        // fail-at-setup check — order must not weaken it.
+        let dim = 32;
+        let (partition, ks) = two_layer_partition(dim);
+        let other = LayerPartition::from_layers(vec![
+            LayerSlice {
+                name: "a".into(),
+                offset: 0,
+                len: 20,
+                flops_per_sample: 0.0,
+                compress: true,
+            },
+            LayerSlice {
+                name: "b".into(),
+                offset: 20,
+                len: 12,
+                flops_per_sample: 0.0,
+                compress: true,
+            },
+        ]);
+        let plan = crate::comm::BucketPlan::from_partition(&other, 80);
+        let _ = Coordinator::new(
+            2,
+            dim,
+            Mode::Compressed(Box::new(CltK::exact())),
+            1.0,
+            4,
+            fabric(2),
+            0,
+        )
+        .with_buckets(plan)
+        .with_layered(partition, ks);
     }
 
     #[test]

@@ -39,6 +39,7 @@ pub fn train_cfg(model: &str, scheme: &str, workers: usize, steps: usize) -> Tra
         fabric_topology: "ps".into(),
         fabric_bandwidth_gbps: 32.0,
         backend: "sequential".into(),
+        bucket_bytes: 0,
         eval_every: 0,
         artifacts_dir: "artifacts".into(),
     }

@@ -77,6 +77,7 @@ fn cmd_train(args: &mut Args) -> Result<()> {
     if let Some(b) = args.str_opt("backend") {
         cfg.backend = b;
     }
+    cfg.bucket_bytes = args.usize_or("bucket-bytes", cfg.bucket_bytes)?;
     // The socket backend wants an explicit deployment choice: loopback
     // (in-process TCP mesh) or a real multi-process ring via `node`.
     let peers = args.str_opt("peers");
@@ -110,7 +111,7 @@ fn cmd_train(args: &mut Args) -> Result<()> {
     args.finish()?;
 
     println!(
-        "training {} | workers={} steps={} scheme={} rate={}x beta={} topo={} backend={}{}",
+        "training {} | workers={} steps={} scheme={} rate={}x beta={} topo={} backend={}{}{}",
         cfg.model,
         cfg.workers,
         cfg.steps,
@@ -119,6 +120,11 @@ fn cmd_train(args: &mut Args) -> Result<()> {
         cfg.compress.beta,
         cfg.fabric_topology,
         cfg.backend,
+        if cfg.bucket_bytes > 0 {
+            format!(" bucket-bytes={}", cfg.bucket_bytes)
+        } else {
+            String::new()
+        },
         if use_kernel { " [L1-kernel compression]" } else { "" }
     );
     let peak = cfg.lr;

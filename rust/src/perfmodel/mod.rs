@@ -175,6 +175,72 @@ pub fn step_time_overlapped(
     step_time(net, &s, scheme)
 }
 
+/// Wall-clock of a pipelined per-bucket timeline: `intervals[b]` is
+/// bucket b's `(compute, comm)` pair in **production order** (backward
+/// over the layers — the order backprop finishes them). Compute is
+/// serial on the accelerator; each bucket's exchange starts as soon as
+/// both its compute is done and the link is free (collectives serialize
+/// on one link), so
+///
+///   compute_done_b = Σ_{i ≤ b} tc_i,
+///   comm_free_b    = max(comm_free_{b−1}, compute_done_b) + tm_b,
+///   t_step         = max(comm_free_B, compute_done_B).
+///
+/// With uniform buckets this closes to `max(Tc, Tm) + min(Tc, Tm)/B` —
+/// the ideal overlapped `max(Tc, Tm)` plus the pipeline-fill bubble,
+/// which shrinks as buckets get finer.
+pub fn bucketed_pipeline_total(intervals: &[(f64, f64)]) -> f64 {
+    let mut compute_done = 0.0f64;
+    let mut comm_free = 0.0f64;
+    for &(tc, tm) in intervals {
+        compute_done += tc;
+        comm_free = comm_free.max(compute_done) + tm;
+    }
+    comm_free.max(compute_done)
+}
+
+/// Step time under the bucketed exchange (`Coordinator::step_bucketed`):
+/// the gradient is split into `buckets` uniform layer-aligned buckets,
+/// bucket b's collective overlaps bucket b−1's selection compute, and
+/// the step ends when the last bucket's exchange lands.
+///
+/// `sys.overlap` is **ignored**: that knob is [`step_time`]'s coarse
+/// "fraction of comm hidden" stand-in for software pipelining, and the
+/// per-bucket timeline *is* the mechanistic model of that same
+/// pipelining — applying both would double-count the hiding. So
+/// `buckets == 1` recovers the fully-exposed serial step
+/// (`step_time` with `overlap = 0`), and `buckets → ∞` approaches the
+/// fully-overlapped [`step_time_overlapped`] `max(Tc, Tm)`; a
+/// `SystemConfig` with `overlap > 0` sits between those bounds and
+/// should be compared against the bucketed model, not combined with it.
+pub fn step_time_bucketed(
+    net: &PaperNet,
+    sys: &SystemConfig,
+    scheme: Scheme,
+    buckets: usize,
+) -> StepBreakdown {
+    assert!(buckets >= 1, "at least one bucket");
+    // Decompose against the fully-exposed serial step so Tc/Tm are the
+    // raw compute and comm totals (see the doc: sys.overlap is
+    // deliberately not applied on top of the bucket timeline).
+    let mut exposed = sys.clone();
+    exposed.overlap = 0.0;
+    let serial = step_time(net, &exposed, scheme);
+    let comm = serial.grad_up_s + serial.grad_down_s + serial.index_s;
+    let b = buckets as f64;
+    let intervals = vec![(serial.compute_s / b, comm / b); buckets];
+    let total = bucketed_pipeline_total(&intervals);
+    StepBreakdown {
+        scheme,
+        compute_s: serial.compute_s,
+        grad_up_s: serial.grad_up_s,
+        grad_down_s: serial.grad_down_s,
+        index_s: serial.index_s,
+        exposed_comm_s: (total - serial.compute_s).max(0.0),
+        total_s: total,
+    }
+}
+
 /// Speedup of `scheme` relative to `baseline` on the same system.
 pub fn speedup(net: &PaperNet, sys: &SystemConfig, scheme: Scheme, baseline: Scheme) -> f64 {
     step_time(net, sys, baseline).total_s / step_time(net, sys, scheme).total_s
@@ -292,6 +358,69 @@ mod tests {
         s.overlap = 0.5;
         let hidden = step_time(&net, &s, Scheme::None).exposed_comm_s;
         assert!(hidden < exposed);
+    }
+
+    #[test]
+    fn bucketed_step_interpolates_serial_to_overlapped() {
+        let net = paper_net("resnet50").unwrap();
+        for (n, mb) in [(8usize, 8usize), (64, 32), (128, 8)] {
+            for scheme in [Scheme::None, Scheme::LocalTopK, Scheme::ScaleCom] {
+                let s = sys(n, mb, 100.0);
+                let serial = step_time(&net, &s, scheme);
+                let over = step_time_overlapped(&net, &s, scheme);
+                let comm = serial.grad_up_s + serial.grad_down_s + serial.index_s;
+                // one bucket == the serial step
+                let b1 = step_time_bucketed(&net, &s, scheme, 1);
+                assert!((b1.total_s - serial.total_s).abs() < 1e-12, "B=1 is serial");
+                // sys.overlap is ignored (the bucket timeline IS the
+                // overlap model): an overlap-0.5 system yields the same
+                // bucketed totals as the overlap-0 system
+                let mut half = s.clone();
+                half.overlap = 0.5;
+                for buckets in [1usize, 4] {
+                    assert!(
+                        (step_time_bucketed(&net, &half, scheme, buckets).total_s
+                            - step_time_bucketed(&net, &s, scheme, buckets).total_s)
+                            .abs()
+                            < 1e-12,
+                        "bucketed model must ignore sys.overlap"
+                    );
+                }
+                // uniform closed form: max + min/B
+                for buckets in [2usize, 4, 16, 64] {
+                    let bt = step_time_bucketed(&net, &s, scheme, buckets);
+                    let expect = serial.compute_s.max(comm)
+                        + serial.compute_s.min(comm) / buckets as f64;
+                    assert!(
+                        (bt.total_s - expect).abs() < 1e-12,
+                        "B={buckets}: {} vs {expect}",
+                        bt.total_s
+                    );
+                    // monotone: more buckets never slower, bounded by
+                    // serial above and ideal overlap below
+                    assert!(bt.total_s <= serial.total_s + 1e-12);
+                    assert!(bt.total_s >= over.total_s - 1e-12);
+                }
+                // fine buckets approach the ideal max(Tc, Tm)
+                let b1k = step_time_bucketed(&net, &s, scheme, 1000);
+                assert!(
+                    (b1k.total_s - over.total_s) / over.total_s < 0.01,
+                    "1000 buckets within 1% of max(Tc, Tm)"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bucketed_pipeline_handles_nonuniform_intervals() {
+        // comm-bound tail: the link stays busy after compute finishes
+        let t = bucketed_pipeline_total(&[(1.0, 0.5), (1.0, 3.0)]);
+        // compute_done: 1, 2; comm_free: max(0,1)+0.5=1.5, max(1.5,2)+3=5
+        assert!((t - 5.0).abs() < 1e-12, "{t}");
+        // compute-bound: comm hides entirely after the first bucket
+        let t = bucketed_pipeline_total(&[(2.0, 0.5), (2.0, 0.5)]);
+        // comm_free: 2.5, 4.5; compute_done: 4 → 4.5
+        assert!((t - 4.5).abs() < 1e-12, "{t}");
     }
 
     #[test]

@@ -397,6 +397,103 @@ mod pipeline {
     }
 }
 
+/// Bucketed-exchange properties: for ANY layer partition, ANY byte cap,
+/// and ANY gradient stream, the per-bucket driver must be observably
+/// equivalent to the monolithic layered step (selections exact, updates
+/// within the ring tolerance, memories in lockstep) — and the pooled
+/// backward-order overlap driver must match the sequential per-bucket
+/// reference exactly bucket for bucket.
+#[cfg(test)]
+mod bucketed_exchange {
+    use super::check;
+    use crate::comm::{Backend, BucketPlan, Fabric, FabricConfig, Topology};
+    use crate::compress::rate::LayerSlice;
+    use crate::compress::{schemes::make_compressor, LayerPartition};
+    use crate::coordinator::{Coordinator, Mode};
+    use crate::util::floats::allclose;
+
+    #[test]
+    fn bucketed_equals_monolithic_for_random_partitions() {
+        check("bucketed == monolithic (random partitions)", 15, |g| {
+            let n = g.usize_in(2..=4);
+            let n_layers = g.usize_in(1..=5);
+            let mut layers = Vec::new();
+            let mut off = 0usize;
+            for i in 0..n_layers {
+                let len = g.usize_in(4..=32);
+                layers.push(LayerSlice {
+                    name: format!("l{i}"),
+                    offset: off,
+                    len,
+                    flops_per_sample: 0.0,
+                    compress: g.usize_in(0..=3) > 0, // some layers dense
+                });
+                off += len;
+            }
+            let partition = LayerPartition::from_layers(layers);
+            let dim = partition.total_len();
+            let ks: Vec<usize> = partition
+                .layers
+                .iter()
+                .map(|l| if l.compress { g.usize_in(1..=l.len) } else { l.len })
+                .collect();
+            let plan = BucketPlan::from_partition(&partition, g.usize_in(0..=dim * 4));
+            let scheme = if g.bool() { "scalecom-exact" } else { "local-topk" };
+            let mk = |backend: Backend| {
+                let fabric = Fabric::new(FabricConfig {
+                    workers: n,
+                    topology: Topology::ParameterServer,
+                    ..FabricConfig::default()
+                });
+                Coordinator::new(
+                    n,
+                    dim,
+                    Mode::Compressed(make_compressor(scheme, 8, 3).unwrap()),
+                    0.5,
+                    4,
+                    fabric,
+                    0,
+                )
+                .with_layered(partition.clone(), ks.clone())
+                .with_backend(backend)
+            };
+            let mut mono = mk(Backend::Sequential);
+            let mut buck = mk(Backend::Sequential).with_buckets(plan.clone());
+            let mut buck_pool = mk(Backend::Pipelined).with_buckets(plan);
+            let steps = g.usize_in(1..=6);
+            for t in 0..steps {
+                let grads: Vec<Vec<f32>> =
+                    (0..n).map(|_| g.f32_vec_len(dim, 1.0)).collect();
+                let a = mono.step(t, &grads);
+                let b = buck.step_bucketed(t, &grads);
+                let c = buck_pool.step_bucketed(t, &grads);
+                assert_eq!(a.selection, b.selection, "{scheme} t={t}: selection");
+                assert_eq!(b.selection, c.selection, "{scheme} t={t}: pooled selection");
+                assert_eq!(a.rate, b.rate, "{scheme} t={t}: rate");
+                assert_eq!(b.comm, c.comm, "{scheme} t={t}: pooled comm booking");
+                if let Err(i) = allclose(&a.update, &b.update, 1e-5, 1e-6) {
+                    panic!("{scheme} t={t} coord {i}: {} vs {}", a.update[i], b.update[i]);
+                }
+                if let Err(i) = allclose(&b.update, &c.update, 1e-5, 1e-6) {
+                    panic!(
+                        "{scheme} t={t} coord {i} (pooled): {} vs {}",
+                        b.update[i], c.update[i]
+                    );
+                }
+            }
+            for ((a, b), c) in mono
+                .memory_snapshot()
+                .iter()
+                .zip(&buck.memory_snapshot())
+                .zip(&buck_pool.memory_snapshot())
+            {
+                assert!(allclose(a.memory(), b.memory(), 1e-6, 1e-7).is_ok());
+                assert!(allclose(b.memory(), c.memory(), 1e-6, 1e-7).is_ok());
+            }
+        });
+    }
+}
+
 /// Wire-codec properties (the socket transport's framing layer): any
 /// `SparseGrad`/dense/control message round-trips bit-exactly; decoding
 /// under adversity — split reads at every byte boundary, truncated
@@ -412,7 +509,10 @@ mod wire_codec {
     /// Draw an arbitrary message (all variants reachable).
     fn arb_msg(g: &mut super::Gen) -> WireMsg {
         match g.usize_in(0..=3) {
-            0 => WireMsg::DenseChunk(g.f32_vec(0..=64, 10.0)),
+            0 => WireMsg::DenseChunk {
+                bucket: g.usize_in(0..=u16::MAX as usize) as u32,
+                vals: g.f32_vec(0..=64, 10.0),
+            },
             1 => {
                 let dim = g.usize_in(1..=256);
                 let nnz = g.usize_in(0..=dim.min(32));
@@ -429,7 +529,10 @@ mod wire_codec {
                     next = i + 1;
                 }
                 let vals = g.f32_vec_len(idx.len(), 5.0);
-                WireMsg::Sparse(SparseGrad::new(dim, idx, vals))
+                WireMsg::Sparse {
+                    bucket: g.usize_in(0..=u16::MAX as usize) as u32,
+                    grad: SparseGrad::new(dim, idx, vals),
+                }
             }
             2 => WireMsg::Hello {
                 rank: g.usize_in(0..=1024) as u32,
@@ -445,12 +548,20 @@ mod wire_codec {
         // PartialEq on f32 treats NaN != NaN and -0.0 == 0.0; compare
         // float payloads by bits so the property is about the *codec*.
         match (a, b) {
-            (WireMsg::DenseChunk(x), WireMsg::DenseChunk(y)) => {
-                x.len() == y.len()
+            (
+                WireMsg::DenseChunk { bucket: ba, vals: x },
+                WireMsg::DenseChunk { bucket: bb, vals: y },
+            ) => {
+                ba == bb
+                    && x.len() == y.len()
                     && x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits())
             }
-            (WireMsg::Sparse(x), WireMsg::Sparse(y)) => {
-                x.dim == y.dim
+            (
+                WireMsg::Sparse { bucket: ba, grad: x },
+                WireMsg::Sparse { bucket: bb, grad: y },
+            ) => {
+                ba == bb
+                    && x.dim == y.dim
                     && x.indices == y.indices
                     && x.values.len() == y.values.len()
                     && x.values

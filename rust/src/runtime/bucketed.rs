@@ -1,0 +1,188 @@
+//! Bucketed-exchange scheduling: the pure bookkeeping behind
+//! `Coordinator::step_bucketed`.
+//!
+//! The driver walks the buckets of a [`BucketPlan`] in **backward
+//! order** — highest offset first, mirroring backprop, which produces
+//! the last layers' gradients first — submitting each bucket's
+//! collective to the comm lanes as soon as its EF-gradient/CLT-k
+//! selection is done, so bucket b's exchange is in flight while bucket
+//! b−1's selection computes. This module holds the order and the
+//! merge/aggregation helpers; the driving itself lives on the
+//! `Coordinator` (it owns the pool, the fabric, and the compressor).
+//!
+//! The merge is deliberately identical to `select_layered`'s: per-bucket
+//! selections, rebased to global coordinates and concatenated in
+//! **forward** bucket order, reproduce the monolithic layered selection
+//! exactly — that is the bucketed half of the determinism contract.
+
+use crate::comm::bucket::BucketPlan;
+use crate::comm::CommCost;
+use crate::compress::Selection;
+
+/// Bucket ids in submission order: backward (reverse offset) order, the
+/// order backprop would hand the driver finished gradient slices.
+pub fn backward_order(plan: &BucketPlan) -> Vec<usize> {
+    (0..plan.num_buckets()).rev().collect()
+}
+
+/// Merge per-bucket selections (bucket-local indices, one entry per
+/// bucket in forward order) into one global [`Selection`], exactly as
+/// `select_layered` merges per-layer selections: if every bucket stayed
+/// shared the result is shared; one per-worker bucket makes the whole
+/// step per-worker, with shared buckets' indices replicated to every
+/// worker.
+pub fn merge_selections(plan: &BucketPlan, per_bucket: &[Selection], n: usize) -> Selection {
+    assert_eq!(
+        per_bucket.len(),
+        plan.num_buckets(),
+        "one selection per bucket"
+    );
+    let any_per_worker = per_bucket.iter().any(|s| !s.is_shared());
+    if !any_per_worker {
+        let mut shared: Vec<u32> = Vec::new();
+        for (b, sel) in per_bucket.iter().enumerate() {
+            let off = plan.bucket(b).offset as u32;
+            match sel {
+                Selection::Shared(idx) => shared.extend(idx.iter().map(|&i| i + off)),
+                Selection::PerWorker(_) => unreachable!("checked shared above"),
+            }
+        }
+        return Selection::Shared(shared);
+    }
+    let mut per_worker: Vec<Vec<u32>> = vec![Vec::new(); n];
+    for (b, sel) in per_bucket.iter().enumerate() {
+        let off = plan.bucket(b).offset as u32;
+        match sel {
+            Selection::Shared(idx) => {
+                for pw in per_worker.iter_mut() {
+                    pw.extend(idx.iter().map(|&i| i + off));
+                }
+            }
+            Selection::PerWorker(per) => {
+                assert_eq!(per.len(), n, "bucket selection sized for a different n");
+                for (pw, idx) in per_worker.iter_mut().zip(per) {
+                    pw.extend(idx.iter().map(|&i| i + off));
+                }
+            }
+        }
+    }
+    Selection::PerWorker(per_worker)
+}
+
+/// Coordinates one worker transmits under a merged selection — the
+/// same `sent` the monolithic step reports (max over workers for the
+/// gather path), so the bucketed step's compression-rate accounting is
+/// identical to the monolithic step's.
+pub fn sent_coords(selection: &Selection) -> usize {
+    match selection {
+        Selection::Shared(idx) => idx.len(),
+        Selection::PerWorker(per) => per.iter().map(|p| p.len()).max().unwrap_or(0),
+    }
+}
+
+/// Fold the per-bucket collective costs into one step-level record:
+/// bytes and bottleneck traffic add, hops add (each bucket's collective
+/// serializes its own latency chain), and the modeled times add — the
+/// *wall-clock* win of bucketing comes from overlapping this comm total
+/// with compute (`perfmodel::step_time_bucketed`), not from shrinking
+/// the comm itself.
+pub fn aggregate_comm(costs: &[CommCost]) -> CommCost {
+    assert!(!costs.is_empty(), "aggregating no collective costs");
+    let mut total = CommCost {
+        op: "bucketed_exchange",
+        ..CommCost::default()
+    };
+    for c in costs {
+        total.bytes_up_per_worker += c.bytes_up_per_worker;
+        total.bytes_down_per_worker += c.bytes_down_per_worker;
+        total.bottleneck_bytes += c.bottleneck_bytes;
+        total.time_s += c.time_s;
+        total.hops += c.hops;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::rate::LayerSlice;
+    use crate::compress::LayerPartition;
+
+    fn plan(lens: &[usize], cap_bytes: usize) -> BucketPlan {
+        let mut layers = Vec::new();
+        let mut off = 0;
+        for (i, &len) in lens.iter().enumerate() {
+            layers.push(LayerSlice {
+                name: format!("l{i}"),
+                offset: off,
+                len,
+                flops_per_sample: 0.0,
+                compress: true,
+            });
+            off += len;
+        }
+        BucketPlan::from_partition(&LayerPartition::from_layers(layers), cap_bytes)
+    }
+
+    #[test]
+    fn backward_order_is_reverse_offset_order() {
+        let p = plan(&[4, 4, 4], 16);
+        assert_eq!(p.num_buckets(), 3);
+        assert_eq!(backward_order(&p), vec![2, 1, 0]);
+    }
+
+    #[test]
+    fn merging_shared_buckets_rebases_and_concatenates_forward() {
+        let p = plan(&[4, 4], 16);
+        let merged = merge_selections(
+            &p,
+            &[
+                Selection::Shared(vec![1, 3]),
+                Selection::Shared(vec![0, 2]),
+            ],
+            2,
+        );
+        assert_eq!(merged, Selection::Shared(vec![1, 3, 4, 6]));
+        assert_eq!(sent_coords(&merged), 4);
+    }
+
+    #[test]
+    fn one_per_worker_bucket_makes_the_merge_per_worker() {
+        let p = plan(&[4, 4], 16);
+        let merged = merge_selections(
+            &p,
+            &[
+                Selection::Shared(vec![2]),
+                Selection::PerWorker(vec![vec![0], vec![1, 3]]),
+            ],
+            2,
+        );
+        match &merged {
+            Selection::PerWorker(per) => {
+                assert_eq!(per[0], vec![2, 4]);
+                assert_eq!(per[1], vec![2, 5, 7]);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(sent_coords(&merged), 3);
+    }
+
+    #[test]
+    fn aggregate_comm_sums_every_axis() {
+        let c = |up: usize, t: f64| CommCost {
+            op: "sparse_allreduce_shared",
+            bytes_up_per_worker: up,
+            bytes_down_per_worker: up,
+            bottleneck_bytes: 2 * up,
+            time_s: t,
+            hops: 3,
+        };
+        let total = aggregate_comm(&[c(10, 0.5), c(6, 0.25)]);
+        assert_eq!(total.op, "bucketed_exchange");
+        assert_eq!(total.bytes_up_per_worker, 16);
+        assert_eq!(total.bytes_down_per_worker, 16);
+        assert_eq!(total.bottleneck_bytes, 32);
+        assert_eq!(total.hops, 6);
+        assert!((total.time_s - 0.75).abs() < 1e-12);
+    }
+}

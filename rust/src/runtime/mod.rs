@@ -10,8 +10,11 @@
 //! collectives both run on; the same pool serves `Backend::Socket` over
 //! a loopback TCP mesh). `socket` is the multi-process runtime behind
 //! `scalecom node`: rendezvous, the per-node driver, and the parity
-//! digest.
+//! digest. `bucketed` holds the per-bucket exchange schedule
+//! (backward-order walk, selection merge, cost aggregation) behind
+//! `Coordinator::step_bucketed`.
 
+pub mod bucketed;
 pub mod engine;
 pub mod manifest;
 pub mod pipelined;

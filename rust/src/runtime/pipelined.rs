@@ -29,6 +29,7 @@
 use crate::comm::parallel::{CollectiveResult, CommJob, CommLanes, LaneTransport};
 use crate::comm::GatherStats;
 use crate::compress::{EfMemory, SparseGrad};
+use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -51,6 +52,26 @@ enum Cmd {
     /// Dense (warmup / no-compression) step: forward the full gradient
     /// into the ring; memory is not involved.
     Dense { grad: Vec<f32> },
+    /// Start one **bucket** of a bucketed step: compute the EF gradient
+    /// for the slice `[offset, offset + grad.len())`, stash the slice
+    /// for the bucket's memory update, reply with the slice EF.
+    BeginBucket {
+        bucket: u32,
+        offset: usize,
+        grad: Vec<f32>,
+        reply: Sender<Vec<f32>>,
+    },
+    /// Finish a shared-index bucket: forward the bucket-tagged values
+    /// into the ring, then apply the memory update on the bucket's
+    /// slice (`idx` is bucket-local).
+    FinishSharedBucket {
+        bucket: u32,
+        idx: Arc<Vec<u32>>,
+        vals: Vec<f32>,
+    },
+    /// Finish a per-worker-index bucket: `sparse` is bucket-local
+    /// (its `dim` is the bucket length, its indices bucket-relative).
+    FinishGatherBucket { bucket: u32, sparse: SparseGrad },
     /// Pure EF-gradient query (trainer hooks, tests) — touches no step
     /// state.
     EfQuery {
@@ -211,40 +232,122 @@ impl WorkerPool {
         }
     }
 
-    /// Wait for the oldest in-flight ring collective (shared or dense).
-    ///
-    /// A `Failed` lane result — only the socket transport can produce
-    /// one, and for the in-process loopback mesh it means the host
-    /// itself is broken (fd exhaustion mid-run, a wedge past the read
-    /// timeout) — is treated as fatal: bounded, loud panic, never a
-    /// hang. The *multi-process* runtime (`runtime::socket`), where peer
-    /// death is an expected fault, propagates `anyhow` errors instead;
-    /// threading `Result` through the pooled `Coordinator::step` API is
-    /// a ROADMAP follow-up.
-    pub fn wait_reduced(&self) -> Vec<f32> {
+    /// Start one bucket of a bucketed step on every lane: each worker's
+    /// `grad_slices[w]` covers `[offset, offset + len)` of its gradient.
+    /// Returns the per-worker EF-gradient slices. Non-blocking on the
+    /// comm side; the EF replies are compute-lane work.
+    pub fn begin_bucket(
+        &self,
+        bucket: u32,
+        offset: usize,
+        grad_slices: Vec<Vec<f32>>,
+    ) -> Vec<Vec<f32>> {
+        assert_eq!(grad_slices.len(), self.n, "one gradient slice per worker");
+        let replies: Vec<Receiver<Vec<f32>>> = self
+            .cmds
+            .iter()
+            .zip(grad_slices)
+            .map(|(tx, grad)| {
+                let (rtx, rrx) = channel();
+                tx.send(Cmd::BeginBucket {
+                    bucket,
+                    offset,
+                    grad,
+                    reply: rtx,
+                })
+                .expect("pool command send");
+                rrx
+            })
+            .collect();
+        replies
+            .iter()
+            .map(|r| r.recv().expect("pool bucket ef reply"))
+            .collect()
+    }
+
+    /// Finish a shared-index bucket: `idx_local` is bucket-relative,
+    /// `vals[w]` worker w's EF values at those indices. Non-blocking —
+    /// the bucket-tagged ring reduce runs on the comm lanes; collect
+    /// with [`WorkerPool::try_wait_reduced`] (results arrive in
+    /// submission order, echoing the tag).
+    pub fn finish_shared_bucket(&self, bucket: u32, idx_local: &[u32], vals: Vec<Vec<f32>>) {
+        assert_eq!(vals.len(), self.n, "one value set per worker");
+        let idx = Arc::new(idx_local.to_vec());
+        for (tx, v) in self.cmds.iter().zip(vals) {
+            tx.send(Cmd::FinishSharedBucket {
+                bucket,
+                idx: idx.clone(),
+                vals: v,
+            })
+            .expect("pool command send");
+        }
+    }
+
+    /// Finish a per-worker-index bucket: `sparses[w]` is worker w's
+    /// bucket-local contribution (dim == bucket length). Non-blocking —
+    /// collect with [`WorkerPool::try_wait_gathered`].
+    pub fn finish_gather_bucket(&self, bucket: u32, sparses: Vec<SparseGrad>) {
+        assert_eq!(sparses.len(), self.n, "one contribution per worker");
+        for (tx, sg) in self.cmds.iter().zip(sparses) {
+            tx.send(Cmd::FinishGatherBucket { bucket, sparse: sg })
+                .expect("pool command send");
+        }
+    }
+
+    /// Wait for the oldest in-flight ring collective (shared, bucketed
+    /// or dense), returning its bucket tag and reduced values. A
+    /// `Failed` lane result — only the socket transport can produce one:
+    /// a dead, wedged, or mis-framed peer — surfaces as an `anyhow`
+    /// error, which `Coordinator::try_step` propagates so `train
+    /// --backend socket` fails cleanly instead of panicking.
+    pub fn try_wait_reduced(&self) -> anyhow::Result<(u32, Vec<f32>)> {
         match self.lanes.wait() {
-            CollectiveResult::Reduced(v) => v,
-            CollectiveResult::Gathered(..) => {
+            CollectiveResult::Reduced { bucket, vals } => Ok((bucket, vals)),
+            CollectiveResult::Gathered { .. } => {
                 panic!("expected a ring result, got a gather result")
             }
             CollectiveResult::Failed(e) => {
-                panic!("loopback socket collective failed: {e}")
+                anyhow::bail!("collective failed on a comm lane: {e}")
             }
         }
     }
 
-    /// Wait for the oldest in-flight star gather (same fault contract
-    /// as [`WorkerPool::wait_reduced`]).
-    pub fn wait_gathered(&self) -> (Vec<f32>, GatherStats) {
+    /// Wait for the oldest in-flight star gather (same fault contract as
+    /// [`WorkerPool::try_wait_reduced`]).
+    pub fn try_wait_gathered(&self) -> anyhow::Result<(u32, Vec<f32>, GatherStats)> {
         match self.lanes.wait() {
-            CollectiveResult::Gathered(v, gs) => (v, gs),
-            CollectiveResult::Reduced(_) => {
+            CollectiveResult::Gathered {
+                bucket,
+                vals,
+                stats,
+            } => Ok((bucket, vals, stats)),
+            CollectiveResult::Reduced { .. } => {
                 panic!("expected a gather result, got a ring result")
             }
             CollectiveResult::Failed(e) => {
-                panic!("loopback socket collective failed: {e}")
+                anyhow::bail!("collective failed on a comm lane: {e}")
             }
         }
+    }
+
+    /// Infallible monolithic wrapper of [`WorkerPool::try_wait_reduced`]
+    /// for tests/benches that drive the pool directly (channel lanes
+    /// cannot fail).
+    pub fn wait_reduced(&self) -> Vec<f32> {
+        let (bucket, vals) = self
+            .try_wait_reduced()
+            .expect("loopback socket collective failed");
+        debug_assert_eq!(bucket, 0, "monolithic collectives carry bucket 0");
+        vals
+    }
+
+    /// Infallible monolithic wrapper of [`WorkerPool::try_wait_gathered`].
+    pub fn wait_gathered(&self) -> (Vec<f32>, GatherStats) {
+        let (bucket, vals, stats) = self
+            .try_wait_gathered()
+            .expect("loopback socket collective failed");
+        debug_assert_eq!(bucket, 0, "monolithic collectives carry bucket 0");
+        (vals, stats)
     }
 
     /// Clone every worker's memory out of its lane. FIFO with respect to
@@ -297,6 +400,11 @@ impl Drop for WorkerPool {
 fn compute_lane_loop(mut mem: EfMemory, rx: Receiver<Cmd>, job_tx: Sender<CommJob>) {
     // This step's gradient, held between BeginStep and Finish*.
     let mut stash: Option<Vec<f32>> = None;
+    // Bucketed steps: (bucket, offset, grad slice) triplets, one per
+    // in-flight bucket. Begin/Finish pairs arrive FIFO per bucket and
+    // buckets are submitted in a fixed order, so a queue suffices; the
+    // tags are asserted on pop to catch a desynchronized driver.
+    let mut bucket_stash: VecDeque<(u32, usize, Vec<f32>)> = VecDeque::new();
     while let Ok(cmd) = rx.recv() {
         match cmd {
             Cmd::BeginStep { grad, reply } => {
@@ -311,18 +419,58 @@ fn compute_lane_loop(mut mem: EfMemory, rx: Receiver<Cmd>, job_tx: Sender<CommJo
                 // Forward first so the collective starts while this lane
                 // applies the memory update (Eqn. 5) — the update depends
                 // only on (grad, idx), never on the reduced values.
-                job_tx.send(CommJob::RingAvg(vals)).expect("comm lane send");
+                job_tx
+                    .send(CommJob::RingAvg { bucket: 0, buf: vals })
+                    .expect("comm lane send");
                 let grad = stash.take().expect("FinishShared without BeginStep");
                 mem.update_after_send(&grad, idx.as_slice());
             }
             Cmd::FinishGather { sparse } => {
                 let idx = sparse.indices.clone();
-                job_tx.send(CommJob::Gather(sparse)).expect("comm lane send");
+                job_tx
+                    .send(CommJob::Gather { bucket: 0, sparse })
+                    .expect("comm lane send");
                 let grad = stash.take().expect("FinishGather without BeginStep");
                 mem.update_after_send(&grad, &idx);
             }
             Cmd::Dense { grad } => {
-                job_tx.send(CommJob::RingAvg(grad)).expect("comm lane send");
+                job_tx
+                    .send(CommJob::RingAvg { bucket: 0, buf: grad })
+                    .expect("comm lane send");
+            }
+            Cmd::BeginBucket {
+                bucket,
+                offset,
+                grad,
+                reply,
+            } => {
+                let ef = mem.ef_grad_range(offset, &grad);
+                bucket_stash.push_back((bucket, offset, grad));
+                let _ = reply.send(ef);
+            }
+            Cmd::FinishSharedBucket { bucket, idx, vals } => {
+                // Forward first (the overlap), then the slice update —
+                // disjoint buckets commute, so per-bucket updates leave
+                // exactly the monolithic memory.
+                job_tx
+                    .send(CommJob::RingAvg { bucket, buf: vals })
+                    .expect("comm lane send");
+                let (b, offset, grad) = bucket_stash
+                    .pop_front()
+                    .expect("FinishSharedBucket without BeginBucket");
+                assert_eq!(b, bucket, "bucket finish out of order");
+                mem.update_after_send_range(offset, &grad, idx.as_slice());
+            }
+            Cmd::FinishGatherBucket { bucket, sparse } => {
+                let idx = sparse.indices.clone();
+                job_tx
+                    .send(CommJob::Gather { bucket, sparse })
+                    .expect("comm lane send");
+                let (b, offset, grad) = bucket_stash
+                    .pop_front()
+                    .expect("FinishGatherBucket without BeginBucket");
+                assert_eq!(b, bucket, "bucket finish out of order");
+                mem.update_after_send_range(offset, &grad, &idx);
             }
             Cmd::Snapshot { reply } => {
                 let _ = reply.send(mem.clone());
@@ -486,6 +634,69 @@ mod tests {
         for expect in &expected_rounds {
             let got = pool.wait_reduced();
             assert!(allclose(&got, expect, 1e-5, 1e-6).is_ok());
+        }
+    }
+
+    #[test]
+    fn bucketed_pool_commands_tile_to_the_monolithic_step() {
+        // Drive one step as two buckets (backward order, both collectives
+        // in flight before either wait) and as one monolithic step: the
+        // memories must be bit-identical, the reduced values must agree
+        // within the ring reduction-order tolerance, and results must
+        // come back in submission order with their tags.
+        let n = 3;
+        let dim = 40;
+        let split = 24; // bucket 0 = [0, 24), bucket 1 = [24, 40)
+        let k = 4;
+        let grads = rand_grads(21, n, dim);
+        let bucketed = pool_of(n, dim, 0.5);
+        let mono = pool_of(n, dim, 0.5);
+
+        // monolithic reference
+        let efs = mono.begin_step(&grads);
+        let idx_global = {
+            let mut lo = crate::util::select::top_k_indices_by_magnitude(&efs[0][..split], k);
+            let hi = crate::util::select::top_k_indices_by_magnitude(&efs[0][split..], k);
+            lo.extend(hi.iter().map(|&i| i + split as u32));
+            lo
+        };
+        let vals: Vec<Vec<f32>> = efs
+            .iter()
+            .map(|ef| idx_global.iter().map(|&i| ef[i as usize]).collect())
+            .collect();
+        mono.finish_shared(&idx_global, vals);
+        let mono_reduced = mono.wait_reduced();
+
+        // bucketed: submit bucket 1 then bucket 0 (backward order)
+        let spans = [(0usize, split), (split, dim)];
+        for &b in &[1usize, 0] {
+            let (lo, hi) = spans[b];
+            let slices: Vec<Vec<f32>> = grads.iter().map(|g| g[lo..hi].to_vec()).collect();
+            let befs = bucketed.begin_bucket(b as u32, lo, slices);
+            for (w, ef) in befs.iter().enumerate() {
+                assert_eq!(ef.as_slice(), &efs[w][lo..hi], "bucket EF == sliced EF");
+            }
+            let idx_local: Vec<u32> = idx_global
+                .iter()
+                .filter(|&&i| (i as usize) >= lo && (i as usize) < hi)
+                .map(|&i| i - lo as u32)
+                .collect();
+            let bvals: Vec<Vec<f32>> = befs
+                .iter()
+                .map(|ef| idx_local.iter().map(|&i| ef[i as usize]).collect())
+                .collect();
+            bucketed.finish_shared_bucket(b as u32, &idx_local, bvals);
+        }
+        // results arrive in submission order, tags echoed
+        let (tag1, red1) = bucketed.try_wait_reduced().unwrap();
+        let (tag0, red0) = bucketed.try_wait_reduced().unwrap();
+        assert_eq!((tag1, tag0), (1, 0));
+        let mut stitched = red0;
+        stitched.extend(red1);
+        assert!(allclose(&stitched, &mono_reduced, 1e-5, 1e-6).is_ok());
+        // per-bucket slice updates leave exactly the monolithic memory
+        for (a, b) in bucketed.snapshot().iter().zip(&mono.snapshot()) {
+            assert_eq!(a.memory(), b.memory(), "bucketed memory must tile exactly");
         }
     }
 

@@ -20,11 +20,12 @@
 //! All four are deterministic — the mesh dataflow fixes every reduction
 //! order — and parity-locked by `rust/tests/backend_parity.rs`, so
 //! communication volume and convergence results are
-//! backend-independent. (The trainer drives
-//! steps synchronously because the optimizer needs g^t before the next
-//! forward/backward; the double-buffered `step_overlapped` mode is
-//! exercised by the collective benches, where the gradient stream does
-//! not depend on the updates.)
+//! backend-independent. The optimizer needs g^t before the next
+//! forward/backward, so cross-step lookahead (`step_overlapped`) is
+//! left to the collective benches — but with `--bucket-bytes` the
+//! trainer overlaps *inside* each step: `Coordinator::step_bucketed`
+//! walks layer-aligned buckets in backward order, each bucket's
+//! collective in flight while the next bucket's selection computes.
 //!
 //! `use_kernel` routes compression through the L1 Pallas artifacts
 //! (`<model>_compress` / `<model>_apply`) instead of the native Rust
@@ -37,7 +38,7 @@ pub mod schedule;
 pub use optimizer::{make_optimizer, Optimizer};
 pub use schedule::LrSchedule;
 
-use crate::comm::{Backend, Fabric, FabricConfig, Topology};
+use crate::comm::{Backend, BucketPlan, Fabric, FabricConfig, Topology};
 use crate::compress::{schemes::make_compressor, EfMemory, Selection, SparseGrad};
 use crate::config::train::TrainConfig;
 use crate::coordinator::{Coordinator, Mode, StepResult};
@@ -146,6 +147,28 @@ impl<'h> Trainer<'h> {
             );
             coordinator = coordinator.with_layered(partition, ks);
         }
+        // Bucketed exchange (`--bucket-bytes`): layer-aligned buckets
+        // over the model's layer partition, driven per bucket by
+        // `Coordinator::step_bucketed` so collectives overlap the rest
+        // of the step's selection compute. Bucketing rides on per-layer
+        // budgets (buckets are layer-aligned so selection decomposes
+        // exactly), so a flat-rate config gets the per-layer split of
+        // its rate here.
+        if cfg.bucket_bytes > 0 && cfg.compress.scheme != "none" {
+            let partition = model.mm.layers.clone();
+            if coordinator.layered.is_none() {
+                let ks = partition.per_layer_k(
+                    cfg.compress.rate as f64,
+                    cfg.batch_per_worker,
+                    false,
+                );
+                coordinator = coordinator.with_layered(partition.clone(), ks);
+            }
+            coordinator.set_bucket_plan(Some(BucketPlan::from_partition(
+                &partition,
+                cfg.bucket_bytes,
+            )));
+        }
 
         let optimizer =
             make_optimizer(cfg.optimizer, dim, cfg.momentum, cfg.weight_decay);
@@ -176,10 +199,24 @@ impl<'h> Trainer<'h> {
     /// Run the configured number of steps; returns the metrics log.
     pub fn run(&mut self) -> Result<RunLog> {
         anyhow::ensure!(
-            !(self.use_kernel && self.coordinator.backend() != Backend::Sequential),
-            "--kernel-compress runs the L1 Pallas path on the sequential \
-             collectives only; use --backend sequential (backend dispatch for \
-             the kernel path is a ROADMAP item)"
+            !(self.use_kernel && self.coordinator.backend().is_pooled()),
+            "--kernel-compress runs the L1 Pallas path on the in-process \
+             backends (sequential | threaded) — the persistent pool owns its \
+             memories lane-side, which the kernel's set_memory round-trip \
+             cannot reach; use --backend sequential or threaded"
+        );
+        // Bucketed overlap: with a multi-bucket plan the trainer drives
+        // the per-bucket scheduler — bucket b's collective is in flight
+        // while bucket b−1's selection computes — instead of the
+        // synchronous monolithic exchange.
+        let bucketed = self
+            .coordinator
+            .bucket_plan()
+            .map_or(false, |p| p.num_buckets() > 1);
+        anyhow::ensure!(
+            !(self.use_kernel && bucketed),
+            "--kernel-compress and --bucket-bytes are mutually exclusive (the \
+             Pallas compress artifact selects over the whole gradient)"
         );
         let mut log = RunLog::new(
             &format!(
@@ -237,8 +274,12 @@ impl<'h> Trainer<'h> {
                 && !self.dense_scheme()
             {
                 self.kernel_step(t, &grads)?
+            } else if bucketed {
+                // per-bucket overlap driver; lane faults (socket
+                // backend) surface as clean errors, not panics
+                self.coordinator.try_step_bucketed(t, &grads)?
             } else {
-                self.coordinator.step(t, &grads)
+                self.coordinator.try_step(t, &grads)?
             };
 
             // (3) optimizer
@@ -309,12 +350,17 @@ impl<'h> Trainer<'h> {
 
     /// CLT-k step through the L1 Pallas artifacts (leader compresses +
     /// selects, followers apply the leader's indices; memory updates come
-    /// back from the kernel).
+    /// back from the kernel). Runs on both in-process backends: the
+    /// kernel calls themselves execute on the PJRT engine (one device),
+    /// and the value exchange dispatches on the backend — the sequential
+    /// fabric loop, or the threaded backend's real channel-ring
+    /// collective over scoped worker threads, booked through the same
+    /// `record_*` cost entry point (the parity contract).
     fn kernel_step(&mut self, t: usize, grads: &[Vec<f32>]) -> Result<StepResult> {
         let n = grads.len();
         let dim = self.model.mm.dim;
         let leader = t % n;
-        // kernel path is sequential-backend-only (guarded in `run`), so
+        // kernel path is in-process-backend-only (guarded in `run`), so
         // the memories are coordinator-local and directly borrowable
         let beta = self.coordinator.memories()[0].beta();
 
@@ -341,10 +387,27 @@ impl<'h> Trainer<'h> {
             new_mems[w] = Some(mem);
         }
         let sparses: Vec<SparseGrad> = sparses.into_iter().map(|s| s.unwrap()).collect();
-        let avg = self
-            .coordinator
-            .fabric
-            .sparse_allreduce_shared(&sparses, leader);
+        let avg = match self.coordinator.backend() {
+            Backend::Sequential => self
+                .coordinator
+                .fabric
+                .sparse_allreduce_shared(&sparses, leader),
+            Backend::Threaded => {
+                // ring all-reduce of the k selected values on scoped
+                // worker threads — the same collective the threaded
+                // top-k hot path uses — with identical cost booking
+                let vals: Vec<Vec<f32>> =
+                    sparses.iter().map(|s| s.values.clone()).collect();
+                let reduced = crate::runtime::threaded::dense_allreduce_avg(&vals);
+                self.coordinator
+                    .fabric
+                    .record_sparse_allreduce_shared(n, idx.len());
+                SparseGrad::new(dim, idx.clone(), reduced)
+            }
+            Backend::Pipelined | Backend::Socket => {
+                unreachable!("kernel path guarded to in-process backends in run()")
+            }
+        };
         for (mem, new) in self
             .coordinator
             .memories_mut()

@@ -26,7 +26,7 @@
 //! CI runs this suite once per backend via `SCALECOM_TEST_BACKENDS`
 //! (comma-separated labels); unset, every concurrent backend is tested.
 
-use scalecom::comm::{Backend, Fabric, FabricConfig, Topology};
+use scalecom::comm::{Backend, BucketPlan, Fabric, FabricConfig, Topology};
 use scalecom::compress::rate::LayerSlice;
 use scalecom::compress::{schemes::make_compressor, LayerPartition};
 use scalecom::coordinator::{Coordinator, Mode, StepResult};
@@ -315,6 +315,182 @@ fn pipelined_streaming_matches_sequential_per_step() {
             assert_memory_parity(&ctx, &seq, &pipe);
             assert_eq!(seq.fabric.stats().ops, pipe.fabric.stats().ops, "{ctx}");
         }
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// Bucketed axis: the per-bucket overlap driver (`step_bucketed`) joins
+// the matrix. Contract: for a fixed layered config and bucket plan,
+// every backend's bucketed run matches the sequential bucketed reference
+// (selections/rates/CommStats exact, gather bit-identical, ring values
+// within rtol/atol), and the 1-bucket plan is bit-identical to the
+// monolithic path.
+// ----------------------------------------------------------------------
+
+/// Four layers of uneven sizes over `dim = 96`, each with its own
+/// budget — the layered config every bucketed case runs on.
+fn bucketed_fixture() -> (LayerPartition, Vec<usize>) {
+    let lens = [16usize, 40, 8, 32];
+    let mut layers = Vec::new();
+    let mut off = 0;
+    for (i, &len) in lens.iter().enumerate() {
+        layers.push(LayerSlice {
+            name: format!("layer{i}"),
+            offset: off,
+            len,
+            // layer2 rides dense (the paper exempts sensitive layers)
+            flops_per_sample: 0.0,
+            compress: i != 2,
+        });
+        off += len;
+    }
+    let partition = LayerPartition::from_layers(layers);
+    let ks = vec![4usize, 6, 8, 5];
+    (partition, ks)
+}
+
+/// Bucket caps that produce 1, 2, and 4 buckets over the fixture.
+fn plans_under_test(partition: &LayerPartition) -> Vec<BucketPlan> {
+    let plans: Vec<BucketPlan> = [0usize, 56 * 4, 16 * 4]
+        .iter()
+        .map(|&cap| BucketPlan::from_partition(partition, cap))
+        .collect();
+    assert_eq!(plans[0].num_buckets(), 1, "cap 0 = monolithic plan");
+    assert_eq!(plans[1].num_buckets(), 2);
+    assert_eq!(plans[2].num_buckets(), 4, "tight cap = one bucket per layer");
+    plans
+}
+
+fn run_bucketed_parity(scheme: &str, n: usize, backend: Backend, plan: &BucketPlan, steps: usize) {
+    let dim = 96;
+    let rate = 8;
+    let warmup = 3; // cover the dense-warmup fallback inside step_bucketed
+    let (partition, ks) = bucketed_fixture();
+    let topo = if n % 2 == 0 { Topology::Ring } else { Topology::ParameterServer };
+    let ctx = format!(
+        "bucketed scheme={scheme} n={n} buckets={} backend={}",
+        plan.num_buckets(),
+        backend.label()
+    );
+    let mut seq = coordinator(scheme, n, dim, rate, warmup, topo, Backend::Sequential)
+        .with_layered(partition.clone(), ks.clone())
+        .with_buckets(plan.clone());
+    let mut other = coordinator(scheme, n, dim, rate, warmup, topo, backend)
+        .with_layered(partition, ks)
+        .with_buckets(plan.clone());
+    let mut rng = Rng::for_stream(0xB0C4, n as u64);
+    for t in 0..steps {
+        let grads = rand_grads(&mut rng, n, dim);
+        let a = seq.step_bucketed(t, &grads);
+        let b = other.step_bucketed(t, &grads);
+        assert_step_parity(&ctx, t, &a, &b);
+        if t == steps / 2 {
+            assert_memory_parity(&format!("{ctx} (mid-run t={t})"), &seq, &other);
+        }
+    }
+    assert_memory_parity(&format!("{ctx} (final)"), &seq, &other);
+    assert_eq!(
+        seq.fabric.stats().ops,
+        other.fabric.stats().ops,
+        "CommStats mismatch {ctx}"
+    );
+}
+
+#[test]
+fn bucketed_matrix_matches_sequential_reference() {
+    // schemes × backends × bucket counts (1, 2, 4): the bucketed driver
+    // obeys the same cross-backend contract as the monolithic step.
+    let (partition, _) = bucketed_fixture();
+    let plans = plans_under_test(&partition);
+    for backend in backends_under_test() {
+        for &scheme in &["scalecom", "scalecom-exact", "local-topk", "random-k"] {
+            for plan in &plans {
+                for &n in &[2usize, 4, 8] {
+                    run_bucketed_parity(scheme, n, backend, plan, 30);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn one_bucket_plan_is_bit_identical_to_the_monolithic_path() {
+    // The degenerate plan must not merely be close — it takes the exact
+    // monolithic code path, so every observable matches bit for bit on
+    // every backend.
+    let (partition, ks) = bucketed_fixture();
+    let single = BucketPlan::from_partition(&partition, 0);
+    for backend in backends_under_test() {
+        let n = 4;
+        let dim = 96;
+        let mk = |with_plan: bool| {
+            let c = coordinator("scalecom-exact", n, dim, 8, 0, Topology::Ring, backend)
+                .with_layered(partition.clone(), ks.clone());
+            if with_plan {
+                c.with_buckets(single.clone())
+            } else {
+                c
+            }
+        };
+        let mut mono = mk(false);
+        let mut buck = mk(true);
+        let mut rng = Rng::new(13);
+        for t in 0..20 {
+            let grads = rand_grads(&mut rng, n, dim);
+            let a = mono.step(t, &grads);
+            let b = buck.step_bucketed(t, &grads);
+            assert_eq!(a.update, b.update, "backend={} t={t}", backend.label());
+            assert_eq!(a.selection, b.selection, "backend={} t={t}", backend.label());
+            assert_eq!(a.comm, b.comm, "backend={} t={t}", backend.label());
+        }
+        assert_eq!(
+            mono.fabric.stats().ops,
+            buck.fabric.stats().ops,
+            "backend={}",
+            backend.label()
+        );
+    }
+}
+
+#[test]
+fn bucketed_selection_equals_monolithic_selection_on_every_backend() {
+    // Layer-aligned bucketing must never change WHAT is selected — only
+    // how the exchange is scheduled. (Updates are compared against the
+    // sequential bucketed reference in the matrix above; here the merged
+    // selection is locked against the monolithic layered step.)
+    let (partition, ks) = bucketed_fixture();
+    let plans = plans_under_test(&partition);
+    for backend in backends_under_test() {
+        for &scheme in &["scalecom-exact", "local-topk"] {
+            let n = 4;
+            let dim = 96;
+            let mut mono = coordinator(scheme, n, dim, 8, 0, Topology::Ring, Backend::Sequential)
+                .with_layered(partition.clone(), ks.clone());
+            let mut bucketed: Vec<Coordinator> = plans
+                .iter()
+                .map(|p| {
+                    coordinator(scheme, n, dim, 8, 0, Topology::Ring, backend)
+                        .with_layered(partition.clone(), ks.clone())
+                        .with_buckets(p.clone())
+                })
+                .collect();
+            let mut rng = Rng::new(101);
+            for t in 0..20 {
+                let grads = rand_grads(&mut rng, n, dim);
+                let a = mono.step(t, &grads);
+                for (p, c) in plans.iter().zip(bucketed.iter_mut()) {
+                    let b = c.step_bucketed(t, &grads);
+                    assert_eq!(
+                        a.selection,
+                        b.selection,
+                        "scheme={scheme} backend={} buckets={} t={t}",
+                        backend.label(),
+                        p.num_buckets()
+                    );
+                    assert_eq!(a.rate, b.rate, "scheme={scheme} t={t}");
+                }
+            }
         }
     }
 }
