@@ -40,8 +40,11 @@ use scalecom::compress::rate::LayerSlice;
 use scalecom::compress::schemes::CltK;
 use scalecom::compress::{LayerPartition, SparseGrad};
 use scalecom::coordinator::{Coordinator, Mode};
+use scalecom::json::Json;
 use scalecom::perfmodel;
+use scalecom::simnet::{self, SimConfig, TopologyProfile, SIM_SCHEMES};
 use scalecom::util::rng::Rng;
+use std::collections::BTreeMap;
 
 fn fabric(n: usize, topo: Topology) -> Fabric {
     Fabric::new(FabricConfig {
@@ -161,7 +164,7 @@ fn bench_bucketed(b: &mut Bencher, backend: Backend, n: usize, dim: usize, rate:
 
 /// Measured overlap efficiency of the pipelined engine vs the analytic
 /// max(compute, comm) model, at n = 2..16.
-fn bench_overlap(b: &mut Bencher, n: usize, dim: usize, rate: usize) {
+fn bench_overlap(b: &mut Bencher, n: usize, dim: usize, rate: usize, derived: &mut Vec<(String, f64)>) {
     let k = (dim / rate).max(1);
 
     // Tm: the staged collective alone, on a persistent mesh.
@@ -225,6 +228,7 @@ fn bench_overlap(b: &mut Bencher, n: usize, dim: usize, rate: usize) {
         model / 1e3,
         measured_eff
     );
+    derived.push((format!("overlap/n{n}_measured_efficiency"), measured_eff));
 }
 
 fn main() {
@@ -236,15 +240,31 @@ fn main() {
     let assert_overlap = args.iter().any(|a| a == "--assert-overlap");
     // Run ONLY the bucketed-exchange section (the CI bucketed smoke job).
     let bucketed_only = args.iter().any(|a| a == "--bucketed");
+    // Run ONLY the simnet scaling section (virtual time, no threads).
+    let simnet_only = args.iter().any(|a| a == "--simnet");
+    // Machine-readable results: every bench median + the derived
+    // speedups/efficiencies, so the perf trajectory is tracked across
+    // PRs (CI uploads the file as an artifact).
+    let json_path: Option<String> = args
+        .iter()
+        .position(|a| a == "--json")
+        .map(|i| args.get(i + 1).expect("--json requires a path").clone());
     let backends = scalecom::comm::parallel::backends_from_args(&args);
 
     let mut b = if quick { Bencher::quick() } else { Bencher::new() };
+    let mut derived: Vec<(String, f64)> = Vec::new();
     let dim: usize = if quick { 100_000 } else { 1_000_000 };
     let rate = 112;
     let k = dim / rate;
 
+    if simnet_only {
+        run_simnet_section(quick, &mut derived);
+        write_json(json_path.as_deref(), &b, &derived);
+        return;
+    }
     if bucketed_only {
-        run_bucketed_section(&mut b, &backends, quick, dim, rate);
+        run_bucketed_section(&mut b, &backends, quick, dim, rate, &mut derived);
+        write_json(json_path.as_deref(), &b, &derived);
         return;
     }
 
@@ -315,6 +335,7 @@ fn main() {
         find(&b, "pipeline/threaded/n8"),
     ) {
         println!("# pipeline n8 speedup (threaded vs sequential): {:.2}x", seq / thr);
+        derived.push(("pipeline/n8_threaded_vs_sequential_speedup".into(), seq / thr));
     }
     if let (Some(thr), Some(pipe)) = (
         find(&b, "pipeline/threaded/n8"),
@@ -326,6 +347,7 @@ fn main() {
             thr / pipe,
             pipe / thr
         );
+        derived.push(("pipeline/n8_pipelined_vs_threaded_speedup".into(), thr / pipe));
     }
     if let (Some(pipe), Some(sock)) = (
         find(&b, "pipeline/pipelined/n8"),
@@ -336,6 +358,7 @@ fn main() {
              time — the price of real framing + kernel round-trips",
             sock / pipe
         );
+        derived.push(("pipeline/n8_socket_vs_pipelined_ratio".into(), sock / pipe));
     }
     if assert_overlap {
         let thr = find(&b, "pipeline/threaded/n8")
@@ -343,11 +366,15 @@ fn main() {
         let pipe = find(&b, "pipeline/pipelined/n8")
             .expect("--assert-overlap needs the pipelined pipeline bench (drop --backend)");
         let ratio = pipe / thr;
+        derived.push(("pipeline/n8_overlap_gate_ratio".into(), ratio));
         if ratio > 0.90 {
             eprintln!(
                 "OVERLAP REGRESSION: pipelined/threaded step-time ratio \
                  {ratio:.2} > 0.90 at n=8 — the persistent pool lost its edge"
             );
+            // The perf snapshot is most valuable on the regressing run:
+            // flush what was measured before failing the gate.
+            write_json(json_path.as_deref(), &b, &derived);
             std::process::exit(1);
         }
         println!("# overlap gate OK: pipelined/threaded step-time ratio {ratio:.2} <= 0.90");
@@ -357,18 +384,91 @@ fn main() {
     if backends.contains(&Backend::Pipelined) {
         println!("# overlap: sync = submit+wait, stream = double-buffered, comm_only = staged lanes");
         for n in [2usize, 4, 8, 16] {
-            bench_overlap(&mut b, n, dim, rate);
+            bench_overlap(&mut b, n, dim, rate, &mut derived);
         }
     }
 
     // --- bucketed exchange: per-bucket scheduler vs monolithic ----------
-    run_bucketed_section(&mut b, &backends, quick, dim, rate);
+    run_bucketed_section(&mut b, &backends, quick, dim, rate, &mut derived);
+
+    // --- simnet: the paper-style scaling curve in virtual time ----------
+    run_simnet_section(quick, &mut derived);
+
+    write_json(json_path.as_deref(), &b, &derived);
+}
+
+/// Paper-style scaling curve for every scheme at n ∈ {8, 16, 64, 256}:
+/// the real selection/EF code runs at scales the host cannot thread,
+/// with communication charged against the uniform topology profile in
+/// deterministic virtual time (`simnet`).
+fn run_simnet_section(quick: bool, derived: &mut Vec<(String, f64)>) {
+    let profile = TopologyProfile::uniform();
+    let ns: &[usize] = if quick { &[8, 64] } else { &[8, 16, 64, 256] };
+    println!(
+        "# simnet = real coordination code under simulated link timing \
+         (virtual ms/step, uniform profile)"
+    );
+    for scheme in SIM_SCHEMES {
+        let mut row = format!("# simnet {scheme:<12}");
+        for &n in ns {
+            let cfg = SimConfig {
+                workers: n,
+                dim: if quick { 16_384 } else { 65_536 },
+                scheme: scheme.to_string(),
+                rate: 112,
+                steps: 3,
+                layers: 16,
+                ..SimConfig::default()
+            };
+            let r = simnet::simulate(&cfg, &profile).expect("simnet simulate");
+            let ms = r.mean_step_s() * 1e3;
+            row.push_str(&format!("  n{n}={ms:.3}ms"));
+            derived.push((format!("simnet/{scheme}/n{n}_step_ms"), ms));
+        }
+        println!("{row}");
+    }
+}
+
+/// Write every bench median plus the derived metrics as JSON (the
+/// `--json <path>` satellite; CI uploads it as `BENCH_allreduce.json`).
+fn write_json(path: Option<&str>, b: &Bencher, derived: &[(String, f64)]) {
+    let Some(path) = path else { return };
+    let results: Vec<Json> = b
+        .results()
+        .iter()
+        .map(|r| {
+            let mut m = BTreeMap::new();
+            m.insert("name".to_string(), Json::Str(r.name.clone()));
+            m.insert("median_ns".to_string(), Json::Num(r.median_ns));
+            m.insert("p10_ns".to_string(), Json::Num(r.p10_ns));
+            m.insert("p90_ns".to_string(), Json::Num(r.p90_ns));
+            m.insert("iters".to_string(), Json::Num(r.iters as f64));
+            Json::Obj(m)
+        })
+        .collect();
+    let mut d = BTreeMap::new();
+    for (key, val) in derived {
+        d.insert(key.clone(), Json::Num(*val));
+    }
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("allreduce".to_string()));
+    root.insert("results".to_string(), Json::Arr(results));
+    root.insert("derived".to_string(), Json::Obj(d));
+    std::fs::write(path, Json::Obj(root).to_string_pretty()).expect("write --json output");
+    println!("# wrote {path}");
 }
 
 /// Bucketed section, shared between the full run and `--bucketed`:
 /// every selected backend at n = 2..16, with the n=8 measured overlap
 /// efficiency reported against `perfmodel::step_time_bucketed`.
-fn run_bucketed_section(b: &mut Bencher, backends: &[Backend], quick: bool, dim: usize, rate: usize) {
+fn run_bucketed_section(
+    b: &mut Bencher,
+    backends: &[Backend],
+    quick: bool,
+    dim: usize,
+    rate: usize,
+    derived: &mut Vec<(String, f64)>,
+) {
     let buckets = 8usize;
     println!(
         "# bucketed = layered CLT-k step driven per bucket (step_bucketed, backward order) \
@@ -398,6 +498,14 @@ fn run_bucketed_section(b: &mut Bencher, backends: &[Backend], quick: bool, dim:
                     t_mono / t_buck,
                     serial.total_s / bucketed_model.total_s
                 );
+                derived.push((
+                    format!("bucketed/{}/n8_measured_efficiency", backend.label()),
+                    t_mono / t_buck,
+                ));
+                derived.push((
+                    format!("bucketed/{}/n8_model_efficiency", backend.label()),
+                    serial.total_s / bucketed_model.total_s,
+                ));
             }
         }
     }

@@ -124,6 +124,20 @@ SUBCOMMANDS:
                        selection compute (0 = monolithic; implies
                        per-layer budgets)
                      --config file.toml (flags override file)
+  simulate         run the real coordination code at paper scale under
+                   simulated link timing (deterministic virtual time)
+                     --workers N (default 64) or --sweep-workers 8,16,64,256
+                     --scheme all|local-topk|scalecom|gtop-k|sketch-k|true-topk
+                     --profile uniform|hetero|hier|straggler|path/to.toml
+                     --dim N --rate R --steps N --layers L --seed S
+                     --bucket-bytes N --overlapped --compute-per-elem-ns X
+                     --trace (print the per-bucket event timeline)
+  tune             pick --bucket-bytes: calibrate compute from real
+                   steps, sweep every bucket plan (+ the overlapped
+                   driving mode) through the simulator, print the winner
+                     --workers N --dim N --scheme S --rate R --layers L
+                     --profile ... --steps N --calibration-steps N
+                     --compute-per-elem-ns X (skip calibration)
   node             one node of a multi-process socket ring (N processes,
                    localhost or N hosts); rank 0 emits the parity digest
                      --role coordinator|worker

@@ -141,8 +141,26 @@ pub fn ring(n: usize) -> Vec<RingNode> {
 }
 
 /// Balanced chunk boundaries: chunk `c` covers `[c*len/n, (c+1)*len/n)`.
-fn chunk_bounds(len: usize, n: usize) -> Vec<(usize, usize)> {
+/// Public because the virtual-time simulator (`simnet`) replays the ring
+/// schedule message-for-message and must charge the exact chunk sizes
+/// the real collective moves.
+pub fn chunk_bounds(len: usize, n: usize) -> Vec<(usize, usize)> {
     (0..n).map(|c| (c * len / n, (c + 1) * len / n)).collect()
+}
+
+/// Reduce-scatter round `s` of the ring schedule: the `(send, recv)`
+/// chunk ids for worker `id`. One definition shared by the executing
+/// collective ([`ring_allreduce_generic`]) and the `simnet` replay, so
+/// the simulated timeline charges exactly the messages the real ring
+/// moves.
+pub fn reduce_scatter_round(id: usize, n: usize, s: usize) -> (usize, usize) {
+    ((id + n - s) % n, (id + n - s - 1) % n)
+}
+
+/// All-gather round `s` of the ring schedule (see
+/// [`reduce_scatter_round`]).
+pub fn all_gather_round(id: usize, n: usize, s: usize) -> (usize, usize) {
+    ((id + 1 + n - s) % n, (id + n - s) % n)
 }
 
 /// The ring all-reduce schedule, generic over how a chunk crosses to the
@@ -170,8 +188,7 @@ pub(crate) fn ring_allreduce_generic(
     // holds s+2 contributions; after n-1 steps worker w owns the
     // complete sum of chunk (w+1)%n.
     for s in 0..n - 1 {
-        let send_c = (id + n - s) % n;
-        let recv_c = (id + n - s - 1) % n;
+        let (send_c, recv_c) = reduce_scatter_round(id, n, s);
         let (lo, hi) = bounds[send_c];
         send(&buf[lo..hi])?;
         let incoming = recv()?;
@@ -190,8 +207,7 @@ pub(crate) fn ring_allreduce_generic(
     finish(&mut buf[lo..hi]);
     // All-gather: circulate the completed chunks.
     for s in 0..n - 1 {
-        let send_c = (id + 1 + n - s) % n;
-        let recv_c = (id + n - s) % n;
+        let (send_c, recv_c) = all_gather_round(id, n, s);
         let (lo, hi) = bounds[send_c];
         send(&buf[lo..hi])?;
         let incoming = recv()?;
@@ -426,7 +442,7 @@ impl CommLanes {
                 star(n).into_iter().map(LaneStar::Channel).collect(),
             ),
             LaneTransport::Socket => {
-                let timeout = crate::comm::socket::default_timeout();
+                let timeout = crate::comm::socket::default_timeout()?;
                 (
                     crate::comm::socket::local_ring(n, timeout)?
                         .into_iter()

@@ -43,15 +43,37 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 /// Read/rendezvous timeout: `SCALECOM_SOCKET_TIMEOUT_SECS` (integer
-/// seconds, min 1) or 30 s. Bounds every blocking socket wait, so a
-/// wedged peer becomes a clean error instead of a hang.
-pub fn default_timeout() -> Duration {
-    let secs = std::env::var("SCALECOM_SOCKET_TIMEOUT_SECS")
-        .ok()
-        .and_then(|s| s.parse::<u64>().ok())
-        .unwrap_or(30)
-        .max(1);
-    Duration::from_secs(secs)
+/// seconds, >= 1) or 30 s when unset. Bounds every blocking socket
+/// wait, so a wedged peer becomes a clean error instead of a hang.
+/// A *set but invalid* value (0, negative, non-numeric) is a hard error
+/// rather than a silent fallback: an operator who typed the variable
+/// meant it, and a typo quietly becoming "30 seconds" (or 0 becoming
+/// "fail every read instantly") is exactly the kind of config drift
+/// multi-host deployments cannot debug.
+pub fn default_timeout() -> anyhow::Result<Duration> {
+    let raw = std::env::var("SCALECOM_SOCKET_TIMEOUT_SECS").ok();
+    parse_timeout_secs(raw.as_deref())
+}
+
+/// The pure parse behind [`default_timeout`] (`None` = variable unset).
+pub fn parse_timeout_secs(raw: Option<&str>) -> anyhow::Result<Duration> {
+    match raw {
+        None => Ok(Duration::from_secs(30)),
+        Some(s) => {
+            let secs: u64 = s.trim().parse().map_err(|_| {
+                anyhow::anyhow!(
+                    "SCALECOM_SOCKET_TIMEOUT_SECS must be a whole number of \
+                     seconds >= 1, got '{s}'"
+                )
+            })?;
+            anyhow::ensure!(
+                secs >= 1,
+                "SCALECOM_SOCKET_TIMEOUT_SECS must be >= 1 second (0 would \
+                 fail every socket wait instantly), got '{s}'"
+            );
+            Ok(Duration::from_secs(secs))
+        }
+    }
 }
 
 // ----------------------------------------------------------------------
@@ -661,6 +683,30 @@ mod tests {
     use crate::util::rng::Rng;
 
     const T: Duration = Duration::from_secs(10);
+
+    #[test]
+    fn timeout_parse_accepts_positive_seconds_and_defaults_when_unset() {
+        assert_eq!(parse_timeout_secs(None).unwrap(), Duration::from_secs(30));
+        assert_eq!(
+            parse_timeout_secs(Some("5")).unwrap(),
+            Duration::from_secs(5)
+        );
+        assert_eq!(
+            parse_timeout_secs(Some(" 120 ")).unwrap(),
+            Duration::from_secs(120)
+        );
+    }
+
+    #[test]
+    fn timeout_parse_rejects_zero_and_garbage_loudly() {
+        for bad in ["0", "-3", "2.5", "ten", ""] {
+            let err = parse_timeout_secs(Some(bad)).unwrap_err();
+            assert!(
+                err.to_string().contains("SCALECOM_SOCKET_TIMEOUT_SECS"),
+                "'{bad}' -> {err}"
+            );
+        }
+    }
 
     /// Run `f(node, w)` on one thread per socket ring node.
     fn on_ring<TOut: Send>(

@@ -389,6 +389,19 @@ impl Coordinator {
         t: usize,
         grads: &[Vec<f32>],
     ) -> anyhow::Result<Option<StepResult>> {
+        // The two driving modes are exclusive, loudly: the per-bucket
+        // scheduler (`--bucket-bytes`) owns the comm lanes *within* a
+        // step, while the double-buffered lookahead keeps a whole step's
+        // collective in flight *across* steps — composing them would
+        // interleave bucket-tagged and monolithic results on the same
+        // lanes. (ROADMAP "cross-step composition" follow-up.)
+        anyhow::ensure!(
+            self.bucket_plan.as_ref().map_or(true, |p| p.is_single()),
+            "the bucketed exchange (--bucket-bytes > 0) cannot be combined \
+             with the double-buffered step_overlapped driving mode; drop \
+             --bucket-bytes to stream steps, or drive the coordinator with \
+             step()/step_bucketed()"
+        );
         self.ensure_healthy()?;
         if self.backend.is_pooled() {
             self.submit(t, grads);
@@ -1575,6 +1588,38 @@ mod tests {
                 .count(),
             6
         );
+    }
+
+    #[test]
+    fn overlapped_mode_with_multi_bucket_plan_is_a_clean_error() {
+        // The modes used to be silently exclusive: step_overlapped would
+        // happily run monolithically with a multi-bucket plan installed.
+        // Now it refuses with a pointer to the flag.
+        let dim = 32;
+        let (partition, ks) = two_layer_partition(dim);
+        let plan = crate::comm::BucketPlan::from_partition(&partition, partition.layers[0].len * 4);
+        assert!(plan.num_buckets() > 1);
+        let mut c = Coordinator::new(
+            2,
+            dim,
+            Mode::Compressed(Box::new(CltK::exact())),
+            1.0,
+            4,
+            fabric(2),
+            0,
+        )
+        .with_layered(partition.clone(), ks)
+        .with_buckets(plan);
+        let mut rng = Rng::new(4);
+        let err = c
+            .try_step_overlapped(0, &rand_grads(&mut rng, 2, dim))
+            .unwrap_err();
+        assert!(err.to_string().contains("--bucket-bytes"), "{err}");
+        assert!(!c.in_flight(), "refusal must not leave anything in flight");
+        // a single-bucket plan stays compatible (it IS the monolithic path)
+        c.set_bucket_plan(Some(crate::comm::BucketPlan::from_partition(&partition, 0)));
+        assert!(c.try_step_overlapped(0, &rand_grads(&mut rng, 2, dim)).is_ok());
+        let _ = c.finish_overlapped();
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! `scalecom` — launcher CLI for the ScaleCom (NeurIPS 2020) reproduction.
 //!
-//! Subcommands: train, experiment, perf-model, compress-bench,
-//! artifacts-check, list. See `cli::USAGE`.
+//! Subcommands: train, simulate, tune, experiment, perf-model,
+//! compress-bench, artifacts-check, list. See `cli::USAGE`.
 
 use anyhow::Result;
 use scalecom::cli::{Args, USAGE};
@@ -14,6 +14,7 @@ use scalecom::models::zoo::ALL_ZOO_MODELS;
 use scalecom::perfmodel::{step_time, Scheme, SystemConfig};
 use scalecom::runtime::socket::{run_node, NodeSpec, NodeWorkload};
 use scalecom::runtime::{default_artifacts_dir, Engine, Manifest};
+use scalecom::simnet::{self, SimConfig, TopologyProfile, TuneConfig, SIM_SCHEMES};
 use scalecom::trainer::{LrSchedule, Trainer};
 use std::time::Duration;
 
@@ -32,6 +33,8 @@ fn run() -> Result<()> {
     let mut args = Args::from_env()?;
     match args.subcommand.clone().as_deref() {
         Some("train") => cmd_train(&mut args),
+        Some("simulate") => cmd_simulate(&mut args),
+        Some("tune") => cmd_tune(&mut args),
         Some("node") => cmd_node(&mut args),
         Some("experiment") => cmd_experiment(&mut args),
         Some("perf-model") => cmd_perf_model(&mut args),
@@ -158,6 +161,194 @@ fn cmd_train(args: &mut Args) -> Result<()> {
     );
     let path = log.save_csv(std::path::Path::new("results"))?;
     println!("metrics: {}", path.display());
+    Ok(())
+}
+
+/// Paper-scale runs of the real coordination code under simulated
+/// link timing: every scheme × worker count deterministically, with a
+/// trace digest locking the timeline and a selection digest locking the
+/// values to the sequential backend.
+fn cmd_simulate(args: &mut Args) -> Result<()> {
+    let d = SimConfig::default();
+    let profile = TopologyProfile::resolve(&args.str_or("profile", "uniform"))?;
+    let workers = args.usize_or("workers", 64)?;
+    let sweep = args.str_opt("sweep-workers");
+    let scheme = args.str_or("scheme", "all");
+    let base = SimConfig {
+        workers,
+        dim: args.usize_or("dim", 65_536)?,
+        scheme: String::new(), // filled per run below
+        rate: args.usize_or("rate", d.rate)?,
+        steps: args.usize_or("steps", d.steps)?,
+        warmup_steps: args.usize_or("compress-warmup", 0)?,
+        beta: args.f64_or("beta", 1.0)? as f32,
+        seed: args.usize_or("seed", d.seed as usize)? as u64,
+        layers: args.usize_or("layers", d.layers)?,
+        bucket_bytes: args.usize_or("bucket-bytes", 0)?,
+        compute_per_elem_s: args.f64_or("compute-per-elem-ns", d.compute_per_elem_s * 1e9)?
+            * 1e-9,
+        overlapped: args.flag("overlapped"),
+    };
+    let show_trace = args.flag("trace");
+    args.finish()?;
+    let schemes: Vec<String> = if scheme == "all" {
+        SIM_SCHEMES.iter().map(|s| s.to_string()).collect()
+    } else {
+        vec![scheme]
+    };
+    let worker_counts: Vec<usize> = match sweep {
+        None => vec![workers],
+        Some(list) => {
+            let mut ns = Vec::new();
+            for part in list.split(',') {
+                let part = part.trim();
+                ns.push(part.parse::<usize>().map_err(|_| {
+                    anyhow::anyhow!("--sweep-workers expects comma-separated integers, got '{part}'")
+                })?);
+            }
+            anyhow::ensure!(!ns.is_empty(), "--sweep-workers list is empty");
+            ns
+        }
+    };
+    println!(
+        "simnet | profile={} dim={} rate={}x steps={} layers={} bucket-bytes={}{}",
+        profile.name,
+        base.dim,
+        base.rate,
+        base.steps,
+        base.layers,
+        base.bucket_bytes,
+        if base.overlapped { " overlapped" } else { "" }
+    );
+    let mut table = Table::new(&[
+        "scheme",
+        "n",
+        "step ms",
+        "compute ms",
+        "comm ms",
+        "comm frac",
+        "trace digest",
+        "selections",
+    ]);
+    for scheme in &schemes {
+        for &n in &worker_counts {
+            let mut cfg = base.clone();
+            cfg.scheme = scheme.clone();
+            cfg.workers = n;
+            let r = simnet::simulate(&cfg, &profile)?;
+            let steps = r.steps as f64;
+            let busy = r.compute_s + r.comm_s;
+            table.row(vec![
+                scheme.clone(),
+                n.to_string(),
+                format!("{:.3}", r.mean_step_s() * 1e3),
+                format!("{:.3}", r.compute_s / steps * 1e3),
+                format!("{:.3}", r.comm_s / steps * 1e3),
+                format!("{:.1}%", if busy > 0.0 { r.comm_s / busy * 100.0 } else { 0.0 }),
+                r.trace_digest(),
+                r.selection_digest(),
+            ]);
+            if show_trace {
+                for e in &r.trace {
+                    println!(
+                        "trace step={} bucket={} {:<16} [{:.3}us .. {:.3}us] {} bytes",
+                        e.step,
+                        e.bucket,
+                        e.op,
+                        e.start_s * 1e6,
+                        e.end_s * 1e6,
+                        e.bytes
+                    );
+                }
+            }
+        }
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+/// Bucket-plan autotuner: calibrate the compute cost from measured real
+/// steps, sweep every achievable bucket plan (and the overlapped
+/// driving mode) through the simulator, and print the winning
+/// `--bucket-bytes`.
+fn cmd_tune(args: &mut Args) -> Result<()> {
+    let d = TuneConfig::default();
+    let cfg = TuneConfig {
+        workers: args.usize_or("workers", d.workers)?,
+        dim: args.usize_or("dim", d.dim)?,
+        scheme: args.str_or("scheme", &d.scheme),
+        rate: args.usize_or("rate", d.rate)?,
+        layers: args.usize_or("layers", d.layers)?,
+        steps: args.usize_or("steps", d.steps)?,
+        seed: args.usize_or("seed", d.seed as usize)? as u64,
+        calibration_steps: args.usize_or("calibration-steps", d.calibration_steps)?,
+    };
+    let profile = TopologyProfile::resolve(&args.str_or("profile", "uniform"))?;
+    let cpe_override_ns = args.str_opt("compute-per-elem-ns");
+    args.finish()?;
+    let calibrated = cpe_override_ns.is_none();
+    let outcome = match cpe_override_ns {
+        Some(v) => {
+            let ns: f64 = v.parse().map_err(|_| {
+                anyhow::anyhow!("--compute-per-elem-ns expects a number, got '{v}'")
+            })?;
+            simnet::tune::tune_with_compute(&cfg, &profile, ns * 1e-9)?
+        }
+        None => simnet::tune(&cfg, &profile)?,
+    };
+    println!(
+        "tune | profile={} workers={} dim={} scheme={} rate={}x layers={} | \
+         compute {:.3} ns/element ({})",
+        profile.name,
+        cfg.workers,
+        cfg.dim,
+        cfg.scheme,
+        cfg.rate,
+        cfg.layers,
+        outcome.compute_per_elem_s * 1e9,
+        if calibrated { "calibrated from real steps" } else { "given" },
+    );
+    // Closed-form cross-check (perfmodel::step_time_bucketed's uniform
+    // shape): Tc from the calibration, Tm from the monolithic sweep
+    // point, prediction max(Tc, Tm) + min(Tc, Tm)/B.
+    let tc = cfg.dim as f64 * outcome.compute_per_elem_s;
+    let mono = outcome
+        .evals
+        .iter()
+        .find(|e| e.buckets == 1 && !e.overlapped)
+        .map(|e| e.mean_step_s);
+    let tm = mono.map(|m| (m - tc).max(0.0));
+    let mut table = Table::new(&["plan", "--bucket-bytes", "step ms", "vs best", "closed form ms"]);
+    for e in &outcome.evals {
+        let closed = match tm {
+            Some(tm) if !e.overlapped => {
+                format!("{:.3}", (tc.max(tm) + tc.min(tm) / e.buckets as f64) * 1e3)
+            }
+            Some(tm) => format!("{:.3}", tc.max(tm) * 1e3),
+            None => "-".into(),
+        };
+        table.row(vec![
+            e.label(),
+            e.bucket_bytes.to_string(),
+            format!("{:.3}", e.mean_step_s * 1e3),
+            format!("{:.2}x", e.mean_step_s / outcome.best.mean_step_s),
+            closed,
+        ]);
+    }
+    println!("{}", table.render());
+    if outcome.best.overlapped {
+        println!(
+            "best: {} — keep --bucket-bytes 0 and drive steps through \
+             step_overlapped (cross-step overlap wins on this profile)",
+            outcome.best.label()
+        );
+    } else {
+        println!(
+            "best: {} — train with --bucket-bytes {}",
+            outcome.best.label(),
+            outcome.best.bucket_bytes
+        );
+    }
     Ok(())
 }
 

@@ -652,6 +652,187 @@ mod wire_codec {
     }
 }
 
+/// Simnet determinism + analytic-model lock: same seed + same profile ⇒
+/// byte-identical event trace and selections bit-identical to the
+/// sequential backend; on uniform zero-latency links the bucketed
+/// virtual timeline matches `perfmodel::step_time_bucketed`'s closed
+/// form to 1e-9.
+#[cfg(test)]
+mod simnet_determinism {
+    use super::check;
+    use crate::comm::{Fabric, FabricConfig};
+    use crate::compress::make_compressor;
+    use crate::coordinator::{Coordinator, Mode};
+    use crate::perfmodel;
+    use crate::simnet::engine::{
+        simulate, synthetic_grads, uniform_partition, SimConfig, SIM_SCHEMES,
+    };
+    use crate::simnet::profile::{LinkProfile, StragglerProfile, TopologyProfile};
+
+    #[test]
+    fn same_seed_same_profile_identical_trace_and_selections() {
+        check("simnet determinism", 12, |g| {
+            let n = g.usize_in(2..=6);
+            let layers = g.usize_in(1..=6);
+            let dim = layers * g.usize_in(16..=64);
+            let scheme = SIM_SCHEMES[g.usize_in(0..=SIM_SCHEMES.len() - 1)];
+            let profile = TopologyProfile {
+                name: "prop".into(),
+                link: LinkProfile::new(
+                    1.0 + g.f32_in(0.0, 31.0) as f64,
+                    g.f32_in(0.0, 5.0) as f64,
+                ),
+                group_size: 0,
+                uplink: LinkProfile::new(8.0, 2.0),
+                slow_workers: if g.bool() {
+                    vec![g.usize_in(0..=n - 1)]
+                } else {
+                    Vec::new()
+                },
+                slow_factor: 1.0 + g.f32_in(0.0, 3.0) as f64,
+                straggler: StragglerProfile {
+                    prob: g.f32_in(0.0, 0.5) as f64,
+                    slowdown: 1.0 + g.f32_in(0.0, 4.0) as f64,
+                    jitter: g.f32_in(0.0, 0.2) as f64,
+                },
+                seed: g.usize_in(0..=1000) as u64,
+            };
+            let cfg = SimConfig {
+                workers: n,
+                dim,
+                scheme: scheme.into(),
+                rate: g.usize_in(2..=16),
+                steps: g.usize_in(1..=4),
+                warmup_steps: usize::from(g.bool()),
+                beta: 1.0,
+                seed: g.usize_in(0..=1_000_000) as u64,
+                layers,
+                bucket_bytes: if g.bool() { (dim / layers) * 4 } else { 0 },
+                compute_per_elem_s: 1e-8,
+                overlapped: false,
+            };
+            let a = simulate(&cfg, &profile).expect("simulate");
+            let b = simulate(&cfg, &profile).expect("simulate again");
+            assert_eq!(a.trace_digest(), b.trace_digest(), "{scheme}: trace");
+            assert_eq!(
+                a.selection_digest(),
+                b.selection_digest(),
+                "{scheme}: selections"
+            );
+            // Selections must be bit-identical to an independently-built
+            // sequential coordinator (monolithic driving) over the same
+            // synthetic stream — the values half of the contract, which
+            // also re-locks bucketed == monolithic selection parity.
+            let partition = uniform_partition(dim, layers);
+            let ks = partition.per_layer_k(cfg.rate as f64, 32, false);
+            let fabric = Fabric::new(FabricConfig {
+                workers: n,
+                ..FabricConfig::default()
+            });
+            let k = ((dim as f64 / cfg.rate as f64).ceil() as usize).max(1);
+            let mut reference = Coordinator::new(
+                n,
+                dim,
+                Mode::Compressed(make_compressor(scheme, cfg.rate, cfg.seed).expect("scheme")),
+                cfg.beta,
+                k,
+                fabric,
+                cfg.warmup_steps,
+            )
+            .with_layered(partition, ks);
+            for t in 0..cfg.steps {
+                let grads = synthetic_grads(cfg.seed, t, n, dim);
+                let r = reference.step(t, &grads);
+                assert_eq!(r.selection, a.selections[t], "{scheme} t={t}");
+            }
+        });
+    }
+
+    #[test]
+    fn uniform_links_match_step_time_bucketed_closed_form() {
+        // Uniform zero-latency links, no jitter, per-bucket k divisible
+        // by n: the engine's pipelined bucket timeline must close to
+        // max(Tc, Tm) + min(Tc, Tm)/B — asserted both directly against
+        // `perfmodel::bucketed_pipeline_total` and through
+        // `perfmodel::step_time_bucketed` on a SystemConfig engineered
+        // to the same (Tc, Tm).
+        let n = 4usize;
+        let layers = 4usize;
+        let dim = 4096usize;
+        let rate = 4usize; // per-layer k = 1024/4 = 256, divisible by n
+        let bw_gbps = 1.0;
+        let cpe = 2e-9;
+        let profile = TopologyProfile {
+            name: "closed-form".into(),
+            link: LinkProfile::new(bw_gbps, 0.0),
+            group_size: 0,
+            uplink: LinkProfile::new(bw_gbps, 0.0),
+            slow_workers: Vec::new(),
+            slow_factor: 1.0,
+            straggler: StragglerProfile::none(),
+            seed: 0,
+        };
+        let layer_bytes = (dim / layers) * 4;
+        for (cap, plan_buckets) in [(0usize, 1usize), (2 * layer_bytes, 2), (layer_bytes, 4)] {
+            let cfg = SimConfig {
+                workers: n,
+                dim,
+                scheme: "scalecom-exact".into(),
+                rate,
+                steps: 3,
+                warmup_steps: 0,
+                beta: 1.0,
+                seed: 9,
+                layers,
+                bucket_bytes: cap,
+                compute_per_elem_s: cpe,
+                overlapped: false,
+            };
+            let r = simulate(&cfg, &profile).expect("simulate");
+            // Analytic per-bucket intervals from the replayed schedule:
+            // tree index broadcast + 2(n-1) uniform ring chunk rounds.
+            let bucket_elems = dim / plan_buckets;
+            let k_b = bucket_elems / rate;
+            let bw = bw_gbps * 1e9;
+            let depth = (usize::BITS - (n - 1).leading_zeros()) as f64;
+            let tm_b = depth * (k_b * 4) as f64 / bw
+                + 2.0 * (n - 1) as f64 * ((k_b / n) * 4) as f64 / bw;
+            let tc_b = bucket_elems as f64 * cpe;
+            let intervals = vec![(tc_b, tm_b); plan_buckets];
+            let expect = perfmodel::bucketed_pipeline_total(&intervals);
+            for (t, &step_s) in r.per_step_s.iter().enumerate() {
+                assert!(
+                    ((step_s - expect) / expect).abs() < 1e-9,
+                    "B={plan_buckets} t={t}: sim {step_s} vs pipeline total {expect}"
+                );
+            }
+            // The same total through step_time_bucketed: engineer the
+            // system point so its serial Tc/Tm equal the simulated ones.
+            let tc = tc_b * plan_buckets as f64;
+            let tm = tm_b * plan_buckets as f64;
+            let net = crate::models::paper::paper_net("resnet50").expect("paper net");
+            let flops = net.train_flops_per_sample() * 8.0;
+            let sys = perfmodel::SystemConfig {
+                workers: n,
+                peak_tflops: 100.0,
+                compute_efficiency: flops / (100.0 * 1e12 * tc),
+                bandwidth_gbps: 2.0 * net.gradient_bytes() as f64 / (tm * 1e9),
+                minibatch_per_worker: 8,
+                compression: 112.0,
+                overlap: 0.0,
+            };
+            let model =
+                perfmodel::step_time_bucketed(&net, &sys, perfmodel::Scheme::None, plan_buckets);
+            let step_s = r.per_step_s[0];
+            assert!(
+                ((model.total_s - step_s) / step_s).abs() < 1e-9,
+                "B={plan_buckets}: step_time_bucketed {} vs sim {step_s}",
+                model.total_s
+            );
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,0 +1,1050 @@
+//! The virtual-clock engine: real coordination, simulated time.
+//!
+//! `simulate` drives the **real** `Coordinator` (sequential backend —
+//! the parity reference every other backend is locked against) over a
+//! deterministic synthetic gradient stream, so selections, error-feedback
+//! memories, and update values are exactly what the real system produces.
+//! What is simulated is *time*: every message of the collective schedules
+//! is charged against a [`TopologyProfile`]'s links on a virtual clock,
+//! with no OS threads and no wall-clock dependence — n = 256 learners
+//! simulate in milliseconds, deterministically.
+//!
+//! The replayed schedules are the real ones:
+//!
+//! - the ring reduce-scatter/all-gather uses the same `chunk_bounds` /
+//!   `reduce_scatter_round` / `all_gather_round` helpers as
+//!   `ring_allreduce_generic` (`comm::parallel`), so the simulator
+//!   charges exactly the messages the channel/socket meshes move
+//!   (locked by `sim_schedule_matches_real_ring_messages` below);
+//! - the star gather serializes per-worker uploads at the root and the
+//!   union download back out, the Fig 1(a) build-up shape;
+//! - the bucketed timeline follows `runtime::bucketed`'s backward-order
+//!   submit/wait recurrence — bucket b's exchange starts when both its
+//!   selection compute is done and the link is free from bucket b+1 —
+//!   which in the uniform case closes to `perfmodel::step_time_bucketed`'s
+//!   `max(Tc, Tm) + min(Tc, Tm)/B` (asserted to 1e-9 in
+//!   `src/proptest/mod.rs`).
+//!
+//! Compute is modeled as `bucket_elems × compute_per_elem_s × f(t)`
+//! where `f(t) = max_w` of the profile's seeded straggler/jitter factor
+//! (synchronous SGD waits for the slowest worker); `scalecom tune`
+//! calibrates `compute_per_elem_s` from measured real steps.
+
+use crate::comm::bucket::Bucket;
+use crate::comm::parallel::{all_gather_round, chunk_bounds, reduce_scatter_round};
+use crate::comm::{BucketPlan, Fabric, FabricConfig};
+use crate::compress::{make_compressor, LayerPartition, Selection};
+use crate::compress::rate::LayerSlice;
+use crate::coordinator::{Coordinator, Mode};
+use crate::simnet::profile::TopologyProfile;
+use crate::util::rng::Rng;
+
+/// The five paper-scale schemes `scalecom simulate` sweeps by default.
+pub const SIM_SCHEMES: [&str; 5] = [
+    "local-topk",
+    "scalecom",
+    "gtop-k",
+    "sketch-k",
+    "true-topk",
+];
+
+/// One simulated workload: the real coordination step's configuration
+/// plus the virtual compute model.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub workers: usize,
+    pub dim: usize,
+    /// Compression scheme name (`make_compressor`), or "none" for the
+    /// dense baseline.
+    pub scheme: String,
+    pub rate: usize,
+    pub steps: usize,
+    pub warmup_steps: usize,
+    pub beta: f32,
+    /// Seed of the synthetic gradient stream (independent of the
+    /// profile's straggler seed).
+    pub seed: u64,
+    /// Uniform layer count the gradient is split into (buckets are
+    /// layer-aligned, so this bounds the finest bucket plan).
+    pub layers: usize,
+    /// Bucketed exchange cap in bytes (0 = monolithic).
+    pub bucket_bytes: usize,
+    /// Virtual selection/EF compute cost per gradient element, seconds.
+    /// `scalecom tune` calibrates this from measured real steps.
+    pub compute_per_elem_s: f64,
+    /// Cross-step double-buffered driving mode (`step_overlapped`):
+    /// step t+1's compute overlaps step t's in-flight exchange.
+    /// Monolithic only — composing it with a multi-bucket plan is
+    /// rejected, mirroring `Coordinator::try_step_overlapped`.
+    pub overlapped: bool,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            workers: 8,
+            dim: 16_384,
+            scheme: "scalecom".into(),
+            rate: 100,
+            steps: 4,
+            warmup_steps: 0,
+            beta: 1.0,
+            seed: 42,
+            layers: 16,
+            bucket_bytes: 0,
+            // Stand-in until calibrated: ~2 ns/element covers the EF add
+            // + chunked scan on a current core.
+            compute_per_elem_s: 2e-9,
+            overlapped: false,
+        }
+    }
+}
+
+/// One timed interval of the virtual timeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub step: usize,
+    pub bucket: u32,
+    pub op: &'static str,
+    pub start_s: f64,
+    pub end_s: f64,
+    pub bytes: usize,
+}
+
+/// Everything one simulation run produced: real selections + virtual
+/// timing.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub scheme: String,
+    pub workers: usize,
+    pub steps: usize,
+    pub dim: usize,
+    /// End of the virtual timeline.
+    pub total_s: f64,
+    /// Summed per-step selection/EF compute wall (virtual).
+    pub compute_s: f64,
+    /// Summed exchange intervals (virtual; overlap means
+    /// `total_s <= compute_s + comm_s`).
+    pub comm_s: f64,
+    pub per_step_s: Vec<f64>,
+    /// The real coordinator's per-step merged selections (None = dense).
+    pub selections: Vec<Option<Selection>>,
+    pub trace: Vec<TraceEvent>,
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+impl SimReport {
+    pub fn mean_step_s(&self) -> f64 {
+        if self.per_step_s.is_empty() {
+            0.0
+        } else {
+            self.per_step_s.iter().sum::<f64>() / self.per_step_s.len() as f64
+        }
+    }
+
+    /// Canonical digest of the full event trace (same seed + same
+    /// profile ⇒ byte-identical). Timestamps are formatted at 12
+    /// significant digits, so the digest is stable across runs and
+    /// platforms with IEEE-754 doubles.
+    pub fn trace_digest(&self) -> String {
+        let mut h = fnv1a(
+            FNV_OFFSET,
+            format!("{} {} {} {}\n", self.scheme, self.workers, self.steps, self.dim).as_bytes(),
+        );
+        for e in &self.trace {
+            h = fnv1a(
+                h,
+                format!(
+                    "{} {} {} {:.12e} {:.12e} {}\n",
+                    e.step, e.bucket, e.op, e.start_s, e.end_s, e.bytes
+                )
+                .as_bytes(),
+            );
+        }
+        format!("{h:016x}")
+    }
+
+    /// Digest of the per-step selections — the values half of the
+    /// determinism contract (bit-identical to the sequential backend).
+    pub fn selection_digest(&self) -> String {
+        let mut h = FNV_OFFSET;
+        for sel in &self.selections {
+            match sel {
+                None => h = fnv1a(h, b"dense\n"),
+                Some(Selection::Shared(idx)) => {
+                    h = fnv1a(h, b"shared:");
+                    for &i in idx {
+                        h = fnv1a(h, &i.to_le_bytes());
+                    }
+                    h = fnv1a(h, b"\n");
+                }
+                Some(Selection::PerWorker(per)) => {
+                    h = fnv1a(h, b"per-worker:");
+                    for w in per {
+                        for &i in w {
+                            h = fnv1a(h, &i.to_le_bytes());
+                        }
+                        h = fnv1a(h, b";");
+                    }
+                    h = fnv1a(h, b"\n");
+                }
+            }
+        }
+        format!("{h:016x}")
+    }
+}
+
+/// The deterministic synthetic gradient stream: worker `w`'s step-`t`
+/// gradient is `normal(0, 1)` from stream `(seed + t, w)` — the same
+/// construction the multi-process socket workload uses, so every driver
+/// that wants to compare selections can regenerate it exactly.
+pub fn synthetic_grads(seed: u64, t: usize, n: usize, dim: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|w| {
+            let mut g = vec![0.0f32; dim];
+            Rng::for_stream(seed.wrapping_add(t as u64), w as u64).fill_normal(&mut g, 1.0);
+            g
+        })
+        .collect()
+}
+
+/// Uniform layer split of a `dim`-element gradient into `layers` layers
+/// (the first `dim % layers` layers take the remainder element each).
+pub fn uniform_partition(dim: usize, layers: usize) -> LayerPartition {
+    assert!(layers >= 1 && layers <= dim, "1 <= layers <= dim");
+    let base = dim / layers;
+    let rem = dim % layers;
+    let mut out = Vec::with_capacity(layers);
+    let mut offset = 0usize;
+    for i in 0..layers {
+        let len = base + usize::from(i < rem);
+        out.push(LayerSlice {
+            name: format!("seg{i}"),
+            offset,
+            len,
+            flops_per_sample: 0.0,
+            compress: true,
+        });
+        offset += len;
+    }
+    LayerPartition::from_layers(out)
+}
+
+// ----------------------------------------------------------------------
+// Link-level collective timing
+// ----------------------------------------------------------------------
+
+/// Replay the ring all-reduce schedule over the workers in `ids` (ring
+/// order), returning each participant's completion time. `ready[i]` is
+/// when participant `i` may start. Message sizes come from the same
+/// `chunk_bounds`/round helpers the executing collective uses; each
+/// round, participant `i` finishes when it has both finished the
+/// previous round and received its left neighbor's chunk over the
+/// `left → i` link (sends are async — writer queues — exactly like the
+/// channel and socket meshes).
+fn sim_ring_rounds(
+    profile: &TopologyProfile,
+    ids: &[usize],
+    elems: usize,
+    bytes_per_elem: usize,
+    ready: &[f64],
+) -> Vec<f64> {
+    let m = ids.len();
+    assert_eq!(ready.len(), m);
+    if m <= 1 {
+        return ready.to_vec();
+    }
+    let bounds = chunk_bounds(elems, m);
+    let mut done = ready.to_vec();
+    for phase in 0..2usize {
+        for s in 0..m - 1 {
+            let prev = done.clone();
+            for i in 0..m {
+                let left = (i + m - 1) % m;
+                let (_, recv_c) = if phase == 0 {
+                    reduce_scatter_round(i, m, s)
+                } else {
+                    all_gather_round(i, m, s)
+                };
+                let (lo, hi) = bounds[recv_c];
+                let t = profile
+                    .link_between(ids[left], ids[i])
+                    .time_for((hi - lo) * bytes_per_elem);
+                done[i] = prev[i].max(prev[left] + t);
+            }
+        }
+    }
+    done
+}
+
+/// Ring all-reduce of `elems` values across all `n` workers, starting at
+/// `start` (barrier semantics: synchronous SGD waits for the slowest
+/// participant, so the exchange begins when every worker is ready).
+/// Flat profiles run one ring; hierarchical profiles run the
+/// ring-of-rings — intra-group reduce, inter-group ring over the group
+/// leaders on the uplink, then an intra-group broadcast back. Returns
+/// the time the last worker holds the result.
+fn sim_ring_allreduce(
+    profile: &TopologyProfile,
+    n: usize,
+    elems: usize,
+    bytes_per_elem: usize,
+    start: f64,
+) -> f64 {
+    if n <= 1 {
+        return start;
+    }
+    if !profile.hierarchical_for(n) {
+        let ids: Vec<usize> = (0..n).collect();
+        return sim_ring_rounds(profile, &ids, elems, bytes_per_elem, &vec![start; n])
+            .into_iter()
+            .fold(start, f64::max);
+    }
+    let g = profile.group_size;
+    let ngroups = n / g;
+    // Intra-group all-reduce: every member ends holding the group sum.
+    let mut member_done = vec![start; n];
+    for grp in 0..ngroups {
+        let ids: Vec<usize> = (grp * g..(grp + 1) * g).collect();
+        let done = sim_ring_rounds(profile, &ids, elems, bytes_per_elem, &vec![start; g]);
+        for (j, &id) in ids.iter().enumerate() {
+            member_done[id] = done[j];
+        }
+    }
+    // Inter-group ring over the group leaders (first member of each
+    // group); every leader-to-leader hop crosses the uplink.
+    let leaders: Vec<usize> = (0..ngroups).map(|grp| grp * g).collect();
+    let ready: Vec<f64> = leaders.iter().map(|&l| member_done[l]).collect();
+    let leader_done = sim_ring_rounds(profile, &leaders, elems, bytes_per_elem, &ready);
+    // Broadcast the global result back around each group ring.
+    let payload = elems * bytes_per_elem;
+    let mut end = start;
+    for grp in 0..ngroups {
+        let mut cum = leader_done[grp];
+        end = end.max(cum);
+        for o in 1..g {
+            let from = grp * g + o - 1;
+            let to = grp * g + o;
+            cum += profile.link_between(from, to).time_for(payload);
+            end = end.max(cum);
+        }
+    }
+    end
+}
+
+/// Star gather at worker 0: per-worker sparse uploads serialize on the
+/// root's ingress in worker order, then the reduced union is downloaded
+/// back to every worker over the root's egress — the gradient build-up
+/// shape (downloads grow with the union).
+fn sim_star_gather(
+    profile: &TopologyProfile,
+    wire_bytes: &[usize],
+    union_bytes: usize,
+    start: f64,
+) -> f64 {
+    let n = wire_bytes.len();
+    if n <= 1 {
+        return start;
+    }
+    let mut t = start;
+    for (w, &bytes) in wire_bytes.iter().enumerate().skip(1) {
+        t += profile.egress(w).time_for(bytes);
+    }
+    let root = profile.egress(0);
+    let mut end = t;
+    for _ in 1..n {
+        end += root.time_for(union_bytes);
+    }
+    end
+}
+
+/// Index broadcast of the shared set: binomial-tree multicast from the
+/// leader — ⌈log2 n⌉ sequential hop generations (the §5 "cost of index
+/// communication" is O(log n) in latency, O(1) in per-worker volume),
+/// each generation gated by the slowest link it could cross (barrier).
+fn sim_index_bcast(profile: &TopologyProfile, n: usize, leader: usize, idx_bytes: usize, start: f64) -> f64 {
+    if n <= 1 {
+        return start;
+    }
+    let mut worst = profile.egress(leader).time_for(idx_bytes);
+    for w in 0..n {
+        worst = worst.max(profile.egress(w).time_for(idx_bytes));
+    }
+    if profile.hierarchical_for(n) {
+        worst = worst.max(profile.uplink.time_for(idx_bytes));
+    }
+    let depth = (usize::BITS - (n - 1).leading_zeros()) as usize;
+    start + depth as f64 * worst
+}
+
+/// gTop-k's ⌈log2 n⌉ pairwise merge rounds: partner pairs exchange ~k
+/// (index, value) pairs each round; rounds serialize, pairs within a
+/// round run concurrently (round time = slowest pair).
+fn sim_gtopk_rounds(profile: &TopologyProfile, n: usize, k: usize, start: f64) -> f64 {
+    let bytes = k * 8;
+    let mut t = start;
+    let mut stride = 1usize;
+    while stride < n {
+        let mut round = 0.0f64;
+        let mut i = 0usize;
+        while i < n {
+            let j = i + stride;
+            if j < n {
+                round = round.max(profile.link_between(j, i).time_for(bytes));
+            }
+            i += 2 * stride;
+        }
+        t += round;
+        stride *= 2;
+    }
+    t
+}
+
+// ----------------------------------------------------------------------
+// Per-bucket exchange shapes
+// ----------------------------------------------------------------------
+
+/// What one bucket's exchange looks like on the wire, derived from the
+/// real step's merged selection.
+enum ExchangeShape {
+    /// Dense ring all-reduce of the whole bucket.
+    Dense { elems: usize },
+    /// Shared-index sparse all-reduce: index broadcast + ring reduce of
+    /// `k` values. `elems` is the bucket's dense length (the sketch
+    /// pre-pass sizes its table from it).
+    SharedRing {
+        k: usize,
+        elems: usize,
+        leader: usize,
+    },
+    /// Per-worker gather: `wire_bytes[w]` up, the union back down.
+    Gather {
+        wire_bytes: Vec<usize>,
+        union_bytes: usize,
+    },
+}
+
+/// Slice the step's merged selection down to one bucket's coordinate
+/// range.
+fn bucket_shape(selection: Option<&Selection>, bucket: &Bucket, leader: usize, n: usize) -> ExchangeShape {
+    let (lo, hi) = (bucket.offset as u32, (bucket.offset + bucket.len) as u32);
+    match selection {
+        None => ExchangeShape::Dense { elems: bucket.len },
+        Some(Selection::Shared(idx)) => ExchangeShape::SharedRing {
+            k: idx.iter().filter(|&&i| i >= lo && i < hi).count(),
+            elems: bucket.len,
+            leader,
+        },
+        Some(Selection::PerWorker(per)) => {
+            assert_eq!(per.len(), n);
+            let mut union: Vec<u32> = Vec::new();
+            let wire_bytes: Vec<usize> = per
+                .iter()
+                .map(|w| {
+                    let in_range: Vec<u32> =
+                        w.iter().copied().filter(|&i| i >= lo && i < hi).collect();
+                    union.extend_from_slice(&in_range);
+                    in_range.len() * 8
+                })
+                .collect();
+            union.sort_unstable();
+            union.dedup();
+            ExchangeShape::Gather {
+                wire_bytes,
+                union_bytes: union.len() * 8,
+            }
+        }
+    }
+}
+
+/// Simulate one bucket's exchange from barrier time `start`; returns its
+/// end and appends the timed events. `scheme` only matters for the
+/// scheme-specific pre-passes (gTop-k merge rounds, sketch all-reduce);
+/// `at` is the `(step, bucket)` coordinate stamped on every event.
+fn sim_exchange(
+    profile: &TopologyProfile,
+    n: usize,
+    scheme: &str,
+    shape: &ExchangeShape,
+    at: (usize, u32),
+    start: f64,
+    trace: &mut Vec<TraceEvent>,
+) -> f64 {
+    let (step, bucket_id) = at;
+    match shape {
+        ExchangeShape::Dense { elems } => {
+            let end = sim_ring_allreduce(profile, n, *elems, 4, start);
+            trace.push(TraceEvent {
+                step,
+                bucket: bucket_id,
+                op: "dense_ring",
+                start_s: start,
+                end_s: end,
+                bytes: *elems * 4,
+            });
+            end
+        }
+        ExchangeShape::SharedRing { k, elems, leader } => {
+            let mut t = start;
+            if scheme.starts_with("gtop") {
+                let end = sim_gtopk_rounds(profile, n, *k, t);
+                trace.push(TraceEvent {
+                    step,
+                    bucket: bucket_id,
+                    op: "gtopk_exchange",
+                    start_s: t,
+                    end_s: end,
+                    bytes: *k * 8,
+                });
+                t = end;
+            } else if scheme.starts_with("sketch") {
+                // The sketch scheme needs the *summed* sketch before it
+                // can rank: charge a ring all-reduce of the count-sketch
+                // table — rows × max(width_frac·len, k, 4), exactly the
+                // table `SketchK` builds for this span.
+                let sk = crate::compress::sketch::SketchK::default_for(0);
+                let width = ((*elems as f64 * sk.width_frac) as usize).max((*k).max(4));
+                let table_elems = sk.rows * width;
+                let end = sim_ring_allreduce(profile, n, table_elems, 4, t);
+                trace.push(TraceEvent {
+                    step,
+                    bucket: bucket_id,
+                    op: "sketch_allreduce",
+                    start_s: t,
+                    end_s: end,
+                    bytes: table_elems * 4,
+                });
+                t = end;
+            }
+            let idx_bytes = *k * 4;
+            if n > 1 && *k > 0 {
+                let end = sim_index_bcast(profile, n, *leader, idx_bytes, t);
+                trace.push(TraceEvent {
+                    step,
+                    bucket: bucket_id,
+                    op: "index_bcast",
+                    start_s: t,
+                    end_s: end,
+                    bytes: idx_bytes,
+                });
+                t = end;
+            }
+            let end = sim_ring_allreduce(profile, n, *k, 4, t);
+            trace.push(TraceEvent {
+                step,
+                bucket: bucket_id,
+                op: "ring_reduce",
+                start_s: t,
+                end_s: end,
+                bytes: *k * 4,
+            });
+            end
+        }
+        ExchangeShape::Gather {
+            wire_bytes,
+            union_bytes,
+        } => {
+            let end = sim_star_gather(profile, wire_bytes, *union_bytes, start);
+            trace.push(TraceEvent {
+                step,
+                bucket: bucket_id,
+                op: "star_gather",
+                start_s: start,
+                end_s: end,
+                bytes: wire_bytes.iter().sum::<usize>() + union_bytes,
+            });
+            end
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// The simulation driver
+// ----------------------------------------------------------------------
+
+/// Run `cfg.steps` real coordination steps under simulated time. See
+/// the module docs for the model; determinism: same `(cfg, profile)` ⇒
+/// byte-identical trace digest and selections.
+pub fn simulate(cfg: &SimConfig, profile: &TopologyProfile) -> anyhow::Result<SimReport> {
+    anyhow::ensure!(cfg.workers >= 1, "simulate needs at least one worker");
+    anyhow::ensure!(cfg.dim >= 1, "simulate needs a non-empty gradient");
+    anyhow::ensure!(
+        cfg.layers >= 1 && cfg.layers <= cfg.dim,
+        "--layers must be in [1, dim]"
+    );
+    anyhow::ensure!(cfg.steps >= 1, "simulate needs at least one step");
+    anyhow::ensure!(
+        cfg.compute_per_elem_s >= 0.0,
+        "compute_per_elem_s must be non-negative"
+    );
+    anyhow::ensure!(
+        !(cfg.bucket_bytes > 0 && cfg.scheme == "none"),
+        "--bucket-bytes only applies to compressed schemes (the dense \
+         baseline's exchange is monolithic)"
+    );
+    profile.check()?;
+
+    let n = cfg.workers;
+    let dim = cfg.dim;
+    let partition = uniform_partition(dim, cfg.layers);
+    let plan = if cfg.bucket_bytes > 0 && cfg.scheme != "none" {
+        Some(BucketPlan::from_partition(&partition, cfg.bucket_bytes))
+    } else {
+        None
+    };
+    let multi_bucket = plan.as_ref().map_or(false, |p| !p.is_single());
+    anyhow::ensure!(
+        !(cfg.overlapped && multi_bucket),
+        "--bucket-bytes cannot be combined with the overlapped driving \
+         mode (see Coordinator::try_step_overlapped) — drop one of the two"
+    );
+
+    let mode = if cfg.scheme == "none" {
+        Mode::Dense
+    } else {
+        Mode::Compressed(make_compressor(&cfg.scheme, cfg.rate, cfg.seed)?)
+    };
+    let k = ((dim as f64 / cfg.rate as f64).ceil() as usize).max(1);
+    let fabric = Fabric::new(FabricConfig {
+        workers: n,
+        ..FabricConfig::default()
+    });
+    let mut coordinator = Coordinator::new(n, dim, mode, cfg.beta, k, fabric, cfg.warmup_steps);
+    if cfg.scheme != "none" {
+        let ks = partition.per_layer_k(cfg.rate as f64, 32, false);
+        coordinator = coordinator.with_layered(partition.clone(), ks);
+    }
+    coordinator.set_bucket_plan(plan.clone());
+
+    let mut trace: Vec<TraceEvent> = Vec::new();
+    let mut selections: Vec<Option<Selection>> = Vec::with_capacity(cfg.steps);
+    let mut per_step_s: Vec<f64> = Vec::with_capacity(cfg.steps);
+    let mut compute_total = 0.0f64;
+    let mut comm_total = 0.0f64;
+
+    // Virtual cursors. Sync driving barriers both at every step's end;
+    // the overlapped mode keeps a one-step-deep pipeline, exactly the
+    // `step_overlapped` lookahead: compute of step t may start once step
+    // t−2's exchange has landed (its result slot is free), and step t's
+    // exchange waits for step t−1's (one link).
+    let mut compute_cursor = 0.0f64;
+    let mut link_free = 0.0f64;
+    let mut prev_comm_done = 0.0f64;
+    let mut prev_prev_comm_done = 0.0f64;
+    let mut timeline_end = 0.0f64;
+
+    for t in 0..cfg.steps {
+        let grads = synthetic_grads(cfg.seed, t, n, dim);
+        let result = coordinator.try_step_bucketed(t, &grads)?;
+
+        // Synchronous SGD waits for the slowest worker's compute.
+        let f_step = (0..n)
+            .map(|w| profile.compute_factor(t, w))
+            .fold(1.0f64, f64::max);
+
+        // Bucket walk in the driver's backward submission order; a dense
+        // step (warmup / scheme none) is one monolithic dense exchange
+        // regardless of the plan, exactly like `try_step_bucketed`.
+        let whole = Bucket {
+            id: 0,
+            offset: 0,
+            len: dim,
+            layers: (0, cfg.layers),
+        };
+        let buckets: Vec<Bucket> = if multi_bucket && !result.dense {
+            let p = plan.as_ref().expect("multi_bucket implies a plan");
+            crate::runtime::bucketed::backward_order(p)
+                .into_iter()
+                .map(|b| *p.bucket(b))
+                .collect()
+        } else {
+            vec![whole]
+        };
+
+        let step_start = timeline_end;
+        if cfg.overlapped {
+            compute_cursor = compute_cursor.max(prev_prev_comm_done);
+        } else {
+            compute_cursor = step_start;
+            link_free = step_start;
+        }
+
+        let mut step_compute = 0.0f64;
+        let mut step_comm = 0.0f64;
+        for bucket in &buckets {
+            let tc = bucket.len as f64 * cfg.compute_per_elem_s * f_step;
+            let c_start = compute_cursor;
+            compute_cursor += tc;
+            step_compute += tc;
+            trace.push(TraceEvent {
+                step: t,
+                bucket: bucket.id as u32,
+                op: "compute",
+                start_s: c_start,
+                end_s: compute_cursor,
+                bytes: bucket.len * 4,
+            });
+            let shape = bucket_shape(result.selection.as_ref(), bucket, result.leader, n);
+            let x_start = compute_cursor.max(link_free);
+            let x_end = sim_exchange(
+                profile,
+                n,
+                &cfg.scheme,
+                &shape,
+                (t, bucket.id as u32),
+                x_start,
+                &mut trace,
+            );
+            step_comm += x_end - x_start;
+            link_free = x_end;
+        }
+        let step_end = compute_cursor.max(link_free);
+        if cfg.overlapped {
+            prev_prev_comm_done = prev_comm_done;
+            prev_comm_done = link_free;
+            // For the overlapped pipeline the per-step wall is the
+            // advance of the timeline end (steady state ≈ max(Tc, Tm)).
+            per_step_s.push(step_end - timeline_end);
+        } else {
+            per_step_s.push(step_end - step_start);
+        }
+        timeline_end = step_end;
+        compute_total += step_compute;
+        comm_total += step_comm;
+        selections.push(result.selection);
+    }
+
+    Ok(SimReport {
+        scheme: cfg.scheme.clone(),
+        workers: n,
+        steps: cfg.steps,
+        dim,
+        total_s: timeline_end,
+        compute_s: compute_total,
+        comm_s: comm_total,
+        per_step_s,
+        selections,
+        trace,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::parallel::ring_allreduce_generic;
+    use crate::simnet::profile::{LinkProfile, StragglerProfile};
+    use std::sync::mpsc::channel;
+
+    fn quiet_profile(bw_gbps: f64, latency_us: f64) -> TopologyProfile {
+        TopologyProfile {
+            name: "test".into(),
+            link: LinkProfile::new(bw_gbps, latency_us),
+            group_size: 0,
+            uplink: LinkProfile::new(bw_gbps, latency_us),
+            slow_workers: Vec::new(),
+            slow_factor: 1.0,
+            straggler: StragglerProfile::none(),
+            seed: 0,
+        }
+    }
+
+    fn cfg(scheme: &str, n: usize) -> SimConfig {
+        SimConfig {
+            workers: n,
+            dim: 512,
+            scheme: scheme.into(),
+            rate: 16,
+            steps: 3,
+            layers: 4,
+            ..SimConfig::default()
+        }
+    }
+
+    #[test]
+    fn sim_schedule_matches_real_ring_messages() {
+        // The lock between the simulator's charged messages and the real
+        // collective: run `ring_allreduce_generic` over an in-test
+        // channel mesh with instrumented send closures, and check every
+        // per-round message size against the shared schedule helpers the
+        // simulator charges from.
+        for n in [2usize, 3, 5] {
+            for len in [0usize, 7, 16] {
+                let mut txs = Vec::new();
+                let mut rxs = Vec::new();
+                for _ in 0..n {
+                    let (tx, rx) = channel::<Vec<f32>>();
+                    txs.push(tx);
+                    rxs.push(Some(rx));
+                }
+                let links: Vec<_> = (0..n)
+                    .map(|id| (txs[id].clone(), rxs[(id + n - 1) % n].take().unwrap()))
+                    .collect();
+                let sent: Vec<Vec<usize>> = std::thread::scope(|s| {
+                    let handles: Vec<_> = links
+                        .into_iter()
+                        .enumerate()
+                        .map(|(id, (tx, rx))| {
+                            s.spawn(move || {
+                                let mut buf = vec![id as f32; len];
+                                let mut sizes = Vec::new();
+                                let mut send = |c: &[f32]| {
+                                    sizes.push(c.len());
+                                    tx.send(c.to_vec())
+                                        .map_err(|_| anyhow::anyhow!("send"))
+                                };
+                                let mut recv = || {
+                                    rx.recv().map_err(|_| anyhow::anyhow!("recv"))
+                                };
+                                ring_allreduce_generic(
+                                    id, n, &mut buf, &|_| {}, &mut send, &mut recv,
+                                )
+                                .unwrap();
+                                sizes
+                            })
+                        })
+                        .collect();
+                    handles.into_iter().map(|h| h.join().unwrap()).collect()
+                });
+                let bounds = chunk_bounds(len, n);
+                for (id, sizes) in sent.iter().enumerate() {
+                    let mut expect = Vec::new();
+                    for s in 0..n - 1 {
+                        let (send_c, _) = reduce_scatter_round(id, n, s);
+                        expect.push(bounds[send_c].1 - bounds[send_c].0);
+                    }
+                    for s in 0..n - 1 {
+                        let (send_c, _) = all_gather_round(id, n, s);
+                        expect.push(bounds[send_c].1 - bounds[send_c].0);
+                    }
+                    assert_eq!(sizes, &expect, "n={n} len={len} worker {id}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_ring_time_is_rounds_times_chunks() {
+        // n divides elems, zero latency: every round moves elems/n values
+        // and the ring takes exactly 2(n-1) rounds.
+        let p = quiet_profile(1.0, 0.0); // 1e9 B/s
+        let n = 4;
+        let elems = 400;
+        let end = sim_ring_allreduce(&p, n, elems, 4, 1.0);
+        let chunk_t = (elems / n * 4) as f64 / 1e9;
+        let expect = 1.0 + 2.0 * (n - 1) as f64 * chunk_t;
+        assert!((end - expect).abs() < 1e-12, "{end} vs {expect}");
+        // single worker: free
+        assert_eq!(sim_ring_allreduce(&p, 1, elems, 4, 2.0), 2.0);
+    }
+
+    #[test]
+    fn slow_link_drags_the_whole_ring() {
+        let mut p = quiet_profile(32.0, 1.0);
+        let base = sim_ring_allreduce(&p, 8, 8000, 4, 0.0);
+        p.slow_workers = vec![3];
+        p.slow_factor = 4.0;
+        let slowed = sim_ring_allreduce(&p, 8, 8000, 4, 0.0);
+        assert!(slowed > base, "{slowed} vs {base}");
+    }
+
+    #[test]
+    fn hierarchical_uplink_costs_more_than_flat() {
+        let flat = quiet_profile(32.0, 1.0);
+        let mut hier = quiet_profile(32.0, 1.0);
+        hier.group_size = 4;
+        hier.uplink = LinkProfile::new(4.0, 5.0);
+        assert!(hier.hierarchical_for(16));
+        let t_flat = sim_ring_allreduce(&flat, 16, 16_000, 4, 0.0);
+        let t_hier = sim_ring_allreduce(&hier, 16, 16_000, 4, 0.0);
+        assert!(t_hier > t_flat, "{t_hier} vs {t_flat}");
+    }
+
+    #[test]
+    fn star_gather_union_growth_shows_in_time() {
+        let p = quiet_profile(32.0, 1.0);
+        // same per-worker upload, union grows 4x → download time grows
+        let small = sim_star_gather(&p, &[800; 8], 800, 0.0);
+        let big = sim_star_gather(&p, &[800; 8], 3200, 0.0);
+        assert!(big > small);
+        assert_eq!(sim_star_gather(&p, &[800], 800, 3.0), 3.0, "n=1 is local");
+    }
+
+    #[test]
+    fn simulate_runs_all_five_schemes_and_is_deterministic() {
+        let p = TopologyProfile::named("straggler").unwrap();
+        for scheme in SIM_SCHEMES {
+            let c = cfg(scheme, 4);
+            let a = simulate(&c, &p).unwrap();
+            let b = simulate(&c, &p).unwrap();
+            assert_eq!(a.trace_digest(), b.trace_digest(), "{scheme}");
+            assert_eq!(a.selection_digest(), b.selection_digest(), "{scheme}");
+            assert_eq!(a.per_step_s.len(), c.steps);
+            assert!(a.total_s > 0.0);
+            assert!(a.mean_step_s() > 0.0);
+            // different seed → different selections (energy moves)
+            let mut c2 = cfg(scheme, 4);
+            c2.seed = 777;
+            let d = simulate(&c2, &p).unwrap();
+            assert_ne!(
+                a.selection_digest(),
+                d.selection_digest(),
+                "{scheme}: seed must steer the stream"
+            );
+        }
+    }
+
+    #[test]
+    fn simulate_selections_match_raw_sequential_coordinator() {
+        // The engine drives the real sequential coordinator; an
+        // independently-built coordinator over the same synthetic stream
+        // must produce the identical selections.
+        let c = cfg("scalecom", 3);
+        let p = TopologyProfile::uniform();
+        let report = simulate(&c, &p).unwrap();
+        let partition = uniform_partition(c.dim, c.layers);
+        let ks = partition.per_layer_k(c.rate as f64, 32, false);
+        let fabric = Fabric::new(FabricConfig {
+            workers: c.workers,
+            ..FabricConfig::default()
+        });
+        let mut reference = Coordinator::new(
+            c.workers,
+            c.dim,
+            Mode::Compressed(make_compressor(&c.scheme, c.rate, c.seed).unwrap()),
+            c.beta,
+            ((c.dim as f64 / c.rate as f64).ceil() as usize).max(1),
+            fabric,
+            c.warmup_steps,
+        )
+        .with_layered(partition, ks);
+        for t in 0..c.steps {
+            let grads = synthetic_grads(c.seed, t, c.workers, c.dim);
+            let r = reference.step(t, &grads);
+            assert_eq!(r.selection, report.selections[t], "t={t}");
+        }
+    }
+
+    #[test]
+    fn bucketed_run_keeps_selections_and_overlaps_time() {
+        let p = quiet_profile(0.5, 0.0); // slow links → comm-bound
+        let mut mono = cfg("scalecom", 4);
+        mono.dim = 4096;
+        mono.layers = 8;
+        mono.compute_per_elem_s = 1e-7; // make compute visible
+        let mut bucketed = mono.clone();
+        bucketed.bucket_bytes = (mono.dim / mono.layers) * 4;
+        let a = simulate(&mono, &p).unwrap();
+        let b = simulate(&bucketed, &p).unwrap();
+        assert_eq!(
+            a.selection_digest(),
+            b.selection_digest(),
+            "bucketing must not change selections"
+        );
+        assert!(
+            b.total_s < a.total_s,
+            "bucketed overlap must beat monolithic when both sides are \
+             non-trivial: {} vs {}",
+            b.total_s,
+            a.total_s
+        );
+    }
+
+    #[test]
+    fn overlapped_mode_beats_sync_and_rejects_buckets() {
+        let p = quiet_profile(0.5, 0.0);
+        let mut sync = cfg("scalecom", 4);
+        sync.dim = 4096;
+        sync.steps = 8;
+        sync.compute_per_elem_s = 1e-7;
+        let mut over = sync.clone();
+        over.overlapped = true;
+        let a = simulate(&sync, &p).unwrap();
+        let b = simulate(&over, &p).unwrap();
+        assert!(b.total_s < a.total_s, "{} vs {}", b.total_s, a.total_s);
+        let mut bad = over.clone();
+        bad.bucket_bytes = (bad.dim / bad.layers) * 4;
+        let err = simulate(&bad, &p).unwrap_err();
+        assert!(err.to_string().contains("bucket-bytes"), "{err}");
+    }
+
+    #[test]
+    fn straggler_profile_slows_steps_down() {
+        let quiet = TopologyProfile::uniform();
+        let mut noisy = TopologyProfile::named("straggler").unwrap();
+        noisy.straggler.prob = 1.0; // every worker straggles every step
+        noisy.straggler.slowdown = 5.0;
+        let mut c = cfg("scalecom", 4);
+        c.compute_per_elem_s = 1e-6;
+        let a = simulate(&c, &quiet).unwrap();
+        let b = simulate(&c, &noisy).unwrap();
+        assert!(b.total_s > 2.0 * a.total_s, "{} vs {}", b.total_s, a.total_s);
+        // stragglers change timing, never values
+        assert_eq!(a.selection_digest(), b.selection_digest());
+    }
+
+    #[test]
+    fn dense_baseline_and_warmup_go_dense() {
+        let p = TopologyProfile::uniform();
+        let mut c = cfg("none", 2);
+        c.bucket_bytes = 0;
+        let r = simulate(&c, &p).unwrap();
+        assert!(r.selections.iter().all(|s| s.is_none()));
+        assert!(r.trace.iter().any(|e| e.op == "dense_ring"));
+        let mut w = cfg("scalecom", 2);
+        w.warmup_steps = 2;
+        let r = simulate(&w, &p).unwrap();
+        assert!(r.selections[0].is_none() && r.selections[1].is_none());
+        assert!(r.selections[2].is_some());
+    }
+
+    #[test]
+    fn local_topk_gather_grows_with_workers_but_scalecom_does_not() {
+        // The paper's core scaling story, reproduced in virtual time:
+        // local top-k's per-step comm grows with n (build-up), CLT-k's
+        // stays ~flat. Zero-latency profile so the comparison is about
+        // volume (the paper's axis), not per-hop latency.
+        let p = quiet_profile(32.0, 0.0);
+        let step_comm = |scheme: &str, n: usize| {
+            let mut c = cfg(scheme, n);
+            c.dim = 2048;
+            c.rate = 32;
+            c.steps = 2;
+            let r = simulate(&c, &p).unwrap();
+            r.comm_s / r.steps as f64
+        };
+        let topk_8 = step_comm("local-topk", 8);
+        let topk_32 = step_comm("local-topk", 32);
+        let clt_8 = step_comm("scalecom", 8);
+        let clt_32 = step_comm("scalecom", 32);
+        assert!(topk_32 > topk_8 * 2.0, "{topk_8} → {topk_32}");
+        assert!(clt_32 < clt_8 * 2.0, "{clt_8} → {clt_32}");
+    }
+
+    #[test]
+    fn trace_digest_is_sensitive_to_profile() {
+        let c = cfg("scalecom", 4);
+        let a = simulate(&c, &TopologyProfile::uniform()).unwrap();
+        let b = simulate(&c, &TopologyProfile::named("hetero").unwrap()).unwrap();
+        assert_ne!(a.trace_digest(), b.trace_digest());
+        assert_eq!(a.selection_digest(), b.selection_digest());
+    }
+
+    #[test]
+    fn uniform_partition_tiles_with_remainder() {
+        let p = uniform_partition(10, 3);
+        let lens: Vec<usize> = p.layers.iter().map(|l| l.len).collect();
+        assert_eq!(lens, vec![4, 3, 3]);
+        assert_eq!(p.total_len(), 10);
+        p.check().unwrap();
+    }
+}

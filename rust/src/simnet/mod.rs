@@ -1,0 +1,41 @@
+//! Simnet: a deterministic link-level network simulator that runs the
+//! **real** coordination/compression/bucketing code against **simulated**
+//! communication timing in virtual time.
+//!
+//! Why: the paper's headline claim is *scalability* (65–400x compression
+//! with excellent scaling up to 64 learners), but in-process benches can
+//! only exercise as many real threads as the host has cores — and, as
+//! Agarwal et al. show ("On the Utility of Gradient Compression in
+//! Distributed Training Systems"), whether compression pays off at all
+//! is a function of the link/compute cost ratio, which a laptop's
+//! loopback cannot represent. Simnet closes that gap:
+//!
+//! - [`profile`] — [`TopologyProfile`]/[`LinkProfile`]: per-link
+//!   bandwidth/latency, hierarchical ring-of-rings groups, slow links,
+//!   and seeded straggler/jitter distributions (TOML or built-in names);
+//! - [`engine`] — the virtual-clock event engine: the real sequential
+//!   `Coordinator` produces every selection and value (bit-identical to
+//!   the parity reference by construction), while the ring
+//!   reduce-scatter/all-gather, star-gather, and per-bucket submit/wait
+//!   schedules are replayed message-for-message against the profile's
+//!   links, emitting a per-step/per-bucket [`TraceEvent`] timeline with
+//!   a canonical digest (same seed + profile ⇒ byte-identical);
+//! - [`tune`] — the bucket-plan autotuner behind `scalecom tune`:
+//!   calibrates the compute cost from a few measured real steps, sweeps
+//!   bucket plans (and sync vs overlapped driving) through the
+//!   simulator, and emits the best `--bucket-bytes`; validated against
+//!   `perfmodel::step_time_bucketed`'s closed form in the uniform case
+//!   (see `src/proptest/mod.rs`).
+//!
+//! Simnet sits between the analytic perf model (`perfmodel` — closed
+//! forms, no code execution) and the wall-clock backends (`runtime` —
+//! real threads/sockets, host-bound scale): real code, modeled time,
+//! arbitrary scale.
+
+pub mod engine;
+pub mod profile;
+pub mod tune;
+
+pub use engine::{simulate, synthetic_grads, uniform_partition, SimConfig, SimReport, TraceEvent, SIM_SCHEMES};
+pub use profile::{LinkProfile, StragglerProfile, TopologyProfile};
+pub use tune::{calibrate_compute_per_elem, tune, PlanEval, TuneConfig, TuneOutcome};

@@ -1,0 +1,362 @@
+//! Topology profiles: the link/compute shape of the simulated cluster.
+//!
+//! A [`TopologyProfile`] describes everything the virtual-clock engine
+//! charges for: per-link bandwidth/latency, hierarchical grouping
+//! (ring-of-rings — intra-group links plus a slower inter-group uplink),
+//! per-worker slow links, and a seeded straggler/jitter model for the
+//! compute side. Profiles come from three places, all producing the same
+//! struct: the built-in named profiles ([`TopologyProfile::named`]), a
+//! TOML file ([`TopologyProfile::load`] — see `examples/profiles/`), or
+//! code (the tests). Everything is plain data: two simulations with the
+//! same profile and seed produce byte-identical traces.
+
+use crate::config::toml::TomlDoc;
+use crate::util::rng::Rng;
+
+/// One directed link: the simulator charges
+/// `latency + bytes / bandwidth` per message crossing it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkProfile {
+    pub bandwidth_gbps: f64,
+    pub latency_us: f64,
+}
+
+impl LinkProfile {
+    pub fn new(bandwidth_gbps: f64, latency_us: f64) -> LinkProfile {
+        LinkProfile {
+            bandwidth_gbps,
+            latency_us,
+        }
+    }
+
+    /// Wall time for one `bytes`-sized message on this link.
+    pub fn time_for(&self, bytes: usize) -> f64 {
+        self.latency_us * 1e-6 + bytes as f64 / (self.bandwidth_gbps * 1e9)
+    }
+
+    /// The same link slowed down by `factor` (bandwidth divided,
+    /// latency multiplied).
+    pub fn slowed(&self, factor: f64) -> LinkProfile {
+        LinkProfile {
+            bandwidth_gbps: self.bandwidth_gbps / factor,
+            latency_us: self.latency_us * factor,
+        }
+    }
+}
+
+/// Seeded per-step, per-worker compute perturbations. `jitter` is a
+/// uniform fractional slowdown applied every step; with probability
+/// `prob` a worker additionally straggles by `slowdown`x that step.
+/// All draws are pure functions of `(profile seed, step, worker)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StragglerProfile {
+    pub prob: f64,
+    pub slowdown: f64,
+    pub jitter: f64,
+}
+
+impl StragglerProfile {
+    pub fn none() -> StragglerProfile {
+        StragglerProfile {
+            prob: 0.0,
+            slowdown: 1.0,
+            jitter: 0.0,
+        }
+    }
+}
+
+/// The simulated cluster's shape. Flat profiles (`group_size == 0`) are
+/// one ring over every worker; hierarchical profiles partition workers
+/// into consecutive groups of `group_size` and run a ring-of-rings —
+/// intra-group reduction on the member links, an inter-group ring over
+/// the group leaders on `uplink`, then an intra-group broadcast back.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TopologyProfile {
+    pub name: String,
+    /// Default egress link of every worker.
+    pub link: LinkProfile,
+    /// `0` = flat ring; otherwise the ring-of-rings group size.
+    pub group_size: usize,
+    /// Inter-group link (only charged when `group_size > 0`).
+    pub uplink: LinkProfile,
+    /// Workers whose egress link is `slow_factor`x slower.
+    pub slow_workers: Vec<usize>,
+    pub slow_factor: f64,
+    pub straggler: StragglerProfile,
+    /// Seed for the straggler/jitter draws (independent of the workload
+    /// seed, so the same gradient stream can be replayed under
+    /// different network weather).
+    pub seed: u64,
+}
+
+impl TopologyProfile {
+    /// The reference profile: uniform 32 GBps / 1 us links, flat ring,
+    /// no stragglers — the paper's clean-testbed assumption.
+    pub fn uniform() -> TopologyProfile {
+        TopologyProfile {
+            name: "uniform".into(),
+            link: LinkProfile::new(32.0, 1.0),
+            group_size: 0,
+            uplink: LinkProfile::new(32.0, 1.0),
+            slow_workers: Vec::new(),
+            slow_factor: 1.0,
+            straggler: StragglerProfile::none(),
+            seed: 0,
+        }
+    }
+
+    /// Built-in named profiles (`scalecom simulate --profile <name>`).
+    pub fn named(name: &str) -> anyhow::Result<TopologyProfile> {
+        let mut p = TopologyProfile::uniform();
+        match name {
+            "uniform" => {}
+            // one in eight workers sits behind a 4x slower link
+            "hetero" => {
+                p.name = "hetero".into();
+                p.slow_workers = vec![3];
+                p.slow_factor = 4.0;
+            }
+            // ring-of-rings: groups of 8 on fast links, 8 GBps uplink
+            "hier" => {
+                p.name = "hier".into();
+                p.group_size = 8;
+                p.uplink = LinkProfile::new(8.0, 5.0);
+            }
+            // 5% straggle 3x, everyone jitters up to 10%
+            "straggler" => {
+                p.name = "straggler".into();
+                p.straggler = StragglerProfile {
+                    prob: 0.05,
+                    slowdown: 3.0,
+                    jitter: 0.1,
+                };
+                p.seed = 7;
+            }
+            other => anyhow::bail!(
+                "unknown topology profile '{other}' (expected \
+                 uniform|hetero|hier|straggler, or a path to a profile .toml)"
+            ),
+        }
+        Ok(p)
+    }
+
+    /// Parse a profile from a `[profile]` TOML section. Unset keys fall
+    /// back to the uniform profile's values.
+    pub fn from_toml(doc: &TomlDoc) -> anyhow::Result<TopologyProfile> {
+        let d = TopologyProfile::uniform();
+        let slow_workers = match doc.get("profile.slow_workers") {
+            None => Vec::new(),
+            Some(v) => {
+                let arr = v.as_arr().ok_or_else(|| {
+                    anyhow::anyhow!("profile.slow_workers must be an array of worker ids")
+                })?;
+                let mut ids = Vec::with_capacity(arr.len());
+                for item in arr {
+                    ids.push(item.as_usize().ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "profile.slow_workers entries must be non-negative integers"
+                        )
+                    })?);
+                }
+                ids
+            }
+        };
+        let p = TopologyProfile {
+            name: doc.str_or("profile.name", "custom").to_string(),
+            link: LinkProfile::new(
+                doc.f64_or("profile.bandwidth_gbps", d.link.bandwidth_gbps),
+                doc.f64_or("profile.latency_us", d.link.latency_us),
+            ),
+            group_size: doc.usize_or("profile.group_size", 0),
+            uplink: LinkProfile::new(
+                doc.f64_or("profile.uplink_bandwidth_gbps", d.uplink.bandwidth_gbps),
+                doc.f64_or("profile.uplink_latency_us", d.uplink.latency_us),
+            ),
+            slow_workers,
+            slow_factor: doc.f64_or("profile.slow_factor", 1.0),
+            straggler: StragglerProfile {
+                prob: doc.f64_or("profile.straggler_prob", 0.0),
+                slowdown: doc.f64_or("profile.straggler_slowdown", 1.0),
+                jitter: doc.f64_or("profile.jitter", 0.0),
+            },
+            seed: doc.usize_or("profile.seed", 0) as u64,
+        };
+        p.check()?;
+        Ok(p)
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<TopologyProfile> {
+        Self::from_toml(&TomlDoc::load(path)?)
+    }
+
+    /// CLI entry point: a built-in name, or a path to a profile TOML
+    /// (anything containing a path separator or ending in `.toml`).
+    pub fn resolve(arg: &str) -> anyhow::Result<TopologyProfile> {
+        if arg.contains('/') || arg.contains('\\') || arg.ends_with(".toml") {
+            Self::load(std::path::Path::new(arg))
+        } else {
+            Self::named(arg)
+        }
+    }
+
+    pub fn check(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.link.bandwidth_gbps > 0.0 && self.uplink.bandwidth_gbps > 0.0,
+            "profile bandwidths must be positive"
+        );
+        anyhow::ensure!(
+            self.link.latency_us >= 0.0 && self.uplink.latency_us >= 0.0,
+            "profile latencies must be non-negative"
+        );
+        anyhow::ensure!(self.slow_factor >= 1.0, "slow_factor must be >= 1");
+        anyhow::ensure!(
+            self.straggler.slowdown >= 1.0,
+            "straggler_slowdown must be >= 1"
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.straggler.prob),
+            "straggler_prob must be in [0, 1]"
+        );
+        anyhow::ensure!(self.straggler.jitter >= 0.0, "jitter must be >= 0");
+        Ok(())
+    }
+
+    /// Worker `w`'s egress link (its slow-link override applied).
+    pub fn egress(&self, w: usize) -> LinkProfile {
+        if self.slow_workers.contains(&w) {
+            self.link.slowed(self.slow_factor)
+        } else {
+            self.link
+        }
+    }
+
+    /// The link a message `from → to` crosses: the sender's egress, or
+    /// the uplink when a hierarchical profile places them in different
+    /// groups.
+    pub fn link_between(&self, from: usize, to: usize) -> LinkProfile {
+        if self.group_size > 0 && from / self.group_size != to / self.group_size {
+            self.uplink
+        } else {
+            self.egress(from)
+        }
+    }
+
+    /// Whether the ring-of-rings schedule applies for `n` workers: the
+    /// group size must tile the ring with at least two full groups.
+    pub fn hierarchical_for(&self, n: usize) -> bool {
+        self.group_size > 1 && n % self.group_size == 0 && n / self.group_size >= 2
+    }
+
+    /// Deterministic compute slowdown factor (>= 1) for `(step, worker)`.
+    pub fn compute_factor(&self, step: usize, worker: usize) -> f64 {
+        if self.straggler.prob == 0.0 && self.straggler.jitter == 0.0 {
+            return 1.0;
+        }
+        let mut rng = Rng::for_stream(
+            self.seed ^ 0x5349_4d4e_4554, // "SIMNET"
+            ((step as u64) << 24) | worker as u64,
+        );
+        let mut f = 1.0 + self.straggler.jitter * rng.next_f64();
+        if rng.next_f64() < self.straggler.prob {
+            f *= self.straggler.slowdown;
+        }
+        f
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn link_time_is_latency_plus_bandwidth() {
+        let l = LinkProfile::new(1.0, 100.0); // 1e9 B/s, 100 us
+        let t = l.time_for(1_000_000_000);
+        assert!((t - 1.0001).abs() < 1e-9, "{t}");
+        let s = l.slowed(2.0);
+        assert!((s.time_for(1_000_000_000) - 2.0002).abs() < 1e-9);
+    }
+
+    #[test]
+    fn named_profiles_resolve_and_check() {
+        for name in ["uniform", "hetero", "hier", "straggler"] {
+            let p = TopologyProfile::named(name).unwrap();
+            p.check().unwrap();
+            assert_eq!(p.name, name);
+        }
+        assert!(TopologyProfile::named("mesh").is_err());
+    }
+
+    #[test]
+    fn toml_roundtrip_with_overrides() {
+        let doc = TomlDoc::parse(
+            "[profile]\n\
+             name = \"lab\"\n\
+             bandwidth_gbps = 16.0\n\
+             latency_us = 2.5\n\
+             group_size = 4\n\
+             uplink_bandwidth_gbps = 4.0\n\
+             uplink_latency_us = 10.0\n\
+             slow_workers = [1, 5]\n\
+             slow_factor = 3.0\n\
+             straggler_prob = 0.1\n\
+             straggler_slowdown = 2.0\n\
+             jitter = 0.05\n\
+             seed = 11\n",
+        )
+        .unwrap();
+        let p = TopologyProfile::from_toml(&doc).unwrap();
+        assert_eq!(p.name, "lab");
+        assert_eq!(p.link, LinkProfile::new(16.0, 2.5));
+        assert_eq!(p.group_size, 4);
+        assert_eq!(p.uplink, LinkProfile::new(4.0, 10.0));
+        assert_eq!(p.slow_workers, vec![1, 5]);
+        // slow worker: 3x slower egress
+        assert!(p.egress(1).bandwidth_gbps < p.egress(0).bandwidth_gbps);
+        // cross-group hop rides the uplink
+        assert_eq!(p.link_between(3, 4), p.uplink);
+        assert_eq!(p.link_between(0, 1), p.egress(0));
+        assert_eq!(p.seed, 11);
+    }
+
+    #[test]
+    fn bad_profiles_rejected() {
+        let doc = TomlDoc::parse("[profile]\nbandwidth_gbps = 0.0\n").unwrap();
+        assert!(TopologyProfile::from_toml(&doc).is_err());
+        let doc = TomlDoc::parse("[profile]\nstraggler_prob = 2.0\n").unwrap();
+        assert!(TopologyProfile::from_toml(&doc).is_err());
+        let doc = TomlDoc::parse("[profile]\nslow_factor = 0.5\n").unwrap();
+        assert!(TopologyProfile::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn compute_factor_is_deterministic_and_unit_without_noise() {
+        let p = TopologyProfile::uniform();
+        assert_eq!(p.compute_factor(3, 1), 1.0);
+        let s = TopologyProfile::named("straggler").unwrap();
+        let a = s.compute_factor(5, 2);
+        let b = s.compute_factor(5, 2);
+        assert_eq!(a, b, "same (seed, step, worker) => same factor");
+        assert!(a >= 1.0);
+        // over many draws at 5% prob / 3x, some step-worker pair straggles
+        let mut any = false;
+        for t in 0..40 {
+            for w in 0..8 {
+                if s.compute_factor(t, w) >= s.straggler.slowdown {
+                    any = true;
+                }
+            }
+        }
+        assert!(any, "straggler profile never straggled in 320 draws");
+    }
+
+    #[test]
+    fn hierarchical_applicability() {
+        let h = TopologyProfile::named("hier").unwrap();
+        assert!(h.hierarchical_for(64));
+        assert!(h.hierarchical_for(16));
+        assert!(!h.hierarchical_for(8), "one group is just a flat ring");
+        assert!(!h.hierarchical_for(12), "groups must tile the ring");
+        assert!(!TopologyProfile::uniform().hierarchical_for(64));
+    }
+}
