@@ -7,6 +7,8 @@
 //!
 //! `bench <name> ... median 1.234 us/iter  (p10 1.1, p90 1.4, n=431)`
 
+pub mod trend;
+
 use std::time::Instant;
 
 /// Prevent the optimizer from eliding a computed value.

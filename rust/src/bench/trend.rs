@@ -1,0 +1,281 @@
+//! Bench-trend gate: compare two `bench_allreduce --json` artifacts and
+//! flag median regressions past a budget.
+//!
+//! CI downloads the previous run's `BENCH_allreduce.json` (falling back
+//! to the committed baseline) and runs
+//! `scalecom bench-trend --baseline old.json --current new.json`; the
+//! command exits non-zero when any benchmark whose name matches one of
+//! the section prefixes (default `allreduce,codec/`) slows down by more
+//! than `--max-regress` (default 15%). Benchmarks present in only one
+//! file are reported but never fail the gate — sections come and go as
+//! the suite grows, and a trend gate that blocks adding benches would
+//! teach people to stop adding them.
+
+use crate::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One benchmark present in both artifacts.
+#[derive(Debug, Clone)]
+pub struct Comparison {
+    pub name: String,
+    pub baseline_ns: f64,
+    pub current_ns: f64,
+}
+
+impl Comparison {
+    /// Fractional change vs baseline: +0.20 = 20% slower.
+    pub fn delta(&self) -> f64 {
+        if self.baseline_ns > 0.0 {
+            (self.current_ns - self.baseline_ns) / self.baseline_ns
+        } else {
+            0.0
+        }
+    }
+}
+
+/// The full comparison: what matched, what regressed, what only one
+/// side had.
+#[derive(Debug, Clone)]
+pub struct TrendReport {
+    pub compared: Vec<Comparison>,
+    pub regressions: Vec<Comparison>,
+    pub baseline_only: Vec<String>,
+    pub current_only: Vec<String>,
+    pub max_regress: f64,
+}
+
+impl TrendReport {
+    /// Human-readable per-benchmark lines; regressions are marked.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for c in &self.compared {
+            let d = c.delta();
+            let mark = if d > self.max_regress {
+                "  << REGRESSION"
+            } else {
+                ""
+            };
+            out.push_str(&format!(
+                "trend {:<56} {:>12.1} -> {:>12.1} ns  ({:+.1}%){mark}\n",
+                c.name,
+                c.baseline_ns,
+                c.current_ns,
+                d * 100.0
+            ));
+        }
+        for name in &self.baseline_only {
+            out.push_str(&format!("trend {name:<56} dropped (baseline only)\n"));
+        }
+        for name in &self.current_only {
+            out.push_str(&format!("trend {name:<56} new (no baseline)\n"));
+        }
+        out
+    }
+}
+
+/// Pull `name -> median_ns` out of a `bench_allreduce --json` document.
+pub fn medians_from_json(doc: &Json) -> Result<BTreeMap<String, f64>> {
+    let results = doc
+        .req("results")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("json field 'results' is not an array"))?;
+    let mut out = BTreeMap::new();
+    for (i, r) in results.iter().enumerate() {
+        let name = r
+            .req("name")
+            .and_then(|n| {
+                n.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow::anyhow!("'name' is not a string"))
+            })
+            .with_context(|| format!("results[{i}]"))?;
+        let median = r
+            .req("median_ns")
+            .and_then(|m| {
+                m.as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("'median_ns' is not a number"))
+            })
+            .with_context(|| format!("results[{i}] ({name})"))?;
+        out.insert(name, median);
+    }
+    Ok(out)
+}
+
+fn matches(name: &str, prefixes: &[String]) -> bool {
+    prefixes.is_empty() || prefixes.iter().any(|p| name.starts_with(p.as_str()))
+}
+
+/// Compare two parsed artifacts over the named section prefixes.
+pub fn compare(
+    baseline: &Json,
+    current: &Json,
+    prefixes: &[String],
+    max_regress: f64,
+) -> Result<TrendReport> {
+    anyhow::ensure!(
+        max_regress >= 0.0,
+        "--max-regress must be non-negative, got {max_regress}"
+    );
+    let base = medians_from_json(baseline).context("baseline artifact")?;
+    let cur = medians_from_json(current).context("current artifact")?;
+    let mut report = TrendReport {
+        compared: Vec::new(),
+        regressions: Vec::new(),
+        baseline_only: Vec::new(),
+        current_only: Vec::new(),
+        max_regress,
+    };
+    for (name, &b_ns) in &base {
+        if !matches(name, prefixes) {
+            continue;
+        }
+        match cur.get(name) {
+            Some(&c_ns) => {
+                let c = Comparison {
+                    name: name.clone(),
+                    baseline_ns: b_ns,
+                    current_ns: c_ns,
+                };
+                if c.delta() > max_regress {
+                    report.regressions.push(c.clone());
+                }
+                report.compared.push(c);
+            }
+            None => report.baseline_only.push(name.clone()),
+        }
+    }
+    for name in cur.keys() {
+        if matches(name, prefixes) && !base.contains_key(name) {
+            report.current_only.push(name.clone());
+        }
+    }
+    Ok(report)
+}
+
+/// Load both artifacts from disk and compare.
+pub fn compare_files(
+    baseline: &Path,
+    current: &Path,
+    prefixes: &[String],
+    max_regress: f64,
+) -> Result<TrendReport> {
+    let load = |path: &Path| -> Result<Json> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))
+    };
+    compare(&load(baseline)?, &load(current)?, prefixes, max_regress)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifact(entries: &[(&str, f64)]) -> Json {
+        let results: Vec<Json> = entries
+            .iter()
+            .map(|(name, median)| {
+                crate::json::obj(vec![
+                    ("name", Json::from(*name)),
+                    ("median_ns", Json::from(*median)),
+                ])
+            })
+            .collect();
+        crate::json::obj(vec![
+            ("bench", Json::from("allreduce")),
+            ("results", Json::Arr(results)),
+        ])
+    }
+
+    fn prefixes(ps: &[&str]) -> Vec<String> {
+        ps.iter().map(|p| p.to_string()).collect()
+    }
+
+    #[test]
+    fn flags_regressions_past_the_budget() {
+        let base = artifact(&[("allreduce/a", 100.0), ("allreduce/b", 100.0)]);
+        let cur = artifact(&[("allreduce/a", 110.0), ("allreduce/b", 120.0)]);
+        let r = compare(&base, &cur, &prefixes(&["allreduce"]), 0.15).unwrap();
+        assert_eq!(r.compared.len(), 2);
+        assert_eq!(r.regressions.len(), 1);
+        assert_eq!(r.regressions[0].name, "allreduce/b");
+        assert!(r.render().contains("REGRESSION"));
+    }
+
+    #[test]
+    fn improvements_and_small_drifts_pass() {
+        let base = artifact(&[("codec/enc", 200.0)]);
+        let cur = artifact(&[("codec/enc", 150.0)]);
+        let r = compare(&base, &cur, &prefixes(&["codec/"]), 0.15).unwrap();
+        assert!(r.regressions.is_empty());
+        assert!((r.compared[0].delta() + 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prefix_filter_scopes_the_gate() {
+        let base = artifact(&[("codec/enc", 100.0), ("simnet/x", 100.0)]);
+        let cur = artifact(&[("codec/enc", 100.0), ("simnet/x", 900.0)]);
+        // simnet regressed 9x but is outside the gated sections.
+        let r = compare(&base, &cur, &prefixes(&["allreduce", "codec/"]), 0.15).unwrap();
+        assert!(r.regressions.is_empty());
+        assert_eq!(r.compared.len(), 1);
+        // An empty prefix list means "gate everything".
+        let all = compare(&base, &cur, &[], 0.15).unwrap();
+        assert_eq!(all.regressions.len(), 1);
+        assert_eq!(all.regressions[0].name, "simnet/x");
+    }
+
+    #[test]
+    fn one_sided_benchmarks_never_fail_the_gate() {
+        let base = artifact(&[("allreduce/old", 100.0)]);
+        let cur = artifact(&[("allreduce/new", 100.0)]);
+        let r = compare(&base, &cur, &prefixes(&["allreduce"]), 0.15).unwrap();
+        assert!(r.compared.is_empty() && r.regressions.is_empty());
+        assert_eq!(r.baseline_only, vec!["allreduce/old".to_string()]);
+        assert_eq!(r.current_only, vec!["allreduce/new".to_string()]);
+        let rendered = r.render();
+        assert!(rendered.contains("dropped") && rendered.contains("new (no baseline)"));
+    }
+
+    #[test]
+    fn zero_baseline_median_cannot_divide_by_zero() {
+        let base = artifact(&[("allreduce/z", 0.0)]);
+        let cur = artifact(&[("allreduce/z", 50.0)]);
+        let r = compare(&base, &cur, &prefixes(&["allreduce"]), 0.15).unwrap();
+        assert!(r.regressions.is_empty());
+        assert_eq!(r.compared[0].delta(), 0.0);
+    }
+
+    #[test]
+    fn schema_drift_is_a_hard_error() {
+        let no_results = crate::json::obj(vec![("bench", Json::from("allreduce"))]);
+        let ok = artifact(&[("a", 1.0)]);
+        assert!(compare(&no_results, &ok, &[], 0.15).is_err());
+        let bad_median = crate::json::obj(vec![(
+            "results",
+            Json::Arr(vec![crate::json::obj(vec![
+                ("name", Json::from("a")),
+                ("median_ns", Json::from("fast")),
+            ])]),
+        )]);
+        assert!(compare(&ok, &bad_median, &[], 0.15).is_err());
+        assert!(compare(&ok, &ok, &[], -0.1).is_err());
+    }
+
+    #[test]
+    fn compare_files_round_trips_through_disk() {
+        let dir = std::env::temp_dir().join("scalecom_trend_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let bp = dir.join("base.json");
+        let cp = dir.join("cur.json");
+        std::fs::write(&bp, artifact(&[("allreduce/a", 100.0)]).to_string_pretty()).unwrap();
+        std::fs::write(&cp, artifact(&[("allreduce/a", 130.0)]).to_string_pretty()).unwrap();
+        let r = compare_files(&bp, &cp, &prefixes(&["allreduce"]), 0.15).unwrap();
+        assert_eq!(r.regressions.len(), 1);
+        assert!(compare_files(Path::new("/nonexistent.json"), &cp, &[], 0.15).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

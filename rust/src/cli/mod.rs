@@ -123,6 +123,14 @@ SUBCOMMANDS:
                        each bucket's collective overlaps the next bucket's
                        selection compute (0 = monolithic; implies
                        per-layer budgets)
+                     --wire-compression off|delta|full  wire entropy codec
+                       for the socket backend (delta: varint-packed sparse
+                       index frames; full: + adaptive byte compression of
+                       every large frame; default off, also settable via
+                       SCALECOM_WIRE_COMPRESSION; flag > env > config)
+                     --wire-compression-dense auto|raw|lz1|lz2 and
+                     --wire-compression-sparse ...  pin the byte-compressor
+                       per frame family (default auto = size-tiered)
                      --config file.toml (flags override file)
   simulate         run the real coordination code at paper scale under
                    simulated link timing (deterministic virtual time)
@@ -148,6 +156,14 @@ SUBCOMMANDS:
                      --scheme S --dim N --rate R --steps N --seed S
                      --beta B --compress-warmup N --topology ps|ring
                      --timeout-secs N --step-delay-ms N
+                     --wire-compression off|delta|full (must match on
+                       every node of the ring; old peers are rejected at
+                       the handshake) --wire-compression-dense ...
+                       --wire-compression-sparse ...
+  bench-trend      compare two bench_allreduce --json artifacts and fail
+                   on median regressions past the budget (the CI perf gate)
+                     --baseline old.json --current new.json
+                     --max-regress 0.15 --prefixes allreduce,codec/
   experiment <id>  regenerate a paper table/figure:
                      table1 fig1a fig1b fig1c fig2 fig3 table2 table3
                      fig6 figA1 figA8  (or 'all')

@@ -1,0 +1,1061 @@
+//! Entropy stage under the wire framing: delta+varint index packing,
+//! an in-house LZ77 byte compressor, and the per-frame policy that
+//! decides when either pays for itself.
+//!
+//! ScaleCom's sparse frames carry strictly increasing u32 indices, so a
+//! delta+varint encoding (first index raw, then `idx[i] - idx[i-1] - 1`)
+//! shrinks the index half of the payload by 2-4x at paper-like top-k
+//! rates — and makes "strictly increasing" structural: a decoded delta
+//! stream cannot violate it. On top of that, [`FrameCodec`] can run an
+//! adaptive byte-compression pass ([`Algo::Lz1`]/[`Algo::Lz2`], an LZ4
+//! style token format implemented here because the build is offline and
+//! dependency-free) guarded so it only ever ships a compressed body that
+//! is *smaller* than the raw one — high-entropy payloads (random f32
+//! mantissas) fall back to raw after a cheap prefix probe.
+//!
+//! Everything here observes the wire module's decode-under-adversity
+//! contract: decoding never panics, never allocates more than the
+//! declared (and capped) output size, and rejects truncation, garbage,
+//! and "zip bomb" length fields with errors.
+//!
+//! The f32 payload bits are never transformed — only the byte envelope
+//! changes — so the backend determinism contract survives compression.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+// ---------------------------------------------------------------------------
+// varint + delta primitives
+// ---------------------------------------------------------------------------
+
+/// Append `v` as LEB128 (7 bits per byte, low to high; at most 5 bytes).
+pub fn put_varint_u32(out: &mut Vec<u8>, mut v: u32) {
+    while v >= 0x80 {
+        out.push((v as u8 & 0x7F) | 0x80);
+        v >>= 7;
+    }
+    out.push(v as u8);
+}
+
+/// Encoded size of `v` as a varint.
+pub fn varint_len(v: u32) -> usize {
+    match v {
+        0..=0x7F => 1,
+        0x80..=0x3FFF => 2,
+        0x4000..=0x1F_FFFF => 3,
+        0x20_0000..=0xFFF_FFFF => 4,
+        _ => 5,
+    }
+}
+
+/// Read one varint u32 at `*pos`, advancing it. Rejects truncation and
+/// encodings that overflow 32 bits.
+pub fn read_varint_u32(buf: &[u8], pos: &mut usize) -> anyhow::Result<u32> {
+    let mut v: u32 = 0;
+    for shift in 0..5u32 {
+        let b = *buf
+            .get(*pos)
+            .ok_or_else(|| anyhow::anyhow!("codec: truncated varint"))?;
+        *pos += 1;
+        let payload = (b & 0x7F) as u32;
+        if shift == 4 && payload > 0x0F {
+            anyhow::bail!("codec: varint overflows u32");
+        }
+        v |= payload << (7 * shift);
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+    }
+    anyhow::bail!("codec: varint longer than 5 bytes")
+}
+
+/// True when `idx` is strictly increasing (the packable shape).
+pub fn strictly_increasing(idx: &[u32]) -> bool {
+    idx.windows(2).all(|w| w[0] < w[1])
+}
+
+/// Append a strictly increasing index set as delta+varints: the first
+/// index verbatim, then `idx[i] - idx[i-1] - 1` (the `-1` is free — gaps
+/// are at least 1 — and lets a decoder rebuild a strictly increasing set
+/// by construction).
+pub fn put_index_deltas(out: &mut Vec<u8>, indices: &[u32]) {
+    debug_assert!(strictly_increasing(indices));
+    let mut prev: u32 = 0;
+    for (k, &i) in indices.iter().enumerate() {
+        let d = if k == 0 { i } else { i - prev - 1 };
+        put_varint_u32(out, d);
+        prev = i;
+    }
+}
+
+/// Exact byte length [`put_index_deltas`] would append.
+pub fn index_deltas_len(indices: &[u32]) -> usize {
+    let mut prev: u32 = 0;
+    let mut total = 0usize;
+    for (k, &i) in indices.iter().enumerate() {
+        let d = if k == 0 { i } else { i - prev - 1 };
+        total += varint_len(d);
+        prev = i;
+    }
+    total
+}
+
+/// Read `count` delta+varint indices at `*pos`. The result is strictly
+/// increasing by construction; an accumulated index past `u32::MAX` is
+/// rejected (in u64, overflow-proof).
+pub fn read_index_deltas(buf: &[u8], pos: &mut usize, count: usize) -> anyhow::Result<Vec<u32>> {
+    let mut idx = Vec::with_capacity(count);
+    let mut acc: u64 = 0;
+    for k in 0..count {
+        let d = read_varint_u32(buf, pos)? as u64;
+        acc = if k == 0 { d } else { acc + d + 1 };
+        anyhow::ensure!(acc <= u32::MAX as u64, "codec: packed index overflows u32");
+        idx.push(acc as u32);
+    }
+    Ok(idx)
+}
+
+// ---------------------------------------------------------------------------
+// byte compressor ("slz": LZ4-style token stream, dependency-free)
+// ---------------------------------------------------------------------------
+//
+// sequence := [u8 token] [literal-len ext] [literals]
+//            ([u16 LE offset] [match-len ext])?
+// token    := (literal_len.min(15) << 4) | match_code.min(15)
+//
+// A nibble of 15 is followed by 255-run extension bytes (LZ4's scheme).
+// `match_len = match_code + 4`. The final sequence of a stream carries
+// literals only — the decoder observes end-of-input after the literal
+// run and stops, so no explicit terminator byte is spent.
+
+const LZ_MIN_MATCH: usize = 4;
+/// The compressor leaves the last bytes of its input as literals so
+/// match extension never reads past the end.
+const LZ_TAIL: usize = 5;
+const LZ_MAX_OFFSET: usize = 0xFFFF;
+
+/// Byte-compression algorithm of one frame body. `Lz1`/`Lz2` share one
+/// format and differ only in search effort (hash-table size and how fast
+/// the matcher skips over incompressible runs), so a decoder needs no
+/// per-level logic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algo {
+    /// No byte-compression pass (the body ships as encoded).
+    Raw,
+    /// Fast greedy match search (4K hash slots) — small/mid bodies.
+    Lz1,
+    /// Deeper search (64K hash slots) — large bodies where a better
+    /// ratio amortizes the extra table work.
+    Lz2,
+}
+
+impl Algo {
+    pub const COUNT: usize = 3;
+    pub const ALL: [Algo; Algo::COUNT] = [Algo::Raw, Algo::Lz1, Algo::Lz2];
+
+    pub fn to_byte(self) -> u8 {
+        match self {
+            Algo::Raw => 0,
+            Algo::Lz1 => 1,
+            Algo::Lz2 => 2,
+        }
+    }
+
+    pub fn from_byte(b: u8) -> anyhow::Result<Algo> {
+        match b {
+            0 => Ok(Algo::Raw),
+            1 => Ok(Algo::Lz1),
+            2 => Ok(Algo::Lz2),
+            other => anyhow::bail!("codec: unknown compression algorithm byte {other}"),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Algo::Raw => "raw",
+            Algo::Lz1 => "lz1",
+            Algo::Lz2 => "lz2",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Algo> {
+        match s {
+            "raw" => Ok(Algo::Raw),
+            "lz1" => Ok(Algo::Lz1),
+            "lz2" => Ok(Algo::Lz2),
+            other => anyhow::bail!(
+                "unknown compression algorithm '{other}' (expected raw | lz1 | lz2)"
+            ),
+        }
+    }
+
+    fn index(self) -> usize {
+        self.to_byte() as usize
+    }
+
+    fn hash_bits(self) -> u32 {
+        match self {
+            Algo::Raw => 0,
+            Algo::Lz1 => 12,
+            Algo::Lz2 => 16,
+        }
+    }
+
+    /// After `1 << accel_log2` consecutive match misses the scanner
+    /// starts skipping bytes, so incompressible data costs ~O(n/step).
+    fn accel_log2(self) -> u32 {
+        match self {
+            Algo::Raw => 0,
+            Algo::Lz1 => 5,
+            Algo::Lz2 => 7,
+        }
+    }
+}
+
+fn load4(src: &[u8], p: usize) -> u32 {
+    u32::from_le_bytes([src[p], src[p + 1], src[p + 2], src[p + 3]])
+}
+
+fn hash4(v: u32, bits: u32) -> usize {
+    (v.wrapping_mul(2_654_435_761) >> (32 - bits)) as usize
+}
+
+fn put_len_ext(out: &mut Vec<u8>, mut v: usize) {
+    while v >= 255 {
+        out.push(255);
+        v -= 255;
+    }
+    out.push(v as u8);
+}
+
+fn emit_sequence(out: &mut Vec<u8>, literals: &[u8], offset: u16, mlen: usize) {
+    let ll = literals.len();
+    let ml = mlen - LZ_MIN_MATCH;
+    out.push(((ll.min(15) as u8) << 4) | ml.min(15) as u8);
+    if ll >= 15 {
+        put_len_ext(out, ll - 15);
+    }
+    out.extend_from_slice(literals);
+    out.extend_from_slice(&offset.to_le_bytes());
+    if ml >= 15 {
+        put_len_ext(out, ml - 15);
+    }
+}
+
+fn emit_literal_run(out: &mut Vec<u8>, literals: &[u8]) {
+    let ll = literals.len();
+    out.push((ll.min(15) as u8) << 4);
+    if ll >= 15 {
+        put_len_ext(out, ll - 15);
+    }
+    out.extend_from_slice(literals);
+}
+
+/// Compress `src` into `out` (cleared first). `table` is the caller's
+/// reusable hash-table scratch — [`FrameCodec`] owns one so the hot path
+/// allocates nothing once warm. Output is never *read* by the encoder,
+/// so compression cannot fail; it can only come out larger than the
+/// input, which the caller's compress-if-beneficial guard handles.
+pub fn lz_compress_into(src: &[u8], out: &mut Vec<u8>, table: &mut Vec<u32>, algo: Algo) {
+    out.clear();
+    let len = src.len();
+    if algo == Algo::Raw || len < 16 {
+        emit_literal_run(out, src);
+        return;
+    }
+    let bits = algo.hash_bits();
+    table.clear();
+    table.resize(1usize << bits, u32::MAX);
+    let accel = algo.accel_log2();
+    let search_end = len - 8;
+    let tail_end = len - LZ_TAIL;
+    let mut anchor = 0usize;
+    let mut pos = 0usize;
+    let mut misses: u32 = 0;
+    while pos < search_end {
+        let here = load4(src, pos);
+        let h = hash4(here, bits);
+        let cand = table[h];
+        table[h] = pos as u32;
+        if cand != u32::MAX {
+            let cand = cand as usize;
+            if pos - cand <= LZ_MAX_OFFSET && load4(src, cand) == here {
+                let mut mlen = LZ_MIN_MATCH;
+                let max_m = tail_end - pos;
+                while mlen < max_m && src[cand + mlen] == src[pos + mlen] {
+                    mlen += 1;
+                }
+                emit_sequence(out, &src[anchor..pos], (pos - cand) as u16, mlen);
+                pos += mlen;
+                anchor = pos;
+                misses = 0;
+                continue;
+            }
+        }
+        misses += 1;
+        pos += 1 + (misses >> accel) as usize;
+    }
+    emit_literal_run(out, &src[anchor..]);
+}
+
+fn read_len_ext(src: &[u8], pos: &mut usize) -> anyhow::Result<usize> {
+    let mut v = 0usize;
+    loop {
+        let b = *src
+            .get(*pos)
+            .ok_or_else(|| anyhow::anyhow!("codec: truncated length extension"))?;
+        *pos += 1;
+        v += b as usize;
+        if b != 255 {
+            return Ok(v);
+        }
+    }
+}
+
+/// Decompress `src` into `out` (cleared first), which must come out at
+/// exactly `expected_len` bytes — the caller reads that from the frame
+/// envelope *after* capping it, so a hostile stream can neither force an
+/// allocation beyond the cap nor smuggle a short/long body through.
+/// Never panics on any input.
+pub fn lz_decompress_into(src: &[u8], out: &mut Vec<u8>, expected_len: usize) -> anyhow::Result<()> {
+    out.clear();
+    out.reserve(expected_len);
+    let mut pos = 0usize;
+    while pos < src.len() {
+        let tok = src[pos];
+        pos += 1;
+        let mut ll = (tok >> 4) as usize;
+        if ll == 15 {
+            ll += read_len_ext(src, &mut pos)?;
+        }
+        anyhow::ensure!(pos + ll <= src.len(), "codec: truncated literal run");
+        anyhow::ensure!(
+            out.len() + ll <= expected_len,
+            "codec: compressed body expands past its declared {expected_len} bytes"
+        );
+        out.extend_from_slice(&src[pos..pos + ll]);
+        pos += ll;
+        if pos == src.len() {
+            break; // final sequence: literals only
+        }
+        anyhow::ensure!(pos + 2 <= src.len(), "codec: truncated match offset");
+        let off = u16::from_le_bytes([src[pos], src[pos + 1]]) as usize;
+        pos += 2;
+        anyhow::ensure!(
+            off >= 1 && off <= out.len(),
+            "codec: match offset {off} out of range ({} bytes decoded)",
+            out.len()
+        );
+        let mut ml = (tok & 0x0F) as usize + LZ_MIN_MATCH;
+        if tok & 0x0F == 15 {
+            ml += read_len_ext(src, &mut pos)?;
+        }
+        anyhow::ensure!(
+            out.len() + ml <= expected_len,
+            "codec: compressed body expands past its declared {expected_len} bytes"
+        );
+        // Overlapping back-reference: each pass doubles the available
+        // run, so a RLE-style offset-1 match is O(log) passes.
+        let start = out.len() - off;
+        let mut remaining = ml;
+        while remaining > 0 {
+            let n = remaining.min(out.len() - start);
+            out.extend_from_within(start..start + n);
+            remaining -= n;
+        }
+    }
+    anyhow::ensure!(
+        out.len() == expected_len,
+        "codec: decompressed {} bytes but the frame declared {expected_len}",
+        out.len()
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// configuration
+// ---------------------------------------------------------------------------
+
+/// Wire-compression mode (`--wire-compression`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WireCompression {
+    /// v1 frames, byte-for-byte: no packing, no byte compression.
+    #[default]
+    Off,
+    /// Delta+varint packing of sparse/index frames only (cheap, always
+    /// a win at sparse rates; dense bodies untouched).
+    Delta,
+    /// Delta packing plus the adaptive byte-compression pass.
+    Full,
+}
+
+impl WireCompression {
+    pub fn parse(s: &str) -> anyhow::Result<WireCompression> {
+        match s {
+            "off" | "none" => Ok(WireCompression::Off),
+            "delta" | "index" => Ok(WireCompression::Delta),
+            "full" | "on" => Ok(WireCompression::Full),
+            other => anyhow::bail!(
+                "unknown wire compression mode '{other}' (expected off | delta | full)"
+            ),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            WireCompression::Off => "off",
+            WireCompression::Delta => "delta",
+            WireCompression::Full => "full",
+        }
+    }
+}
+
+/// Per-scheme algorithm override: `Auto` picks by body size, `Force`
+/// pins one algorithm (`Force(Raw)` disables the byte pass for that
+/// scheme while leaving delta packing on).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AlgoChoice {
+    #[default]
+    Auto,
+    Force(Algo),
+}
+
+impl AlgoChoice {
+    pub fn parse(s: &str) -> anyhow::Result<AlgoChoice> {
+        match s {
+            "auto" => Ok(AlgoChoice::Auto),
+            other => Ok(AlgoChoice::Force(Algo::parse(other)?)),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            AlgoChoice::Auto => "auto",
+            AlgoChoice::Force(a) => a.label(),
+        }
+    }
+}
+
+/// Env var consulted when `--wire-compression` is not given (strict
+/// parse: set-but-invalid is a hard error, mirroring
+/// `SCALECOM_SOCKET_TIMEOUT_SECS`).
+pub const ENV_WIRE_COMPRESSION: &str = "SCALECOM_WIRE_COMPRESSION";
+
+/// Read [`ENV_WIRE_COMPRESSION`]; `None` when unset.
+pub fn env_wire_compression() -> anyhow::Result<Option<WireCompression>> {
+    match std::env::var(ENV_WIRE_COMPRESSION) {
+        Ok(s) => WireCompression::parse(s.trim())
+            .map(Some)
+            .map_err(|e| anyhow::anyhow!("{ENV_WIRE_COMPRESSION}={s}: {e}")),
+        Err(std::env::VarError::NotPresent) => Ok(None),
+        Err(e) => Err(anyhow::anyhow!("{ENV_WIRE_COMPRESSION}: {e}")),
+    }
+}
+
+/// Bodies below this many bytes skip the byte-compression pass (the
+/// wrapper overhead and timer cost would not pay for themselves).
+pub const DEFAULT_MIN_COMPRESS_BYTES: usize = 1024;
+
+/// Frame-codec configuration, threaded from config/CLI down to every
+/// socket endpoint of a mesh. `Copy` on purpose: it rides inside
+/// `LaneTransport`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WireCodecConfig {
+    pub mode: WireCompression,
+    /// Minimum body size for the byte-compression pass.
+    pub min_bytes: usize,
+    /// Algorithm choice for dense ring chunks.
+    pub dense: AlgoChoice,
+    /// Algorithm choice for sparse gathers and index broadcasts.
+    pub sparse: AlgoChoice,
+}
+
+impl Default for WireCodecConfig {
+    fn default() -> Self {
+        WireCodecConfig {
+            mode: WireCompression::Off,
+            min_bytes: DEFAULT_MIN_COMPRESS_BYTES,
+            dense: AlgoChoice::Auto,
+            sparse: AlgoChoice::Auto,
+        }
+    }
+}
+
+impl WireCodecConfig {
+    /// v1 frames, byte-for-byte (the default).
+    pub fn off() -> WireCodecConfig {
+        WireCodecConfig::default()
+    }
+
+    pub fn with_mode(mode: WireCompression) -> WireCodecConfig {
+        WireCodecConfig { mode, ..WireCodecConfig::default() }
+    }
+
+    /// Build from the CLI/config strings (`--wire-compression`,
+    /// `--wire-compression-dense`, `--wire-compression-sparse`).
+    pub fn from_strings(mode: &str, dense: &str, sparse: &str) -> anyhow::Result<WireCodecConfig> {
+        Ok(WireCodecConfig {
+            mode: WireCompression::parse(mode)?,
+            min_bytes: DEFAULT_MIN_COMPRESS_BYTES,
+            dense: AlgoChoice::parse(dense)?,
+            sparse: AlgoChoice::parse(sparse)?,
+        })
+    }
+
+    /// Does the encoder use the packed (v2) frame tags?
+    pub fn packing(self) -> bool {
+        self.mode != WireCompression::Off
+    }
+
+    /// Does the encoder run the byte-compression pass?
+    pub fn byte_pass(self) -> bool {
+        self.mode == WireCompression::Full
+    }
+
+    /// Minimum wire-codec version a peer must speak to decode our
+    /// frames: packed tags need v2, `off` stays decodable by v1 peers.
+    pub fn required_peer_codec(self) -> u8 {
+        if self.packing() {
+            crate::comm::wire::WIRE_CODEC_VERSION
+        } else {
+            1
+        }
+    }
+
+    pub fn label(self) -> String {
+        if self.byte_pass() {
+            format!(
+                "{} (dense={}, sparse={})",
+                self.mode.label(),
+                self.dense.label(),
+                self.sparse.label()
+            )
+        } else {
+            self.mode.label().to_string()
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// per-algorithm stats
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct AlgoAtomics {
+    enc_frames: AtomicU64,
+    enc_raw_bytes: AtomicU64,
+    enc_wire_bytes: AtomicU64,
+    enc_ns: AtomicU64,
+    dec_frames: AtomicU64,
+    dec_wire_bytes: AtomicU64,
+    dec_raw_bytes: AtomicU64,
+    dec_ns: AtomicU64,
+}
+
+#[derive(Default)]
+struct CodecAtomics {
+    per_algo: [AlgoAtomics; Algo::COUNT],
+    packed_frames: AtomicU64,
+    guard_fallbacks: AtomicU64,
+    sample_skips: AtomicU64,
+}
+
+/// Shared, cloneable codec counters: every [`FrameCodec`] of one lane
+/// mesh (sender writer threads, receivers, all ranks of an in-process
+/// ring) books into the same handle, and a snapshot rolls up into
+/// `CommStats`.
+#[derive(Clone, Default)]
+pub struct CodecStats {
+    inner: Arc<CodecAtomics>,
+}
+
+impl std::fmt::Debug for CodecStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.snapshot().fmt(f)
+    }
+}
+
+impl CodecStats {
+    pub fn new() -> CodecStats {
+        CodecStats::default()
+    }
+
+    fn record_encode(&self, algo: Algo, raw_bytes: usize, wire_bytes: usize, ns: u64) {
+        let a = &self.inner.per_algo[algo.index()];
+        a.enc_frames.fetch_add(1, Ordering::Relaxed);
+        a.enc_raw_bytes.fetch_add(raw_bytes as u64, Ordering::Relaxed);
+        a.enc_wire_bytes.fetch_add(wire_bytes as u64, Ordering::Relaxed);
+        a.enc_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    fn record_decode(&self, algo: Algo, wire_bytes: usize, raw_bytes: usize, ns: u64) {
+        let a = &self.inner.per_algo[algo.index()];
+        a.dec_frames.fetch_add(1, Ordering::Relaxed);
+        a.dec_wire_bytes.fetch_add(wire_bytes as u64, Ordering::Relaxed);
+        a.dec_raw_bytes.fetch_add(raw_bytes as u64, Ordering::Relaxed);
+        a.dec_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    fn record_packed(&self) {
+        self.inner.packed_frames.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn record_guard_fallback(&self) {
+        self.inner.guard_fallbacks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn record_sample_skip(&self) {
+        self.inner.sample_skips.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> CodecSnapshot {
+        let mut s = CodecSnapshot::default();
+        for (i, a) in self.inner.per_algo.iter().enumerate() {
+            s.per_algo[i] = AlgoStats {
+                enc_frames: a.enc_frames.load(Ordering::Relaxed),
+                enc_raw_bytes: a.enc_raw_bytes.load(Ordering::Relaxed),
+                enc_wire_bytes: a.enc_wire_bytes.load(Ordering::Relaxed),
+                enc_ns: a.enc_ns.load(Ordering::Relaxed),
+                dec_frames: a.dec_frames.load(Ordering::Relaxed),
+                dec_wire_bytes: a.dec_wire_bytes.load(Ordering::Relaxed),
+                dec_raw_bytes: a.dec_raw_bytes.load(Ordering::Relaxed),
+                dec_ns: a.dec_ns.load(Ordering::Relaxed),
+            };
+        }
+        s.packed_frames = self.inner.packed_frames.load(Ordering::Relaxed);
+        s.guard_fallbacks = self.inner.guard_fallbacks.load(Ordering::Relaxed);
+        s.sample_skips = self.inner.sample_skips.load(Ordering::Relaxed);
+        s
+    }
+}
+
+/// Counters for one algorithm. `raw` is the v1 (unpacked, uncompressed)
+/// body size the same message would have cost, so `raw / wire` is the
+/// end-to-end envelope ratio including delta packing.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct AlgoStats {
+    pub enc_frames: u64,
+    pub enc_raw_bytes: u64,
+    pub enc_wire_bytes: u64,
+    pub enc_ns: u64,
+    pub dec_frames: u64,
+    pub dec_wire_bytes: u64,
+    pub dec_raw_bytes: u64,
+    pub dec_ns: u64,
+}
+
+/// Point-in-time roll-up of [`CodecStats`], surfaced through
+/// `CommStats::codec`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CodecSnapshot {
+    pub per_algo: [AlgoStats; Algo::COUNT],
+    /// Frames that used a packed (delta+varint) representation.
+    pub packed_frames: u64,
+    /// Byte-pass attempts abandoned because the output was not smaller.
+    pub guard_fallbacks: u64,
+    /// Byte-pass attempts skipped by the high-entropy prefix probe.
+    pub sample_skips: u64,
+}
+
+impl CodecSnapshot {
+    pub fn algo(&self, a: Algo) -> &AlgoStats {
+        &self.per_algo[a.index()]
+    }
+
+    pub fn enc_frames(&self) -> u64 {
+        self.per_algo.iter().map(|a| a.enc_frames).sum()
+    }
+
+    pub fn enc_raw_bytes(&self) -> u64 {
+        self.per_algo.iter().map(|a| a.enc_raw_bytes).sum()
+    }
+
+    pub fn enc_wire_bytes(&self) -> u64 {
+        self.per_algo.iter().map(|a| a.enc_wire_bytes).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.per_algo.iter().all(|a| a.enc_frames == 0 && a.dec_frames == 0)
+    }
+
+    /// Envelope ratio: raw bytes the frames would have cost on a v1
+    /// wire over bytes actually shipped (1.0 when nothing was saved).
+    pub fn ratio(&self) -> f64 {
+        let wire = self.enc_wire_bytes();
+        if wire == 0 {
+            return 1.0;
+        }
+        self.enc_raw_bytes() as f64 / wire as f64
+    }
+
+    /// One-line human summary for run reports.
+    pub fn summary(&self) -> String {
+        let mut parts = Vec::new();
+        for a in Algo::ALL {
+            let s = self.algo(a);
+            if s.enc_frames > 0 {
+                parts.push(format!(
+                    "{}: {} frames {} -> {} B",
+                    a.label(),
+                    s.enc_frames,
+                    s.enc_raw_bytes,
+                    s.enc_wire_bytes
+                ));
+            }
+        }
+        format!(
+            "codec {:.2}x ({}; packed {}, guard fallbacks {}, probe skips {})",
+            self.ratio(),
+            if parts.is_empty() { "idle".to_string() } else { parts.join(", ") },
+            self.packed_frames,
+            self.guard_fallbacks,
+            self.sample_skips
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FrameCodec: per-endpoint policy + pooled scratch
+// ---------------------------------------------------------------------------
+
+/// Prefix length of the compressibility probe.
+const SAMPLE_BYTES: usize = 4096;
+
+/// One endpoint's frame encoder/decoder: owns the codec policy and all
+/// scratch buffers (compression staging, probe, hash table), so the hot
+/// path re-encodes multi-MB dense chunks with **zero** per-frame
+/// allocation once the buffers are warm. Not `Sync` — each socket
+/// writer thread / receiver owns its own, sharing only [`CodecStats`].
+pub struct FrameCodec {
+    cfg: WireCodecConfig,
+    stats: CodecStats,
+    /// Compressed-body staging (encode) / decompressed-body staging
+    /// (decode).
+    comp: Vec<u8>,
+    /// Compressibility-probe output.
+    sample: Vec<u8>,
+    /// LZ hash table.
+    table: Vec<u32>,
+}
+
+impl FrameCodec {
+    pub fn new(cfg: WireCodecConfig, stats: CodecStats) -> FrameCodec {
+        FrameCodec {
+            cfg,
+            stats,
+            comp: Vec::new(),
+            sample: Vec::new(),
+            table: Vec::new(),
+        }
+    }
+
+    pub fn cfg(&self) -> WireCodecConfig {
+        self.cfg
+    }
+
+    pub fn stats(&self) -> &CodecStats {
+        &self.stats
+    }
+
+    /// Encode one full frame (4-byte header + body) into `out`,
+    /// reusing `out`'s capacity. Enforces the sender-side
+    /// `MAX_FRAME_BYTES` cap like `wire::write_msg`.
+    pub fn encode_frame_into(&mut self, msg: &crate::comm::wire::WireMsg, out: &mut Vec<u8>) -> anyhow::Result<()> {
+        use crate::comm::wire;
+        let t0 = std::time::Instant::now();
+        let raw_body = wire::frame_len(msg) - 4;
+        out.clear();
+        out.extend_from_slice(&[0u8; 4]); // header patched below
+        let packed = wire::encode_body_into(msg, self.cfg.packing(), out);
+        if packed {
+            self.stats.record_packed();
+        }
+        let mut algo = Algo::Raw;
+        if self.cfg.byte_pass() {
+            if let Some(a) = self.pick_algo(msg, out.len() - 4) {
+                if self.try_compress_body(&out[4..], a) {
+                    let inner_len = out.len() - 4;
+                    out.truncate(4);
+                    out.push(wire::TAG_COMPRESSED);
+                    out.push(a.to_byte());
+                    put_varint_u32(out, inner_len as u32);
+                    out.extend_from_slice(&self.comp);
+                    algo = a;
+                }
+            }
+        }
+        let body_len = out.len() - 4;
+        anyhow::ensure!(
+            body_len <= wire::MAX_FRAME_BYTES,
+            "outgoing frame body of {body_len} bytes exceeds the {}-byte wire cap \
+             (payload too large for one frame — lower the dimension or chunk it)",
+            wire::MAX_FRAME_BYTES
+        );
+        out[..4].copy_from_slice(&(body_len as u32).to_le_bytes());
+        self.stats
+            .record_encode(algo, raw_body, body_len, t0.elapsed().as_nanos() as u64);
+        Ok(())
+    }
+
+    /// Decode one frame body (bytes after the length header), staging
+    /// any decompression through the pooled scratch.
+    pub fn decode_body(&mut self, body: &[u8]) -> anyhow::Result<crate::comm::wire::WireMsg> {
+        use crate::comm::wire;
+        let t0 = std::time::Instant::now();
+        let (algo, raw_len, msg) = if body.first() == Some(&wire::TAG_COMPRESSED) {
+            let (algo, raw_len, payload) = wire::split_compressed(body)?;
+            lz_decompress_into(payload, &mut self.comp, raw_len)?;
+            (algo, raw_len, wire::decode_body_uncompressed(&self.comp)?)
+        } else {
+            (Algo::Raw, body.len(), wire::decode_body_uncompressed(body)?)
+        };
+        self.stats
+            .record_decode(algo, body.len(), raw_len, t0.elapsed().as_nanos() as u64);
+        Ok(msg)
+    }
+
+    /// Size-tiered algorithm selection (small bodies skip, mid bodies
+    /// take the fast level, large ones the deeper level), respecting
+    /// per-scheme overrides. The handshake is never compressed so a
+    /// rendezvous stays parsable by any peer version.
+    fn pick_algo(&self, msg: &crate::comm::wire::WireMsg, body_len: usize) -> Option<Algo> {
+        use crate::comm::wire::WireMsg;
+        if body_len < self.cfg.min_bytes {
+            return None;
+        }
+        let choice = match msg {
+            WireMsg::DenseChunk { .. } => self.cfg.dense,
+            WireMsg::Sparse { .. } | WireMsg::Indices(_) => self.cfg.sparse,
+            WireMsg::Hello { .. } => return None,
+        };
+        match choice {
+            AlgoChoice::Force(Algo::Raw) => None,
+            AlgoChoice::Force(a) => Some(a),
+            AlgoChoice::Auto => Some(if body_len <= 64 << 10 { Algo::Lz1 } else { Algo::Lz2 }),
+        }
+    }
+
+    /// Run the byte pass into `self.comp`; `false` means ship raw
+    /// (probe said high-entropy, or output was not smaller).
+    fn try_compress_body(&mut self, body: &[u8], algo: Algo) -> bool {
+        if body.len() > 4 * SAMPLE_BYTES {
+            // Cheap probe: random f32 mantissas barely shrink — if a
+            // prefix sample saves < 1/32, skip the full pass.
+            lz_compress_into(&body[..SAMPLE_BYTES], &mut self.sample, &mut self.table, algo);
+            if self.sample.len() >= SAMPLE_BYTES - SAMPLE_BYTES / 32 {
+                self.stats.record_sample_skip();
+                return false;
+            }
+        }
+        lz_compress_into(body, &mut self.comp, &mut self.table, algo);
+        let overhead = 2 + varint_len(body.len() as u32);
+        if self.comp.len() + overhead >= body.len() {
+            self.stats.record_guard_fallback();
+            return false;
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn varint_roundtrips_across_widths() {
+        let mut out = Vec::new();
+        for v in [0u32, 1, 0x7F, 0x80, 0x3FFF, 0x4000, 0x1F_FFFF, 0x20_0000, u32::MAX] {
+            out.clear();
+            put_varint_u32(&mut out, v);
+            assert_eq!(out.len(), varint_len(v), "v={v}");
+            let mut pos = 0;
+            assert_eq!(read_varint_u32(&out, &mut pos).unwrap(), v);
+            assert_eq!(pos, out.len());
+        }
+    }
+
+    #[test]
+    fn varint_rejects_truncation_and_overflow() {
+        let mut pos = 0;
+        assert!(read_varint_u32(&[], &mut pos).is_err());
+        let mut pos = 0;
+        assert!(read_varint_u32(&[0x80], &mut pos).is_err(), "dangling continuation");
+        // 5th byte carrying more than 4 significant bits overflows u32
+        let mut pos = 0;
+        assert!(read_varint_u32(&[0xFF, 0xFF, 0xFF, 0xFF, 0x10], &mut pos).is_err());
+        // 6-byte encodings are rejected outright
+        let mut pos = 0;
+        assert!(read_varint_u32(&[0x80, 0x80, 0x80, 0x80, 0x80, 0x01], &mut pos).is_err());
+    }
+
+    #[test]
+    fn index_deltas_roundtrip() {
+        for idx in [
+            vec![],
+            vec![0u32],
+            vec![u32::MAX],
+            vec![0, 1, 2, 3],
+            vec![5, 100, 10_000, 1_000_000, u32::MAX],
+        ] {
+            let mut out = Vec::new();
+            put_index_deltas(&mut out, &idx);
+            assert_eq!(out.len(), index_deltas_len(&idx));
+            let mut pos = 0;
+            assert_eq!(read_index_deltas(&out, &mut pos, idx.len()).unwrap(), idx);
+            assert_eq!(pos, out.len());
+        }
+    }
+
+    #[test]
+    fn index_deltas_shrink_paper_like_index_sets() {
+        // top-k at rate 112 over 1M: average gap ~112 → ≤ 2-byte varints
+        let idx: Vec<u32> = (0..8928u32).map(|i| i * 112).collect();
+        let packed = index_deltas_len(&idx);
+        let raw = 4 * idx.len();
+        assert!(
+            packed * 2 <= raw,
+            "delta+varint must at least halve paper-like index sets: {packed} vs {raw}"
+        );
+    }
+
+    #[test]
+    fn index_delta_overflow_rejected() {
+        // deltas that accumulate past u32::MAX must error, not wrap
+        let mut out = Vec::new();
+        put_varint_u32(&mut out, u32::MAX); // first index
+        put_varint_u32(&mut out, 10); // +11 overflows
+        let mut pos = 0;
+        assert!(read_index_deltas(&out, &mut pos, 2).is_err());
+    }
+
+    #[test]
+    fn lz_roundtrips_structured_and_random_bodies() {
+        let mut table = Vec::new();
+        let mut comp = Vec::new();
+        let mut back = Vec::new();
+        let mut rng: u64 = 0x9E37_79B9_7F4A_7C15;
+        let mut rand_byte = move || {
+            rng ^= rng << 13;
+            rng ^= rng >> 7;
+            rng ^= rng << 17;
+            (rng >> 32) as u8
+        };
+        let mut cases: Vec<Vec<u8>> = vec![
+            vec![],
+            b"a".to_vec(),
+            b"abcdabcdabcdabcdabcdabcd".to_vec(),
+            vec![0u8; 4096],
+            [1u8, 2, 3, 4].repeat(2000),
+            vec![b'x'; 15],
+            vec![b'x'; 16],
+            vec![b'x'; 17],
+            (0..30000u32).map(|i| (i % 128) as u8).collect(),
+        ];
+        cases.push((0..5000).map(|_| rand_byte()).collect());
+        cases.push((0..20000).map(|_| rand_byte() & 3).collect());
+        for n in 0..40 {
+            cases.push((0..n).map(|_| rand_byte()).collect());
+        }
+        for algo in [Algo::Lz1, Algo::Lz2] {
+            for (i, c) in cases.iter().enumerate() {
+                lz_compress_into(c, &mut comp, &mut table, algo);
+                lz_decompress_into(&comp, &mut back, c.len())
+                    .unwrap_or_else(|e| panic!("case {i} ({} B, {algo:?}): {e}", c.len()));
+                assert_eq!(&back, c, "case {i} ({algo:?})");
+            }
+        }
+    }
+
+    #[test]
+    fn lz_compresses_redundancy_well() {
+        let mut table = Vec::new();
+        let mut comp = Vec::new();
+        lz_compress_into(&vec![0u8; 4096], &mut comp, &mut table, Algo::Lz1);
+        assert!(comp.len() * 50 < 4096, "zeros must shrink >50x, got {}", comp.len());
+    }
+
+    #[test]
+    fn lz_decompress_rejects_garbage_and_caps() {
+        let mut out = Vec::new();
+        let mut rng: u64 = 42;
+        for _ in 0..2000 {
+            rng = rng.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let n = (rng >> 33) as usize % 100;
+            let garbage: Vec<u8> = (0..n)
+                .map(|i| {
+                    rng = rng.wrapping_mul(6364136223846793005).wrapping_add(i as u64);
+                    (rng >> 40) as u8
+                })
+                .collect();
+            // must never panic; wrong size / truncation / bad offsets error
+            let _ = lz_decompress_into(&garbage, &mut out, (rng >> 20) as usize % 300);
+        }
+        // a valid stream must land on exactly the declared size
+        let mut table = Vec::new();
+        let mut comp = Vec::new();
+        let body = [7u8; 1000];
+        lz_compress_into(&body, &mut comp, &mut table, Algo::Lz1);
+        assert!(lz_decompress_into(&comp, &mut out, 999).is_err(), "short declaration");
+        assert!(lz_decompress_into(&comp, &mut out, 1001).is_err(), "long declaration");
+        assert!(lz_decompress_into(&comp, &mut out, 1000).is_ok());
+    }
+
+    #[test]
+    fn config_parsing() {
+        assert_eq!(WireCompression::parse("off").unwrap(), WireCompression::Off);
+        assert_eq!(WireCompression::parse("delta").unwrap(), WireCompression::Delta);
+        assert_eq!(WireCompression::parse("full").unwrap(), WireCompression::Full);
+        assert!(WireCompression::parse("gzip").is_err());
+        assert_eq!(AlgoChoice::parse("auto").unwrap(), AlgoChoice::Auto);
+        assert_eq!(AlgoChoice::parse("lz2").unwrap(), AlgoChoice::Force(Algo::Lz2));
+        assert!(AlgoChoice::parse("zstd").is_err());
+        let cfg = WireCodecConfig::from_strings("full", "raw", "lz1").unwrap();
+        assert!(cfg.byte_pass());
+        assert_eq!(cfg.dense, AlgoChoice::Force(Algo::Raw));
+        assert_eq!(cfg.sparse, AlgoChoice::Force(Algo::Lz1));
+        assert_eq!(WireCodecConfig::off().required_peer_codec(), 1);
+        assert_eq!(
+            WireCodecConfig::with_mode(WireCompression::Delta).required_peer_codec(),
+            crate::comm::wire::WIRE_CODEC_VERSION
+        );
+    }
+
+    #[test]
+    fn env_wire_compression_is_strict() {
+        // NB: env vars are process-global; use a unique temp var via the
+        // real one but restore it. Tests in this crate run threaded, so
+        // only touch the var briefly and tolerate Unset races by using
+        // set/remove around the asserts.
+        std::env::set_var(ENV_WIRE_COMPRESSION, "delta");
+        assert_eq!(env_wire_compression().unwrap(), Some(WireCompression::Delta));
+        std::env::set_var(ENV_WIRE_COMPRESSION, "bogus");
+        assert!(env_wire_compression().is_err(), "set-but-invalid must be loud");
+        std::env::remove_var(ENV_WIRE_COMPRESSION);
+        assert_eq!(env_wire_compression().unwrap(), None);
+    }
+
+    #[test]
+    fn stats_roll_up_per_algorithm() {
+        let stats = CodecStats::new();
+        stats.record_encode(Algo::Raw, 100, 100, 50);
+        stats.record_encode(Algo::Lz1, 1000, 250, 200);
+        stats.record_decode(Algo::Lz1, 250, 1000, 180);
+        stats.record_packed();
+        stats.record_guard_fallback();
+        let s = stats.snapshot();
+        assert_eq!(s.enc_frames(), 2);
+        assert_eq!(s.algo(Algo::Lz1).enc_wire_bytes, 250);
+        assert_eq!(s.algo(Algo::Lz1).dec_raw_bytes, 1000);
+        assert_eq!(s.enc_raw_bytes(), 1100);
+        assert_eq!(s.enc_wire_bytes(), 350);
+        assert!(s.ratio() > 3.0);
+        assert_eq!(s.packed_frames, 1);
+        assert_eq!(s.guard_fallbacks, 1);
+        assert!(!s.is_empty());
+        assert!(s.summary().contains("lz1"));
+        // a clone shares the same counters
+        let stats2 = stats.clone();
+        stats2.record_encode(Algo::Lz2, 10, 10, 1);
+        assert_eq!(stats.snapshot().enc_frames(), 3);
+    }
+}

@@ -1,5 +1,7 @@
 //! Cost records for fabric operations.
 
+use crate::comm::codec::CodecSnapshot;
+
 /// Cost of one collective operation.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct CommCost {
@@ -21,6 +23,10 @@ pub struct CommCost {
 #[derive(Debug, Clone, Default)]
 pub struct CommStats {
     pub ops: Vec<CommCost>,
+    /// Wire entropy-codec counters (socket backend only; stays at its
+    /// default for the in-process mesh and the modeled fabric, whose
+    /// byte accounting is pre-codec by design).
+    pub codec: CodecSnapshot,
 }
 
 impl CommStats {
@@ -50,6 +56,7 @@ impl CommStats {
 
     pub fn reset(&mut self) {
         self.ops.clear();
+        self.codec = CodecSnapshot::default();
     }
 }
 

@@ -141,6 +141,14 @@ impl Fabric {
         self.stats.reset();
     }
 
+    /// Install the wire entropy-codec counters of the real transport
+    /// (socket backend) into this fabric's stats. The analytic byte
+    /// ledger stays pre-codec; the snapshot reports what the wire
+    /// actually shipped.
+    pub fn update_codec_stats(&mut self, snapshot: crate::comm::codec::CodecSnapshot) {
+        self.stats.codec = snapshot;
+    }
+
     pub fn config(&self) -> &FabricConfig {
         &self.cfg
     }

@@ -17,6 +17,7 @@
 //!     and the reduced union grows O(n) (gradient build-up).
 
 pub mod bucket;
+pub mod codec;
 pub mod cost;
 pub mod fabric;
 pub mod parallel;
@@ -24,6 +25,7 @@ pub mod socket;
 pub mod wire;
 
 pub use bucket::{Bucket, BucketPlan};
+pub use codec::{CodecSnapshot, CodecStats, WireCodecConfig, WireCompression};
 pub use cost::{CommCost, CommStats};
 pub use fabric::{Fabric, FabricConfig, FaultSpec, GatherStats, Topology};
 pub use parallel::Backend;

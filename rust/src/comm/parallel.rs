@@ -365,8 +365,9 @@ pub enum LaneTransport {
     #[default]
     Channel,
     /// Loopback TCP sockets through the `comm::wire` codec (backend
-    /// `socket`): every hop pays real framing + kernel round-trips.
-    Socket,
+    /// `socket`): every hop pays real framing + kernel round-trips. The
+    /// payload carries this mesh's entropy-codec configuration.
+    Socket(crate::comm::codec::WireCodecConfig),
 }
 
 /// A lane's ring endpoint on either transport.
@@ -423,6 +424,9 @@ pub struct CommLanes {
     jobs: Vec<Sender<CommJob>>,
     results: Receiver<CollectiveResult>,
     threads: Vec<JoinHandle<()>>,
+    /// Shared entropy-codec counters of the socket mesh (`None` on the
+    /// channel transport, which ships no bytes).
+    codec: Option<crate::comm::codec::CodecStats>,
 }
 
 impl CommLanes {
@@ -436,23 +440,27 @@ impl CommLanes {
     /// if the OS refuses the sockets.
     pub fn with_transport(n: usize, transport: LaneTransport) -> anyhow::Result<CommLanes> {
         assert!(n >= 1, "comm lanes need at least one worker");
+        let mut codec = None;
         let (rings, stars): (Vec<LaneRing>, Vec<LaneStar>) = match transport {
             LaneTransport::Channel => (
                 ring(n).into_iter().map(LaneRing::Channel).collect(),
                 star(n).into_iter().map(LaneStar::Channel).collect(),
             ),
-            LaneTransport::Socket => {
+            LaneTransport::Socket(wire_cfg) => {
                 let timeout = crate::comm::socket::default_timeout()?;
-                (
-                    crate::comm::socket::local_ring(n, timeout)?
+                let stats = crate::comm::codec::CodecStats::new();
+                let mesh = (
+                    crate::comm::socket::local_ring(n, timeout, wire_cfg, &stats)?
                         .into_iter()
                         .map(LaneRing::Socket)
                         .collect(),
-                    crate::comm::socket::local_star(n, timeout)?
+                    crate::comm::socket::local_star(n, timeout, wire_cfg, &stats)?
                         .into_iter()
                         .map(LaneStar::Socket)
                         .collect(),
-                )
+                );
+                codec = Some(stats);
+                mesh
             }
         };
         let (root_tx, results) = channel();
@@ -472,11 +480,21 @@ impl CommLanes {
             jobs,
             results,
             threads,
+            codec,
         })
     }
 
     pub fn workers(&self) -> usize {
         self.jobs.len()
+    }
+
+    /// Roll up the socket mesh's entropy-codec counters. Default
+    /// (all-zero) snapshot on the channel transport.
+    pub fn codec_snapshot(&self) -> crate::comm::codec::CodecSnapshot {
+        self.codec
+            .as_ref()
+            .map(|s| s.snapshot())
+            .unwrap_or_default()
     }
 
     /// Launch one collective: one job per worker, all the same kind.
@@ -863,8 +881,11 @@ mod tests {
                 })
                 .collect();
             let chan = CommLanes::new(n);
-            let sock = CommLanes::with_transport(n, LaneTransport::Socket)
-                .expect("loopback socket mesh");
+            let sock = CommLanes::with_transport(
+                n,
+                LaneTransport::Socket(crate::comm::codec::WireCodecConfig::default()),
+            )
+            .expect("loopback socket mesh");
             for lanes in [&chan, &sock] {
                 lanes.submit(
                     inputs

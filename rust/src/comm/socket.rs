@@ -12,13 +12,23 @@
 //!
 //! ## Design notes
 //!
-//! - **No send-side blocking.** A ring step has every node sending and
-//!   receiving at once; if sends wrote to the socket on the caller's
-//!   thread, n full kernel buffers could deadlock the ring. Every
-//!   outgoing link therefore owns a writer thread ([`FramedSender`])
-//!   fed by an unbounded queue — `send` never blocks, mirroring the
-//!   unbounded mpsc channels of the in-process mesh, so the staged
-//!   (pipelined) driving mode works unchanged over sockets.
+//! - **No send-side blocking (but bounded memory).** A ring step has
+//!   every node sending and receiving at once; if sends wrote to the
+//!   socket on the caller's thread, n full kernel buffers could deadlock
+//!   the ring. Every outgoing link therefore owns a writer thread
+//!   ([`FramedSender`]) fed by a queue, so the staged (pipelined)
+//!   driving mode works unchanged over sockets. The queue is **bounded**
+//!   ([`DEFAULT_SEND_QUEUE_FRAMES`]): a healthy mesh never comes close
+//!   to the bound, a slow peer gets backpressure (bounded wait), and a
+//!   stalled peer trips it into a clean latched lane fault — surfaced as
+//!   `CollectiveResult::Failed` by the lane — instead of silent
+//!   unbounded memory growth.
+//! - **Entropy codec.** Each endpoint owns a `codec::FrameCodec`
+//!   (configured by the mesh-wide `WireCodecConfig`) with pooled
+//!   encode/decode buffers: multi-MB dense chunks re-use the same
+//!   staging allocations frame after frame. The rendezvous `Hello`
+//!   carries `wire::WIRE_CODEC_VERSION`, and a peer too old to decode
+//!   packed frames is rejected at handshake with a clear error.
 //! - **Bounded waiting.** Every receiver carries a read timeout and
 //!   every sender's stream a write timeout ([`default_timeout`],
 //!   override with `SCALECOM_SOCKET_TIMEOUT_SECS`), and a killed peer
@@ -32,12 +42,13 @@
 //!   bit-identical to the pipelined backend's and sit inside the same
 //!   parity contract vs sequential (rtol 1e-5 / atol 1e-6 on ring f32).
 
+use crate::comm::codec::{CodecStats, FrameCodec, WireCodecConfig};
 use crate::comm::parallel::ring_allreduce_generic;
 use crate::comm::wire::{self, Purpose, WireMsg};
 use crate::compress::SparseGrad;
-use std::io::{BufReader, BufWriter, Write};
+use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::{sync_channel, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -80,30 +91,71 @@ pub fn parse_timeout_secs(raw: Option<&str>) -> anyhow::Result<Duration> {
 // Framed endpoints
 // ----------------------------------------------------------------------
 
-/// Non-blocking framed sender: messages are handed to a dedicated writer
-/// thread over an unbounded queue. A write failure is latched and
-/// reported by the next `send`; dropping the sender flushes what was
-/// queued and joins the thread. The stream gets a **write timeout** so
-/// a stalled-but-alive peer (full receive buffer, wedged host) errors
-/// the writer thread out instead of blocking it forever — without it,
-/// `Drop`'s join could hang the node and break the bounded-waiting
-/// contract.
+/// Queue bound of a [`FramedSender`]: frames a link may hold undrained
+/// before sends start waiting (and, past the queue timeout, fault). A
+/// healthy collective keeps a handful of frames in flight per link;
+/// hundreds queued means the peer stopped draining.
+pub const DEFAULT_SEND_QUEUE_FRAMES: usize = 1024;
+
+/// Framed sender: messages are handed to a dedicated writer thread over
+/// a **bounded** queue. The writer owns a [`FrameCodec`] and one frame
+/// staging buffer, so encoding (packing, optional byte compression)
+/// happens off the collective's thread with zero per-frame allocation.
+/// A write failure is latched and reported by the next `send`; dropping
+/// the sender flushes what was queued and joins the thread. The stream
+/// gets a **write timeout** so a stalled-but-alive peer (full receive
+/// buffer, wedged host) errors the writer thread out instead of
+/// blocking it forever — without it, `Drop`'s join could hang the node
+/// and break the bounded-waiting contract.
+///
+/// `send` does not block on a healthy mesh; with the queue at its bound
+/// it waits (backpressure for a merely slow peer) up to the queue
+/// timeout, then latches a clean fault that names the stall instead of
+/// accumulating frames without limit.
 pub struct FramedSender {
-    tx: Option<Sender<WireMsg>>,
+    tx: Option<SyncSender<WireMsg>>,
     err: Arc<Mutex<Option<String>>>,
     thread: Option<JoinHandle<()>>,
+    queue_cap: usize,
+    queue_timeout: Duration,
 }
 
 impl FramedSender {
-    pub fn new(stream: TcpStream, write_timeout: Duration) -> anyhow::Result<FramedSender> {
+    pub fn new(
+        stream: TcpStream,
+        write_timeout: Duration,
+        codec: FrameCodec,
+    ) -> anyhow::Result<FramedSender> {
+        FramedSender::with_queue(
+            stream,
+            write_timeout,
+            codec,
+            DEFAULT_SEND_QUEUE_FRAMES,
+            write_timeout,
+        )
+    }
+
+    /// [`FramedSender::new`] with explicit queue bound and queue-full
+    /// wait (tests shrink both to trip the bound quickly).
+    pub fn with_queue(
+        stream: TcpStream,
+        write_timeout: Duration,
+        mut codec: FrameCodec,
+        queue_cap: usize,
+        queue_timeout: Duration,
+    ) -> anyhow::Result<FramedSender> {
+        assert!(queue_cap >= 1, "a zero-capacity send queue would rendezvous");
         stream.set_write_timeout(Some(write_timeout.max(Duration::from_millis(1))))?;
-        let (tx, rx) = channel::<WireMsg>();
+        let (tx, rx) = sync_channel::<WireMsg>(queue_cap);
         let err = Arc::new(Mutex::new(None));
         let latch = err.clone();
         let thread = std::thread::spawn(move || {
             let mut w = BufWriter::new(stream);
+            let mut frame = Vec::new();
             while let Ok(msg) = rx.recv() {
-                let res = wire::write_msg(&mut w, &msg)
+                let res = codec
+                    .encode_frame_into(&msg, &mut frame)
+                    .and_then(|()| w.write_all(&frame).map_err(anyhow::Error::from))
                     .and_then(|()| w.flush().map_err(anyhow::Error::from));
                 if let Err(e) = res {
                     *latch.lock().expect("writer error latch") = Some(format!("{e:#}"));
@@ -115,20 +167,58 @@ impl FramedSender {
             tx: Some(tx),
             err,
             thread: Some(thread),
+            queue_cap,
+            queue_timeout,
         })
     }
 
-    /// Queue one message. Never blocks; fails if the writer thread has
-    /// already hit a socket error (e.g. the peer died).
+    fn latched_err(&self) -> Option<String> {
+        self.err.lock().expect("writer error latch").clone()
+    }
+
+    /// Queue one message. Does not block while the queue has room;
+    /// fails if the writer thread has already hit a socket error (e.g.
+    /// the peer died) or the queue stays full past the queue timeout
+    /// (receiver stopped draining).
     pub fn send(&self, msg: WireMsg) -> anyhow::Result<()> {
-        if let Some(e) = self.err.lock().expect("writer error latch").clone() {
+        if let Some(e) = self.latched_err() {
             anyhow::bail!("socket send failed: {e}");
         }
-        self.tx
-            .as_ref()
-            .expect("sender queue alive until drop")
-            .send(msg)
-            .map_err(|_| anyhow::anyhow!("socket writer thread exited (peer closed?)"))
+        let tx = self.tx.as_ref().expect("sender queue alive until drop");
+        let mut msg = msg;
+        match tx.try_send(msg) {
+            Ok(()) => return Ok(()),
+            Err(TrySendError::Disconnected(_)) => {
+                anyhow::bail!("socket writer thread exited (peer closed?)")
+            }
+            Err(TrySendError::Full(back)) => msg = back,
+        }
+        // Bounded backpressure: wait for the writer to drain, polling
+        // the error latch so a dying link fails fast, and fault once the
+        // queue stays full past the timeout.
+        let deadline = Instant::now() + self.queue_timeout;
+        loop {
+            std::thread::sleep(Duration::from_millis(1));
+            if let Some(e) = self.latched_err() {
+                anyhow::bail!("socket send failed: {e}");
+            }
+            match tx.try_send(msg) {
+                Ok(()) => return Ok(()),
+                Err(TrySendError::Disconnected(_)) => {
+                    anyhow::bail!("socket writer thread exited (peer closed?)")
+                }
+                Err(TrySendError::Full(back)) => msg = back,
+            }
+            if Instant::now() >= deadline {
+                let e = format!(
+                    "send queue full: peer has not drained {} queued frames within \
+                     {:?} (stalled receiver)",
+                    self.queue_cap, self.queue_timeout
+                );
+                *self.err.lock().expect("writer error latch") = Some(e.clone());
+                anyhow::bail!("socket send failed: {e}");
+            }
+        }
     }
 }
 
@@ -141,24 +231,49 @@ impl Drop for FramedSender {
     }
 }
 
-/// Blocking framed receiver with a read timeout.
+/// Blocking framed receiver with a read timeout. Owns a [`FrameCodec`]
+/// and one body staging buffer, reused across frames — a stream of
+/// multi-MB dense chunks costs zero per-frame allocation for the wire
+/// bytes (the decoded payload vectors are owned by the messages).
 pub struct FramedReceiver {
     r: BufReader<TcpStream>,
     timeout: Duration,
+    codec: FrameCodec,
+    body: Vec<u8>,
 }
 
 impl FramedReceiver {
-    pub fn new(stream: TcpStream, timeout: Duration) -> anyhow::Result<FramedReceiver> {
+    pub fn new(
+        stream: TcpStream,
+        timeout: Duration,
+        codec: FrameCodec,
+    ) -> anyhow::Result<FramedReceiver> {
         stream.set_read_timeout(Some(timeout.max(Duration::from_millis(1))))?;
         Ok(FramedReceiver {
             r: BufReader::new(stream),
             timeout,
+            codec,
+            body: Vec::new(),
         })
+    }
+
+    fn recv_inner(&mut self) -> anyhow::Result<WireMsg> {
+        let mut header = [0u8; 4];
+        self.r.read_exact(&mut header)?;
+        let len = wire::check_body_len(u32::from_le_bytes(header))?;
+        self.body.clear();
+        self.body.resize(len, 0);
+        self.r.read_exact(&mut self.body)?;
+        // move the body out of `self` borrow scope for the codec call
+        let mut body = std::mem::take(&mut self.body);
+        let msg = self.codec.decode_body(&body);
+        std::mem::swap(&mut self.body, &mut body);
+        msg
     }
 
     pub fn recv(&mut self) -> anyhow::Result<WireMsg> {
         use anyhow::Context;
-        wire::read_msg(&mut self.r).with_context(|| {
+        self.recv_inner().with_context(|| {
             format!(
                 "socket read failed (peer dead, stalled past the {:?} timeout, \
                  or mis-framed)",
@@ -444,8 +559,15 @@ fn loopback_pair() -> anyhow::Result<(TcpStream, TcpStream)> {
 }
 
 /// Build an in-process TCP ring: link `i` carries worker `i` →
-/// `(i+1) % n`, exactly the channel mesh's wiring.
-pub fn local_ring(n: usize, timeout: Duration) -> anyhow::Result<Vec<SocketRingNode>> {
+/// `(i+1) % n`, exactly the channel mesh's wiring. Every endpoint gets
+/// a [`FrameCodec`] configured by `wire_cfg`, all booking into the
+/// shared `stats` handle.
+pub fn local_ring(
+    n: usize,
+    timeout: Duration,
+    wire_cfg: WireCodecConfig,
+    stats: &CodecStats,
+) -> anyhow::Result<Vec<SocketRingNode>> {
     assert!(n >= 1);
     if n == 1 {
         return Ok(vec![SocketRingNode::new(0, 1, None, None)]);
@@ -454,8 +576,16 @@ pub fn local_ring(n: usize, timeout: Duration) -> anyhow::Result<Vec<SocketRingN
     let mut receivers: Vec<Option<FramedReceiver>> = Vec::with_capacity(n);
     for _ in 0..n {
         let (w, r) = loopback_pair()?;
-        senders.push(Some(FramedSender::new(w, timeout)?));
-        receivers.push(Some(FramedReceiver::new(r, timeout)?));
+        senders.push(Some(FramedSender::new(
+            w,
+            timeout,
+            FrameCodec::new(wire_cfg, stats.clone()),
+        )?));
+        receivers.push(Some(FramedReceiver::new(
+            r,
+            timeout,
+            FrameCodec::new(wire_cfg, stats.clone()),
+        )?));
     }
     Ok((0..n)
         .map(|id| {
@@ -470,14 +600,27 @@ pub fn local_ring(n: usize, timeout: Duration) -> anyhow::Result<Vec<SocketRingN
 }
 
 /// Build an in-process TCP gather star rooted at worker 0.
-pub fn local_star(n: usize, timeout: Duration) -> anyhow::Result<Vec<SocketStarNode>> {
+pub fn local_star(
+    n: usize,
+    timeout: Duration,
+    wire_cfg: WireCodecConfig,
+    stats: &CodecStats,
+) -> anyhow::Result<Vec<SocketStarNode>> {
     assert!(n >= 1);
     let mut to_root: Vec<Option<FramedSender>> = Vec::with_capacity(n.saturating_sub(1));
     let mut from_workers = Vec::with_capacity(n.saturating_sub(1));
     for _ in 1..n {
         let (w, r) = loopback_pair()?;
-        to_root.push(Some(FramedSender::new(w, timeout)?));
-        from_workers.push(FramedReceiver::new(r, timeout)?);
+        to_root.push(Some(FramedSender::new(
+            w,
+            timeout,
+            FrameCodec::new(wire_cfg, stats.clone()),
+        )?));
+        from_workers.push(FramedReceiver::new(
+            r,
+            timeout,
+            FrameCodec::new(wire_cfg, stats.clone()),
+        )?);
     }
     Ok((0..n)
         .map(|id| {
@@ -534,14 +677,18 @@ pub fn connect_with_retry(addr: &str, deadline: Instant) -> anyhow::Result<TcpSt
 /// first and connecting second is what makes the rendezvous
 /// deadlock-free regardless of process start order.
 ///
-/// Every outbound connection introduces itself with a `Hello` frame, and
-/// inbound connections are classified by it, so accept order does not
-/// matter. All waits are bounded by `timeout`.
+/// Every outbound connection introduces itself with a `Hello` frame
+/// (carrying this build's wire codec version), and inbound connections
+/// are classified by it, so accept order does not matter. A peer whose
+/// codec version is too old for `wire_cfg` is rejected with an error
+/// naming both versions. All waits are bounded by `timeout`.
 pub fn form_mesh(
     rank: usize,
     peers: &[String],
     listener: TcpListener,
     timeout: Duration,
+    wire_cfg: WireCodecConfig,
+    stats: &CodecStats,
 ) -> anyhow::Result<(SocketRingNode, SocketStarNode)> {
     use anyhow::Context;
     let n = peers.len();
@@ -563,6 +710,7 @@ pub fn form_mesh(
         &WireMsg::Hello {
             rank: rank as u32,
             purpose: Purpose::Ring,
+            codec: wire::WIRE_CODEC_VERSION,
         },
     )?;
     let mut star_tx_stream = if rank > 0 {
@@ -573,6 +721,7 @@ pub fn form_mesh(
             &WireMsg::Hello {
                 rank: rank as u32,
                 purpose: Purpose::Star,
+                codec: wire::WIRE_CODEC_VERSION,
             },
         )?;
         Some(s)
@@ -603,18 +752,25 @@ pub fn form_mesh(
                     WireMsg::Hello {
                         rank: from,
                         purpose: Purpose::Ring,
+                        codec: peer_codec,
                     } => {
                         anyhow::ensure!(
                             from as usize == left,
                             "rank {rank}: ring hello from rank {from}, expected left \
                              neighbor {left} — check that every node got the same --peers list"
                         );
+                        check_peer_codec(rank, from as usize, peer_codec, wire_cfg)?;
                         anyhow::ensure!(ring_rx.is_none(), "rank {rank}: duplicate ring link");
-                        ring_rx = Some(FramedReceiver::new(s, timeout)?);
+                        ring_rx = Some(FramedReceiver::new(
+                            s,
+                            timeout,
+                            FrameCodec::new(wire_cfg, stats.clone()),
+                        )?);
                     }
                     WireMsg::Hello {
                         rank: from,
                         purpose: Purpose::Star,
+                        codec: peer_codec,
                     } => {
                         let from = from as usize;
                         anyhow::ensure!(
@@ -626,11 +782,16 @@ pub fn form_mesh(
                             (1..n).contains(&from),
                             "rank 0: star hello from invalid rank {from}"
                         );
+                        check_peer_codec(rank, from, peer_codec, wire_cfg)?;
                         anyhow::ensure!(
                             star_rx[from - 1].is_none(),
                             "rank 0: duplicate star uplink from rank {from}"
                         );
-                        star_rx[from - 1] = Some(FramedReceiver::new(s, timeout)?);
+                        star_rx[from - 1] = Some(FramedReceiver::new(
+                            s,
+                            timeout,
+                            FrameCodec::new(wire_cfg, stats.clone()),
+                        )?);
                     }
                     other => anyhow::bail!(
                         "rank {rank}: inbound connection sent {other:?} instead of a Hello"
@@ -653,7 +814,11 @@ pub fn form_mesh(
     let ring = SocketRingNode::new(
         rank,
         n,
-        Some(FramedSender::new(ring_tx_stream, timeout)?),
+        Some(FramedSender::new(
+            ring_tx_stream,
+            timeout,
+            FrameCodec::new(wire_cfg, stats.clone()),
+        )?),
         Some(ring_rx.expect("ring inbound link present")),
     );
     let star = if rank == 0 {
@@ -669,11 +834,33 @@ pub fn form_mesh(
             Some(FramedSender::new(
                 star_tx_stream.take().expect("worker star uplink"),
                 timeout,
+                FrameCodec::new(wire_cfg, stats.clone()),
             )?),
             None,
         )
     };
     Ok((ring, star))
+}
+
+/// Reject a handshake from a peer whose wire codec is too old for this
+/// node's codec configuration. Plain framing (`--wire-compression off`)
+/// interoperates with any peer; packed/compressed frames need a peer
+/// that understands them.
+fn check_peer_codec(
+    rank: usize,
+    from: usize,
+    peer_codec: u8,
+    wire_cfg: WireCodecConfig,
+) -> anyhow::Result<()> {
+    let needed = wire_cfg.required_peer_codec();
+    anyhow::ensure!(
+        peer_codec >= needed,
+        "rank {rank}: peer rank {from} speaks wire codec v{peer_codec} but this \
+         node's compression config ({}) needs v{needed} — upgrade the peer or \
+         run with --wire-compression off",
+        wire_cfg.label(),
+    );
+    Ok(())
 }
 
 #[cfg(test)]
@@ -713,7 +900,17 @@ mod tests {
         n: usize,
         f: impl Fn(&mut SocketRingNode, usize) -> TOut + Sync,
     ) -> Vec<TOut> {
-        let nodes = local_ring(n, T).expect("loopback ring");
+        on_ring_with(n, WireCodecConfig::off(), &CodecStats::new(), f)
+    }
+
+    /// [`on_ring`] with an explicit codec configuration and stats sink.
+    fn on_ring_with<TOut: Send>(
+        n: usize,
+        cfg: WireCodecConfig,
+        stats: &CodecStats,
+        f: impl Fn(&mut SocketRingNode, usize) -> TOut + Sync,
+    ) -> Vec<TOut> {
+        let nodes = local_ring(n, T, cfg, stats).expect("loopback ring");
         std::thread::scope(|s| {
             let handles: Vec<_> = nodes
                 .into_iter()
@@ -771,7 +968,8 @@ mod tests {
     #[test]
     fn socket_star_gathers_in_worker_order() {
         let n = 5;
-        let nodes = local_star(n, T).expect("loopback star");
+        let nodes =
+            local_star(n, T, WireCodecConfig::off(), &CodecStats::new()).expect("loopback star");
         let gathered = std::thread::scope(|s| {
             let handles: Vec<_> = nodes
                 .into_iter()
@@ -834,7 +1032,9 @@ mod tests {
         // Node 0 reduces bucket 1 while node 1 reduces bucket 2: the
         // first cross frame must fail the collective with a tag error
         // instead of silently reducing one bucket into the other.
-        let mut nodes = local_ring(2, Duration::from_secs(5)).expect("loopback ring");
+        let mut nodes =
+            local_ring(2, Duration::from_secs(5), WireCodecConfig::off(), &CodecStats::new())
+                .expect("loopback ring");
         let n1 = nodes.remove(1);
         let n0 = nodes.remove(0);
         let errs = std::thread::scope(|s| {
@@ -856,7 +1056,9 @@ mod tests {
 
     #[test]
     fn star_bucket_tag_mismatch_is_detected() {
-        let nodes = local_star(2, Duration::from_secs(5)).expect("loopback star");
+        let nodes =
+            local_star(2, Duration::from_secs(5), WireCodecConfig::off(), &CodecStats::new())
+                .expect("loopback star");
         let mut it = nodes.into_iter();
         let root = it.next().expect("root");
         let worker = it.next().expect("worker");
@@ -884,7 +1086,8 @@ mod tests {
         // Node 1 drops its endpoints without participating: node 0's recv
         // must fail (EOF from the dropped writer) within the timeout.
         let mut nodes =
-            local_ring(2, Duration::from_secs(2)).expect("loopback ring");
+            local_ring(2, Duration::from_secs(2), WireCodecConfig::off(), &CodecStats::new())
+                .expect("loopback ring");
         let n1 = nodes.remove(1);
         let mut n0 = nodes.remove(0);
         drop(n1);
@@ -914,8 +1117,15 @@ mod tests {
                 .enumerate()
                 .map(|(rank, listener)| {
                     s.spawn(move || {
-                        let (mut ring, mut star) =
-                            form_mesh(rank, peers_ref, listener, T).expect("mesh");
+                        let (mut ring, mut star) = form_mesh(
+                            rank,
+                            peers_ref,
+                            listener,
+                            T,
+                            WireCodecConfig::off(),
+                            &CodecStats::new(),
+                        )
+                        .expect("mesh");
                         let mut buf = vec![(rank + 1) as f32; 12];
                         ring.allreduce_avg(&mut buf).expect("ring over mesh");
                         let sg =
@@ -938,5 +1148,155 @@ mod tests {
         for r in &results {
             assert!(r.iter().all(|&v| (v - 2.5).abs() < 1e-6), "{r:?}");
         }
+    }
+
+    #[test]
+    fn bounded_send_queue_trips_on_a_stalled_receiver() {
+        // A peer that never reads: the writer thread blocks once the OS
+        // socket buffers fill, the bounded queue fills up behind it, and
+        // the next send must fail with a clean queue-full fault instead
+        // of growing memory without limit.
+        let (w, r) = loopback_pair().expect("loopback pair");
+        let sender = FramedSender::with_queue(
+            w,
+            Duration::from_secs(1), // write timeout bounds the Drop join
+            FrameCodec::new(WireCodecConfig::off(), CodecStats::new()),
+            2,                           // tiny queue so the bound trips fast
+            Duration::from_millis(300), // queue-full wait, well under the write timeout
+        )
+        .expect("sender");
+        let start = Instant::now();
+        let big = WireMsg::DenseChunk {
+            bucket: 0,
+            vals: vec![1.0f32; 2 << 20], // 8 MiB per frame beats any OS buffer
+        };
+        let mut fault = None;
+        for _ in 0..16 {
+            if let Err(e) = sender.send(big.clone()) {
+                fault = Some(format!("{e:#}"));
+                break;
+            }
+        }
+        let fault = fault.expect("a stalled receiver must trip the queue bound");
+        assert!(fault.contains("send queue full"), "{fault}");
+        assert!(start.elapsed() < Duration::from_secs(10), "bounded failure");
+        drop(sender);
+        drop(r);
+    }
+
+    #[test]
+    fn compressed_ring_is_bit_identical_to_plain_framing() {
+        use crate::comm::codec::WireCompression;
+        let n = 4;
+        for len in [0usize, 1, 17, 1000, 5000] {
+            let mut rng = Rng::new(len as u64 + 42);
+            let inputs: Vec<Vec<f32>> = (0..n)
+                .map(|_| {
+                    let mut v = vec![0.0f32; len];
+                    rng.fill_normal(&mut v, 1.0);
+                    v
+                })
+                .collect();
+            let inputs_ref = &inputs;
+            let expect = on_ring(n, |node, w| {
+                let mut buf = inputs_ref[w].clone();
+                node.allreduce_avg(&mut buf).expect("plain allreduce");
+                buf
+            });
+            let stats = CodecStats::new();
+            let got = on_ring_with(
+                n,
+                WireCodecConfig::with_mode(WireCompression::Full),
+                &stats,
+                |node, w| {
+                    let mut buf = inputs_ref[w].clone();
+                    node.allreduce_avg(&mut buf).expect("compressed allreduce");
+                    buf
+                },
+            );
+            // same schedule, codec touches only the byte envelope →
+            // bit-identical reductions
+            assert_eq!(got, expect, "len={len}");
+            if len >= 1000 {
+                assert!(!stats.snapshot().is_empty(), "codec saw the frames");
+            }
+        }
+    }
+
+    #[test]
+    fn compressed_star_gather_is_exact_and_packs_sparse_frames() {
+        use crate::comm::codec::WireCompression;
+        let n = 4;
+        let stats = CodecStats::new();
+        let cfg = WireCodecConfig::with_mode(WireCompression::Delta);
+        let nodes = local_star(n, T, cfg, &stats).expect("loopback star");
+        let gathered = std::thread::scope(|s| {
+            let handles: Vec<_> = nodes
+                .into_iter()
+                .map(|mut node| {
+                    s.spawn(move || {
+                        let id = node.id as u32;
+                        // strictly increasing indices: the packable case
+                        let indices: Vec<u32> = (0..200u32).map(|i| i * 7 + id).collect();
+                        let values: Vec<f32> = (0..200).map(|i| i as f32 + 0.5).collect();
+                        let sg = SparseGrad::new(2048, indices, values);
+                        node.gather(sg).expect("gather")
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .filter_map(|h| h.join().expect("worker"))
+                .next()
+                .expect("root result")
+        });
+        assert_eq!(gathered.len(), n);
+        for (w, sg) in gathered.iter().enumerate() {
+            let expect_idx: Vec<u32> = (0..200u32).map(|i| i * 7 + w as u32).collect();
+            let expect_vals: Vec<f32> = (0..200).map(|i| i as f32 + 0.5).collect();
+            assert_eq!(sg.indices, expect_idx, "worker {w} indices bit-exact");
+            assert_eq!(sg.values, expect_vals, "worker {w} values bit-exact");
+        }
+        let snap = stats.snapshot();
+        assert!(snap.packed_frames > 0, "sparse uplinks should pack: {snap:?}");
+    }
+
+    #[test]
+    fn legacy_peer_without_codec_version_is_rejected() {
+        use crate::comm::codec::WireCompression;
+        // A v1 peer sends the old 6-byte Hello body (no codec version).
+        // With packing enabled, rank 0 must reject the handshake with an
+        // error naming both versions and the off switch.
+        let l0 = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let l1 = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let peers = vec![
+            l0.local_addr().unwrap().to_string(),
+            l1.local_addr().unwrap().to_string(),
+        ];
+        let addr0 = peers[0].clone();
+        let fake = std::thread::spawn(move || {
+            // absorb rank 0's ring-right connect so its handshake lands
+            let (held, _) = l1.accept().expect("accept rank 0");
+            // dial rank 0 and speak the legacy v1 handshake
+            let mut s = TcpStream::connect(addr0.as_str()).expect("dial rank 0");
+            let mut frame = Vec::new();
+            frame.extend_from_slice(&6u32.to_le_bytes()); // body length
+            frame.push(3u8); // TAG_HELLO
+            frame.extend_from_slice(&1u32.to_le_bytes()); // rank 1
+            frame.push(0u8); // purpose: ring — and no codec byte
+            s.write_all(&frame).expect("legacy hello");
+            s.flush().expect("flush");
+            // keep both streams open until rank 0 classifies the hello
+            std::thread::sleep(Duration::from_millis(500));
+            drop(held);
+            drop(s);
+        });
+        let cfg = WireCodecConfig::with_mode(WireCompression::Delta);
+        let err = form_mesh(0, &peers, l0, Duration::from_secs(5), cfg, &CodecStats::new())
+            .expect_err("legacy peer must be rejected");
+        fake.join().expect("fake peer");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("wire codec v1"), "{msg}");
+        assert!(msg.contains("--wire-compression off"), "{msg}");
     }
 }

@@ -7,12 +7,25 @@
 //! body = [ u8 tag ][ tag-specific fields, all little-endian ]
 //! ```
 //!
-//! | tag | message      | fields                                                        |
-//! |-----|--------------|---------------------------------------------------------------|
-//! | 1   | `DenseChunk` | u32 bucket, u32 count, count × f32                            |
-//! | 2   | `Sparse`     | u32 bucket, u32 dim, u32 nnz, nnz × u32 idx, nnz × f32 vals   |
-//! | 3   | `Hello`      | u32 rank, u8 purpose (0 = ring, 1 = star)                     |
-//! | 4   | `Indices`    | u32 count, count × u32                                        |
+//! | tag | message         | fields                                                          |
+//! |-----|-----------------|-----------------------------------------------------------------|
+//! | 1   | `DenseChunk`    | u32 bucket, u32 count, count × f32                              |
+//! | 2   | `Sparse`        | u32 bucket, u32 dim, u32 nnz, nnz × u32 idx, nnz × f32 vals     |
+//! | 3   | `Hello`         | u32 rank, u8 purpose (0 = ring, 1 = star), u8 codec version     |
+//! | 4   | `Indices`       | u32 count, count × u32                                          |
+//! | 5   | packed `Sparse` | u32 bucket, varint dim, varint nnz, delta+varint idx, nnz × f32 |
+//! | 6   | packed `Indices`| varint count, delta+varint idx                                  |
+//! | 7   | compressed body | u8 algo, varint raw_len, compressed inner body (tags 1-6)       |
+//!
+//! Tags 5-7 are the **entropy stage** (`comm::codec`, wire codec v2):
+//! sparse index sets are strictly increasing by construction, so they
+//! ship as delta+varints, and any body may additionally travel through
+//! the in-house byte compressor when that makes it *smaller*. The
+//! compressed envelope (tag 7) declares its decompressed size up front;
+//! it may not nest. `Hello` now carries the sender's wire codec version
+//! ([`WIRE_CODEC_VERSION`]) so a rendezvous can reject a peer too old to
+//! decode packed frames with a clear error instead of a mid-run decode
+//! fault; a 5-byte legacy `Hello` (no version field) decodes as v1.
 //!
 //! `DenseChunk` carries the ring reduce-scatter/all-gather payloads,
 //! `Sparse` the star-gather contributions, and the control tags the
@@ -26,8 +39,9 @@
 //! Monolithic (un-bucketed) collectives use bucket id 0. There
 //! is deliberately no shutdown message: an orderly end of run is a
 //! flushed socket close, observed by the peer as EOF. f32/f64 values
-//! travel as raw IEEE-754 bits, so a value is **bit-identical** after a
-//! network hop — the backend determinism contract survives the wire.
+//! travel as raw IEEE-754 bits — in packed and compressed frames too —
+//! so a value is **bit-identical** after a network hop and the backend
+//! determinism contract survives the wire.
 //!
 //! ## Decode-under-adversity contract
 //!
@@ -40,19 +54,30 @@
 //!   body length — short *and* trailing bytes are both errors;
 //! - sparse payloads are only accepted when the index set is strictly
 //!   increasing and in-range, so `SparseGrad`'s invariants hold even for
-//!   bytes from a hostile or corrupted peer;
+//!   bytes from a hostile or corrupted peer (in packed frames the delta
+//!   representation makes strict increase structural);
+//! - a compressed envelope's declared decompressed size is capped at
+//!   [`MAX_FRAME_BYTES`] **before** any allocation, and the decompressor
+//!   enforces it exactly — a "zip bomb" length field cannot force a huge
+//!   allocation, and nesting envelopes is rejected;
 //! - [`FrameDecoder`] buffers partial reads, yielding a message only
 //!   once its full frame has arrived — a split read at any byte boundary
 //!   decodes identically to a single read (property-tested in
 //!   `crate::proptest`).
 
+use crate::comm::codec;
 use crate::compress::SparseGrad;
 use std::io::{Read, Write};
 
 /// Upper bound on a frame body. Generous for this workload (a dense
 /// 1M-parameter f32 gradient is 4 MB) while keeping a corrupted or
-/// hostile length field from forcing a huge allocation.
+/// hostile length field from forcing a huge allocation. Also caps the
+/// *declared decompressed size* of a compressed envelope.
 pub const MAX_FRAME_BYTES: usize = 64 << 20;
+
+/// Wire codec version spoken by this build, carried in `Hello`. v1 is
+/// the raw tag set (1-4); v2 adds the packed/compressed tags (5-7).
+pub const WIRE_CODEC_VERSION: u8 = 2;
 
 /// What an inbound connection is for (field of [`WireMsg::Hello`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -91,8 +116,10 @@ pub enum WireMsg {
     /// [`WireMsg::DenseChunk`].
     Sparse { bucket: u32, grad: SparseGrad },
     /// Rendezvous handshake: sent once by the connecting side so the
-    /// accepting side can classify the stream.
-    Hello { rank: u32, purpose: Purpose },
+    /// accepting side can classify the stream and check codec
+    /// compatibility. `codec` is the sender's [`WIRE_CODEC_VERSION`]
+    /// (1 for legacy peers that predate the field).
+    Hello { rank: u32, purpose: Purpose, codec: u8 },
     /// The CLT-k leader's index broadcast.
     Indices(Vec<u32>),
 }
@@ -101,66 +128,117 @@ const TAG_DENSE: u8 = 1;
 const TAG_SPARSE: u8 = 2;
 const TAG_HELLO: u8 = 3;
 const TAG_INDICES: u8 = 4;
+const TAG_SPARSE_PACKED: u8 = 5;
+const TAG_INDICES_PACKED: u8 = 6;
+pub(crate) const TAG_COMPRESSED: u8 = 7;
 
 fn put_u32(out: &mut Vec<u8>, v: u32) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_f32(out: &mut Vec<u8>, v: f32) {
-    out.extend_from_slice(&v.to_le_bytes());
+/// Bulk little-endian append of an f32 slice: one reserve plus chunked
+/// copies through a stack buffer instead of a per-element push loop —
+/// dense ring chunks are multi-MB, and this is their hot path. Output
+/// is byte-identical to the per-element loop (locked by a golden test).
+fn put_f32s(out: &mut Vec<u8>, vals: &[f32]) {
+    out.reserve(vals.len() * 4);
+    let mut tmp = [0u8; 4 * 256];
+    for chunk in vals.chunks(256) {
+        for (i, v) in chunk.iter().enumerate() {
+            tmp[i * 4..i * 4 + 4].copy_from_slice(&v.to_le_bytes());
+        }
+        out.extend_from_slice(&tmp[..chunk.len() * 4]);
+    }
 }
 
-/// Exact frame size (header + body) of `msg` on the wire.
-fn frame_len(msg: &WireMsg) -> usize {
+/// Bulk little-endian append of a u32 slice (see [`put_f32s`]).
+fn put_u32s(out: &mut Vec<u8>, vals: &[u32]) {
+    out.reserve(vals.len() * 4);
+    let mut tmp = [0u8; 4 * 256];
+    for chunk in vals.chunks(256) {
+        for (i, v) in chunk.iter().enumerate() {
+            tmp[i * 4..i * 4 + 4].copy_from_slice(&v.to_le_bytes());
+        }
+        out.extend_from_slice(&tmp[..chunk.len() * 4]);
+    }
+}
+
+/// Exact frame size (header + body) of `msg` in the **raw** (v1, tags
+/// 1-4) representation — the layout [`encode`] emits. Packed frames are
+/// variable-length; their size is whatever `FrameCodec` produced.
+/// `encode(msg).len() == frame_len(msg)` is property-tested across all
+/// variants so this can never silently drift from the encoder again.
+pub fn frame_len(msg: &WireMsg) -> usize {
     4 + 1
         + match msg {
             WireMsg::DenseChunk { vals, .. } => 8 + 4 * vals.len(),
             WireMsg::Sparse { grad, .. } => 12 + 8 * grad.indices.len(),
-            WireMsg::Hello { .. } => 5,
+            WireMsg::Hello { .. } => 6,
             WireMsg::Indices(idx) => 4 + 4 * idx.len(),
         }
 }
 
-/// Encode `msg` as one full frame (header + body), preallocated exactly
-/// (dense ring chunks are multi-MB on big models — no regrowth copies on
-/// the hot path).
-pub fn encode(msg: &WireMsg) -> Vec<u8> {
-    let mut out = Vec::with_capacity(frame_len(msg));
-    out.extend_from_slice(&[0u8; 4]); // header patched below
+/// Append `msg`'s body (tag + fields, no length header) to `out`.
+/// With `packing`, sparse/index frames use the delta+varint tags when
+/// representable (index broadcasts fall back to raw when not strictly
+/// increasing). Returns whether a packed representation was used.
+pub(crate) fn encode_body_into(msg: &WireMsg, packing: bool, out: &mut Vec<u8>) -> bool {
     match msg {
         WireMsg::DenseChunk { bucket, vals } => {
             out.push(TAG_DENSE);
-            put_u32(&mut out, *bucket);
-            put_u32(&mut out, vals.len() as u32);
-            for &v in vals {
-                put_f32(&mut out, v);
-            }
+            put_u32(out, *bucket);
+            put_u32(out, vals.len() as u32);
+            put_f32s(out, vals);
+            false
+        }
+        WireMsg::Sparse { bucket, grad } if packing => {
+            out.push(TAG_SPARSE_PACKED);
+            put_u32(out, *bucket);
+            codec::put_varint_u32(out, grad.dim as u32);
+            codec::put_varint_u32(out, grad.indices.len() as u32);
+            codec::put_index_deltas(out, &grad.indices);
+            put_f32s(out, &grad.values);
+            true
         }
         WireMsg::Sparse { bucket, grad } => {
             out.push(TAG_SPARSE);
-            put_u32(&mut out, *bucket);
-            put_u32(&mut out, grad.dim as u32);
-            put_u32(&mut out, grad.indices.len() as u32);
-            for &i in &grad.indices {
-                put_u32(&mut out, i);
-            }
-            for &v in &grad.values {
-                put_f32(&mut out, v);
-            }
+            put_u32(out, *bucket);
+            put_u32(out, grad.dim as u32);
+            put_u32(out, grad.indices.len() as u32);
+            put_u32s(out, &grad.indices);
+            put_f32s(out, &grad.values);
+            false
         }
-        WireMsg::Hello { rank, purpose } => {
+        WireMsg::Hello { rank, purpose, codec } => {
             out.push(TAG_HELLO);
-            put_u32(&mut out, *rank);
+            put_u32(out, *rank);
             out.push(purpose.to_byte());
+            out.push(*codec);
+            false
+        }
+        WireMsg::Indices(idx) if packing && codec::strictly_increasing(idx) => {
+            out.push(TAG_INDICES_PACKED);
+            codec::put_varint_u32(out, idx.len() as u32);
+            codec::put_index_deltas(out, idx);
+            true
         }
         WireMsg::Indices(idx) => {
             out.push(TAG_INDICES);
-            put_u32(&mut out, idx.len() as u32);
-            for &i in idx {
-                put_u32(&mut out, i);
-            }
+            put_u32(out, idx.len() as u32);
+            put_u32s(out, idx);
+            false
         }
     }
+}
+
+/// Encode `msg` as one full **raw** frame (header + v1 body),
+/// preallocated exactly (dense ring chunks are multi-MB on big models —
+/// no regrowth copies on the hot path). Packed/compressed encoding goes
+/// through `codec::FrameCodec`, which also pools the output buffer.
+pub fn encode(msg: &WireMsg) -> Vec<u8> {
+    let mut out = Vec::with_capacity(frame_len(msg));
+    out.extend_from_slice(&[0u8; 4]); // header patched below
+    encode_body_into(msg, false, &mut out);
     let body_len = (out.len() - 4) as u32;
     out[..4].copy_from_slice(&body_len.to_le_bytes());
     out
@@ -197,6 +275,14 @@ impl<'a> Cursor<'a> {
     fn u32(&mut self) -> anyhow::Result<u32> {
         let b = self.take(4)?;
         Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn varint(&mut self) -> anyhow::Result<u32> {
+        codec::read_varint_u32(self.buf, &mut self.pos)
+    }
+
+    fn index_deltas(&mut self, count: usize) -> anyhow::Result<Vec<u32>> {
+        codec::read_index_deltas(self.buf, &mut self.pos, count)
     }
 
     /// Bulk-read `count` little-endian u32s (one bounds check, not one
@@ -240,8 +326,45 @@ fn check_count(c: &Cursor<'_>, count: u32, elem_bytes: u64, what: &str) -> anyho
     Ok(count as usize)
 }
 
-/// Decode one frame body (everything after the 4-byte length header).
-pub fn decode_body(body: &[u8]) -> anyhow::Result<WireMsg> {
+fn check_sparse_range(indices: &[u32], dim: usize) -> anyhow::Result<()> {
+    if let Some(&last) = indices.last() {
+        anyhow::ensure!(
+            (last as usize) < dim,
+            "wire: sparse index {last} out of range for dim {dim}"
+        );
+    }
+    Ok(())
+}
+
+/// Split a compressed envelope (tag 7) into its algorithm, declared
+/// decompressed size (validated against [`MAX_FRAME_BYTES`] **before**
+/// the caller allocates anything), and compressed payload.
+pub(crate) fn split_compressed(body: &[u8]) -> anyhow::Result<(codec::Algo, usize, &[u8])> {
+    debug_assert_eq!(body.first(), Some(&TAG_COMPRESSED));
+    let mut pos = 1usize;
+    let algo_byte = *body
+        .get(pos)
+        .ok_or_else(|| anyhow::anyhow!("wire: truncated compressed envelope"))?;
+    pos += 1;
+    let algo = codec::Algo::from_byte(algo_byte)?;
+    anyhow::ensure!(
+        algo != codec::Algo::Raw,
+        "wire: compressed envelope declaring the raw algorithm"
+    );
+    let raw_len = codec::read_varint_u32(body, &mut pos)? as usize;
+    anyhow::ensure!(raw_len >= 1, "wire: compressed envelope declares an empty body");
+    anyhow::ensure!(
+        raw_len <= MAX_FRAME_BYTES,
+        "wire: compressed envelope declares {raw_len} decompressed bytes, \
+         over the {MAX_FRAME_BYTES}-byte cap"
+    );
+    Ok((algo, raw_len, &body[pos..]))
+}
+
+/// Decode one non-compressed frame body (tags 1-6). A compressed
+/// envelope is rejected here — it may not nest; [`decode_body`] and
+/// `FrameCodec::decode_body` unwrap exactly one layer.
+pub(crate) fn decode_body_uncompressed(body: &[u8]) -> anyhow::Result<WireMsg> {
     let mut c = Cursor { buf: body, pos: 0 };
     let tag = c.u8()?;
     let msg = match tag {
@@ -262,15 +385,10 @@ pub fn decode_body(body: &[u8]) -> anyhow::Result<WireMsg> {
             let values = c.f32s(nnz)?;
             c.done()?;
             anyhow::ensure!(
-                indices.windows(2).all(|w| w[0] < w[1]),
+                codec::strictly_increasing(&indices),
                 "wire: sparse indices must be strictly increasing"
             );
-            if let Some(&last) = indices.last() {
-                anyhow::ensure!(
-                    (last as usize) < dim,
-                    "wire: sparse index {last} out of range for dim {dim}"
-                );
-            }
+            check_sparse_range(&indices, dim)?;
             WireMsg::Sparse {
                 bucket,
                 grad: SparseGrad::new(dim, indices, values),
@@ -279,8 +397,10 @@ pub fn decode_body(body: &[u8]) -> anyhow::Result<WireMsg> {
         TAG_HELLO => {
             let rank = c.u32()?;
             let purpose = Purpose::from_byte(c.u8()?)?;
+            // v1 peers predate the version field; classify them as v1
+            let codec_version = if c.pos == c.buf.len() { 1 } else { c.u8()? };
             c.done()?;
-            WireMsg::Hello { rank, purpose }
+            WireMsg::Hello { rank, purpose, codec: codec_version }
         }
         TAG_INDICES => {
             let n = c.u32()?;
@@ -289,13 +409,50 @@ pub fn decode_body(body: &[u8]) -> anyhow::Result<WireMsg> {
             c.done()?;
             WireMsg::Indices(idx)
         }
+        TAG_SPARSE_PACKED => {
+            let bucket = c.u32()?;
+            let dim = c.varint()? as usize;
+            let nnz = c.varint()?;
+            // every packed index costs >= 1 byte plus its 4-byte value
+            let nnz = check_count(&c, nnz, 5, "packed sparse nnz")?;
+            let indices = c.index_deltas(nnz)?;
+            let values = c.f32s(nnz)?;
+            c.done()?;
+            check_sparse_range(&indices, dim)?;
+            WireMsg::Sparse {
+                bucket,
+                grad: SparseGrad::new(dim, indices, values),
+            }
+        }
+        TAG_INDICES_PACKED => {
+            let n = c.varint()?;
+            let n = check_count(&c, n, 1, "packed index")?;
+            let idx = c.index_deltas(n)?;
+            c.done()?;
+            WireMsg::Indices(idx)
+        }
+        TAG_COMPRESSED => anyhow::bail!("wire: nested compressed frame"),
         other => anyhow::bail!("wire: unknown message tag {other}"),
     };
     Ok(msg)
 }
 
+/// Decode one frame body (everything after the 4-byte length header),
+/// unwrapping a compressed envelope if present. Convenience path that
+/// stages decompression through a fresh buffer; the socket hot path
+/// goes through `codec::FrameCodec::decode_body`, which pools it.
+pub fn decode_body(body: &[u8]) -> anyhow::Result<WireMsg> {
+    if body.first() == Some(&TAG_COMPRESSED) {
+        let (_algo, raw_len, payload) = split_compressed(body)?;
+        let mut staged = Vec::new();
+        codec::lz_decompress_into(payload, &mut staged, raw_len)?;
+        return decode_body_uncompressed(&staged);
+    }
+    decode_body_uncompressed(body)
+}
+
 /// Validate a frame header's body length.
-fn check_body_len(len: u32) -> anyhow::Result<usize> {
+pub(crate) fn check_body_len(len: u32) -> anyhow::Result<usize> {
     let len = len as usize;
     anyhow::ensure!(len >= 1, "wire: empty frame body");
     anyhow::ensure!(
@@ -380,16 +537,24 @@ impl FrameDecoder {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::codec::{
+        Algo, AlgoChoice, CodecStats, FrameCodec, WireCodecConfig, WireCompression,
+    };
 
     fn roundtrip(msg: WireMsg) {
         let frame = encode(&msg);
         let len = u32::from_le_bytes([frame[0], frame[1], frame[2], frame[3]]) as usize;
         assert_eq!(len + 4, frame.len(), "header length must cover the body");
+        assert_eq!(frame.len(), frame_len(&msg), "frame_len must match encode");
         assert_eq!(decode_body(&frame[4..]).unwrap(), msg);
         // and through the incremental decoder
         let mut d = FrameDecoder::new();
         assert_eq!(d.push(&frame).unwrap(), vec![msg]);
         assert_eq!(d.pending(), 0);
+    }
+
+    fn hello(rank: u32, purpose: Purpose) -> WireMsg {
+        WireMsg::Hello { rank, purpose, codec: WIRE_CODEC_VERSION }
     }
 
     #[test]
@@ -407,8 +572,8 @@ mod tests {
             bucket: u32::MAX,
             grad: SparseGrad::new(0, vec![], vec![]),
         });
-        roundtrip(WireMsg::Hello { rank: 7, purpose: Purpose::Ring });
-        roundtrip(WireMsg::Hello { rank: 0, purpose: Purpose::Star });
+        roundtrip(hello(7, Purpose::Ring));
+        roundtrip(hello(0, Purpose::Star));
         roundtrip(WireMsg::Indices(vec![5, 1, 5, 0])); // codec-level: duplicates frame fine
         roundtrip(WireMsg::Indices(vec![]));
     }
@@ -440,11 +605,59 @@ mod tests {
     }
 
     #[test]
+    fn bulk_le_writes_match_the_per_element_golden_path() {
+        // the original encoder pushed one value at a time; the chunked
+        // bulk path must be byte-identical to that golden layout
+        fn golden_encode(msg: &WireMsg) -> Vec<u8> {
+            let mut out = vec![0u8; 4];
+            match msg {
+                WireMsg::DenseChunk { bucket, vals } => {
+                    out.push(TAG_DENSE);
+                    out.extend_from_slice(&bucket.to_le_bytes());
+                    out.extend_from_slice(&(vals.len() as u32).to_le_bytes());
+                    for &v in vals {
+                        out.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+                WireMsg::Sparse { bucket, grad } => {
+                    out.push(TAG_SPARSE);
+                    out.extend_from_slice(&bucket.to_le_bytes());
+                    out.extend_from_slice(&(grad.dim as u32).to_le_bytes());
+                    out.extend_from_slice(&(grad.indices.len() as u32).to_le_bytes());
+                    for &i in &grad.indices {
+                        out.extend_from_slice(&i.to_le_bytes());
+                    }
+                    for &v in &grad.values {
+                        out.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+                _ => unreachable!(),
+            }
+            let body_len = (out.len() - 4) as u32;
+            out[..4].copy_from_slice(&body_len.to_le_bytes());
+            out
+        }
+        // sizes around the 256-element chunk boundary, plus a big one
+        for n in [0usize, 1, 255, 256, 257, 511, 513, 10_000] {
+            let vals: Vec<f32> = (0..n).map(|i| (i as f32) * 0.5 - 3.25).collect();
+            let msg = WireMsg::DenseChunk { bucket: 9, vals };
+            assert_eq!(encode(&msg), golden_encode(&msg), "dense n={n}");
+        }
+        let grad = SparseGrad::new(
+            100_000,
+            (0..700u32).map(|i| i * 141).collect(),
+            (0..700).map(|i| i as f32 * -0.125).collect(),
+        );
+        let msg = WireMsg::Sparse { bucket: 2, grad };
+        assert_eq!(encode(&msg), golden_encode(&msg), "sparse");
+    }
+
+    #[test]
     fn read_write_through_a_byte_stream() {
         let msgs = vec![
             WireMsg::Indices(vec![1, 2, 3]),
             WireMsg::DenseChunk { bucket: 1, vals: vec![0.25; 7] },
-            WireMsg::Hello { rank: 3, purpose: Purpose::Star },
+            hello(3, Purpose::Star),
         ];
         let mut stream = Vec::new();
         for m in &msgs {
@@ -490,6 +703,12 @@ mod tests {
         body.extend_from_slice(&0u32.to_le_bytes());
         body.push(0xFF);
         assert!(decode_body(&body).is_err());
+        // a packed sparse frame whose nnz outruns the body
+        let mut body = vec![TAG_SPARSE_PACKED];
+        body.extend_from_slice(&0u32.to_le_bytes()); // bucket
+        body.push(100); // dim = 100
+        body.push(50); // nnz = 50, but nothing follows
+        assert!(decode_body(&body).is_err());
     }
 
     #[test]
@@ -514,6 +733,15 @@ mod tests {
         body.extend_from_slice(&5u32.to_le_bytes());
         body.extend_from_slice(&1.0f32.to_le_bytes());
         assert!(decode_body(&body).is_err());
+        // packed sparse index out of range for dim (delta stream is
+        // structurally increasing, so range is the only check left)
+        let mut body = vec![TAG_SPARSE_PACKED];
+        body.extend_from_slice(&0u32.to_le_bytes()); // bucket
+        body.push(2); // dim = 2
+        body.push(1); // nnz = 1
+        body.push(5); // index 5
+        body.extend_from_slice(&1.0f32.to_le_bytes());
+        assert!(decode_body(&body).is_err());
     }
 
     #[test]
@@ -526,5 +754,207 @@ mod tests {
             let second = d.push(&frame[cut..]).unwrap();
             assert_eq!(second.len(), 1, "cut={cut}");
         }
+    }
+
+    #[test]
+    fn legacy_hello_without_version_field_decodes_as_v1() {
+        // a pre-codec peer sends rank + purpose only (5-byte body)
+        let mut body = vec![TAG_HELLO];
+        body.extend_from_slice(&3u32.to_le_bytes());
+        body.push(1); // star
+        assert_eq!(
+            decode_body(&body).unwrap(),
+            WireMsg::Hello { rank: 3, purpose: Purpose::Star, codec: 1 }
+        );
+        // and the current encoding carries our version byte
+        let frame = encode(&hello(3, Purpose::Star));
+        assert_eq!(frame[4 + 1 + 4 + 1], WIRE_CODEC_VERSION);
+    }
+
+    fn packed_codec(mode: WireCompression) -> FrameCodec {
+        FrameCodec::new(WireCodecConfig::with_mode(mode), CodecStats::new())
+    }
+
+    #[test]
+    fn packed_sparse_roundtrips_and_shrinks() {
+        let grad = SparseGrad::new(
+            1_000_000,
+            (0..5000u32).map(|i| i * 199).collect(),
+            (0..5000).map(|i| (i as f32).sin()).collect(),
+        );
+        let msg = WireMsg::Sparse { bucket: 4, grad };
+        let mut codec = packed_codec(WireCompression::Delta);
+        let mut frame = Vec::new();
+        codec.encode_frame_into(&msg, &mut frame).unwrap();
+        assert!(
+            frame.len() < frame_len(&msg),
+            "packed sparse must beat raw: {} vs {}",
+            frame.len(),
+            frame_len(&msg)
+        );
+        // decodable by the generic (stateless) path and the pooled path
+        assert_eq!(decode_body(&frame[4..]).unwrap(), msg);
+        assert_eq!(codec.decode_body(&frame[4..]).unwrap(), msg);
+        let snap = codec.stats().snapshot();
+        assert_eq!(snap.packed_frames, 1);
+        assert!(snap.ratio() > 1.0, "{}", snap.summary());
+    }
+
+    #[test]
+    fn packed_indices_roundtrip_and_unsorted_falls_back_to_raw() {
+        let mut codec = packed_codec(WireCompression::Delta);
+        let mut frame = Vec::new();
+        let sorted = WireMsg::Indices((0..1000u32).map(|i| i * 3).collect());
+        codec.encode_frame_into(&sorted, &mut frame).unwrap();
+        assert_eq!(frame[4], TAG_INDICES_PACKED);
+        assert!(frame.len() < frame_len(&sorted));
+        assert_eq!(decode_body(&frame[4..]).unwrap(), sorted);
+        // duplicates/unsorted sets are not delta-representable: raw tag
+        let unsorted = WireMsg::Indices(vec![5, 1, 5, 0]);
+        codec.encode_frame_into(&unsorted, &mut frame).unwrap();
+        assert_eq!(frame[4], TAG_INDICES);
+        assert_eq!(decode_body(&frame[4..]).unwrap(), unsorted);
+    }
+
+    #[test]
+    fn off_mode_is_byte_identical_to_v1_encode() {
+        let msgs = [
+            WireMsg::DenseChunk { bucket: 1, vals: (0..300).map(|i| i as f32).collect() },
+            WireMsg::Sparse {
+                bucket: 0,
+                grad: SparseGrad::new(100, vec![1, 50, 99], vec![0.5, -1.0, 2.0]),
+            },
+            WireMsg::Indices(vec![2, 4, 6]),
+            hello(1, Purpose::Ring),
+        ];
+        let mut codec = packed_codec(WireCompression::Off);
+        let mut frame = Vec::new();
+        for msg in &msgs {
+            codec.encode_frame_into(msg, &mut frame).unwrap();
+            assert_eq!(frame, encode(msg), "{msg:?}");
+        }
+    }
+
+    #[test]
+    fn compressed_envelope_roundtrips_compressible_bodies() {
+        // a constant dense chunk is highly compressible
+        let msg = WireMsg::DenseChunk { bucket: 0, vals: vec![1.0; 100_000] };
+        let mut codec = packed_codec(WireCompression::Full);
+        let mut frame = Vec::new();
+        codec.encode_frame_into(&msg, &mut frame).unwrap();
+        assert_eq!(frame[4], TAG_COMPRESSED);
+        assert!(
+            frame.len() * 10 < frame_len(&msg),
+            "constant chunk must shrink >10x, got {} of {}",
+            frame.len(),
+            frame_len(&msg)
+        );
+        assert_eq!(decode_body(&frame[4..]).unwrap(), msg);
+        assert_eq!(codec.decode_body(&frame[4..]).unwrap(), msg);
+        let snap = codec.stats().snapshot();
+        assert_eq!(snap.algo(Algo::Lz2).enc_frames, 1);
+        assert_eq!(snap.algo(Algo::Lz2).dec_frames, 1, "only the pooled decode books stats");
+    }
+
+    #[test]
+    fn incompressible_bodies_fall_back_to_raw_tags() {
+        // pseudo-random mantissas: the probe or guard must ship raw
+        let mut x: u32 = 0x1234_5678;
+        let vals: Vec<f32> = (0..50_000)
+            .map(|_| {
+                x ^= x << 13;
+                x ^= x >> 17;
+                x ^= x << 5;
+                f32::from_bits((x & 0x3F7F_FFFF) | 0x3F00_0000)
+            })
+            .collect();
+        let msg = WireMsg::DenseChunk { bucket: 0, vals };
+        let mut codec = packed_codec(WireCompression::Full);
+        let mut frame = Vec::new();
+        codec.encode_frame_into(&msg, &mut frame).unwrap();
+        assert_eq!(frame[4], TAG_DENSE, "high-entropy body must not wear the envelope");
+        assert_eq!(frame.len(), frame_len(&msg));
+        let snap = codec.stats().snapshot();
+        assert_eq!(snap.sample_skips + snap.guard_fallbacks, 1);
+        assert_eq!(decode_body(&frame[4..]).unwrap(), msg);
+    }
+
+    #[test]
+    fn per_scheme_override_pins_the_algorithm() {
+        let cfg = WireCodecConfig {
+            mode: WireCompression::Full,
+            min_bytes: 64,
+            dense: AlgoChoice::Force(Algo::Lz1),
+            sparse: AlgoChoice::Force(Algo::Raw),
+        };
+        let mut codec = FrameCodec::new(cfg, CodecStats::new());
+        let mut frame = Vec::new();
+        let dense = WireMsg::DenseChunk { bucket: 0, vals: vec![0.0; 50_000] };
+        codec.encode_frame_into(&dense, &mut frame).unwrap();
+        assert_eq!(frame[4], TAG_COMPRESSED);
+        assert_eq!(frame[5], Algo::Lz1.to_byte(), "dense forced to lz1");
+        // sparse pinned to raw: delta-packed but never enveloped
+        let sparse = WireMsg::Sparse {
+            bucket: 0,
+            grad: SparseGrad::new(100_000, (0..9000u32).map(|i| i * 11).collect(), vec![0.0; 9000]),
+        };
+        codec.encode_frame_into(&sparse, &mut frame).unwrap();
+        assert_eq!(frame[4], TAG_SPARSE_PACKED);
+    }
+
+    #[test]
+    fn zip_bomb_declared_size_rejected_before_allocation() {
+        // an envelope declaring (MAX_FRAME_BYTES + 1) decompressed bytes
+        let mut body = vec![TAG_COMPRESSED, Algo::Lz1.to_byte()];
+        crate::comm::codec::put_varint_u32(&mut body, (MAX_FRAME_BYTES + 1) as u32);
+        body.extend_from_slice(&[0u8; 16]);
+        let err = decode_body(&body).unwrap_err();
+        assert!(err.to_string().contains("cap"), "{err}");
+        let mut codec = packed_codec(WireCompression::Full);
+        assert!(codec.decode_body(&body).is_err());
+        // ... and one lying about its size within the cap is caught by
+        // the decompressor's exact-length check
+        let mut table = Vec::new();
+        let mut comp = Vec::new();
+        crate::comm::codec::lz_compress_into(&[9u8; 500], &mut comp, &mut table, Algo::Lz1);
+        let mut body = vec![TAG_COMPRESSED, Algo::Lz1.to_byte()];
+        crate::comm::codec::put_varint_u32(&mut body, 400); // lies: it's 500
+        body.extend_from_slice(&comp);
+        assert!(decode_body(&body).is_err());
+    }
+
+    #[test]
+    fn nested_compressed_envelope_rejected() {
+        // compress a valid compressed frame body and wrap it again
+        let inner_msg = WireMsg::DenseChunk { bucket: 0, vals: vec![2.5; 10_000] };
+        let mut codec = packed_codec(WireCompression::Full);
+        let mut frame = Vec::new();
+        codec.encode_frame_into(&inner_msg, &mut frame).unwrap();
+        assert_eq!(frame[4], TAG_COMPRESSED);
+        let inner_body = &frame[4..];
+        let mut table = Vec::new();
+        let mut comp = Vec::new();
+        crate::comm::codec::lz_compress_into(inner_body, &mut comp, &mut table, Algo::Lz1);
+        let mut nested = vec![TAG_COMPRESSED, Algo::Lz1.to_byte()];
+        crate::comm::codec::put_varint_u32(&mut nested, inner_body.len() as u32);
+        nested.extend_from_slice(&comp);
+        let err = decode_body(&nested).unwrap_err();
+        assert!(err.to_string().contains("nested"), "{err}");
+    }
+
+    #[test]
+    fn hello_is_never_compressed_or_packed() {
+        let mut codec = FrameCodec::new(
+            WireCodecConfig {
+                mode: WireCompression::Full,
+                min_bytes: 0,
+                dense: AlgoChoice::Auto,
+                sparse: AlgoChoice::Auto,
+            },
+            CodecStats::new(),
+        );
+        let mut frame = Vec::new();
+        codec.encode_frame_into(&hello(2, Purpose::Ring), &mut frame).unwrap();
+        assert_eq!(frame[4], TAG_HELLO, "the rendezvous must stay v1-parsable");
     }
 }

@@ -92,6 +92,16 @@ pub struct TrainConfig {
     /// 0 = monolithic exchange (the pre-bucketing behavior). Implies
     /// per-layer budgets (buckets are layer-aligned).
     pub bucket_bytes: usize,
+    /// Wire entropy-codec mode of the socket backend's mesh:
+    /// "off" (v1 framing) | "delta" (delta+varint sparse indices) |
+    /// "full" (delta + adaptive byte compression). Inert on the
+    /// in-process backends, which ship no bytes.
+    pub wire_compression: String,
+    /// Per-scheme byte-compression algorithm override for dense-chunk
+    /// frames: "auto" | "raw" | "lz1" | "lz2".
+    pub wire_compression_dense: String,
+    /// Like `wire_compression_dense` for sparse/index frames.
+    pub wire_compression_sparse: String,
     /// Evaluate every `eval_every` steps (0 = never).
     pub eval_every: usize,
     /// Directory for artifacts (HLO + manifest).
@@ -116,6 +126,9 @@ impl Default for TrainConfig {
             fabric_bandwidth_gbps: 32.0,
             backend: "sequential".into(),
             bucket_bytes: 0,
+            wire_compression: "off".into(),
+            wire_compression_dense: "auto".into(),
+            wire_compression_sparse: "auto".into(),
             eval_every: 0,
             artifacts_dir: "artifacts".into(),
         }
@@ -162,6 +175,15 @@ impl TrainConfig {
             fabric_bandwidth_gbps: doc.f64_or("fabric.bandwidth_gbps", 32.0),
             backend: doc.str_or("train.backend", &d.backend).to_string(),
             bucket_bytes: doc.usize_or("train.bucket_bytes", d.bucket_bytes),
+            wire_compression: doc
+                .str_or("train.wire_compression", &d.wire_compression)
+                .to_string(),
+            wire_compression_dense: doc
+                .str_or("train.wire_compression_dense", &d.wire_compression_dense)
+                .to_string(),
+            wire_compression_sparse: doc
+                .str_or("train.wire_compression_sparse", &d.wire_compression_sparse)
+                .to_string(),
             eval_every: doc.usize_or("train.eval_every", 0),
             artifacts_dir: doc.str_or("train.artifacts_dir", &d.artifacts_dir).to_string(),
         };
@@ -186,7 +208,18 @@ impl TrainConfig {
              exchange is monolithic — drop --bucket-bytes or pick a scheme"
         );
         crate::comm::Backend::parse(&self.backend)?;
+        self.wire_codec()?;
         Ok(())
+    }
+
+    /// Parse the wire-compression strings into the typed codec config
+    /// (validated as part of [`TrainConfig::validate`]).
+    pub fn wire_codec(&self) -> anyhow::Result<crate::comm::WireCodecConfig> {
+        crate::comm::WireCodecConfig::from_strings(
+            &self.wire_compression,
+            &self.wire_compression_dense,
+            &self.wire_compression_sparse,
+        )
     }
 
     /// Global batch size (paper's "BSZ" column).
@@ -274,6 +307,25 @@ mod tests {
         assert!(err.to_string().contains("bucket_bytes"), "{err}");
         c.compress.scheme = "scalecom".into();
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn wire_compression_from_toml_and_validation() {
+        assert_eq!(TrainConfig::default().wire_compression, "off");
+        let doc = TomlDoc::parse(
+            "[train]\nwire_compression = \"full\"\nwire_compression_dense = \"lz2\"\n",
+        )
+        .unwrap();
+        let cfg = TrainConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.wire_compression, "full");
+        let codec = cfg.wire_codec().unwrap();
+        assert!(codec.packing() && codec.byte_pass());
+        let mut c = TrainConfig::default();
+        c.wire_compression = "zstd".into();
+        assert!(c.validate().is_err());
+        let mut c = TrainConfig::default();
+        c.wire_compression_sparse = "lz9".into();
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -31,7 +31,7 @@
 //! overlap the paper's scalability story depends on (Remark 3 / §5).
 
 use crate::comm::parallel::LaneTransport;
-use crate::comm::{Backend, BucketPlan, CommCost, Fabric};
+use crate::comm::{Backend, BucketPlan, CommCost, Fabric, WireCodecConfig};
 use crate::compress::{
     sparsify, Compressor, EfMemory, LayerPartition, Selection, SparseGrad,
 };
@@ -97,6 +97,10 @@ pub struct Coordinator {
     pub warmup_steps: usize,
     /// execution backend (parity-locked in `rust/tests/backend_parity.rs`)
     backend: Backend,
+    /// wire entropy-codec configuration of the socket backend's mesh
+    /// (inert on the in-process backends; applied when the socket mesh
+    /// is built)
+    wire_codec: WireCodecConfig,
     /// pipelined steps submitted but not yet waited (≤ 1 in the
     /// double-buffered driving mode)
     pending: VecDeque<Pending>,
@@ -134,6 +138,7 @@ impl Coordinator {
             bucket_plan: None,
             warmup_steps,
             backend: Backend::Sequential,
+            wire_codec: WireCodecConfig::default(),
             pending: VecDeque::new(),
             ready: VecDeque::new(),
             poisoned: false,
@@ -194,6 +199,34 @@ impl Coordinator {
         self
     }
 
+    /// Configure the wire entropy codec of the socket backend's mesh.
+    /// Panics if the socket mesh is already built — CLI paths should use
+    /// [`Coordinator::try_set_wire_codec`] instead.
+    pub fn with_wire_codec(mut self, cfg: WireCodecConfig) -> Self {
+        self.try_set_wire_codec(cfg)
+            .expect("wire codec must be configured before the socket mesh is built");
+        self
+    }
+
+    /// Configure the wire entropy codec applied when the socket backend
+    /// builds its loopback mesh. Fails if that mesh already exists (the
+    /// endpoints latched their codec at construction — rebuilding them
+    /// mid-run would tear live lanes down).
+    pub fn try_set_wire_codec(&mut self, cfg: WireCodecConfig) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.backend != Backend::Socket || cfg == self.wire_codec,
+            "the socket mesh is already built with --wire-compression {}; \
+             set the wire codec before selecting the socket backend",
+            self.wire_codec.label(),
+        );
+        self.wire_codec = cfg;
+        Ok(())
+    }
+
+    pub fn wire_codec(&self) -> WireCodecConfig {
+        self.wire_codec
+    }
+
     /// Infallible [`Coordinator::try_set_backend`] for contexts that
     /// treat a failed mesh setup as a bug (tests, benches).
     pub fn set_backend(&mut self, backend: Backend) {
@@ -221,7 +254,7 @@ impl Coordinator {
         let socket_lanes = if backend == Backend::Socket {
             Some(crate::comm::parallel::CommLanes::with_transport(
                 self.n,
-                LaneTransport::Socket,
+                LaneTransport::Socket(self.wire_codec),
             )?)
         } else {
             None
@@ -505,6 +538,8 @@ impl Coordinator {
         let r = self.run_bucketed(t, grads, plan);
         if r.is_err() {
             self.poisoned = true;
+        } else {
+            self.refresh_codec_stats();
         }
         r
     }
@@ -751,8 +786,18 @@ impl Coordinator {
         if r.is_err() {
             self.pending.clear();
             self.poisoned = true;
+        } else {
+            self.refresh_codec_stats();
         }
         r.map(Some)
+    }
+
+    /// Pull the socket mesh's entropy-codec counters into the fabric's
+    /// stats (all-zero on the channel-transport and lane-free backends).
+    fn refresh_codec_stats(&mut self) {
+        if let Workers::Pool(p) = &self.workers {
+            self.fabric.update_codec_stats(p.codec_snapshot());
+        }
     }
 
     fn wait_pending(&mut self, p: Pending) -> anyhow::Result<StepResult> {

@@ -36,6 +36,7 @@ fn run() -> Result<()> {
         Some("simulate") => cmd_simulate(&mut args),
         Some("tune") => cmd_tune(&mut args),
         Some("node") => cmd_node(&mut args),
+        Some("bench-trend") => cmd_bench_trend(&mut args),
         Some("experiment") => cmd_experiment(&mut args),
         Some("perf-model") => cmd_perf_model(&mut args),
         Some("compress-bench") => cmd_compress_bench(&mut args),
@@ -81,6 +82,19 @@ fn cmd_train(args: &mut Args) -> Result<()> {
         cfg.backend = b;
     }
     cfg.bucket_bytes = args.usize_or("bucket-bytes", cfg.bucket_bytes)?;
+    // Wire entropy codec: CLI flag > SCALECOM_WIRE_COMPRESSION env >
+    // config file (socket backend only; inert elsewhere).
+    if let Some(w) = args.str_opt("wire-compression") {
+        cfg.wire_compression = w;
+    } else if let Some(mode) = scalecom::comm::codec::env_wire_compression()? {
+        cfg.wire_compression = mode.label().to_string();
+    }
+    if let Some(w) = args.str_opt("wire-compression-dense") {
+        cfg.wire_compression_dense = w;
+    }
+    if let Some(w) = args.str_opt("wire-compression-sparse") {
+        cfg.wire_compression_sparse = w;
+    }
     // The socket backend wants an explicit deployment choice: loopback
     // (in-process TCP mesh) or a real multi-process ring via `node`.
     let peers = args.str_opt("peers");
@@ -130,6 +144,9 @@ fn cmd_train(args: &mut Args) -> Result<()> {
         },
         if use_kernel { " [L1-kernel compression]" } else { "" }
     );
+    if cfg.wire_compression != "off" {
+        println!("wire compression: {}", cfg.wire_codec()?.label());
+    }
     let peak = cfg.lr;
     let mut trainer = Trainer::from_config(cfg)?;
     trainer.use_kernel = use_kernel;
@@ -374,10 +391,58 @@ fn cmd_node(args: &mut Args) -> Result<()> {
         step_delay_ms: args.usize_or("step-delay-ms", d.step_delay_ms as usize)? as u64,
     };
     let timeout = Duration::from_secs(args.usize_or("timeout-secs", 30)?.max(1) as u64);
+    // Same precedence as `train`: flag > SCALECOM_WIRE_COMPRESSION env >
+    // default off. Every node of one ring must agree on the mode.
+    let wire_mode = match args.str_opt("wire-compression") {
+        Some(w) => w,
+        None => scalecom::comm::codec::env_wire_compression()?
+            .map(|m| m.label().to_string())
+            .unwrap_or_else(|| "off".to_string()),
+    };
+    let wire_dense = args.str_or("wire-compression-dense", "auto");
+    let wire_sparse = args.str_or("wire-compression-sparse", "auto");
     args.finish()?;
-    let spec = NodeSpec::from_flags(role.as_deref(), bind.as_deref(), peers.as_deref(), timeout)?;
+    let wire_codec =
+        scalecom::comm::WireCodecConfig::from_strings(&wire_mode, &wire_dense, &wire_sparse)?;
+    let spec = NodeSpec::from_flags(role.as_deref(), bind.as_deref(), peers.as_deref(), timeout)?
+        .with_wire_codec(wire_codec);
     let stdout = std::io::stdout();
     run_node(&spec, &wl, &mut stdout.lock())
+}
+
+/// Bench-trend gate: compare a current `bench_allreduce --json` artifact
+/// against a baseline and fail on median regressions past the budget.
+fn cmd_bench_trend(args: &mut Args) -> Result<()> {
+    let baseline = args
+        .str_opt("baseline")
+        .ok_or_else(|| anyhow::anyhow!("bench-trend needs --baseline <json>"))?;
+    let current = args
+        .str_opt("current")
+        .ok_or_else(|| anyhow::anyhow!("bench-trend needs --current <json>"))?;
+    let max_regress = args.f64_or("max-regress", 0.15)?;
+    let prefixes = args.str_or("prefixes", "allreduce,codec/");
+    args.finish()?;
+    let prefixes: Vec<String> =
+        prefixes.split(',').map(|p| p.trim().to_string()).filter(|p| !p.is_empty()).collect();
+    let report = scalecom::bench::trend::compare_files(
+        std::path::Path::new(&baseline),
+        std::path::Path::new(&current),
+        &prefixes,
+        max_regress,
+    )?;
+    print!("{}", report.render());
+    anyhow::ensure!(
+        report.regressions.is_empty(),
+        "bench-trend: {} benchmark(s) regressed more than {:.0}% vs baseline",
+        report.regressions.len(),
+        max_regress * 100.0
+    );
+    println!(
+        "bench-trend OK: {} benchmark(s) compared, none regressed more than {:.0}%",
+        report.compared.len(),
+        max_regress * 100.0
+    );
+    Ok(())
 }
 
 fn cmd_experiment(args: &mut Args) -> Result<()> {

@@ -495,14 +495,18 @@ mod bucketed_exchange {
 }
 
 /// Wire-codec properties (the socket transport's framing layer): any
-/// `SparseGrad`/dense/control message round-trips bit-exactly; decoding
-/// under adversity — split reads at every byte boundary, truncated
-/// frames, hostile lengths, random garbage — never panics or mis-frames.
+/// `SparseGrad`/dense/control message round-trips bit-exactly — raw,
+/// delta+varint packed, and byte-compressed alike; `frame_len` can never
+/// drift from `encode`; decoding under adversity — split reads at every
+/// byte boundary, truncated frames, hostile lengths, bit flips, zip-bomb
+/// declared sizes, random garbage — never panics or mis-frames.
 #[cfg(test)]
 mod wire_codec {
     use super::check;
+    use crate::comm::codec::{CodecStats, FrameCodec, WireCodecConfig, WireCompression};
     use crate::comm::wire::{
-        decode_body, encode, read_msg, FrameDecoder, Purpose, WireMsg, MAX_FRAME_BYTES,
+        decode_body, encode, frame_len, read_msg, FrameDecoder, Purpose, WireMsg,
+        MAX_FRAME_BYTES, TAG_COMPRESSED,
     };
     use crate::compress::SparseGrad;
 
@@ -537,6 +541,7 @@ mod wire_codec {
             2 => WireMsg::Hello {
                 rank: g.usize_in(0..=1024) as u32,
                 purpose: if g.bool() { Purpose::Ring } else { Purpose::Star },
+                codec: g.usize_in(1..=255) as u8,
             },
             _ => WireMsg::Indices(
                 (0..g.usize_in(0..=48)).map(|_| g.usize_in(0..=u16::MAX as usize) as u32).collect(),
@@ -648,6 +653,126 @@ mod wire_codec {
                     let _ = decode_body(&frame[4..]);
                 }
             }
+        });
+    }
+
+    #[test]
+    fn encode_length_matches_frame_len_for_every_variant() {
+        // `frame_len` preallocates the hot-path encode buffer; a drift
+        // from `encode` would mean regrowth copies (or waste) on every
+        // multi-MB dense chunk.
+        check("wire frame_len == encode len", 300, |g| {
+            let msg = arb_msg(g);
+            assert_eq!(encode(&msg).len(), frame_len(&msg), "{msg:?}");
+        });
+    }
+
+    /// An encoder/decoder pair sharing one stats handle, with the
+    /// min-size guard disabled so the byte pass sees small frames too.
+    fn codec_pair(mode: WireCompression) -> (FrameCodec, FrameCodec) {
+        let cfg = WireCodecConfig { mode, min_bytes: 0, ..WireCodecConfig::default() };
+        let stats = CodecStats::new();
+        (FrameCodec::new(cfg, stats.clone()), FrameCodec::new(cfg, stats))
+    }
+
+    /// Half the draws are runs of one repeated value — highly
+    /// compressible, so the byte pass actually wraps envelopes instead
+    /// of always falling back on incompressible random floats.
+    fn arb_msg_maybe_compressible(g: &mut super::Gen) -> WireMsg {
+        if g.bool() {
+            let n = g.usize_in(0..=160);
+            let v = g.f32_in(-4.0, 4.0);
+            WireMsg::DenseChunk { bucket: g.usize_in(0..=7) as u32, vals: vec![v; n] }
+        } else {
+            arb_msg(g)
+        }
+    }
+
+    #[test]
+    fn packed_and_compressed_frames_roundtrip_bit_exactly() {
+        for mode in [WireCompression::Delta, WireCompression::Full] {
+            check(&format!("wire codec roundtrip ({})", mode.label()), 150, |g| {
+                let (mut enc, mut dec) = codec_pair(mode);
+                let msg = arb_msg_maybe_compressible(g);
+                let mut frame = Vec::new();
+                enc.encode_frame_into(&msg, &mut frame).expect("encode");
+                let body_len =
+                    u32::from_le_bytes([frame[0], frame[1], frame[2], frame[3]]) as usize;
+                assert_eq!(body_len + 4, frame.len(), "header covers the body");
+                // the pooled decode path (what the socket receiver runs)
+                let back = dec.decode_body(&frame[4..]).expect("codec decode");
+                assert!(bits_equal(&msg, &back), "{msg:?} vs {back:?}");
+                // and the free-function path behind read_msg/FrameDecoder
+                let back2 = decode_body(&frame[4..]).expect("decode_body");
+                assert!(bits_equal(&msg, &back2));
+            });
+        }
+    }
+
+    #[test]
+    fn split_reads_reassemble_compressed_streams() {
+        check("wire codec split reads", 15, |g| {
+            let (mut enc, _) = codec_pair(WireCompression::Full);
+            let msgs: Vec<WireMsg> =
+                (0..g.usize_in(1..=3)).map(|_| arb_msg_maybe_compressible(g)).collect();
+            let mut stream = Vec::new();
+            for m in &msgs {
+                let mut frame = Vec::new();
+                enc.encode_frame_into(m, &mut frame).expect("encode");
+                stream.extend_from_slice(&frame);
+            }
+            for cut in 0..=stream.len() {
+                let mut d = FrameDecoder::new();
+                let mut got = d.push(&stream[..cut]).expect("prefix never errors");
+                got.extend(d.push(&stream[cut..]).expect("suffix completes"));
+                assert_eq!(got.len(), msgs.len(), "cut={cut}");
+                for (a, b) in msgs.iter().zip(&got) {
+                    assert!(bits_equal(a, b), "cut={cut}");
+                }
+                assert_eq!(d.pending(), 0, "cut={cut}: no bytes left over");
+            }
+        });
+    }
+
+    #[test]
+    fn truncated_and_bitflipped_compressed_frames_never_panic() {
+        check("wire codec adversity", 120, |g| {
+            let (mut enc, mut dec) = codec_pair(WireCompression::Full);
+            let msg = arb_msg_maybe_compressible(g);
+            let mut frame = Vec::new();
+            enc.encode_frame_into(&msg, &mut frame).expect("encode");
+            // truncation: the incremental decoder waits, the blocking
+            // reader errors — neither panics, neither yields a message
+            let cut = g.usize_in(0..=frame.len().saturating_sub(1));
+            let mut d = FrameDecoder::new();
+            assert!(d.push(&frame[..cut]).expect("partial frame waits").is_empty());
+            assert!(read_msg(&mut &frame[..cut]).is_err());
+            // a bit flip in the body: Err or Ok through both decode
+            // paths, never a panic or over-allocation
+            if frame.len() > 4 {
+                let pos = g.usize_in(4..=frame.len() - 1);
+                frame[pos] ^= 1 << g.usize_in(0..=7);
+                let _ = decode_body(&frame[4..]);
+                let _ = dec.decode_body(&frame[4..]);
+            }
+        });
+    }
+
+    #[test]
+    fn zip_bomb_declared_sizes_are_rejected_before_allocation() {
+        check("wire zip bomb", 40, |g| {
+            // An envelope declaring a decompressed size over the cap must
+            // be rejected up front by every decode path — regardless of
+            // how little compressed payload actually follows.
+            let declared =
+                (MAX_FRAME_BYTES + 1 + g.usize_in(0..=1_000_000)) as u32;
+            let mut body = vec![TAG_COMPRESSED, 1]; // algo byte 1 = lz1
+            crate::comm::codec::put_varint_u32(&mut body, declared);
+            body.extend((0..g.usize_in(0..=32)).map(|_| g.usize_in(0..=255) as u8));
+            let err = decode_body(&body).expect_err("over-cap declared size");
+            assert!(err.to_string().contains("cap"), "{err:#}");
+            let (_, mut dec) = codec_pair(WireCompression::Full);
+            assert!(dec.decode_body(&body).is_err());
         });
     }
 }

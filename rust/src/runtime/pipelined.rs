@@ -155,6 +155,12 @@ impl WorkerPool {
         self.dim
     }
 
+    /// Entropy-codec counters of the underlying mesh (all-zero on the
+    /// channel transport).
+    pub fn codec_snapshot(&self) -> crate::comm::codec::CodecSnapshot {
+        self.lanes.codec_snapshot()
+    }
+
     fn fan_out_ef(&self, grads: &[Vec<f32>], stash: bool) -> Vec<Vec<f32>> {
         assert_eq!(grads.len(), self.n, "one gradient per worker");
         let replies: Vec<Receiver<Vec<f32>>> = self

@@ -78,6 +78,10 @@ pub struct NodeSpec {
     pub peers: Vec<String>,
     pub rank: usize,
     pub timeout: Duration,
+    /// Wire entropy-codec configuration of this node's mesh endpoints.
+    /// Must match across nodes that enable packing (the `Hello`
+    /// handshake rejects a peer that cannot decode packed frames).
+    pub wire_codec: crate::comm::WireCodecConfig,
 }
 
 impl NodeSpec {
@@ -143,7 +147,15 @@ impl NodeSpec {
             peers,
             rank,
             timeout,
+            wire_codec: crate::comm::WireCodecConfig::default(),
         })
+    }
+
+    /// Set the wire entropy-codec configuration (builder style, applied
+    /// after [`NodeSpec::from_flags`]).
+    pub fn with_wire_codec(mut self, cfg: crate::comm::WireCodecConfig) -> NodeSpec {
+        self.wire_codec = cfg;
+        self
     }
 
     pub fn workers(&self) -> usize {
@@ -567,7 +579,15 @@ pub fn run_node<W: Write>(spec: &NodeSpec, wl: &NodeWorkload, out: &mut W) -> an
         .with_context(|| format!("rank {rank}: bind {}", spec.bind))?;
     writeln!(out, "node rank={rank} n={n} bound={}", spec.bind)?;
     out.flush()?;
-    let (mut ring, mut star) = form_mesh(rank, &spec.peers, listener, spec.timeout)?;
+    let codec_stats = crate::comm::CodecStats::new();
+    let (mut ring, mut star) = form_mesh(
+        rank,
+        &spec.peers,
+        listener,
+        spec.timeout,
+        spec.wire_codec,
+        &codec_stats,
+    )?;
 
     let k = wl.k();
     let mut compressor = if wl.scheme == "none" {

@@ -135,6 +135,9 @@ impl<'h> Trainer<'h> {
             fabric,
             cfg.compress.warmup_steps,
         );
+        // The wire codec must be configured before the socket mesh is
+        // built (the endpoints latch it at construction).
+        coordinator.try_set_wire_codec(cfg.wire_codec()?)?;
         // Fallible switch: the socket backend binds a loopback TCP mesh,
         // and a refused mesh should be a clean CLI error, not a panic.
         coordinator.try_set_backend(Backend::parse(&cfg.backend)?)?;
@@ -241,6 +244,7 @@ impl<'h> Trainer<'h> {
         log.add_meta("workers", &self.cfg.workers.to_string());
         log.add_meta("beta", &self.cfg.compress.beta.to_string());
         log.add_meta("global_batch", &self.cfg.global_batch().to_string());
+        log.add_meta("wire_compression", &self.coordinator.wire_codec().label());
 
         let timer = Timer::new();
         let n = self.cfg.workers;
@@ -332,6 +336,11 @@ impl<'h> Trainer<'h> {
                 eval_acc,
                 timer.elapsed_s(),
             ]);
+        }
+        // Socket backend: report what the wire actually shipped.
+        let codec = self.coordinator.fabric.stats().codec.clone();
+        if !codec.is_empty() {
+            log.add_meta("wire_codec", &codec.summary());
         }
         Ok(log)
     }

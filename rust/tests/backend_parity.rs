@@ -26,7 +26,7 @@
 //! CI runs this suite once per backend via `SCALECOM_TEST_BACKENDS`
 //! (comma-separated labels); unset, every concurrent backend is tested.
 
-use scalecom::comm::{Backend, BucketPlan, Fabric, FabricConfig, Topology};
+use scalecom::comm::{Backend, BucketPlan, Fabric, FabricConfig, Topology, WireCodecConfig};
 use scalecom::compress::rate::LayerSlice;
 use scalecom::compress::{schemes::make_compressor, LayerPartition};
 use scalecom::coordinator::{Coordinator, Mode, StepResult};
@@ -492,6 +492,107 @@ fn bucketed_selection_equals_monolithic_selection_on_every_backend() {
                 }
             }
         }
+    }
+}
+
+// ----------------------------------------------------------------------
+// Wire-compression axis: the socket backend re-runs the parity contract
+// with the entropy codec enabled. Compression must be observably
+// invisible — selections, leaders, rates, and the byte-exact CommStats
+// ledger unchanged, gather bit-identical, ring values within the same
+// rtol/atol as the uncompressed run — and, because f32 bits ship
+// untouched in every mode, the compressed socket run must be
+// bit-identical to the uncompressed socket run.
+// ----------------------------------------------------------------------
+
+/// Socket coordinator with the wire codec set BEFORE the mesh is built
+/// (the codec is baked into every lane endpoint at mesh-formation time).
+fn socket_coordinator(
+    scheme: &str,
+    n: usize,
+    dim: usize,
+    rate: usize,
+    warmup: usize,
+    topo: Topology,
+    wire: WireCodecConfig,
+) -> Coordinator {
+    let fabric = Fabric::new(FabricConfig {
+        workers: n,
+        topology: topo,
+        ..FabricConfig::default()
+    });
+    let mode = if scheme == "none" {
+        Mode::Dense
+    } else {
+        Mode::Compressed(make_compressor(scheme, rate, 7).unwrap())
+    };
+    let k = (dim / rate).max(1);
+    Coordinator::new(n, dim, mode, 0.5, k, fabric, warmup)
+        .with_wire_codec(wire)
+        .with_backend(Backend::Socket)
+}
+
+#[test]
+fn socket_wire_compression_modes_match_the_sequential_reference() {
+    if !backends_under_test().contains(&Backend::Socket) {
+        return; // this axis belongs to the socket matrix job
+    }
+    for mode in ["off", "delta", "full"] {
+        let wire = WireCodecConfig::from_strings(mode, "auto", "auto").unwrap();
+        for &scheme in &["scalecom", "local-topk"] {
+            for &n in &[2usize, 4, 8] {
+                let dim = 96;
+                let rate = 8;
+                let topo = Topology::Ring;
+                let ctx = format!("wire={mode} scheme={scheme} n={n} backend=socket");
+                let mut seq =
+                    coordinator(scheme, n, dim, rate, 0, topo, Backend::Sequential);
+                let mut sock = socket_coordinator(scheme, n, dim, rate, 0, topo, wire);
+                let mut rng = Rng::for_stream(0xC0DE, n as u64);
+                for t in 0..30 {
+                    let grads = rand_grads(&mut rng, n, dim);
+                    let a = seq.step(t, &grads);
+                    let b = sock.step(t, &grads);
+                    assert_step_parity(&ctx, t, &a, &b);
+                }
+                assert_memory_parity(&ctx, &seq, &sock);
+                assert_eq!(
+                    seq.fabric.stats().ops,
+                    sock.fabric.stats().ops,
+                    "CommStats mismatch {ctx}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn socket_runs_are_bit_identical_with_compression_on_and_off() {
+    if !backends_under_test().contains(&Backend::Socket) {
+        return; // this axis belongs to the socket matrix job
+    }
+    // Same fixed channel dataflow, same f32 bits on the wire in every
+    // mode — so the three socket runs must agree bit for bit, gather and
+    // ring paths alike, not merely within tolerance.
+    let run = |mode: &str, scheme: &str| {
+        let wire = WireCodecConfig::from_strings(mode, "auto", "auto").unwrap();
+        let n = 4;
+        let dim = 160;
+        let mut c = socket_coordinator(scheme, n, dim, 8, 0, Topology::Ring, wire);
+        let mut rng = Rng::new(77);
+        let mut updates = Vec::new();
+        for t in 0..25 {
+            let grads = rand_grads(&mut rng, n, dim);
+            updates.push(c.step(t, &grads).update);
+        }
+        updates
+    };
+    for scheme in ["scalecom", "local-topk"] {
+        let off = run("off", scheme);
+        let delta = run("delta", scheme);
+        let full = run("full", scheme);
+        assert_eq!(off, delta, "scheme={scheme}: delta-packed run diverged");
+        assert_eq!(off, full, "scheme={scheme}: byte-compressed run diverged");
     }
 }
 
