@@ -140,6 +140,15 @@ SUBCOMMANDS:
                      --dim N --rate R --steps N --layers L --seed S
                      --bucket-bytes N --overlapped --compute-per-elem-ns X
                      --trace (print the per-bucket event timeline)
+                     --elastic-kill-step T  elastic membership: kill one
+                       worker at step T's exchange and charge the whole
+                       recovery wave (2x-heartbeat detection, restart,
+                       re-rendezvous, ring resume agreement, replay) in
+                       virtual time — selections stay bit-identical to
+                       the fault-free run
+                     --elastic-kill-worker W (default 1)
+                     --elastic-heartbeat-ms H (default 100)
+                     --elastic-restart-ms R (default 1000)
   tune             pick --bucket-bytes: calibrate compute from real
                    steps, sweep every bucket plan (+ the overlapped
                    driving mode) through the simulator, print the winner
@@ -160,6 +169,19 @@ SUBCOMMANDS:
                        every node of the ring; old peers are rejected at
                        the handshake) --wire-compression-dense ...
                        --wire-compression-sparse ...
+                     --heartbeat-ms N  wire-level liveness: a dead or
+                       wedged peer is detected within 2N ms instead of at
+                       the next blocking read (0 = off; must match on
+                       every node — the handshake rejects mixed meshes)
+                     --reconnect  survive link faults: re-rendezvous on
+                       the same listener, agree on a resume point (ring
+                       min-reduce of newest snapshots), roll the EF memory
+                       back, replay — digest stays bit-identical to a
+                       fault-free run
+                     --snapshot-dir DIR  persist the EF-memory snapshot
+                       after every step (atomic rename), so a restarted
+                       process can rejoin and resume; per-run scratch
+                     --max-reconnect-attempts N (default 3)
   bench-trend      compare two bench_allreduce --json artifacts and fail
                    on median regressions past the budget (the CI perf gate)
                      --baseline old.json --current new.json

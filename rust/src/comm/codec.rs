@@ -514,9 +514,13 @@ impl WireCodecConfig {
 
     /// Minimum wire-codec version a peer must speak to decode our
     /// frames: packed tags need v2, `off` stays decodable by v1 peers.
+    /// Deliberately *not* [`crate::comm::wire::WIRE_CODEC_VERSION`]: v3
+    /// only added the liveness control frames, which compression never
+    /// emits — a v2 peer decodes packed data frames fine (the heartbeat
+    /// path enforces v3 separately at handshake).
     pub fn required_peer_codec(self) -> u8 {
         if self.packing() {
-            crate::comm::wire::WIRE_CODEC_VERSION
+            2
         } else {
             1
         }
@@ -826,7 +830,12 @@ impl FrameCodec {
         let choice = match msg {
             WireMsg::DenseChunk { .. } => self.cfg.dense,
             WireMsg::Sparse { .. } | WireMsg::Indices(_) => self.cfg.sparse,
-            WireMsg::Hello { .. } => return None,
+            // Handshake and liveness/recovery control frames are tiny
+            // and latency-bound: always raw.
+            WireMsg::Hello { .. }
+            | WireMsg::Ping { .. }
+            | WireMsg::Pong { .. }
+            | WireMsg::Resume { .. } => return None,
         };
         match choice {
             AlgoChoice::Force(Algo::Raw) => None,
@@ -1014,9 +1023,11 @@ mod tests {
         assert_eq!(cfg.dense, AlgoChoice::Force(Algo::Raw));
         assert_eq!(cfg.sparse, AlgoChoice::Force(Algo::Lz1));
         assert_eq!(WireCodecConfig::off().required_peer_codec(), 1);
+        // pinned at 2: v3 added only control frames, so packed data
+        // frames still interoperate with v2 peers
         assert_eq!(
             WireCodecConfig::with_mode(WireCompression::Delta).required_peer_codec(),
-            crate::comm::wire::WIRE_CODEC_VERSION
+            2
         );
     }
 

@@ -46,10 +46,11 @@ use crate::comm::codec::{CodecStats, FrameCodec, WireCodecConfig};
 use crate::comm::parallel::ring_allreduce_generic;
 use crate::comm::wire::{self, Purpose, WireMsg};
 use crate::compress::SparseGrad;
+use std::collections::VecDeque;
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::mpsc::{sync_channel, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -97,6 +98,51 @@ pub fn parse_timeout_secs(raw: Option<&str>) -> anyhow::Result<Duration> {
 /// hundreds queued means the peer stopped draining.
 pub const DEFAULT_SEND_QUEUE_FRAMES: usize = 1024;
 
+/// Shared state of a [`FramedSender`]'s bounded queue. One mutex guards
+/// the queue, the shutdown bit, and the error latch together so a fault
+/// latched by any thread (writer, liveness monitor, or a timed-out
+/// `send`) is observed atomically with the queue state.
+struct SendState {
+    q: VecDeque<WireMsg>,
+    /// Set by `Drop`: the writer drains what is queued, then exits.
+    closed: bool,
+    /// First fault on this link (write error, heartbeat loss, queue
+    /// stall). Once set, every `send` fails fast with it.
+    err: Option<String>,
+}
+
+struct SendShared {
+    state: Mutex<SendState>,
+    /// Signaled when the writer pops (room for senders) or a fault lands.
+    not_full: Condvar,
+    /// Signaled when a sender pushes, a fault lands, or `Drop` closes.
+    not_empty: Condvar,
+}
+
+impl SendShared {
+    /// Latch `e` as this link's fault (first writer wins) and wake every
+    /// thread parked on either condition.
+    fn latch(&self, e: String) {
+        let mut st = self.state.lock().expect("sender queue state");
+        if st.err.is_none() {
+            st.err = Some(e);
+        }
+        self.not_full.notify_all();
+        self.not_empty.notify_all();
+    }
+
+    /// Non-blocking enqueue for the liveness thread's pings: skipped
+    /// when the queue is full (a backed-up link is about to fault on its
+    /// own) or the link already faulted.
+    fn try_push(&self, cap: usize, msg: WireMsg) {
+        let mut st = self.state.lock().expect("sender queue state");
+        if st.err.is_none() && !st.closed && st.q.len() < cap {
+            st.q.push_back(msg);
+            self.not_empty.notify_one();
+        }
+    }
+}
+
 /// Framed sender: messages are handed to a dedicated writer thread over
 /// a **bounded** queue. The writer owns a [`FrameCodec`] and one frame
 /// staging buffer, so encoding (packing, optional byte compression)
@@ -109,13 +155,24 @@ pub const DEFAULT_SEND_QUEUE_FRAMES: usize = 1024;
 /// and break the bounded-waiting contract.
 ///
 /// `send` does not block on a healthy mesh; with the queue at its bound
-/// it waits (backpressure for a merely slow peer) up to the queue
-/// timeout, then latches a clean fault that names the stall instead of
-/// accumulating frames without limit.
+/// it **parks on a condvar** (no busy-spin — a multi-MB frame draining
+/// at link speed costs zero CPU on the blocked sender) until the writer
+/// pops, the link faults, or the queue timeout expires, which latches a
+/// clean fault that names the stall instead of accumulating frames
+/// without limit.
+///
+/// With a heartbeat configured ([`FramedSender::with_heartbeat`]), a
+/// liveness thread additionally enqueues a `Ping` every interval and
+/// reads the peer's `Pong`s off the reverse direction of the same TCP
+/// stream; no pong for 2× the interval latches a heartbeat fault, so a
+/// dead or wedged peer surfaces within a bounded window even while this
+/// node is between collectives (not blocked in any read).
 pub struct FramedSender {
-    tx: Option<SyncSender<WireMsg>>,
-    err: Arc<Mutex<Option<String>>>,
-    thread: Option<JoinHandle<()>>,
+    shared: Arc<SendShared>,
+    writer: Option<JoinHandle<()>>,
+    liveness: Option<JoinHandle<()>>,
+    /// Stops the liveness thread (checked on every read-timeout tick).
+    stop: Arc<AtomicBool>,
     queue_cap: usize,
     queue_timeout: Duration,
 }
@@ -126,12 +183,13 @@ impl FramedSender {
         write_timeout: Duration,
         codec: FrameCodec,
     ) -> anyhow::Result<FramedSender> {
-        FramedSender::with_queue(
+        FramedSender::build(
             stream,
             write_timeout,
             codec,
             DEFAULT_SEND_QUEUE_FRAMES,
             write_timeout,
+            None,
         )
     }
 
@@ -140,106 +198,277 @@ impl FramedSender {
     pub fn with_queue(
         stream: TcpStream,
         write_timeout: Duration,
-        mut codec: FrameCodec,
+        codec: FrameCodec,
         queue_cap: usize,
         queue_timeout: Duration,
     ) -> anyhow::Result<FramedSender> {
+        FramedSender::build(stream, write_timeout, codec, queue_cap, queue_timeout, None)
+    }
+
+    /// [`FramedSender::new`] plus the heartbeat liveness monitor:
+    /// `interval` between pings, detection within 2× `interval` of pong
+    /// silence.
+    pub fn with_heartbeat(
+        stream: TcpStream,
+        write_timeout: Duration,
+        codec: FrameCodec,
+        interval: Duration,
+    ) -> anyhow::Result<FramedSender> {
+        FramedSender::build(
+            stream,
+            write_timeout,
+            codec,
+            DEFAULT_SEND_QUEUE_FRAMES,
+            write_timeout,
+            Some(interval),
+        )
+    }
+
+    fn build(
+        stream: TcpStream,
+        write_timeout: Duration,
+        mut codec: FrameCodec,
+        queue_cap: usize,
+        queue_timeout: Duration,
+        heartbeat: Option<Duration>,
+    ) -> anyhow::Result<FramedSender> {
         assert!(queue_cap >= 1, "a zero-capacity send queue would rendezvous");
         stream.set_write_timeout(Some(write_timeout.max(Duration::from_millis(1))))?;
-        let (tx, rx) = sync_channel::<WireMsg>(queue_cap);
-        let err = Arc::new(Mutex::new(None));
-        let latch = err.clone();
-        let thread = std::thread::spawn(move || {
+        let shared = Arc::new(SendShared {
+            state: Mutex::new(SendState {
+                q: VecDeque::new(),
+                closed: false,
+                err: None,
+            }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+        });
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let liveness = match heartbeat {
+            Some(interval) => {
+                let interval = interval.max(Duration::from_millis(1));
+                let monitor = stream
+                    .try_clone()
+                    .map_err(|e| anyhow::anyhow!("clone stream for heartbeat monitor: {e}"))?;
+                Some(spawn_sender_liveness(
+                    monitor,
+                    shared.clone(),
+                    stop.clone(),
+                    interval,
+                    queue_cap,
+                )?)
+            }
+            None => None,
+        };
+
+        let wshared = shared.clone();
+        let writer = std::thread::spawn(move || {
             let mut w = BufWriter::new(stream);
             let mut frame = Vec::new();
-            while let Ok(msg) = rx.recv() {
+            loop {
+                let msg = {
+                    let mut st = wshared.state.lock().expect("sender queue state");
+                    loop {
+                        if st.err.is_some() {
+                            return;
+                        }
+                        if let Some(m) = st.q.pop_front() {
+                            wshared.not_full.notify_all();
+                            break m;
+                        }
+                        if st.closed {
+                            return;
+                        }
+                        st = wshared.not_empty.wait(st).expect("sender queue state");
+                    }
+                };
                 let res = codec
                     .encode_frame_into(&msg, &mut frame)
                     .and_then(|()| w.write_all(&frame).map_err(anyhow::Error::from))
                     .and_then(|()| w.flush().map_err(anyhow::Error::from));
                 if let Err(e) = res {
-                    *latch.lock().expect("writer error latch") = Some(format!("{e:#}"));
-                    break;
+                    wshared.latch(format!("{e:#}"));
+                    return;
                 }
             }
         });
         Ok(FramedSender {
-            tx: Some(tx),
-            err,
-            thread: Some(thread),
+            shared,
+            writer: Some(writer),
+            liveness,
+            stop,
             queue_cap,
             queue_timeout,
         })
     }
 
-    fn latched_err(&self) -> Option<String> {
-        self.err.lock().expect("writer error latch").clone()
+    /// The link's latched fault, if any (write error, heartbeat loss,
+    /// queue stall). Lets callers observe a dead link without sending.
+    pub fn fault(&self) -> Option<String> {
+        self.shared.state.lock().expect("sender queue state").err.clone()
     }
 
     /// Queue one message. Does not block while the queue has room;
     /// fails if the writer thread has already hit a socket error (e.g.
-    /// the peer died) or the queue stays full past the queue timeout
-    /// (receiver stopped draining).
+    /// the peer died), the heartbeat monitor declared the peer dead, or
+    /// the queue stays full past the queue timeout (receiver stopped
+    /// draining). Waits park on a condvar — no polling.
     pub fn send(&self, msg: WireMsg) -> anyhow::Result<()> {
-        if let Some(e) = self.latched_err() {
-            anyhow::bail!("socket send failed: {e}");
-        }
-        let tx = self.tx.as_ref().expect("sender queue alive until drop");
-        let mut msg = msg;
-        match tx.try_send(msg) {
-            Ok(()) => return Ok(()),
-            Err(TrySendError::Disconnected(_)) => {
-                anyhow::bail!("socket writer thread exited (peer closed?)")
-            }
-            Err(TrySendError::Full(back)) => msg = back,
-        }
-        // Bounded backpressure: wait for the writer to drain, polling
-        // the error latch so a dying link fails fast, and fault once the
-        // queue stays full past the timeout.
         let deadline = Instant::now() + self.queue_timeout;
+        let mut st = self.shared.state.lock().expect("sender queue state");
         loop {
-            std::thread::sleep(Duration::from_millis(1));
-            if let Some(e) = self.latched_err() {
+            if let Some(e) = &st.err {
                 anyhow::bail!("socket send failed: {e}");
             }
-            match tx.try_send(msg) {
-                Ok(()) => return Ok(()),
-                Err(TrySendError::Disconnected(_)) => {
-                    anyhow::bail!("socket writer thread exited (peer closed?)")
-                }
-                Err(TrySendError::Full(back)) => msg = back,
+            if st.closed {
+                anyhow::bail!("socket writer thread exited (peer closed?)");
             }
-            if Instant::now() >= deadline {
+            if st.q.len() < self.queue_cap {
+                st.q.push_back(msg);
+                self.shared.not_empty.notify_one();
+                return Ok(());
+            }
+            let now = Instant::now();
+            if now >= deadline {
                 let e = format!(
                     "send queue full: peer has not drained {} queued frames within \
                      {:?} (stalled receiver)",
                     self.queue_cap, self.queue_timeout
                 );
-                *self.err.lock().expect("writer error latch") = Some(e.clone());
+                st.err = Some(e.clone());
+                drop(st);
+                self.shared.not_full.notify_all();
+                self.shared.not_empty.notify_all();
                 anyhow::bail!("socket send failed: {e}");
             }
+            let (guard, _) = self
+                .shared
+                .not_full
+                .wait_timeout(st, deadline - now)
+                .expect("sender queue state");
+            st = guard;
         }
     }
 }
 
 impl Drop for FramedSender {
     fn drop(&mut self) {
-        drop(self.tx.take()); // ends the writer loop after the queue drains
-        if let Some(h) = self.thread.take() {
+        {
+            let mut st = self.shared.state.lock().expect("sender queue state");
+            st.closed = true; // writer drains the queue, then exits
+        }
+        self.shared.not_empty.notify_all();
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.writer.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.liveness.take() {
             let _ = h.join();
         }
     }
+}
+
+/// The sender-side heartbeat loop: enqueue a `Ping` every `interval`,
+/// read `Pong`s off the reverse direction of the data stream, and latch
+/// a fault when pong silence exceeds 2× `interval`. EOF or a reset on
+/// the reverse read latches immediately — a SIGKILLed peer is detected
+/// at the next tick, not after the grace window.
+fn spawn_sender_liveness(
+    monitor: TcpStream,
+    shared: Arc<SendShared>,
+    stop: Arc<AtomicBool>,
+    interval: Duration,
+    queue_cap: usize,
+) -> anyhow::Result<JoinHandle<()>> {
+    // Wake at least every interval/2 so ping cadence and the stop flag
+    // are both honored promptly.
+    monitor.set_read_timeout(Some((interval / 2).max(Duration::from_millis(1))))?;
+    Ok(std::thread::spawn(move || {
+        let mut monitor = monitor;
+        let grace = interval * 2;
+        let mut dec = wire::FrameDecoder::new();
+        let mut tmp = [0u8; 4096];
+        let mut seq: u32 = 0;
+        let mut next_ping = Instant::now();
+        let mut last_pong = Instant::now();
+        loop {
+            if stop.load(Ordering::Relaxed) {
+                return;
+            }
+            if Instant::now() >= next_ping {
+                shared.try_push(queue_cap, WireMsg::Ping { seq });
+                seq = seq.wrapping_add(1);
+                next_ping = Instant::now() + interval;
+            }
+            match monitor.read(&mut tmp) {
+                Ok(0) => {
+                    shared.latch("peer closed the connection (EOF on heartbeat channel)".into());
+                    return;
+                }
+                Ok(k) => match dec.push(&tmp[..k]) {
+                    Ok(msgs) => {
+                        if msgs.iter().any(|m| matches!(m, WireMsg::Pong { .. })) {
+                            last_pong = Instant::now();
+                        }
+                    }
+                    Err(e) => {
+                        shared.latch(format!("mis-framed heartbeat channel: {e:#}"));
+                        return;
+                    }
+                },
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut => {}
+                Err(e) => {
+                    shared.latch(format!("heartbeat channel read failed: {e}"));
+                    return;
+                }
+            }
+            if last_pong.elapsed() > grace {
+                shared.latch(format!(
+                    "peer dead (heartbeat): no pong for {:?} (> {grace:?} = 2x the \
+                     {interval:?} heartbeat interval)",
+                    last_pong.elapsed()
+                ));
+                return;
+            }
+        }
+    }))
 }
 
 /// Blocking framed receiver with a read timeout. Owns a [`FrameCodec`]
 /// and one body staging buffer, reused across frames — a stream of
 /// multi-MB dense chunks costs zero per-frame allocation for the wire
 /// bytes (the decoded payload vectors are owned by the messages).
+///
+/// With a heartbeat configured ([`FramedReceiver::with_heartbeat`]) the
+/// stream is instead owned by a dedicated reader thread that decodes
+/// continuously, answers the peer's `Ping`s with `Pong`s on the reverse
+/// direction of the stream (so the peer's liveness monitor sees this
+/// node alive even while it is busy computing), and latches a fault
+/// when the peer goes silent for 2× the interval — the peer pings every
+/// interval, so silence past the grace window means it is dead or
+/// wedged. `recv` then drains the reader's bounded channel.
 pub struct FramedReceiver {
-    r: BufReader<TcpStream>,
     timeout: Duration,
-    codec: FrameCodec,
-    body: Vec<u8>,
+    inner: ReceiverImpl,
+}
+
+enum ReceiverImpl {
+    Direct {
+        r: BufReader<TcpStream>,
+        codec: FrameCodec,
+        body: Vec<u8>,
+    },
+    Threaded {
+        rx: std::sync::mpsc::Receiver<anyhow::Result<WireMsg>>,
+        stop: Arc<AtomicBool>,
+        /// Clone used only to shut the socket down on drop, unblocking
+        /// the reader thread immediately.
+        shutdown: TcpStream,
+        thread: Option<JoinHandle<()>>,
+    },
 }
 
 impl FramedReceiver {
@@ -250,25 +479,70 @@ impl FramedReceiver {
     ) -> anyhow::Result<FramedReceiver> {
         stream.set_read_timeout(Some(timeout.max(Duration::from_millis(1))))?;
         Ok(FramedReceiver {
-            r: BufReader::new(stream),
             timeout,
-            codec,
-            body: Vec::new(),
+            inner: ReceiverImpl::Direct {
+                r: BufReader::new(stream),
+                codec,
+                body: Vec::new(),
+            },
+        })
+    }
+
+    /// [`FramedReceiver::new`] plus the heartbeat responder/monitor:
+    /// the peer pings every `interval`; this side answers pongs and
+    /// declares the peer dead after 2× `interval` of silence.
+    pub fn with_heartbeat(
+        stream: TcpStream,
+        timeout: Duration,
+        codec: FrameCodec,
+        interval: Duration,
+    ) -> anyhow::Result<FramedReceiver> {
+        let interval = interval.max(Duration::from_millis(1));
+        let shutdown = stream
+            .try_clone()
+            .map_err(|e| anyhow::anyhow!("clone stream for receiver shutdown: {e}"))?;
+        // Wake at least every interval/2: answer pings promptly, notice
+        // silence within the grace window, honor the stop flag.
+        stream.set_read_timeout(Some((interval / 2).max(Duration::from_millis(1))))?;
+        stream.set_write_timeout(Some(timeout.max(Duration::from_millis(1))))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = std::sync::mpsc::sync_channel(DEFAULT_SEND_QUEUE_FRAMES);
+        let rstop = stop.clone();
+        let thread = std::thread::spawn(move || {
+            receiver_loop(stream, codec, tx, rstop, interval);
+        });
+        Ok(FramedReceiver {
+            timeout,
+            inner: ReceiverImpl::Threaded {
+                rx,
+                stop,
+                shutdown,
+                thread: Some(thread),
+            },
         })
     }
 
     fn recv_inner(&mut self) -> anyhow::Result<WireMsg> {
-        let mut header = [0u8; 4];
-        self.r.read_exact(&mut header)?;
-        let len = wire::check_body_len(u32::from_le_bytes(header))?;
-        self.body.clear();
-        self.body.resize(len, 0);
-        self.r.read_exact(&mut self.body)?;
-        // move the body out of `self` borrow scope for the codec call
-        let mut body = std::mem::take(&mut self.body);
-        let msg = self.codec.decode_body(&body);
-        std::mem::swap(&mut self.body, &mut body);
-        msg
+        match &mut self.inner {
+            ReceiverImpl::Direct { r, codec, body } => {
+                let mut header = [0u8; 4];
+                r.read_exact(&mut header)?;
+                let len = wire::check_body_len(u32::from_le_bytes(header))?;
+                body.clear();
+                body.resize(len, 0);
+                r.read_exact(body)?;
+                codec.decode_body(body)
+            }
+            ReceiverImpl::Threaded { rx, .. } => match rx.recv_timeout(self.timeout) {
+                Ok(res) => res,
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                    anyhow::bail!("no frame within the read timeout")
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                    anyhow::bail!("reader thread exited (link fault already reported)")
+                }
+            },
+        }
     }
 
     pub fn recv(&mut self) -> anyhow::Result<WireMsg> {
@@ -280,6 +554,96 @@ impl FramedReceiver {
                 self.timeout
             )
         })
+    }
+}
+
+impl Drop for FramedReceiver {
+    fn drop(&mut self) {
+        if let ReceiverImpl::Threaded { stop, shutdown, thread, .. } = &mut self.inner {
+            stop.store(true, Ordering::Relaxed);
+            let _ = shutdown.shutdown(std::net::Shutdown::Both);
+            if let Some(h) = thread.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// The heartbeat-mode reader loop: decode every arriving frame, answer
+/// pings in-line, forward data frames, and track peer silence.
+fn receiver_loop(
+    mut stream: TcpStream,
+    mut codec: FrameCodec,
+    tx: std::sync::mpsc::SyncSender<anyhow::Result<WireMsg>>,
+    stop: Arc<AtomicBool>,
+    interval: Duration,
+) {
+    let grace = interval * 2;
+    let mut dec = wire::FrameDecoder::new();
+    let mut tmp = [0u8; 64 * 1024];
+    let mut last_frame = Instant::now();
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        match stream.read(&mut tmp) {
+            Ok(0) => {
+                let _ = tx.send(Err(anyhow::anyhow!("peer closed the connection (EOF)")));
+                return;
+            }
+            Ok(k) => {
+                last_frame = Instant::now();
+                // Raw frame reassembly only — decode through the pooled
+                // codec so packed/compressed frames and stats behave
+                // exactly like the direct path.
+                let frames = match dec.push_frames(&tmp[..k]) {
+                    Ok(f) => f,
+                    Err(e) => {
+                        let _ = tx.send(Err(e));
+                        return;
+                    }
+                };
+                for body in frames {
+                    match codec.decode_body(&body) {
+                        Ok(WireMsg::Ping { seq }) => {
+                            if let Err(e) = wire::write_msg(&mut stream, &WireMsg::Pong { seq })
+                            {
+                                let _ = tx.send(Err(anyhow::anyhow!(
+                                    "pong write failed (link dead): {e:#}"
+                                )));
+                                return;
+                            }
+                        }
+                        Ok(msg) => {
+                            if tx.send(Ok(msg)).is_err() {
+                                return; // receiver dropped
+                            }
+                        }
+                        Err(e) => {
+                            let _ = tx.send(Err(e));
+                            return;
+                        }
+                    }
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if last_frame.elapsed() > grace {
+                    let _ = tx.send(Err(anyhow::anyhow!(
+                        "peer dead (heartbeat): no frames for {:?} (> {grace:?} = 2x \
+                         the {interval:?} heartbeat interval)",
+                        last_frame.elapsed()
+                    )));
+                    return;
+                }
+            }
+            Err(e) => {
+                let _ = tx.send(Err(anyhow::anyhow!("socket read failed: {e}")));
+                return;
+            }
+        }
     }
 }
 
@@ -442,6 +806,32 @@ impl SocketRingNode {
             }
             Ok(idx)
         }
+    }
+
+    /// Ring min-reduce of every node's resume point — the membership-wide
+    /// agreement of the reconnect-with-resume protocol. `own` encodes the
+    /// next step this node could run from its newest snapshot (`0` = from
+    /// scratch, `s + 1` = state after step `s` is restorable); after
+    /// `n − 1` rounds of pass-the-minimum, every node holds the fleet-wide
+    /// minimum — the earliest step any member must replay from. Sends are
+    /// async (writer queues), so the rounds cannot deadlock.
+    pub fn resume_min_reduce(&mut self, own: u64) -> anyhow::Result<u64> {
+        let mut min = own;
+        for _ in 0..self.n.saturating_sub(1) {
+            self.send_right(WireMsg::Resume {
+                rank: self.id as u32,
+                step: min,
+            })?;
+            match self.recv_left()? {
+                WireMsg::Resume { step, .. } => min = min.min(step),
+                other => anyhow::bail!(
+                    "ring node {}/{}: expected a resume frame, got {other:?}",
+                    self.id,
+                    self.n
+                ),
+            }
+        }
+        Ok(min)
     }
 }
 
@@ -639,9 +1029,21 @@ pub fn local_star(
 
 /// Connect to `addr`, retrying until `deadline` — peers of a ring may
 /// start in any order, so early connects wait for late listeners.
+///
+/// Everything inside one attempt is retryable: resolution errors,
+/// connect failures, *and* post-connect socket setup (`set_nodelay` can
+/// fail transiently when the peer resets the fresh connection — that
+/// must cost one retry, not the whole rendezvous). Each attempt's
+/// connect timeout is clamped to the remaining deadline, so a late
+/// overall deadline is honored instead of overshooting by a fixed
+/// 500 ms.
 pub fn connect_with_retry(addr: &str, deadline: Instant) -> anyhow::Result<TcpStream> {
     let mut last_err = String::from("never attempted");
     loop {
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        // Floor of 10 ms so a nearly-expired deadline still makes one
+        // real attempt instead of failing with a 0-timeout artifact.
+        let attempt = remaining.min(Duration::from_millis(500)).max(Duration::from_millis(10));
         match addr.to_socket_addrs() {
             Ok(addrs) => {
                 // Try every resolved address, like `TcpStream::connect`
@@ -650,11 +1052,11 @@ pub fn connect_with_retry(addr: &str, deadline: Instant) -> anyhow::Result<TcpSt
                 let mut any = false;
                 for sa in addrs {
                     any = true;
-                    match TcpStream::connect_timeout(&sa, Duration::from_millis(500)) {
-                        Ok(s) => {
-                            s.set_nodelay(true)?;
-                            return Ok(s);
-                        }
+                    match TcpStream::connect_timeout(&sa, attempt) {
+                        Ok(s) => match s.set_nodelay(true) {
+                            Ok(()) => return Ok(s),
+                            Err(e) => last_err = format!("{sa}: set_nodelay: {e}"),
+                        },
                         Err(e) => last_err = format!("{sa}: {e}"),
                     }
                 }
@@ -671,24 +1073,107 @@ pub fn connect_with_retry(addr: &str, deadline: Instant) -> anyhow::Result<TcpSt
     }
 }
 
+/// One inbound connection whose handshake has not completed yet. The
+/// stream stays **nonblocking** until its Hello frame is complete, so a
+/// silent or slow connector can never stall classification of the
+/// others — it just sits here until the rendezvous deadline.
+struct PendingHandshake {
+    stream: TcpStream,
+    buf: Vec<u8>,
+    /// Bytes needed for the current phase: 4 (length header), then
+    /// 4 + body once the header has been parsed.
+    target: usize,
+}
+
+/// A handshake frame is a Hello — a few bytes. Anything claiming a
+/// large body on a fresh inbound connection is not a peer.
+const MAX_HANDSHAKE_BODY: usize = 1024;
+
+/// Advance one pending handshake as far as the socket allows without
+/// blocking. `Ok(Some(msg))` = handshake frame complete; `Ok(None)` =
+/// more bytes needed; `Err` = connection is dead or mis-framed (caller
+/// drops it without failing the rendezvous).
+fn advance_handshake(p: &mut PendingHandshake) -> anyhow::Result<Option<WireMsg>> {
+    let mut tmp = [0u8; 64];
+    loop {
+        let want = (p.target - p.buf.len()).min(tmp.len());
+        match p.stream.read(&mut tmp[..want]) {
+            Ok(0) => anyhow::bail!("inbound connection closed before completing its handshake"),
+            Ok(k) => {
+                p.buf.extend_from_slice(&tmp[..k]);
+                if p.target == 4 && p.buf.len() == 4 {
+                    let len = wire::check_body_len(u32::from_le_bytes([
+                        p.buf[0], p.buf[1], p.buf[2], p.buf[3],
+                    ]))?;
+                    anyhow::ensure!(
+                        len <= MAX_HANDSHAKE_BODY,
+                        "handshake frame of {len} bytes is not a Hello"
+                    );
+                    p.target = 4 + len;
+                }
+                if p.target > 4 && p.buf.len() == p.target {
+                    return Ok(Some(wire::decode_body(&p.buf[4..])?));
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                return Ok(None)
+            }
+            Err(e) => return Err(anyhow::Error::from(e).context("handshake read")),
+        }
+    }
+}
+
 /// Form this rank's ring + star endpoints against a static peer list
 /// (`peers[r]` is rank r's bind address; the coordinator/star root is
 /// rank 0). `listener` must already be bound to `peers[rank]` — binding
 /// first and connecting second is what makes the rendezvous
-/// deadlock-free regardless of process start order.
+/// deadlock-free regardless of process start order. The listener is
+/// borrowed, not consumed: fault recovery re-runs the rendezvous on the
+/// same bound socket (`--reconnect`), so restarted peers can find the
+/// survivors at their original addresses.
 ///
 /// Every outbound connection introduces itself with a `Hello` frame
 /// (carrying this build's wire codec version), and inbound connections
 /// are classified by it, so accept order does not matter. A peer whose
 /// codec version is too old for `wire_cfg` is rejected with an error
 /// naming both versions. All waits are bounded by `timeout`.
+///
+/// Handshakes are read **incrementally and concurrently**: a connector
+/// that never sends its Hello (rogue scanner, half-dead peer) occupies
+/// one pending slot until the deadline instead of head-of-line blocking
+/// every other inbound handshake for a full read timeout. A connection
+/// that dies or mis-frames mid-handshake is dropped without failing the
+/// rendezvous. A *duplicate* Hello for an already-classified slot
+/// replaces the old stream (newest wins): during fault recovery a peer
+/// may have connected, died, and reconnected, and the stale stream is
+/// the dead one.
 pub fn form_mesh(
     rank: usize,
     peers: &[String],
-    listener: TcpListener,
+    listener: &TcpListener,
     timeout: Duration,
     wire_cfg: WireCodecConfig,
     stats: &CodecStats,
+) -> anyhow::Result<(SocketRingNode, SocketStarNode)> {
+    form_mesh_with(rank, peers, listener, timeout, wire_cfg, stats, None)
+}
+
+/// [`form_mesh`] with an optional heartbeat interval: when set, every
+/// mesh endpoint carries the liveness machinery (senders ping and
+/// monitor pongs, receivers answer pings and track silence), so a dead
+/// peer is detected within 2× the interval instead of only at the next
+/// blocking read.
+pub fn form_mesh_with(
+    rank: usize,
+    peers: &[String],
+    listener: &TcpListener,
+    timeout: Duration,
+    wire_cfg: WireCodecConfig,
+    stats: &CodecStats,
+    heartbeat: Option<Duration>,
 ) -> anyhow::Result<(SocketRingNode, SocketStarNode)> {
     use anyhow::Context;
     let n = peers.len();
@@ -700,6 +1185,19 @@ pub fn form_mesh(
         ));
     }
     let deadline = Instant::now() + timeout;
+    let mk_codec = || FrameCodec::new(wire_cfg, stats.clone());
+    let mk_rx = |s: TcpStream| -> anyhow::Result<FramedReceiver> {
+        match heartbeat {
+            Some(hb) => FramedReceiver::with_heartbeat(s, timeout, mk_codec(), hb),
+            None => FramedReceiver::new(s, timeout, mk_codec()),
+        }
+    };
+    let mk_tx = |s: TcpStream| -> anyhow::Result<FramedSender> {
+        match heartbeat {
+            Some(hb) => FramedSender::with_heartbeat(s, timeout, mk_codec(), hb),
+            None => FramedSender::new(s, timeout, mk_codec()),
+        }
+    };
 
     // Outbound: ring-right always; star uplink from every worker to rank 0.
     let right = (rank + 1) % n;
@@ -730,95 +1228,105 @@ pub fn form_mesh(
     };
 
     // Inbound: one ring stream from the left neighbor, plus (root only)
-    // one star stream per worker 1..n.
+    // one star stream per worker 1..n. Streams park in `pending` until
+    // their Hello is complete, then classify into a slot.
     let left = (rank + n - 1) % n;
     let mut ring_rx: Option<FramedReceiver> = None;
     let mut star_rx: Vec<Option<FramedReceiver>> = (1..n).map(|_| None).collect();
     let expected = 1 + if rank == 0 { n - 1 } else { 0 };
-    let mut got = 0usize;
+    let mut pending: Vec<PendingHandshake> = Vec::new();
     listener
         .set_nonblocking(true)
         .context("nonblocking rendezvous accept")?;
-    while got < expected {
-        match listener.accept() {
-            Ok((stream, _)) => {
-                stream.set_nonblocking(false)?;
-                stream.set_nodelay(true)?;
-                stream.set_read_timeout(Some(timeout))?;
-                let mut s = stream;
-                let hello = wire::read_msg(&mut s)
-                    .with_context(|| format!("rank {rank}: handshake on inbound connection"))?;
-                match hello {
-                    WireMsg::Hello {
-                        rank: from,
-                        purpose: Purpose::Ring,
-                        codec: peer_codec,
-                    } => {
-                        anyhow::ensure!(
-                            from as usize == left,
-                            "rank {rank}: ring hello from rank {from}, expected left \
-                             neighbor {left} — check that every node got the same --peers list"
-                        );
-                        check_peer_codec(rank, from as usize, peer_codec, wire_cfg)?;
-                        anyhow::ensure!(ring_rx.is_none(), "rank {rank}: duplicate ring link");
-                        ring_rx = Some(FramedReceiver::new(
-                            s,
-                            timeout,
-                            FrameCodec::new(wire_cfg, stats.clone()),
-                        )?);
-                    }
-                    WireMsg::Hello {
-                        rank: from,
-                        purpose: Purpose::Star,
-                        codec: peer_codec,
-                    } => {
-                        let from = from as usize;
-                        anyhow::ensure!(
-                            rank == 0,
-                            "rank {rank}: unexpected star uplink from rank {from} \
-                             (only rank 0 roots the star)"
-                        );
-                        anyhow::ensure!(
-                            (1..n).contains(&from),
-                            "rank 0: star hello from invalid rank {from}"
-                        );
-                        check_peer_codec(rank, from, peer_codec, wire_cfg)?;
-                        anyhow::ensure!(
-                            star_rx[from - 1].is_none(),
-                            "rank 0: duplicate star uplink from rank {from}"
-                        );
-                        star_rx[from - 1] = Some(FramedReceiver::new(
-                            s,
-                            timeout,
-                            FrameCodec::new(wire_cfg, stats.clone()),
-                        )?);
-                    }
-                    other => anyhow::bail!(
-                        "rank {rank}: inbound connection sent {other:?} instead of a Hello"
-                    ),
+    loop {
+        let got = ring_rx.iter().count() + star_rx.iter().filter(|r| r.is_some()).count();
+        if got == expected {
+            break;
+        }
+        // Drain the accept queue without blocking.
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nodelay(true)?;
+                    stream
+                        .set_nonblocking(true)
+                        .context("nonblocking handshake read")?;
+                    pending.push(PendingHandshake { stream, buf: Vec::new(), target: 4 });
                 }
-                got += 1;
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) => return Err(anyhow::Error::from(e).context("rendezvous accept")),
             }
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                anyhow::ensure!(
-                    Instant::now() < deadline,
-                    "rank {rank}: rendezvous timed out with {got}/{expected} inbound \
-                     connections — are all {n} nodes running with the same --peers list?"
-                );
-                std::thread::sleep(Duration::from_millis(10));
+        }
+        // Advance every pending handshake; none can block the others.
+        let mut i = 0;
+        while i < pending.len() {
+            match advance_handshake(&mut pending[i]) {
+                Ok(None) => i += 1,
+                Ok(Some(hello)) => {
+                    let p = pending.swap_remove(i);
+                    p.stream.set_nonblocking(false)?;
+                    match hello {
+                        WireMsg::Hello {
+                            rank: from,
+                            purpose: Purpose::Ring,
+                            codec: peer_codec,
+                        } => {
+                            anyhow::ensure!(
+                                from as usize == left,
+                                "rank {rank}: ring hello from rank {from}, expected left \
+                                 neighbor {left} — check that every node got the same \
+                                 --peers list"
+                            );
+                            check_peer_codec(rank, from as usize, peer_codec, wire_cfg, heartbeat)?;
+                            // newest wins: a duplicate means the peer
+                            // reconnected and the old stream is stale
+                            ring_rx = Some(mk_rx(p.stream)?);
+                        }
+                        WireMsg::Hello {
+                            rank: from,
+                            purpose: Purpose::Star,
+                            codec: peer_codec,
+                        } => {
+                            let from = from as usize;
+                            anyhow::ensure!(
+                                rank == 0,
+                                "rank {rank}: unexpected star uplink from rank {from} \
+                                 (only rank 0 roots the star)"
+                            );
+                            anyhow::ensure!(
+                                (1..n).contains(&from),
+                                "rank 0: star hello from invalid rank {from}"
+                            );
+                            check_peer_codec(rank, from, peer_codec, wire_cfg, heartbeat)?;
+                            star_rx[from - 1] = Some(mk_rx(p.stream)?);
+                        }
+                        // A first frame that is not a Hello is not a
+                        // peer (rogue connector, stale stream): drop it
+                        // without failing the rendezvous.
+                        _ => {}
+                    }
+                }
+                Err(_) => {
+                    // dead or mis-framed mid-handshake: not a peer
+                    pending.swap_remove(i);
+                }
             }
-            Err(e) => return Err(anyhow::Error::from(e).context("rendezvous accept")),
+        }
+        let got = ring_rx.iter().count() + star_rx.iter().filter(|r| r.is_some()).count();
+        if got < expected {
+            anyhow::ensure!(
+                Instant::now() < deadline,
+                "rank {rank}: rendezvous timed out with {got}/{expected} inbound \
+                 connections — are all {n} nodes running with the same --peers list?"
+            );
+            std::thread::sleep(Duration::from_millis(5));
         }
     }
 
     let ring = SocketRingNode::new(
         rank,
         n,
-        Some(FramedSender::new(
-            ring_tx_stream,
-            timeout,
-            FrameCodec::new(wire_cfg, stats.clone()),
-        )?),
+        Some(mk_tx(ring_tx_stream)?),
         Some(ring_rx.expect("ring inbound link present")),
     );
     let star = if rank == 0 {
@@ -831,11 +1339,7 @@ pub fn form_mesh(
         SocketStarNode::new(
             rank,
             n,
-            Some(FramedSender::new(
-                star_tx_stream.take().expect("worker star uplink"),
-                timeout,
-                FrameCodec::new(wire_cfg, stats.clone()),
-            )?),
+            Some(mk_tx(star_tx_stream.take().expect("worker star uplink"))?),
             None,
         )
     };
@@ -843,14 +1347,16 @@ pub fn form_mesh(
 }
 
 /// Reject a handshake from a peer whose wire codec is too old for this
-/// node's codec configuration. Plain framing (`--wire-compression off`)
+/// node's configuration. Plain framing (`--wire-compression off`)
 /// interoperates with any peer; packed/compressed frames need a peer
-/// that understands them.
+/// that understands them (v2+), and the heartbeat's `Ping`/`Pong`
+/// control frames need v3+.
 fn check_peer_codec(
     rank: usize,
     from: usize,
     peer_codec: u8,
     wire_cfg: WireCodecConfig,
+    heartbeat: Option<Duration>,
 ) -> anyhow::Result<()> {
     let needed = wire_cfg.required_peer_codec();
     anyhow::ensure!(
@@ -860,6 +1366,14 @@ fn check_peer_codec(
          run with --wire-compression off",
         wire_cfg.label(),
     );
+    if heartbeat.is_some() {
+        anyhow::ensure!(
+            peer_codec >= 3,
+            "rank {rank}: peer rank {from} speaks wire codec v{peer_codec} but the \
+             heartbeat control frames need v3 — upgrade the peer or run with \
+             --heartbeat-ms 0",
+        );
+    }
     Ok(())
 }
 
@@ -1120,7 +1634,7 @@ mod tests {
                         let (mut ring, mut star) = form_mesh(
                             rank,
                             peers_ref,
-                            listener,
+                            &listener,
                             T,
                             WireCodecConfig::off(),
                             &CodecStats::new(),
@@ -1292,11 +1806,321 @@ mod tests {
             drop(s);
         });
         let cfg = WireCodecConfig::with_mode(WireCompression::Delta);
-        let err = form_mesh(0, &peers, l0, Duration::from_secs(5), cfg, &CodecStats::new())
+        let err = form_mesh(0, &peers, &l0, Duration::from_secs(5), cfg, &CodecStats::new())
             .expect_err("legacy peer must be rejected");
         fake.join().expect("fake peer");
         let msg = format!("{err:#}");
         assert!(msg.contains("wire codec v1"), "{msg}");
         assert!(msg.contains("--wire-compression off"), "{msg}");
+    }
+
+    #[test]
+    fn rogue_silent_connector_does_not_starve_honest_peers() {
+        // A connection that never sends its Hello lands on rank 0's
+        // listener *before* the honest peer. The rendezvous must still
+        // form promptly: the rogue parks as a pending handshake instead
+        // of head-of-line blocking the accept loop for a read timeout.
+        let l0 = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let l1 = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let peers = vec![
+            l0.local_addr().unwrap().to_string(),
+            l1.local_addr().unwrap().to_string(),
+        ];
+        let rogue = TcpStream::connect(peers[0].as_str()).expect("rogue dials rank 0");
+        // give the rogue's connection time to land in the accept queue first
+        std::thread::sleep(Duration::from_millis(100));
+        let timeout = Duration::from_secs(10);
+        let start = Instant::now();
+        let peers_ref = &peers;
+        let bufs: Vec<Vec<f32>> = std::thread::scope(|s| {
+            let handles: Vec<_> = [&l0, &l1]
+                .into_iter()
+                .enumerate()
+                .map(|(rank, listener)| {
+                    s.spawn(move || {
+                        let (mut ring, _star) = form_mesh(
+                            rank,
+                            peers_ref,
+                            listener,
+                            timeout,
+                            WireCodecConfig::off(),
+                            &CodecStats::new(),
+                        )
+                        .expect("mesh despite the rogue");
+                        let mut buf = vec![(rank + 1) as f32; 8];
+                        ring.allreduce_avg(&mut buf).expect("allreduce");
+                        buf
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("rank")).collect()
+        });
+        // well under the timeout: the rogue cost no blocking read
+        assert!(
+            start.elapsed() < Duration::from_secs(5),
+            "rendezvous stalled behind the silent connector: {:?}",
+            start.elapsed()
+        );
+        for b in &bufs {
+            assert!(b.iter().all(|&v| (v - 1.5).abs() < 1e-6), "{b:?}");
+        }
+        drop(rogue);
+    }
+
+    #[test]
+    fn mesh_reforms_on_the_same_listeners() {
+        // The reconnect path re-runs the rendezvous on the same bound
+        // listeners after dropping the old mesh — twice through
+        // form_mesh must work on one set of sockets.
+        let n = 3;
+        let listeners: Vec<TcpListener> = (0..n)
+            .map(|_| TcpListener::bind(("127.0.0.1", 0)).unwrap())
+            .collect();
+        let peers: Vec<String> = listeners
+            .iter()
+            .map(|l| l.local_addr().unwrap().to_string())
+            .collect();
+        let peers_ref = &peers;
+        std::thread::scope(|s| {
+            let handles: Vec<_> = listeners
+                .iter()
+                .enumerate()
+                .map(|(rank, listener)| {
+                    s.spawn(move || {
+                        for round in 0..2 {
+                            let (mut ring, _star) = form_mesh(
+                                rank,
+                                peers_ref,
+                                listener,
+                                T,
+                                WireCodecConfig::off(),
+                                &CodecStats::new(),
+                            )
+                            .unwrap_or_else(|e| panic!("round {round}: {e:#}"));
+                            let mut buf = vec![(rank + 1) as f32; 8];
+                            ring.allreduce_avg(&mut buf).expect("allreduce");
+                            assert!(buf.iter().all(|&v| (v - 2.0).abs() < 1e-6));
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().expect("rank");
+            }
+        });
+    }
+
+    #[test]
+    fn bounded_send_queue_blocks_then_succeeds_when_receiver_drains() {
+        // Backpressure without fault: the receiver drains slowly, so
+        // sends park on the condvar and complete once room opens —
+        // no queue-full fault, no busy-spin.
+        let (w, r) = loopback_pair().expect("loopback pair");
+        let sender = FramedSender::with_queue(
+            w,
+            Duration::from_secs(10),
+            FrameCodec::new(WireCodecConfig::off(), CodecStats::new()),
+            2,
+            Duration::from_secs(8), // queue wait far above the drain stall
+        )
+        .expect("sender");
+        let frames = 8usize;
+        let drain = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(300)); // let the queue fill
+            let mut rx = FramedReceiver::new(
+                r,
+                Duration::from_secs(10),
+                FrameCodec::new(WireCodecConfig::off(), CodecStats::new()),
+            )
+            .expect("receiver");
+            for _ in 0..frames {
+                rx.recv().expect("drain");
+            }
+        });
+        let big = WireMsg::DenseChunk { bucket: 0, vals: vec![0.5f32; 1 << 20] }; // 4 MiB
+        for i in 0..frames {
+            sender.send(big.clone()).unwrap_or_else(|e| panic!("frame {i}: {e:#}"));
+        }
+        assert!(sender.fault().is_none(), "{:?}", sender.fault());
+        drop(sender);
+        drain.join().expect("drain thread");
+    }
+
+    #[test]
+    fn heartbeat_sender_detects_a_dead_peer_within_the_bound() {
+        // The peer holds the connection open but never answers pings
+        // (wedged process): the liveness monitor must latch a heartbeat
+        // fault within ~2x the interval, even though nothing is being
+        // sent or received on the data path.
+        let (w, r) = loopback_pair().expect("loopback pair");
+        let interval = Duration::from_millis(300);
+        let sender = FramedSender::with_heartbeat(
+            w,
+            Duration::from_secs(5),
+            FrameCodec::new(WireCodecConfig::off(), CodecStats::new()),
+            interval,
+        )
+        .expect("sender");
+        let start = Instant::now();
+        let fault = loop {
+            if let Some(f) = sender.fault() {
+                break f;
+            }
+            assert!(
+                start.elapsed() < 4 * interval,
+                "heartbeat fault not latched within the detection bound"
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        };
+        let elapsed = start.elapsed();
+        assert!(fault.contains("heartbeat"), "{fault}");
+        // grace window is 2x the interval; allow a scheduling tick of slack
+        assert!(
+            elapsed <= 2 * interval + Duration::from_millis(450),
+            "detected after {elapsed:?}, bound is ~2x {interval:?}"
+        );
+        assert!(elapsed >= interval, "must not fault instantly: {elapsed:?}");
+        // the latched fault also fails sends fast
+        let err = sender.send(WireMsg::Indices(vec![1])).unwrap_err();
+        assert!(format!("{err:#}").contains("heartbeat"), "{err:#}");
+        drop(sender);
+        drop(r);
+    }
+
+    #[test]
+    fn heartbeat_receiver_detects_a_silent_peer_within_the_bound() {
+        // The peer never sends anything — not even pings. The threaded
+        // receiver must declare it dead within ~2x the interval instead
+        // of waiting out the full read timeout.
+        let (w, r) = loopback_pair().expect("loopback pair");
+        let interval = Duration::from_millis(300);
+        let mut rx = FramedReceiver::with_heartbeat(
+            r,
+            Duration::from_secs(30), // read timeout far above the bound
+            FrameCodec::new(WireCodecConfig::off(), CodecStats::new()),
+            interval,
+        )
+        .expect("receiver");
+        let start = Instant::now();
+        let err = rx.recv().expect_err("silent peer must fault");
+        let elapsed = start.elapsed();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("heartbeat"), "{msg}");
+        assert!(
+            elapsed <= 2 * interval + Duration::from_millis(450),
+            "detected after {elapsed:?}, bound is ~2x {interval:?}"
+        );
+        drop(w);
+    }
+
+    #[test]
+    fn heartbeat_link_stays_healthy_and_filters_pings() {
+        // Full ping/pong plumbing: sender pings, receiver answers on the
+        // reverse direction, data frames pass through untouched, and
+        // neither side faults across several idle intervals.
+        let (w, r) = loopback_pair().expect("loopback pair");
+        let interval = Duration::from_millis(100);
+        let sender = FramedSender::with_heartbeat(
+            w,
+            Duration::from_secs(5),
+            FrameCodec::new(WireCodecConfig::off(), CodecStats::new()),
+            interval,
+        )
+        .expect("sender");
+        let mut rx = FramedReceiver::with_heartbeat(
+            r,
+            Duration::from_secs(5),
+            FrameCodec::new(WireCodecConfig::off(), CodecStats::new()),
+            interval,
+        )
+        .expect("receiver");
+        for i in 0..4u32 {
+            sender.send(WireMsg::Indices(vec![i])).expect("send");
+            match rx.recv().expect("recv") {
+                WireMsg::Indices(v) => assert_eq!(v, vec![i]),
+                other => panic!("ping leaked into the data stream: {other:?}"),
+            }
+            // idle gap well past the interval: pings must keep both
+            // liveness monitors satisfied
+            std::thread::sleep(Duration::from_millis(250));
+        }
+        assert!(sender.fault().is_none(), "{:?}", sender.fault());
+    }
+
+    #[test]
+    fn mesh_with_heartbeat_forms_and_runs_collectives() {
+        let n = 3;
+        let listeners: Vec<TcpListener> = (0..n)
+            .map(|_| TcpListener::bind(("127.0.0.1", 0)).unwrap())
+            .collect();
+        let peers: Vec<String> = listeners
+            .iter()
+            .map(|l| l.local_addr().unwrap().to_string())
+            .collect();
+        let peers_ref = &peers;
+        let hb = Some(Duration::from_millis(100));
+        std::thread::scope(|s| {
+            let handles: Vec<_> = listeners
+                .iter()
+                .enumerate()
+                .map(|(rank, listener)| {
+                    s.spawn(move || {
+                        let (mut ring, mut star) = form_mesh_with(
+                            rank,
+                            peers_ref,
+                            listener,
+                            T,
+                            WireCodecConfig::off(),
+                            &CodecStats::new(),
+                            hb,
+                        )
+                        .expect("heartbeat mesh");
+                        let mut buf = vec![(rank + 1) as f32; 16];
+                        ring.allreduce_avg(&mut buf).expect("allreduce 1");
+                        // idle past several heartbeat intervals: the
+                        // liveness plumbing must not false-positive
+                        std::thread::sleep(Duration::from_millis(350));
+                        ring.allreduce_avg(&mut buf).expect("allreduce 2");
+                        let sg = SparseGrad::new(4, vec![rank as u32], vec![1.0]);
+                        let gathered = star.gather(sg).expect("gather");
+                        if rank == 0 {
+                            assert_eq!(gathered.expect("root").len(), n);
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().expect("rank");
+            }
+        });
+    }
+
+    #[test]
+    fn resume_min_reduce_agrees_on_the_fleet_minimum() {
+        // Three nodes claim different resume points; after the ring
+        // min-reduce every node must hold the fleet minimum (node 1's 3),
+        // and a second exchange with equal inputs stays stable.
+        let stats = CodecStats::new();
+        let rings = local_ring(3, T, WireCodecConfig::off(), &stats).unwrap();
+        let own = [7u64, 3, 5];
+        let got: Vec<u64> = std::thread::scope(|s| {
+            let handles: Vec<_> = rings
+                .into_iter()
+                .enumerate()
+                .map(|(i, mut ring)| {
+                    s.spawn(move || {
+                        let m = ring.resume_min_reduce(own[i]).expect("min reduce");
+                        let again = ring.resume_min_reduce(m).expect("stable");
+                        assert_eq!(again, m);
+                        m
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("rank")).collect()
+        });
+        assert_eq!(got, vec![3, 3, 3]);
+        // single node: the reduce is its own value, no links needed
+        let mut solo = SocketRingNode::new(0, 1, None, None);
+        assert_eq!(solo.resume_min_reduce(9).unwrap(), 9);
     }
 }

@@ -16,6 +16,9 @@
 //! | 5   | packed `Sparse` | u32 bucket, varint dim, varint nnz, delta+varint idx, nnz × f32 |
 //! | 6   | packed `Indices`| varint count, delta+varint idx                                  |
 //! | 7   | compressed body | u8 algo, varint raw_len, compressed inner body (tags 1-6)       |
+//! | 8   | `Ping`          | u32 seq                                                         |
+//! | 9   | `Pong`          | u32 seq                                                         |
+//! | 10  | `Resume`        | u32 rank, u64 step                                              |
 //!
 //! Tags 5-7 are the **entropy stage** (`comm::codec`, wire codec v2):
 //! sparse index sets are strictly increasing by construction, so they
@@ -26,6 +29,13 @@
 //! ([`WIRE_CODEC_VERSION`]) so a rendezvous can reject a peer too old to
 //! decode packed frames with a clear error instead of a mid-run decode
 //! fault; a 5-byte legacy `Hello` (no version field) decodes as v1.
+//!
+//! Tags 8-10 are the **liveness/recovery control plane** (wire codec
+//! v3): `Ping`/`Pong` carry the heartbeat that bounds dead-peer
+//! detection, and `Resume` circulates each survivor's newest snapshot
+//! step around a re-formed ring so every node rolls back to the global
+//! minimum before replaying. Control frames are tiny and latency-bound,
+//! so — like `Hello` — they are never packed or byte-compressed.
 //!
 //! `DenseChunk` carries the ring reduce-scatter/all-gather payloads,
 //! `Sparse` the star-gather contributions, and the control tags the
@@ -76,8 +86,11 @@ use std::io::{Read, Write};
 pub const MAX_FRAME_BYTES: usize = 64 << 20;
 
 /// Wire codec version spoken by this build, carried in `Hello`. v1 is
-/// the raw tag set (1-4); v2 adds the packed/compressed tags (5-7).
-pub const WIRE_CODEC_VERSION: u8 = 2;
+/// the raw tag set (1-4); v2 adds the packed/compressed tags (5-7); v3
+/// adds the liveness/recovery control tags (8-10). The v3 bump does not
+/// change the byte layout of any v1/v2 tag, so `off`-mode frames remain
+/// byte-identical to v2 builds.
+pub const WIRE_CODEC_VERSION: u8 = 3;
 
 /// What an inbound connection is for (field of [`WireMsg::Hello`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -122,6 +135,16 @@ pub enum WireMsg {
     Hello { rank: u32, purpose: Purpose, codec: u8 },
     /// The CLT-k leader's index broadcast.
     Indices(Vec<u32>),
+    /// Heartbeat probe (v3). The sender's liveness monitor expects the
+    /// matching [`WireMsg::Pong`] within its detection window.
+    Ping { seq: u32 },
+    /// Heartbeat reply (v3), echoing the probe's sequence number.
+    Pong { seq: u32 },
+    /// Recovery handshake (v3): after a re-rendezvous each node
+    /// announces the newest step it can resume from (its latest
+    /// error-feedback snapshot); the ring min-reduces these so everyone
+    /// replays from the same global step.
+    Resume { rank: u32, step: u64 },
 }
 
 const TAG_DENSE: u8 = 1;
@@ -131,6 +154,9 @@ const TAG_INDICES: u8 = 4;
 const TAG_SPARSE_PACKED: u8 = 5;
 const TAG_INDICES_PACKED: u8 = 6;
 pub(crate) const TAG_COMPRESSED: u8 = 7;
+const TAG_PING: u8 = 8;
+const TAG_PONG: u8 = 9;
+const TAG_RESUME: u8 = 10;
 
 fn put_u32(out: &mut Vec<u8>, v: u32) {
     out.extend_from_slice(&v.to_le_bytes());
@@ -175,6 +201,8 @@ pub fn frame_len(msg: &WireMsg) -> usize {
             WireMsg::Sparse { grad, .. } => 12 + 8 * grad.indices.len(),
             WireMsg::Hello { .. } => 6,
             WireMsg::Indices(idx) => 4 + 4 * idx.len(),
+            WireMsg::Ping { .. } | WireMsg::Pong { .. } => 4,
+            WireMsg::Resume { .. } => 12,
         }
 }
 
@@ -228,6 +256,22 @@ pub(crate) fn encode_body_into(msg: &WireMsg, packing: bool, out: &mut Vec<u8>) 
             put_u32s(out, idx);
             false
         }
+        WireMsg::Ping { seq } => {
+            out.push(TAG_PING);
+            put_u32(out, *seq);
+            false
+        }
+        WireMsg::Pong { seq } => {
+            out.push(TAG_PONG);
+            put_u32(out, *seq);
+            false
+        }
+        WireMsg::Resume { rank, step } => {
+            out.push(TAG_RESUME);
+            put_u32(out, *rank);
+            out.extend_from_slice(&step.to_le_bytes());
+            false
+        }
     }
 }
 
@@ -275,6 +319,11 @@ impl<'a> Cursor<'a> {
     fn u32(&mut self) -> anyhow::Result<u32> {
         let b = self.take(4)?;
         Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> anyhow::Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
     }
 
     fn varint(&mut self) -> anyhow::Result<u32> {
@@ -431,6 +480,22 @@ pub(crate) fn decode_body_uncompressed(body: &[u8]) -> anyhow::Result<WireMsg> {
             c.done()?;
             WireMsg::Indices(idx)
         }
+        TAG_PING => {
+            let seq = c.u32()?;
+            c.done()?;
+            WireMsg::Ping { seq }
+        }
+        TAG_PONG => {
+            let seq = c.u32()?;
+            c.done()?;
+            WireMsg::Pong { seq }
+        }
+        TAG_RESUME => {
+            let rank = c.u32()?;
+            let step = c.u64()?;
+            c.done()?;
+            WireMsg::Resume { rank, step }
+        }
         TAG_COMPRESSED => anyhow::bail!("wire: nested compressed frame"),
         other => anyhow::bail!("wire: unknown message tag {other}"),
     };
@@ -511,6 +576,17 @@ impl FrameDecoder {
     }
 
     pub fn push(&mut self, bytes: &[u8]) -> anyhow::Result<Vec<WireMsg>> {
+        self.push_frames(bytes)?
+            .iter()
+            .map(|body| decode_body(body))
+            .collect()
+    }
+
+    /// Like [`FrameDecoder::push`], but yields whole frame **bodies**
+    /// without decoding them — callers that own a pooled
+    /// `codec::FrameCodec` (the heartbeat reader thread) decode through
+    /// it so stats and staging buffers behave like the blocking path.
+    pub fn push_frames(&mut self, bytes: &[u8]) -> anyhow::Result<Vec<Vec<u8>>> {
         self.buf.extend_from_slice(bytes);
         let mut out = Vec::new();
         loop {
@@ -526,9 +602,8 @@ impl FrameDecoder {
             if self.buf.len() < 4 + len {
                 break;
             }
-            let msg = decode_body(&self.buf[4..4 + len])?;
+            out.push(self.buf[4..4 + len].to_vec());
             self.buf.drain(..4 + len);
-            out.push(msg);
         }
         Ok(out)
     }
@@ -576,6 +651,26 @@ mod tests {
         roundtrip(hello(0, Purpose::Star));
         roundtrip(WireMsg::Indices(vec![5, 1, 5, 0])); // codec-level: duplicates frame fine
         roundtrip(WireMsg::Indices(vec![]));
+        roundtrip(WireMsg::Ping { seq: 0 });
+        roundtrip(WireMsg::Ping { seq: u32::MAX });
+        roundtrip(WireMsg::Pong { seq: 12345 });
+        roundtrip(WireMsg::Resume { rank: 0, step: 0 });
+        roundtrip(WireMsg::Resume { rank: 63, step: u64::MAX });
+    }
+
+    #[test]
+    fn control_frames_reject_trailing_or_truncated_bodies() {
+        // truncated Ping (2 of 4 seq bytes)
+        assert!(decode_body(&[TAG_PING, 1, 2]).is_err());
+        // trailing byte after a complete Pong
+        let mut body = vec![TAG_PONG];
+        body.extend_from_slice(&7u32.to_le_bytes());
+        body.push(0);
+        assert!(decode_body(&body).is_err());
+        // Resume missing its step field
+        let mut body = vec![TAG_RESUME];
+        body.extend_from_slice(&1u32.to_le_bytes());
+        assert!(decode_body(&body).is_err());
     }
 
     #[test]
@@ -956,5 +1051,16 @@ mod tests {
         let mut frame = Vec::new();
         codec.encode_frame_into(&hello(2, Purpose::Ring), &mut frame).unwrap();
         assert_eq!(frame[4], TAG_HELLO, "the rendezvous must stay v1-parsable");
+        // liveness/recovery control frames share the contract: tiny and
+        // latency-bound, they must never wear the envelope either
+        for msg in [
+            WireMsg::Ping { seq: 9 },
+            WireMsg::Pong { seq: 9 },
+            WireMsg::Resume { rank: 1, step: 7 },
+        ] {
+            codec.encode_frame_into(&msg, &mut frame).unwrap();
+            assert!((TAG_PING..=TAG_RESUME).contains(&frame[4]), "raw control tag, got {}", frame[4]);
+            assert_eq!(decode_body(&frame[4..]).unwrap(), msg);
+        }
     }
 }

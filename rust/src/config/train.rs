@@ -102,6 +102,17 @@ pub struct TrainConfig {
     pub wire_compression_dense: String,
     /// Like `wire_compression_dense` for sparse/index frames.
     pub wire_compression_sparse: String,
+    /// Heartbeat interval (ms) of the socket mesh's liveness machinery:
+    /// a dead or wedged peer is detected within 2× this interval. 0 =
+    /// no heartbeats (faults surface only at blocking reads). Must match
+    /// across nodes (the handshake rejects a heartbeat-less peer on a
+    /// heartbeat mesh). Inert on the in-process backends.
+    pub heartbeat_ms: u64,
+    /// Reconnect-with-resume after a link fault on the multi-process
+    /// socket runtime (`scalecom node`): re-rendezvous on the same
+    /// listener, agree on a resume point, roll the EF memory back, and
+    /// replay — instead of failing the run. Inert on other backends.
+    pub reconnect: bool,
     /// Evaluate every `eval_every` steps (0 = never).
     pub eval_every: usize,
     /// Directory for artifacts (HLO + manifest).
@@ -129,6 +140,8 @@ impl Default for TrainConfig {
             wire_compression: "off".into(),
             wire_compression_dense: "auto".into(),
             wire_compression_sparse: "auto".into(),
+            heartbeat_ms: 0,
+            reconnect: false,
             eval_every: 0,
             artifacts_dir: "artifacts".into(),
         }
@@ -184,6 +197,8 @@ impl TrainConfig {
             wire_compression_sparse: doc
                 .str_or("train.wire_compression_sparse", &d.wire_compression_sparse)
                 .to_string(),
+            heartbeat_ms: doc.usize_or("train.heartbeat_ms", d.heartbeat_ms as usize) as u64,
+            reconnect: doc.bool_or("train.reconnect", d.reconnect),
             eval_every: doc.usize_or("train.eval_every", 0),
             artifacts_dir: doc.str_or("train.artifacts_dir", &d.artifacts_dir).to_string(),
         };
@@ -209,7 +224,19 @@ impl TrainConfig {
         );
         crate::comm::Backend::parse(&self.backend)?;
         self.wire_codec()?;
+        anyhow::ensure!(
+            self.heartbeat_ms <= 60_000,
+            "heartbeat_ms {} is past the 60 s cap — liveness detection at that \
+             scale is slower than the blocking-read timeout it is meant to beat",
+            self.heartbeat_ms
+        );
         Ok(())
+    }
+
+    /// The heartbeat interval as the socket mesh consumes it (0 = None =
+    /// no liveness machinery).
+    pub fn heartbeat(&self) -> Option<std::time::Duration> {
+        (self.heartbeat_ms > 0).then(|| std::time::Duration::from_millis(self.heartbeat_ms))
     }
 
     /// Parse the wire-compression strings into the typed codec config
@@ -326,6 +353,23 @@ mod tests {
         let mut c = TrainConfig::default();
         c.wire_compression_sparse = "lz9".into();
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn fault_tolerance_knobs_from_toml_and_validation() {
+        let d = TrainConfig::default();
+        assert_eq!(d.heartbeat_ms, 0);
+        assert!(!d.reconnect);
+        assert_eq!(d.heartbeat(), None);
+        let doc = TomlDoc::parse("[train]\nheartbeat_ms = 250\nreconnect = true\n").unwrap();
+        let cfg = TrainConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.heartbeat_ms, 250);
+        assert!(cfg.reconnect);
+        assert_eq!(cfg.heartbeat(), Some(std::time::Duration::from_millis(250)));
+        let mut c = TrainConfig::default();
+        c.heartbeat_ms = 120_000;
+        let err = c.validate().unwrap_err();
+        assert!(err.to_string().contains("heartbeat_ms"), "{err}");
     }
 
     #[test]

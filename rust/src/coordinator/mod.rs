@@ -73,6 +73,17 @@ enum Workers {
     Pool(WorkerPool),
 }
 
+/// Coordinator liveness as seen by fault-tolerant drivers (the socket
+/// node runtime and the simnet elastic mode). `Degraded` means a link
+/// fault was detected — a peer died, a link stalled, or a collective
+/// mis-framed — and collectives are suspended until the membership
+/// re-forms and state is rolled back to a common snapshot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Health {
+    Healthy,
+    Degraded,
+}
+
 /// A step submitted to the pool whose collective has not been waited yet.
 struct Pending {
     leader: usize,
@@ -112,6 +123,11 @@ pub struct Coordinator {
     /// consuming from them again would hand a later step stale data.
     /// Every subsequent step fails fast instead.
     poisoned: bool,
+    /// Fleet liveness: flips to [`Health::Degraded`] on a detected link
+    /// fault (alongside `poisoned` for pooled faults, or explicitly via
+    /// [`Coordinator::mark_degraded`]); cleared by a successful
+    /// [`Coordinator::restore_memories`] rollback or a backend rebuild.
+    health: Health,
 }
 
 impl Coordinator {
@@ -142,6 +158,7 @@ impl Coordinator {
             pending: VecDeque::new(),
             ready: VecDeque::new(),
             poisoned: false,
+            health: Health::Healthy,
         }
     }
 
@@ -278,6 +295,7 @@ impl Coordinator {
         // left lane-free local workers) — any earlier fault poisoning no
         // longer describes live state.
         self.poisoned = false;
+        self.health = Health::Healthy;
         Ok(())
     }
 
@@ -350,6 +368,59 @@ impl Coordinator {
                 }
             }
             Workers::Pool(p) => p.set_beta(beta),
+        }
+    }
+
+    /// Current fleet liveness (see [`Health`]).
+    pub fn health(&self) -> Health {
+        self.health
+    }
+
+    /// Record an externally-detected link fault (heartbeat timeout, a
+    /// peer's EOF, a failed rendezvous): collectives should not be driven
+    /// again until state is rolled back via
+    /// [`Coordinator::restore_memories`] or the backend is rebuilt.
+    pub fn mark_degraded(&mut self) {
+        self.health = Health::Degraded;
+    }
+
+    /// Roll every worker's error-feedback memory back to a snapshot taken
+    /// with [`Coordinator::memory_snapshot`] — the recovery half of the
+    /// reconnect-with-resume contract: after membership re-forms, all
+    /// ranks restore the snapshot of the last globally-completed step and
+    /// replay forward, reproducing the fault-free selections bit-exactly.
+    ///
+    /// Only the lane-free backends (sequential/threaded) support in-place
+    /// restore; the pooled backends' memories live on worker lanes whose
+    /// in-flight state cannot be rewritten — rebuild the coordinator (or
+    /// switch backends, which re-seeds the pool from a snapshot) instead.
+    /// A successful restore clears the [`Health::Degraded`] flag.
+    pub fn restore_memories(&mut self, memories: Vec<EfMemory>) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            memories.len() == self.n,
+            "restore_memories: snapshot holds {} workers, coordinator has {}",
+            memories.len(),
+            self.n
+        );
+        for (w, m) in memories.iter().enumerate() {
+            anyhow::ensure!(
+                m.dim() == self.dim,
+                "restore_memories: worker {w} snapshot dim {} != coordinator dim {}",
+                m.dim(),
+                self.dim
+            );
+        }
+        match &mut self.workers {
+            Workers::Local(ms) => {
+                *ms = memories;
+                self.health = Health::Healthy;
+                Ok(())
+            }
+            Workers::Pool(_) => anyhow::bail!(
+                "restore_memories: pooled backends keep memories on worker \
+                 lanes and cannot restore in place — rebuild the coordinator \
+                 from the snapshot (or try_set_backend to re-seed the pool)"
+            ),
         }
     }
 
@@ -538,6 +609,7 @@ impl Coordinator {
         let r = self.run_bucketed(t, grads, plan);
         if r.is_err() {
             self.poisoned = true;
+            self.health = Health::Degraded;
         } else {
             self.refresh_codec_stats();
         }
@@ -786,6 +858,7 @@ impl Coordinator {
         if r.is_err() {
             self.pending.clear();
             self.poisoned = true;
+            self.health = Health::Degraded;
         } else {
             self.refresh_codec_stats();
         }
@@ -1787,5 +1860,67 @@ mod tests {
         c.set_backend(Backend::Sequential);
         assert_eq!(c.backend(), Backend::Sequential);
         assert_eq!(c.memories().len(), n);
+    }
+
+    #[test]
+    fn restore_memories_rolls_back_and_replay_matches() {
+        // The reconnect-with-resume contract at coordinator scope: run 4
+        // steps, snapshot after step 1, roll back, replay steps 2-3 — the
+        // replayed selections and updates must be bit-identical.
+        let n = 3;
+        let dim = 32;
+        let mk = || {
+            Coordinator::new(
+                n,
+                dim,
+                Mode::Compressed(Box::new(CltK::exact())),
+                0.5,
+                4,
+                fabric(n),
+                0,
+            )
+        };
+        let grads: Vec<Vec<Vec<f32>>> = {
+            let mut rng = Rng::new(11);
+            (0..4).map(|_| rand_grads(&mut rng, n, dim)).collect()
+        };
+        let mut c = mk();
+        assert_eq!(c.health(), Health::Healthy);
+        let mut first: Vec<(Option<Selection>, Vec<f32>)> = Vec::new();
+        let mut snap = None;
+        for t in 0..4 {
+            let r = c.step(t, &grads[t]);
+            first.push((r.selection, r.update));
+            if t == 1 {
+                snap = Some(c.memory_snapshot());
+            }
+        }
+        c.mark_degraded();
+        assert_eq!(c.health(), Health::Degraded);
+        c.restore_memories(snap.unwrap()).unwrap();
+        assert_eq!(c.health(), Health::Healthy);
+        for t in 2..4 {
+            let r = c.step(t, &grads[t]);
+            assert_eq!(r.selection, first[t].0, "replayed selection t={t}");
+            assert_eq!(r.update, first[t].1, "replayed update t={t}");
+        }
+    }
+
+    #[test]
+    fn restore_memories_rejects_wrong_shapes_and_pooled_backends() {
+        let mut c = Coordinator::new(2, 8, Mode::Dense, 1.0, 8, fabric(2), 0);
+        let err = c.restore_memories(vec![EfMemory::new(8, 1.0)]).unwrap_err();
+        assert!(err.to_string().contains("workers"), "{err}");
+        let err = c
+            .restore_memories(vec![EfMemory::new(4, 1.0), EfMemory::new(4, 1.0)])
+            .unwrap_err();
+        assert!(err.to_string().contains("dim"), "{err}");
+        c.set_backend(Backend::Pipelined);
+        let snap = c.memory_snapshot();
+        let err = c.restore_memories(snap).unwrap_err();
+        assert!(err.to_string().contains("pooled"), "{err}");
+        // rebuilding via a backend switch stays the supported path
+        c.set_backend(Backend::Sequential);
+        assert_eq!(c.health(), Health::Healthy);
     }
 }

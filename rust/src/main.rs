@@ -12,9 +12,11 @@ use scalecom::metrics::Table;
 use scalecom::models::paper::{paper_net, ALL_PAPER_NETS};
 use scalecom::models::zoo::ALL_ZOO_MODELS;
 use scalecom::perfmodel::{step_time, Scheme, SystemConfig};
-use scalecom::runtime::socket::{run_node, NodeSpec, NodeWorkload};
+use scalecom::runtime::socket::{
+    run_node, NodeSpec, NodeWorkload, DEFAULT_RECONNECT_ATTEMPTS,
+};
 use scalecom::runtime::{default_artifacts_dir, Engine, Manifest};
-use scalecom::simnet::{self, SimConfig, TopologyProfile, TuneConfig, SIM_SCHEMES};
+use scalecom::simnet::{self, ElasticSpec, SimConfig, TopologyProfile, TuneConfig, SIM_SCHEMES};
 use scalecom::trainer::{LrSchedule, Trainer};
 use std::time::Duration;
 
@@ -207,6 +209,24 @@ fn cmd_simulate(args: &mut Args) -> Result<()> {
         overlapped: args.flag("overlapped"),
     };
     let show_trace = args.flag("trace");
+    // Elastic membership: inject one fail-stop fault and charge the
+    // recovery wave (detect, restart, re-rendezvous, resume, replay) in
+    // virtual time. Selections stay bit-identical to the fault-free run.
+    let kill_step = args.str_opt("elastic-kill-step");
+    let kill_worker = args.usize_or("elastic-kill-worker", 1)?;
+    let elastic_hb_ms = args.f64_or("elastic-heartbeat-ms", 100.0)?;
+    let elastic_restart_ms = args.f64_or("elastic-restart-ms", 1000.0)?;
+    let elastic = match kill_step {
+        Some(s) => Some(ElasticSpec {
+            kill_step: s.parse::<usize>().map_err(|_| {
+                anyhow::anyhow!("--elastic-kill-step expects an integer, got '{s}'")
+            })?,
+            kill_worker,
+            heartbeat_s: elastic_hb_ms * 1e-3,
+            restart_s: elastic_restart_ms * 1e-3,
+        }),
+        None => None,
+    };
     args.finish()?;
     let schemes: Vec<String> = if scheme == "all" {
         SIM_SCHEMES.iter().map(|s| s.to_string()).collect()
@@ -237,6 +257,16 @@ fn cmd_simulate(args: &mut Args) -> Result<()> {
         base.bucket_bytes,
         if base.overlapped { " overlapped" } else { "" }
     );
+    if let Some(el) = &elastic {
+        println!(
+            "elastic | kill worker {} at step {} | heartbeat {:.0} ms restart {:.0} ms \
+             (detect+rejoin+replay charged in virtual time; selections unchanged)",
+            el.kill_worker,
+            el.kill_step,
+            el.heartbeat_s * 1e3,
+            el.restart_s * 1e3
+        );
+    }
     let mut table = Table::new(&[
         "scheme",
         "n",
@@ -252,7 +282,31 @@ fn cmd_simulate(args: &mut Args) -> Result<()> {
             let mut cfg = base.clone();
             cfg.scheme = scheme.clone();
             cfg.workers = n;
-            let r = simnet::simulate(&cfg, &profile)?;
+            let r = match &elastic {
+                Some(el) => simnet::simulate_elastic(&cfg, &profile, el)?,
+                None => simnet::simulate(&cfg, &profile)?,
+            };
+            if elastic.is_some() {
+                let recovery: f64 = r
+                    .trace
+                    .iter()
+                    .filter(|e| {
+                        matches!(
+                            e.op,
+                            "compute_aborted"
+                                | "fault_detect"
+                                | "worker_restart"
+                                | "rendezvous"
+                                | "resume_reduce"
+                        )
+                    })
+                    .map(|e| e.end_s - e.start_s)
+                    .sum();
+                println!(
+                    "elastic {scheme} n={n}: recovery charged {:.3} ms virtual",
+                    recovery * 1e3
+                );
+            }
             let steps = r.steps as f64;
             let busy = r.compute_s + r.comm_s;
             table.row(vec![
@@ -401,11 +455,28 @@ fn cmd_node(args: &mut Args) -> Result<()> {
     };
     let wire_dense = args.str_or("wire-compression-dense", "auto");
     let wire_sparse = args.str_or("wire-compression-sparse", "auto");
+    // Fault tolerance: liveness pings (0 = off) and reconnect-with-resume.
+    // Same precedence as the wire codec: flag > SCALECOM_HEARTBEAT_MS env
+    // > default off.
+    let heartbeat_ms = match args.str_opt("heartbeat-ms") {
+        Some(s) => s
+            .parse::<u64>()
+            .map_err(|_| anyhow::anyhow!("--heartbeat-ms expects an integer, got '{s}'"))?,
+        None => scalecom::runtime::socket::env_heartbeat_ms()?.unwrap_or(0),
+    };
+    let heartbeat = (heartbeat_ms > 0).then(|| Duration::from_millis(heartbeat_ms));
+    let reconnect = args.flag("reconnect");
+    let snapshot_dir = args.str_opt("snapshot-dir").map(std::path::PathBuf::from);
+    let max_reconnect_attempts =
+        args.usize_or("max-reconnect-attempts", DEFAULT_RECONNECT_ATTEMPTS)?;
     args.finish()?;
     let wire_codec =
         scalecom::comm::WireCodecConfig::from_strings(&wire_mode, &wire_dense, &wire_sparse)?;
-    let spec = NodeSpec::from_flags(role.as_deref(), bind.as_deref(), peers.as_deref(), timeout)?
-        .with_wire_codec(wire_codec);
+    let mut spec =
+        NodeSpec::from_flags(role.as_deref(), bind.as_deref(), peers.as_deref(), timeout)?
+            .with_wire_codec(wire_codec)
+            .with_fault_tolerance(heartbeat, reconnect, snapshot_dir);
+    spec.max_reconnect_attempts = max_reconnect_attempts;
     let stdout = std::io::stdout();
     run_node(&spec, &wl, &mut stdout.lock())
 }

@@ -18,6 +18,7 @@ pub mod bucketed;
 pub mod engine;
 pub mod manifest;
 pub mod pipelined;
+pub mod snapshot;
 pub mod socket;
 pub mod threaded;
 

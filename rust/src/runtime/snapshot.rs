@@ -1,0 +1,345 @@
+//! Error-feedback memory snapshots — the state half of the
+//! reconnect-with-resume contract.
+//!
+//! ScaleCom's error-feedback memory is the only cross-step state a
+//! worker carries (the compressors themselves are stateless per step,
+//! and the synthetic gradient stream is a replayable seeded RNG), so a
+//! snapshot of `(step, EfMemory)` is a complete resume point: a worker
+//! restarted after a fault restores the memory of the last
+//! globally-completed step, fast-forwards its gradient RNG by replaying
+//! the draws, and continues — producing selections and digests
+//! bit-identical to a fault-free run.
+//!
+//! Two snapshot stores back the socket node driver (`runtime::socket`):
+//!
+//! - [`SnapshotRing`] — a small in-memory ring of recent steps kept by
+//!   every *surviving* node. Live ranks are at most one collective apart,
+//!   so a short ring always covers the resume step the post-rendezvous
+//!   min-reduce agrees on.
+//! - [`save_ring`]/[`load_at`] — an on-disk mirror of that ring (atomic
+//!   tmp+rename persist per file) for the *restarted* node, which lost
+//!   its in-memory state with its process (`scalecom node
+//!   --snapshot-dir`). A ring rather than just the latest snapshot
+//!   because the fleet's agreed resume point can trail the restarted
+//!   rank's newest persisted step (see [`save_ring`]).
+//!
+//! ## Wire/disk format (version 1, little-endian)
+//!
+//! ```text
+//! magic  b"SCEF"
+//! u32    format version (1)
+//! u64    step (the snapshot is the state AFTER this step completed)
+//! f32    beta (EF low-pass discount)
+//! u64    dim
+//! f32×dim  memory values
+//! ```
+
+use crate::compress::EfMemory;
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+const MAGIC: &[u8; 4] = b"SCEF";
+const FORMAT_VERSION: u32 = 1;
+
+/// Default depth of the survivors' in-memory ring. Live ranks stay
+/// within one step of each other (collectives are barriers), so even a
+/// shallow ring always holds the agreed resume step; 8 leaves slack for
+/// future lookahead drivers.
+pub const DEFAULT_RING_DEPTH: usize = 8;
+
+/// File name of the persisted latest snapshot inside `--snapshot-dir`.
+pub fn snapshot_path(dir: &Path, rank: usize) -> PathBuf {
+    dir.join(format!("ef_rank{rank}.snap"))
+}
+
+/// File name of one retained per-step snapshot inside `--snapshot-dir`
+/// (the on-disk mirror of the survivors' in-memory ring).
+pub fn snapshot_step_path(dir: &Path, rank: usize, step: u64) -> PathBuf {
+    dir.join(format!("ef_rank{rank}_step{step}.snap"))
+}
+
+/// Persist the state after `step` both as the rank's latest-pointer file
+/// and as a per-step file, pruning the per-step file that falls out of
+/// the `DEFAULT_RING_DEPTH` window.
+///
+/// Why a ring and not just the latest: the fleet's agreed resume point
+/// can be one step *behind* a restarted rank's newest snapshot — a
+/// killed node's final ring send may never have flushed, leaving a
+/// survivor one step short of the dead node's own progress — and an EF
+/// memory cannot be rolled backward without the older state.
+pub fn save_ring(dir: &Path, rank: usize, step: u64, mem: &EfMemory) -> anyhow::Result<()> {
+    save(&snapshot_path(dir, rank), step, mem)?;
+    save(&snapshot_step_path(dir, rank, step), step, mem)?;
+    if let Some(old) = step.checked_sub(DEFAULT_RING_DEPTH as u64) {
+        let _ = std::fs::remove_file(snapshot_step_path(dir, rank, old));
+    }
+    Ok(())
+}
+
+/// Load the snapshot for exactly `step`: the per-step file first, then
+/// the latest-pointer file when it happens to hold that step. `Ok(None)`
+/// when neither does.
+pub fn load_at(dir: &Path, rank: usize, step: u64) -> anyhow::Result<Option<EfMemory>> {
+    if let Some((s, m)) = load(&snapshot_step_path(dir, rank, step))? {
+        anyhow::ensure!(
+            s == step,
+            "snapshot: {} holds step {s}, not the step its name declares",
+            snapshot_step_path(dir, rank, step).display()
+        );
+        return Ok(Some(m));
+    }
+    match load(&snapshot_path(dir, rank))? {
+        Some((s, m)) if s == step => Ok(Some(m)),
+        _ => Ok(None),
+    }
+}
+
+/// Serialize one worker's EF state after `step` into the format above.
+pub fn encode(step: u64, mem: &EfMemory) -> Vec<u8> {
+    let m = mem.memory();
+    let mut out = Vec::with_capacity(4 + 4 + 8 + 4 + 8 + m.len() * 4);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    out.extend_from_slice(&step.to_le_bytes());
+    out.extend_from_slice(&mem.beta().to_le_bytes());
+    out.extend_from_slice(&(m.len() as u64).to_le_bytes());
+    for v in m {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Inverse of [`encode`]; rejects bad magic, unknown versions, and
+/// truncated or oversized bodies.
+pub fn decode(bytes: &[u8]) -> anyhow::Result<(u64, EfMemory)> {
+    anyhow::ensure!(bytes.len() >= 28, "snapshot truncated: {} bytes", bytes.len());
+    anyhow::ensure!(&bytes[0..4] == MAGIC, "snapshot: bad magic (not an EF snapshot)");
+    let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    anyhow::ensure!(
+        version == FORMAT_VERSION,
+        "snapshot: format version {version} (this build reads {FORMAT_VERSION})"
+    );
+    let step = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+    let beta = f32::from_le_bytes(bytes[16..20].try_into().unwrap());
+    anyhow::ensure!(
+        beta > 0.0 && beta <= 1.0,
+        "snapshot: corrupt beta {beta} (must be in (0, 1])"
+    );
+    let dim = u64::from_le_bytes(bytes[20..28].try_into().unwrap()) as usize;
+    anyhow::ensure!(
+        bytes.len() == 28 + dim * 4,
+        "snapshot: body is {} bytes, header declares dim {dim} ({} expected)",
+        bytes.len(),
+        28 + dim * 4
+    );
+    anyhow::ensure!(dim >= 1, "snapshot: empty memory");
+    let mut m = Vec::with_capacity(dim);
+    for i in 0..dim {
+        let o = 28 + i * 4;
+        m.push(f32::from_le_bytes(bytes[o..o + 4].try_into().unwrap()));
+    }
+    let mut mem = EfMemory::new(dim, beta);
+    mem.set_memory(m);
+    Ok((step, mem))
+}
+
+/// Atomically persist the snapshot: write to a `.tmp` sibling, then
+/// rename over the target, so a crash mid-write never leaves a torn
+/// file where the next restart would read it.
+pub fn save(path: &Path, step: u64, mem: &EfMemory) -> anyhow::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .map_err(|e| anyhow::anyhow!("snapshot: create dir {}: {e}", dir.display()))?;
+        }
+    }
+    let tmp = path.with_extension("snap.tmp");
+    let bytes = encode(step, mem);
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .map_err(|e| anyhow::anyhow!("snapshot: create {}: {e}", tmp.display()))?;
+        f.write_all(&bytes)
+            .map_err(|e| anyhow::anyhow!("snapshot: write {}: {e}", tmp.display()))?;
+        f.sync_all()
+            .map_err(|e| anyhow::anyhow!("snapshot: sync {}: {e}", tmp.display()))?;
+    }
+    std::fs::rename(&tmp, path).map_err(|e| {
+        anyhow::anyhow!("snapshot: rename {} -> {}: {e}", tmp.display(), path.display())
+    })?;
+    Ok(())
+}
+
+/// Load a persisted snapshot; `Ok(None)` when the file does not exist
+/// (a cold start), `Err` on a corrupt or unreadable file.
+pub fn load(path: &Path) -> anyhow::Result<Option<(u64, EfMemory)>> {
+    let mut f = match std::fs::File::open(path) {
+        Ok(f) => f,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => anyhow::bail!("snapshot: open {}: {e}", path.display()),
+    };
+    let mut bytes = Vec::new();
+    f.read_to_end(&mut bytes)
+        .map_err(|e| anyhow::anyhow!("snapshot: read {}: {e}", path.display()))?;
+    let snap = decode(&bytes)
+        .map_err(|e| anyhow::anyhow!("snapshot: {} is corrupt: {e:#}", path.display()))?;
+    Ok(Some(snap))
+}
+
+/// Bounded in-memory ring of recent `(step, EfMemory)` resume points,
+/// newest last. Survivors push after every completed step and roll back
+/// to whatever step the post-rendezvous min-reduce agrees on.
+#[derive(Debug, Clone)]
+pub struct SnapshotRing {
+    depth: usize,
+    entries: VecDeque<(u64, EfMemory)>,
+}
+
+impl SnapshotRing {
+    pub fn new(depth: usize) -> Self {
+        assert!(depth >= 1, "a snapshot ring needs at least one slot");
+        SnapshotRing {
+            depth,
+            entries: VecDeque::with_capacity(depth),
+        }
+    }
+
+    /// Record the state after `step` completed; steps must be pushed in
+    /// increasing order (the driver pushes once per completed step).
+    pub fn push(&mut self, step: u64, mem: EfMemory) {
+        if let Some(&(last, _)) = self.entries.back() {
+            assert!(step > last, "snapshot ring: step {step} after {last}");
+        }
+        if self.entries.len() == self.depth {
+            self.entries.pop_front();
+        }
+        self.entries.push_back((step, mem));
+    }
+
+    /// The state after `step`, if still retained.
+    pub fn get(&self, step: u64) -> Option<&EfMemory> {
+        self.entries
+            .iter()
+            .find(|(s, _)| *s == step)
+            .map(|(_, m)| m)
+    }
+
+    /// Newest retained step.
+    pub fn latest_step(&self) -> Option<u64> {
+        self.entries.back().map(|(s, _)| *s)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Drop every snapshot newer than `step` (after a rollback the
+    /// replayed steps re-push their own snapshots).
+    pub fn truncate_after(&mut self, step: u64) {
+        while matches!(self.entries.back(), Some(&(s, _)) if s > step) {
+            self.entries.pop_back();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mem(dim: usize, fill: f32) -> EfMemory {
+        let mut m = EfMemory::new(dim, 0.5);
+        m.set_memory((0..dim).map(|i| fill + i as f32).collect());
+        m
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_is_bit_exact() {
+        let m = mem(17, 0.25);
+        let (step, back) = decode(&encode(41, &m)).unwrap();
+        assert_eq!(step, 41);
+        assert_eq!(back.memory(), m.memory());
+        assert_eq!(back.beta(), m.beta());
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(decode(b"short").is_err());
+        let mut bad_magic = encode(0, &mem(4, 0.0));
+        bad_magic[0] = b'X';
+        assert!(decode(&bad_magic).is_err());
+        let mut bad_version = encode(0, &mem(4, 0.0));
+        bad_version[4] = 99;
+        assert!(decode(&bad_version).is_err());
+        let mut truncated = encode(0, &mem(4, 0.0));
+        truncated.pop();
+        assert!(decode(&truncated).is_err());
+        let mut oversized = encode(0, &mem(4, 0.0));
+        oversized.push(0);
+        assert!(decode(&oversized).is_err());
+    }
+
+    #[test]
+    fn save_load_roundtrip_and_missing_file_is_none() {
+        let dir = std::env::temp_dir().join("scalecom_snapshot_test1");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = snapshot_path(&dir, 2);
+        assert!(load(&path).unwrap().is_none(), "cold start reads None");
+        let m = mem(9, 1.5);
+        save(&path, 7, &m).unwrap();
+        let (step, back) = load(&path).unwrap().unwrap();
+        assert_eq!(step, 7);
+        assert_eq!(back.memory(), m.memory());
+        // overwrite is atomic-by-rename: the newer step wins
+        save(&path, 8, &mem(9, 2.5)).unwrap();
+        assert_eq!(load(&path).unwrap().unwrap().0, 8);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn disk_ring_retains_a_window_and_looks_up_exact_steps() {
+        let dir = std::env::temp_dir().join("scalecom_snapshot_test2");
+        let _ = std::fs::remove_dir_all(&dir);
+        for s in 0..=(DEFAULT_RING_DEPTH as u64 + 2) {
+            save_ring(&dir, 3, s, &mem(4, s as f32)).unwrap();
+        }
+        let newest = DEFAULT_RING_DEPTH as u64 + 2;
+        // Latest pointer tracks the newest step.
+        assert_eq!(load(&snapshot_path(&dir, 3)).unwrap().unwrap().0, newest);
+        // Exact-step lookups inside the window succeed (including one
+        // step behind the newest — the resume-skew case).
+        assert_eq!(load_at(&dir, 3, newest - 1).unwrap().unwrap().memory()[0], (newest - 1) as f32);
+        assert_eq!(
+            load_at(&dir, 3, newest - (DEFAULT_RING_DEPTH as u64 - 1))
+                .unwrap()
+                .unwrap()
+                .memory()[0],
+            (newest - (DEFAULT_RING_DEPTH as u64 - 1)) as f32
+        );
+        // Steps pruned out of the window are gone; other ranks see nothing.
+        assert!(load_at(&dir, 3, 0).unwrap().is_none());
+        assert!(load_at(&dir, 0, newest).unwrap().is_none());
+        // The latest-pointer fallback covers a dir written before the
+        // per-step ring existed.
+        std::fs::remove_file(snapshot_step_path(&dir, 3, newest)).unwrap();
+        assert_eq!(load_at(&dir, 3, newest).unwrap().unwrap().memory()[0], newest as f32);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn ring_retains_depth_newest_and_truncates() {
+        let mut r = SnapshotRing::new(3);
+        assert!(r.is_empty());
+        assert_eq!(r.latest_step(), None);
+        for s in 0..5u64 {
+            r.push(s, mem(4, s as f32));
+        }
+        assert_eq!(r.latest_step(), Some(4));
+        assert!(r.get(1).is_none(), "evicted by depth");
+        assert_eq!(r.get(2).unwrap().memory()[0], 2.0);
+        r.truncate_after(2);
+        assert_eq!(r.latest_step(), Some(2));
+        assert!(r.get(3).is_none());
+        r.push(3, mem(4, 30.0));
+        assert_eq!(r.get(3).unwrap().memory()[0], 30.0);
+    }
+}

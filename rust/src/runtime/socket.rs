@@ -36,14 +36,39 @@
 //! Faults are part of the contract: every socket wait is bounded (read
 //! timeouts + EOF on peer death), so killing a worker mid-run surfaces
 //! as a clean `anyhow` error on every surviving node — never a hang.
+//!
+//! ## Fault tolerance: heartbeat + reconnect-with-resume
+//!
+//! With `--heartbeat-ms` the mesh carries wire-level liveness
+//! (`Ping`/`Pong` control frames): a dead or wedged peer is detected
+//! within 2× the interval instead of only at the next blocking read.
+//! With `--reconnect` a link fault no longer ends the run: the node
+//! drops its mesh (the EOFs cascade the recovery wave to peers still
+//! blocked mid-collective), re-runs rendezvous on the **same** listener,
+//! and the re-formed ring agrees on a resume point with a `Resume`
+//! min-reduce — every node reports the newest step its snapshot can
+//! restore (`0` = from scratch; survivors keep a short in-memory ring of
+//! recent `EfMemory` snapshots, a restarted process reloads from the
+//! on-disk ring it persisted under `--snapshot-dir` — a ring, because
+//! the fleet minimum can trail its own newest snapshot when the dead
+//! node's final ring send never flushed), and the fleet minimum wins. Each
+//! node rolls its EF memory back to that step, fast-forwards a fresh
+//! gradient RNG past the replayed prefix, and continues. Because the
+//! compressors are stateless per step and the EF memory is the only
+//! cross-step state, the replayed selections/values are **bit-identical**
+//! to a fault-free run — rank 0 re-emits the replayed digest lines
+//! (superseding its pre-fault emissions; [`parse_digest`] keeps the
+//! replay), so a kill+rejoin run's digest equals the fault-free digest.
 
-use crate::comm::socket::form_mesh;
+use crate::comm::socket::form_mesh_with;
 use crate::comm::{CommCost, Fabric, FabricConfig, Topology};
-use crate::compress::{schemes::make_compressor, sparsify, EfMemory, Selection};
+use crate::compress::{schemes::make_compressor, sparsify, Compressor, EfMemory, Selection};
 use crate::coordinator::{Coordinator, Mode};
+use crate::runtime::snapshot::{self, SnapshotRing};
 use crate::util::rng::Rng;
 use std::io::Write;
 use std::net::TcpListener;
+use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 /// Which side of the rendezvous this process is. Rank 0 — first in
@@ -82,6 +107,46 @@ pub struct NodeSpec {
     /// Must match across nodes that enable packing (the `Hello`
     /// handshake rejects a peer that cannot decode packed frames).
     pub wire_codec: crate::comm::WireCodecConfig,
+    /// Heartbeat interval of the mesh's liveness machinery (None = no
+    /// heartbeats; faults are detected only at blocking reads). Must be
+    /// set on every node or none (the `Hello` handshake rejects a
+    /// heartbeat-less peer on a heartbeat mesh).
+    pub heartbeat: Option<Duration>,
+    /// Reconnect-with-resume after a link fault instead of failing the
+    /// run (see the module docs for the protocol).
+    pub reconnect: bool,
+    /// How many link faults this node will recover from before giving up
+    /// (guards against reconnect storms on a genuinely broken fleet).
+    pub max_reconnect_attempts: usize,
+    /// Where to persist the on-disk EF-memory snapshot ring after every
+    /// step (atomic tmp+rename per file), so a restarted process can
+    /// rejoin and resume even when the fleet's agreed step trails its
+    /// own newest snapshot. Per-run scratch — reusing a previous run's
+    /// directory makes the resume min-reduce see stale steps.
+    pub snapshot_dir: Option<PathBuf>,
+}
+
+/// Default reconnect budget: enough for a worker restart plus the EOF
+/// cascade it triggers, small enough that a flapping fleet still fails.
+pub const DEFAULT_RECONNECT_ATTEMPTS: usize = 3;
+
+/// `SCALECOM_HEARTBEAT_MS`: default heartbeat interval for `scalecom
+/// node` when no `--heartbeat-ms` flag is given (flag wins; `0` = off).
+/// Set-but-invalid is a loud error, never a silent fallback — the same
+/// contract as `SCALECOM_WIRE_COMPRESSION`.
+pub const ENV_HEARTBEAT_MS: &str = "SCALECOM_HEARTBEAT_MS";
+
+/// Read [`ENV_HEARTBEAT_MS`]; `Ok(None)` when unset.
+pub fn env_heartbeat_ms() -> anyhow::Result<Option<u64>> {
+    match std::env::var(ENV_HEARTBEAT_MS) {
+        Ok(s) => s.trim().parse::<u64>().map(Some).map_err(|_| {
+            anyhow::anyhow!(
+                "{ENV_HEARTBEAT_MS}={s}: expects a whole number of milliseconds (0 = off)"
+            )
+        }),
+        Err(std::env::VarError::NotPresent) => Ok(None),
+        Err(e) => Err(anyhow::anyhow!("{ENV_HEARTBEAT_MS}: {e}")),
+    }
 }
 
 impl NodeSpec {
@@ -148,6 +213,10 @@ impl NodeSpec {
             rank,
             timeout,
             wire_codec: crate::comm::WireCodecConfig::default(),
+            heartbeat: None,
+            reconnect: false,
+            max_reconnect_attempts: DEFAULT_RECONNECT_ATTEMPTS,
+            snapshot_dir: None,
         })
     }
 
@@ -155,6 +224,22 @@ impl NodeSpec {
     /// after [`NodeSpec::from_flags`]).
     pub fn with_wire_codec(mut self, cfg: crate::comm::WireCodecConfig) -> NodeSpec {
         self.wire_codec = cfg;
+        self
+    }
+
+    /// Configure the fault-tolerance policy (builder style): the
+    /// heartbeat interval, whether to reconnect-and-resume after a link
+    /// fault, and where to persist the EF-memory snapshot a restarted
+    /// process resumes from.
+    pub fn with_fault_tolerance(
+        mut self,
+        heartbeat: Option<Duration>,
+        reconnect: bool,
+        snapshot_dir: Option<PathBuf>,
+    ) -> NodeSpec {
+        self.heartbeat = heartbeat;
+        self.reconnect = reconnect;
+        self.snapshot_dir = snapshot_dir;
         self
     }
 
@@ -396,6 +481,14 @@ pub fn parse_digest(text: &str) -> anyhow::Result<NodeDigest> {
                     hops: kv(&tokens, "hops")?.parse()?,
                     time_s: kv(&tokens, "time")?.parse()?,
                 };
+                // A resumed run re-emits steps from its rollback point
+                // (after a `resume from=` marker); the replay supersedes
+                // the pre-fault emissions — the determinism contract makes
+                // them identical, but the replayed lines are the ones the
+                // finished run stands by.
+                if t < steps.len() {
+                    steps.truncate(t);
+                }
                 anyhow::ensure!(t == steps.len(), "digest: step {t} out of order");
                 steps.push(StepDigest {
                     t,
@@ -565,56 +658,29 @@ pub fn sequential_digest(wl: &NodeWorkload, n: usize) -> anyhow::Result<NodeDige
     })
 }
 
-/// Run one node of the multi-process ring: bind, rendezvous, execute the
-/// workload over the socket collectives. The coordinator (rank 0) books
-/// the analytic `CommCost` through the same `Fabric::record_*` entry
-/// points as every in-process backend and writes the digest to `out`;
-/// workers only report completion.
-pub fn run_node<W: Write>(spec: &NodeSpec, wl: &NodeWorkload, out: &mut W) -> anyhow::Result<()> {
+/// One coordination step over the live mesh — the body of the
+/// [`run_node`] loop, factored out so the reconnect path can retry a
+/// step after recovery. State mutation is transactional at step scope:
+/// the EF-memory update happens only after every collective of the step
+/// succeeded, so a fault leaves `mem` at the last completed step and the
+/// resume rollback stays exact.
+#[allow(clippy::too_many_arguments)]
+fn drive_step<W: Write>(
+    t: usize,
+    grads: &[Vec<f32>],
+    rank: usize,
+    n: usize,
+    k: usize,
+    wl: &NodeWorkload,
+    compressor: &mut Option<Box<dyn Compressor>>,
+    mem: &mut EfMemory,
+    ring: &mut crate::comm::socket::SocketRingNode,
+    star: &mut crate::comm::socket::SocketStarNode,
+    fabric: &mut Option<Fabric>,
+    out: &mut W,
+) -> anyhow::Result<()> {
     use anyhow::Context;
-    wl.validate()?;
-    let rank = spec.rank;
-    let n = spec.workers();
-    let listener = TcpListener::bind(spec.bind.as_str())
-        .with_context(|| format!("rank {rank}: bind {}", spec.bind))?;
-    writeln!(out, "node rank={rank} n={n} bound={}", spec.bind)?;
-    out.flush()?;
-    let codec_stats = crate::comm::CodecStats::new();
-    let (mut ring, mut star) = form_mesh(
-        rank,
-        &spec.peers,
-        listener,
-        spec.timeout,
-        spec.wire_codec,
-        &codec_stats,
-    )?;
-
-    let k = wl.k();
-    let mut compressor = if wl.scheme == "none" {
-        None
-    } else {
-        Some(make_compressor(&wl.scheme, wl.rate, wl.seed)?)
-    };
-    let mut mem = EfMemory::new(wl.dim, wl.beta);
-    let mut fabric = (rank == 0).then(|| {
-        Fabric::new(FabricConfig {
-            workers: n,
-            topology: wl.topology,
-            ..FabricConfig::default()
-        })
-    });
-    if rank == 0 {
-        writeln!(
-            out,
-            "digest v1 workers={n} steps={} scheme={} dim={} rate={} seed={} warmup={}",
-            wl.steps, wl.scheme, wl.dim, wl.rate, wl.seed, wl.warmup
-        )?;
-        out.flush()?;
-    }
-
-    let mut rng = Rng::for_stream(wl.seed, n as u64);
-    for t in 0..wl.steps {
-        let grads = step_grads(&mut rng, n, wl.dim);
+    {
         let grad = &grads[rank];
         let leader = t % n;
         let dense = compressor.is_none() || t < wl.warmup;
@@ -740,8 +806,236 @@ pub fn run_node<W: Write>(spec: &NodeSpec, wl: &NodeWorkload, out: &mut W) -> an
                 }
             }
         }
-        if wl.step_delay_ms > 0 {
-            std::thread::sleep(Duration::from_millis(wl.step_delay_ms));
+    }
+    Ok(())
+}
+
+/// Agree on the fleet-wide resume point after a rendezvous and roll this
+/// node's state back to it. Every node reports the next step its newest
+/// snapshot can restore (`0` = from scratch), the ring min-reduces, and
+/// the minimum wins: EF memory is restored from the in-memory ring (a
+/// survivor) or the persisted file (a restarted process), and a fresh
+/// gradient RNG is fast-forwarded past the replayed prefix — the stream
+/// is one continuous generator, so resuming at step `M` means consuming
+/// exactly the draws of steps `0..M`. Returns the step to continue from.
+#[allow(clippy::too_many_arguments)]
+fn agree_and_rollback<W: Write>(
+    ring: &mut crate::comm::socket::SocketRingNode,
+    rank: usize,
+    n: usize,
+    wl: &NodeWorkload,
+    mem: &mut EfMemory,
+    rng: &mut Rng,
+    snaps: &mut SnapshotRing,
+    disk_dir: Option<&Path>,
+    out: &mut W,
+) -> anyhow::Result<usize> {
+    use anyhow::Context;
+    let disk_latest = match disk_dir {
+        Some(d) => snapshot::load(&snapshot::snapshot_path(d, rank))?.map(|(s, _)| s),
+        None => None,
+    };
+    let own_next: u64 = snaps
+        .latest_step()
+        .or(disk_latest)
+        .map(|s| s + 1)
+        .unwrap_or(0);
+    let resume = ring
+        .resume_min_reduce(own_next)
+        .context("resume agreement (ring min-reduce)")?;
+    anyhow::ensure!(
+        resume <= wl.steps as u64,
+        "resume agreement past the end of the run: step {resume} > --steps {} \
+         (a stale --snapshot-dir from a longer previous run?)",
+        wl.steps
+    );
+    if resume == 0 {
+        // From scratch: a member has no snapshot (cold start, or a
+        // restarted process without --snapshot-dir) — everyone replays
+        // the whole run, superseding any pre-fault digest emissions.
+        *mem = EfMemory::new(wl.dim, wl.beta);
+        *rng = Rng::for_stream(wl.seed, n as u64);
+        *snaps = SnapshotRing::new(snapshot::DEFAULT_RING_DEPTH);
+        return Ok(0);
+    }
+    let target = resume - 1; // restore the state AFTER this step
+    let from_disk = match disk_dir {
+        Some(d) => snapshot::load_at(d, rank, target)?,
+        None => None,
+    };
+    let restored: EfMemory = if let Some(m) = snaps.get(target) {
+        m.clone()
+    } else if let Some(m) = from_disk {
+        m
+    } else {
+        anyhow::bail!(
+            "rank {rank}: no snapshot for step {target} (the fleet's resume point) \
+             — it fell out of the in-memory ring and the on-disk ring's \
+             {}-step window, or --snapshot-dir was not set; restart the whole run",
+            snapshot::DEFAULT_RING_DEPTH
+        );
+    };
+    anyhow::ensure!(
+        restored.dim() == wl.dim,
+        "rank {rank}: snapshot dim {} != --dim {} (snapshot from a different run?)",
+        restored.dim(),
+        wl.dim
+    );
+    *mem = restored;
+    snaps.truncate_after(target);
+    *rng = Rng::for_stream(wl.seed, n as u64);
+    for _ in 0..resume {
+        let _ = step_grads(rng, n, wl.dim);
+    }
+    if rank == 0 {
+        writeln!(out, "resume from={resume}")?;
+        out.flush()?;
+    }
+    Ok(resume as usize)
+}
+
+/// Run one node of the multi-process ring: bind, rendezvous, execute the
+/// workload over the socket collectives. The coordinator (rank 0) books
+/// the analytic `CommCost` through the same `Fabric::record_*` entry
+/// points as every in-process backend and writes the digest to `out`;
+/// workers only report completion. With `spec.reconnect` a link fault
+/// triggers re-rendezvous on the same listener plus the resume protocol
+/// (module docs) instead of failing the run.
+pub fn run_node<W: Write>(spec: &NodeSpec, wl: &NodeWorkload, out: &mut W) -> anyhow::Result<()> {
+    use anyhow::Context;
+    wl.validate()?;
+    let rank = spec.rank;
+    let n = spec.workers();
+    // A restarted node races its predecessor's dying sockets for the
+    // port (TIME_WAIT can linger); with reconnect on, keep knocking
+    // until the rendezvous timeout instead of failing the relaunch.
+    let listener = {
+        let deadline = std::time::Instant::now() + spec.timeout;
+        loop {
+            match TcpListener::bind(spec.bind.as_str()) {
+                Ok(l) => break l,
+                Err(_) if spec.reconnect && std::time::Instant::now() < deadline => {
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+                Err(e) => {
+                    return Err(anyhow::Error::new(e)
+                        .context(format!("rank {rank}: bind {}", spec.bind)));
+                }
+            }
+        }
+    };
+    writeln!(out, "node rank={rank} n={n} bound={}", spec.bind)?;
+    out.flush()?;
+    let codec_stats = crate::comm::CodecStats::new();
+    let (mut ring, mut star) = form_mesh_with(
+        rank,
+        &spec.peers,
+        &listener,
+        spec.timeout,
+        spec.wire_codec,
+        &codec_stats,
+        spec.heartbeat,
+    )?;
+
+    let k = wl.k();
+    let mut compressor = if wl.scheme == "none" {
+        None
+    } else {
+        Some(make_compressor(&wl.scheme, wl.rate, wl.seed)?)
+    };
+    let mut mem = EfMemory::new(wl.dim, wl.beta);
+    let mut fabric = (rank == 0).then(|| {
+        Fabric::new(FabricConfig {
+            workers: n,
+            topology: wl.topology,
+            ..FabricConfig::default()
+        })
+    });
+    if rank == 0 {
+        writeln!(
+            out,
+            "digest v1 workers={n} steps={} scheme={} dim={} rate={} seed={} warmup={}",
+            wl.steps, wl.scheme, wl.dim, wl.rate, wl.seed, wl.warmup
+        )?;
+        out.flush()?;
+    }
+
+    let mut rng = Rng::for_stream(wl.seed, n as u64);
+    let mut snaps = SnapshotRing::new(snapshot::DEFAULT_RING_DEPTH);
+    let disk_dir = spec.snapshot_dir.as_deref();
+    let mut attempts_left = spec.max_reconnect_attempts;
+    let mut t: usize = 0;
+    if spec.reconnect {
+        // Uniform protocol: the resume exchange runs after EVERY
+        // rendezvous, because a restarted member cannot know whether the
+        // others are fresh or recovering. A cold start min-reduces to 0
+        // and is a no-op (no marker), so the digest stays byte-identical
+        // to a reconnect-less run.
+        t = agree_and_rollback(
+            &mut ring, rank, n, wl, &mut mem, &mut rng, &mut snaps, disk_dir, out,
+        )?;
+    }
+
+    while t < wl.steps {
+        let grads = step_grads(&mut rng, n, wl.dim);
+        let stepped = drive_step(
+            t,
+            &grads,
+            rank,
+            n,
+            k,
+            wl,
+            &mut compressor,
+            &mut mem,
+            &mut ring,
+            &mut star,
+            &mut fabric,
+            out,
+        );
+        match stepped {
+            Ok(()) => {
+                if spec.reconnect {
+                    snaps.push(t as u64, mem.clone());
+                    if let Some(d) = disk_dir {
+                        snapshot::save_ring(d, rank, t as u64, &mem)
+                            .with_context(|| format!("rank {rank}: persist step {t} snapshot"))?;
+                    }
+                }
+                if wl.step_delay_ms > 0 {
+                    std::thread::sleep(Duration::from_millis(wl.step_delay_ms));
+                }
+                t += 1;
+            }
+            Err(e) if spec.reconnect && attempts_left > 0 => {
+                attempts_left -= 1;
+                writeln!(
+                    out,
+                    "health degraded rank={rank} t={t} attempts-left={attempts_left} err={e:#}"
+                )?;
+                out.flush()?;
+                // Drop the faulted mesh BEFORE re-rendezvous: the EOFs
+                // cascade the recovery wave to peers still blocked
+                // mid-collective, so the whole fleet converges on
+                // form_mesh within milliseconds of the first detection.
+                drop(ring);
+                drop(star);
+                let refreshed = form_mesh_with(
+                    rank,
+                    &spec.peers,
+                    &listener,
+                    spec.timeout,
+                    spec.wire_codec,
+                    &codec_stats,
+                    spec.heartbeat,
+                )
+                .with_context(|| format!("rank {rank}: re-rendezvous after fault at step {t}"))?;
+                ring = refreshed.0;
+                star = refreshed.1;
+                t = agree_and_rollback(
+                    &mut ring, rank, n, wl, &mut mem, &mut rng, &mut snaps, disk_dir, out,
+                )?;
+            }
+            Err(e) => return Err(e),
         }
     }
     if rank == 0 {
@@ -782,8 +1076,14 @@ mod tests {
     }
 
     /// Drive every rank on a thread inside this process; return the
-    /// coordinator's parsed digest.
-    fn run_all_ranks(wl: &NodeWorkload, n: usize) -> NodeDigest {
+    /// coordinator's parsed digest. `heartbeat`/`reconnect` configure the
+    /// fault-tolerance layer on every rank.
+    fn run_all_ranks_with(
+        wl: &NodeWorkload,
+        n: usize,
+        heartbeat: Option<Duration>,
+        reconnect: bool,
+    ) -> NodeDigest {
         let peers = free_addrs(n);
         let outputs: Vec<Vec<u8>> = std::thread::scope(|s| {
             let handles: Vec<_> = (0..n)
@@ -791,7 +1091,8 @@ mod tests {
                     let peers = &peers;
                     let wl = wl.clone();
                     s.spawn(move || {
-                        let spec = spec_for(peers, rank);
+                        let spec = spec_for(peers, rank)
+                            .with_fault_tolerance(heartbeat, reconnect, None);
                         let mut out = Vec::new();
                         run_node(&spec, &wl, &mut out)
                             .unwrap_or_else(|e| panic!("rank {rank}: {e:#}"));
@@ -802,6 +1103,10 @@ mod tests {
             handles.into_iter().map(|h| h.join().expect("rank")).collect()
         });
         parse_digest(&String::from_utf8(outputs[0].clone()).unwrap()).expect("digest")
+    }
+
+    fn run_all_ranks(wl: &NodeWorkload, n: usize) -> NodeDigest {
+        run_all_ranks_with(wl, n, None, false)
     }
 
     #[test]
@@ -921,5 +1226,128 @@ mod tests {
         let parsed = parse_digest(&String::from_utf8(buf).unwrap()).unwrap();
         // text round-trip must be lossless: compare at zero tolerance
         compare_digests(&parsed, &want, 0.0, 0.0).unwrap();
+    }
+
+    #[test]
+    fn heartbeat_and_cold_start_resume_exchange_keep_parity() {
+        // The fault-tolerance layer at rest: heartbeats flowing on every
+        // link and the post-rendezvous resume exchange (which must
+        // min-reduce to 0 on a cold start) may not perturb the digest.
+        let wl = NodeWorkload {
+            steps: 12,
+            warmup: 2,
+            ..NodeWorkload::default()
+        };
+        let got = run_all_ranks_with(&wl, 3, Some(Duration::from_millis(100)), true);
+        let want = sequential_digest(&wl, 3).unwrap();
+        compare_digests(&got, &want, 1e-5, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn rollback_restores_memory_and_fast_forwards_the_stream() {
+        use crate::comm::socket::SocketRingNode;
+        let wl = NodeWorkload::default();
+        let n = 3;
+        // A "survivor" holding snapshots after steps 0..=3 with marker
+        // memories; the rollback must pick step 3 and replay from 4.
+        let mut snaps = SnapshotRing::new(snapshot::DEFAULT_RING_DEPTH);
+        for s in 0..4u64 {
+            let mut m = EfMemory::new(wl.dim, wl.beta);
+            m.set_memory(vec![s as f32; wl.dim]);
+            snaps.push(s, m);
+        }
+        let mut solo = SocketRingNode::new(0, 1, None, None);
+        let mut mem = EfMemory::new(wl.dim, wl.beta);
+        let mut rng = Rng::for_stream(999, 999); // garbage pre-rollback state
+        let mut out = Vec::new();
+        let t = agree_and_rollback(
+            &mut solo, 0, n, &wl, &mut mem, &mut rng, &mut snaps, None, &mut out,
+        )
+        .unwrap();
+        assert_eq!(t, 4);
+        assert_eq!(mem.memory(), &vec![3.0f32; wl.dim][..]);
+        assert_eq!(snaps.latest_step(), Some(3));
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("resume from=4"), "{text}");
+        // The RNG must sit exactly past the draws of steps 0..4.
+        let mut want = Rng::for_stream(wl.seed, n as u64);
+        for _ in 0..4 {
+            let _ = step_grads(&mut want, n, wl.dim);
+        }
+        assert_eq!(
+            step_grads(&mut rng, n, wl.dim),
+            step_grads(&mut want, n, wl.dim),
+            "fast-forwarded stream diverged"
+        );
+    }
+
+    #[test]
+    fn rollback_reloads_a_persisted_snapshot_and_rejects_stale_ones() {
+        use crate::comm::socket::SocketRingNode;
+        let wl = NodeWorkload::default();
+        let dir = std::env::temp_dir().join("scalecom_socket_rollback_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut persisted = EfMemory::new(wl.dim, wl.beta);
+        persisted.set_memory(vec![7.5; wl.dim]);
+        snapshot::save_ring(&dir, 1, 5, &persisted).unwrap();
+        // A "restarted process": empty in-memory ring, state on disk only.
+        let mut snaps = SnapshotRing::new(snapshot::DEFAULT_RING_DEPTH);
+        let mut solo = SocketRingNode::new(0, 1, None, None);
+        let mut mem = EfMemory::new(wl.dim, wl.beta);
+        let mut rng = Rng::for_stream(1, 1);
+        let mut out = Vec::new();
+        let t = agree_and_rollback(
+            &mut solo, 1, 2, &wl, &mut mem, &mut rng, &mut snaps, Some(dir.as_path()), &mut out,
+        )
+        .unwrap();
+        assert_eq!(t, 6);
+        assert_eq!(mem.memory(), persisted.memory());
+        assert!(out.is_empty(), "only rank 0 emits the resume marker");
+        // A snapshot from past the end of this run's --steps is stale.
+        snapshot::save_ring(&dir, 1, wl.steps as u64 + 10, &persisted).unwrap();
+        let err = agree_and_rollback(
+            &mut solo, 1, 2, &wl, &mut mem, &mut rng, &mut snaps, Some(dir.as_path()), &mut out,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("past the end"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn digest_parse_keeps_the_replay_of_a_resumed_run() {
+        // A faulted-then-resumed coordinator re-emits steps from the
+        // rollback point; the parser must keep the replayed lines and
+        // the result must equal the fault-free digest exactly.
+        let wl = NodeWorkload {
+            steps: 4,
+            ..NodeWorkload::default()
+        };
+        let want = sequential_digest(&wl, 2).unwrap();
+        let mut buf = Vec::new();
+        writeln!(buf, "digest v1 workers=2").unwrap();
+        for s in &want.steps {
+            emit_step(&mut buf, s).unwrap();
+        }
+        writeln!(buf, "health degraded rank=0 t=4 attempts-left=2 err=peer dead").unwrap();
+        writeln!(buf, "resume from=2").unwrap();
+        for s in &want.steps[2..] {
+            emit_step(&mut buf, s).unwrap();
+        }
+        writeln!(buf, "mem0 vals={}", fmt_f32s(&want.final_memory_rank0)).unwrap();
+        writeln!(buf, "digest-end steps={}", want.steps.len()).unwrap();
+        let parsed = parse_digest(&String::from_utf8(buf).unwrap()).unwrap();
+        compare_digests(&parsed, &want, 0.0, 0.0).unwrap();
+    }
+
+    #[test]
+    fn env_heartbeat_is_strict() {
+        // Env vars are process-global; touch the var briefly, mirroring
+        // codec::tests::env_wire_compression_is_strict.
+        std::env::set_var(ENV_HEARTBEAT_MS, "250");
+        assert_eq!(env_heartbeat_ms().unwrap(), Some(250));
+        std::env::set_var(ENV_HEARTBEAT_MS, "fast");
+        assert!(env_heartbeat_ms().is_err(), "set-but-invalid must be loud");
+        std::env::remove_var(ENV_HEARTBEAT_MS);
+        assert_eq!(env_heartbeat_ms().unwrap(), None);
     }
 }

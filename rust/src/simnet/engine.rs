@@ -100,6 +100,43 @@ impl Default for SimConfig {
     }
 }
 
+/// A mid-run fail-stop fault injected into the virtual timeline
+/// (elastic-membership mode, `scalecom simulate --elastic-kill-step`).
+///
+/// Worker `kill_worker` dies right after step `kill_step`'s selection
+/// compute, before its first exchange message. The fleet's heartbeat
+/// latches the silence within two intervals, the replacement process
+/// relaunches, every pair re-runs the Hello handshake, the resume point
+/// is agreed by a pass-the-minimum ring reduce, and the aborted step
+/// replays — the same recovery wave the socket runtime's
+/// `--reconnect` path runs for real, charged here in virtual time.
+/// Selections are untouched: the replay reproduces the exact fault-free
+/// values (the rollback determinism contract), so only the trace digest
+/// and the timeline move.
+#[derive(Debug, Clone)]
+pub struct ElasticSpec {
+    /// Step whose exchange the fault aborts (replayed after recovery).
+    pub kill_step: usize,
+    /// Rank that dies; its restart rejoins under the same rank.
+    pub kill_worker: usize,
+    /// Heartbeat interval in virtual seconds (detection bound = 2×).
+    pub heartbeat_s: f64,
+    /// Process relaunch + snapshot reload before the replacement dials
+    /// back into the rendezvous listener, virtual seconds.
+    pub restart_s: f64,
+}
+
+impl Default for ElasticSpec {
+    fn default() -> Self {
+        ElasticSpec {
+            kill_step: 1,
+            kill_worker: 1,
+            heartbeat_s: 0.1,
+            restart_s: 1.0,
+        }
+    }
+}
+
 /// One timed interval of the virtual timeline.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TraceEvent {
@@ -576,6 +613,28 @@ fn sim_exchange(
 /// the module docs for the model; determinism: same `(cfg, profile)` ⇒
 /// byte-identical trace digest and selections.
 pub fn simulate(cfg: &SimConfig, profile: &TopologyProfile) -> anyhow::Result<SimReport> {
+    simulate_inner(cfg, profile, None)
+}
+
+/// `simulate` with one injected fail-stop fault (see [`ElasticSpec`]).
+/// The selection digest is bit-identical to the fault-free run; the
+/// recovery wave (detect, restart, re-rendezvous, resume agreement,
+/// replay) shows up only in the trace and the timeline. `per_step_s`
+/// still measures the replayed step alone, so `total_s` exceeds the sum
+/// of steps by exactly the recovery overhead.
+pub fn simulate_elastic(
+    cfg: &SimConfig,
+    profile: &TopologyProfile,
+    elastic: &ElasticSpec,
+) -> anyhow::Result<SimReport> {
+    simulate_inner(cfg, profile, Some(elastic))
+}
+
+fn simulate_inner(
+    cfg: &SimConfig,
+    profile: &TopologyProfile,
+    elastic: Option<&ElasticSpec>,
+) -> anyhow::Result<SimReport> {
     anyhow::ensure!(cfg.workers >= 1, "simulate needs at least one worker");
     anyhow::ensure!(cfg.dim >= 1, "simulate needs a non-empty gradient");
     anyhow::ensure!(
@@ -592,6 +651,36 @@ pub fn simulate(cfg: &SimConfig, profile: &TopologyProfile) -> anyhow::Result<Si
         "--bucket-bytes only applies to compressed schemes (the dense \
          baseline's exchange is monolithic)"
     );
+    if let Some(el) = elastic {
+        anyhow::ensure!(
+            cfg.workers >= 2,
+            "elastic membership needs a survivor to detect the fault — \
+             run at least two workers"
+        );
+        anyhow::ensure!(
+            !cfg.overlapped,
+            "elastic membership cannot be combined with the overlapped \
+             driving mode — the recovery barrier drains the pipeline"
+        );
+        anyhow::ensure!(
+            el.kill_step < cfg.steps,
+            "--elastic-kill-step {} is past the end of a {}-step run",
+            el.kill_step,
+            cfg.steps
+        );
+        anyhow::ensure!(
+            el.kill_worker < cfg.workers,
+            "--elastic-kill-worker {} does not exist in a {}-worker fleet",
+            el.kill_worker,
+            cfg.workers
+        );
+        anyhow::ensure!(
+            el.heartbeat_s > 0.0,
+            "elastic membership needs a positive heartbeat interval \
+             (silence is what detects the dead worker)"
+        );
+        anyhow::ensure!(el.restart_s >= 0.0, "restart time must be non-negative");
+    }
     profile.check()?;
 
     let n = cfg.workers;
@@ -670,6 +759,91 @@ pub fn simulate(cfg: &SimConfig, profile: &TopologyProfile) -> anyhow::Result<Si
         } else {
             vec![whole]
         };
+
+        // Elastic fault: the doomed attempt runs its selection compute,
+        // then `kill_worker` dies before the first exchange message.
+        // Charge the recovery wave, then fall through to the normal
+        // bucket walk below — that IS the replay, so selections stay
+        // bit-identical to the fault-free run by construction.
+        if let Some(el) = elastic {
+            if el.kill_step == t {
+                let mut cursor = timeline_end;
+                let tc_attempt = dim as f64 * cfg.compute_per_elem_s * f_step;
+                trace.push(TraceEvent {
+                    step: t,
+                    bucket: 0,
+                    op: "compute_aborted",
+                    start_s: cursor,
+                    end_s: cursor + tc_attempt,
+                    bytes: dim * 4,
+                });
+                cursor += tc_attempt;
+                compute_total += tc_attempt;
+                // Heartbeat silence latches the dead peer within two
+                // intervals (the transport's detection bound).
+                let detect = 2.0 * el.heartbeat_s;
+                trace.push(TraceEvent {
+                    step: t,
+                    bucket: 0,
+                    op: "fault_detect",
+                    start_s: cursor,
+                    end_s: cursor + detect,
+                    bytes: 0,
+                });
+                cursor += detect;
+                trace.push(TraceEvent {
+                    step: t,
+                    bucket: 0,
+                    op: "worker_restart",
+                    start_s: cursor,
+                    end_s: cursor + el.restart_s,
+                    bytes: 0,
+                });
+                cursor += el.restart_s;
+                // Re-rendezvous storm: every pair re-runs the Hello
+                // handshake concurrently; the wave ends when the slowest
+                // link has carried a dial and an ack.
+                let hello_bytes = 64usize;
+                let mut hop = 0.0f64;
+                for w in 0..n {
+                    hop = hop.max(profile.egress(w).time_for(hello_bytes));
+                }
+                if profile.hierarchical_for(n) {
+                    hop = hop.max(profile.uplink.time_for(hello_bytes));
+                }
+                let rendezvous = 2.0 * hop;
+                trace.push(TraceEvent {
+                    step: t,
+                    bucket: 0,
+                    op: "rendezvous",
+                    start_s: cursor,
+                    end_s: cursor + rendezvous,
+                    bytes: n * (n - 1) * hello_bytes,
+                });
+                cursor += rendezvous;
+                // Resume agreement: pass-the-minimum around the ring,
+                // n−1 rounds of one 17-byte Resume frame per hop, each
+                // round gated by the slowest ring link.
+                let resume_frame = 17usize;
+                let mut ring_hop = 0.0f64;
+                for w in 0..n {
+                    ring_hop =
+                        ring_hop.max(profile.link_between(w, (w + 1) % n).time_for(resume_frame));
+                }
+                let resume_t = (n - 1) as f64 * ring_hop;
+                trace.push(TraceEvent {
+                    step: t,
+                    bucket: 0,
+                    op: "resume_reduce",
+                    start_s: cursor,
+                    end_s: cursor + resume_t,
+                    bytes: n * (n - 1) * resume_frame,
+                });
+                cursor += resume_t;
+                comm_total += rendezvous + resume_t;
+                timeline_end = cursor;
+            }
+        }
 
         let step_start = timeline_end;
         if cfg.overlapped {
@@ -1037,6 +1211,67 @@ mod tests {
         let b = simulate(&c, &TopologyProfile::named("hetero").unwrap()).unwrap();
         assert_ne!(a.trace_digest(), b.trace_digest());
         assert_eq!(a.selection_digest(), b.selection_digest());
+    }
+
+    #[test]
+    fn elastic_fault_charges_recovery_but_keeps_selections() {
+        let p = quiet_profile(10.0, 5.0);
+        let c = cfg("scalecom", 4);
+        let base = simulate(&c, &p).unwrap();
+        let el = ElasticSpec {
+            kill_step: 1,
+            kill_worker: 2,
+            heartbeat_s: 0.05,
+            restart_s: 0.5,
+        };
+        let faulted = simulate_elastic(&c, &p, &el).unwrap();
+        // The determinism contract: the kill+rejoin run's selections are
+        // bit-identical to the fault-free run's.
+        assert_eq!(faulted.selection_digest(), base.selection_digest());
+        assert_eq!(faulted.steps, base.steps);
+        // The recovery wave is charged on the wall: detection alone is
+        // 2× the heartbeat, plus the restart.
+        assert!(
+            faulted.total_s >= base.total_s + 2.0 * el.heartbeat_s + el.restart_s,
+            "{} vs {}",
+            faulted.total_s,
+            base.total_s
+        );
+        assert_ne!(faulted.trace_digest(), base.trace_digest());
+        // Every recovery op appears exactly once, in order, at the kill
+        // step.
+        let ops = ["compute_aborted", "fault_detect", "worker_restart", "rendezvous", "resume_reduce"];
+        for op in ops {
+            let hits: Vec<&TraceEvent> =
+                faulted.trace.iter().filter(|e| e.op == op).collect();
+            assert_eq!(hits.len(), 1, "{op}");
+            assert_eq!(hits[0].step, el.kill_step, "{op}");
+        }
+        // Same spec ⇒ byte-identical timeline.
+        let again = simulate_elastic(&c, &p, &el).unwrap();
+        assert_eq!(again.trace_digest(), faulted.trace_digest());
+        // per_step_s measures the replayed step alone; the overhead only
+        // widens total_s.
+        let steps_sum: f64 = faulted.per_step_s.iter().sum();
+        assert!(faulted.total_s > steps_sum, "{} vs {steps_sum}", faulted.total_s);
+    }
+
+    #[test]
+    fn elastic_mode_rejects_bad_specs() {
+        let p = TopologyProfile::uniform();
+        let c = cfg("scalecom", 4);
+        let el = ElasticSpec::default();
+        let past = ElasticSpec { kill_step: c.steps, ..el.clone() };
+        assert!(simulate_elastic(&c, &p, &past).unwrap_err().to_string().contains("kill-step"));
+        let ghost = ElasticSpec { kill_worker: c.workers, ..el.clone() };
+        assert!(simulate_elastic(&c, &p, &ghost).unwrap_err().to_string().contains("kill-worker"));
+        let deaf = ElasticSpec { heartbeat_s: 0.0, ..el.clone() };
+        assert!(simulate_elastic(&c, &p, &deaf).unwrap_err().to_string().contains("heartbeat"));
+        let solo = cfg("scalecom", 1);
+        assert!(simulate_elastic(&solo, &p, &el).unwrap_err().to_string().contains("survivor"));
+        let mut over = c.clone();
+        over.overlapped = true;
+        assert!(simulate_elastic(&over, &p, &el).unwrap_err().to_string().contains("overlapped"));
     }
 
     #[test]

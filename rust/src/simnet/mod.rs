@@ -36,6 +36,9 @@ pub mod engine;
 pub mod profile;
 pub mod tune;
 
-pub use engine::{simulate, synthetic_grads, uniform_partition, SimConfig, SimReport, TraceEvent, SIM_SCHEMES};
+pub use engine::{
+    simulate, simulate_elastic, synthetic_grads, uniform_partition, ElasticSpec, SimConfig,
+    SimReport, TraceEvent, SIM_SCHEMES,
+};
 pub use profile::{LinkProfile, StragglerProfile, TopologyProfile};
 pub use tune::{calibrate_compute_per_elem, tune, PlanEval, TuneConfig, TuneOutcome};

@@ -54,6 +54,16 @@ impl Drop for Cluster {
 }
 
 fn spawn_node(peers: &[String], rank: usize, wl: &NodeWorkload, timeout_secs: u64) -> Child {
+    spawn_node_with(peers, rank, wl, timeout_secs, &[])
+}
+
+fn spawn_node_with(
+    peers: &[String],
+    rank: usize,
+    wl: &NodeWorkload,
+    timeout_secs: u64,
+    extra: &[&str],
+) -> Child {
     let mut cmd = Command::new(bin());
     cmd.arg("node")
         .arg("--role")
@@ -85,6 +95,9 @@ fn spawn_node(peers: &[String], rank: usize, wl: &NodeWorkload, timeout_secs: u6
         .stdin(Stdio::null())
         .stdout(Stdio::piped())
         .stderr(Stdio::piped());
+    for a in extra {
+        cmd.arg(a);
+    }
     cmd.spawn().expect("spawn scalecom node")
 }
 
@@ -270,4 +283,178 @@ fn killed_worker_fails_the_coordinator_cleanly_without_hanging() {
         "coordinator must surface a clean error, got stderr:\n{stderr}"
     );
     drop(reader); // detached: the pipe closes with the child
+}
+
+#[test]
+fn killed_worker_rejoins_and_digest_matches_fault_free_run_bit_exactly() {
+    // The reconnect-with-resume determinism contract, end to end over
+    // real processes: SIGKILL one worker mid-run, relaunch it with the
+    // same command line, and the coordinator's digest must come out
+    // *bit-identical* to a fault-free run of the same cluster (and
+    // still within the parity tolerances of the sequential reference).
+    let wl = NodeWorkload {
+        steps: 30,
+        warmup: 3,
+        step_delay_ms: 50,
+        ..NodeWorkload::default()
+    };
+    let n = 4;
+    let scratch =
+        std::env::temp_dir().join(format!("scalecom_mp_rejoin_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&scratch);
+    let snap_clean = scratch.join("clean");
+    let snap_faulted = scratch.join("faulted");
+    std::fs::create_dir_all(&snap_clean).expect("scratch dir");
+    std::fs::create_dir_all(&snap_faulted).expect("scratch dir");
+    let flags = |dir: &std::path::Path| -> Vec<String> {
+        vec![
+            "--heartbeat-ms".into(),
+            "100".into(),
+            "--reconnect".into(),
+            "--snapshot-dir".into(),
+            dir.display().to_string(),
+        ]
+    };
+
+    // Fault-free reference with the identical fault-tolerance flags
+    // (heartbeats and snapshots on, nobody dies).
+    let want = {
+        let extra = flags(&snap_clean);
+        let extra: Vec<&str> = extra.iter().map(String::as_str).collect();
+        let peers = free_addrs(n);
+        let mut cluster = Cluster {
+            children: (0..n)
+                .map(|rank| spawn_node_with(&peers, rank, &wl, 20, &extra))
+                .collect(),
+        };
+        let outs: Vec<_> = cluster.children.iter_mut().map(capture_stdout).collect();
+        let errs: Vec<_> = cluster.children.iter_mut().map(capture_stderr).collect();
+        let deadline = Instant::now() + Duration::from_secs(120);
+        let statuses: Vec<_> = cluster
+            .children
+            .iter_mut()
+            .enumerate()
+            .map(|(rank, c)| wait_with_deadline(c, deadline, &format!("clean rank {rank}")))
+            .collect();
+        let outs: Vec<String> = outs.into_iter().map(|h| h.join().expect("reader")).collect();
+        let errs: Vec<String> = errs.into_iter().map(|h| h.join().expect("reader")).collect();
+        for (rank, status) in statuses.iter().enumerate() {
+            assert!(
+                status.success(),
+                "clean rank {rank} failed ({status}):\n{}",
+                errs[rank]
+            );
+        }
+        parse_digest(&outs[0]).expect("fault-free digest")
+    };
+
+    // Faulted run: stream the coordinator's stdout, kill worker 2 once
+    // the run is demonstrably mid-flight, relaunch it immediately.
+    let extra = flags(&snap_faulted);
+    let extra_refs: Vec<&str> = extra.iter().map(String::as_str).collect();
+    let peers = free_addrs(n);
+    let mut cluster = Cluster {
+        children: (0..n)
+            .map(|rank| spawn_node_with(&peers, rank, &wl, 20, &extra_refs))
+            .collect(),
+    };
+    let stdout = cluster.children[0].stdout.take().expect("piped stdout");
+    let (line_tx, line_rx) = mpsc::channel::<String>();
+    let reader = std::thread::spawn(move || {
+        for line in BufReader::new(stdout).lines() {
+            match line {
+                Ok(l) => {
+                    if line_tx.send(l).is_err() {
+                        break;
+                    }
+                }
+                Err(_) => break,
+            }
+        }
+    });
+    let coord_err = capture_stderr(&mut cluster.children[0]);
+    let mut side_outs: Vec<_> =
+        cluster.children.iter_mut().skip(1).map(capture_stdout).collect();
+    let mut side_errs: Vec<_> =
+        cluster.children.iter_mut().skip(1).map(capture_stderr).collect();
+
+    let mut lines: Vec<String> = Vec::new();
+    let mut steps_seen = 0;
+    while steps_seen < 5 {
+        match line_rx.recv_timeout(Duration::from_secs(30)) {
+            Ok(line) => {
+                if line.starts_with("step ") {
+                    steps_seen += 1;
+                }
+                lines.push(line);
+            }
+            Err(_) => panic!("coordinator produced no step lines within 30s"),
+        }
+    }
+    cluster.children[2].kill().expect("kill worker 2");
+    let _ = cluster.children[2].wait();
+    let mut rejoined = spawn_node_with(&peers, 2, &wl, 20, &extra_refs);
+    side_outs.push(capture_stdout(&mut rejoined));
+    side_errs.push(capture_stderr(&mut rejoined));
+    cluster.children.push(rejoined);
+
+    // Drain the coordinator to completion.
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        match line_rx.recv_timeout(Duration::from_millis(200)) {
+            Ok(line) => lines.push(line),
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                assert!(
+                    Instant::now() < deadline,
+                    "coordinator hung after the kill+rejoin"
+                );
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    reader.join().expect("reader");
+    let status = wait_with_deadline(
+        &mut cluster.children[0],
+        Instant::now() + Duration::from_secs(30),
+        "coordinator after rejoin",
+    );
+    let coord_err = coord_err.join().expect("stderr reader");
+    assert!(status.success(), "coordinator failed ({status}):\n{coord_err}");
+    // Survivors (ranks 1, 3) and the relaunched worker must all finish
+    // cleanly; the killed original (index 2) is expected dead.
+    for idx in [1usize, 3, 4] {
+        let status = wait_with_deadline(
+            &mut cluster.children[idx],
+            Instant::now() + Duration::from_secs(30),
+            &format!("child {idx} after rejoin"),
+        );
+        assert!(status.success(), "child {idx} failed ({status})");
+    }
+    for h in side_outs {
+        let _ = h.join();
+    }
+    for h in side_errs {
+        let _ = h.join();
+    }
+
+    let stdout = lines.join("\n");
+    assert!(
+        stdout.contains("health degraded"),
+        "no recovery wave in coordinator output:\n{stdout}"
+    );
+    assert!(
+        stdout.contains("resume from="),
+        "no resume agreement in coordinator output:\n{stdout}"
+    );
+    let got = parse_digest(&stdout).expect("faulted digest");
+    // Bit-identical to the fault-free run — the rollback+replay
+    // determinism contract.
+    compare_digests(&got, &want, 0.0, 0.0)
+        .unwrap_or_else(|e| panic!("kill+rejoin vs fault-free: {e:#}\n---\n{stdout}"));
+    // And still within the backend parity contract of the sequential
+    // reference.
+    let seq = sequential_digest(&wl, n).expect("sequential reference");
+    compare_digests(&got, &seq, 1e-5, 1e-6)
+        .unwrap_or_else(|e| panic!("kill+rejoin vs sequential: {e:#}\n---\n{stdout}"));
+    let _ = std::fs::remove_dir_all(&scratch);
 }
