@@ -7,7 +7,14 @@
 //!
 //! Usage:
 //!   cargo bench --bench bench_allreduce [-- --quick] [-- --backend sequential|threaded|pipelined|socket]
-//!     [-- --codec] [-- --assert-codec] [-- --bucketed] [-- --simnet] [-- --json path]
+//!     [-- --codec] [-- --assert-codec] [-- --bucketed] [-- --hier] [-- --simnet] [-- --json path]
+//!
+//! The `hier/*` section re-runs the chunked CLT-k pipeline on the pooled
+//! backends with the dense ring collective on the two-level
+//! ring-of-rings (`--group-size` in the trainer): flat (g0) vs g=2/g=4
+//! at n = 8/16, with the step-time ratio tracked in the JSON artifact so
+//! the bench-trend gate catches topology regressions. `--hier` runs only
+//! that section (the CI hier smoke job).
 //!
 //! The `codec/*` section measures the wire entropy codec: bytes-on-wire
 //! and encode/decode ns per frame for dense chunks, sparse gathers, and
@@ -249,6 +256,8 @@ fn main() {
     let assert_overlap = args.iter().any(|a| a == "--assert-overlap");
     // Run ONLY the bucketed-exchange section (the CI bucketed smoke job).
     let bucketed_only = args.iter().any(|a| a == "--bucketed");
+    // Run ONLY the hierarchical-topology section (the CI hier smoke job).
+    let hier_only = args.iter().any(|a| a == "--hier");
     // Run ONLY the simnet scaling section (virtual time, no threads).
     let simnet_only = args.iter().any(|a| a == "--simnet");
     // Run ONLY the wire-codec section (the CI codec smoke job).
@@ -280,6 +289,11 @@ fn main() {
     }
     if bucketed_only {
         run_bucketed_section(&mut b, &backends, quick, dim, rate, &mut derived);
+        write_json(json_path.as_deref(), &b, &derived);
+        return;
+    }
+    if hier_only {
+        run_hier_section(&mut b, &backends, quick, dim, rate, &mut derived);
         write_json(json_path.as_deref(), &b, &derived);
         return;
     }
@@ -412,6 +426,9 @@ fn main() {
 
     // --- bucketed exchange: per-bucket scheduler vs monolithic ----------
     run_bucketed_section(&mut b, &backends, quick, dim, rate, &mut derived);
+
+    // --- hierarchical topology: flat ring vs ring-of-rings --------------
+    run_hier_section(&mut b, &backends, quick, dim, rate, &mut derived);
 
     // --- wire entropy codec: bytes-on-wire + encode/decode cost ---------
     let violations = run_codec_section(&mut b, quick, &mut derived, assert_codec);
@@ -646,6 +663,75 @@ fn write_json(path: Option<&str>, b: &Bencher, derived: &[(String, f64)]) {
     root.insert("derived".to_string(), Json::Obj(d));
     std::fs::write(path, Json::Obj(root).to_string_pretty()).expect("write --json output");
     println!("# wrote {path}");
+}
+
+/// Hierarchical-topology section, shared between the full run and
+/// `--hier`: the pooled backends' chunked CLT-k pipeline with the dense
+/// ring collective on the two-level ring-of-rings (the trainer's
+/// `--group-size`), flat (g0) baseline vs g=2/g=4 at each scale. The
+/// step-time ratio IS the measured cost (or win) of trading the flat
+/// ring's 2(n−1) chunk rounds for intra reduce + leader uplink +
+/// chain broadcast; it lands in the JSON artifact as `hier/*` so the
+/// bench-trend gate tracks it across PRs.
+fn run_hier_section(
+    b: &mut Bencher,
+    backends: &[Backend],
+    quick: bool,
+    dim: usize,
+    rate: usize,
+    derived: &mut Vec<(String, f64)>,
+) {
+    println!(
+        "# hier = chunked CLT-k pipeline with the dense ring collective on the \
+         two-level ring-of-rings (g = group size, g0 = flat ring baseline)"
+    );
+    let ns: &[usize] = if quick { &[8] } else { &[8, 16] };
+    for &backend in backends.iter().filter(|be| be.is_pooled()) {
+        for &n in ns {
+            let mut flat_ns = None;
+            for g in [0usize, 2, 4] {
+                if g != 0 && (n % g != 0 || n / g < 2) {
+                    continue;
+                }
+                let mut coord = Coordinator::new(
+                    n,
+                    dim,
+                    Mode::Compressed(Box::new(CltK::chunked(rate))),
+                    0.5,
+                    (dim / rate).max(1),
+                    fabric(n, Topology::Ring),
+                    0,
+                )
+                .with_group_size(g)
+                .with_backend(backend);
+                let mut rng = Rng::new(0x417 + n as u64);
+                let grads = rand_grads(&mut rng, n, dim);
+                let mut t = 0usize;
+                let med = b
+                    .bench(&format!("hier/{}/n{n}/g{g}", backend.label()), || {
+                        black_box(coord.step_overlapped(t, &grads));
+                        t += 1;
+                    })
+                    .median_ns;
+                let _ = coord.finish_overlapped();
+                if g == 0 {
+                    flat_ns = Some(med);
+                } else if let Some(flat) = flat_ns {
+                    println!(
+                        "# hier {} n={n} g={g}: {:.1}us vs flat {:.1}us ({:.2}x)",
+                        backend.label(),
+                        med / 1e3,
+                        flat / 1e3,
+                        med / flat
+                    );
+                    derived.push((
+                        format!("hier/{}/n{n}_g{g}_vs_flat_ratio", backend.label()),
+                        med / flat,
+                    ));
+                }
+            }
+        }
+    }
 }
 
 /// Bucketed section, shared between the full run and `--bucketed`:

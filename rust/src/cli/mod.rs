@@ -131,6 +131,12 @@ SUBCOMMANDS:
                      --wire-compression-dense auto|raw|lz1|lz2 and
                      --wire-compression-sparse ...  pin the byte-compressor
                        per frame family (default auto = size-tiered)
+                     --group-size G  hierarchical ring-of-rings for the
+                       dense collective on the pooled backends: consecutive
+                       groups of G workers run intra rings and the group
+                       leaders run a level-1 uplink ring (0 = flat ring;
+                       G must divide the worker count and leave >= 2
+                       groups)
                      --config file.toml (flags override file)
   simulate         run the real coordination code at paper scale under
                    simulated link timing (deterministic virtual time)
@@ -182,6 +188,11 @@ SUBCOMMANDS:
                        after every step (atomic rename), so a restarted
                        process can rejoin and resume; per-run scratch
                      --max-reconnect-attempts N (default 3)
+                     --group-size G  hierarchical ring-of-rings: ranks are
+                       tiled into consecutive groups of G, dense traffic
+                       runs intra-ring + leader uplink ring + downlink
+                       broadcast (0 = flat ring; must match on every node,
+                       divide the node count, and leave >= 2 groups)
   bench-trend      compare two bench_allreduce --json artifacts and fail
                    on median regressions past the budget (the CI perf gate)
                      --baseline old.json --current new.json

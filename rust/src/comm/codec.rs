@@ -828,7 +828,7 @@ impl FrameCodec {
             return None;
         }
         let choice = match msg {
-            WireMsg::DenseChunk { .. } => self.cfg.dense,
+            WireMsg::DenseChunk { .. } | WireMsg::DenseChunkLvl { .. } => self.cfg.dense,
             WireMsg::Sparse { .. } | WireMsg::Indices(_) => self.cfg.sparse,
             // Handshake and liveness/recovery control frames are tiny
             // and latency-bound: always raw.

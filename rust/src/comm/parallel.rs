@@ -163,6 +163,46 @@ pub fn all_gather_round(id: usize, n: usize, s: usize) -> (usize, usize) {
     ((id + 1 + n - s) % n, (id + n - s) % n)
 }
 
+/// Validate a hierarchical group size against the worker count — the
+/// single definition shared by the executable topologies
+/// ([`hier_ring`], `comm::socket`, `runtime::socket`) and the simnet
+/// `hier` profile, so simulation and execution accept exactly the same
+/// configurations and reject the rest with the same remedy.
+///
+/// `group_size` 0 or 1 selects the flat ring and is always valid; a
+/// hierarchical group size must divide `n` evenly and leave at least two
+/// groups for the leader ring.
+pub fn validate_group_size(n: usize, group_size: usize) -> anyhow::Result<()> {
+    if group_size <= 1 {
+        return Ok(());
+    }
+    anyhow::ensure!(
+        n % group_size == 0,
+        "group size {group_size} does not divide {n} workers evenly; \
+         pick a divisor of {n}, or 0 for the flat ring"
+    );
+    anyhow::ensure!(
+        n / group_size >= 2,
+        "group size {group_size} leaves a single group at {n} workers — \
+         the leader ring needs at least 2 groups; \
+         pick a group size of at most {}, or 0 for the flat ring",
+        n / 2
+    );
+    Ok(())
+}
+
+/// Multi-level CLT-k leader election: decompose step `t`'s flat cyclic
+/// leader (`t % n`, ScaleCom's build-up-free rotation) into
+/// `(group, member)` coordinates of the two-level topology. The flat
+/// leader id is preserved — `group * group_size + member == t % n` — so
+/// hierarchical runs select exactly the indices the flat ring selects,
+/// with no per-level state to build up.
+pub fn hier_leader(t: u64, n: usize, group_size: usize) -> (usize, usize) {
+    assert!(n >= 1 && group_size >= 1);
+    let leader = (t % n as u64) as usize;
+    (leader / group_size, leader % group_size)
+}
+
 /// The ring all-reduce schedule, generic over how a chunk crosses to the
 /// neighbor — the transport seam. The channel mesh (`RingNode`) and the
 /// TCP mesh (`comm::socket::SocketRingNode`) both run exactly this code,
@@ -184,23 +224,34 @@ pub(crate) fn ring_allreduce_generic(
         return Ok(());
     }
     let bounds = chunk_bounds(buf.len(), n);
+    // Zero-width chunks (len < n) move no message: the send is skipped
+    // here and the matching recv is skipped on the neighbor — chunk c is
+    // zero-width for every worker, so both sides agree round by round and
+    // the schedule's round count is unchanged. No empty f32 frame ever
+    // crosses a channel or the socket wire, and the simnet replay charges
+    // the same (zero) bytes.
+    //
     // Reduce-scatter: after step s, the chunk received from the left
     // holds s+2 contributions; after n-1 steps worker w owns the
     // complete sum of chunk (w+1)%n.
     for s in 0..n - 1 {
         let (send_c, recv_c) = reduce_scatter_round(id, n, s);
         let (lo, hi) = bounds[send_c];
-        send(&buf[lo..hi])?;
-        let incoming = recv()?;
+        if hi > lo {
+            send(&buf[lo..hi])?;
+        }
         let (lo, hi) = bounds[recv_c];
-        anyhow::ensure!(
-            hi - lo == incoming.len(),
-            "ring chunk size mismatch: expected {}, got {} (peer out of sync)",
-            hi - lo,
-            incoming.len()
-        );
-        for (b, v) in buf[lo..hi].iter_mut().zip(&incoming) {
-            *b += v;
+        if hi > lo {
+            let incoming = recv()?;
+            anyhow::ensure!(
+                hi - lo == incoming.len(),
+                "ring chunk size mismatch: expected {}, got {} (peer out of sync)",
+                hi - lo,
+                incoming.len()
+            );
+            for (b, v) in buf[lo..hi].iter_mut().zip(&incoming) {
+                *b += v;
+            }
         }
     }
     let (lo, hi) = bounds[(id + 1) % n];
@@ -209,16 +260,20 @@ pub(crate) fn ring_allreduce_generic(
     for s in 0..n - 1 {
         let (send_c, recv_c) = all_gather_round(id, n, s);
         let (lo, hi) = bounds[send_c];
-        send(&buf[lo..hi])?;
-        let incoming = recv()?;
+        if hi > lo {
+            send(&buf[lo..hi])?;
+        }
         let (lo, hi) = bounds[recv_c];
-        anyhow::ensure!(
-            hi - lo == incoming.len(),
-            "ring chunk size mismatch: expected {}, got {} (peer out of sync)",
-            hi - lo,
-            incoming.len()
-        );
-        buf[lo..hi].copy_from_slice(&incoming);
+        if hi > lo {
+            let incoming = recv()?;
+            anyhow::ensure!(
+                hi - lo == incoming.len(),
+                "ring chunk size mismatch: expected {}, got {} (peer out of sync)",
+                hi - lo,
+                incoming.len()
+            );
+            buf[lo..hi].copy_from_slice(&incoming);
+        }
     }
     Ok(())
 }
@@ -227,7 +282,7 @@ impl RingNode {
     /// Ring all-reduce; `finish` is applied to this worker's fully-reduced
     /// chunk between the reduce-scatter and all-gather phases (e.g. the
     /// 1/n averaging scale).
-    fn allreduce_with(&self, buf: &mut [f32], finish: impl Fn(&mut [f32])) {
+    pub(crate) fn allreduce_with(&self, buf: &mut [f32], finish: impl Fn(&mut [f32])) {
         let mut send = |chunk: &[f32]| -> anyhow::Result<()> {
             self.tx_right
                 .send(chunk.to_vec())
@@ -250,6 +305,117 @@ impl RingNode {
     /// In-place average-all-reduce (sum then scale by 1/n, with the scale
     /// applied once per chunk on its owning worker — the same `*= 1/n as
     /// f32` the sequential fabric performs).
+    pub fn allreduce_avg(&self, buf: &mut [f32]) {
+        let inv = 1.0 / self.n as f32;
+        self.allreduce_with(buf, |chunk| {
+            chunk.iter_mut().for_each(|v| *v *= inv);
+        });
+    }
+
+    /// Raw hop along the ring's right edge. The hierarchical exchange's
+    /// broadcast leg reuses the intra-group links for the finished
+    /// result, so no extra channels exist outside the two rings.
+    pub(crate) fn send_right(&self, v: Vec<f32>) {
+        self.tx_right
+            .send(v)
+            .expect("ring send: right neighbor gone (in-process mesh)");
+    }
+
+    /// Raw hop from the ring's left edge (see [`RingNode::send_right`]).
+    pub(crate) fn recv_left(&self) -> Vec<f32> {
+        self.rx_left
+            .recv()
+            .expect("ring recv: left neighbor gone (in-process mesh)")
+    }
+}
+
+/// One worker's endpoints in a two-level ring-of-rings of `n` workers
+/// split into `n / group_size` groups: an intra-group ring over the
+/// group's members, plus — on the group leader (member 0) — an uplink
+/// ring over the per-group leaders. The hierarchical all-reduce runs
+///
+///   1. intra-group ring all-reduce (sum): reduce-scatter + all-gather
+///      over the member ring, so every member holds the group sum;
+///   2. leader ring all-reduce over the uplink, `finish` applied once
+///      per chunk on its owning leader (the 1/n scale);
+///   3. broadcast of the finished buffer down the group chain (leader →
+///      member 1 → … → member m−1 over the intra right links).
+///
+/// Both levels run [`ring_allreduce_generic`], so the two-level chunk
+/// schedule is the flat helpers composed — exactly what simnet's `hier`
+/// profile replays.
+pub struct HierRingNode {
+    /// Global worker id in `0..n`.
+    pub id: usize,
+    pub n: usize,
+    pub group_size: usize,
+    /// Intra-group ring; its `id` is this worker's member index.
+    intra: RingNode,
+    /// Leader ring over the uplink (member 0 only); its `id` is the
+    /// group index.
+    up: Option<RingNode>,
+}
+
+/// Build the channel-backed two-level mesh: one intra ring per group of
+/// `group_size` consecutive workers, one uplink ring over the group
+/// leaders (workers `0, group_size, 2·group_size, …`).
+pub fn hier_ring(n: usize, group_size: usize) -> anyhow::Result<Vec<HierRingNode>> {
+    validate_group_size(n, group_size)?;
+    anyhow::ensure!(
+        group_size >= 2,
+        "hier_ring: group size {group_size} selects the flat ring — build `ring({n})` instead"
+    );
+    let m = group_size;
+    let ngroups = n / m;
+    let mut uplink: Vec<Option<RingNode>> = ring(ngroups).into_iter().map(Some).collect();
+    let mut out = Vec::with_capacity(n);
+    for grp in 0..ngroups {
+        for (j, intra) in ring(m).into_iter().enumerate() {
+            out.push(HierRingNode {
+                id: grp * m + j,
+                n,
+                group_size: m,
+                intra,
+                up: if j == 0 { uplink[grp].take() } else { None },
+            });
+        }
+    }
+    Ok(out)
+}
+
+impl HierRingNode {
+    pub(crate) fn allreduce_with(&self, buf: &mut [f32], finish: impl Fn(&mut [f32])) {
+        // Phase 1: intra-group sum — every member ends with the group sum.
+        self.intra.allreduce_sum(buf);
+        // Phase 2: leader ring over the uplink carries the group sums;
+        // `finish` lands exactly once per chunk, on its owning leader.
+        if let Some(up) = &self.up {
+            up.allreduce_with(buf, &finish);
+        }
+        // Phase 3: the finished result flows down the group chain. A
+        // zero-length buffer moved no chunks above and moves no
+        // broadcast either.
+        if buf.is_empty() {
+            return;
+        }
+        if self.up.is_some() {
+            self.intra.send_right(buf.to_vec());
+        } else {
+            let incoming = self.intra.recv_left();
+            buf.copy_from_slice(&incoming);
+            if self.intra.id + 1 < self.group_size {
+                self.intra.send_right(incoming);
+            }
+        }
+    }
+
+    /// In-place sum-all-reduce over all `n` workers.
+    pub fn allreduce_sum(&self, buf: &mut [f32]) {
+        self.allreduce_with(buf, |_| {});
+    }
+
+    /// In-place average-all-reduce (the leader ring applies the global
+    /// 1/n scale once per chunk).
     pub fn allreduce_avg(&self, buf: &mut [f32]) {
         let inv = 1.0 / self.n as f32;
         self.allreduce_with(buf, |chunk| {
@@ -370,10 +536,12 @@ pub enum LaneTransport {
     Socket(crate::comm::codec::WireCodecConfig),
 }
 
-/// A lane's ring endpoint on either transport.
+/// A lane's ring endpoint on either transport and either topology.
 enum LaneRing {
     Channel(RingNode),
+    ChannelHier(HierRingNode),
     Socket(crate::comm::socket::SocketRingNode),
+    SocketHier(crate::comm::socket::SocketHierRingNode),
 }
 
 impl LaneRing {
@@ -386,9 +554,15 @@ impl LaneRing {
                 r.allreduce_avg(buf);
                 Ok(())
             }
+            LaneRing::ChannelHier(r) => {
+                r.allreduce_avg(buf);
+                Ok(())
+            }
             // The socket mesh stamps (and verifies) the tag on every
-            // frame — see `comm::wire`.
+            // frame — see `comm::wire`. The hierarchical mesh adds a
+            // level tag so intra-group and uplink streams can never mix.
             LaneRing::Socket(r) => r.allreduce_avg_bucket(bucket, buf),
+            LaneRing::SocketHier(r) => r.allreduce_avg_bucket(bucket, buf),
         }
     }
 }
@@ -435,25 +609,57 @@ impl CommLanes {
             .expect("the channel mesh needs no OS resources and cannot fail")
     }
 
-    /// Build the lane mesh on the chosen transport. `Socket` binds one
-    /// loopback TCP pair per mesh edge (ephemeral ports), which can fail
-    /// if the OS refuses the sockets.
+    /// Build the lane mesh on the chosen transport with the flat ring
+    /// topology. `Socket` binds one loopback TCP pair per mesh edge
+    /// (ephemeral ports), which can fail if the OS refuses the sockets.
     pub fn with_transport(n: usize, transport: LaneTransport) -> anyhow::Result<CommLanes> {
+        Self::with_topology(n, transport, 0)
+    }
+
+    /// Build the lane mesh on the chosen transport and ring topology:
+    /// `group_size` 0 (or 1) runs the flat ring, >= 2 runs the two-level
+    /// ring-of-rings ([`hier_ring`] / `comm::socket::local_hier_ring`).
+    /// The star gather stays single-level — only the dense ring
+    /// collective is hierarchical.
+    pub fn with_topology(
+        n: usize,
+        transport: LaneTransport,
+        group_size: usize,
+    ) -> anyhow::Result<CommLanes> {
         assert!(n >= 1, "comm lanes need at least one worker");
+        validate_group_size(n, group_size)?;
+        let hier = group_size >= 2;
         let mut codec = None;
         let (rings, stars): (Vec<LaneRing>, Vec<LaneStar>) = match transport {
             LaneTransport::Channel => (
-                ring(n).into_iter().map(LaneRing::Channel).collect(),
+                if hier {
+                    hier_ring(n, group_size)?
+                        .into_iter()
+                        .map(LaneRing::ChannelHier)
+                        .collect()
+                } else {
+                    ring(n).into_iter().map(LaneRing::Channel).collect()
+                },
                 star(n).into_iter().map(LaneStar::Channel).collect(),
             ),
             LaneTransport::Socket(wire_cfg) => {
                 let timeout = crate::comm::socket::default_timeout()?;
                 let stats = crate::comm::codec::CodecStats::new();
-                let mesh = (
+                let rings = if hier {
+                    crate::comm::socket::local_hier_ring(
+                        n, group_size, timeout, wire_cfg, &stats,
+                    )?
+                    .into_iter()
+                    .map(LaneRing::SocketHier)
+                    .collect()
+                } else {
                     crate::comm::socket::local_ring(n, timeout, wire_cfg, &stats)?
                         .into_iter()
                         .map(LaneRing::Socket)
-                        .collect(),
+                        .collect()
+                };
+                let mesh = (
+                    rings,
                     crate::comm::socket::local_star(n, timeout, wire_cfg, &stats)?
                         .into_iter()
                         .map(LaneStar::Socket)
@@ -932,5 +1138,175 @@ mod tests {
             buf
         });
         assert_eq!(results[0], vec![1.5, -2.0]);
+    }
+
+    #[test]
+    fn group_size_validation_accepts_flat_and_exact_tilings() {
+        for (n, g) in [(1, 0), (4, 0), (4, 1), (4, 2), (8, 2), (8, 4), (16, 4), (64, 8)] {
+            validate_group_size(n, g).unwrap_or_else(|e| panic!("n={n} g={g}: {e:#}"));
+        }
+    }
+
+    #[test]
+    fn group_size_validation_rejects_bad_tilings_with_a_remedy() {
+        // does not divide
+        let e = format!("{:#}", validate_group_size(12, 8).unwrap_err());
+        assert!(e.contains("does not divide"), "{e}");
+        assert!(e.contains("flat ring"), "remedy named: {e}");
+        // a single group: no leader ring
+        let e = format!("{:#}", validate_group_size(4, 4).unwrap_err());
+        assert!(e.contains("single group"), "{e}");
+        assert!(e.contains("at least 2 groups"), "{e}");
+        // trivially degenerate
+        assert!(validate_group_size(3, 2).is_err());
+    }
+
+    #[test]
+    fn hier_leader_preserves_the_flat_cyclic_rotation() {
+        let (n, g) = (8usize, 4usize);
+        for t in 0..20u64 {
+            let (grp, member) = hier_leader(t, n, g);
+            assert_eq!(grp * g + member, (t % n as u64) as usize, "t={t}");
+            assert!(grp < n / g && member < g);
+        }
+        // flat group size 1: member is always 0, group is the leader
+        assert_eq!(hier_leader(5, 4, 1), (1, 0));
+    }
+
+    /// Run `f(node, w)` on one thread per hier node, results in worker
+    /// order.
+    fn on_hier<T: Send>(
+        n: usize,
+        g: usize,
+        f: impl Fn(&HierRingNode, usize) -> T + Sync,
+    ) -> Vec<T> {
+        let nodes = hier_ring(n, g).expect("valid tiling");
+        std::thread::scope(|s| {
+            let handles: Vec<_> = nodes
+                .into_iter()
+                .map(|node| {
+                    let f = &f;
+                    s.spawn(move || f(&node, node.id))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("worker")).collect()
+        })
+    }
+
+    #[test]
+    fn hier_ring_allreduce_matches_the_flat_sum_across_shapes() {
+        for (n, g) in [(4usize, 2usize), (8, 2), (8, 4), (16, 4)] {
+            for len in [0usize, 1, 3, g - 1, n - 1, n, 4 * n + 3] {
+                let mut rng = Rng::new((n * 100 + g * 10 + len) as u64);
+                let inputs: Vec<Vec<f32>> = (0..n)
+                    .map(|_| {
+                        let mut v = vec![0.0f32; len];
+                        rng.fill_normal(&mut v, 1.0);
+                        v
+                    })
+                    .collect();
+                let mut expect = vec![0.0f32; len];
+                for v in &inputs {
+                    for (e, &x) in expect.iter_mut().zip(v) {
+                        *e += x;
+                    }
+                }
+                let inputs_ref = &inputs;
+                let results = on_hier(n, g, |node, w| {
+                    let mut buf = inputs_ref[w].clone();
+                    node.allreduce_sum(&mut buf);
+                    buf
+                });
+                for (w, r) in results.iter().enumerate() {
+                    if let Err(i) = allclose(r, &expect, 1e-5, 1e-5) {
+                        panic!("n={n} g={g} len={len} worker {w} coord {i}");
+                    }
+                }
+                // every worker ends bit-identical: the broadcast copies
+                // the leader's buffer verbatim
+                for r in &results[1..] {
+                    assert_eq!(r, &results[0], "n={n} g={g} len={len}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hier_ring_avg_divides_by_global_n() {
+        let (n, g) = (8, 4);
+        let results = on_hier(n, g, |node, w| {
+            let mut buf = vec![(w + 1) as f32; 12];
+            node.allreduce_avg(&mut buf);
+            buf
+        });
+        // avg of 1..=8 = 4.5 on every worker
+        for r in &results {
+            assert!(r.iter().all(|&v| (v - 4.5).abs() < 1e-5), "{r:?}");
+        }
+    }
+
+    #[test]
+    fn hier_ring_is_deterministic_across_runs() {
+        let run = || {
+            on_hier(8, 2, |node, w| {
+                let mut buf: Vec<f32> = (0..29)
+                    .map(|i| ((w * 29 + i) as f32 * 0.3).cos())
+                    .collect();
+                node.allreduce_avg(&mut buf);
+                buf
+            })
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn hier_ring_rejects_invalid_tilings() {
+        assert!(hier_ring(12, 8).is_err());
+        assert!(hier_ring(4, 4).is_err(), "single group has no leader ring");
+        assert!(hier_ring(8, 1).is_err(), "flat sizes belong to ring()");
+    }
+
+    #[test]
+    fn hier_lanes_match_flat_lanes_within_tolerance() {
+        // Same data through the flat and hierarchical channel lanes: the
+        // reduction *order* differs (per-group first), so values agree to
+        // the backend-parity tolerance, not bitwise.
+        let (n, g) = (8usize, 2usize);
+        let len = 37;
+        let mut rng = Rng::new(99);
+        let inputs: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let mut v = vec![0.0f32; len];
+                rng.fill_normal(&mut v, 1.0);
+                v
+            })
+            .collect();
+        let flat = CommLanes::new(n);
+        let hier = CommLanes::with_topology(n, LaneTransport::Channel, g).expect("hier lanes");
+        for lanes in [&flat, &hier] {
+            lanes.submit(
+                inputs
+                    .iter()
+                    .map(|v| CommJob::RingAvg { bucket: 1, buf: v.clone() })
+                    .collect(),
+            );
+        }
+        match (flat.wait(), hier.wait()) {
+            (
+                CollectiveResult::Reduced { vals: a, .. },
+                CollectiveResult::Reduced { vals: b, .. },
+            ) => {
+                if let Err(i) = allclose(&a, &b, 1e-5, 1e-6) {
+                    panic!("flat vs hier diverge at coord {i}");
+                }
+            }
+            other => panic!("expected two ring results, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn lanes_reject_a_bad_group_size() {
+        let err = CommLanes::with_topology(6, LaneTransport::Channel, 4).unwrap_err();
+        assert!(format!("{err:#}").contains("does not divide"), "{err:#}");
     }
 }

@@ -658,6 +658,13 @@ fn receiver_loop(
 pub struct SocketRingNode {
     pub id: usize,
     pub n: usize,
+    /// Hierarchy level of this ring's dense traffic. Level 0 (flat rings
+    /// and intra-group rings) frames chunks as the legacy `DenseChunk` —
+    /// byte-identical to wire codec v3 — while uplink rings (level >= 1)
+    /// carry the level tag next to the bucket id (`DenseChunkLvl`), so a
+    /// frame that strays across levels is rejected at the tag, not
+    /// silently reduced into the wrong collective.
+    level: u8,
     tx_right: Option<FramedSender>,
     rx_left: Option<FramedReceiver>,
 }
@@ -696,9 +703,18 @@ impl SocketRingNode {
         SocketRingNode {
             id,
             n,
+            level: 0,
             tx_right,
             rx_left,
         }
+    }
+
+    /// Re-tag this ring at a hierarchy level. Uplink rings run at level
+    /// >= 1 and frame their dense chunks as `DenseChunkLvl` (wire codec
+    /// v4); level 0 keeps the legacy `DenseChunk` framing byte-for-byte.
+    pub fn at_level(mut self, level: u8) -> SocketRingNode {
+        self.level = level;
+        self
     }
 
     fn send_right(&self, msg: WireMsg) -> anyhow::Result<()> {
@@ -715,27 +731,39 @@ impl SocketRingNode {
         buf: &mut [f32],
         finish: impl Fn(&mut [f32]),
     ) -> anyhow::Result<()> {
-        let (id, n) = (self.id, self.n);
+        let (id, n, level) = (self.id, self.n, self.level);
         let tx = &self.tx_right;
         let rx = &mut self.rx_left;
         let mut send = |chunk: &[f32]| -> anyhow::Result<()> {
-            ring_send(
-                tx,
-                id,
-                n,
-                WireMsg::DenseChunk {
-                    bucket,
-                    vals: chunk.to_vec(),
-                },
-            )
+            let vals = chunk.to_vec();
+            let msg = if level == 0 {
+                WireMsg::DenseChunk { bucket, vals }
+            } else {
+                WireMsg::DenseChunkLvl { level, bucket, vals }
+            };
+            ring_send(tx, id, n, msg)
         };
         let mut recv = || -> anyhow::Result<Vec<f32>> {
+            // Several per-bucket collectives can be in flight on one
+            // stream (the bucketed exchange); a tag mismatch means the
+            // peer is executing a different collective — mis-framed
+            // beyond recovery, fail at frame one. The level tag guards
+            // the same way across hierarchy levels.
             match ring_recv(rx, id, n)? {
-                WireMsg::DenseChunk { bucket: got, vals } => {
-                    // Several per-bucket collectives can be in flight on
-                    // one stream (the bucketed exchange); a tag mismatch
-                    // means the peer is executing a different collective
-                    // — mis-framed beyond recovery, fail at frame one.
+                WireMsg::DenseChunk { bucket: got, vals } if level == 0 => {
+                    anyhow::ensure!(
+                        got == bucket,
+                        "ring node {id}/{n}: bucket tag mismatch: executing bucket \
+                         {bucket} but received a chunk for bucket {got} (peer out of sync)"
+                    );
+                    Ok(vals)
+                }
+                WireMsg::DenseChunkLvl { level: got_lvl, bucket: got, vals } if level >= 1 => {
+                    anyhow::ensure!(
+                        got_lvl == level,
+                        "ring node {id}/{n}: level tag mismatch: executing level \
+                         {level} but received a chunk for level {got_lvl} (peer out of sync)"
+                    );
                     anyhow::ensure!(
                         got == bucket,
                         "ring node {id}/{n}: bucket tag mismatch: executing bucket \
@@ -744,7 +772,7 @@ impl SocketRingNode {
                     Ok(vals)
                 }
                 other => anyhow::bail!(
-                    "ring node {id}/{n}: expected a dense chunk, got {other:?}"
+                    "ring node {id}/{n}: expected a level-{level} dense chunk, got {other:?}"
                 ),
             }
         };
@@ -832,6 +860,151 @@ impl SocketRingNode {
             }
         }
         Ok(min)
+    }
+}
+
+/// One worker's endpoints in the two-level ring-of-rings — the socket
+/// counterpart of `comm::parallel::HierRingNode`, with the identical
+/// three-phase dataflow (intra-group sum → leader ring with the finish
+/// → chain broadcast down the group). Intra-group traffic stays on the
+/// legacy level-0 `DenseChunk` framing; the uplink ring runs at level 1
+/// and tags every frame (`DenseChunkLvl`, wire codec v4).
+pub struct SocketHierRingNode {
+    /// Global worker id in `0..n`.
+    pub id: usize,
+    pub n: usize,
+    pub group_size: usize,
+    /// Intra-group ring; its `id` is this worker's member index.
+    intra: SocketRingNode,
+    /// Leader ring over the uplink (member 0 only); its `id` is the
+    /// group index and it runs at level 1.
+    up: Option<SocketRingNode>,
+}
+
+impl SocketHierRingNode {
+    fn allreduce_with(
+        &mut self,
+        bucket: u32,
+        buf: &mut [f32],
+        finish: impl Fn(&mut [f32]),
+    ) -> anyhow::Result<()> {
+        // Phase 1: intra-group sum — every member ends with the group sum.
+        self.intra.allreduce_with(bucket, buf, |_| {})?;
+        // Phase 2: leader ring over the uplink carries the group sums;
+        // `finish` lands exactly once per chunk, on its owning leader.
+        if let Some(up) = &mut self.up {
+            up.allreduce_with(bucket, buf, &finish)?;
+        }
+        // Phase 3: the finished result flows down the group chain
+        // (leader → member 1 → … → member m−1 over the intra right
+        // links). A zero-length buffer moved no chunks above and moves
+        // no broadcast either.
+        if buf.is_empty() {
+            return Ok(());
+        }
+        if self.up.is_some() {
+            self.intra.send_right(WireMsg::DenseChunk {
+                bucket,
+                vals: buf.to_vec(),
+            })?;
+        } else {
+            let (id, n, m) = (self.intra.id, self.intra.n, self.group_size);
+            let incoming = match self.intra.recv_left()? {
+                WireMsg::DenseChunk { bucket: got, vals } => {
+                    anyhow::ensure!(
+                        got == bucket,
+                        "hier ring member {id}/{m}: bucket tag mismatch on the group \
+                         broadcast: executing bucket {bucket} but received bucket {got} \
+                         (peer out of sync)"
+                    );
+                    vals
+                }
+                other => anyhow::bail!(
+                    "hier ring member {id}/{n}: expected the group broadcast, got {other:?}"
+                ),
+            };
+            anyhow::ensure!(
+                incoming.len() == buf.len(),
+                "hier ring member {id}/{m}: group broadcast size mismatch: expected \
+                 {} values, got {} (peer out of sync)",
+                buf.len(),
+                incoming.len()
+            );
+            buf.copy_from_slice(&incoming);
+            if self.intra.id + 1 < self.group_size {
+                self.intra.send_right(WireMsg::DenseChunk {
+                    bucket,
+                    vals: incoming,
+                })?;
+            }
+        }
+        Ok(())
+    }
+
+    /// In-place sum-all-reduce over all `n` workers.
+    pub fn allreduce_sum(&mut self, buf: &mut [f32]) -> anyhow::Result<()> {
+        self.allreduce_with(0, buf, |_| {})
+    }
+
+    /// In-place average-all-reduce (the leader ring applies the global
+    /// 1/n scale once per chunk). Monolithic collectives carry bucket
+    /// tag 0.
+    pub fn allreduce_avg(&mut self, buf: &mut [f32]) -> anyhow::Result<()> {
+        self.allreduce_avg_bucket(0, buf)
+    }
+
+    /// Bucket-tagged average-all-reduce (see
+    /// [`SocketRingNode::allreduce_avg_bucket`] for the tagging
+    /// rationale — here the tag additionally rides the uplink's level-1
+    /// frames and the group broadcast).
+    pub fn allreduce_avg_bucket(&mut self, bucket: u32, buf: &mut [f32]) -> anyhow::Result<()> {
+        let inv = 1.0 / self.n as f32;
+        self.allreduce_with(bucket, buf, |chunk| {
+            chunk.iter_mut().for_each(|v| *v *= inv);
+        })
+    }
+
+    /// Broadcast the step leader's index set to every worker across both
+    /// levels: the leader's own group circulates it on their intra ring,
+    /// the group leaders carry it around the uplink ring, and the other
+    /// groups flow it down from their group leader. Deterministic given
+    /// `(leader, rank)`, so every node knows its role with no extra
+    /// control traffic.
+    pub fn broadcast_indices(
+        &mut self,
+        leader: usize,
+        own: Option<&[u32]>,
+    ) -> anyhow::Result<Vec<u32>> {
+        assert!(leader < self.n, "leader {leader} out of range for n={}", self.n);
+        let m = self.group_size;
+        let (leader_grp, leader_member) = (leader / m, leader % m);
+        let grp = self.id / m;
+        let mut set: Option<Vec<u32>> = None;
+        if grp == leader_grp {
+            set = Some(self.intra.broadcast_indices(leader_member, own)?);
+        }
+        if let Some(up) = &mut self.up {
+            set = Some(up.broadcast_indices(leader_grp, set.as_deref())?);
+        }
+        if grp != leader_grp {
+            set = Some(self.intra.broadcast_indices(0, set.as_deref())?);
+        }
+        Ok(set.expect("every node is covered by one of the broadcast phases"))
+    }
+
+    /// Fleet-wide resume-point agreement across both levels: an
+    /// intra-group min-reduce, an uplink min-reduce over the group
+    /// leaders, then a second intra pass seeded with the leader's global
+    /// minimum — which is <= every member's group minimum, so the
+    /// group-wise min of the second pass IS the global minimum on every
+    /// node. Reuses the flat `Resume` frames; no new wire message.
+    pub fn resume_min_reduce(&mut self, own: u64) -> anyhow::Result<u64> {
+        let group_min = self.intra.resume_min_reduce(own)?;
+        let seeded = match &mut self.up {
+            Some(up) => up.resume_min_reduce(group_min)?,
+            None => group_min,
+        };
+        self.intra.resume_min_reduce(seeded)
     }
 }
 
@@ -989,6 +1162,45 @@ pub fn local_ring(
         .collect())
 }
 
+/// Build the in-process two-level TCP mesh: one intra ring per group of
+/// `group_size` consecutive workers, one level-1 uplink ring over the
+/// group leaders (workers `0, group_size, 2·group_size, …`) — the
+/// socket counterpart of `comm::parallel::hier_ring`, under the same
+/// tiling validation.
+pub fn local_hier_ring(
+    n: usize,
+    group_size: usize,
+    timeout: Duration,
+    wire_cfg: WireCodecConfig,
+    stats: &CodecStats,
+) -> anyhow::Result<Vec<SocketHierRingNode>> {
+    crate::comm::parallel::validate_group_size(n, group_size)?;
+    anyhow::ensure!(
+        group_size >= 2,
+        "local_hier_ring: group size {group_size} selects the flat ring — build \
+         `local_ring({n})` instead"
+    );
+    let m = group_size;
+    let ngroups = n / m;
+    let mut uplink: Vec<Option<SocketRingNode>> = local_ring(ngroups, timeout, wire_cfg, stats)?
+        .into_iter()
+        .map(|r| Some(r.at_level(1)))
+        .collect();
+    let mut out = Vec::with_capacity(n);
+    for grp in 0..ngroups {
+        for (j, intra) in local_ring(m, timeout, wire_cfg, stats)?.into_iter().enumerate() {
+            out.push(SocketHierRingNode {
+                id: grp * m + j,
+                n,
+                group_size: m,
+                intra,
+                up: if j == 0 { uplink[grp].take() } else { None },
+            });
+        }
+    }
+    Ok(out)
+}
+
 /// Build an in-process TCP gather star rooted at worker 0.
 pub fn local_star(
     n: usize,
@@ -1126,6 +1338,71 @@ fn advance_handshake(p: &mut PendingHandshake) -> anyhow::Result<Option<WireMsg>
     }
 }
 
+/// The rendezvous accept loop shared by the flat and hierarchical mesh:
+/// drain the listener without blocking, advance every pending handshake
+/// concurrently, and hand each completed Hello (with its now-blocking
+/// stream) to `classify`, which slots it and returns the number of
+/// inbound links filled so far. A connection that dies or mis-frames
+/// mid-handshake is dropped without failing the rendezvous; a rogue
+/// connector that never completes its Hello occupies one pending slot
+/// until the deadline.
+fn drain_rendezvous(
+    rank: usize,
+    n: usize,
+    listener: &TcpListener,
+    deadline: Instant,
+    expected: usize,
+    mut classify: impl FnMut(WireMsg, TcpStream) -> anyhow::Result<usize>,
+) -> anyhow::Result<()> {
+    use anyhow::Context;
+    let mut pending: Vec<PendingHandshake> = Vec::new();
+    listener
+        .set_nonblocking(true)
+        .context("nonblocking rendezvous accept")?;
+    let mut got = 0usize;
+    while got < expected {
+        // Drain the accept queue without blocking.
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nodelay(true)?;
+                    stream
+                        .set_nonblocking(true)
+                        .context("nonblocking handshake read")?;
+                    pending.push(PendingHandshake { stream, buf: Vec::new(), target: 4 });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) => return Err(anyhow::Error::from(e).context("rendezvous accept")),
+            }
+        }
+        // Advance every pending handshake; none can block the others.
+        let mut i = 0;
+        while i < pending.len() {
+            match advance_handshake(&mut pending[i]) {
+                Ok(None) => i += 1,
+                Ok(Some(hello)) => {
+                    let p = pending.swap_remove(i);
+                    p.stream.set_nonblocking(false)?;
+                    got = classify(hello, p.stream)?;
+                }
+                Err(_) => {
+                    // dead or mis-framed mid-handshake: not a peer
+                    pending.swap_remove(i);
+                }
+            }
+        }
+        if got < expected {
+            anyhow::ensure!(
+                Instant::now() < deadline,
+                "rank {rank}: rendezvous timed out with {got}/{expected} inbound \
+                 connections — are all {n} nodes running with the same --peers list?"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+    Ok(())
+}
+
 /// Form this rank's ring + star endpoints against a static peer list
 /// (`peers[r]` is rank r's bind address; the coordinator/star root is
 /// rank 0). `listener` must already be bound to `peers[rank]` — binding
@@ -1234,94 +1511,62 @@ pub fn form_mesh_with(
     let mut ring_rx: Option<FramedReceiver> = None;
     let mut star_rx: Vec<Option<FramedReceiver>> = (1..n).map(|_| None).collect();
     let expected = 1 + if rank == 0 { n - 1 } else { 0 };
-    let mut pending: Vec<PendingHandshake> = Vec::new();
-    listener
-        .set_nonblocking(true)
-        .context("nonblocking rendezvous accept")?;
-    loop {
-        let got = ring_rx.iter().count() + star_rx.iter().filter(|r| r.is_some()).count();
-        if got == expected {
-            break;
-        }
-        // Drain the accept queue without blocking.
-        loop {
-            match listener.accept() {
-                Ok((stream, _)) => {
-                    stream.set_nodelay(true)?;
-                    stream
-                        .set_nonblocking(true)
-                        .context("nonblocking handshake read")?;
-                    pending.push(PendingHandshake { stream, buf: Vec::new(), target: 4 });
-                }
-                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
-                Err(e) => return Err(anyhow::Error::from(e).context("rendezvous accept")),
+    drain_rendezvous(rank, n, listener, deadline, expected, |hello, stream| {
+        match hello {
+            WireMsg::Hello {
+                rank: from,
+                purpose: Purpose::Ring,
+                codec: peer_codec,
+            } => {
+                anyhow::ensure!(
+                    from as usize == left,
+                    "rank {rank}: ring hello from rank {from}, expected left \
+                     neighbor {left} — check that every node got the same \
+                     --peers list"
+                );
+                check_peer_codec(rank, from as usize, peer_codec, wire_cfg, heartbeat)?;
+                // newest wins: a duplicate means the peer
+                // reconnected and the old stream is stale
+                ring_rx = Some(mk_rx(stream)?);
             }
-        }
-        // Advance every pending handshake; none can block the others.
-        let mut i = 0;
-        while i < pending.len() {
-            match advance_handshake(&mut pending[i]) {
-                Ok(None) => i += 1,
-                Ok(Some(hello)) => {
-                    let p = pending.swap_remove(i);
-                    p.stream.set_nonblocking(false)?;
-                    match hello {
-                        WireMsg::Hello {
-                            rank: from,
-                            purpose: Purpose::Ring,
-                            codec: peer_codec,
-                        } => {
-                            anyhow::ensure!(
-                                from as usize == left,
-                                "rank {rank}: ring hello from rank {from}, expected left \
-                                 neighbor {left} — check that every node got the same \
-                                 --peers list"
-                            );
-                            check_peer_codec(rank, from as usize, peer_codec, wire_cfg, heartbeat)?;
-                            // newest wins: a duplicate means the peer
-                            // reconnected and the old stream is stale
-                            ring_rx = Some(mk_rx(p.stream)?);
-                        }
-                        WireMsg::Hello {
-                            rank: from,
-                            purpose: Purpose::Star,
-                            codec: peer_codec,
-                        } => {
-                            let from = from as usize;
-                            anyhow::ensure!(
-                                rank == 0,
-                                "rank {rank}: unexpected star uplink from rank {from} \
-                                 (only rank 0 roots the star)"
-                            );
-                            anyhow::ensure!(
-                                (1..n).contains(&from),
-                                "rank 0: star hello from invalid rank {from}"
-                            );
-                            check_peer_codec(rank, from, peer_codec, wire_cfg, heartbeat)?;
-                            star_rx[from - 1] = Some(mk_rx(p.stream)?);
-                        }
-                        // A first frame that is not a Hello is not a
-                        // peer (rogue connector, stale stream): drop it
-                        // without failing the rendezvous.
-                        _ => {}
-                    }
-                }
-                Err(_) => {
-                    // dead or mis-framed mid-handshake: not a peer
-                    pending.swap_remove(i);
-                }
+            WireMsg::Hello {
+                rank: from,
+                purpose: Purpose::Star,
+                codec: peer_codec,
+            } => {
+                let from = from as usize;
+                anyhow::ensure!(
+                    rank == 0,
+                    "rank {rank}: unexpected star uplink from rank {from} \
+                     (only rank 0 roots the star)"
+                );
+                anyhow::ensure!(
+                    (1..n).contains(&from),
+                    "rank 0: star hello from invalid rank {from}"
+                );
+                check_peer_codec(rank, from, peer_codec, wire_cfg, heartbeat)?;
+                star_rx[from - 1] = Some(mk_rx(stream)?);
             }
+            WireMsg::Hello {
+                rank: from,
+                purpose: Purpose::Uplink,
+                ..
+            } => {
+                // A hier-mesh peer dialed into a flat mesh: a config
+                // split this loud is unrecoverable — fail with the fix.
+                anyhow::bail!(
+                    "rank {rank}: unexpected hierarchical uplink hello from rank \
+                     {from} — this node runs the flat ring; check that every node \
+                     got the same --group-size"
+                );
+            }
+            // A first frame that is not a Hello is not a
+            // peer (rogue connector, stale stream): drop it
+            // without failing the rendezvous.
+            _ => {}
         }
-        let got = ring_rx.iter().count() + star_rx.iter().filter(|r| r.is_some()).count();
-        if got < expected {
-            anyhow::ensure!(
-                Instant::now() < deadline,
-                "rank {rank}: rendezvous timed out with {got}/{expected} inbound \
-                 connections — are all {n} nodes running with the same --peers list?"
-            );
-            std::thread::sleep(Duration::from_millis(5));
-        }
-    }
+        Ok(ring_rx.iter().count() + star_rx.iter().filter(|r| r.is_some()).count())
+    })?;
 
     let ring = SocketRingNode::new(
         rank,
@@ -1344,6 +1589,221 @@ pub fn form_mesh_with(
         )
     };
     Ok((ring, star))
+}
+
+/// [`form_mesh`] for the two-level ring-of-rings: every rank joins its
+/// group's intra ring (ranks `grp·m .. grp·m+m`, member index `rank %
+/// m`), group leaders (`rank % m == 0`) additionally join the level-1
+/// uplink ring, and the gather star stays rooted at rank 0 exactly like
+/// the flat mesh. Uplink connections introduce themselves with
+/// `Purpose::Uplink`, and every hier-mesh peer must speak wire codec v4
+/// (the level-tagged frames) — a config split between flat and
+/// hierarchical nodes fails the rendezvous with the fix named.
+pub fn form_hier_mesh_with(
+    rank: usize,
+    peers: &[String],
+    group_size: usize,
+    listener: &TcpListener,
+    timeout: Duration,
+    wire_cfg: WireCodecConfig,
+    stats: &CodecStats,
+    heartbeat: Option<Duration>,
+) -> anyhow::Result<(SocketHierRingNode, SocketStarNode)> {
+    use anyhow::Context;
+    let n = peers.len();
+    assert!(rank < n);
+    crate::comm::parallel::validate_group_size(n, group_size)?;
+    anyhow::ensure!(
+        group_size >= 2,
+        "form_hier_mesh: group size {group_size} selects the flat ring — call \
+         `form_mesh` instead"
+    );
+    let m = group_size;
+    let ngroups = n / m;
+    let (grp, member) = (rank / m, rank % m);
+    let deadline = Instant::now() + timeout;
+    let mk_codec = || FrameCodec::new(wire_cfg, stats.clone());
+    let mk_rx = |s: TcpStream| -> anyhow::Result<FramedReceiver> {
+        match heartbeat {
+            Some(hb) => FramedReceiver::with_heartbeat(s, timeout, mk_codec(), hb),
+            None => FramedReceiver::new(s, timeout, mk_codec()),
+        }
+    };
+    let mk_tx = |s: TcpStream| -> anyhow::Result<FramedSender> {
+        match heartbeat {
+            Some(hb) => FramedSender::with_heartbeat(s, timeout, mk_codec(), hb),
+            None => FramedSender::new(s, timeout, mk_codec()),
+        }
+    };
+    let say_hello = |addr: &str, purpose: Purpose, what: &str| -> anyhow::Result<TcpStream> {
+        let mut s = connect_with_retry(addr, deadline)
+            .with_context(|| format!("rank {rank}: connect {what}"))?;
+        wire::write_msg(
+            &mut s,
+            &WireMsg::Hello {
+                rank: rank as u32,
+                purpose,
+                codec: wire::WIRE_CODEC_VERSION,
+            },
+        )?;
+        Ok(s)
+    };
+
+    // Outbound: intra ring-right always; leaders also dial the next
+    // group's leader on the uplink; every rank > 0 dials the star root.
+    let intra_right = grp * m + (member + 1) % m;
+    let intra_tx_stream = say_hello(
+        &peers[intra_right],
+        Purpose::Ring,
+        &format!("intra ring-right to rank {intra_right}"),
+    )?;
+    let mut up_tx_stream = if member == 0 {
+        let up_right = ((grp + 1) % ngroups) * m;
+        Some(say_hello(
+            &peers[up_right],
+            Purpose::Uplink,
+            &format!("uplink ring-right to leader rank {up_right}"),
+        )?)
+    } else {
+        None
+    };
+    let mut star_tx_stream = if rank > 0 {
+        Some(say_hello(&peers[0], Purpose::Star, "star uplink to rank 0")?)
+    } else {
+        None
+    };
+
+    // Inbound: intra-left always, uplink-left on leaders, the full star
+    // fan-in on rank 0.
+    let intra_left = grp * m + (member + m - 1) % m;
+    let up_left = ((grp + ngroups - 1) % ngroups) * m;
+    let mut intra_rx: Option<FramedReceiver> = None;
+    let mut up_rx: Option<FramedReceiver> = None;
+    let mut star_rx: Vec<Option<FramedReceiver>> = (1..n).map(|_| None).collect();
+    let expected = 1
+        + usize::from(member == 0)
+        + if rank == 0 { n - 1 } else { 0 };
+    drain_rendezvous(rank, n, listener, deadline, expected, |hello, stream| {
+        match hello {
+            WireMsg::Hello {
+                rank: from,
+                purpose: Purpose::Ring,
+                codec: peer_codec,
+            } => {
+                anyhow::ensure!(
+                    from as usize == intra_left,
+                    "rank {rank}: intra-ring hello from rank {from}, expected left \
+                     group member {intra_left} — check that every node got the same \
+                     --peers list and --group-size"
+                );
+                check_peer_codec(rank, from as usize, peer_codec, wire_cfg, heartbeat)?;
+                check_hier_peer_codec(rank, from as usize, peer_codec)?;
+                intra_rx = Some(mk_rx(stream)?);
+            }
+            WireMsg::Hello {
+                rank: from,
+                purpose: Purpose::Uplink,
+                codec: peer_codec,
+            } => {
+                anyhow::ensure!(
+                    member == 0,
+                    "rank {rank}: unexpected uplink hello from rank {from} — only \
+                     group leaders (rank % {m} == 0) ride the leader ring"
+                );
+                anyhow::ensure!(
+                    from as usize == up_left,
+                    "rank {rank}: uplink hello from rank {from}, expected the left \
+                     leader {up_left} — check that every node got the same --peers \
+                     list and --group-size"
+                );
+                check_peer_codec(rank, from as usize, peer_codec, wire_cfg, heartbeat)?;
+                check_hier_peer_codec(rank, from as usize, peer_codec)?;
+                up_rx = Some(mk_rx(stream)?);
+            }
+            WireMsg::Hello {
+                rank: from,
+                purpose: Purpose::Star,
+                codec: peer_codec,
+            } => {
+                let from = from as usize;
+                anyhow::ensure!(
+                    rank == 0,
+                    "rank {rank}: unexpected star uplink from rank {from} \
+                     (only rank 0 roots the star)"
+                );
+                anyhow::ensure!(
+                    (1..n).contains(&from),
+                    "rank 0: star hello from invalid rank {from}"
+                );
+                check_peer_codec(rank, from, peer_codec, wire_cfg, heartbeat)?;
+                check_hier_peer_codec(rank, from, peer_codec)?;
+                star_rx[from - 1] = Some(mk_rx(stream)?);
+            }
+            // A first frame that is not a Hello is not a peer (rogue
+            // connector, stale stream): drop it without failing the
+            // rendezvous.
+            _ => {}
+        }
+        Ok(intra_rx.iter().count()
+            + up_rx.iter().count()
+            + star_rx.iter().filter(|r| r.is_some()).count())
+    })?;
+
+    let intra = SocketRingNode::new(
+        member,
+        m,
+        Some(mk_tx(intra_tx_stream)?),
+        Some(intra_rx.expect("intra inbound link present")),
+    );
+    let up = if member == 0 {
+        Some(
+            SocketRingNode::new(
+                grp,
+                ngroups,
+                Some(mk_tx(up_tx_stream.take().expect("leader uplink stream"))?),
+                Some(up_rx.expect("uplink inbound link present")),
+            )
+            .at_level(1),
+        )
+    } else {
+        None
+    };
+    let ring = SocketHierRingNode {
+        id: rank,
+        n,
+        group_size: m,
+        intra,
+        up,
+    };
+    let star = if rank == 0 {
+        let rxs: Vec<FramedReceiver> = star_rx
+            .into_iter()
+            .map(|r| r.expect("star inbound links present"))
+            .collect();
+        SocketStarNode::new(0, n, None, Some(rxs))
+    } else {
+        SocketStarNode::new(
+            rank,
+            n,
+            Some(mk_tx(star_tx_stream.take().expect("worker star uplink"))?),
+            None,
+        )
+    };
+    Ok((ring, star))
+}
+
+/// The hier-mesh addendum to [`check_peer_codec`]: level-tagged dense
+/// frames (`DenseChunkLvl`) entered the wire at codec v4, so every
+/// member of a hierarchical mesh must speak it regardless of the
+/// compression configuration.
+fn check_hier_peer_codec(rank: usize, from: usize, peer_codec: u8) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        peer_codec >= 4,
+        "rank {rank}: peer rank {from} speaks wire codec v{peer_codec} but the \
+         hierarchical mesh's level-tagged frames need v4 — upgrade the peer or \
+         run flat with --group-size 0",
+    );
+    Ok(())
 }
 
 /// Reject a handshake from a peer whose wire codec is too old for this
@@ -1662,6 +2122,216 @@ mod tests {
         for r in &results {
             assert!(r.iter().all(|&v| (v - 2.5).abs() < 1e-6), "{r:?}");
         }
+    }
+
+    /// Run `f(node, w)` on one thread per hier socket ring node.
+    fn on_hier_ring<TOut: Send>(
+        n: usize,
+        g: usize,
+        f: impl Fn(&mut SocketHierRingNode, usize) -> TOut + Sync,
+    ) -> Vec<TOut> {
+        let nodes =
+            local_hier_ring(n, g, T, WireCodecConfig::off(), &CodecStats::new())
+                .expect("loopback hier ring");
+        std::thread::scope(|s| {
+            let handles: Vec<_> = nodes
+                .into_iter()
+                .map(|mut node| {
+                    let f = &f;
+                    s.spawn(move || {
+                        let id = node.id;
+                        f(&mut node, id)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("worker")).collect()
+        })
+    }
+
+    #[test]
+    fn socket_hier_ring_is_bit_identical_to_channel_hier_ring() {
+        for (n, g) in [(4usize, 2usize), (8, 2), (8, 4)] {
+            for len in [0usize, 1, 3, g - 1, n, 4 * n + 3] {
+                let mut rng = Rng::new((n * 31 + g * 7 + len) as u64);
+                let inputs: Vec<Vec<f32>> = (0..n)
+                    .map(|_| {
+                        let mut v = vec![0.0f32; len];
+                        rng.fill_normal(&mut v, 1.0);
+                        v
+                    })
+                    .collect();
+                let inputs_ref = &inputs;
+                // channel reference: the same three-phase schedule
+                let chan_nodes = parallel::hier_ring(n, g).expect("channel hier");
+                let expect: Vec<Vec<f32>> = std::thread::scope(|s| {
+                    let handles: Vec<_> = chan_nodes
+                        .into_iter()
+                        .map(|node| {
+                            s.spawn(move || {
+                                let mut buf = inputs_ref[node.id].clone();
+                                node.allreduce_avg(&mut buf);
+                                buf
+                            })
+                        })
+                        .collect();
+                    handles.into_iter().map(|h| h.join().unwrap()).collect()
+                });
+                let got = on_hier_ring(n, g, |node, w| {
+                    let mut buf = inputs_ref[w].clone();
+                    node.allreduce_avg(&mut buf).expect("socket hier allreduce");
+                    buf
+                });
+                // identical schedule + bit-exact wire → bit-identical
+                assert_eq!(got, expect, "n={n} g={g} len={len}");
+            }
+        }
+    }
+
+    #[test]
+    fn local_hier_ring_rejects_bad_tilings() {
+        let (cfg, stats) = (WireCodecConfig::off(), CodecStats::new());
+        for (n, g) in [(12usize, 8usize), (4, 4), (8, 1)] {
+            let err = local_hier_ring(n, g, T, cfg, &stats).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains("group size") || msg.contains("flat ring"),
+                "(n={n}, g={g}) -> {msg}"
+            );
+        }
+    }
+
+    #[test]
+    fn hier_broadcast_indices_reaches_every_node_across_levels() {
+        let (n, g) = (8usize, 2usize);
+        // leaders in the first group, mid-mesh, and the last member of
+        // the last group — every phase combination gets exercised
+        for leader in [0usize, 3, n - 1] {
+            let idx: Vec<u32> = vec![4, 8, 15, 16, 23, 42];
+            let idx_ref = &idx;
+            let got = on_hier_ring(n, g, |node, w| {
+                let own = (w == leader).then_some(idx_ref.as_slice());
+                node.broadcast_indices(leader, own).expect("hier broadcast")
+            });
+            for (w, got_idx) in got.iter().enumerate() {
+                assert_eq!(got_idx, idx_ref, "leader={leader} worker={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn hier_resume_min_reduce_agrees_on_the_fleet_minimum() {
+        let (n, g) = (8usize, 4usize);
+        // the fleet minimum lives on a non-leader member of group 1
+        let own: Vec<u64> = (0..n as u64).map(|r| 100 + r * 10).collect();
+        let mut own_vals = own.clone();
+        own_vals[6] = 3;
+        let own_ref = &own_vals;
+        let got = on_hier_ring(n, g, |node, w| {
+            node.resume_min_reduce(own_ref[w]).expect("hier resume reduce")
+        });
+        assert!(got.iter().all(|&m| m == 3), "{got:?}");
+    }
+
+    #[test]
+    fn multiprocess_hier_mesh_forms_on_threads() {
+        // The hierarchical rendezvous path (intra + uplink + star hello
+        // classification), exercised in one process with one thread per
+        // rank: 2 groups × 2 workers.
+        let (n, g) = (4usize, 2usize);
+        let listeners: Vec<TcpListener> = (0..n)
+            .map(|_| TcpListener::bind(("127.0.0.1", 0)).unwrap())
+            .collect();
+        let peers: Vec<String> = listeners
+            .iter()
+            .map(|l| l.local_addr().unwrap().to_string())
+            .collect();
+        let peers_ref = &peers;
+        let results: Vec<(Vec<f32>, Vec<u32>, u64)> = std::thread::scope(|s| {
+            let handles: Vec<_> = listeners
+                .into_iter()
+                .enumerate()
+                .map(|(rank, listener)| {
+                    s.spawn(move || {
+                        let (mut ring, mut star) = form_hier_mesh_with(
+                            rank,
+                            peers_ref,
+                            g,
+                            &listener,
+                            T,
+                            WireCodecConfig::off(),
+                            &CodecStats::new(),
+                            None,
+                        )
+                        .expect("hier mesh");
+                        let mut buf = vec![(rank + 1) as f32; 12];
+                        ring.allreduce_avg(&mut buf).expect("hier ring over mesh");
+                        let idx = ring
+                            .broadcast_indices(2, (rank == 2).then_some(&[7u32, 9][..]))
+                            .expect("hier broadcast over mesh");
+                        let resume = ring
+                            .resume_min_reduce(100 + rank as u64)
+                            .expect("hier resume over mesh");
+                        let sg = SparseGrad::new(4, vec![rank as u32], vec![1.0]);
+                        let gathered = star.gather(sg).expect("star over mesh");
+                        if rank == 0 {
+                            let all = gathered.expect("root sees all");
+                            assert_eq!(all.len(), n);
+                        }
+                        (buf, idx, resume)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("rank")).collect()
+        });
+        for (buf, idx, resume) in &results {
+            // avg of 1,2,3,4 = 2.5 on every rank
+            assert!(buf.iter().all(|&v| (v - 2.5).abs() < 1e-6), "{buf:?}");
+            assert_eq!(idx, &vec![7u32, 9]);
+            assert_eq!(*resume, 100);
+        }
+    }
+
+    #[test]
+    fn flat_mesh_rejects_a_hierarchical_peer_loudly() {
+        // A hier-mesh node (Purpose::Uplink hello) dials a flat-ring
+        // rank 0: the rendezvous must fail naming --group-size instead
+        // of hanging or silently dropping the peer.
+        let l0 = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let l1 = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let peers = vec![
+            l0.local_addr().unwrap().to_string(),
+            l1.local_addr().unwrap().to_string(),
+        ];
+        let addr0 = peers[0].clone();
+        let fake = std::thread::spawn(move || {
+            // absorb rank 0's ring-right connect so its handshake lands
+            let (held, _) = l1.accept().expect("accept rank 0");
+            let mut s = TcpStream::connect(addr0.as_str()).expect("dial rank 0");
+            wire::write_msg(
+                &mut s,
+                &WireMsg::Hello {
+                    rank: 1,
+                    purpose: Purpose::Uplink,
+                    codec: wire::WIRE_CODEC_VERSION,
+                },
+            )
+            .expect("uplink hello");
+            std::thread::sleep(Duration::from_millis(500));
+            drop(held);
+            drop(s);
+        });
+        let err = form_mesh(
+            0,
+            &peers,
+            &l0,
+            Duration::from_secs(5),
+            WireCodecConfig::off(),
+            &CodecStats::new(),
+        )
+        .expect_err("hier peer must be rejected by the flat mesh");
+        fake.join().expect("fake peer");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("--group-size"), "{msg}");
     }
 
     #[test]

@@ -19,6 +19,7 @@
 //! | 8   | `Ping`          | u32 seq                                                         |
 //! | 9   | `Pong`          | u32 seq                                                         |
 //! | 10  | `Resume`        | u32 rank, u64 step                                              |
+//! | 11  | `DenseChunkLvl` | u8 level, u32 bucket, u32 count, count × f32                    |
 //!
 //! Tags 5-7 are the **entropy stage** (`comm::codec`, wire codec v2):
 //! sparse index sets are strictly increasing by construction, so they
@@ -36,6 +37,17 @@
 //! step around a re-formed ring so every node rolls back to the global
 //! minimum before replaying. Control frames are tiny and latency-bound,
 //! so — like `Hello` — they are never packed or byte-compressed.
+//!
+//! Tag 11 is the **hierarchy level tag** (wire codec v4): the two-level
+//! ring-of-rings runs an intra-group ring and an inter-group leader ring
+//! over the uplink, and `DenseChunkLvl` stamps a level id next to the
+//! bucket id so the two streams can never be confused for one another —
+//! a mis-wired mesh is detected at the first frame. Level 0 (intra-group
+//! and flat-ring traffic) keeps shipping as the legacy `DenseChunk`
+//! (tag 1), byte-identical to v3 builds; only uplink frames (level >= 1)
+//! wear the new tag, so a flat ring's wire bytes are unchanged. `Hello`
+//! gains the `uplink` purpose byte (2) to classify leader-ring
+//! rendezvous connections.
 //!
 //! `DenseChunk` carries the ring reduce-scatter/all-gather payloads,
 //! `Sparse` the star-gather contributions, and the control tags the
@@ -87,10 +99,11 @@ pub const MAX_FRAME_BYTES: usize = 64 << 20;
 
 /// Wire codec version spoken by this build, carried in `Hello`. v1 is
 /// the raw tag set (1-4); v2 adds the packed/compressed tags (5-7); v3
-/// adds the liveness/recovery control tags (8-10). The v3 bump does not
-/// change the byte layout of any v1/v2 tag, so `off`-mode frames remain
-/// byte-identical to v2 builds.
-pub const WIRE_CODEC_VERSION: u8 = 3;
+/// adds the liveness/recovery control tags (8-10); v4 adds the
+/// hierarchy level tag (11) and the `uplink` Hello purpose. No bump
+/// changes the byte layout of an older tag, so `off`-mode flat-ring
+/// frames remain byte-identical to v1 builds.
+pub const WIRE_CODEC_VERSION: u8 = 4;
 
 /// What an inbound connection is for (field of [`WireMsg::Hello`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -99,6 +112,9 @@ pub enum Purpose {
     Ring,
     /// The peer is a star worker; this stream carries sparse gathers.
     Star,
+    /// The peer is our left neighbor on the inter-group leader ring
+    /// (v4); this stream carries level-tagged uplink chunks.
+    Uplink,
 }
 
 impl Purpose {
@@ -106,6 +122,7 @@ impl Purpose {
         match self {
             Purpose::Ring => 0,
             Purpose::Star => 1,
+            Purpose::Uplink => 2,
         }
     }
 
@@ -113,6 +130,7 @@ impl Purpose {
         match b {
             0 => Ok(Purpose::Ring),
             1 => Ok(Purpose::Star),
+            2 => Ok(Purpose::Uplink),
             other => anyhow::bail!("wire: unknown Hello purpose byte {other}"),
         }
     }
@@ -145,6 +163,12 @@ pub enum WireMsg {
     /// error-feedback snapshot); the ring min-reduces these so everyone
     /// replays from the same global step.
     Resume { rank: u32, step: u64 },
+    /// A hierarchical ring hop's dense payload (v4): like
+    /// [`WireMsg::DenseChunk`] but stamped with the topology level it
+    /// belongs to (1 = the inter-group leader ring over the uplink).
+    /// Level-0 traffic uses the legacy tag so flat rings stay
+    /// byte-identical across the version bump.
+    DenseChunkLvl { level: u8, bucket: u32, vals: Vec<f32> },
 }
 
 const TAG_DENSE: u8 = 1;
@@ -157,6 +181,7 @@ pub(crate) const TAG_COMPRESSED: u8 = 7;
 const TAG_PING: u8 = 8;
 const TAG_PONG: u8 = 9;
 const TAG_RESUME: u8 = 10;
+const TAG_DENSE_LVL: u8 = 11;
 
 fn put_u32(out: &mut Vec<u8>, v: u32) {
     out.extend_from_slice(&v.to_le_bytes());
@@ -198,6 +223,7 @@ pub fn frame_len(msg: &WireMsg) -> usize {
     4 + 1
         + match msg {
             WireMsg::DenseChunk { vals, .. } => 8 + 4 * vals.len(),
+            WireMsg::DenseChunkLvl { vals, .. } => 9 + 4 * vals.len(),
             WireMsg::Sparse { grad, .. } => 12 + 8 * grad.indices.len(),
             WireMsg::Hello { .. } => 6,
             WireMsg::Indices(idx) => 4 + 4 * idx.len(),
@@ -214,6 +240,14 @@ pub(crate) fn encode_body_into(msg: &WireMsg, packing: bool, out: &mut Vec<u8>) 
     match msg {
         WireMsg::DenseChunk { bucket, vals } => {
             out.push(TAG_DENSE);
+            put_u32(out, *bucket);
+            put_u32(out, vals.len() as u32);
+            put_f32s(out, vals);
+            false
+        }
+        WireMsg::DenseChunkLvl { level, bucket, vals } => {
+            out.push(TAG_DENSE_LVL);
+            out.push(*level);
             put_u32(out, *bucket);
             put_u32(out, vals.len() as u32);
             put_f32s(out, vals);
@@ -424,6 +458,15 @@ pub(crate) fn decode_body_uncompressed(body: &[u8]) -> anyhow::Result<WireMsg> {
             let vals = c.f32s(count)?;
             c.done()?;
             WireMsg::DenseChunk { bucket, vals }
+        }
+        TAG_DENSE_LVL => {
+            let level = c.u8()?;
+            let bucket = c.u32()?;
+            let count = c.u32()?;
+            let count = check_count(&c, count, 4, "dense element")?;
+            let vals = c.f32s(count)?;
+            c.done()?;
+            WireMsg::DenseChunkLvl { level, bucket, vals }
         }
         TAG_SPARSE => {
             let bucket = c.u32()?;
@@ -656,6 +699,33 @@ mod tests {
         roundtrip(WireMsg::Pong { seq: 12345 });
         roundtrip(WireMsg::Resume { rank: 0, step: 0 });
         roundtrip(WireMsg::Resume { rank: 63, step: u64::MAX });
+        roundtrip(hello(2, Purpose::Uplink));
+        roundtrip(WireMsg::DenseChunkLvl { level: 1, bucket: 0, vals: vec![] });
+        roundtrip(WireMsg::DenseChunkLvl {
+            level: u8::MAX,
+            bucket: u32::MAX,
+            vals: vec![0.5, -1.25],
+        });
+    }
+
+    #[test]
+    fn level_tags_survive_the_wire_and_stay_distinct_from_flat_frames() {
+        for level in [0u8, 1, 7] {
+            let msg = WireMsg::DenseChunkLvl { level, bucket: 3, vals: vec![2.0; 5] };
+            let frame = encode(&msg);
+            assert_eq!(frame[4], TAG_DENSE_LVL);
+            assert_eq!(frame[5], level, "level byte leads the body");
+            match decode_body(&frame[4..]).unwrap() {
+                WireMsg::DenseChunkLvl { level: got, bucket, vals } => {
+                    assert_eq!((got, bucket, vals.len()), (level, 3, 5));
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+        // a level-tagged frame never decodes as a flat DenseChunk, and a
+        // truncated one (missing the count) errors cleanly
+        let body = vec![TAG_DENSE_LVL, 1, 0, 0, 0, 0];
+        assert!(decode_body(&body).is_err());
     }
 
     #[test]

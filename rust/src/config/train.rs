@@ -113,6 +113,14 @@ pub struct TrainConfig {
     /// listener, agree on a resume point, roll the EF memory back, and
     /// replay — instead of failing the run. Inert on other backends.
     pub reconnect: bool,
+    /// Hierarchical ring-of-rings topology for the dense ring
+    /// collective on the pooled backends (pipelined/socket): workers
+    /// are partitioned into consecutive groups of `group_size`, each
+    /// group runs an intra ring, and the group leaders run a level-1
+    /// uplink ring. 0 (or 1) = flat ring. Must divide the worker count
+    /// and leave at least two groups (`comm::parallel::
+    /// validate_group_size` — the same rule simnet profiles enforce).
+    pub group_size: usize,
     /// Evaluate every `eval_every` steps (0 = never).
     pub eval_every: usize,
     /// Directory for artifacts (HLO + manifest).
@@ -142,6 +150,7 @@ impl Default for TrainConfig {
             wire_compression_sparse: "auto".into(),
             heartbeat_ms: 0,
             reconnect: false,
+            group_size: 0,
             eval_every: 0,
             artifacts_dir: "artifacts".into(),
         }
@@ -199,6 +208,7 @@ impl TrainConfig {
                 .to_string(),
             heartbeat_ms: doc.usize_or("train.heartbeat_ms", d.heartbeat_ms as usize) as u64,
             reconnect: doc.bool_or("train.reconnect", d.reconnect),
+            group_size: doc.usize_or("train.group_size", d.group_size),
             eval_every: doc.usize_or("train.eval_every", 0),
             artifacts_dir: doc.str_or("train.artifacts_dir", &d.artifacts_dir).to_string(),
         };
@@ -230,6 +240,10 @@ impl TrainConfig {
              scale is slower than the blocking-read timeout it is meant to beat",
             self.heartbeat_ms
         );
+        // Same tiling rule the simnet profiles enforce: a group size that
+        // doesn't divide the worker count (or leaves a single group) is a
+        // config error, not something to silently downgrade to a flat ring.
+        crate::comm::parallel::validate_group_size(self.workers, self.group_size)?;
         Ok(())
     }
 
@@ -370,6 +384,28 @@ mod tests {
         c.heartbeat_ms = 120_000;
         let err = c.validate().unwrap_err();
         assert!(err.to_string().contains("heartbeat_ms"), "{err}");
+    }
+
+    #[test]
+    fn group_size_from_toml_and_validation() {
+        assert_eq!(TrainConfig::default().group_size, 0);
+        let doc = TomlDoc::parse("[train]\nworkers = 8\ngroup_size = 2\n").unwrap();
+        let cfg = TrainConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.group_size, 2);
+        // A group size that doesn't tile the worker count is rejected at
+        // parse time, with the shared remedy wording.
+        let mut c = TrainConfig::default();
+        c.workers = 4;
+        c.group_size = 3;
+        let err = c.validate().unwrap_err();
+        assert!(err.to_string().contains("does not divide"), "{err}");
+        // A single group has no uplink ring to run.
+        c.group_size = 4;
+        let err = c.validate().unwrap_err();
+        assert!(err.to_string().contains("at least 2 groups"), "{err}");
+        // 0 and 1 both mean the flat ring and always validate.
+        c.group_size = 1;
+        c.validate().unwrap();
     }
 
     #[test]

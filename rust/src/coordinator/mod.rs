@@ -112,6 +112,10 @@ pub struct Coordinator {
     /// (inert on the in-process backends; applied when the socket mesh
     /// is built)
     wire_codec: WireCodecConfig,
+    /// hierarchical ring-of-rings group size for the pooled backends'
+    /// dense ring collective (0/1 = flat ring; applied when the comm
+    /// lanes are built, inert on the lane-free backends)
+    group_size: usize,
     /// pipelined steps submitted but not yet waited (≤ 1 in the
     /// double-buffered driving mode)
     pending: VecDeque<Pending>,
@@ -155,6 +159,7 @@ impl Coordinator {
             warmup_steps,
             backend: Backend::Sequential,
             wire_codec: WireCodecConfig::default(),
+            group_size: 0,
             pending: VecDeque::new(),
             ready: VecDeque::new(),
             poisoned: false,
@@ -244,6 +249,37 @@ impl Coordinator {
         self.wire_codec
     }
 
+    /// Configure the hierarchical ring-of-rings group size applied when
+    /// the pooled backends build their comm lanes (0 = flat ring).
+    /// Panics on a bad tiling or a live pool — CLI paths should use
+    /// [`Coordinator::try_set_group_size`] instead.
+    pub fn with_group_size(mut self, group_size: usize) -> Self {
+        self.try_set_group_size(group_size)
+            .expect("group size must tile the workers and be set before the lanes are built");
+        self
+    }
+
+    /// Configure the hierarchical group size of the pooled backends'
+    /// dense ring collective. Fails on a tiling the shared validator
+    /// rejects, or if the lanes are already built with a different
+    /// topology (they latched it at construction — rebuilding them
+    /// mid-run would tear live collectives down).
+    pub fn try_set_group_size(&mut self, group_size: usize) -> anyhow::Result<()> {
+        crate::comm::parallel::validate_group_size(self.n, group_size)?;
+        anyhow::ensure!(
+            !self.backend.is_pooled() || group_size == self.group_size,
+            "the comm lanes are already built with --group-size {}; set the \
+             group size before selecting a pooled backend",
+            self.group_size,
+        );
+        self.group_size = group_size;
+        Ok(())
+    }
+
+    pub fn group_size(&self) -> usize {
+        self.group_size
+    }
+
     /// Infallible [`Coordinator::try_set_backend`] for contexts that
     /// treat a failed mesh setup as a bug (tests, benches).
     pub fn set_backend(&mut self, backend: Backend) {
@@ -265,16 +301,22 @@ impl Coordinator {
         if self.backend == backend {
             return Ok(());
         }
-        // Build the fallible part (the socket mesh) BEFORE moving the
+        // Build the fallible part (the lanes/mesh) BEFORE moving the
         // memories, so a failure leaves the coordinator fully usable on
-        // its current backend.
-        let socket_lanes = if backend == Backend::Socket {
-            Some(crate::comm::parallel::CommLanes::with_transport(
+        // its current backend. Both pooled backends honor the
+        // hierarchical group size (0 = flat ring).
+        let pooled_lanes = match backend {
+            Backend::Socket => Some(crate::comm::parallel::CommLanes::with_topology(
                 self.n,
                 LaneTransport::Socket(self.wire_codec),
-            )?)
-        } else {
-            None
+                self.group_size,
+            )?),
+            Backend::Pipelined => Some(crate::comm::parallel::CommLanes::with_topology(
+                self.n,
+                LaneTransport::Channel,
+                self.group_size,
+            )?),
+            Backend::Sequential | Backend::Threaded => None,
         };
         let memories =
             match std::mem::replace(&mut self.workers, Workers::Local(Vec::new())) {
@@ -283,10 +325,9 @@ impl Coordinator {
                 Workers::Pool(pool) => pool.snapshot(),
             };
         self.workers = match backend {
-            Backend::Pipelined => Workers::Pool(WorkerPool::new(memories)),
-            Backend::Socket => Workers::Pool(WorkerPool::with_lanes(
+            Backend::Pipelined | Backend::Socket => Workers::Pool(WorkerPool::with_lanes(
                 memories,
-                socket_lanes.expect("socket lanes built above"),
+                pooled_lanes.expect("pooled lanes built above"),
             )),
             Backend::Sequential | Backend::Threaded => Workers::Local(memories),
         };

@@ -84,6 +84,11 @@ fn cmd_train(args: &mut Args) -> Result<()> {
         cfg.backend = b;
     }
     cfg.bucket_bytes = args.usize_or("bucket-bytes", cfg.bucket_bytes)?;
+    // Hierarchical ring-of-rings (0 = flat). Flag overrides may change
+    // workers and group_size independently, so re-check the tiling here
+    // rather than trusting the file-load validation.
+    cfg.group_size = args.usize_or("group-size", cfg.group_size)?;
+    scalecom::comm::parallel::validate_group_size(cfg.workers, cfg.group_size)?;
     // Wire entropy codec: CLI flag > SCALECOM_WIRE_COMPRESSION env >
     // config file (socket backend only; inert elsewhere).
     if let Some(w) = args.str_opt("wire-compression") {
@@ -130,7 +135,7 @@ fn cmd_train(args: &mut Args) -> Result<()> {
     args.finish()?;
 
     println!(
-        "training {} | workers={} steps={} scheme={} rate={}x beta={} topo={} backend={}{}{}",
+        "training {} | workers={} steps={} scheme={} rate={}x beta={} topo={} backend={}{}{}{}",
         cfg.model,
         cfg.workers,
         cfg.steps,
@@ -141,6 +146,11 @@ fn cmd_train(args: &mut Args) -> Result<()> {
         cfg.backend,
         if cfg.bucket_bytes > 0 {
             format!(" bucket-bytes={}", cfg.bucket_bytes)
+        } else {
+            String::new()
+        },
+        if cfg.group_size >= 2 {
+            format!(" group-size={}", cfg.group_size)
         } else {
             String::new()
         },
@@ -469,13 +479,17 @@ fn cmd_node(args: &mut Args) -> Result<()> {
     let snapshot_dir = args.str_opt("snapshot-dir").map(std::path::PathBuf::from);
     let max_reconnect_attempts =
         args.usize_or("max-reconnect-attempts", DEFAULT_RECONNECT_ATTEMPTS)?;
+    // Hierarchical ring-of-rings (0 = flat). Must match on every node
+    // of the fleet and tile the peer count — validated at launch.
+    let group_size = args.usize_or("group-size", 0)?;
     args.finish()?;
     let wire_codec =
         scalecom::comm::WireCodecConfig::from_strings(&wire_mode, &wire_dense, &wire_sparse)?;
     let mut spec =
         NodeSpec::from_flags(role.as_deref(), bind.as_deref(), peers.as_deref(), timeout)?
             .with_wire_codec(wire_codec)
-            .with_fault_tolerance(heartbeat, reconnect, snapshot_dir);
+            .with_fault_tolerance(heartbeat, reconnect, snapshot_dir)
+            .with_group_size(group_size)?;
     spec.max_reconnect_attempts = max_reconnect_attempts;
     let stdout = std::io::stdout();
     run_node(&spec, &wl, &mut stdout.lock())

@@ -958,6 +958,319 @@ mod simnet_determinism {
     }
 }
 
+/// Ring-schedule invariants, property-tested straight on the shared
+/// round helpers (`chunk_bounds` / `reduce_scatter_round` /
+/// `all_gather_round`) that every executing ring — channel, socket, and
+/// both levels of the ring-of-rings — and the simnet replay all consume:
+///
+///   (a) the per-round send/recv maps are permutations of the chunk ids
+///       and pair up along ring edges (my send chunk is exactly my right
+///       neighbor's recv chunk), so every chunk crosses each edge exactly
+///       once per phase;
+///   (b) after the n−1 reduce-scatter rounds, worker `id` owns the
+///       COMPLETE sum of chunk `(id+1)%n`, and the all-gather only ever
+///       forwards finished chunks until everyone holds all of them;
+///   (c) the same invariants compose to the two-level schedule: intra
+///       rings total the group contributions, the leader ring totals the
+///       group sums to n, and the chain broadcast hands the finished
+///       buffer down — every contribution reduced exactly once;
+///   (d) executable rings of EVERY length in 0..3n — crucially len < n,
+///       where zero-width chunks must be skipped symmetrically on both
+///       sides of an edge so no empty frame crosses the wire — reduce to
+///       the elementwise mean on the channel and socket transports, flat
+///       and hierarchical alike.
+#[cfg(test)]
+mod ring_schedule {
+    use super::check;
+    use crate::comm::codec::{CodecStats, WireCodecConfig};
+    use crate::comm::parallel::{
+        all_gather_round, chunk_bounds, hier_leader, hier_ring, reduce_scatter_round, ring,
+        validate_group_size,
+    };
+    use crate::util::floats::allclose;
+
+    #[test]
+    fn chunk_bounds_tile_the_buffer_for_every_length() {
+        check("chunk_bounds tiling", 120, |g| {
+            let n = g.usize_in(1..=16);
+            let len = g.usize_in(0..=3 * n);
+            let bounds = chunk_bounds(len, n);
+            assert_eq!(bounds.len(), n);
+            assert_eq!(bounds[0].0, 0);
+            assert_eq!(bounds[n - 1].1, len);
+            for c in 0..n {
+                let (lo, hi) = bounds[c];
+                assert!(lo <= hi, "chunk {c} inverted: {lo}..{hi}");
+                if c + 1 < n {
+                    assert_eq!(hi, bounds[c + 1].0, "chunk {c} not contiguous");
+                }
+                let w = hi - lo;
+                assert!(
+                    w == len / n || w == len / n + 1,
+                    "chunk {c} width {w} unbalanced for len={len} n={n}"
+                );
+            }
+            if len < n {
+                let zero = bounds.iter().filter(|(lo, hi)| hi == lo).count();
+                assert_eq!(zero, n - len, "len<n must leave exactly n-len empty chunks");
+            }
+        });
+    }
+
+    /// Symbolically drive the flat ring schedule over per-chunk
+    /// contribution COUNTS (one integer per (worker, chunk) instead of
+    /// f32 payloads), asserting the schedule invariants round by round:
+    /// permutation + edge pairing, reduce-scatter ownership on
+    /// `(id+1)%n`, and the all-gather forwarding only finished chunks.
+    /// Returns the final per-worker counts so the two-level property can
+    /// compose intra and uplink runs.
+    fn allreduce_counts(n: usize, start: &[Vec<u32>]) -> Vec<Vec<u32>> {
+        assert_eq!(start.len(), n);
+        assert!(start.iter().all(|row| row.len() == n));
+        let totals: Vec<u32> = (0..n).map(|c| start.iter().map(|w| w[c]).sum()).collect();
+        let mut acc: Vec<Vec<u32>> = start.to_vec();
+        // Reduce-scatter: n-1 rounds of simultaneous neighbor exchange.
+        for s in 0..n - 1 {
+            let mut sends = vec![false; n];
+            let mut recvs = vec![false; n];
+            let snapshot = acc.clone();
+            for w in 0..n {
+                let (send_c, recv_c) = reduce_scatter_round(w, n, s);
+                // my send chunk is exactly my right neighbor's recv chunk
+                assert_eq!(
+                    send_c,
+                    reduce_scatter_round((w + 1) % n, n, s).1,
+                    "rs round {s}: edge {w}->{} chunk mismatch",
+                    (w + 1) % n
+                );
+                assert!(!sends[send_c] && !recvs[recv_c], "rs round {s}: chunk repeated");
+                sends[send_c] = true;
+                recvs[recv_c] = true;
+                // receive from the LEFT neighbor: add its frozen count
+                let left = (w + n - 1) % n;
+                assert_eq!(reduce_scatter_round(left, n, s).0, recv_c);
+                acc[w][recv_c] += snapshot[left][recv_c];
+            }
+            assert!(sends.iter().all(|&b| b), "rs round {s}: not a permutation");
+        }
+        // Ownership: worker w holds the COMPLETE chunk-(w+1)%n sum, the
+        // one chunk it never sent during reduce-scatter.
+        for w in 0..n {
+            let own = (w + 1) % n;
+            assert_eq!(
+                acc[w][own], totals[own],
+                "worker {w} does not own the complete chunk {own} after n-1 rounds"
+            );
+        }
+        // All-gather: circulate the finished chunks by replacement.
+        for s in 0..n - 1 {
+            let mut sends = vec![false; n];
+            let snapshot = acc.clone();
+            for w in 0..n {
+                let (send_c, recv_c) = all_gather_round(w, n, s);
+                assert_eq!(send_c, all_gather_round((w + 1) % n, n, s).1);
+                assert!(!sends[send_c], "ag round {s}: chunk repeated");
+                sends[send_c] = true;
+                // the chunk a worker forwards must already be finished
+                assert_eq!(
+                    snapshot[w][send_c], totals[send_c],
+                    "ag round {s}: worker {w} forwards unfinished chunk {send_c}"
+                );
+                let left = (w + n - 1) % n;
+                assert_eq!(all_gather_round(left, n, s).0, recv_c);
+                acc[w][recv_c] = snapshot[left][recv_c];
+            }
+        }
+        for (w, row) in acc.iter().enumerate() {
+            assert_eq!(row, &totals, "worker {w} missing finished chunks");
+        }
+        acc
+    }
+
+    #[test]
+    fn flat_schedule_sends_every_chunk_once_per_phase_and_lands_ownership() {
+        check("flat ring schedule invariants", 80, |g| {
+            let n = g.usize_in(2..=16);
+            let start: Vec<Vec<u32>> = (0..n).map(|_| vec![1; n]).collect();
+            let done = allreduce_counts(n, &start);
+            for row in &done {
+                assert!(row.iter().all(|&c| c == n as u32));
+            }
+            // Per worker, the reduce-scatter phase sends n-1 DISTINCT
+            // chunks — everything except the chunk it ends up owning.
+            for w in 0..n {
+                let mut sent: Vec<usize> =
+                    (0..n - 1).map(|s| reduce_scatter_round(w, n, s).0).collect();
+                sent.sort_unstable();
+                sent.dedup();
+                assert_eq!(sent.len(), n - 1, "worker {w} repeats a chunk in reduce-scatter");
+                assert!(
+                    !sent.contains(&((w + 1) % n)),
+                    "worker {w} must never send its owned chunk during reduce-scatter"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn two_level_schedule_reduces_every_chunk_exactly_once() {
+        check("two-level schedule invariants", 60, |g| {
+            let m = g.usize_in(2..=6); // group size
+            let ngroups = g.usize_in(2..=5); // leader-ring size
+            let n = m * ngroups;
+            validate_group_size(n, m).expect("constructed to tile");
+            // Phase 1: intra-group allreduce over counts — every member
+            // ends holding the group total in every chunk.
+            let mut group_total = vec![0u32; ngroups];
+            for (grp, total) in group_total.iter_mut().enumerate() {
+                let start: Vec<Vec<u32>> = (0..m).map(|_| vec![1; m]).collect();
+                let done = allreduce_counts(m, &start);
+                for (j, row) in done.iter().enumerate() {
+                    assert!(
+                        row.iter().all(|&c| c == m as u32),
+                        "group {grp} member {j}: intra phase incomplete"
+                    );
+                }
+                *total = m as u32;
+            }
+            // Phase 2: the leader ring reduces the group totals to n —
+            // each worker's contribution counted exactly once overall.
+            let start: Vec<Vec<u32>> = (0..ngroups)
+                .map(|grp| vec![group_total[grp]; ngroups])
+                .collect();
+            let done = allreduce_counts(ngroups, &start);
+            for (grp, row) in done.iter().enumerate() {
+                assert!(
+                    row.iter().all(|&c| c == n as u32),
+                    "leader {grp}: uplink must total n contributions"
+                );
+            }
+            // Phase 3: the chain broadcast copies the leader's finished
+            // buffer down unchanged, so every member ends at exactly n.
+            for (grp, row) in done.iter().enumerate() {
+                for j in 0..m {
+                    assert_eq!(row[0], n as u32, "group {grp} member {j}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn hier_leader_preserves_the_flat_cyclic_rotation() {
+        check("multi-level CLT-k leader election", 120, |g| {
+            let m = g.usize_in(1..=8);
+            let ngroups = g.usize_in(2..=6);
+            let n = m * ngroups;
+            let t = g.usize_in(0..=10_000) as u64;
+            let (grp, member) = hier_leader(t, n, m);
+            assert!(grp < ngroups && member < m);
+            assert_eq!(
+                grp * m + member,
+                (t % n as u64) as usize,
+                "the two-level coordinates must recompose to the flat leader t % n"
+            );
+        });
+    }
+
+    #[test]
+    fn rings_of_every_length_round_trip_on_both_transports() {
+        check("len in 0..3n ring round-trips", 10, |g| {
+            let n = g.usize_in(2..=8);
+            let len = g.usize_in(0..=3 * n);
+            let inputs: Vec<Vec<f32>> = (0..n).map(|_| g.f32_vec_len(len, 2.0)).collect();
+            let mean: Vec<f32> = (0..len)
+                .map(|i| inputs.iter().map(|w| w[i]).sum::<f32>() / n as f32)
+                .collect();
+            let verify = |label: &str, results: Vec<Vec<f32>>| {
+                for (w, got) in results.iter().enumerate() {
+                    if let Err(i) = allclose(got, &mean, 1e-5, 1e-6) {
+                        panic!(
+                            "{label} n={n} len={len} worker={w} elem {i}: {} vs mean {}",
+                            got[i], mean[i]
+                        );
+                    }
+                }
+            };
+            // channel, flat
+            let handles: Vec<_> = ring(n)
+                .into_iter()
+                .zip(inputs.clone())
+                .map(|(node, mut buf)| {
+                    std::thread::spawn(move || {
+                        node.allreduce_avg(&mut buf);
+                        buf
+                    })
+                })
+                .collect();
+            verify(
+                "channel flat",
+                handles.into_iter().map(|h| h.join().expect("channel flat lane")).collect(),
+            );
+            // socket, flat
+            let timeout = crate::comm::socket::default_timeout().expect("timeout");
+            let stats = CodecStats::new();
+            let nodes =
+                crate::comm::socket::local_ring(n, timeout, WireCodecConfig::default(), &stats)
+                    .expect("local socket ring");
+            let handles: Vec<_> = nodes
+                .into_iter()
+                .zip(inputs.clone())
+                .map(|(mut node, mut buf)| {
+                    std::thread::spawn(move || {
+                        node.allreduce_avg(&mut buf).expect("socket allreduce");
+                        buf
+                    })
+                })
+                .collect();
+            verify(
+                "socket flat",
+                handles.into_iter().map(|h| h.join().expect("socket flat lane")).collect(),
+            );
+            // two-level, whenever n admits a hierarchical tiling
+            if let Some(gs) = (2..n).find(|m| n % m == 0 && n / m >= 2) {
+                let handles: Vec<_> = hier_ring(n, gs)
+                    .expect("channel hier ring")
+                    .into_iter()
+                    .zip(inputs.clone())
+                    .map(|(node, mut buf)| {
+                        std::thread::spawn(move || {
+                            node.allreduce_avg(&mut buf);
+                            buf
+                        })
+                    })
+                    .collect();
+                verify(
+                    "channel hier",
+                    handles.into_iter().map(|h| h.join().expect("channel hier lane")).collect(),
+                );
+                let stats = CodecStats::new();
+                let nodes = crate::comm::socket::local_hier_ring(
+                    n,
+                    gs,
+                    timeout,
+                    WireCodecConfig::default(),
+                    &stats,
+                )
+                .expect("local socket hier ring");
+                let handles: Vec<_> = nodes
+                    .into_iter()
+                    .zip(inputs)
+                    .map(|(mut node, mut buf)| {
+                        std::thread::spawn(move || {
+                            node.allreduce_avg(&mut buf).expect("socket hier allreduce");
+                            buf
+                        })
+                    })
+                    .collect();
+                verify(
+                    "socket hier",
+                    handles.into_iter().map(|h| h.join().expect("socket hier lane")).collect(),
+                );
+            }
+        });
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

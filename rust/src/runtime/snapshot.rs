@@ -80,19 +80,68 @@ pub fn save_ring(dir: &Path, rank: usize, step: u64, mem: &EfMemory) -> anyhow::
 /// Load the snapshot for exactly `step`: the per-step file first, then
 /// the latest-pointer file when it happens to hold that step. `Ok(None)`
 /// when neither does.
+///
+/// A corrupt or mislabeled entry is *skipped with a warning*, not fatal:
+/// the caller is walking the resume ring, and an older intact entry (or
+/// a lower agreed resume step) is always a valid fallback, whereas an
+/// error here would kill the rejoining worker a torn file was supposed
+/// to protect.
 pub fn load_at(dir: &Path, rank: usize, step: u64) -> anyhow::Result<Option<EfMemory>> {
-    if let Some((s, m)) = load(&snapshot_step_path(dir, rank, step))? {
-        anyhow::ensure!(
-            s == step,
-            "snapshot: {} holds step {s}, not the step its name declares",
-            snapshot_step_path(dir, rank, step).display()
-        );
-        return Ok(Some(m));
+    let per_step = snapshot_step_path(dir, rank, step);
+    match load(&per_step) {
+        Ok(Some((s, m))) if s == step => return Ok(Some(m)),
+        Ok(Some((s, _))) => eprintln!(
+            "snapshot: {} holds step {s}, not the step its name declares; skipping it",
+            per_step.display()
+        ),
+        Ok(None) => {}
+        Err(e) => eprintln!("snapshot: skipping corrupt entry: {e:#}"),
     }
-    match load(&snapshot_path(dir, rank))? {
-        Some((s, m)) if s == step => Ok(Some(m)),
-        _ => Ok(None),
+    match load(&snapshot_path(dir, rank)) {
+        Ok(Some((s, m))) if s == step => Ok(Some(m)),
+        Ok(_) => Ok(None),
+        Err(e) => {
+            eprintln!("snapshot: skipping corrupt entry: {e:#}");
+            Ok(None)
+        }
     }
+}
+
+/// The newest resume point this rank can actually decode: the
+/// latest-pointer file when intact, else the newest intact per-step ring
+/// entry. A corrupt newest snapshot thereby *degrades* the rank's
+/// claimed resume step instead of killing the rejoin — the ring
+/// min-reduce then settles on a step everyone can restore.
+pub fn latest_on_disk(dir: &Path, rank: usize) -> Option<(u64, EfMemory)> {
+    let mut best: Option<(u64, EfMemory)> = None;
+    match load(&snapshot_path(dir, rank)) {
+        Ok(Some(sm)) => best = Some(sm),
+        Ok(None) => {}
+        Err(e) => eprintln!("snapshot: skipping corrupt entry: {e:#}"),
+    }
+    let prefix = format!("ef_rank{rank}_step");
+    if let Ok(entries) = std::fs::read_dir(dir) {
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            let Some(step) = name
+                .strip_prefix(&prefix)
+                .and_then(|r| r.strip_suffix(".snap"))
+                .and_then(|s| s.parse::<u64>().ok())
+            else {
+                continue;
+            };
+            if best.as_ref().map_or(false, |(b, _)| *b >= step) {
+                continue;
+            }
+            match load(&entry.path()) {
+                Ok(Some((s, m))) if s == step => best = Some((s, m)),
+                Ok(_) => {}
+                Err(e) => eprintln!("snapshot: skipping corrupt entry: {e:#}"),
+            }
+        }
+    }
+    best
 }
 
 /// Serialize one worker's EF state after `step` into the format above.
@@ -110,35 +159,66 @@ pub fn encode(step: u64, mem: &EfMemory) -> Vec<u8> {
     out
 }
 
-/// Inverse of [`encode`]; rejects bad magic, unknown versions, and
-/// truncated or oversized bodies.
+/// Take the next `len` bytes of a snapshot, or fail with a message that
+/// says which field was cut off and where — no slice index in [`decode`]
+/// can panic on a torn file.
+fn take<'a>(bytes: &'a [u8], pos: &mut usize, len: usize, what: &str) -> anyhow::Result<&'a [u8]> {
+    let end = pos
+        .checked_add(len)
+        .filter(|&e| e <= bytes.len())
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "snapshot truncated at byte {}: {what} needs {len} bytes, {} remain",
+                *pos,
+                bytes.len().saturating_sub(*pos)
+            )
+        })?;
+    let slice = &bytes[*pos..end];
+    *pos = end;
+    Ok(slice)
+}
+
+/// Inverse of [`encode`]; fully fallible — every read is length-checked,
+/// so a truncated, torn, or corrupt file yields a clear error (wrapped
+/// with the file name by [`load`]) instead of panicking the rejoining
+/// worker. Rejects bad magic, unknown versions, and bodies that don't
+/// match the declared dim.
 pub fn decode(bytes: &[u8]) -> anyhow::Result<(u64, EfMemory)> {
-    anyhow::ensure!(bytes.len() >= 28, "snapshot truncated: {} bytes", bytes.len());
-    anyhow::ensure!(&bytes[0..4] == MAGIC, "snapshot: bad magic (not an EF snapshot)");
-    let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    let mut pos = 0usize;
+    let magic = take(bytes, &mut pos, 4, "magic")?;
+    anyhow::ensure!(magic == MAGIC, "snapshot: bad magic (not an EF snapshot)");
+    let version = u32::from_le_bytes(take(bytes, &mut pos, 4, "format version")?.try_into().unwrap());
     anyhow::ensure!(
         version == FORMAT_VERSION,
         "snapshot: format version {version} (this build reads {FORMAT_VERSION})"
     );
-    let step = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
-    let beta = f32::from_le_bytes(bytes[16..20].try_into().unwrap());
+    let step = u64::from_le_bytes(take(bytes, &mut pos, 8, "step")?.try_into().unwrap());
+    let beta = f32::from_le_bytes(take(bytes, &mut pos, 4, "beta")?.try_into().unwrap());
     anyhow::ensure!(
         beta > 0.0 && beta <= 1.0,
         "snapshot: corrupt beta {beta} (must be in (0, 1])"
     );
-    let dim = u64::from_le_bytes(bytes[20..28].try_into().unwrap()) as usize;
+    let dim64 = u64::from_le_bytes(take(bytes, &mut pos, 8, "dim")?.try_into().unwrap());
+    anyhow::ensure!(dim64 >= 1, "snapshot: empty memory");
+    let dim: usize = usize::try_from(dim64)
+        .ok()
+        .filter(|d| d.checked_mul(4).map_or(false, |b| b <= bytes.len()))
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "snapshot: header declares dim {dim64}, but only {} bytes follow",
+                bytes.len().saturating_sub(pos)
+            )
+        })?;
+    let body = take(bytes, &mut pos, dim * 4, "memory values")?;
     anyhow::ensure!(
-        bytes.len() == 28 + dim * 4,
-        "snapshot: body is {} bytes, header declares dim {dim} ({} expected)",
-        bytes.len(),
-        28 + dim * 4
+        pos == bytes.len(),
+        "snapshot: {} trailing bytes after dim {dim} body",
+        bytes.len() - pos
     );
-    anyhow::ensure!(dim >= 1, "snapshot: empty memory");
-    let mut m = Vec::with_capacity(dim);
-    for i in 0..dim {
-        let o = 28 + i * 4;
-        m.push(f32::from_le_bytes(bytes[o..o + 4].try_into().unwrap()));
-    }
+    let m: Vec<f32> = body
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
     let mut mem = EfMemory::new(dim, beta);
     mem.set_memory(m);
     Ok((step, mem))
@@ -322,6 +402,73 @@ mod tests {
         // per-step ring existed.
         std::fs::remove_file(snapshot_step_path(&dir, 3, newest)).unwrap();
         assert_eq!(load_at(&dir, 3, newest).unwrap().unwrap().memory()[0], newest as f32);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn decode_fails_cleanly_at_every_header_boundary() {
+        // Cut the encoding at and around every field boundary of the
+        // 28-byte header (magic|version|step|beta|dim) and one f32 into
+        // the body: every prefix must produce an error, never a panic.
+        let full = encode(3, &mem(4, 1.0));
+        for cut in [0usize, 1, 3, 4, 5, 7, 8, 9, 15, 16, 17, 19, 20, 21, 27, 28, 31, 32] {
+            assert!(cut < full.len());
+            let err = decode(&full[..cut]).expect_err(&format!("cut at {cut} must fail"));
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains("truncated") || msg.contains("dim") || msg.contains("empty"),
+                "cut at {cut}: unexpected message: {msg}"
+            );
+        }
+        // one byte short of complete — the classic torn tail
+        assert!(decode(&full[..full.len() - 1]).is_err());
+        // a dim that promises far more data than the file holds must not
+        // allocate or scan past the end
+        let mut huge_dim = full.clone();
+        huge_dim[20..28].copy_from_slice(&u64::MAX.to_le_bytes());
+        let msg = format!("{:#}", decode(&huge_dim).unwrap_err());
+        assert!(msg.contains("dim"), "{msg}");
+    }
+
+    #[test]
+    fn load_at_skips_corrupt_entries_and_continues_down_the_ring() {
+        let dir = std::env::temp_dir().join("scalecom_snapshot_test3");
+        let _ = std::fs::remove_dir_all(&dir);
+        for s in 0..4u64 {
+            save_ring(&dir, 1, s, &mem(4, s as f32)).unwrap();
+        }
+        // Corrupt the newest per-step entry (truncate mid-header): the
+        // exact-step lookup falls through to the latest-pointer file,
+        // which holds the same step — no error, no panic.
+        let newest = snapshot_step_path(&dir, 1, 3);
+        std::fs::write(&newest, &encode(3, &mem(4, 3.0))[..13]).unwrap();
+        assert_eq!(load_at(&dir, 1, 3).unwrap().unwrap().memory()[0], 3.0);
+        // Corrupt the latest pointer too: step 3 is unrecoverable, but
+        // the caller gets Ok(None) and walks down to the intact step 2.
+        std::fs::write(snapshot_path(&dir, 1), b"garbage").unwrap();
+        assert!(load_at(&dir, 1, 3).unwrap().is_none());
+        assert_eq!(load_at(&dir, 1, 2).unwrap().unwrap().memory()[0], 2.0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn latest_on_disk_degrades_past_corrupt_snapshots() {
+        let dir = std::env::temp_dir().join("scalecom_snapshot_test4");
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(latest_on_disk(&dir, 0).is_none(), "missing dir is a cold start");
+        for s in 0..3u64 {
+            save_ring(&dir, 0, s, &mem(4, s as f32)).unwrap();
+        }
+        assert_eq!(latest_on_disk(&dir, 0).unwrap().0, 2);
+        // Corrupt the latest pointer AND the newest per-step file: the
+        // claimed resume point degrades to step 1 instead of erroring.
+        std::fs::write(snapshot_path(&dir, 0), b"SCEFxxxx").unwrap();
+        std::fs::write(snapshot_step_path(&dir, 0, 2), b"").unwrap();
+        let (step, m) = latest_on_disk(&dir, 0).unwrap();
+        assert_eq!(step, 1);
+        assert_eq!(m.memory()[0], 1.0);
+        // other ranks' files are never consulted
+        assert!(latest_on_disk(&dir, 5).is_none());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -124,6 +124,13 @@ pub struct NodeSpec {
     /// own newest snapshot. Per-run scratch — reusing a previous run's
     /// directory makes the resume min-reduce see stale steps.
     pub snapshot_dir: Option<PathBuf>,
+    /// Hierarchical ring-of-rings group size (0/1 = flat ring): ranks
+    /// are tiled into consecutive groups of this many members, dense
+    /// traffic runs intra-ring + leader uplink ring + downlink
+    /// broadcast. Must match on every node (the rendezvous classifies
+    /// hello purposes per topology and rejects a mixed fleet) and tile
+    /// the node count (`comm::parallel::validate_group_size`).
+    pub group_size: usize,
 }
 
 /// Default reconnect budget: enough for a worker restart plus the EOF
@@ -217,7 +224,17 @@ impl NodeSpec {
             reconnect: false,
             max_reconnect_attempts: DEFAULT_RECONNECT_ATTEMPTS,
             snapshot_dir: None,
+            group_size: 0,
         })
+    }
+
+    /// Set the hierarchical ring-of-rings group size (builder style;
+    /// 0 = flat ring). Validated against the node count here, so a bad
+    /// tiling fails at launch instead of at rendezvous.
+    pub fn with_group_size(mut self, group_size: usize) -> anyhow::Result<NodeSpec> {
+        crate::comm::parallel::validate_group_size(self.workers(), group_size)?;
+        self.group_size = group_size;
+        Ok(self)
     }
 
     /// Set the wire entropy-codec configuration (builder style, applied
@@ -658,6 +675,43 @@ pub fn sequential_digest(wl: &NodeWorkload, n: usize) -> anyhow::Result<NodeDige
     })
 }
 
+/// The dense-collective seam of the node driver: the flat ring or the
+/// hierarchical ring-of-rings, picked by `--group-size` at rendezvous.
+/// Both sides expose the same three collectives the driver needs, with
+/// identical arithmetic up to f32 reduction order (the parity contract),
+/// so the step loop is topology-blind.
+enum RingHandle {
+    Flat(crate::comm::socket::SocketRingNode),
+    Hier(crate::comm::socket::SocketHierRingNode),
+}
+
+impl RingHandle {
+    fn allreduce_avg(&mut self, buf: &mut [f32]) -> anyhow::Result<()> {
+        match self {
+            RingHandle::Flat(r) => r.allreduce_avg(buf),
+            RingHandle::Hier(r) => r.allreduce_avg(buf),
+        }
+    }
+
+    fn broadcast_indices(
+        &mut self,
+        leader: usize,
+        own: Option<&[u32]>,
+    ) -> anyhow::Result<Vec<u32>> {
+        match self {
+            RingHandle::Flat(r) => r.broadcast_indices(leader, own),
+            RingHandle::Hier(r) => r.broadcast_indices(leader, own),
+        }
+    }
+
+    fn resume_min_reduce(&mut self, own: u64) -> anyhow::Result<u64> {
+        match self {
+            RingHandle::Flat(r) => r.resume_min_reduce(own),
+            RingHandle::Hier(r) => r.resume_min_reduce(own),
+        }
+    }
+}
+
 /// One coordination step over the live mesh — the body of the
 /// [`run_node`] loop, factored out so the reconnect path can retry a
 /// step after recovery. State mutation is transactional at step scope:
@@ -674,7 +728,7 @@ fn drive_step<W: Write>(
     wl: &NodeWorkload,
     compressor: &mut Option<Box<dyn Compressor>>,
     mem: &mut EfMemory,
-    ring: &mut crate::comm::socket::SocketRingNode,
+    ring: &mut RingHandle,
     star: &mut crate::comm::socket::SocketStarNode,
     fabric: &mut Option<Fabric>,
     out: &mut W,
@@ -820,7 +874,7 @@ fn drive_step<W: Write>(
 /// exactly the draws of steps `0..M`. Returns the step to continue from.
 #[allow(clippy::too_many_arguments)]
 fn agree_and_rollback<W: Write>(
-    ring: &mut crate::comm::socket::SocketRingNode,
+    ring: &mut RingHandle,
     rank: usize,
     n: usize,
     wl: &NodeWorkload,
@@ -831,10 +885,13 @@ fn agree_and_rollback<W: Write>(
     out: &mut W,
 ) -> anyhow::Result<usize> {
     use anyhow::Context;
-    let disk_latest = match disk_dir {
-        Some(d) => snapshot::load(&snapshot::snapshot_path(d, rank))?.map(|(s, _)| s),
-        None => None,
-    };
+    // Scan the whole on-disk ring, not just the newest file: a corrupt
+    // or torn newest snapshot *degrades* this rank's claimed resume step
+    // (the min-reduce then settles on a step everyone can restore)
+    // instead of killing the rejoin.
+    let disk_latest = disk_dir
+        .and_then(|d| snapshot::latest_on_disk(d, rank))
+        .map(|(s, _)| s);
     let own_next: u64 = snaps
         .latest_step()
         .or(disk_latest)
@@ -906,6 +963,10 @@ pub fn run_node<W: Write>(spec: &NodeSpec, wl: &NodeWorkload, out: &mut W) -> an
     wl.validate()?;
     let rank = spec.rank;
     let n = spec.workers();
+    // Loud tiling check before any socket work: a group size that does
+    // not tile the fleet must fail at launch on every node, identically.
+    crate::comm::parallel::validate_group_size(n, spec.group_size)?;
+    let hier = spec.group_size >= 2;
     // A restarted node races its predecessor's dying sockets for the
     // port (TIME_WAIT can linger); with reconnect on, keep knocking
     // until the rendezvous timeout instead of failing the relaunch.
@@ -927,15 +988,39 @@ pub fn run_node<W: Write>(spec: &NodeSpec, wl: &NodeWorkload, out: &mut W) -> an
     writeln!(out, "node rank={rank} n={n} bound={}", spec.bind)?;
     out.flush()?;
     let codec_stats = crate::comm::CodecStats::new();
-    let (mut ring, mut star) = form_mesh_with(
-        rank,
-        &spec.peers,
-        &listener,
-        spec.timeout,
-        spec.wire_codec,
-        &codec_stats,
-        spec.heartbeat,
-    )?;
+    // One rendezvous seam for both topologies: the reconnect arm below
+    // re-forms through the same closure, so a recovered mesh keeps the
+    // ring-of-rings shape the run was launched with.
+    let form = |listener: &TcpListener| -> anyhow::Result<(
+        RingHandle,
+        crate::comm::socket::SocketStarNode,
+    )> {
+        if hier {
+            let (hier_ring, star) = crate::comm::socket::form_hier_mesh_with(
+                rank,
+                &spec.peers,
+                spec.group_size,
+                listener,
+                spec.timeout,
+                spec.wire_codec,
+                &codec_stats,
+                spec.heartbeat,
+            )?;
+            Ok((RingHandle::Hier(hier_ring), star))
+        } else {
+            let (ring, star) = form_mesh_with(
+                rank,
+                &spec.peers,
+                listener,
+                spec.timeout,
+                spec.wire_codec,
+                &codec_stats,
+                spec.heartbeat,
+            )?;
+            Ok((RingHandle::Flat(ring), star))
+        }
+    };
+    let (mut ring, mut star) = form(&listener)?;
 
     let k = wl.k();
     let mut compressor = if wl.scheme == "none" {
@@ -1019,16 +1104,8 @@ pub fn run_node<W: Write>(spec: &NodeSpec, wl: &NodeWorkload, out: &mut W) -> an
                 // form_mesh within milliseconds of the first detection.
                 drop(ring);
                 drop(star);
-                let refreshed = form_mesh_with(
-                    rank,
-                    &spec.peers,
-                    &listener,
-                    spec.timeout,
-                    spec.wire_codec,
-                    &codec_stats,
-                    spec.heartbeat,
-                )
-                .with_context(|| format!("rank {rank}: re-rendezvous after fault at step {t}"))?;
+                let refreshed = form(&listener)
+                    .with_context(|| format!("rank {rank}: re-rendezvous after fault at step {t}"))?;
                 ring = refreshed.0;
                 star = refreshed.1;
                 t = agree_and_rollback(
@@ -1084,6 +1161,18 @@ mod tests {
         heartbeat: Option<Duration>,
         reconnect: bool,
     ) -> NodeDigest {
+        run_all_ranks_grouped(wl, n, heartbeat, reconnect, 0)
+    }
+
+    /// Like [`run_all_ranks_with`] with a `--group-size` axis (0 = flat,
+    /// >= 2 = the hierarchical ring-of-rings mesh on every rank).
+    fn run_all_ranks_grouped(
+        wl: &NodeWorkload,
+        n: usize,
+        heartbeat: Option<Duration>,
+        reconnect: bool,
+        group_size: usize,
+    ) -> NodeDigest {
         let peers = free_addrs(n);
         let outputs: Vec<Vec<u8>> = std::thread::scope(|s| {
             let handles: Vec<_> = (0..n)
@@ -1092,7 +1181,9 @@ mod tests {
                     let wl = wl.clone();
                     s.spawn(move || {
                         let spec = spec_for(peers, rank)
-                            .with_fault_tolerance(heartbeat, reconnect, None);
+                            .with_fault_tolerance(heartbeat, reconnect, None)
+                            .with_group_size(group_size)
+                            .expect("test tiling is valid");
                         let mut out = Vec::new();
                         run_node(&spec, &wl, &mut out)
                             .unwrap_or_else(|e| panic!("rank {rank}: {e:#}"));
@@ -1229,6 +1320,51 @@ mod tests {
     }
 
     #[test]
+    fn hier_nodes_match_sequential_digest() {
+        // The hierarchical mesh must produce the sequential digest within
+        // the parity contract: selections/leaders/CommCost exact, ring
+        // values within f32 reduction-order tolerance — the index
+        // broadcast and the 3-phase dense reduce are topology-internal.
+        let wl = NodeWorkload {
+            steps: 12,
+            warmup: 2, // cover the dense → compressed transition
+            ..NodeWorkload::default()
+        };
+        for (n, g) in [(4usize, 2usize), (8, 2), (8, 4)] {
+            let got = run_all_ranks_grouped(&wl, n, None, false, g);
+            let want = sequential_digest(&wl, n).unwrap();
+            compare_digests(&got, &want, 1e-5, 1e-6)
+                .unwrap_or_else(|e| panic!("n={n} g={g}: {e:#}"));
+        }
+    }
+
+    #[test]
+    fn hier_resume_exchange_keeps_parity() {
+        // Heartbeats + the post-rendezvous resume min-reduce riding the
+        // seeded two-pass hierarchy protocol must not perturb the digest.
+        let wl = NodeWorkload {
+            steps: 8,
+            ..NodeWorkload::default()
+        };
+        let got =
+            run_all_ranks_grouped(&wl, 4, Some(Duration::from_millis(100)), true, 2);
+        let want = sequential_digest(&wl, 4).unwrap();
+        compare_digests(&got, &want, 1e-5, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn spec_rejects_untileable_group_sizes() {
+        let peers = ["a:1", "b:2", "c:3", "d:4"].map(String::from);
+        let spec = spec_for(&peers, 0);
+        let err = spec.clone().with_group_size(3).unwrap_err();
+        assert!(err.to_string().contains("does not divide"), "{err}");
+        let err = spec.clone().with_group_size(4).unwrap_err();
+        assert!(err.to_string().contains("at least 2 groups"), "{err}");
+        assert_eq!(spec.clone().with_group_size(2).unwrap().group_size, 2);
+        assert_eq!(spec.with_group_size(0).unwrap().group_size, 0);
+    }
+
+    #[test]
     fn heartbeat_and_cold_start_resume_exchange_keep_parity() {
         // The fault-tolerance layer at rest: heartbeats flowing on every
         // link and the post-rendezvous resume exchange (which must
@@ -1256,7 +1392,7 @@ mod tests {
             m.set_memory(vec![s as f32; wl.dim]);
             snaps.push(s, m);
         }
-        let mut solo = SocketRingNode::new(0, 1, None, None);
+        let mut solo = RingHandle::Flat(SocketRingNode::new(0, 1, None, None));
         let mut mem = EfMemory::new(wl.dim, wl.beta);
         let mut rng = Rng::for_stream(999, 999); // garbage pre-rollback state
         let mut out = Vec::new();
@@ -1292,7 +1428,7 @@ mod tests {
         snapshot::save_ring(&dir, 1, 5, &persisted).unwrap();
         // A "restarted process": empty in-memory ring, state on disk only.
         let mut snaps = SnapshotRing::new(snapshot::DEFAULT_RING_DEPTH);
-        let mut solo = SocketRingNode::new(0, 1, None, None);
+        let mut solo = RingHandle::Flat(SocketRingNode::new(0, 1, None, None));
         let mut mem = EfMemory::new(wl.dim, wl.beta);
         let mut rng = Rng::for_stream(1, 1);
         let mut out = Vec::new();

@@ -314,6 +314,13 @@ fn sim_ring_rounds(
                     all_gather_round(i, m, s)
                 };
                 let (lo, hi) = bounds[recv_c];
+                // Zero-width chunk (elems < m): the executable skips the
+                // send symmetrically on both sides, so the replay
+                // charges zero bytes and adds no dependency edge —
+                // round count unchanged, no message on the wire.
+                if hi == lo {
+                    continue;
+                }
                 let t = profile
                     .link_between(ids[left], ids[i])
                     .time_for((hi - lo) * bytes_per_elem);
@@ -363,12 +370,17 @@ fn sim_ring_allreduce(
     let leaders: Vec<usize> = (0..ngroups).map(|grp| grp * g).collect();
     let ready: Vec<f64> = leaders.iter().map(|&l| member_done[l]).collect();
     let leader_done = sim_ring_rounds(profile, &leaders, elems, bytes_per_elem, &ready);
-    // Broadcast the global result back around each group ring.
+    // Broadcast the global result back around each group ring. A
+    // zero-length buffer moved no chunks above and moves no broadcast
+    // either (the executable skips empty sends symmetrically).
     let payload = elems * bytes_per_elem;
     let mut end = start;
     for grp in 0..ngroups {
         let mut cum = leader_done[grp];
         end = end.max(cum);
+        if payload == 0 {
+            continue;
+        }
         for o in 1..g {
             let from = grp * g + o - 1;
             let to = grp * g + o;
@@ -682,6 +694,10 @@ fn simulate_inner(
         anyhow::ensure!(el.restart_s >= 0.0, "restart time must be non-negative");
     }
     profile.check()?;
+    // Loud tiling validation, shared with the executable path: an
+    // untileable hierarchical profile is an error with a remedy, never
+    // a silent flat fallback.
+    profile.check_group_size(cfg.workers)?;
 
     let n = cfg.workers;
     let dim = cfg.dim;
@@ -989,18 +1005,185 @@ mod tests {
                         .collect();
                     handles.into_iter().map(|h| h.join().unwrap()).collect()
                 });
-                let bounds = chunk_bounds(len, n);
                 for (id, sizes) in sent.iter().enumerate() {
-                    let mut expect = Vec::new();
-                    for s in 0..n - 1 {
-                        let (send_c, _) = reduce_scatter_round(id, n, s);
-                        expect.push(bounds[send_c].1 - bounds[send_c].0);
-                    }
-                    for s in 0..n - 1 {
-                        let (send_c, _) = all_gather_round(id, n, s);
-                        expect.push(bounds[send_c].1 - bounds[send_c].0);
-                    }
+                    let expect = flat_ring_send_sizes(id, n, len);
                     assert_eq!(sizes, &expect, "n={n} len={len} worker {id}");
+                }
+            }
+        }
+    }
+
+    /// Worker `id`'s per-round send sizes in the flat ring schedule —
+    /// derived from the same `chunk_bounds`/round helpers the simulator
+    /// charges from, with zero-width chunks skipped exactly like the
+    /// executable collective (and `sim_ring_rounds`) skip them.
+    fn flat_ring_send_sizes(id: usize, n: usize, len: usize) -> Vec<usize> {
+        let bounds = chunk_bounds(len, n);
+        let mut expect = Vec::new();
+        for s in 0..n - 1 {
+            let (send_c, _) = reduce_scatter_round(id, n, s);
+            let w = bounds[send_c].1 - bounds[send_c].0;
+            if w > 0 {
+                expect.push(w);
+            }
+        }
+        for s in 0..n - 1 {
+            let (send_c, _) = all_gather_round(id, n, s);
+            let w = bounds[send_c].1 - bounds[send_c].0;
+            if w > 0 {
+                expect.push(w);
+            }
+        }
+        expect
+    }
+
+    #[test]
+    fn sim_schedule_matches_real_hier_ring_messages() {
+        // The two-level analogue of the flat lock above: drive the
+        // three-phase hierarchical composition (the exact dataflow of
+        // `HierRingNode` / `SocketHierRingNode`) over instrumented
+        // channels and check every message against the schedule the
+        // simulator's `hier` branch charges — intra rounds from
+        // `chunk_bounds(len, g)`, uplink rounds from
+        // `chunk_bounds(len, ngroups)`, then the group-chain broadcast,
+        // with zero-width sends skipped symmetrically in both worlds.
+        for (n, g) in [(4usize, 2usize), (8, 4), (6, 2)] {
+            for len in [0usize, 1, 5, 16] {
+                let ngroups = n / g;
+                // intra fabric: one channel ring per group (link j
+                // carries member j → (j+1) % g), plus the uplink ring
+                // over the group leaders.
+                let mut intra_txs = Vec::new();
+                let mut intra_rxs: Vec<Option<_>> = Vec::new();
+                for _ in 0..n {
+                    let (tx, rx) = channel::<Vec<f32>>();
+                    intra_txs.push(tx);
+                    intra_rxs.push(Some(rx));
+                }
+                let mut up_txs = Vec::new();
+                let mut up_rxs: Vec<Option<_>> = Vec::new();
+                for _ in 0..ngroups {
+                    let (tx, rx) = channel::<Vec<f32>>();
+                    up_txs.push(tx);
+                    up_rxs.push(Some(rx));
+                }
+                let links: Vec<_> = (0..n)
+                    .map(|w| {
+                        let (grp, member) = (w / g, w % g);
+                        let intra_tx = intra_txs[w].clone();
+                        let intra_rx = intra_rxs[grp * g + (member + g - 1) % g]
+                            .take()
+                            .unwrap();
+                        let up = (member == 0).then(|| {
+                            (
+                                up_txs[grp].clone(),
+                                up_rxs[(grp + ngroups - 1) % ngroups].take().unwrap(),
+                            )
+                        });
+                        (intra_tx, intra_rx, up)
+                    })
+                    .collect();
+                let sent: Vec<(Vec<usize>, Vec<f32>)> = std::thread::scope(|s| {
+                    let handles: Vec<_> = links
+                        .into_iter()
+                        .enumerate()
+                        .map(|(w, (intra_tx, intra_rx, up))| {
+                            s.spawn(move || {
+                                let (_, member) = (w / g, w % g);
+                                let mut buf = vec![(w + 1) as f32; len];
+                                let mut sizes = Vec::new();
+                                // phase 1: intra-group sum
+                                {
+                                    let mut send = |c: &[f32]| {
+                                        sizes.push(c.len());
+                                        intra_tx
+                                            .send(c.to_vec())
+                                            .map_err(|_| anyhow::anyhow!("send"))
+                                    };
+                                    let mut recv = || {
+                                        intra_rx.recv().map_err(|_| anyhow::anyhow!("recv"))
+                                    };
+                                    ring_allreduce_generic(
+                                        member, g, &mut buf, &|_| {}, &mut send, &mut recv,
+                                    )
+                                    .unwrap();
+                                }
+                                // phase 2: leader ring with the global finish
+                                if let Some((up_tx, up_rx)) = &up {
+                                    let inv = 1.0 / n as f32;
+                                    let mut send = |c: &[f32]| {
+                                        sizes.push(c.len());
+                                        up_tx
+                                            .send(c.to_vec())
+                                            .map_err(|_| anyhow::anyhow!("send"))
+                                    };
+                                    let mut recv = || {
+                                        up_rx.recv().map_err(|_| anyhow::anyhow!("recv"))
+                                    };
+                                    let grp_id = w / g;
+                                    ring_allreduce_generic(
+                                        grp_id,
+                                        ngroups,
+                                        &mut buf,
+                                        &|c: &mut [f32]| {
+                                            c.iter_mut().for_each(|v| *v *= inv)
+                                        },
+                                        &mut send,
+                                        &mut recv,
+                                    )
+                                    .unwrap();
+                                }
+                                // phase 3: chain broadcast down the group
+                                if !buf.is_empty() {
+                                    if up.is_some() {
+                                        sizes.push(buf.len());
+                                        intra_tx.send(buf.clone()).unwrap();
+                                    } else {
+                                        let incoming = intra_rx.recv().unwrap();
+                                        buf.copy_from_slice(&incoming);
+                                        if member + 1 < g {
+                                            sizes.push(incoming.len());
+                                            intra_tx.send(incoming).unwrap();
+                                        }
+                                    }
+                                }
+                                (sizes, buf)
+                            })
+                        })
+                        .collect();
+                    handles.into_iter().map(|h| h.join().unwrap()).collect()
+                });
+                // expected per-worker message list: exactly what the
+                // simulator's hier branch charges, in order
+                let expect_avg: f32 =
+                    (1..=n).map(|v| v as f32).sum::<f32>() / n as f32;
+                for (w, (sizes, buf)) in sent.iter().enumerate() {
+                    let (grp, member) = (w / g, w % g);
+                    let mut expect = flat_ring_send_sizes(member, g, len);
+                    if member == 0 {
+                        expect.extend(flat_ring_send_sizes(grp, ngroups, len));
+                    }
+                    if len > 0 && member + 1 < g {
+                        // leader opens the chain; every member but the
+                        // last forwards the full payload
+                        expect.push(len);
+                    }
+                    assert_eq!(
+                        sizes, &expect,
+                        "n={n} g={g} len={len} worker {w} message sizes"
+                    );
+                    assert!(
+                        buf.iter().all(|&v| (v - expect_avg).abs() < 1e-4),
+                        "n={n} g={g} len={len} worker {w}: {buf:?}"
+                    );
+                }
+                // and the simulator charges nothing at all for an empty
+                // buffer — no messages moved, no latency billed
+                if len == 0 {
+                    let mut p = quiet_profile(1.0, 3.0);
+                    p.group_size = g;
+                    let end = sim_ring_allreduce(&p, n, 0, 4, 5.0);
+                    assert_eq!(end, 5.0, "n={n} g={g}: empty buffers are free");
                 }
             }
         }

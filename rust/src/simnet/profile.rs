@@ -243,8 +243,23 @@ impl TopologyProfile {
 
     /// Whether the ring-of-rings schedule applies for `n` workers: the
     /// group size must tile the ring with at least two full groups.
+    /// This is the *schedule predicate* — callers must have validated
+    /// the pairing with [`TopologyProfile::check_group_size`] first, so
+    /// an impossible tiling is a loud error upstream, never a silent
+    /// flat fallback here.
     pub fn hierarchical_for(&self, n: usize) -> bool {
         self.group_size > 1 && n % self.group_size == 0 && n / self.group_size >= 2
+    }
+
+    /// Validate this profile's group size against a concrete worker
+    /// count, through the same `comm::parallel::validate_group_size`
+    /// the executable backends use — simulation and execution accept
+    /// exactly the same tilings and reject the rest with the same
+    /// remedy, instead of the simulator silently downgrading an
+    /// untileable hierarchy to the flat ring.
+    pub fn check_group_size(&self, n: usize) -> anyhow::Result<()> {
+        crate::comm::parallel::validate_group_size(n, self.group_size)
+            .map_err(|e| anyhow::anyhow!("profile '{}': {e}", self.name))
     }
 
     /// Deterministic compute slowdown factor (>= 1) for `(step, worker)`.
@@ -355,8 +370,27 @@ mod tests {
         let h = TopologyProfile::named("hier").unwrap();
         assert!(h.hierarchical_for(64));
         assert!(h.hierarchical_for(16));
-        assert!(!h.hierarchical_for(8), "one group is just a flat ring");
-        assert!(!h.hierarchical_for(12), "groups must tile the ring");
         assert!(!TopologyProfile::uniform().hierarchical_for(64));
+    }
+
+    #[test]
+    fn untileable_group_sizes_are_rejected_loudly_not_downgraded() {
+        // The shared validator (comm::parallel::validate_group_size)
+        // rejects what the executable path rejects — the simulator must
+        // never silently fall back to the flat ring.
+        let h = TopologyProfile::named("hier").unwrap(); // groups of 8
+        h.check_group_size(64).unwrap();
+        h.check_group_size(16).unwrap();
+        let single = h.check_group_size(8).unwrap_err();
+        assert!(
+            format!("{single:#}").contains("at least 2 groups"),
+            "{single:#}"
+        );
+        let uneven = h.check_group_size(12).unwrap_err();
+        let msg = format!("{uneven:#}");
+        assert!(msg.contains("does not divide"), "{msg}");
+        assert!(msg.contains("flat ring"), "remedy named: {msg}");
+        // flat profiles pair with any worker count
+        TopologyProfile::uniform().check_group_size(7).unwrap();
     }
 }

@@ -135,9 +135,11 @@ impl<'h> Trainer<'h> {
             fabric,
             cfg.compress.warmup_steps,
         );
-        // The wire codec must be configured before the socket mesh is
-        // built (the endpoints latch it at construction).
+        // The wire codec and the ring topology must be configured before
+        // the pooled lanes are built (the endpoints latch both at
+        // construction).
         coordinator.try_set_wire_codec(cfg.wire_codec()?)?;
+        coordinator.try_set_group_size(cfg.group_size)?;
         // Fallible switch: the socket backend binds a loopback TCP mesh,
         // and a refused mesh should be a clean CLI error, not a panic.
         coordinator.try_set_backend(Backend::parse(&cfg.backend)?)?;

@@ -496,6 +496,147 @@ fn bucketed_selection_equals_monolithic_selection_on_every_backend() {
 }
 
 // ----------------------------------------------------------------------
+// Hierarchy axis: the pooled backends re-run the parity contract with
+// the dense ring collective on the hierarchical ring-of-rings topology
+// (`--group-size`). The hierarchy is a scheduling choice, not an
+// arithmetic one — selections, leaders, rates, and the byte-exact
+// CommStats ledger must match the flat-ring sequential reference
+// exactly; ring-reduced f32 values stay within the same rtol/atol (the
+// 3-phase reduce reassociates the sum differently than the flat ring).
+// ----------------------------------------------------------------------
+
+/// Pooled coordinator with the hierarchical group size latched BEFORE
+/// the lanes are built (the topology is baked in at lane construction).
+fn hier_coordinator(
+    scheme: &str,
+    n: usize,
+    dim: usize,
+    rate: usize,
+    warmup: usize,
+    backend: Backend,
+    group_size: usize,
+) -> Coordinator {
+    let fabric = Fabric::new(FabricConfig {
+        workers: n,
+        topology: Topology::Ring,
+        ..FabricConfig::default()
+    });
+    let mode = if scheme == "none" {
+        Mode::Dense
+    } else {
+        Mode::Compressed(make_compressor(scheme, rate, 7).unwrap())
+    };
+    let k = (dim / rate).max(1);
+    Coordinator::new(n, dim, mode, 0.5, k, fabric, warmup)
+        .with_group_size(group_size)
+        .with_backend(backend)
+}
+
+fn run_hier_parity(
+    scheme: &str,
+    n: usize,
+    group_size: usize,
+    steps: usize,
+    warmup: usize,
+    backend: Backend,
+) {
+    let dim = 96;
+    let rate = 8;
+    let ctx = format!(
+        "hier scheme={scheme} n={n} g={group_size} backend={}",
+        backend.label()
+    );
+    let mut seq =
+        coordinator(scheme, n, dim, rate, warmup, Topology::Ring, Backend::Sequential);
+    let mut other = hier_coordinator(scheme, n, dim, rate, warmup, backend, group_size);
+    let mut rng = Rng::for_stream(0x41E2, n as u64);
+    for t in 0..steps {
+        let grads = rand_grads(&mut rng, n, dim);
+        let a = seq.step(t, &grads);
+        let b = other.step(t, &grads);
+        assert_step_parity(&ctx, t, &a, &b);
+        if t == steps / 2 {
+            assert_memory_parity(&format!("{ctx} (mid-run t={t})"), &seq, &other);
+        }
+    }
+    assert_memory_parity(&format!("{ctx} (final)"), &seq, &other);
+    assert_eq!(
+        seq.fabric.stats().ops,
+        other.fabric.stats().ops,
+        "CommStats mismatch {ctx}"
+    );
+}
+
+#[test]
+fn hierarchical_ring_matrix_matches_the_flat_sequential_reference() {
+    // schemes × pooled backends × group sizes {2, 4} × n ∈ {4, 8, 16};
+    // tilings the shared validator rejects ((4,4): a single group has no
+    // uplink ring) are skipped with the same predicate it enforces.
+    for backend in backends_under_test().into_iter().filter(Backend::is_pooled) {
+        for &scheme in &["scalecom", "scalecom-exact", "local-topk", "none"] {
+            for &n in &[4usize, 8, 16] {
+                for &g in &[2usize, 4] {
+                    if n % g != 0 || n / g < 2 {
+                        continue;
+                    }
+                    run_hier_parity(scheme, n, g, 30, 2, backend);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn hierarchical_runs_are_bit_deterministic() {
+    // Same fixed dataflow as the flat ring: two hierarchical runs of the
+    // same backend must agree bit for bit.
+    for backend in backends_under_test().into_iter().filter(Backend::is_pooled) {
+        let run = || {
+            let n = 8;
+            let dim = 128;
+            let mut c = hier_coordinator("scalecom", n, dim, 8, 0, backend, 4);
+            let mut rng = Rng::new(23);
+            let mut updates = Vec::new();
+            for t in 0..15 {
+                let grads = rand_grads(&mut rng, n, dim);
+                updates.push(c.step(t, &grads).update);
+            }
+            updates
+        };
+        assert_eq!(run(), run(), "{} hier run must be bit-deterministic", backend.label());
+    }
+}
+
+#[test]
+fn coordinator_rejects_bad_group_sizes_and_live_lane_retiling() {
+    let mk = || {
+        Coordinator::new(
+            4,
+            32,
+            Mode::Compressed(make_compressor("scalecom", 8, 7).unwrap()),
+            0.5,
+            4,
+            Fabric::new(FabricConfig {
+                workers: 4,
+                topology: Topology::Ring,
+                ..FabricConfig::default()
+            }),
+            0,
+        )
+    };
+    let mut c = mk();
+    let err = c.try_set_group_size(3).unwrap_err();
+    assert!(err.to_string().contains("does not divide"), "{err}");
+    let err = c.try_set_group_size(4).unwrap_err();
+    assert!(err.to_string().contains("at least 2 groups"), "{err}");
+    // Once the pooled lanes are built the topology is latched.
+    let mut c = mk().with_group_size(2).with_backend(Backend::Pipelined);
+    c.try_set_group_size(2).unwrap(); // same value: fine
+    let err = c.try_set_group_size(0).unwrap_err();
+    assert!(err.to_string().contains("already built"), "{err}");
+}
+
+// ----------------------------------------------------------------------
 // Wire-compression axis: the socket backend re-runs the parity contract
 // with the entropy codec enabled. Compression must be observably
 // invisible — selections, leaders, rates, and the byte-exact CommStats

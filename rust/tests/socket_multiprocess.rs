@@ -8,7 +8,10 @@
 //!   through `Fabric::record_*`) is parsed from its stdout and held to
 //!   `runtime::socket::sequential_digest` under the backend parity
 //!   contract: selections/`CommCost` exact, gather values bit-identical,
-//!   ring f32 within rtol 1e-5 / atol 1e-6.
+//!   ring f32 within rtol 1e-5 / atol 1e-6. The same lock runs once
+//!   more with `--group-size 2` (2 groups × 2 workers), so the
+//!   hierarchical ring-of-rings exchange is held to the flat reference
+//!   over real processes too.
 //! - **Fault injection**: kill one worker process mid-run; the
 //!   coordinator must exit non-zero with a clean `anyhow` error on
 //!   stderr within a bounded timeout — a dead peer may never hang the
@@ -137,10 +140,18 @@ fn wait_with_deadline(child: &mut Child, deadline: Instant, what: &str) -> std::
 /// Launch a 4-process localhost ring for `wl`, assert every process
 /// exits cleanly, and return the coordinator's stdout.
 fn run_cluster(wl: &NodeWorkload) -> String {
+    run_cluster_with(wl, &[])
+}
+
+/// [`run_cluster`] with extra per-node CLI flags (every rank gets the
+/// same flags — e.g. `--group-size` must match across the mesh).
+fn run_cluster_with(wl: &NodeWorkload, extra: &[&str]) -> String {
     let n = 4;
     let peers = free_addrs(n);
     let mut cluster = Cluster {
-        children: (0..n).map(|rank| spawn_node(&peers, rank, wl, 60)).collect(),
+        children: (0..n)
+            .map(|rank| spawn_node_with(&peers, rank, wl, 60, extra))
+            .collect(),
     };
     let outputs: Vec<std::thread::JoinHandle<String>> = cluster
         .children
@@ -215,6 +226,25 @@ fn four_process_ring_matches_sequential_digest_dense() {
     let want = sequential_digest(&wl, 4).expect("sequential reference");
     compare_digests(&got, &want, 1e-5, 1e-6)
         .unwrap_or_else(|e| panic!("multi-process vs sequential: {e:#}\n---\n{stdout}"));
+}
+
+#[test]
+fn four_process_hier_ring_matches_sequential_digest() {
+    // 2 groups × 2 workers (`--group-size 2`): the dense warmup
+    // all-reduce, the CLT-k index broadcast, and the shared-index sparse
+    // ring reduce all run the two-level intra/uplink/broadcast exchange
+    // over real processes — digest-locked to the flat sequential
+    // reference under the standard parity contract.
+    let wl = NodeWorkload {
+        steps: 30,
+        warmup: 4,
+        ..NodeWorkload::default()
+    };
+    let stdout = run_cluster_with(&wl, &["--group-size", "2"]);
+    let got = parse_digest(&stdout).expect("coordinator digest");
+    let want = sequential_digest(&wl, 4).expect("sequential reference");
+    compare_digests(&got, &want, 1e-5, 1e-6)
+        .unwrap_or_else(|e| panic!("multi-process hier vs sequential: {e:#}\n---\n{stdout}"));
 }
 
 #[test]
