@@ -170,6 +170,39 @@ pub fn compare_files(
     compare(&load(baseline)?, &load(current)?, prefixes, max_regress)
 }
 
+/// CI-friendly wrapper: a missing or empty baseline artifact skips the
+/// gate (`Ok(None)`) instead of failing — the first run on a branch has
+/// no previous artifact to diff against, and a gate that fails on "no
+/// history yet" teaches people to delete the gate. A baseline that
+/// exists with content but does not parse is still a hard error
+/// (corruption must stay loud), as is an unreadable current artifact.
+pub fn compare_files_with_optional_baseline(
+    baseline: &Path,
+    current: &Path,
+    prefixes: &[String],
+    max_regress: f64,
+) -> Result<Option<TrendReport>> {
+    let text = match std::fs::read_to_string(baseline) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => {
+            return Err(e).with_context(|| format!("reading {}", baseline.display()))
+        }
+    };
+    // Whitespace-only counts as absent too: CI caches materialize
+    // `touch`-style placeholder files.
+    if text.trim().is_empty() {
+        return Ok(None);
+    }
+    let base = Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e}", baseline.display()))?;
+    let cur_text = std::fs::read_to_string(current)
+        .with_context(|| format!("reading {}", current.display()))?;
+    let cur = Json::parse(&cur_text)
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e}", current.display()))?;
+    compare(&base, &cur, prefixes, max_regress).map(Some)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -276,6 +309,49 @@ mod tests {
         let r = compare_files(&bp, &cp, &prefixes(&["allreduce"]), 0.15).unwrap();
         assert_eq!(r.regressions.len(), 1);
         assert!(compare_files(Path::new("/nonexistent.json"), &cp, &[], 0.15).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_or_empty_baseline_skips_the_gate() {
+        let dir = std::env::temp_dir().join("scalecom_trend_optional_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let cp = dir.join("cur.json");
+        std::fs::write(&cp, artifact(&[("allreduce/a", 130.0)]).to_string_pretty()).unwrap();
+        // Missing baseline: skipped, not an error.
+        let missing = dir.join("never_written.json");
+        assert!(compare_files_with_optional_baseline(&missing, &cp, &[], 0.15)
+            .unwrap()
+            .is_none());
+        // Empty (and whitespace-only) baseline: also skipped.
+        let empty = dir.join("empty.json");
+        std::fs::write(&empty, "").unwrap();
+        assert!(compare_files_with_optional_baseline(&empty, &cp, &[], 0.15)
+            .unwrap()
+            .is_none());
+        std::fs::write(&empty, "  \n").unwrap();
+        assert!(compare_files_with_optional_baseline(&empty, &cp, &[], 0.15)
+            .unwrap()
+            .is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn present_baseline_still_gates_and_corruption_stays_loud() {
+        let dir = std::env::temp_dir().join("scalecom_trend_present_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let bp = dir.join("base.json");
+        let cp = dir.join("cur.json");
+        std::fs::write(&bp, artifact(&[("allreduce/a", 100.0)]).to_string_pretty()).unwrap();
+        std::fs::write(&cp, artifact(&[("allreduce/a", 130.0)]).to_string_pretty()).unwrap();
+        let r = compare_files_with_optional_baseline(&bp, &cp, &prefixes(&["allreduce"]), 0.15)
+            .unwrap()
+            .expect("present baseline gates");
+        assert_eq!(r.regressions.len(), 1);
+        // A baseline with *content* that fails to parse is a hard error,
+        // not a silent skip.
+        std::fs::write(&bp, "{ not json").unwrap();
+        assert!(compare_files_with_optional_baseline(&bp, &cp, &[], 0.15).is_err());
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

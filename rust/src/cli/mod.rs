@@ -118,11 +118,12 @@ SUBCOMMANDS:
                         pipelined: persistent pool, overlaps compute/comm;
                         socket: that pool over loopback TCP — needs
                         --peers loopback)
-                     --bucket-bytes N  bucketed gradient exchange: cap for
-                       the layer-aligned buckets scheduled per step, so
-                       each bucket's collective overlaps the next bucket's
-                       selection compute (0 = monolithic; implies
-                       per-layer budgets)
+                     --bucket-bytes N|auto  bucketed gradient exchange:
+                       cap for the layer-aligned buckets scheduled per
+                       step, so each bucket's collective overlaps the next
+                       bucket's selection compute (0 = monolithic; implies
+                       per-layer budgets; auto = run the calibrated tune
+                       sweep and train with the winning plan)
                      --wire-compression off|delta|full  wire entropy codec
                        for the socket backend (delta: varint-packed sparse
                        index frames; full: + adaptive byte compression of
@@ -155,6 +156,11 @@ SUBCOMMANDS:
                      --elastic-kill-worker W (default 1)
                      --elastic-heartbeat-ms H (default 100)
                      --elastic-restart-ms R (default 1000)
+                     --job-storm N  replay N synthetic submissions against
+                       the serve scheduler in virtual time (deterministic
+                       backpressure + FIFO-fairness report; no daemon)
+                     --storm-max-queue N --storm-max-concurrent N
+                     --storm-submit-every-ms X --storm-job-ms X
   tune             pick --bucket-bytes: calibrate compute from real
                    steps, sweep every bucket plan (+ the overlapped
                    driving mode) through the simulator, print the winner
@@ -162,7 +168,10 @@ SUBCOMMANDS:
                      --profile ... --steps N --calibration-steps N
                      --compute-per-elem-ns X (skip calibration)
   node             one node of a multi-process socket ring (N processes,
-                   localhost or N hosts); rank 0 emits the parity digest
+                   localhost or N hosts); rank 0 emits the parity digest;
+                   SIGINT/SIGTERM drains: the fleet agrees on a stop step
+                   (ring ballot) and exits with clean EOFs and a parseable
+                   partial digest
                      --role coordinator|worker
                      --bind HOST:PORT (this node's address)
                      --peers ADDR0,ADDR1,... (every node, coordinator
@@ -193,8 +202,39 @@ SUBCOMMANDS:
                        runs intra-ring + leader uplink ring + downlink
                        broadcast (0 = flat ring; must match on every node,
                        divide the node count, and leave >= 2 groups)
+  serve            multi-tenant training daemon: one persistent shared
+                   lane mesh, a bounded FIFO job queue with admission
+                   control, the framed client protocol (wire codec v5),
+                   and a Prometheus-style GET /metrics endpoint; runs
+                   until SIGINT/SIGTERM, then drains
+                     --bind HOST:PORT (default 127.0.0.1:7070, or
+                       SCALECOM_SERVE_ADDR; flag > env > default)
+                     --metrics-bind HOST:PORT (default 127.0.0.1:7071)
+                     --workers N  lane-mesh width (every job runs with
+                       this many workers; default 2)
+                     --max-queue N  wait-queue capacity — overflow gets a
+                       typed JobRejected (default 8, or
+                       SCALECOM_SERVE_MAX_QUEUE)
+                     --max-concurrent N  jobs sharing the lanes at once
+                       (default 2)
+                     --lane-transport channel|socket (default socket)
+                     --group-size G --wire-compression ... as for train
+  submit           submit a job spec to a serve daemon and stream its
+                   progress + digest
+                     scalecom submit scheme=scalecom steps=20 seed=7
+                     --spec 'k=v ...' (alternative to bare tokens)
+                     --addr HOST:PORT (default SCALECOM_SERVE_ADDR or
+                       127.0.0.1:7070) --no-follow --timeout-secs N
+                     --local --workers N  run the same spec in-process
+                       (no daemon) — the digest-parity reference
+  status           one-line daemon summary (queue depth, counters, lane
+                   health): --addr as for submit
+  jobs             per-job table (state, progress, spec): --addr ...
+  cancel           cancel a job: --job ID --addr ... (queued jobs are
+                   dequeued; running jobs stop at a step boundary)
   bench-trend      compare two bench_allreduce --json artifacts and fail
-                   on median regressions past the budget (the CI perf gate)
+                   on median regressions past the budget (the CI perf
+                   gate); a missing or empty baseline skips the gate
                      --baseline old.json --current new.json
                      --max-regress 0.15 --prefixes allreduce,codec/
   experiment <id>  regenerate a paper table/figure:

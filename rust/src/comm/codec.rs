@@ -828,14 +828,27 @@ impl FrameCodec {
             return None;
         }
         let choice = match msg {
-            WireMsg::DenseChunk { .. } | WireMsg::DenseChunkLvl { .. } => self.cfg.dense,
-            WireMsg::Sparse { .. } | WireMsg::Indices(_) => self.cfg.sparse,
-            // Handshake and liveness/recovery control frames are tiny
-            // and latency-bound: always raw.
+            WireMsg::DenseChunk { .. }
+            | WireMsg::DenseChunkLvl { .. }
+            | WireMsg::JobChunk { .. } => self.cfg.dense,
+            WireMsg::Sparse { .. } | WireMsg::Indices(_) | WireMsg::JobSparse { .. } => {
+                self.cfg.sparse
+            }
+            // Handshake, liveness/recovery, and serve-protocol control
+            // frames are tiny and latency-bound: always raw.
             WireMsg::Hello { .. }
             | WireMsg::Ping { .. }
             | WireMsg::Pong { .. }
-            | WireMsg::Resume { .. } => return None,
+            | WireMsg::Resume { .. }
+            | WireMsg::SubmitJob { .. }
+            | WireMsg::JobAccepted { .. }
+            | WireMsg::JobRejected { .. }
+            | WireMsg::JobProgress { .. }
+            | WireMsg::JobDone { .. }
+            | WireMsg::QueryStats { .. }
+            | WireMsg::StatsReport { .. }
+            | WireMsg::CancelJob { .. }
+            | WireMsg::JobCancelled { .. } => return None,
         };
         match choice {
             AlgoChoice::Force(Algo::Raw) => None,

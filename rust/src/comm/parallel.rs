@@ -490,29 +490,36 @@ impl StarNode {
 // ----------------------------------------------------------------------
 
 /// One collective's payload, submitted per worker to its comm lane.
-/// Every worker of a step must carry the same job kind and bucket tag.
+/// Every worker of a step must carry the same job kind and tags.
 /// Monolithic collectives use bucket 0; the bucketed exchange submits
 /// one tagged job set per bucket and the lanes multiplex them — FIFO per
 /// lane, so per-bucket collectives complete in submission order, and on
 /// the socket transport every wire frame carries the tag (verified on
 /// receive) so interleaved buckets can never mix.
+///
+/// `job` is the serve-plane tenant tag: one-shot runs use job 0 (which
+/// keeps legacy framing byte-identical on the wire), while the serve
+/// daemon stamps each admitted job's id so concurrent jobs sharing the
+/// mesh can never consume each other's frames — exactly the bucket-tag
+/// contract, one level up.
 pub enum CommJob {
     /// In-place ring all-reduce **average** of this worker's buffer.
-    RingAvg { bucket: u32, buf: Vec<f32> },
+    RingAvg { job: u32, bucket: u32, buf: Vec<f32> },
     /// Star-gather this worker's sparse contribution; the root reduces
     /// in worker order (the exact `Fabric::sparse_gather_avg` arithmetic).
-    Gather { bucket: u32, sparse: SparseGrad },
+    Gather { job: u32, bucket: u32, sparse: SparseGrad },
 }
 
 /// Completion of one staged collective, delivered by the root lane in
-/// submission order, echoing the submission's bucket tag.
+/// submission order, echoing the submission's job and bucket tags.
 #[derive(Debug)]
 pub enum CollectiveResult {
     /// Ring all-reduce: the fully reduced (averaged) buffer.
-    Reduced { bucket: u32, vals: Vec<f32> },
+    Reduced { job: u32, bucket: u32, vals: Vec<f32> },
     /// Star gather: root-reduced dense average + the wire-shape summary
     /// for the analytic cost model.
     Gathered {
+        job: u32,
         bucket: u32,
         vals: Vec<f32>,
         stats: GatherStats,
@@ -545,7 +552,7 @@ enum LaneRing {
 }
 
 impl LaneRing {
-    fn allreduce_avg(&mut self, bucket: u32, buf: &mut [f32]) -> anyhow::Result<()> {
+    fn allreduce_avg(&mut self, job: u32, bucket: u32, buf: &mut [f32]) -> anyhow::Result<()> {
         match self {
             // The channel mesh needs no tags: each edge is a dedicated
             // FIFO channel, so in-flight buckets cannot interleave out
@@ -558,11 +565,12 @@ impl LaneRing {
                 r.allreduce_avg(buf);
                 Ok(())
             }
-            // The socket mesh stamps (and verifies) the tag on every
+            // The socket mesh stamps (and verifies) the tags on every
             // frame — see `comm::wire`. The hierarchical mesh adds a
-            // level tag so intra-group and uplink streams can never mix.
-            LaneRing::Socket(r) => r.allreduce_avg_bucket(bucket, buf),
-            LaneRing::SocketHier(r) => r.allreduce_avg_bucket(bucket, buf),
+            // level tag so intra-group and uplink streams can never mix;
+            // job tags keep concurrent serve tenants apart the same way.
+            LaneRing::Socket(r) => r.allreduce_avg_tagged(job, bucket, buf),
+            LaneRing::SocketHier(r) => r.allreduce_avg_tagged(job, bucket, buf),
         }
     }
 }
@@ -574,10 +582,15 @@ enum LaneStar {
 }
 
 impl LaneStar {
-    fn gather(&mut self, bucket: u32, sg: SparseGrad) -> anyhow::Result<Option<Vec<SparseGrad>>> {
+    fn gather(
+        &mut self,
+        job: u32,
+        bucket: u32,
+        sg: SparseGrad,
+    ) -> anyhow::Result<Option<Vec<SparseGrad>>> {
         match self {
             LaneStar::Channel(s) => Ok(s.gather(sg)),
-            LaneStar::Socket(s) => s.gather_bucket(bucket, sg),
+            LaneStar::Socket(s) => s.gather_tagged(job, bucket, sg),
         }
     }
 }
@@ -744,19 +757,20 @@ fn comm_lane_loop(
     rx: Receiver<CommJob>,
     root: Option<Sender<CollectiveResult>>,
 ) {
-    while let Ok(job) = rx.recv() {
-        let outcome: anyhow::Result<Option<CollectiveResult>> = match job {
-            CommJob::RingAvg { bucket, mut buf } => ring_node
-                .allreduce_avg(bucket, &mut buf)
-                .map(|()| Some(CollectiveResult::Reduced { bucket, vals: buf })),
-            CommJob::Gather { bucket, sparse } => {
+    while let Ok(next) = rx.recv() {
+        let outcome: anyhow::Result<Option<CollectiveResult>> = match next {
+            CommJob::RingAvg { job, bucket, mut buf } => ring_node
+                .allreduce_avg(job, bucket, &mut buf)
+                .map(|()| Some(CollectiveResult::Reduced { job, bucket, vals: buf })),
+            CommJob::Gather { job, bucket, sparse } => {
                 let dim = sparse.dim;
-                star_node.gather(bucket, sparse).map(|gathered| {
+                star_node.gather(job, bucket, sparse).map(|gathered| {
                     gathered.map(|all| {
                         // One shared definition of the gather arithmetic
                         // (worker-order root reduction) for every backend.
                         let (acc, gs) = crate::comm::fabric::reduce_gathered(&all, dim);
                         CollectiveResult::Gathered {
+                            job,
                             bucket,
                             vals: acc,
                             stats: gs,
@@ -984,13 +998,13 @@ mod tests {
             lanes.submit(
                 inputs
                     .iter()
-                    .map(|v| CommJob::RingAvg { bucket: 0, buf: v.clone() })
+                    .map(|v| CommJob::RingAvg { job: 0, bucket: 0, buf: v.clone() })
                     .collect(),
             );
             match lanes.wait() {
-                CollectiveResult::Reduced { bucket, vals } => {
+                CollectiveResult::Reduced { job, bucket, vals } => {
                     // same ring, same chunk schedule → bit-identical
-                    assert_eq!(bucket, 0);
+                    assert_eq!((job, bucket), (0, 0));
                     assert_eq!(vals, expect, "n={n}");
                 }
                 other => panic!("expected ring result, got {other:?}"),
@@ -1007,6 +1021,7 @@ mod tests {
         let step = |bucket: u32, base: f32| -> Vec<CommJob> {
             (0..n)
                 .map(|w| CommJob::RingAvg {
+                    job: 0,
                     bucket,
                     buf: vec![base + w as f32; 16],
                 })
@@ -1017,7 +1032,7 @@ mod tests {
         lanes.submit(step(4, 10.0)); // avg of 10,11,12,13 = 11.5
         for (want_bucket, expect) in [(3u32, 2.5f32), (4, 11.5)] {
             match lanes.wait() {
-                CollectiveResult::Reduced { bucket, vals } => {
+                CollectiveResult::Reduced { job: _, bucket, vals } => {
                     assert_eq!(bucket, want_bucket, "results echo submission tags in order");
                     assert!(vals.iter().all(|&x| (x - expect).abs() < 1e-6), "{vals:?}");
                 }
@@ -1044,12 +1059,12 @@ mod tests {
         lanes.submit(
             sparses
                 .iter()
-                .map(|s| CommJob::Gather { bucket: 0, sparse: s.clone() })
+                .map(|s| CommJob::Gather { job: 0, bucket: 0, sparse: s.clone() })
                 .collect(),
         );
         let (avg, gs) = match lanes.wait() {
-            CollectiveResult::Gathered { bucket, vals, stats } => {
-                assert_eq!(bucket, 0);
+            CollectiveResult::Gathered { job, bucket, vals, stats } => {
+                assert_eq!((job, bucket), (0, 0));
                 (vals, stats)
             }
             other => panic!("expected gather result, got {other:?}"),
@@ -1096,21 +1111,22 @@ mod tests {
                 lanes.submit(
                     inputs
                         .iter()
-                        .map(|v| CommJob::RingAvg { bucket: 2, buf: v.clone() })
+                        .map(|v| CommJob::RingAvg { job: 7, bucket: 2, buf: v.clone() })
                         .collect(),
                 );
                 lanes.submit(
                     sparses
                         .iter()
-                        .map(|s| CommJob::Gather { bucket: 5, sparse: s.clone() })
+                        .map(|s| CommJob::Gather { job: 7, bucket: 5, sparse: s.clone() })
                         .collect(),
                 );
             }
             match (chan.wait(), sock.wait()) {
                 (
-                    CollectiveResult::Reduced { bucket: ba, vals: a },
-                    CollectiveResult::Reduced { bucket: bb, vals: b },
+                    CollectiveResult::Reduced { job: ja, bucket: ba, vals: a },
+                    CollectiveResult::Reduced { job: jb, bucket: bb, vals: b },
                 ) => {
+                    assert_eq!((ja, jb), (7, 7), "ring job tags n={n}");
                     assert_eq!((ba, bb), (2, 2), "ring tags n={n}");
                     assert_eq!(a, b, "ring n={n}");
                 }
@@ -1118,14 +1134,56 @@ mod tests {
             }
             match (chan.wait(), sock.wait()) {
                 (
-                    CollectiveResult::Gathered { bucket: ba, vals: a, stats: ga },
-                    CollectiveResult::Gathered { bucket: bb, vals: b, stats: gb },
+                    CollectiveResult::Gathered { job: ja, bucket: ba, vals: a, stats: ga },
+                    CollectiveResult::Gathered { job: jb, bucket: bb, vals: b, stats: gb },
                 ) => {
+                    assert_eq!((ja, jb), (7, 7), "gather job tags n={n}");
                     assert_eq!((ba, bb), (5, 5), "gather tags n={n}");
                     assert_eq!(a, b, "gather n={n}");
                     assert_eq!(ga, gb, "gather stats n={n}");
                 }
                 other => panic!("expected two gather results, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn socket_lanes_interleave_two_jobs_without_crosstalk() {
+        // Two tenants alternating on one socket mesh: every result must
+        // echo its submission's job tag in FIFO order, and values from
+        // one job must never leak into the other. Job 0 rides the legacy
+        // frames, job 9 the v5 job-tagged frames — same mesh, same step.
+        let n = 3;
+        let lanes = CommLanes::with_transport(
+            n,
+            LaneTransport::Socket(crate::comm::codec::WireCodecConfig::default()),
+        )
+        .expect("loopback socket mesh");
+        for round in 0..3u32 {
+            for (job, base) in [(0u32, 1.0f32), (9, 100.0)] {
+                lanes.submit(
+                    (0..n)
+                        .map(|w| CommJob::RingAvg {
+                            job,
+                            bucket: round,
+                            buf: vec![base + w as f32; 8],
+                        })
+                        .collect(),
+                );
+            }
+        }
+        for round in 0..3u32 {
+            for (want_job, expect) in [(0u32, 2.0f32), (9, 101.0)] {
+                match lanes.wait() {
+                    CollectiveResult::Reduced { job, bucket, vals } => {
+                        assert_eq!((job, bucket), (want_job, round));
+                        assert!(
+                            vals.iter().all(|&x| (x - expect).abs() < 1e-6),
+                            "job {want_job} round {round}: {vals:?}"
+                        );
+                    }
+                    other => panic!("expected ring result, got {other:?}"),
+                }
             }
         }
     }
@@ -1287,7 +1345,7 @@ mod tests {
             lanes.submit(
                 inputs
                     .iter()
-                    .map(|v| CommJob::RingAvg { bucket: 1, buf: v.clone() })
+                    .map(|v| CommJob::RingAvg { job: 0, bucket: 1, buf: v.clone() })
                     .collect(),
             );
         }

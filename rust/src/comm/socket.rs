@@ -727,6 +727,7 @@ impl SocketRingNode {
 
     fn allreduce_with(
         &mut self,
+        job: u32,
         bucket: u32,
         buf: &mut [f32],
         finish: impl Fn(&mut [f32]),
@@ -736,7 +737,12 @@ impl SocketRingNode {
         let rx = &mut self.rx_left;
         let mut send = |chunk: &[f32]| -> anyhow::Result<()> {
             let vals = chunk.to_vec();
-            let msg = if level == 0 {
+            // Job 0 (every one-shot run) keeps the legacy framing
+            // byte-for-byte; serve tenants (job >= 1) wrap every chunk
+            // in the v5 job-stamped frame.
+            let msg = if job != 0 {
+                WireMsg::JobChunk { job, level, bucket, vals }
+            } else if level == 0 {
                 WireMsg::DenseChunk { bucket, vals }
             } else {
                 WireMsg::DenseChunkLvl { level, bucket, vals }
@@ -748,9 +754,22 @@ impl SocketRingNode {
             // stream (the bucketed exchange); a tag mismatch means the
             // peer is executing a different collective — mis-framed
             // beyond recovery, fail at frame one. The level tag guards
-            // the same way across hierarchy levels.
+            // the same way across hierarchy levels, and the job tag
+            // across serve tenants sharing the mesh.
             match ring_recv(rx, id, n)? {
-                WireMsg::DenseChunk { bucket: got, vals } if level == 0 => {
+                WireMsg::JobChunk { job: got_job, level: got_lvl, bucket: got, vals }
+                    if job != 0 =>
+                {
+                    anyhow::ensure!(
+                        got_job == job,
+                        "ring node {id}/{n}: job tag mismatch: executing job \
+                         {job} but received a chunk for job {got_job} (peer out of sync)"
+                    );
+                    anyhow::ensure!(
+                        got_lvl == level,
+                        "ring node {id}/{n}: level tag mismatch: executing level \
+                         {level} but received a chunk for level {got_lvl} (peer out of sync)"
+                    );
                     anyhow::ensure!(
                         got == bucket,
                         "ring node {id}/{n}: bucket tag mismatch: executing bucket \
@@ -758,7 +777,17 @@ impl SocketRingNode {
                     );
                     Ok(vals)
                 }
-                WireMsg::DenseChunkLvl { level: got_lvl, bucket: got, vals } if level >= 1 => {
+                WireMsg::DenseChunk { bucket: got, vals } if job == 0 && level == 0 => {
+                    anyhow::ensure!(
+                        got == bucket,
+                        "ring node {id}/{n}: bucket tag mismatch: executing bucket \
+                         {bucket} but received a chunk for bucket {got} (peer out of sync)"
+                    );
+                    Ok(vals)
+                }
+                WireMsg::DenseChunkLvl { level: got_lvl, bucket: got, vals }
+                    if job == 0 && level >= 1 =>
+                {
                     anyhow::ensure!(
                         got_lvl == level,
                         "ring node {id}/{n}: level tag mismatch: executing level \
@@ -772,7 +801,8 @@ impl SocketRingNode {
                     Ok(vals)
                 }
                 other => anyhow::bail!(
-                    "ring node {id}/{n}: expected a level-{level} dense chunk, got {other:?}"
+                    "ring node {id}/{n}: expected a job-{job} level-{level} dense chunk, \
+                     got {other:?} (peer out of sync)"
                 ),
             }
         };
@@ -781,7 +811,7 @@ impl SocketRingNode {
 
     /// In-place sum-all-reduce (same chunk schedule as the channel ring).
     pub fn allreduce_sum(&mut self, buf: &mut [f32]) -> anyhow::Result<()> {
-        self.allreduce_with(0, buf, |_| {})
+        self.allreduce_with(0, 0, buf, |_| {})
     }
 
     /// In-place average-all-reduce (scale applied once per chunk on its
@@ -794,10 +824,23 @@ impl SocketRingNode {
     /// Bucket-tagged average-all-reduce: every wire frame carries
     /// `bucket`, and arriving chunks are verified against it, so the
     /// per-bucket collectives of a bucketed step interleave safely on
-    /// the stream.
+    /// the stream. One-shot runs are job 0 (legacy framing).
     pub fn allreduce_avg_bucket(&mut self, bucket: u32, buf: &mut [f32]) -> anyhow::Result<()> {
+        self.allreduce_avg_tagged(0, bucket, buf)
+    }
+
+    /// Job- and bucket-tagged average-all-reduce: serve tenants stamp
+    /// their job id on every frame (v5 `JobChunk`) so concurrent jobs
+    /// multiplexed onto one lane mesh can never mix streams — the same
+    /// mis-framed-stream contract as the bucket tag, one level up.
+    pub fn allreduce_avg_tagged(
+        &mut self,
+        job: u32,
+        bucket: u32,
+        buf: &mut [f32],
+    ) -> anyhow::Result<()> {
         let inv = 1.0 / self.n as f32;
-        self.allreduce_with(bucket, buf, |chunk| {
+        self.allreduce_with(job, bucket, buf, |chunk| {
             chunk.iter_mut().for_each(|v| *v *= inv);
         })
     }
@@ -884,33 +927,56 @@ pub struct SocketHierRingNode {
 impl SocketHierRingNode {
     fn allreduce_with(
         &mut self,
+        job: u32,
         bucket: u32,
         buf: &mut [f32],
         finish: impl Fn(&mut [f32]),
     ) -> anyhow::Result<()> {
         // Phase 1: intra-group sum — every member ends with the group sum.
-        self.intra.allreduce_with(bucket, buf, |_| {})?;
+        self.intra.allreduce_with(job, bucket, buf, |_| {})?;
         // Phase 2: leader ring over the uplink carries the group sums;
         // `finish` lands exactly once per chunk, on its owning leader.
         if let Some(up) = &mut self.up {
-            up.allreduce_with(bucket, buf, &finish)?;
+            up.allreduce_with(job, bucket, buf, &finish)?;
         }
         // Phase 3: the finished result flows down the group chain
         // (leader → member 1 → … → member m−1 over the intra right
         // links). A zero-length buffer moved no chunks above and moves
-        // no broadcast either.
+        // no broadcast either. Serve tenants stamp the broadcast frames
+        // with their job id exactly like the ring phases.
         if buf.is_empty() {
             return Ok(());
         }
+        let bcast = |vals: Vec<f32>| -> WireMsg {
+            if job != 0 {
+                WireMsg::JobChunk { job, level: 0, bucket, vals }
+            } else {
+                WireMsg::DenseChunk { bucket, vals }
+            }
+        };
         if self.up.is_some() {
-            self.intra.send_right(WireMsg::DenseChunk {
-                bucket,
-                vals: buf.to_vec(),
-            })?;
+            self.intra.send_right(bcast(buf.to_vec()))?;
         } else {
             let (id, n, m) = (self.intra.id, self.intra.n, self.group_size);
             let incoming = match self.intra.recv_left()? {
-                WireMsg::DenseChunk { bucket: got, vals } => {
+                WireMsg::DenseChunk { bucket: got, vals } if job == 0 => {
+                    anyhow::ensure!(
+                        got == bucket,
+                        "hier ring member {id}/{m}: bucket tag mismatch on the group \
+                         broadcast: executing bucket {bucket} but received bucket {got} \
+                         (peer out of sync)"
+                    );
+                    vals
+                }
+                WireMsg::JobChunk { job: got_job, level: 0, bucket: got, vals }
+                    if job != 0 =>
+                {
+                    anyhow::ensure!(
+                        got_job == job,
+                        "hier ring member {id}/{m}: job tag mismatch on the group \
+                         broadcast: executing job {job} but received job {got_job} \
+                         (peer out of sync)"
+                    );
                     anyhow::ensure!(
                         got == bucket,
                         "hier ring member {id}/{m}: bucket tag mismatch on the group \
@@ -932,10 +998,7 @@ impl SocketHierRingNode {
             );
             buf.copy_from_slice(&incoming);
             if self.intra.id + 1 < self.group_size {
-                self.intra.send_right(WireMsg::DenseChunk {
-                    bucket,
-                    vals: incoming,
-                })?;
+                self.intra.send_right(bcast(incoming))?;
             }
         }
         Ok(())
@@ -943,7 +1006,7 @@ impl SocketHierRingNode {
 
     /// In-place sum-all-reduce over all `n` workers.
     pub fn allreduce_sum(&mut self, buf: &mut [f32]) -> anyhow::Result<()> {
-        self.allreduce_with(0, buf, |_| {})
+        self.allreduce_with(0, 0, buf, |_| {})
     }
 
     /// In-place average-all-reduce (the leader ring applies the global
@@ -956,10 +1019,21 @@ impl SocketHierRingNode {
     /// Bucket-tagged average-all-reduce (see
     /// [`SocketRingNode::allreduce_avg_bucket`] for the tagging
     /// rationale — here the tag additionally rides the uplink's level-1
-    /// frames and the group broadcast).
+    /// frames and the group broadcast). One-shot runs are job 0.
     pub fn allreduce_avg_bucket(&mut self, bucket: u32, buf: &mut [f32]) -> anyhow::Result<()> {
+        self.allreduce_avg_tagged(0, bucket, buf)
+    }
+
+    /// Job- and bucket-tagged average-all-reduce across both levels (see
+    /// [`SocketRingNode::allreduce_avg_tagged`]).
+    pub fn allreduce_avg_tagged(
+        &mut self,
+        job: u32,
+        bucket: u32,
+        buf: &mut [f32],
+    ) -> anyhow::Result<()> {
         let inv = 1.0 / self.n as f32;
-        self.allreduce_with(bucket, buf, |chunk| {
+        self.allreduce_with(job, bucket, buf, |chunk| {
             chunk.iter_mut().for_each(|v| *v *= inv);
         })
     }
@@ -1056,9 +1130,23 @@ impl SocketStarNode {
 
     /// Bucket-tagged gather (see [`SocketRingNode::allreduce_avg_bucket`]
     /// for the tagging rationale): the root verifies every arriving
-    /// contribution against the bucket it is gathering.
+    /// contribution against the bucket it is gathering. One-shot runs
+    /// are job 0 (legacy `Sparse` framing).
     pub fn gather_bucket(
         &mut self,
+        bucket: u32,
+        contribution: SparseGrad,
+    ) -> anyhow::Result<Option<Vec<SparseGrad>>> {
+        self.gather_tagged(0, bucket, contribution)
+    }
+
+    /// Job- and bucket-tagged gather: serve tenants (job >= 1) frame
+    /// contributions as v5 `JobSparse` and the root verifies the job id
+    /// on every arrival — the mis-framed-stream contract of
+    /// [`SocketRingNode::allreduce_avg_tagged`] on the star topology.
+    pub fn gather_tagged(
+        &mut self,
+        job: u32,
         bucket: u32,
         contribution: SparseGrad,
     ) -> anyhow::Result<Option<Vec<SparseGrad>>> {
@@ -1072,7 +1160,22 @@ impl SocketStarNode {
                         .recv()
                         .with_context(|| format!("star root: gather from worker {}", i + 1))?;
                     match msg {
-                        WireMsg::Sparse { bucket: got, grad } => {
+                        WireMsg::Sparse { bucket: got, grad } if job == 0 => {
+                            anyhow::ensure!(
+                                got == bucket,
+                                "star root: bucket tag mismatch from worker {}: gathering \
+                                 bucket {bucket} but received bucket {got} (peer out of sync)",
+                                i + 1
+                            );
+                            all.push(grad);
+                        }
+                        WireMsg::JobSparse { job: got_job, bucket: got, grad } if job != 0 => {
+                            anyhow::ensure!(
+                                got_job == job,
+                                "star root: job tag mismatch from worker {}: gathering \
+                                 job {job} but received job {got_job} (peer out of sync)",
+                                i + 1
+                            );
                             anyhow::ensure!(
                                 got == bucket,
                                 "star root: bucket tag mismatch from worker {}: gathering \
@@ -1082,7 +1185,8 @@ impl SocketStarNode {
                             all.push(grad);
                         }
                         other => anyhow::bail!(
-                            "star root: expected a sparse contribution from worker {}, got {other:?}",
+                            "star root: expected a job-{job} sparse contribution from \
+                             worker {}, got {other:?} (peer out of sync)",
                             i + 1
                         ),
                     }
@@ -1090,13 +1194,22 @@ impl SocketStarNode {
                 Ok(Some(all))
             }
             None => {
+                let msg = if job != 0 {
+                    WireMsg::JobSparse {
+                        job,
+                        bucket,
+                        grad: contribution,
+                    }
+                } else {
+                    WireMsg::Sparse {
+                        bucket,
+                        grad: contribution,
+                    }
+                };
                 self.to_root
                     .as_ref()
                     .expect("non-root star node has a root link")
-                    .send(WireMsg::Sparse {
-                        bucket,
-                        grad: contribution,
-                    })
+                    .send(msg)
                     .with_context(|| format!("star worker {}: send to root", self.id))?;
                 Ok(None)
             }
@@ -2053,6 +2166,111 @@ mod tests {
             .expect("root")
         });
         assert!(format!("{err:#}").contains("bucket tag mismatch"), "{err:#}");
+    }
+
+    #[test]
+    fn job_tag_mismatch_is_detected_not_mixed() {
+        // Node 0 reduces job 4 while node 1 reduces job 8 (same bucket):
+        // the first cross frame must fail the collective with a job tag
+        // error instead of silently reducing one tenant into the other —
+        // the bucket-tag contract, one level up.
+        let mut nodes =
+            local_ring(2, Duration::from_secs(5), WireCodecConfig::off(), &CodecStats::new())
+                .expect("loopback ring");
+        let n1 = nodes.remove(1);
+        let n0 = nodes.remove(0);
+        let errs = std::thread::scope(|s| {
+            let h0 = s.spawn(move || {
+                let mut n0 = n0;
+                n0.allreduce_avg_tagged(4, 1, &mut vec![1.0f32; 8]).unwrap_err()
+            });
+            let h1 = s.spawn(move || {
+                let mut n1 = n1;
+                n1.allreduce_avg_tagged(8, 1, &mut vec![1.0f32; 8]).unwrap_err()
+            });
+            [h0.join().expect("node 0"), h1.join().expect("node 1")]
+        });
+        for e in &errs {
+            let msg = format!("{e:#}");
+            assert!(msg.contains("job tag mismatch"), "{msg}");
+        }
+    }
+
+    #[test]
+    fn job_frames_never_mix_with_legacy_frames() {
+        // A job-0 (legacy-framed) node paired with a job-tagged node:
+        // both must fail with a mis-framed-stream error, never decode
+        // each other's chunks as their own.
+        let mut nodes =
+            local_ring(2, Duration::from_secs(5), WireCodecConfig::off(), &CodecStats::new())
+                .expect("loopback ring");
+        let n1 = nodes.remove(1);
+        let n0 = nodes.remove(0);
+        let errs = std::thread::scope(|s| {
+            let h0 = s.spawn(move || {
+                let mut n0 = n0;
+                n0.allreduce_avg_bucket(1, &mut vec![1.0f32; 8]).unwrap_err()
+            });
+            let h1 = s.spawn(move || {
+                let mut n1 = n1;
+                n1.allreduce_avg_tagged(6, 1, &mut vec![1.0f32; 8]).unwrap_err()
+            });
+            [h0.join().expect("node 0"), h1.join().expect("node 1")]
+        });
+        for e in &errs {
+            let msg = format!("{e:#}");
+            assert!(msg.contains("peer out of sync"), "{msg}");
+        }
+    }
+
+    #[test]
+    fn star_job_tag_mismatch_is_detected() {
+        let nodes =
+            local_star(2, Duration::from_secs(5), WireCodecConfig::off(), &CodecStats::new())
+                .expect("loopback star");
+        let mut it = nodes.into_iter();
+        let root = it.next().expect("root");
+        let worker = it.next().expect("worker");
+        let err = std::thread::scope(|s| {
+            s.spawn(move || {
+                let mut w = worker;
+                // worker contributes under job 2...
+                w.gather_tagged(2, 3, SparseGrad::new(4, vec![1], vec![1.0]))
+                    .expect("worker send");
+            });
+            let mut r = root;
+            // ...while the root gathers job 5
+            s.spawn(move || {
+                r.gather_tagged(5, 3, SparseGrad::new(4, vec![0], vec![1.0]))
+                    .unwrap_err()
+            })
+            .join()
+            .expect("root")
+        });
+        assert!(format!("{err:#}").contains("job tag mismatch"), "{err:#}");
+    }
+
+    #[test]
+    fn tagged_collectives_match_legacy_bit_for_bit() {
+        // The job tag changes framing only, never arithmetic: the same
+        // inputs reduced under job 0 and under a tenant job id must be
+        // bit-identical.
+        let n = 3;
+        let inputs: Vec<Vec<f32>> = (0..n)
+            .map(|w| (0..17).map(|i| ((w * 17 + i) as f32 * 0.3).sin()).collect())
+            .collect();
+        let inputs_ref = &inputs;
+        let legacy = on_ring(n, |node, w| {
+            let mut buf = inputs_ref[w].clone();
+            node.allreduce_avg_bucket(2, &mut buf).expect("legacy");
+            buf
+        });
+        let tagged = on_ring(n, |node, w| {
+            let mut buf = inputs_ref[w].clone();
+            node.allreduce_avg_tagged(11, 2, &mut buf).expect("tagged");
+            buf
+        });
+        assert_eq!(legacy, tagged);
     }
 
     #[test]

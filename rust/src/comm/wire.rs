@@ -20,6 +20,17 @@
 //! | 9   | `Pong`          | u32 seq                                                         |
 //! | 10  | `Resume`        | u32 rank, u64 step                                              |
 //! | 11  | `DenseChunkLvl` | u8 level, u32 bucket, u32 count, count × f32                    |
+//! | 12  | `JobChunk`      | u32 job, u8 level, u32 bucket, u32 count, count × f32           |
+//! | 13  | `JobSparse`     | u32 job, u32 bucket, u32 dim, u32 nnz, nnz × u32, nnz × f32     |
+//! | 14  | `SubmitJob`     | u32 len, len × u8 (UTF-8 job spec)                              |
+//! | 15  | `JobAccepted`   | u32 job, u32 queue_pos                                          |
+//! | 16  | `JobRejected`   | u32 len, len × u8 (UTF-8 reason)                                |
+//! | 17  | `JobProgress`   | u32 job, u32 step, u32 total                                    |
+//! | 18  | `JobDone`       | u32 job, u32 len, len × u8 (UTF-8 digest)                       |
+//! | 19  | `QueryStats`    | u8 what (0 = summary, 1 = job table)                            |
+//! | 20  | `StatsReport`   | u32 len, len × u8 (UTF-8 report)                                |
+//! | 21  | `CancelJob`     | u32 job                                                         |
+//! | 22  | `JobCancelled`  | u32 job, u8 outcome (0 = dequeued, 1 = signalled)               |
 //!
 //! Tags 5-7 are the **entropy stage** (`comm::codec`, wire codec v2):
 //! sparse index sets are strictly increasing by construction, so they
@@ -48,6 +59,19 @@
 //! wear the new tag, so a flat ring's wire bytes are unchanged. `Hello`
 //! gains the `uplink` purpose byte (2) to classify leader-ring
 //! rendezvous connections.
+//!
+//! Tags 12-22 are the **multi-tenant serve plane** (wire codec v5).
+//! `JobChunk`/`JobSparse` are the payload frames of shared comm lanes:
+//! like the bucket and level tags before them, they stamp a **job id**
+//! on every frame of a collective so two jobs multiplexed onto one lane
+//! mesh can never have their streams confused — a frame wearing the
+//! wrong job id is a mis-framed stream, rejected at frame one. Job id 0
+//! (single-tenant traffic) keeps the legacy framing byte-for-byte, so
+//! every pre-serve wire byte is unchanged. Tags 14-22 are the client
+//! control protocol of `scalecom serve` (submit/progress/stats/cancel);
+//! like every control frame they are tiny, latency-bound, and never
+//! packed or byte-compressed. `Hello` gains the `client` purpose byte
+//! (3); a serve daemon rejects clients older than v5 at the handshake.
 //!
 //! `DenseChunk` carries the ring reduce-scatter/all-gather payloads,
 //! `Sparse` the star-gather contributions, and the control tags the
@@ -100,10 +124,12 @@ pub const MAX_FRAME_BYTES: usize = 64 << 20;
 /// Wire codec version spoken by this build, carried in `Hello`. v1 is
 /// the raw tag set (1-4); v2 adds the packed/compressed tags (5-7); v3
 /// adds the liveness/recovery control tags (8-10); v4 adds the
-/// hierarchy level tag (11) and the `uplink` Hello purpose. No bump
-/// changes the byte layout of an older tag, so `off`-mode flat-ring
-/// frames remain byte-identical to v1 builds.
-pub const WIRE_CODEC_VERSION: u8 = 4;
+/// hierarchy level tag (11) and the `uplink` Hello purpose; v5 adds the
+/// job-tagged payload frames (12-13), the serve client protocol
+/// (14-22), and the `client` Hello purpose. No bump changes the byte
+/// layout of an older tag, so `off`-mode flat-ring frames remain
+/// byte-identical to v1 builds.
+pub const WIRE_CODEC_VERSION: u8 = 5;
 
 /// What an inbound connection is for (field of [`WireMsg::Hello`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -115,6 +141,9 @@ pub enum Purpose {
     /// The peer is our left neighbor on the inter-group leader ring
     /// (v4); this stream carries level-tagged uplink chunks.
     Uplink,
+    /// The peer is a serve client (v5); this stream carries the job
+    /// submit/progress/stats control protocol, never collectives.
+    Client,
 }
 
 impl Purpose {
@@ -123,6 +152,7 @@ impl Purpose {
             Purpose::Ring => 0,
             Purpose::Star => 1,
             Purpose::Uplink => 2,
+            Purpose::Client => 3,
         }
     }
 
@@ -131,6 +161,7 @@ impl Purpose {
             0 => Ok(Purpose::Ring),
             1 => Ok(Purpose::Star),
             2 => Ok(Purpose::Uplink),
+            3 => Ok(Purpose::Client),
             other => anyhow::bail!("wire: unknown Hello purpose byte {other}"),
         }
     }
@@ -169,6 +200,42 @@ pub enum WireMsg {
     /// Level-0 traffic uses the legacy tag so flat rings stay
     /// byte-identical across the version bump.
     DenseChunkLvl { level: u8, bucket: u32, vals: Vec<f32> },
+    /// A ring hop's dense payload on a **multi-tenant** lane mesh (v5):
+    /// like [`WireMsg::DenseChunkLvl`] but additionally stamped with the
+    /// id of the serve job whose collective it belongs to (job >= 1; job
+    /// 0 keeps the legacy tags so single-tenant wire bytes never change).
+    /// A receiver executing job J rejects any other job's frame — the
+    /// same mis-framed-stream contract as the bucket and level tags.
+    JobChunk { job: u32, level: u8, bucket: u32, vals: Vec<f32> },
+    /// A star worker's sparse contribution on a multi-tenant lane mesh
+    /// (v5), job-stamped like [`WireMsg::JobChunk`].
+    JobSparse { job: u32, bucket: u32, grad: SparseGrad },
+    /// Serve control (v5): a client's job submission. The spec travels
+    /// as the canonical `key=value` text form of `serve::JobSpec`.
+    SubmitJob { spec: String },
+    /// Serve control (v5): admission granted — the assigned job id and
+    /// the queue position at admission time (0 = dispatches next).
+    JobAccepted { job: u32, queue_pos: u32 },
+    /// Serve control (v5): admission denied, with the typed reason's
+    /// rendered text (queue full, invalid spec, draining, ...).
+    JobRejected { reason: String },
+    /// Serve control (v5): streamed per-step progress of a running job.
+    JobProgress { job: u32, step: u32, total: u32 },
+    /// Serve control (v5): terminal frame of a submit stream — the job
+    /// finished and this is its full parity digest text.
+    JobDone { job: u32, digest: String },
+    /// Serve control (v5): a stats query (`what` 0 = daemon summary,
+    /// 1 = the per-job table).
+    QueryStats { what: u8 },
+    /// Serve control (v5): the daemon's rendered reply to
+    /// [`WireMsg::QueryStats`].
+    StatsReport { text: String },
+    /// Serve control (v5): cancel a queued or running job.
+    CancelJob { job: u32 },
+    /// Serve control (v5): cancellation acknowledged — `outcome` 0 means
+    /// the job was still queued and was dequeued, 1 means a running job
+    /// was signalled and will stop at its next step boundary.
+    JobCancelled { job: u32, outcome: u8 },
 }
 
 const TAG_DENSE: u8 = 1;
@@ -182,6 +249,17 @@ const TAG_PING: u8 = 8;
 const TAG_PONG: u8 = 9;
 const TAG_RESUME: u8 = 10;
 const TAG_DENSE_LVL: u8 = 11;
+const TAG_JOB_DENSE: u8 = 12;
+const TAG_JOB_SPARSE: u8 = 13;
+const TAG_SUBMIT_JOB: u8 = 14;
+const TAG_JOB_ACCEPTED: u8 = 15;
+const TAG_JOB_REJECTED: u8 = 16;
+const TAG_JOB_PROGRESS: u8 = 17;
+const TAG_JOB_DONE: u8 = 18;
+const TAG_QUERY_STATS: u8 = 19;
+const TAG_STATS_REPORT: u8 = 20;
+const TAG_CANCEL_JOB: u8 = 21;
+const TAG_JOB_CANCELLED: u8 = 22;
 
 fn put_u32(out: &mut Vec<u8>, v: u32) {
     out.extend_from_slice(&v.to_le_bytes());
@@ -229,7 +307,24 @@ pub fn frame_len(msg: &WireMsg) -> usize {
             WireMsg::Indices(idx) => 4 + 4 * idx.len(),
             WireMsg::Ping { .. } | WireMsg::Pong { .. } => 4,
             WireMsg::Resume { .. } => 12,
+            WireMsg::JobChunk { vals, .. } => 13 + 4 * vals.len(),
+            WireMsg::JobSparse { grad, .. } => 16 + 8 * grad.indices.len(),
+            WireMsg::SubmitJob { spec } => 4 + spec.len(),
+            WireMsg::JobAccepted { .. } => 8,
+            WireMsg::JobRejected { reason } => 4 + reason.len(),
+            WireMsg::JobProgress { .. } => 12,
+            WireMsg::JobDone { digest, .. } => 8 + digest.len(),
+            WireMsg::QueryStats { .. } => 1,
+            WireMsg::StatsReport { text } => 4 + text.len(),
+            WireMsg::CancelJob { .. } => 4,
+            WireMsg::JobCancelled { .. } => 5,
         }
+}
+
+/// Length-prefixed UTF-8 string field (serve control frames).
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
 }
 
 /// Append `msg`'s body (tag + fields, no length header) to `out`.
@@ -304,6 +399,75 @@ pub(crate) fn encode_body_into(msg: &WireMsg, packing: bool, out: &mut Vec<u8>) 
             out.push(TAG_RESUME);
             put_u32(out, *rank);
             out.extend_from_slice(&step.to_le_bytes());
+            false
+        }
+        WireMsg::JobChunk { job, level, bucket, vals } => {
+            out.push(TAG_JOB_DENSE);
+            put_u32(out, *job);
+            out.push(*level);
+            put_u32(out, *bucket);
+            put_u32(out, vals.len() as u32);
+            put_f32s(out, vals);
+            false
+        }
+        WireMsg::JobSparse { job, bucket, grad } => {
+            out.push(TAG_JOB_SPARSE);
+            put_u32(out, *job);
+            put_u32(out, *bucket);
+            put_u32(out, grad.dim as u32);
+            put_u32(out, grad.indices.len() as u32);
+            put_u32s(out, &grad.indices);
+            put_f32s(out, &grad.values);
+            false
+        }
+        WireMsg::SubmitJob { spec } => {
+            out.push(TAG_SUBMIT_JOB);
+            put_str(out, spec);
+            false
+        }
+        WireMsg::JobAccepted { job, queue_pos } => {
+            out.push(TAG_JOB_ACCEPTED);
+            put_u32(out, *job);
+            put_u32(out, *queue_pos);
+            false
+        }
+        WireMsg::JobRejected { reason } => {
+            out.push(TAG_JOB_REJECTED);
+            put_str(out, reason);
+            false
+        }
+        WireMsg::JobProgress { job, step, total } => {
+            out.push(TAG_JOB_PROGRESS);
+            put_u32(out, *job);
+            put_u32(out, *step);
+            put_u32(out, *total);
+            false
+        }
+        WireMsg::JobDone { job, digest } => {
+            out.push(TAG_JOB_DONE);
+            put_u32(out, *job);
+            put_str(out, digest);
+            false
+        }
+        WireMsg::QueryStats { what } => {
+            out.push(TAG_QUERY_STATS);
+            out.push(*what);
+            false
+        }
+        WireMsg::StatsReport { text } => {
+            out.push(TAG_STATS_REPORT);
+            put_str(out, text);
+            false
+        }
+        WireMsg::CancelJob { job } => {
+            out.push(TAG_CANCEL_JOB);
+            put_u32(out, *job);
+            false
+        }
+        WireMsg::JobCancelled { job, outcome } => {
+            out.push(TAG_JOB_CANCELLED);
+            put_u32(out, *job);
+            out.push(*outcome);
             false
         }
     }
@@ -385,6 +549,17 @@ impl<'a> Cursor<'a> {
             .chunks_exact(4)
             .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
             .collect())
+    }
+
+    /// Length-prefixed UTF-8 string field; the length is validated
+    /// against the remaining body before any allocation.
+    fn str_field(&mut self) -> anyhow::Result<String> {
+        let len = self.u32()?;
+        let len = check_count(self, len, 1, "string byte")?;
+        let bytes = self.take(len)?;
+        std::str::from_utf8(bytes)
+            .map(|s| s.to_string())
+            .map_err(|_| anyhow::anyhow!("wire: string field is not valid UTF-8"))
     }
 
     fn done(&self) -> anyhow::Result<()> {
@@ -538,6 +713,86 @@ pub(crate) fn decode_body_uncompressed(body: &[u8]) -> anyhow::Result<WireMsg> {
             let step = c.u64()?;
             c.done()?;
             WireMsg::Resume { rank, step }
+        }
+        TAG_JOB_DENSE => {
+            let job = c.u32()?;
+            let level = c.u8()?;
+            let bucket = c.u32()?;
+            let count = c.u32()?;
+            let count = check_count(&c, count, 4, "dense element")?;
+            let vals = c.f32s(count)?;
+            c.done()?;
+            WireMsg::JobChunk { job, level, bucket, vals }
+        }
+        TAG_JOB_SPARSE => {
+            let job = c.u32()?;
+            let bucket = c.u32()?;
+            let dim = c.u32()? as usize;
+            let nnz = c.u32()?;
+            let nnz = check_count(&c, nnz, 8, "sparse nnz")?;
+            let indices = c.u32s(nnz)?;
+            let values = c.f32s(nnz)?;
+            c.done()?;
+            anyhow::ensure!(
+                codec::strictly_increasing(&indices),
+                "wire: sparse indices must be strictly increasing"
+            );
+            check_sparse_range(&indices, dim)?;
+            WireMsg::JobSparse {
+                job,
+                bucket,
+                grad: SparseGrad::new(dim, indices, values),
+            }
+        }
+        TAG_SUBMIT_JOB => {
+            let spec = c.str_field()?;
+            c.done()?;
+            WireMsg::SubmitJob { spec }
+        }
+        TAG_JOB_ACCEPTED => {
+            let job = c.u32()?;
+            let queue_pos = c.u32()?;
+            c.done()?;
+            WireMsg::JobAccepted { job, queue_pos }
+        }
+        TAG_JOB_REJECTED => {
+            let reason = c.str_field()?;
+            c.done()?;
+            WireMsg::JobRejected { reason }
+        }
+        TAG_JOB_PROGRESS => {
+            let job = c.u32()?;
+            let step = c.u32()?;
+            let total = c.u32()?;
+            c.done()?;
+            WireMsg::JobProgress { job, step, total }
+        }
+        TAG_JOB_DONE => {
+            let job = c.u32()?;
+            let digest = c.str_field()?;
+            c.done()?;
+            WireMsg::JobDone { job, digest }
+        }
+        TAG_QUERY_STATS => {
+            let what = c.u8()?;
+            c.done()?;
+            WireMsg::QueryStats { what }
+        }
+        TAG_STATS_REPORT => {
+            let text = c.str_field()?;
+            c.done()?;
+            WireMsg::StatsReport { text }
+        }
+        TAG_CANCEL_JOB => {
+            let job = c.u32()?;
+            c.done()?;
+            WireMsg::CancelJob { job }
+        }
+        TAG_JOB_CANCELLED => {
+            let job = c.u32()?;
+            let outcome = c.u8()?;
+            c.done()?;
+            WireMsg::JobCancelled { job, outcome }
         }
         TAG_COMPRESSED => anyhow::bail!("wire: nested compressed frame"),
         other => anyhow::bail!("wire: unknown message tag {other}"),
@@ -706,6 +961,112 @@ mod tests {
             bucket: u32::MAX,
             vals: vec![0.5, -1.25],
         });
+        roundtrip(hello(9, Purpose::Client));
+        roundtrip(WireMsg::JobChunk { job: 1, level: 0, bucket: 3, vals: vec![1.0, -2.5] });
+        roundtrip(WireMsg::JobChunk { job: u32::MAX, level: 2, bucket: 0, vals: vec![] });
+        roundtrip(WireMsg::JobSparse {
+            job: 7,
+            bucket: 2,
+            grad: SparseGrad::new(16, vec![1, 8, 15], vec![0.5, -1.0, 2.0]),
+        });
+        roundtrip(WireMsg::SubmitJob { spec: "scheme=scalecom dim=96".into() });
+        roundtrip(WireMsg::SubmitJob { spec: String::new() });
+        roundtrip(WireMsg::JobAccepted { job: 4, queue_pos: 2 });
+        roundtrip(WireMsg::JobRejected { reason: "queue full (depth 8/8)".into() });
+        roundtrip(WireMsg::JobProgress { job: 4, step: 17, total: 50 });
+        roundtrip(WireMsg::JobDone { job: 4, digest: "digest v1 workers=2\n".into() });
+        roundtrip(WireMsg::QueryStats { what: 0 });
+        roundtrip(WireMsg::QueryStats { what: 1 });
+        roundtrip(WireMsg::StatsReport { text: "jobs: 0 queued".into() });
+        roundtrip(WireMsg::CancelJob { job: 9 });
+        roundtrip(WireMsg::JobCancelled { job: 9, outcome: 1 });
+    }
+
+    #[test]
+    fn job_tags_survive_the_wire_and_stay_distinct_from_legacy_frames() {
+        for job in [1u32, 42, u32::MAX] {
+            let msg = WireMsg::JobChunk { job, level: 0, bucket: 5, vals: vec![3.0; 4] };
+            let frame = encode(&msg);
+            assert_eq!(frame[4], TAG_JOB_DENSE);
+            match decode_body(&frame[4..]).unwrap() {
+                WireMsg::JobChunk { job: got, bucket, .. } => {
+                    assert_eq!((got, bucket), (job, 5));
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+        // a job-tagged frame never decodes as a legacy DenseChunk, and a
+        // truncated one (missing the count) errors cleanly
+        let body = vec![TAG_JOB_DENSE, 1, 0, 0, 0, 0, 0, 0, 0, 0];
+        assert!(decode_body(&body).is_err());
+        // JobSparse keeps the Sparse invariants: unsorted indices rejected
+        let mut body = vec![TAG_JOB_SPARSE];
+        body.extend_from_slice(&1u32.to_le_bytes()); // job
+        body.extend_from_slice(&0u32.to_le_bytes()); // bucket
+        body.extend_from_slice(&8u32.to_le_bytes()); // dim
+        body.extend_from_slice(&2u32.to_le_bytes()); // nnz
+        for i in [3u32, 1] {
+            body.extend_from_slice(&i.to_le_bytes());
+        }
+        for v in [1.0f32, 2.0] {
+            body.extend_from_slice(&v.to_le_bytes());
+        }
+        assert!(decode_body(&body).is_err());
+    }
+
+    #[test]
+    fn serve_string_fields_reject_lying_lengths_and_bad_utf8() {
+        // declared length outruns the body — caught before allocation
+        let mut body = vec![TAG_SUBMIT_JOB];
+        body.extend_from_slice(&100u32.to_le_bytes());
+        body.extend_from_slice(b"short");
+        assert!(decode_body(&body).is_err());
+        // invalid UTF-8 payload
+        let mut body = vec![TAG_JOB_REJECTED];
+        body.extend_from_slice(&2u32.to_le_bytes());
+        body.extend_from_slice(&[0xFF, 0xFE]);
+        assert!(decode_body(&body).is_err());
+        // trailing bytes after a complete control frame
+        let mut body = vec![TAG_CANCEL_JOB];
+        body.extend_from_slice(&7u32.to_le_bytes());
+        body.push(0);
+        assert!(decode_body(&body).is_err());
+    }
+
+    #[test]
+    fn serve_control_frames_are_never_compressed_or_packed() {
+        let mut codec = FrameCodec::new(
+            WireCodecConfig {
+                mode: WireCompression::Full,
+                min_bytes: 0,
+                dense: AlgoChoice::Auto,
+                sparse: AlgoChoice::Auto,
+            },
+            CodecStats::new(),
+        );
+        let mut frame = Vec::new();
+        // even a large, highly compressible control body ships raw
+        for (msg, tag) in [
+            (WireMsg::SubmitJob { spec: "a".repeat(10_000) }, TAG_SUBMIT_JOB),
+            (WireMsg::JobRejected { reason: "b".repeat(10_000) }, TAG_JOB_REJECTED),
+            (WireMsg::JobDone { job: 1, digest: "c".repeat(10_000) }, TAG_JOB_DONE),
+            (WireMsg::StatsReport { text: "d".repeat(10_000) }, TAG_STATS_REPORT),
+            (WireMsg::JobAccepted { job: 1, queue_pos: 0 }, TAG_JOB_ACCEPTED),
+            (WireMsg::JobProgress { job: 1, step: 2, total: 3 }, TAG_JOB_PROGRESS),
+            (WireMsg::QueryStats { what: 0 }, TAG_QUERY_STATS),
+            (WireMsg::CancelJob { job: 1 }, TAG_CANCEL_JOB),
+            (WireMsg::JobCancelled { job: 1, outcome: 0 }, TAG_JOB_CANCELLED),
+        ] {
+            codec.encode_frame_into(&msg, &mut frame).unwrap();
+            assert_eq!(frame[4], tag, "control frame must keep its raw tag");
+            assert_eq!(decode_body(&frame[4..]).unwrap(), msg);
+        }
+        // the job-tagged payload frames, by contrast, MAY wear the
+        // envelope — they are payload, not control
+        let payload = WireMsg::JobChunk { job: 2, level: 0, bucket: 0, vals: vec![1.0; 50_000] };
+        codec.encode_frame_into(&payload, &mut frame).unwrap();
+        assert_eq!(frame[4], TAG_COMPRESSED, "job payload compresses like dense");
+        assert_eq!(decode_body(&frame[4..]).unwrap(), payload);
     }
 
     #[test]

@@ -29,6 +29,7 @@ pub mod models;
 pub mod perfmodel;
 pub mod proptest;
 pub mod runtime;
+pub mod serve;
 pub mod simnet;
 pub mod stats;
 pub mod trainer;

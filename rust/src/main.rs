@@ -1,7 +1,8 @@
 //! `scalecom` — launcher CLI for the ScaleCom (NeurIPS 2020) reproduction.
 //!
-//! Subcommands: train, simulate, tune, experiment, perf-model,
-//! compress-bench, artifacts-check, list. See `cli::USAGE`.
+//! Subcommands: train, simulate, tune, node, serve, submit, status,
+//! jobs, cancel, bench-trend, experiment, perf-model, compress-bench,
+//! artifacts-check, list. See `cli::USAGE`.
 
 use anyhow::Result;
 use scalecom::cli::{Args, USAGE};
@@ -38,6 +39,11 @@ fn run() -> Result<()> {
         Some("simulate") => cmd_simulate(&mut args),
         Some("tune") => cmd_tune(&mut args),
         Some("node") => cmd_node(&mut args),
+        Some("serve") => cmd_serve(&mut args),
+        Some("submit") => cmd_submit(&mut args),
+        Some("status") => cmd_status(&mut args),
+        Some("jobs") => cmd_jobs(&mut args),
+        Some("cancel") => cmd_cancel(&mut args),
         Some("bench-trend") => cmd_bench_trend(&mut args),
         Some("experiment") => cmd_experiment(&mut args),
         Some("perf-model") => cmd_perf_model(&mut args),
@@ -83,7 +89,18 @@ fn cmd_train(args: &mut Args) -> Result<()> {
     if let Some(b) = args.str_opt("backend") {
         cfg.backend = b;
     }
-    cfg.bucket_bytes = args.usize_or("bucket-bytes", cfg.bucket_bytes)?;
+    // `--bucket-bytes auto` defers to the calibrated tune sweep below
+    // (after every knob the sweep depends on is final).
+    let bucket_auto = match args.str_opt("bucket-bytes") {
+        Some(v) if v == "auto" => true,
+        Some(v) => {
+            cfg.bucket_bytes = v.parse::<usize>().map_err(|_| {
+                anyhow::anyhow!("--bucket-bytes expects a byte count or 'auto', got '{v}'")
+            })?;
+            false
+        }
+        None => false,
+    };
     // Hierarchical ring-of-rings (0 = flat). Flag overrides may change
     // workers and group_size independently, so re-check the tiling here
     // rather than trusting the file-load validation.
@@ -133,6 +150,38 @@ fn cmd_train(args: &mut Args) -> Result<()> {
     let lr_warmup = args.usize_or("lr-warmup", 0)?;
     let quiet = args.flag("quiet");
     args.finish()?;
+
+    // `--bucket-bytes auto`: run the calibrated tune sweep with this
+    // run's workers/scheme/rate (tune-grade defaults elsewhere — the
+    // same sweep `scalecom tune` prints) and train with the winner,
+    // exactly as if the user had copied the printed flag by hand.
+    if bucket_auto {
+        if cfg.compress.scheme == "none" {
+            println!("bucket-bytes auto: dense exchange is monolithic — using 0");
+            cfg.bucket_bytes = 0;
+        } else {
+            let td = TuneConfig::default();
+            let tune_cfg = TuneConfig {
+                workers: cfg.workers,
+                scheme: cfg.compress.scheme.clone(),
+                rate: cfg.compress.rate,
+                seed: cfg.seed,
+                ..td
+            };
+            let profile = TopologyProfile::resolve("uniform")?;
+            let (outcome, resolved) =
+                simnet::tune::auto_bucket_bytes(&tune_cfg, &profile, None)?;
+            println!(
+                "bucket-bytes auto → {} ({}, {:.3} ms simulated step, \
+                 compute {:.3} ns/element calibrated)",
+                resolved,
+                outcome.best.label(),
+                outcome.best.mean_step_s * 1e3,
+                outcome.compute_per_elem_s * 1e9,
+            );
+            cfg.bucket_bytes = resolved;
+        }
+    }
 
     println!(
         "training {} | workers={} steps={} scheme={} rate={}x beta={} topo={} backend={}{}{}{}",
@@ -198,6 +247,31 @@ fn cmd_train(args: &mut Args) -> Result<()> {
 /// trace digest locking the timeline and a selection digest locking the
 /// values to the sequential backend.
 fn cmd_simulate(args: &mut Args) -> Result<()> {
+    // `--job-storm N`: replay N synthetic submissions against the serve
+    // scheduler in virtual time (deterministic backpressure/fairness
+    // numbers; no daemon, no threads). Own flag set, so it branches
+    // before the link-timing knobs are consumed.
+    if let Some(jobs) = args.str_opt("job-storm") {
+        let sd = scalecom::serve::StormConfig::default();
+        let storm = scalecom::serve::StormConfig {
+            jobs: jobs.parse::<usize>().map_err(|_| {
+                anyhow::anyhow!("--job-storm expects a job count, got '{jobs}'")
+            })?,
+            max_queue: args.usize_or("storm-max-queue", sd.max_queue)?,
+            max_concurrent: args.usize_or("storm-max-concurrent", sd.max_concurrent)?,
+            submit_every_s: args.f64_or("storm-submit-every-ms", sd.submit_every_s * 1e3)?
+                * 1e-3,
+            job_duration_s: args.f64_or("storm-job-ms", sd.job_duration_s * 1e3)? * 1e-3,
+        };
+        args.finish()?;
+        let report = scalecom::serve::run_storm(&storm)?;
+        println!("{}", report.render());
+        anyhow::ensure!(
+            report.fifo_preserved,
+            "job-storm: completion order violated FIFO"
+        );
+        return Ok(());
+    }
     let d = SimConfig::default();
     let profile = TopologyProfile::resolve(&args.str_or("profile", "uniform"))?;
     let workers = args.usize_or("workers", 64)?;
@@ -491,8 +565,180 @@ fn cmd_node(args: &mut Args) -> Result<()> {
             .with_fault_tolerance(heartbeat, reconnect, snapshot_dir)
             .with_group_size(group_size)?;
     spec.max_reconnect_attempts = max_reconnect_attempts;
+    // Graceful SIGINT/SIGTERM: every CLI-launched node votes in the
+    // fleet-wide drain ballot, so the whole ring stops at the same step
+    // boundary with clean EOFs instead of mid-collective RSTs.
+    scalecom::util::signal::install_shutdown_handler();
+    let spec = spec.with_graceful(true);
     let stdout = std::io::stdout();
     run_node(&spec, &wl, &mut stdout.lock())
+}
+
+/// Control-plane address with the serve precedence: `--addr` flag >
+/// `SCALECOM_SERVE_ADDR` env > the default bind.
+fn serve_addr(args: &mut Args) -> Result<String> {
+    Ok(match args.str_opt("addr") {
+        Some(a) => a,
+        None => scalecom::serve::daemon::env_serve_addr()?
+            .unwrap_or_else(|| scalecom::serve::ServeConfig::default().bind),
+    })
+}
+
+/// The multi-tenant training daemon: one persistent lane mesh, a
+/// bounded FIFO job queue, the framed client protocol, and the
+/// Prometheus-style `/metrics` endpoint. Runs until SIGINT/SIGTERM,
+/// then drains.
+fn cmd_serve(args: &mut Args) -> Result<()> {
+    let d = scalecom::serve::ServeConfig::default();
+    // Flag > SCALECOM_SERVE_ADDR env > default, like the other knobs.
+    let bind = match args.str_opt("bind") {
+        Some(b) => b,
+        None => scalecom::serve::daemon::env_serve_addr()?.unwrap_or(d.bind),
+    };
+    let metrics_bind = args.str_or("metrics-bind", &d.metrics_bind);
+    let workers = args.usize_or("workers", d.workers)?;
+    let group_size = args.usize_or("group-size", d.group_size)?;
+    let max_queue = match args.str_opt("max-queue") {
+        Some(s) => s
+            .parse::<usize>()
+            .map_err(|_| anyhow::anyhow!("--max-queue expects an integer, got '{s}'"))?,
+        None => scalecom::serve::daemon::env_serve_max_queue()?.unwrap_or(d.max_queue),
+    };
+    let max_concurrent = args.usize_or("max-concurrent", d.max_concurrent)?;
+    // Lane wire codec, same precedence as `train`/`node` (socket
+    // transport only; inert on channels).
+    let wire_mode = match args.str_opt("wire-compression") {
+        Some(w) => w,
+        None => scalecom::comm::codec::env_wire_compression()?
+            .map(|m| m.label().to_string())
+            .unwrap_or_else(|| "off".to_string()),
+    };
+    let wire_dense = args.str_or("wire-compression-dense", "auto");
+    let wire_sparse = args.str_or("wire-compression-sparse", "auto");
+    let transport_name = args.str_or("lane-transport", "socket");
+    args.finish()?;
+    let codec =
+        scalecom::comm::WireCodecConfig::from_strings(&wire_mode, &wire_dense, &wire_sparse)?;
+    let transport = match transport_name.as_str() {
+        "channel" => scalecom::comm::parallel::LaneTransport::Channel,
+        "socket" => scalecom::comm::parallel::LaneTransport::Socket(codec),
+        other => anyhow::bail!("--lane-transport expects channel|socket, got '{other}'"),
+    };
+    scalecom::util::signal::install_shutdown_handler();
+    let daemon = scalecom::serve::Daemon::start(&scalecom::serve::ServeConfig {
+        bind,
+        metrics_bind,
+        workers,
+        group_size,
+        transport,
+        max_queue,
+        max_concurrent,
+    })?;
+    println!(
+        "serve listening addr={} metrics={} workers={} transport={} \
+         max-queue={} max-concurrent={}",
+        daemon.control_addr(),
+        daemon.metrics_addr(),
+        workers,
+        transport_name,
+        max_queue,
+        max_concurrent,
+    );
+    while !scalecom::util::signal::shutdown_requested() {
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    println!("serve draining: queued jobs cancelled, running jobs stop at a step boundary");
+    match daemon.shutdown() {
+        None => {
+            println!("serve drained cleanly");
+            Ok(())
+        }
+        Some(fault) => anyhow::bail!("serve drained with a latched lane fault: {fault}"),
+    }
+}
+
+/// Submit a job spec to a serve daemon (or run it locally with
+/// `--local` — the digest-parity reference for a served run).
+fn cmd_submit(args: &mut Args) -> Result<()> {
+    let spec = match args.str_opt("spec") {
+        Some(s) => s,
+        // Bare key=value tokens double as the spec:
+        //   scalecom submit scheme=scalecom steps=20
+        None => args.positional.join(" "),
+    };
+    if args.flag("local") {
+        let workers = args.usize_or("workers", 2)?;
+        args.finish()?;
+        let wl = scalecom::serve::protocol::parse_spec(&spec)?;
+        print!("{}", scalecom::serve::run_local(&wl, workers)?);
+        return Ok(());
+    }
+    let addr = serve_addr(args)?;
+    let follow = !args.flag("no-follow");
+    let timeout = Duration::from_secs(args.usize_or("timeout-secs", 10)?.max(1) as u64);
+    args.finish()?;
+    let mut conn = scalecom::serve::ClientConn::connect(&addr, timeout)?;
+    let stdout = std::io::stdout();
+    let mut out = stdout.lock();
+    match conn.submit(&spec, follow, &mut out)? {
+        scalecom::serve::SubmitOutcome::Done { job, digest } => {
+            if !follow {
+                println!("job {job} submitted (not following)");
+            } else if let Some(cause) = digest.strip_prefix("error: ") {
+                anyhow::bail!("job {job} failed: {cause}");
+            } else {
+                // The raw digest text, so a served run diffs cleanly
+                // against `submit --local` / `node` output.
+                print!("{digest}");
+            }
+            Ok(())
+        }
+        scalecom::serve::SubmitOutcome::Rejected(reason) => {
+            anyhow::bail!("rejected: {reason}")
+        }
+        scalecom::serve::SubmitOutcome::Cancelled { job } => {
+            anyhow::bail!("job {job} was cancelled before completing")
+        }
+    }
+}
+
+/// One-line daemon summary (queue depth, counters, lane health).
+fn cmd_status(args: &mut Args) -> Result<()> {
+    let addr = serve_addr(args)?;
+    let timeout = Duration::from_secs(args.usize_or("timeout-secs", 10)?.max(1) as u64);
+    args.finish()?;
+    let mut conn = scalecom::serve::ClientConn::connect(&addr, timeout)?;
+    print!("{}", conn.query_stats(0)?);
+    Ok(())
+}
+
+/// Per-job table: state, progress, spec.
+fn cmd_jobs(args: &mut Args) -> Result<()> {
+    let addr = serve_addr(args)?;
+    let timeout = Duration::from_secs(args.usize_or("timeout-secs", 10)?.max(1) as u64);
+    args.finish()?;
+    let mut conn = scalecom::serve::ClientConn::connect(&addr, timeout)?;
+    print!("{}", conn.query_stats(1)?);
+    Ok(())
+}
+
+/// Cancel a queued or running job by id.
+fn cmd_cancel(args: &mut Args) -> Result<()> {
+    let addr = serve_addr(args)?;
+    let job = args
+        .str_opt("job")
+        .ok_or_else(|| anyhow::anyhow!("cancel needs --job <id>"))?;
+    let job: u32 = job
+        .parse()
+        .map_err(|_| anyhow::anyhow!("--job expects an integer id, got '{job}'"))?;
+    let timeout = Duration::from_secs(args.usize_or("timeout-secs", 10)?.max(1) as u64);
+    args.finish()?;
+    let mut conn = scalecom::serve::ClientConn::connect(&addr, timeout)?;
+    match conn.cancel(job)? {
+        0 => println!("job {job} cancelled (was still queued)"),
+        _ => println!("job {job} signalled; it stops at its next step boundary"),
+    }
+    Ok(())
 }
 
 /// Bench-trend gate: compare a current `bench_allreduce --json` artifact
@@ -509,12 +755,21 @@ fn cmd_bench_trend(args: &mut Args) -> Result<()> {
     args.finish()?;
     let prefixes: Vec<String> =
         prefixes.split(',').map(|p| p.trim().to_string()).filter(|p| !p.is_empty()).collect();
-    let report = scalecom::bench::trend::compare_files(
+    // First run on a branch: no baseline artifact to diff against. The
+    // gate skips (exit 0) instead of failing — a present-but-corrupt
+    // baseline is still a hard error inside the helper.
+    let report = match scalecom::bench::trend::compare_files_with_optional_baseline(
         std::path::Path::new(&baseline),
         std::path::Path::new(&current),
         &prefixes,
         max_regress,
-    )?;
+    )? {
+        Some(report) => report,
+        None => {
+            println!("bench-trend: no baseline — gate skipped ({baseline} is missing or empty)");
+            return Ok(());
+        }
+    };
     print!("{}", report.render());
     anyhow::ensure!(
         report.regressions.is_empty(),

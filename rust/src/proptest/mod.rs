@@ -1271,6 +1271,198 @@ mod ring_schedule {
     }
 }
 
+/// Serve-scheduler properties, driven straight on the pure
+/// [`JobQueue`](crate::serve::queue::JobQueue) state machine and the
+/// shared-lane mesh:
+///
+///   (a) **FIFO + starvation-freedom** — under ANY interleaving of
+///       submit / start_next / complete / cancel, jobs start in exactly
+///       admission order (minus cancelled-while-queued), the wait queue
+///       and running set never exceed their caps, and once the churn
+///       stops every admitted job runs to a terminal state — nothing is
+///       stranded and the terminal counters conserve admissions;
+///   (b) **job-tag stream isolation** — collectives from interleaved
+///       jobs on ONE shared mesh each echo their own tag and their own
+///       reduced values, and a collective whose frames carry the WRONG
+///       job tag surfaces as a clean mis-framed-stream error that
+///       latches: later requests fail fast instead of touching a mesh
+///       that is out of sync.
+#[cfg(test)]
+mod serve_scheduler {
+    use super::check;
+    use crate::comm::parallel::{CollectiveResult, CommJob, LaneTransport};
+    use crate::serve::queue::{CancelOutcome, JobQueue, RejectReason, Submission};
+    use crate::serve::SharedLanes;
+
+    #[test]
+    fn random_interleavings_stay_fifo_bounded_and_starvation_free() {
+        check("serve queue interleavings", 120, |g| {
+            let max_queue = g.usize_in(1..=8);
+            let max_concurrent = g.usize_in(1..=4);
+            let mut q = JobQueue::new(max_queue, max_concurrent);
+            let mut admitted: Vec<u32> = Vec::new(); // admission order
+            let mut started: Vec<u32> = Vec::new(); // dispatch order
+            let mut dequeued: Vec<u32> = Vec::new(); // cancelled while queued
+            let mut live: Vec<u32> = Vec::new(); // currently running
+            let ops = g.usize_in(1..=120);
+            for _ in 0..ops {
+                match g.usize_in(0..=3) {
+                    0 => match q.submit() {
+                        Submission::Admitted { id, queue_pos } => {
+                            assert_eq!(
+                                queue_pos as usize,
+                                q.depth() - 1,
+                                "queue_pos must be the admission-time wait position"
+                            );
+                            admitted.push(id);
+                        }
+                        Submission::Rejected(RejectReason::QueueFull { depth, max }) => {
+                            assert_eq!(
+                                (depth, max),
+                                (max_queue, max_queue),
+                                "QueueFull must only fire at capacity"
+                            );
+                        }
+                        Submission::Rejected(other) => {
+                            panic!("live queue rejected with {other:?}")
+                        }
+                    },
+                    1 => match q.start_next() {
+                        Some(id) => {
+                            started.push(id);
+                            live.push(id);
+                        }
+                        None => assert!(
+                            q.depth() == 0 || q.running() == max_concurrent,
+                            "start_next refused with queued work and a free slot"
+                        ),
+                    },
+                    2 => {
+                        if !live.is_empty() {
+                            let id = live.remove(g.usize_in(0..=live.len() - 1));
+                            q.complete(id, g.bool());
+                        }
+                    }
+                    _ => {
+                        if !admitted.is_empty() {
+                            let id = admitted[g.usize_in(0..=admitted.len() - 1)];
+                            match q.cancel(id) {
+                                Some(CancelOutcome::Dequeued) => dequeued.push(id),
+                                Some(CancelOutcome::Signalled) => {
+                                    // cancel must only signal a live runner,
+                                    // which then acks at its step boundary
+                                    assert!(
+                                        live.contains(&id),
+                                        "Signalled for a job that is not running"
+                                    );
+                                    live.retain(|&r| r != id);
+                                    q.complete_cancelled(id);
+                                }
+                                None => assert!(
+                                    !live.contains(&id),
+                                    "cancel lost a running job"
+                                ),
+                            }
+                        }
+                    }
+                }
+                assert!(q.depth() <= max_queue, "wait queue exceeded its cap");
+                assert!(q.running() <= max_concurrent, "concurrency cap breached");
+            }
+            // Churn over: just dispatch and finish — every admitted job
+            // must reach a terminal state (starvation-freedom).
+            loop {
+                while let Some(id) = q.start_next() {
+                    started.push(id);
+                    live.push(id);
+                }
+                match live.pop() {
+                    Some(id) => q.complete(id, true),
+                    None => break,
+                }
+            }
+            assert_eq!(q.depth(), 0, "drained queue must be empty");
+            assert_eq!(q.running(), 0);
+            let expect: Vec<u32> = admitted
+                .iter()
+                .copied()
+                .filter(|id| !dequeued.contains(id))
+                .collect();
+            assert_eq!(started, expect, "dispatch violated FIFO admission order");
+            let c = q.counters();
+            assert_eq!(c.submitted, admitted.len() as u64);
+            assert_eq!(
+                c.completed + c.failed + c.cancelled,
+                admitted.len() as u64,
+                "terminal counters must conserve admissions"
+            );
+        });
+    }
+
+    fn tagged(job: u32, bucket: u32, inputs: &[Vec<f32>]) -> Vec<CommJob> {
+        inputs
+            .iter()
+            .map(|b| CommJob::RingAvg {
+                job,
+                bucket,
+                buf: b.clone(),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn job_tags_never_cross_streams_and_a_mismatch_faults_cleanly() {
+        check("lane job-tag isolation", 8, |g| {
+            let n = g.usize_in(2..=4);
+            let lanes = SharedLanes::start(n, LaneTransport::Channel, 0).expect("lanes");
+            let h = lanes.handle();
+            // Random jobs interleaved on ONE mesh: every result must echo
+            // the submitting job's tag and ITS values, never a neighbor's.
+            for round in 0..g.usize_in(1..=8) as u32 {
+                let job = g.usize_in(1..=6) as u32;
+                let base = job as f32 * 10.0;
+                let len = g.usize_in(1..=32);
+                let inputs: Vec<Vec<f32>> =
+                    (0..n).map(|w| vec![base + w as f32; len]).collect();
+                let want = base + (n as f32 - 1.0) / 2.0;
+                match h.collective(job, tagged(job, round, &inputs)).expect("clean mesh") {
+                    CollectiveResult::Reduced { job: got, bucket, vals } => {
+                        assert_eq!((got, bucket), (job, round), "tag crossed streams");
+                        for v in vals {
+                            assert!(
+                                (v - want).abs() < 1e-5,
+                                "job {job} got a foreign reduction: {v} vs {want}"
+                            );
+                        }
+                    }
+                    other => panic!("unexpected result {other:?}"),
+                }
+            }
+            assert!(lanes.fault().is_none(), "clean runs must not latch a fault");
+            // Inject a collective whose frames carry the WRONG job tag:
+            // the stream is mis-framed and must fail cleanly, not crash
+            // or hand job `claim` another job's values.
+            let claim = g.usize_in(1..=100) as u32;
+            let wrong = claim + 1;
+            let inputs: Vec<Vec<f32>> = (0..n).map(|_| vec![1.0; 8]).collect();
+            let err = h
+                .collective(claim, tagged(wrong, 0, &inputs))
+                .expect_err("a mis-tagged stream must not yield a result");
+            assert!(err.to_string().contains("mesh out of sync"), "{err:#}");
+            let fault = lanes.fault().expect("the mismatch must latch");
+            assert!(fault.contains("mesh out of sync"), "{fault}");
+            // Latched: later collectives fail fast with the original
+            // cause instead of touching the out-of-sync mesh.
+            let err = h
+                .collective(claim, tagged(claim, 1, &inputs))
+                .expect_err("a faulted mesh must refuse new collectives");
+            assert!(err.to_string().contains("faulted earlier"), "{err:#}");
+            drop(h);
+            drop(lanes); // clean owner join even with a latched fault
+        });
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

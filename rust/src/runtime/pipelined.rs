@@ -308,7 +308,7 @@ impl WorkerPool {
     /// --backend socket` fails cleanly instead of panicking.
     pub fn try_wait_reduced(&self) -> anyhow::Result<(u32, Vec<f32>)> {
         match self.lanes.wait() {
-            CollectiveResult::Reduced { bucket, vals } => Ok((bucket, vals)),
+            CollectiveResult::Reduced { job: _, bucket, vals } => Ok((bucket, vals)),
             CollectiveResult::Gathered { .. } => {
                 panic!("expected a ring result, got a gather result")
             }
@@ -323,6 +323,7 @@ impl WorkerPool {
     pub fn try_wait_gathered(&self) -> anyhow::Result<(u32, Vec<f32>, GatherStats)> {
         match self.lanes.wait() {
             CollectiveResult::Gathered {
+                job: _,
                 bucket,
                 vals,
                 stats,
@@ -426,7 +427,7 @@ fn compute_lane_loop(mut mem: EfMemory, rx: Receiver<Cmd>, job_tx: Sender<CommJo
                 // applies the memory update (Eqn. 5) — the update depends
                 // only on (grad, idx), never on the reduced values.
                 job_tx
-                    .send(CommJob::RingAvg { bucket: 0, buf: vals })
+                    .send(CommJob::RingAvg { job: 0, bucket: 0, buf: vals })
                     .expect("comm lane send");
                 let grad = stash.take().expect("FinishShared without BeginStep");
                 mem.update_after_send(&grad, idx.as_slice());
@@ -434,14 +435,14 @@ fn compute_lane_loop(mut mem: EfMemory, rx: Receiver<Cmd>, job_tx: Sender<CommJo
             Cmd::FinishGather { sparse } => {
                 let idx = sparse.indices.clone();
                 job_tx
-                    .send(CommJob::Gather { bucket: 0, sparse })
+                    .send(CommJob::Gather { job: 0, bucket: 0, sparse })
                     .expect("comm lane send");
                 let grad = stash.take().expect("FinishGather without BeginStep");
                 mem.update_after_send(&grad, &idx);
             }
             Cmd::Dense { grad } => {
                 job_tx
-                    .send(CommJob::RingAvg { bucket: 0, buf: grad })
+                    .send(CommJob::RingAvg { job: 0, bucket: 0, buf: grad })
                     .expect("comm lane send");
             }
             Cmd::BeginBucket {
@@ -459,7 +460,7 @@ fn compute_lane_loop(mut mem: EfMemory, rx: Receiver<Cmd>, job_tx: Sender<CommJo
                 // disjoint buckets commute, so per-bucket updates leave
                 // exactly the monolithic memory.
                 job_tx
-                    .send(CommJob::RingAvg { bucket, buf: vals })
+                    .send(CommJob::RingAvg { job: 0, bucket, buf: vals })
                     .expect("comm lane send");
                 let (b, offset, grad) = bucket_stash
                     .pop_front()
@@ -470,7 +471,7 @@ fn compute_lane_loop(mut mem: EfMemory, rx: Receiver<Cmd>, job_tx: Sender<CommJo
             Cmd::FinishGatherBucket { bucket, sparse } => {
                 let idx = sparse.indices.clone();
                 job_tx
-                    .send(CommJob::Gather { bucket, sparse })
+                    .send(CommJob::Gather { job: 0, bucket, sparse })
                     .expect("comm lane send");
                 let (b, offset, grad) = bucket_stash
                     .pop_front()

@@ -131,6 +131,16 @@ pub struct NodeSpec {
     /// hello purposes per topology and rejects a mixed fleet) and tile
     /// the node count (`comm::parallel::validate_group_size`).
     pub group_size: usize,
+    /// Graceful-drain mode: poll the process-wide shutdown flag
+    /// ([`crate::util::signal`]) at every step boundary via a one-frame
+    /// ring ballot, and when any rank has seen SIGINT/SIGTERM the whole
+    /// fleet drains at the *same* boundary — in-flight steps complete,
+    /// rank 0 still emits a parseable digest tail, and the mesh closes
+    /// with clean EOFs instead of RSTs. Must match on every node (a
+    /// ballot-less peer reads the ballot frame as a mis-framed stream),
+    /// which is why it defaults off and only the CLI entry points turn
+    /// it on.
+    pub graceful: bool,
 }
 
 /// Default reconnect budget: enough for a worker restart plus the EOF
@@ -225,6 +235,7 @@ impl NodeSpec {
             max_reconnect_attempts: DEFAULT_RECONNECT_ATTEMPTS,
             snapshot_dir: None,
             group_size: 0,
+            graceful: false,
         })
     }
 
@@ -257,6 +268,13 @@ impl NodeSpec {
         self.heartbeat = heartbeat;
         self.reconnect = reconnect;
         self.snapshot_dir = snapshot_dir;
+        self
+    }
+
+    /// Enable the graceful SIGINT/SIGTERM drain ballot (builder style).
+    /// Fleet-wide setting: turn it on for every node or none.
+    pub fn with_graceful(mut self, graceful: bool) -> NodeSpec {
+        self.graceful = graceful;
         self
     }
 
@@ -332,7 +350,11 @@ impl NodeWorkload {
         Ok(())
     }
 
-    fn k(&self) -> usize {
+    /// The per-step sparse budget the compression rate implies. Public
+    /// because the serve job runner replays the exact coordinator
+    /// construction (`Coordinator::new(.., wl.k(), ..)`) for digest
+    /// parity with one-shot runs.
+    pub fn k(&self) -> usize {
         (self.dim / self.rate).max(1)
     }
 }
@@ -539,6 +561,22 @@ pub fn parse_digest(text: &str) -> anyhow::Result<NodeDigest> {
     })
 }
 
+/// Render a [`NodeDigest`] back into the coordinator's line-oriented
+/// text form. The serve daemon uses this for `JobDone` payloads, so a
+/// client can [`parse_digest`] + [`compare_digests`] a served job
+/// against a one-shot run of the same workload; round-trips exactly
+/// through [`parse_digest`].
+pub fn render_digest(d: &NodeDigest) -> anyhow::Result<String> {
+    let mut out: Vec<u8> = Vec::new();
+    writeln!(out, "digest v1 workers={}", d.workers)?;
+    for s in &d.steps {
+        emit_step(&mut out, s)?;
+    }
+    writeln!(out, "mem0 vals={}", fmt_f32s(&d.final_memory_rank0))?;
+    writeln!(out, "digest-end steps={}", d.steps.len())?;
+    Ok(String::from_utf8(out)?)
+}
+
 /// Hold two digests to the backend parity contract:
 /// selections/leaders/`CommCost` **exact**; gather values and the final
 /// memory **bit-identical** (worker-order reductions / per-worker local
@@ -610,7 +648,7 @@ pub fn compare_digests(
 /// The run's gradient stream: one continuous RNG, `n` worker gradients
 /// drawn in worker order each step — every node regenerates the same
 /// stream locally, so no gradient bytes cross the wire.
-fn step_grads(rng: &mut Rng, n: usize, dim: usize) -> Vec<Vec<f32>> {
+pub(crate) fn step_grads(rng: &mut Rng, n: usize, dim: usize) -> Vec<Vec<f32>> {
     (0..n)
         .map(|_| {
             let mut v = vec![0.0f32; dim];
@@ -1062,23 +1100,53 @@ pub fn run_node<W: Write>(spec: &NodeSpec, wl: &NodeWorkload, out: &mut W) -> an
     }
 
     while t < wl.steps {
-        let grads = step_grads(&mut rng, n, wl.dim);
-        let stepped = drive_step(
-            t,
-            &grads,
-            rank,
-            n,
-            k,
-            wl,
-            &mut compressor,
-            &mut mem,
-            &mut ring,
-            &mut star,
-            &mut fabric,
-            out,
-        );
+        // The whole step body — the optional drain ballot, then the
+        // step's collectives — runs in one closure so a fault anywhere
+        // in it rides the same reconnect arm below. `Ok(false)` means a
+        // unanimous drain, not an error.
+        let stepped = (|| -> anyhow::Result<bool> {
+            if spec.graceful {
+                // Drain ballot: one tiny ring min-reduce per boundary.
+                // A rank that saw SIGINT/SIGTERM votes 0; a 0 minimum
+                // drains EVERY rank at this same boundary, so no peer is
+                // left blocked mid-collective and the mesh teardown is
+                // clean EOFs, not RSTs.
+                let vote: u64 = if crate::util::signal::shutdown_requested() {
+                    0
+                } else {
+                    1
+                };
+                let fleet = ring
+                    .resume_min_reduce(vote)
+                    .with_context(|| format!("step {t}: shutdown drain ballot"))?;
+                if fleet == 0 {
+                    return Ok(false);
+                }
+            }
+            let grads = step_grads(&mut rng, n, wl.dim);
+            drive_step(
+                t,
+                &grads,
+                rank,
+                n,
+                k,
+                wl,
+                &mut compressor,
+                &mut mem,
+                &mut ring,
+                &mut star,
+                &mut fabric,
+                out,
+            )?;
+            Ok(true)
+        })();
         match stepped {
-            Ok(()) => {
+            Ok(false) => {
+                writeln!(out, "shutdown drained rank={rank} t={t}")?;
+                out.flush()?;
+                break;
+            }
+            Ok(true) => {
                 if spec.reconnect {
                     snaps.push(t as u64, mem.clone());
                     if let Some(d) = disk_dir {
@@ -1115,11 +1183,15 @@ pub fn run_node<W: Write>(spec: &NodeSpec, wl: &NodeWorkload, out: &mut W) -> an
             Err(e) => return Err(e),
         }
     }
+    // `t == wl.steps` on normal completion (byte-identical tail to
+    // before); smaller after a graceful drain — and the `digest-end`
+    // count is what `parse_digest` validates, so a drained run still
+    // leaves a parseable digest of the steps that did complete.
     if rank == 0 {
         writeln!(out, "mem0 vals={}", fmt_f32s(mem.memory()))?;
-        writeln!(out, "digest-end steps={}", wl.steps)?;
+        writeln!(out, "digest-end steps={t}")?;
     } else {
-        writeln!(out, "node rank={rank} done steps={}", wl.steps)?;
+        writeln!(out, "node rank={rank} done steps={t}")?;
     }
     out.flush()?;
     Ok(())
@@ -1236,6 +1308,96 @@ mod tests {
         let err = wl.validate().unwrap_err();
         assert!(err.to_string().contains("not runnable"), "{err}");
         NodeWorkload::default().validate().unwrap();
+    }
+
+    #[test]
+    fn render_digest_round_trips_through_parse() {
+        let wl = NodeWorkload {
+            steps: 8,
+            warmup: 2, // cover dense + compressed lines
+            ..NodeWorkload::default()
+        };
+        let want = sequential_digest(&wl, 3).unwrap();
+        let text = render_digest(&want).unwrap();
+        let got = parse_digest(&text).unwrap();
+        // Exact tolerance: the round trip re-parses the very same f32
+        // formatting `run_node` emits, so nothing may move at all.
+        compare_digests(&got, &want, 0.0, 0.0).unwrap();
+        assert_eq!(got.final_memory_rank0, want.final_memory_rank0);
+    }
+
+    #[test]
+    fn graceful_drain_exits_cleanly_with_parseable_digest() {
+        // Serialize against every other test touching the process-global
+        // shutdown flag, then latch it BEFORE launch: each rank votes 0
+        // in its first drain ballot and the fleet drains unanimously at
+        // t=0 — no rank errors, no latched fault, and rank 0 still
+        // emits a digest that parses (0 completed steps).
+        let _guard = crate::util::signal::test_guard();
+        crate::util::signal::request_shutdown();
+        let wl = NodeWorkload {
+            steps: 10,
+            ..NodeWorkload::default()
+        };
+        let n = 2;
+        let peers = free_addrs(n);
+        let outputs: Vec<Vec<u8>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..n)
+                .map(|rank| {
+                    let peers = &peers;
+                    let wl = wl.clone();
+                    s.spawn(move || {
+                        let spec = spec_for(peers, rank).with_graceful(true);
+                        let mut out = Vec::new();
+                        run_node(&spec, &wl, &mut out)
+                            .unwrap_or_else(|e| panic!("rank {rank}: drained run failed: {e:#}"));
+                        out
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("rank")).collect()
+        });
+        crate::util::signal::clear_shutdown();
+        let coord = String::from_utf8(outputs[0].clone()).unwrap();
+        assert!(coord.contains("shutdown drained rank=0 t=0"), "{coord}");
+        let d = parse_digest(&coord).expect("drained digest still parses");
+        assert_eq!(d.steps.len(), 0, "drained before the first step");
+        let worker = String::from_utf8(outputs[1].clone()).unwrap();
+        assert!(worker.contains("shutdown drained rank=1 t=0"), "{worker}");
+        assert!(worker.contains("done steps=0"), "{worker}");
+    }
+
+    #[test]
+    fn graceful_ballot_without_shutdown_changes_nothing() {
+        // graceful=true but no signal: the per-boundary ballot must be
+        // digest-invisible — bit-identical to the plain run.
+        let wl = NodeWorkload {
+            steps: 6,
+            warmup: 1,
+            ..NodeWorkload::default()
+        };
+        let n = 2;
+        let _guard = crate::util::signal::test_guard();
+        let peers = free_addrs(n);
+        let outputs: Vec<Vec<u8>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..n)
+                .map(|rank| {
+                    let peers = &peers;
+                    let wl = wl.clone();
+                    s.spawn(move || {
+                        let spec = spec_for(peers, rank).with_graceful(true);
+                        let mut out = Vec::new();
+                        run_node(&spec, &wl, &mut out)
+                            .unwrap_or_else(|e| panic!("rank {rank}: {e:#}"));
+                        out
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("rank")).collect()
+        });
+        let got = parse_digest(&String::from_utf8(outputs[0].clone()).unwrap()).unwrap();
+        let want = sequential_digest(&wl, n).unwrap();
+        compare_digests(&got, &want, 1e-5, 1e-6).unwrap();
     }
 
     #[test]

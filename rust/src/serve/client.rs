@@ -1,0 +1,159 @@
+//! The client half of the serve control plane: what `scalecom
+//! submit|status|jobs|cancel` speak.
+//!
+//! One framed TCP connection per command, opened with a
+//! `Hello { purpose: Client }` at the current wire-codec version so the
+//! daemon can version-gate before anything else crosses the wire.
+//! `submit --follow` then just reads the daemon's stream — acceptance,
+//! per-step progress, and the terminal frame — so the CLI renders live
+//! state without any polling.
+
+use crate::comm::wire::{self, Purpose, WireMsg, WIRE_CODEC_VERSION};
+use crate::runtime::socket::NodeWorkload;
+use crate::serve::job::{run_steps, StepVerdict};
+use std::io::Write;
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// How a followed submission ended.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitOutcome {
+    /// Ran every step; `digest` is the rendered digest text (or
+    /// `error: ...` when the job failed server-side — the daemon's
+    /// documented convention).
+    Done { job: u32, digest: String },
+    /// Refused at admission (backpressure, drain, or a bad spec).
+    Rejected(String),
+    /// Cancelled while queued or mid-run.
+    Cancelled { job: u32 },
+}
+
+/// A framed control connection to a serve daemon.
+pub struct ClientConn {
+    stream: TcpStream,
+}
+
+impl ClientConn {
+    pub fn connect(addr: &str, timeout: Duration) -> anyhow::Result<ClientConn> {
+        let target = std::net::ToSocketAddrs::to_socket_addrs(addr)
+            .map_err(|e| anyhow::anyhow!("serve address '{addr}': {e}"))?
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("serve address '{addr}' resolved to nothing"))?;
+        let mut stream = TcpStream::connect_timeout(&target, timeout)
+            .map_err(|e| anyhow::anyhow!("connect {addr}: {e} (is the daemon up?)"))?;
+        stream.set_nodelay(true).ok();
+        wire::write_msg(
+            &mut stream,
+            &WireMsg::Hello {
+                rank: 0,
+                purpose: Purpose::Client,
+                codec: WIRE_CODEC_VERSION,
+            },
+        )?;
+        Ok(ClientConn { stream })
+    }
+
+    /// Submit a spec. With `follow`, stream progress lines to `out` and
+    /// block until the terminal frame; without it, return right after
+    /// the admission reply (progress frames are the daemon's to drop
+    /// when this connection closes).
+    pub fn submit(
+        &mut self,
+        spec: &str,
+        follow: bool,
+        out: &mut dyn Write,
+    ) -> anyhow::Result<SubmitOutcome> {
+        wire::write_msg(
+            &mut self.stream,
+            &WireMsg::SubmitJob { spec: spec.to_string() },
+        )?;
+        let job = match wire::read_msg(&mut self.stream)? {
+            WireMsg::JobAccepted { job, queue_pos } => {
+                writeln!(out, "accepted job={job} queue-pos={queue_pos}")?;
+                job
+            }
+            WireMsg::JobRejected { reason } => return Ok(SubmitOutcome::Rejected(reason)),
+            other => anyhow::bail!("expected an admission reply, got {other:?}"),
+        };
+        if !follow {
+            return Ok(SubmitOutcome::Done {
+                job,
+                digest: String::new(),
+            });
+        }
+        loop {
+            match wire::read_msg(&mut self.stream)? {
+                WireMsg::JobProgress { job: j, step, total } if j == job => {
+                    writeln!(out, "progress job={job} step={step}/{total}")?;
+                }
+                WireMsg::JobDone { job: j, digest } if j == job => {
+                    return Ok(SubmitOutcome::Done { job, digest });
+                }
+                WireMsg::JobCancelled { job: j, .. } if j == job => {
+                    return Ok(SubmitOutcome::Cancelled { job });
+                }
+                other => anyhow::bail!("job {job}: unexpected frame {other:?}"),
+            }
+        }
+    }
+
+    /// `QueryStats` round-trip: `what` 0 = summary line, 1 = job table.
+    pub fn query_stats(&mut self, what: u8) -> anyhow::Result<String> {
+        wire::write_msg(&mut self.stream, &WireMsg::QueryStats { what })?;
+        match wire::read_msg(&mut self.stream)? {
+            WireMsg::StatsReport { text } => Ok(text),
+            other => anyhow::bail!("expected a stats report, got {other:?}"),
+        }
+    }
+
+    /// Cancel a job; returns the outcome byte (0 = dequeued, 1 =
+    /// signalled mid-run) or the daemon's refusal.
+    pub fn cancel(&mut self, job: u32) -> anyhow::Result<u8> {
+        wire::write_msg(&mut self.stream, &WireMsg::CancelJob { job })?;
+        match wire::read_msg(&mut self.stream)? {
+            WireMsg::JobCancelled { job: j, outcome } if j == job => Ok(outcome),
+            WireMsg::JobRejected { reason } => anyhow::bail!("{reason}"),
+            other => anyhow::bail!("expected a cancel ack, got {other:?}"),
+        }
+    }
+}
+
+/// Run the workload locally (no daemon) and return the rendered digest
+/// — `scalecom submit --local`, and the parity reference the CI smoke
+/// diffs a served digest against. Identical to a served run by
+/// construction: both go through [`run_steps`].
+pub fn run_local(wl: &NodeWorkload, workers: usize) -> anyhow::Result<String> {
+    let digest = run_steps(
+        wl,
+        workers,
+        |_, _, _| Ok(StepVerdict::Continue),
+        |_| StepVerdict::Continue,
+    )?;
+    crate::runtime::socket::render_digest(&digest)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::socket::{compare_digests, parse_digest, sequential_digest};
+
+    #[test]
+    fn run_local_matches_sequential_digest() {
+        let wl = NodeWorkload {
+            steps: 5,
+            warmup: 1,
+            ..NodeWorkload::default()
+        };
+        let text = run_local(&wl, 3).unwrap();
+        let parsed = parse_digest(&text).unwrap();
+        let want = sequential_digest(&wl, 3).unwrap();
+        compare_digests(&parsed, &want, 0.0, 0.0).unwrap();
+    }
+
+    #[test]
+    fn connect_refuses_a_dead_address_loudly() {
+        // Port 1 on loopback: nothing listens there in CI.
+        let err = ClientConn::connect("127.0.0.1:1", Duration::from_millis(200)).unwrap_err();
+        assert!(err.to_string().contains("is the daemon up?"), "{err}");
+    }
+}

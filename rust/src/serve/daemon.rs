@@ -1,0 +1,714 @@
+//! The `scalecom serve` daemon: one process owning a persistent shared
+//! comm-lane mesh, a bounded FIFO job queue, a framed control plane for
+//! clients (`SubmitJob`/`QueryStats`/`CancelJob` over the v5 wire
+//! codec), and a Prometheus-style `/metrics` endpoint over plain TCP.
+//!
+//! Threading model:
+//! - one accept thread per listener (control + metrics), non-blocking
+//!   accept polled against the shutdown flag so both join promptly;
+//! - one detached thread per client connection, doing *blocking* framed
+//!   reads (a read timeout could desync mid-frame, and the process
+//!   exits regardless when `main` returns) and writing replies through
+//!   an `Arc<Mutex<TcpStream>>` clone so progress frames from job
+//!   threads interleave whole-frame with request replies;
+//! - one thread per running job (joined at shutdown), dispatched FIFO
+//!   by [`JobQueue`] under the concurrency cap;
+//! - the lane owner thread inside [`SharedLanes`], dropped last so the
+//!   mesh tears down with clean EOFs after every job thread is gone.
+
+use crate::comm::parallel::LaneTransport;
+use crate::comm::wire::{self, Purpose, WireMsg, WIRE_CODEC_VERSION};
+use crate::runtime::socket::{render_digest, NodeWorkload};
+use crate::serve::job::run_job;
+use crate::serve::lanes::{LaneHandle, SharedLanes};
+use crate::serve::metrics::{self, JobMetrics, ServeMetrics};
+use crate::serve::protocol;
+use crate::serve::queue::{CancelOutcome, JobQueue, RejectReason, Submission};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// `--bind` default / override (flag wins over env, env over default).
+pub const ENV_SERVE_ADDR: &str = "SCALECOM_SERVE_ADDR";
+/// `--max-queue` default / override.
+pub const ENV_SERVE_MAX_QUEUE: &str = "SCALECOM_SERVE_MAX_QUEUE";
+
+/// Read [`ENV_SERVE_ADDR`]; `Ok(None)` when unset, loud when set but
+/// empty (mirrors `runtime::socket::env_heartbeat_ms`).
+pub fn env_serve_addr() -> anyhow::Result<Option<String>> {
+    match std::env::var(ENV_SERVE_ADDR) {
+        Ok(s) => {
+            let s = s.trim().to_string();
+            anyhow::ensure!(!s.is_empty(), "{ENV_SERVE_ADDR} is set but empty");
+            Ok(Some(s))
+        }
+        Err(std::env::VarError::NotPresent) => Ok(None),
+        Err(e) => Err(anyhow::anyhow!("{ENV_SERVE_ADDR}: {e}")),
+    }
+}
+
+/// Read [`ENV_SERVE_MAX_QUEUE`]; `Ok(None)` when unset.
+pub fn env_serve_max_queue() -> anyhow::Result<Option<usize>> {
+    match std::env::var(ENV_SERVE_MAX_QUEUE) {
+        Ok(s) => s.trim().parse::<usize>().map(Some).map_err(|_| {
+            anyhow::anyhow!("{ENV_SERVE_MAX_QUEUE}={s}: expects a whole number of jobs")
+        }),
+        Err(std::env::VarError::NotPresent) => Ok(None),
+        Err(e) => Err(anyhow::anyhow!("{ENV_SERVE_MAX_QUEUE}: {e}")),
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Control-plane bind address (framed wire protocol). Port 0 picks
+    /// a free port; read it back from [`DaemonHandle::control_addr`].
+    pub bind: String,
+    /// `/metrics` bind address (plain-text HTTP/1.0).
+    pub metrics_bind: String,
+    /// Lane-mesh width: every served job runs with this many workers.
+    pub workers: usize,
+    /// Hierarchical ring group size (0 = flat ring).
+    pub group_size: usize,
+    pub transport: LaneTransport,
+    pub max_queue: usize,
+    pub max_concurrent: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            bind: "127.0.0.1:7070".into(),
+            metrics_bind: "127.0.0.1:7071".into(),
+            workers: 2,
+            group_size: 0,
+            transport: LaneTransport::Channel,
+            max_queue: 8,
+            max_concurrent: 2,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum JobStatus {
+    Queued,
+    Running,
+    Done,
+    Failed,
+    Cancelled,
+}
+
+impl JobStatus {
+    fn label(self) -> &'static str {
+        match self {
+            JobStatus::Queued => "queued",
+            JobStatus::Running => "running",
+            JobStatus::Done => "done",
+            JobStatus::Failed => "failed",
+            JobStatus::Cancelled => "cancelled",
+        }
+    }
+}
+
+/// Per-job bookkeeping behind the `jobs`/`/metrics` views.
+struct JobState {
+    spec: String,
+    wl: NodeWorkload,
+    status: JobStatus,
+    submitted_at: Instant,
+    steps_done: usize,
+    step_seconds_sum: f64,
+    comm_bytes_up: u64,
+    comm_bytes_down: u64,
+    comm_time_seconds: f64,
+    cancel: Arc<AtomicBool>,
+    /// The submitting connection's write half; progress and completion
+    /// frames stream here. `None` once the client hangs up.
+    conn: Option<Arc<Mutex<TcpStream>>>,
+    error: Option<String>,
+}
+
+struct Shared {
+    queue: Mutex<JobQueue>,
+    jobs: Mutex<BTreeMap<u32, JobState>>,
+    /// `None` after shutdown takes it — job threads clone it at
+    /// dispatch, so the lane owner's channel closes once they finish.
+    lanes: Mutex<Option<LaneHandle>>,
+    shutdown: AtomicBool,
+    /// Scheduler wait summary: (sum of admission→start seconds, count).
+    wait: Mutex<(f64, u64)>,
+    job_threads: Mutex<Vec<JoinHandle<()>>>,
+}
+
+/// A running daemon. Keep it alive for the daemon's lifetime; call
+/// [`DaemonHandle::shutdown`] to drain and join everything.
+pub struct Daemon {
+    shared: Arc<Shared>,
+    lanes: SharedLanes,
+    control_addr: std::net::SocketAddr,
+    metrics_addr: std::net::SocketAddr,
+    accept_thread: Option<JoinHandle<()>>,
+    metrics_thread: Option<JoinHandle<()>>,
+}
+
+impl Daemon {
+    /// Bind both listeners, build the shared lane mesh, start the
+    /// accept threads. Fails loudly on a busy port or a bad mesh shape.
+    pub fn start(cfg: &ServeConfig) -> anyhow::Result<Daemon> {
+        anyhow::ensure!(cfg.workers >= 1, "serve needs at least one lane worker");
+        let lanes = SharedLanes::start(cfg.workers, cfg.transport, cfg.group_size)?;
+        let control = TcpListener::bind(&cfg.bind)
+            .map_err(|e| anyhow::anyhow!("serve bind {}: {e}", cfg.bind))?;
+        let metrics_l = TcpListener::bind(&cfg.metrics_bind)
+            .map_err(|e| anyhow::anyhow!("metrics bind {}: {e}", cfg.metrics_bind))?;
+        let control_addr = control.local_addr()?;
+        let metrics_addr = metrics_l.local_addr()?;
+        control.set_nonblocking(true)?;
+        metrics_l.set_nonblocking(true)?;
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(JobQueue::new(cfg.max_queue, cfg.max_concurrent)),
+            jobs: Mutex::new(BTreeMap::new()),
+            lanes: Mutex::new(Some(lanes.handle())),
+            shutdown: AtomicBool::new(false),
+            wait: Mutex::new((0.0, 0)),
+            job_threads: Mutex::new(Vec::new()),
+        });
+        let s1 = shared.clone();
+        let accept_thread = std::thread::spawn(move || accept_loop(s1, control));
+        let s2 = shared.clone();
+        let metrics_thread = std::thread::spawn(move || metrics_loop(s2, metrics_l));
+        Ok(Daemon {
+            shared,
+            lanes,
+            control_addr,
+            metrics_addr,
+            accept_thread: Some(accept_thread),
+            metrics_thread: Some(metrics_thread),
+        })
+    }
+
+    pub fn control_addr(&self) -> String {
+        self.control_addr.to_string()
+    }
+
+    pub fn metrics_addr(&self) -> String {
+        self.metrics_addr.to_string()
+    }
+
+    /// The lane mesh's latched fault, if any (the drained-shutdown
+    /// satellite asserts this stays `None`).
+    pub fn lane_fault(&self) -> Option<String> {
+        self.lanes.fault()
+    }
+
+    /// Current scrape snapshot without a socket round-trip (tests).
+    pub fn metrics_text(&self) -> String {
+        metrics::render(&snapshot(&self.shared))
+    }
+
+    /// Drain and stop: refuse new admissions, cancel the still-queued,
+    /// signal running jobs to stop at their next step boundary, join
+    /// every thread, then drop the mesh (clean lane EOFs). Returns the
+    /// latched lane fault, `None` when the mesh stayed healthy.
+    pub fn shutdown(mut self) -> Option<String> {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.drain();
+            let dropped = q.cancel_all_queued();
+            let mut jobs = self.shared.jobs.lock().unwrap();
+            for id in dropped {
+                if let Some(j) = jobs.get_mut(&id) {
+                    j.status = JobStatus::Cancelled;
+                    if let Some(c) = &j.conn {
+                        let _ = write_frame(c, &WireMsg::JobCancelled { job: id, outcome: 0 });
+                    }
+                }
+            }
+            for &id in q.running_ids() {
+                if let Some(j) = jobs.get(&id) {
+                    j.cancel.store(true, Ordering::SeqCst);
+                }
+            }
+        }
+        // Job threads re-dispatch on completion, so drain until the
+        // handle list stays empty (dispatch early-returns once the
+        // shutdown flag is up, so this converges).
+        loop {
+            let handles: Vec<JoinHandle<()>> = {
+                let mut h = self.shared.job_threads.lock().unwrap();
+                h.drain(..).collect()
+            };
+            if handles.is_empty() {
+                break;
+            }
+            for h in handles {
+                let _ = h.join();
+            }
+        }
+        // No new lane clones after this; job threads (the only other
+        // cloners) are joined, so the owner's channel can close.
+        drop(self.shared.lanes.lock().unwrap().take());
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.metrics_thread.take() {
+            let _ = h.join();
+        }
+        // `self.lanes` drops when this returns: joins the owner, the
+        // mesh tears down with EOFs.
+        self.lanes.fault()
+    }
+}
+
+fn write_frame(conn: &Arc<Mutex<TcpStream>>, msg: &WireMsg) -> anyhow::Result<()> {
+    let mut s = conn.lock().unwrap();
+    wire::write_msg(&mut *s, msg)
+}
+
+fn accept_loop(shared: Arc<Shared>, listener: TcpListener) {
+    while !shared.shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let _ = stream.set_nodelay(true);
+                if stream.set_nonblocking(false).is_err() {
+                    continue;
+                }
+                let s = shared.clone();
+                // Detached on purpose: blocking framed reads have no
+                // clean poll point; the process exit reaps them.
+                std::thread::spawn(move || client_conn(s, stream));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+/// One control connection: Hello-gated, then a loop of framed requests.
+fn client_conn(shared: Arc<Shared>, stream: TcpStream) {
+    let mut reader = stream;
+    let writer = match reader.try_clone() {
+        Ok(w) => Arc::new(Mutex::new(w)),
+        Err(_) => return,
+    };
+    match wire::read_msg(&mut reader) {
+        Ok(WireMsg::Hello {
+            purpose: Purpose::Client,
+            codec,
+            ..
+        }) if codec >= WIRE_CODEC_VERSION => {}
+        Ok(WireMsg::Hello { purpose, codec, .. }) => {
+            let _ = write_frame(
+                &writer,
+                &WireMsg::JobRejected {
+                    reason: format!(
+                        "serve needs a client hello at wire codec v{WIRE_CODEC_VERSION}+, \
+                         got {purpose:?} v{codec}"
+                    ),
+                },
+            );
+            return;
+        }
+        // Not a hello (or EOF/garbage): hang up, like the mesh
+        // rendezvous does for strangers.
+        _ => return,
+    }
+    loop {
+        let msg = match wire::read_msg(&mut reader) {
+            Ok(m) => m,
+            Err(_) => return, // EOF or mis-framed: the conn is done
+        };
+        match msg {
+            WireMsg::SubmitJob { spec } => handle_submit(&shared, &writer, spec),
+            WireMsg::QueryStats { what } => {
+                let text = render_stats(&shared, what);
+                let _ = write_frame(&writer, &WireMsg::StatsReport { text });
+            }
+            WireMsg::CancelJob { job } => handle_cancel(&shared, &writer, job),
+            other => {
+                let _ = write_frame(
+                    &writer,
+                    &WireMsg::JobRejected {
+                        reason: format!("unexpected frame on the client plane: {other:?}"),
+                    },
+                );
+                return;
+            }
+        }
+    }
+}
+
+fn handle_submit(shared: &Arc<Shared>, writer: &Arc<Mutex<TcpStream>>, spec: String) {
+    let wl = match protocol::parse_spec(&spec) {
+        Ok(wl) => wl,
+        Err(e) => {
+            shared.queue.lock().unwrap().note_rejected();
+            let _ = write_frame(
+                writer,
+                &WireMsg::JobRejected {
+                    reason: RejectReason::BadSpec(format!("{e:#}")).render(),
+                },
+            );
+            return;
+        }
+    };
+    let sub = shared.queue.lock().unwrap().submit();
+    match sub {
+        Submission::Rejected(r) => {
+            let _ = write_frame(writer, &WireMsg::JobRejected { reason: r.render() });
+        }
+        Submission::Admitted { id, queue_pos } => {
+            shared.jobs.lock().unwrap().insert(
+                id,
+                JobState {
+                    spec,
+                    wl,
+                    status: JobStatus::Queued,
+                    submitted_at: Instant::now(),
+                    steps_done: 0,
+                    step_seconds_sum: 0.0,
+                    comm_bytes_up: 0,
+                    comm_bytes_down: 0,
+                    comm_time_seconds: 0.0,
+                    cancel: Arc::new(AtomicBool::new(false)),
+                    conn: Some(writer.clone()),
+                    error: None,
+                },
+            );
+            let _ = write_frame(writer, &WireMsg::JobAccepted { job: id, queue_pos });
+            try_dispatch(shared);
+        }
+    }
+}
+
+fn handle_cancel(shared: &Arc<Shared>, writer: &Arc<Mutex<TcpStream>>, job: u32) {
+    let outcome = shared.queue.lock().unwrap().cancel(job);
+    match outcome {
+        Some(CancelOutcome::Dequeued) => {
+            if let Some(j) = shared.jobs.lock().unwrap().get_mut(&job) {
+                j.status = JobStatus::Cancelled;
+            }
+            let _ = write_frame(
+                writer,
+                &WireMsg::JobCancelled {
+                    job,
+                    outcome: CancelOutcome::Dequeued.to_byte(),
+                },
+            );
+        }
+        Some(CancelOutcome::Signalled) => {
+            if let Some(j) = shared.jobs.lock().unwrap().get(&job) {
+                j.cancel.store(true, Ordering::SeqCst);
+            }
+            let _ = write_frame(
+                writer,
+                &WireMsg::JobCancelled {
+                    job,
+                    outcome: CancelOutcome::Signalled.to_byte(),
+                },
+            );
+        }
+        None => {
+            let _ = write_frame(
+                writer,
+                &WireMsg::JobRejected {
+                    reason: format!("cancel: job {job} is unknown or already finished"),
+                },
+            );
+        }
+    }
+}
+
+/// Start every runnable job (FIFO under the concurrency cap). Called
+/// after each admission and each completion; a no-op once draining.
+fn try_dispatch(shared: &Arc<Shared>) {
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        let Some(id) = shared.queue.lock().unwrap().start_next() else {
+            return;
+        };
+        let Some(lanes) = shared.lanes.lock().unwrap().clone() else {
+            return;
+        };
+        let (wl, cancel, conn, waited_s) = {
+            let mut jobs = shared.jobs.lock().unwrap();
+            let j = jobs.get_mut(&id).expect("admitted job has a state entry");
+            j.status = JobStatus::Running;
+            (
+                j.wl.clone(),
+                j.cancel.clone(),
+                j.conn.clone(),
+                j.submitted_at.elapsed().as_secs_f64(),
+            )
+        };
+        {
+            let mut w = shared.wait.lock().unwrap();
+            w.0 += waited_s;
+            w.1 += 1;
+        }
+        let s = shared.clone();
+        let handle = std::thread::spawn(move || job_thread(s, id, wl, lanes, cancel, conn));
+        shared.job_threads.lock().unwrap().push(handle);
+    }
+}
+
+fn job_thread(
+    shared: Arc<Shared>,
+    id: u32,
+    wl: NodeWorkload,
+    lanes: LaneHandle,
+    cancel: Arc<AtomicBool>,
+    conn: Option<Arc<Mutex<TcpStream>>>,
+) {
+    let result = run_job(id, &wl, &lanes, &cancel, |done, total| {
+        if let Some(j) = shared.jobs.lock().unwrap().get_mut(&id) {
+            j.steps_done = done;
+        }
+        if let Some(c) = &conn {
+            // A dead client must not kill the job; drop the frame.
+            let _ = write_frame(
+                c,
+                &WireMsg::JobProgress {
+                    job: id,
+                    step: done as u32,
+                    total: total as u32,
+                },
+            );
+        }
+    });
+    let frame = match result {
+        Ok(report) => {
+            let completed = report.completed;
+            let digest = if completed {
+                render_digest(&report.digest)
+                    .unwrap_or_else(|e| format!("error: digest render failed: {e:#}"))
+            } else {
+                String::new()
+            };
+            {
+                let mut jobs = shared.jobs.lock().unwrap();
+                if let Some(j) = jobs.get_mut(&id) {
+                    j.status = if completed {
+                        JobStatus::Done
+                    } else {
+                        JobStatus::Cancelled
+                    };
+                    j.steps_done = report.digest.steps.len();
+                    j.step_seconds_sum = report.step_seconds.iter().sum();
+                    for s in &report.digest.steps {
+                        j.comm_bytes_up += s.comm.bytes_up_per_worker as u64;
+                        j.comm_bytes_down += s.comm.bytes_down_per_worker as u64;
+                        j.comm_time_seconds += s.comm.time_s;
+                    }
+                }
+            }
+            let mut q = shared.queue.lock().unwrap();
+            if completed {
+                q.complete(id, true);
+                WireMsg::JobDone { job: id, digest }
+            } else {
+                q.complete_cancelled(id);
+                WireMsg::JobCancelled {
+                    job: id,
+                    outcome: CancelOutcome::Signalled.to_byte(),
+                }
+            }
+        }
+        Err(e) => {
+            let cause = format!("{e:#}");
+            {
+                let mut jobs = shared.jobs.lock().unwrap();
+                if let Some(j) = jobs.get_mut(&id) {
+                    j.status = JobStatus::Failed;
+                    j.error = Some(cause.clone());
+                }
+            }
+            shared.queue.lock().unwrap().complete(id, false);
+            // Convention: a failed job's JobDone digest is "error: ...".
+            WireMsg::JobDone {
+                job: id,
+                digest: format!("error: {cause}"),
+            }
+        }
+    };
+    if let Some(c) = &conn {
+        let _ = write_frame(c, &frame);
+    }
+    try_dispatch(&shared);
+}
+
+/// Assemble the `/metrics` snapshot under the daemon's locks
+/// (queue → jobs, the one place both are held at once).
+fn snapshot(shared: &Shared) -> ServeMetrics {
+    let lanes = shared.lanes.lock().unwrap().clone();
+    let codec = lanes
+        .as_ref()
+        .map(|l| l.codec_snapshot())
+        .unwrap_or_default();
+    let lane_faulted = lanes.as_ref().and_then(|l| l.fault()).is_some();
+    let q = shared.queue.lock().unwrap();
+    let jobs = shared.jobs.lock().unwrap();
+    let (wait_seconds_sum, wait_count) = *shared.wait.lock().unwrap();
+    let c = q.counters();
+    ServeMetrics {
+        queue_depth: q.depth(),
+        running: q.running(),
+        max_queue: q.max_queue(),
+        max_concurrent: q.max_concurrent(),
+        submitted: c.submitted,
+        rejected: c.rejected,
+        completed: c.completed,
+        failed: c.failed,
+        cancelled: c.cancelled,
+        wait_seconds_sum,
+        wait_count,
+        jobs: jobs
+            .iter()
+            .map(|(&id, j)| JobMetrics {
+                id,
+                scheme: j.wl.scheme.clone(),
+                state: j.status.label(),
+                steps_done: j.steps_done,
+                steps_total: j.wl.steps,
+                step_seconds_sum: j.step_seconds_sum,
+                comm_bytes_up: j.comm_bytes_up,
+                comm_bytes_down: j.comm_bytes_down,
+                comm_time_seconds: j.comm_time_seconds,
+            })
+            .collect(),
+        codec,
+        lane_faulted,
+    }
+}
+
+/// `QueryStats` text: `what` 0 = one summary line, 1 = the job table.
+fn render_stats(shared: &Arc<Shared>, what: u8) -> String {
+    let m = snapshot(shared);
+    if what == 0 {
+        return format!(
+            "serve | queued={} running={} submitted={} rejected={} completed={} \
+             failed={} cancelled={} wait-mean={:.3}s lanes={}\n",
+            m.queue_depth,
+            m.running,
+            m.submitted,
+            m.rejected,
+            m.completed,
+            m.failed,
+            m.cancelled,
+            if m.wait_count > 0 {
+                m.wait_seconds_sum / m.wait_count as f64
+            } else {
+                0.0
+            },
+            if m.lane_faulted { "FAULTED" } else { "healthy" },
+        );
+    }
+    let jobs = shared.jobs.lock().unwrap();
+    if jobs.is_empty() {
+        return "no jobs yet\n".into();
+    }
+    let mut out = String::new();
+    for (id, j) in jobs.iter() {
+        out.push_str(&format!(
+            "job={id} state={} steps={}/{} spec='{}'{}\n",
+            j.status.label(),
+            j.steps_done,
+            j.wl.steps,
+            j.spec.trim(),
+            match &j.error {
+                Some(e) => format!(" error='{e}'"),
+                None => String::new(),
+            }
+        ));
+    }
+    out
+}
+
+fn metrics_loop(shared: Arc<Shared>, listener: TcpListener) {
+    while !shared.shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => metrics_conn(&shared, stream),
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+/// One scrape: read the request head, answer, close. Plain HTTP/1.0 by
+/// hand — no HTTP stack in the dependency tree.
+fn metrics_conn(shared: &Shared, mut stream: TcpStream) {
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
+    let mut head = Vec::new();
+    let mut buf = [0u8; 1024];
+    loop {
+        match stream.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => {
+                head.extend_from_slice(&buf[..n]);
+                if head.windows(4).any(|w| w == b"\r\n\r\n") || head.len() > 8192 {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    let text = String::from_utf8_lossy(&head);
+    let path = text
+        .lines()
+        .next()
+        .and_then(|l| l.split_whitespace().nth(1))
+        .unwrap_or("/")
+        .to_string();
+    let response = metrics::http_response(&path, &snapshot(shared));
+    let _ = stream.write_all(response.as_bytes());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn env_overrides_are_strict() {
+        // Env vars are process-global; touch them briefly, mirroring
+        // socket::tests::env_heartbeat_is_strict.
+        std::env::set_var(ENV_SERVE_ADDR, "127.0.0.1:7777");
+        assert_eq!(env_serve_addr().unwrap().as_deref(), Some("127.0.0.1:7777"));
+        std::env::set_var(ENV_SERVE_ADDR, "  ");
+        assert!(env_serve_addr().is_err(), "set-but-empty must be loud");
+        std::env::remove_var(ENV_SERVE_ADDR);
+        assert_eq!(env_serve_addr().unwrap(), None);
+
+        std::env::set_var(ENV_SERVE_MAX_QUEUE, "12");
+        assert_eq!(env_serve_max_queue().unwrap(), Some(12));
+        std::env::set_var(ENV_SERVE_MAX_QUEUE, "many");
+        assert!(env_serve_max_queue().is_err(), "set-but-invalid must be loud");
+        std::env::remove_var(ENV_SERVE_MAX_QUEUE);
+        assert_eq!(env_serve_max_queue().unwrap(), None);
+    }
+
+    #[test]
+    fn daemon_starts_scrapes_and_shuts_down_clean_with_no_jobs() {
+        let cfg = ServeConfig {
+            bind: "127.0.0.1:0".into(),
+            metrics_bind: "127.0.0.1:0".into(),
+            ..ServeConfig::default()
+        };
+        let d = Daemon::start(&cfg).unwrap();
+        assert_ne!(d.control_addr(), d.metrics_addr());
+        let text = d.metrics_text();
+        assert!(text.contains("scalecom_serve_queue_depth 0"), "{text}");
+        assert!(text.contains("scalecom_serve_lane_faulted 0"), "{text}");
+        assert_eq!(d.shutdown(), None, "idle shutdown latches no lane fault");
+    }
+}

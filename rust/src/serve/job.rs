@@ -1,0 +1,263 @@
+//! The served job runner: the one-shot coordination workload, step by
+//! step, with a hook per step — progress streaming, cancellation, and
+//! the shared-lane exchange plug in through the hook without touching
+//! the math.
+//!
+//! Digest parity is by construction: [`run_steps`] is the *same*
+//! computation as `runtime::socket::sequential_digest` (same
+//! `Coordinator`, same gradient stream, same step records), so a served
+//! job's digest is bit-identical to a one-shot run of the same spec —
+//! the acceptance criterion — because they share this code, not because
+//! two copies happen to agree. Each step additionally drives one
+//! job-tagged collective on the daemon's shared lanes and verifies the
+//! echoed tag, bucket and values, so cross-tenant corruption on the
+//! multiplexed mesh is caught at the step where it happens.
+
+use crate::comm::parallel::{CollectiveResult, CommJob};
+use crate::comm::{Fabric, FabricConfig};
+use crate::compress::{schemes::make_compressor, Selection};
+use crate::coordinator::{Coordinator, Mode};
+use crate::runtime::socket::{step_grads, NodeDigest, NodeWorkload, StepDigest, StepKind};
+use crate::serve::lanes::LaneHandle;
+use crate::util::floats::allclose;
+use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Duration;
+
+/// What the per-step hook tells the loop to do next.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepVerdict {
+    Continue,
+    /// Stop *before* executing this step (cancellation / drain); the
+    /// digest covers the steps that completed.
+    Stop,
+}
+
+/// Run the workload for `n` workers, calling `per_step` at every step
+/// boundary with the step index, that step's gradient stream, and the
+/// step record just produced (`None` on the boundary check before the
+/// step runs). Returns the digest of the completed steps; the run
+/// completed fully iff `digest.steps.len() == wl.steps`.
+pub fn run_steps(
+    wl: &NodeWorkload,
+    n: usize,
+    mut per_step: impl FnMut(usize, &[Vec<f32>], &StepDigest) -> anyhow::Result<StepVerdict>,
+    mut before_step: impl FnMut(usize) -> StepVerdict,
+) -> anyhow::Result<NodeDigest> {
+    wl.validate()?;
+    anyhow::ensure!(n >= 1, "need at least one worker");
+    let fabric = Fabric::new(FabricConfig {
+        workers: n,
+        topology: wl.topology,
+        ..FabricConfig::default()
+    });
+    let mode = if wl.scheme == "none" {
+        Mode::Dense
+    } else {
+        Mode::Compressed(make_compressor(&wl.scheme, wl.rate, wl.seed)?)
+    };
+    let mut coord = Coordinator::new(n, wl.dim, mode, wl.beta, wl.k(), fabric, wl.warmup);
+    let mut rng = Rng::for_stream(wl.seed, n as u64);
+    let mut steps = Vec::with_capacity(wl.steps);
+    for t in 0..wl.steps {
+        if before_step(t) == StepVerdict::Stop {
+            break;
+        }
+        let grads = step_grads(&mut rng, n, wl.dim);
+        let r = coord.step(t, &grads);
+        let (kind, values) = if r.dense {
+            (StepKind::Dense, r.update.clone())
+        } else {
+            match r.selection.as_ref().expect("compressed step has a selection") {
+                Selection::Shared(ix) => (
+                    StepKind::Shared(ix.clone()),
+                    ix.iter().map(|&i| r.update[i as usize]).collect(),
+                ),
+                Selection::PerWorker(per) => {
+                    let mut union: Vec<u32> = per.iter().flatten().copied().collect();
+                    union.sort_unstable();
+                    union.dedup();
+                    (
+                        StepKind::Gather(per.clone()),
+                        union.iter().map(|&i| r.update[i as usize]).collect(),
+                    )
+                }
+            }
+        };
+        let step = StepDigest {
+            t,
+            leader: r.leader,
+            kind,
+            values,
+            comm: r.comm.clone(),
+        };
+        if per_step(t, &grads, &step)? == StepVerdict::Stop {
+            steps.push(step);
+            break;
+        }
+        steps.push(step);
+        if wl.step_delay_ms > 0 {
+            std::thread::sleep(Duration::from_millis(wl.step_delay_ms));
+        }
+    }
+    Ok(NodeDigest {
+        workers: n,
+        steps,
+        final_memory_rank0: coord.memory_snapshot()[0].memory().to_vec(),
+    })
+}
+
+/// A finished (or stopped) served job.
+#[derive(Debug)]
+pub struct JobReport {
+    pub digest: NodeDigest,
+    /// Wall seconds per completed step (compute + shared-lane exchange).
+    pub step_seconds: Vec<f64>,
+    /// False when the job stopped at a cancel signal.
+    pub completed: bool,
+}
+
+/// Run job `id` on the daemon's shared lanes. Per step: one job-tagged
+/// dense ring average of the step's gradient stream crosses the shared
+/// mesh and is verified against the locally computed mean (ring f32
+/// tolerance), then `progress(done, total)` streams the advance. The
+/// `cancel` flag is polled at every step boundary.
+pub fn run_job(
+    id: u32,
+    wl: &NodeWorkload,
+    lanes: &LaneHandle,
+    cancel: &AtomicBool,
+    mut progress: impl FnMut(usize, usize),
+) -> anyhow::Result<JobReport> {
+    anyhow::ensure!(id != 0, "job id 0 is the legacy lane tag, never a served job");
+    let n = lanes.workers();
+    let mut step_seconds = Vec::with_capacity(wl.steps);
+    let mut clock = std::time::Instant::now();
+    let digest = run_steps(
+        wl,
+        n,
+        |t, grads, _step| {
+            let mut expect = vec![0.0f32; wl.dim];
+            for g in grads {
+                for (a, b) in expect.iter_mut().zip(g) {
+                    *a += *b;
+                }
+            }
+            for v in &mut expect {
+                *v /= n as f32;
+            }
+            let jobs: Vec<CommJob> = grads
+                .iter()
+                .map(|g| CommJob::RingAvg {
+                    job: id,
+                    bucket: t as u32,
+                    buf: g.clone(),
+                })
+                .collect();
+            match lanes.collective(id, jobs)? {
+                CollectiveResult::Reduced { job, bucket, vals } => {
+                    anyhow::ensure!(
+                        (job, bucket) == (id, t as u32),
+                        "job {id} step {t}: lane echoed (job {job}, bucket {bucket})"
+                    );
+                    if let Err(i) = allclose(&vals, &expect, 1e-5, 1e-6) {
+                        anyhow::bail!(
+                            "job {id} step {t}: shared-lane average diverged at {i}: \
+                             {} vs {} (cross-job corruption?)",
+                            vals[i],
+                            expect[i]
+                        );
+                    }
+                }
+                other => anyhow::bail!("job {id} step {t}: unexpected lane result {other:?}"),
+            }
+            step_seconds.push(clock.elapsed().as_secs_f64());
+            clock = std::time::Instant::now();
+            progress(t + 1, wl.steps);
+            Ok(StepVerdict::Continue)
+        },
+        |_t| {
+            if cancel.load(Ordering::SeqCst) {
+                StepVerdict::Stop
+            } else {
+                StepVerdict::Continue
+            }
+        },
+    )?;
+    let completed = digest.steps.len() == wl.steps;
+    Ok(JobReport {
+        digest,
+        step_seconds,
+        completed,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::parallel::LaneTransport;
+    use crate::runtime::socket::{compare_digests, sequential_digest};
+    use crate::serve::lanes::SharedLanes;
+
+    #[test]
+    fn run_steps_matches_sequential_digest_exactly() {
+        for scheme in ["scalecom", "local-topk", "none"] {
+            let wl = NodeWorkload {
+                scheme: scheme.into(),
+                steps: 12,
+                warmup: 2,
+                ..NodeWorkload::default()
+            };
+            let got = run_steps(&wl, 3, |_, _, _| Ok(StepVerdict::Continue), |_| {
+                StepVerdict::Continue
+            })
+            .unwrap();
+            let want = sequential_digest(&wl, 3).unwrap();
+            // Shared code path: must be exact, not just within tolerance.
+            compare_digests(&got, &want, 0.0, 0.0)
+                .unwrap_or_else(|e| panic!("{scheme}: {e:#}"));
+        }
+    }
+
+    #[test]
+    fn run_job_digest_is_bit_identical_to_one_shot() {
+        let lanes = SharedLanes::start(2, LaneTransport::Channel, 0).unwrap();
+        let wl = NodeWorkload {
+            steps: 6,
+            ..NodeWorkload::default()
+        };
+        let mut seen = Vec::new();
+        let report = run_job(
+            5,
+            &wl,
+            &lanes.handle(),
+            &AtomicBool::new(false),
+            |done, total| seen.push((done, total)),
+        )
+        .unwrap();
+        assert!(report.completed);
+        assert_eq!(seen, (1..=6).map(|d| (d, 6)).collect::<Vec<_>>());
+        assert_eq!(report.step_seconds.len(), 6);
+        let want = sequential_digest(&wl, 2).unwrap();
+        compare_digests(&report.digest, &want, 0.0, 0.0).unwrap();
+        assert!(lanes.fault().is_none());
+    }
+
+    #[test]
+    fn cancel_stops_at_a_step_boundary_with_partial_digest() {
+        let lanes = SharedLanes::start(2, LaneTransport::Channel, 0).unwrap();
+        let wl = NodeWorkload {
+            steps: 50,
+            ..NodeWorkload::default()
+        };
+        let cancel = AtomicBool::new(false);
+        let report = run_job(7, &wl, &lanes.handle(), &cancel, |done, _| {
+            if done == 3 {
+                cancel.store(true, Ordering::SeqCst);
+            }
+        })
+        .unwrap();
+        assert!(!report.completed);
+        assert_eq!(report.digest.steps.len(), 3, "stopped at the boundary after step 3");
+    }
+}

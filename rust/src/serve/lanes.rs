@@ -1,0 +1,246 @@
+//! The daemon's shared comm-lane mesh: one persistent
+//! [`CommLanes`](crate::comm::parallel::CommLanes) owned by a dedicated
+//! thread, multiplexed across every running job.
+//!
+//! Concurrency model: job runners send whole collectives (one
+//! [`CommJob`] per worker, all tagged with the runner's job id) through
+//! an mpsc request channel; the owner thread executes them one at a
+//! time (`submit` + `wait`), so collectives from different jobs
+//! time-multiplex on the same lane threads and sockets instead of each
+//! job paying its own mesh. The owner verifies that the result echoes
+//! the submitted job tag — the socket lanes already stamp and check
+//! every frame (`comm::socket`), so a tag that comes back wrong means
+//! the mesh is mis-framed beyond recovery and the fault is **latched**:
+//! every later request fails fast with the original cause instead of
+//! touching a broken mesh.
+
+use crate::comm::codec::CodecSnapshot;
+use crate::comm::parallel::{CollectiveResult, CommJob, CommLanes, LaneTransport};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+enum LaneRequest {
+    Collective {
+        job: u32,
+        jobs: Vec<CommJob>,
+        reply: Sender<anyhow::Result<CollectiveResult>>,
+    },
+    Snapshot {
+        reply: Sender<CodecSnapshot>,
+    },
+}
+
+/// The owner side: holds the request channel and the owner thread.
+/// Dropping it closes the channel and joins the owner (which drops the
+/// mesh — clean lane shutdown, EOFs not RSTs on the socket transport).
+/// Every [`LaneHandle`] clone must be dropped first or the join blocks;
+/// the daemon joins its job threads before dropping this.
+pub struct SharedLanes {
+    req: Option<Sender<LaneRequest>>,
+    owner: Option<JoinHandle<()>>,
+    fault: Arc<Mutex<Option<String>>>,
+    workers: usize,
+}
+
+/// A cloneable submission handle for job runner threads.
+#[derive(Clone)]
+pub struct LaneHandle {
+    req: Sender<LaneRequest>,
+    fault: Arc<Mutex<Option<String>>>,
+    workers: usize,
+}
+
+impl SharedLanes {
+    /// Build the mesh (fallible on the socket transport — it binds real
+    /// loopback ports) and start the owner thread.
+    pub fn start(
+        workers: usize,
+        transport: LaneTransport,
+        group_size: usize,
+    ) -> anyhow::Result<SharedLanes> {
+        let lanes = CommLanes::with_topology(workers, transport, group_size)?;
+        let fault: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
+        let (req, rx) = channel::<LaneRequest>();
+        let owner_fault = fault.clone();
+        let owner = std::thread::spawn(move || {
+            while let Ok(next) = rx.recv() {
+                match next {
+                    LaneRequest::Snapshot { reply } => {
+                        let _ = reply.send(lanes.codec_snapshot());
+                    }
+                    LaneRequest::Collective { job, jobs, reply } => {
+                        if let Some(cause) = owner_fault.lock().unwrap().clone() {
+                            let _ = reply.send(Err(anyhow::anyhow!(
+                                "comm lanes faulted earlier: {cause}"
+                            )));
+                            continue;
+                        }
+                        lanes.submit(jobs);
+                        let out = match lanes.wait() {
+                            CollectiveResult::Failed(e) => {
+                                *owner_fault.lock().unwrap() = Some(e.clone());
+                                Err(anyhow::anyhow!("comm lanes faulted: {e}"))
+                            }
+                            res @ (CollectiveResult::Reduced { .. }
+                            | CollectiveResult::Gathered { .. }) => {
+                                let got = match &res {
+                                    CollectiveResult::Reduced { job, .. }
+                                    | CollectiveResult::Gathered { job, .. } => *job,
+                                    CollectiveResult::Failed(_) => unreachable!(),
+                                };
+                                if got == job {
+                                    Ok(res)
+                                } else {
+                                    let cause = format!(
+                                        "lane result for job {got} answered job {job}'s \
+                                         collective (mesh out of sync)"
+                                    );
+                                    *owner_fault.lock().unwrap() = Some(cause.clone());
+                                    Err(anyhow::anyhow!(cause))
+                                }
+                            }
+                        };
+                        let _ = reply.send(out);
+                    }
+                }
+            }
+        });
+        Ok(SharedLanes {
+            req: Some(req),
+            owner: Some(owner),
+            fault,
+            workers,
+        })
+    }
+
+    pub fn handle(&self) -> LaneHandle {
+        LaneHandle {
+            req: self.req.as_ref().expect("lanes alive").clone(),
+            fault: self.fault.clone(),
+            workers: self.workers,
+        }
+    }
+
+    /// The latched fault, if any — `None` means every collective so far
+    /// (and the final drain) left the mesh healthy.
+    pub fn fault(&self) -> Option<String> {
+        self.fault.lock().unwrap().clone()
+    }
+}
+
+impl Drop for SharedLanes {
+    fn drop(&mut self) {
+        self.req.take(); // close the channel; the owner loop ends
+        if let Some(h) = self.owner.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl LaneHandle {
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run one collective for `job` on the shared mesh: one tagged
+    /// [`CommJob`] per worker, blocking until the mesh answers. Errors
+    /// if the mesh has a latched fault or the daemon is gone.
+    pub fn collective(
+        &self,
+        job: u32,
+        jobs: Vec<CommJob>,
+    ) -> anyhow::Result<CollectiveResult> {
+        anyhow::ensure!(
+            jobs.len() == self.workers,
+            "collective needs one job per worker ({} != {})",
+            jobs.len(),
+            self.workers
+        );
+        let (reply, rx) = channel();
+        self.req
+            .send(LaneRequest::Collective { job, jobs, reply })
+            .map_err(|_| anyhow::anyhow!("lane owner is gone (daemon shut down)"))?;
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("lane owner dropped the collective (shutdown)"))?
+    }
+
+    /// Roll up the mesh's entropy-codec counters (zeroes on the channel
+    /// transport).
+    pub fn codec_snapshot(&self) -> CodecSnapshot {
+        let (reply, rx) = channel();
+        if self.req.send(LaneRequest::Snapshot { reply }).is_err() {
+            return CodecSnapshot::default();
+        }
+        rx.recv().unwrap_or_default()
+    }
+
+    pub fn fault(&self) -> Option<String> {
+        self.fault.lock().unwrap().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::codec::WireCodecConfig;
+
+    fn ring_avg(job: u32, bucket: u32, inputs: &[Vec<f32>]) -> Vec<CommJob> {
+        inputs
+            .iter()
+            .map(|g| CommJob::RingAvg {
+                job,
+                bucket,
+                buf: g.clone(),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn two_jobs_share_one_mesh_without_crosstalk() {
+        let n = 3;
+        let lanes =
+            SharedLanes::start(n, LaneTransport::Socket(WireCodecConfig::off()), 0).unwrap();
+        let h = lanes.handle();
+        // Two "tenants" hammer the same mesh concurrently with disjoint
+        // values; every result must echo the right tag and the right
+        // average.
+        std::thread::scope(|s| {
+            for (job, base) in [(1u32, 1.0f32), (2, 100.0)] {
+                let h = h.clone();
+                s.spawn(move || {
+                    for round in 0..5u32 {
+                        let inputs: Vec<Vec<f32>> =
+                            (0..n).map(|w| vec![base + w as f32; 16]).collect();
+                        let want = base + (n as f32 - 1.0) / 2.0;
+                        match h.collective(job, ring_avg(job, round, &inputs)).unwrap() {
+                            CollectiveResult::Reduced {
+                                job: got,
+                                bucket,
+                                vals,
+                            } => {
+                                assert_eq!((got, bucket), (job, round));
+                                for v in vals {
+                                    assert!((v - want).abs() < 1e-5, "job {job}: {v} vs {want}");
+                                }
+                            }
+                            other => panic!("job {job}: unexpected {other:?}"),
+                        }
+                    }
+                });
+            }
+        });
+        assert!(lanes.fault().is_none(), "no latched fault after clean runs");
+        drop(h);
+        drop(lanes); // clean join, mesh torn down with EOFs
+    }
+
+    #[test]
+    fn wrong_arity_is_rejected_before_touching_the_mesh() {
+        let lanes = SharedLanes::start(2, LaneTransport::Channel, 0).unwrap();
+        let h = lanes.handle();
+        let err = h.collective(1, ring_avg(1, 0, &[vec![1.0; 4]])).unwrap_err();
+        assert!(err.to_string().contains("one job per worker"), "{err}");
+        assert!(lanes.fault().is_none());
+    }
+}

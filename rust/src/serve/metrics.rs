@@ -1,0 +1,246 @@
+//! Prometheus-style text rendering for the serve daemon's `/metrics`
+//! endpoint (exposition format 0.0.4, hand-rolled — no HTTP stack).
+//!
+//! Pure functions over a plain snapshot struct: the daemon assembles a
+//! [`ServeMetrics`] under its locks and the rendering is testable
+//! without a socket in sight. Counter names follow the Prometheus
+//! conventions (`_total` suffix on counters, `_sum`/`_count` pairs for
+//! the latency summaries, `job="N"` labels on the per-job series).
+
+use crate::comm::codec::CodecSnapshot;
+
+/// One job's slice of the scrape.
+#[derive(Debug, Clone)]
+pub struct JobMetrics {
+    pub id: u32,
+    pub scheme: String,
+    pub state: &'static str,
+    pub steps_done: usize,
+    pub steps_total: usize,
+    /// Sum of per-step wall seconds (with `steps_done` as the count,
+    /// this is the step-latency summary).
+    pub step_seconds_sum: f64,
+    /// Per-job `CommStats` rollup from the step records.
+    pub comm_bytes_up: u64,
+    pub comm_bytes_down: u64,
+    pub comm_time_seconds: f64,
+}
+
+/// Everything one `/metrics` scrape reports.
+#[derive(Debug, Clone, Default)]
+pub struct ServeMetrics {
+    pub queue_depth: usize,
+    pub running: usize,
+    pub max_queue: usize,
+    pub max_concurrent: usize,
+    pub submitted: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub cancelled: u64,
+    /// Scheduler wait (admission → first step) summary.
+    pub wait_seconds_sum: f64,
+    pub wait_count: u64,
+    pub jobs: Vec<JobMetrics>,
+    /// Shared-lane wire entropy-codec counters.
+    pub codec: CodecSnapshot,
+    /// A latched lane fault, surfaced as a gauge (0 healthy, 1 faulted).
+    pub lane_faulted: bool,
+}
+
+impl Default for JobMetrics {
+    fn default() -> Self {
+        JobMetrics {
+            id: 0,
+            scheme: String::new(),
+            state: "queued",
+            steps_done: 0,
+            steps_total: 0,
+            step_seconds_sum: 0.0,
+            comm_bytes_up: 0,
+            comm_bytes_down: 0,
+            comm_time_seconds: 0.0,
+        }
+    }
+}
+
+fn header(out: &mut String, name: &str, kind: &str, help: &str) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+}
+
+/// Render the exposition text.
+pub fn render(m: &ServeMetrics) -> String {
+    let mut out = String::new();
+    header(&mut out, "scalecom_serve_queue_depth", "gauge", "Jobs waiting in the FIFO queue.");
+    out.push_str(&format!("scalecom_serve_queue_depth {}\n", m.queue_depth));
+    header(&mut out, "scalecom_serve_running", "gauge", "Jobs currently executing on the shared lanes.");
+    out.push_str(&format!("scalecom_serve_running {}\n", m.running));
+    header(&mut out, "scalecom_serve_queue_capacity", "gauge", "Admission-control limits.");
+    out.push_str(&format!(
+        "scalecom_serve_queue_capacity{{limit=\"max_queue\"}} {}\n\
+         scalecom_serve_queue_capacity{{limit=\"max_concurrent\"}} {}\n",
+        m.max_queue, m.max_concurrent
+    ));
+    header(&mut out, "scalecom_serve_lane_faulted", "gauge", "1 when the shared comm-lane mesh has a latched fault.");
+    out.push_str(&format!(
+        "scalecom_serve_lane_faulted {}\n",
+        u8::from(m.lane_faulted)
+    ));
+    for (name, v, help) in [
+        ("scalecom_serve_jobs_submitted_total", m.submitted, "Jobs admitted to the queue."),
+        ("scalecom_serve_jobs_rejected_total", m.rejected, "Submissions refused (backpressure, drain, bad spec)."),
+        ("scalecom_serve_jobs_completed_total", m.completed, "Jobs that ran every step."),
+        ("scalecom_serve_jobs_failed_total", m.failed, "Jobs that errored mid-run."),
+        ("scalecom_serve_jobs_cancelled_total", m.cancelled, "Jobs cancelled while queued or running."),
+    ] {
+        header(&mut out, name, "counter", help);
+        out.push_str(&format!("{name} {v}\n"));
+    }
+    header(&mut out, "scalecom_serve_scheduler_wait_seconds", "summary", "Admission-to-first-step wait.");
+    out.push_str(&format!(
+        "scalecom_serve_scheduler_wait_seconds_sum {}\n\
+         scalecom_serve_scheduler_wait_seconds_count {}\n",
+        m.wait_seconds_sum, m.wait_count
+    ));
+    if !m.jobs.is_empty() {
+        header(&mut out, "scalecom_job_steps_total", "counter", "Steps completed per job.");
+        for j in &m.jobs {
+            out.push_str(&format!(
+                "scalecom_job_steps_total{{job=\"{}\",scheme=\"{}\",state=\"{}\"}} {}\n",
+                j.id, j.scheme, j.state, j.steps_done
+            ));
+        }
+        header(&mut out, "scalecom_job_step_latency_seconds", "summary", "Per-step wall time per job.");
+        for j in &m.jobs {
+            out.push_str(&format!(
+                "scalecom_job_step_latency_seconds_sum{{job=\"{}\"}} {}\n\
+                 scalecom_job_step_latency_seconds_count{{job=\"{}\"}} {}\n",
+                j.id, j.step_seconds_sum, j.id, j.steps_done
+            ));
+        }
+        header(&mut out, "scalecom_job_comm_bytes_total", "counter", "Modeled per-worker comm bytes per job (CommStats rollup).");
+        for j in &m.jobs {
+            out.push_str(&format!(
+                "scalecom_job_comm_bytes_total{{job=\"{}\",direction=\"up\"}} {}\n\
+                 scalecom_job_comm_bytes_total{{job=\"{}\",direction=\"down\"}} {}\n",
+                j.id, j.comm_bytes_up, j.id, j.comm_bytes_down
+            ));
+        }
+        header(&mut out, "scalecom_job_comm_time_seconds_total", "counter", "Modeled collective time per job.");
+        for j in &m.jobs {
+            out.push_str(&format!(
+                "scalecom_job_comm_time_seconds_total{{job=\"{}\"}} {}\n",
+                j.id, j.comm_time_seconds
+            ));
+        }
+    }
+    header(&mut out, "scalecom_wire_codec_frames_total", "counter", "Shared-lane wire codec frames.");
+    out.push_str(&format!(
+        "scalecom_wire_codec_frames_total{{op=\"encode\"}} {}\n\
+         scalecom_wire_codec_frames_total{{op=\"packed\"}} {}\n",
+        m.codec.enc_frames(),
+        m.codec.packed_frames
+    ));
+    header(&mut out, "scalecom_wire_codec_bytes_total", "counter", "Shared-lane wire codec byte volume.");
+    out.push_str(&format!(
+        "scalecom_wire_codec_bytes_total{{kind=\"raw\"}} {}\n\
+         scalecom_wire_codec_bytes_total{{kind=\"wire\"}} {}\n",
+        m.codec.enc_raw_bytes(),
+        m.codec.enc_wire_bytes()
+    ));
+    out
+}
+
+/// Wrap the scrape body in a minimal HTTP/1.0 response; any path other
+/// than `/metrics` gets a 404 so a stray browser sees something sane.
+pub fn http_response(request_path: &str, m: &ServeMetrics) -> String {
+    if request_path == "/metrics" {
+        let body = render(m);
+        format!(
+            "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{}",
+            body.len(),
+            body
+        )
+    } else {
+        let body = "404 — try /metrics\n";
+        format!(
+            "HTTP/1.0 404 Not Found\r\nContent-Type: text/plain\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{}",
+            body.len(),
+            body
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ServeMetrics {
+        ServeMetrics {
+            queue_depth: 3,
+            running: 2,
+            max_queue: 8,
+            max_concurrent: 2,
+            submitted: 7,
+            rejected: 1,
+            completed: 2,
+            failed: 0,
+            cancelled: 0,
+            wait_seconds_sum: 0.25,
+            wait_count: 4,
+            jobs: vec![JobMetrics {
+                id: 3,
+                scheme: "scalecom".into(),
+                state: "running",
+                steps_done: 17,
+                steps_total: 50,
+                step_seconds_sum: 0.034,
+                comm_bytes_up: 12_000,
+                comm_bytes_down: 12_000,
+                comm_time_seconds: 0.002,
+            }],
+            codec: CodecSnapshot::default(),
+            lane_faulted: false,
+        }
+    }
+
+    #[test]
+    fn scrape_exposes_the_acceptance_series() {
+        let text = render(&sample());
+        for needle in [
+            "scalecom_serve_queue_depth 3",
+            "scalecom_serve_running 2",
+            "scalecom_serve_jobs_submitted_total 7",
+            "scalecom_serve_jobs_rejected_total 1",
+            "scalecom_serve_scheduler_wait_seconds_sum 0.25",
+            "scalecom_serve_scheduler_wait_seconds_count 4",
+            "scalecom_job_steps_total{job=\"3\",scheme=\"scalecom\",state=\"running\"} 17",
+            "scalecom_job_step_latency_seconds_sum{job=\"3\"} 0.034",
+            "scalecom_job_comm_bytes_total{job=\"3\",direction=\"up\"} 12000",
+            "scalecom_job_comm_time_seconds_total{job=\"3\"} 0.002",
+            "scalecom_serve_lane_faulted 0",
+            "# TYPE scalecom_serve_queue_depth gauge",
+        ] {
+            assert!(text.contains(needle), "missing '{needle}' in:\n{text}");
+        }
+    }
+
+    #[test]
+    fn http_wrapper_routes_metrics_and_404s_the_rest() {
+        let m = sample();
+        let ok = http_response("/metrics", &m);
+        assert!(ok.starts_with("HTTP/1.0 200 OK\r\n"), "{ok}");
+        assert!(ok.contains("scalecom_serve_queue_depth 3"));
+        let body = ok.split("\r\n\r\n").nth(1).unwrap();
+        let declared: usize = ok
+            .lines()
+            .find(|l| l.starts_with("Content-Length: "))
+            .and_then(|l| l.trim_start_matches("Content-Length: ").trim().parse().ok())
+            .unwrap();
+        assert_eq!(declared, body.len(), "Content-Length matches the body");
+        let missing = http_response("/", &m);
+        assert!(missing.starts_with("HTTP/1.0 404"), "{missing}");
+    }
+}

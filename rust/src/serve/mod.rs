@@ -1,0 +1,31 @@
+//! `scalecom serve` — the multi-tenant training daemon.
+//!
+//! One process, one persistent comm-lane mesh, many jobs: clients
+//! submit workload specs over the framed wire protocol
+//! ([`protocol`]), a bounded FIFO queue with admission control
+//! ([`queue`]) decides who waits and who is refused, a scheduler
+//! multiplexes admitted jobs onto the shared lanes ([`lanes`],
+//! [`job`]), and a Prometheus-style text endpoint ([`metrics`])
+//! exposes the whole thing. [`storm`] replays the scheduler in
+//! virtual time for `scalecom simulate --job-storm`.
+//!
+//! Layering: `queue`/`protocol`/`metrics`/`storm` are pure (no I/O);
+//! `lanes` owns the mesh thread; `job` runs one tenant's steps;
+//! `daemon` wires them to TCP; `client` is the other end of the wire.
+
+pub mod client;
+pub mod daemon;
+pub mod job;
+pub mod lanes;
+pub mod metrics;
+pub mod protocol;
+pub mod queue;
+pub mod storm;
+
+pub use client::{run_local, ClientConn, SubmitOutcome};
+pub use daemon::{Daemon, ServeConfig};
+pub use job::{run_job, run_steps, JobReport, StepVerdict};
+pub use lanes::{LaneHandle, SharedLanes};
+pub use metrics::{JobMetrics, ServeMetrics};
+pub use queue::{CancelOutcome, JobQueue, QueueCounters, RejectReason, Submission};
+pub use storm::{run_storm, StormConfig, StormReport};

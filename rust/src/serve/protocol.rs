@@ -1,0 +1,113 @@
+//! The serve-plane job spec: the UTF-8 payload of a `SubmitJob` frame.
+//!
+//! A spec is a space-separated `key=value` list over the same knobs as
+//! `scalecom node` (`scheme=scalecom dim=96 rate=8 steps=50 ...`);
+//! unknown keys and malformed values are loud errors that come back as
+//! a typed `JobRejected`, never a silently-defaulted run. Parsing
+//! produces a [`NodeWorkload`] — the exact struct the one-shot drivers
+//! run — so a served job is *definitionally* the same computation as
+//! `scalecom node`/`submit --local` with the same flags, which is what
+//! makes the digest-parity acceptance check meaningful.
+
+use crate::comm::Topology;
+use crate::runtime::socket::NodeWorkload;
+
+/// Parse a `SubmitJob` spec into a validated workload. Missing keys
+/// take the [`NodeWorkload::default`] values (except `step-delay-ms`,
+/// which also defaults to 0).
+pub fn parse_spec(spec: &str) -> anyhow::Result<NodeWorkload> {
+    let mut wl = NodeWorkload::default();
+    for token in spec.split_whitespace() {
+        let (key, value) = token.split_once('=').ok_or_else(|| {
+            anyhow::anyhow!("spec token '{token}' is not key=value")
+        })?;
+        anyhow::ensure!(!value.is_empty(), "spec key '{key}' has an empty value");
+        match key {
+            "scheme" => wl.scheme = value.to_string(),
+            "dim" => wl.dim = parse_num(key, value)?,
+            "rate" => wl.rate = parse_num(key, value)?,
+            "steps" => wl.steps = parse_num(key, value)?,
+            "warmup" => wl.warmup = parse_num(key, value)?,
+            "seed" => wl.seed = parse_num::<u64>(key, value)?,
+            "beta" => {
+                wl.beta = value.parse::<f32>().map_err(|_| {
+                    anyhow::anyhow!("spec key 'beta' expects a number, got '{value}'")
+                })?
+            }
+            "topology" => wl.topology = Topology::parse(value)?,
+            "step-delay-ms" => wl.step_delay_ms = parse_num::<u64>(key, value)?,
+            other => anyhow::bail!(
+                "unknown spec key '{other}' (expected scheme|dim|rate|steps|warmup|\
+                 seed|beta|topology|step-delay-ms)"
+            ),
+        }
+    }
+    wl.validate()?;
+    Ok(wl)
+}
+
+/// Render a workload back into spec text; round-trips through
+/// [`parse_spec`]. Every key is emitted explicitly so the spec is
+/// self-describing in logs and `jobs` listings.
+pub fn render_spec(wl: &NodeWorkload) -> String {
+    format!(
+        "scheme={} dim={} rate={} steps={} warmup={} seed={} beta={} topology={}{}",
+        wl.scheme,
+        wl.dim,
+        wl.rate,
+        wl.steps,
+        wl.warmup,
+        wl.seed,
+        wl.beta,
+        match wl.topology {
+            Topology::Ring => "ring",
+            Topology::ParameterServer => "ps",
+        },
+        if wl.step_delay_ms > 0 {
+            format!(" step-delay-ms={}", wl.step_delay_ms)
+        } else {
+            String::new()
+        }
+    )
+}
+
+fn parse_num<T: std::str::FromStr>(key: &str, value: &str) -> anyhow::Result<T> {
+    value
+        .parse::<T>()
+        .map_err(|_| anyhow::anyhow!("spec key '{key}' expects an integer, got '{value}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_round_trips_and_defaults_apply() {
+        let wl = parse_spec("scheme=local-topk dim=128 rate=16 steps=7 seed=9").unwrap();
+        assert_eq!(wl.scheme, "local-topk");
+        assert_eq!((wl.dim, wl.rate, wl.steps, wl.seed), (128, 16, 7, 9));
+        // Untouched keys keep the one-shot defaults.
+        let d = NodeWorkload::default();
+        assert_eq!((wl.warmup, wl.beta), (d.warmup, d.beta));
+        let again = parse_spec(&render_spec(&wl)).unwrap();
+        assert_eq!(render_spec(&again), render_spec(&wl));
+        // The empty spec is the default workload.
+        assert_eq!(render_spec(&parse_spec("").unwrap()), render_spec(&d));
+    }
+
+    #[test]
+    fn bad_specs_are_loud() {
+        for (spec, needle) in [
+            ("dim", "not key=value"),
+            ("dim=", "empty value"),
+            ("dim=abc", "expects an integer"),
+            ("beta=x", "expects a number"),
+            ("frobnicate=1", "unknown spec key"),
+            ("scheme=true-topk", "not runnable"), // NodeWorkload::validate
+            ("topology=mesh", "unknown topology"),
+        ] {
+            let err = parse_spec(spec).unwrap_err().to_string();
+            assert!(err.contains(needle), "spec '{spec}': {err}");
+        }
+    }
+}

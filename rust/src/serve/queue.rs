@@ -1,0 +1,295 @@
+//! Bounded FIFO job queue with admission control — the pure state
+//! machine behind the serve daemon's scheduler.
+//!
+//! No clocks, no threads, no sockets: submissions either get an id and
+//! a queue position or a typed [`RejectReason`], `start_next` hands out
+//! runnable jobs FIFO under the concurrency cap, and every transition
+//! bumps a counter the `/metrics` endpoint reports. Keeping it pure is
+//! what lets the property tests drive random submit/complete/cancel
+//! interleavings without any real daemon, and what the job-storm
+//! simulator replays in virtual time.
+
+use std::collections::VecDeque;
+
+/// Why a submission was refused — typed, so clients and tests can
+/// distinguish backpressure from a bad request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The wait queue is at capacity; resubmit later.
+    QueueFull { depth: usize, max: usize },
+    /// The daemon is shutting down and admits nothing new.
+    Draining,
+    /// The job spec did not parse or validate.
+    BadSpec(String),
+}
+
+impl RejectReason {
+    /// The wire text of a `JobRejected` frame.
+    pub fn render(&self) -> String {
+        match self {
+            RejectReason::QueueFull { depth, max } => {
+                format!("queue full (depth {depth}/{max}) — resubmit later")
+            }
+            RejectReason::Draining => "daemon is draining and admits no new jobs".into(),
+            RejectReason::BadSpec(e) => format!("bad job spec: {e}"),
+        }
+    }
+}
+
+/// Outcome of [`JobQueue::submit`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Submission {
+    /// Admitted with a daemon-unique id and the 0-based wait-queue
+    /// position at admission time.
+    Admitted { id: u32, queue_pos: u32 },
+    Rejected(RejectReason),
+}
+
+/// Outcome of [`JobQueue::cancel`], mirroring the `JobCancelled` wire
+/// outcome byte.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CancelOutcome {
+    /// The job was still queued and is gone (wire outcome 0).
+    Dequeued,
+    /// The job is running; the runner has been signalled and will stop
+    /// at its next step boundary (wire outcome 1).
+    Signalled,
+}
+
+impl CancelOutcome {
+    pub fn to_byte(self) -> u8 {
+        match self {
+            CancelOutcome::Dequeued => 0,
+            CancelOutcome::Signalled => 1,
+        }
+    }
+}
+
+/// Monotonic counters over the queue's lifetime (all terminal states
+/// are disjoint: completed + failed + cancelled = admitted jobs that
+/// have left the system).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct QueueCounters {
+    pub submitted: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub cancelled: u64,
+}
+
+/// The bounded FIFO queue + running set. Job ids start at 1: job tag 0
+/// is the legacy/one-shot tag on the comm lanes (`CommJob::RingAvg {
+/// job: 0, .. }` keeps byte-identical wire framing), so no served job
+/// may ever use it.
+#[derive(Debug)]
+pub struct JobQueue {
+    max_queue: usize,
+    max_concurrent: usize,
+    next_id: u32,
+    queued: VecDeque<u32>,
+    running: Vec<u32>,
+    draining: bool,
+    counters: QueueCounters,
+}
+
+impl JobQueue {
+    pub fn new(max_queue: usize, max_concurrent: usize) -> JobQueue {
+        JobQueue {
+            max_queue: max_queue.max(1),
+            max_concurrent: max_concurrent.max(1),
+            next_id: 1,
+            queued: VecDeque::new(),
+            running: Vec::new(),
+            draining: false,
+            counters: QueueCounters::default(),
+        }
+    }
+
+    /// Admit a job or reject with a reason. Admission only reserves the
+    /// id and the wait-queue slot; [`JobQueue::start_next`] decides when
+    /// it runs.
+    pub fn submit(&mut self) -> Submission {
+        if self.draining {
+            self.counters.rejected += 1;
+            return Submission::Rejected(RejectReason::Draining);
+        }
+        if self.queued.len() >= self.max_queue {
+            self.counters.rejected += 1;
+            return Submission::Rejected(RejectReason::QueueFull {
+                depth: self.queued.len(),
+                max: self.max_queue,
+            });
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queued.push_back(id);
+        self.counters.submitted += 1;
+        Submission::Admitted {
+            id,
+            queue_pos: (self.queued.len() - 1) as u32,
+        }
+    }
+
+    /// Book a rejection that happened before admission (a spec that did
+    /// not parse), so the counters still see it.
+    pub fn note_rejected(&mut self) {
+        self.counters.rejected += 1;
+    }
+
+    /// Next runnable job, FIFO, respecting the concurrency cap. Returns
+    /// `None` when the queue is empty or the cap is reached.
+    pub fn start_next(&mut self) -> Option<u32> {
+        if self.running.len() >= self.max_concurrent {
+            return None;
+        }
+        let id = self.queued.pop_front()?;
+        self.running.push(id);
+        Some(id)
+    }
+
+    /// A running job finished; frees its concurrency slot.
+    pub fn complete(&mut self, id: u32, ok: bool) {
+        if let Some(i) = self.running.iter().position(|&r| r == id) {
+            self.running.remove(i);
+            if ok {
+                self.counters.completed += 1;
+            } else {
+                self.counters.failed += 1;
+            }
+        }
+    }
+
+    /// A running job stopped at a cancel signal; frees its slot.
+    pub fn complete_cancelled(&mut self, id: u32) {
+        if let Some(i) = self.running.iter().position(|&r| r == id) {
+            self.running.remove(i);
+            self.counters.cancelled += 1;
+        }
+    }
+
+    /// Cancel by id: a queued job is removed outright; a running job is
+    /// only *signalled* (the caller flips the runner's cancel flag — the
+    /// slot frees when the runner acknowledges via
+    /// [`JobQueue::complete_cancelled`]). `None` = unknown/finished id.
+    pub fn cancel(&mut self, id: u32) -> Option<CancelOutcome> {
+        if let Some(i) = self.queued.iter().position(|&q| q == id) {
+            self.queued.remove(i);
+            self.counters.cancelled += 1;
+            return Some(CancelOutcome::Dequeued);
+        }
+        if self.running.contains(&id) {
+            return Some(CancelOutcome::Signalled);
+        }
+        None
+    }
+
+    /// Stop admitting; queued jobs stay until cancelled or started.
+    pub fn drain(&mut self) {
+        self.draining = true;
+    }
+
+    /// Drop every still-queued job (shutdown path); returns the ids so
+    /// the daemon can mark their states cancelled.
+    pub fn cancel_all_queued(&mut self) -> Vec<u32> {
+        let ids: Vec<u32> = self.queued.drain(..).collect();
+        self.counters.cancelled += ids.len() as u64;
+        ids
+    }
+
+    pub fn depth(&self) -> usize {
+        self.queued.len()
+    }
+
+    pub fn running(&self) -> usize {
+        self.running.len()
+    }
+
+    pub fn running_ids(&self) -> &[u32] {
+        &self.running
+    }
+
+    pub fn counters(&self) -> QueueCounters {
+        self.counters
+    }
+
+    pub fn max_queue(&self) -> usize {
+        self.max_queue
+    }
+
+    pub fn max_concurrent(&self) -> usize {
+        self.max_concurrent
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_admission_and_dispatch() {
+        let mut q = JobQueue::new(4, 2);
+        let ids: Vec<u32> = (0..4)
+            .map(|i| match q.submit() {
+                Submission::Admitted { id, queue_pos } => {
+                    assert_eq!(queue_pos, i as u32);
+                    id
+                }
+                Submission::Rejected(r) => panic!("rejected: {r:?}"),
+            })
+            .collect();
+        assert_eq!(ids, vec![1, 2, 3, 4], "ids start at 1 (0 is the legacy lane tag)");
+        // Cap of 2: exactly two start, in submission order.
+        assert_eq!(q.start_next(), Some(1));
+        assert_eq!(q.start_next(), Some(2));
+        assert_eq!(q.start_next(), None, "concurrency cap holds");
+        q.complete(1, true);
+        assert_eq!(q.start_next(), Some(3), "FIFO after a slot frees");
+        assert_eq!(q.depth(), 1);
+        assert_eq!(q.running(), 2);
+    }
+
+    #[test]
+    fn overflow_rejects_with_typed_reason() {
+        let mut q = JobQueue::new(2, 1);
+        assert!(matches!(q.submit(), Submission::Admitted { .. }));
+        assert!(matches!(q.submit(), Submission::Admitted { .. }));
+        match q.submit() {
+            Submission::Rejected(RejectReason::QueueFull { depth: 2, max: 2 }) => {}
+            other => panic!("expected QueueFull, got {other:?}"),
+        }
+        assert_eq!(q.counters().rejected, 1);
+        // Overflow rejection admits again once a slot frees.
+        assert_eq!(q.start_next(), Some(1));
+        assert!(matches!(q.submit(), Submission::Admitted { id: 3, .. }));
+    }
+
+    #[test]
+    fn cancel_queued_vs_running() {
+        let mut q = JobQueue::new(4, 1);
+        let _ = q.submit(); // 1
+        let _ = q.submit(); // 2
+        assert_eq!(q.start_next(), Some(1));
+        assert_eq!(q.cancel(2), Some(CancelOutcome::Dequeued));
+        assert_eq!(q.cancel(1), Some(CancelOutcome::Signalled));
+        // Signalled does NOT free the slot until the runner acknowledges.
+        assert_eq!(q.running(), 1);
+        q.complete_cancelled(1);
+        assert_eq!(q.running(), 0);
+        assert_eq!(q.cancel(7), None, "unknown id");
+        let c = q.counters();
+        assert_eq!((c.cancelled, c.completed, c.failed), (2, 0, 0));
+    }
+
+    #[test]
+    fn draining_rejects_everything_new() {
+        let mut q = JobQueue::new(4, 1);
+        let _ = q.submit();
+        q.drain();
+        assert!(matches!(
+            q.submit(),
+            Submission::Rejected(RejectReason::Draining)
+        ));
+        assert_eq!(q.cancel_all_queued(), vec![1]);
+        assert_eq!(q.depth(), 0);
+    }
+}

@@ -262,6 +262,29 @@ pub fn tune(cfg: &TuneConfig, profile: &TopologyProfile) -> anyhow::Result<TuneO
     tune_with_compute(cfg, profile, compute_per_elem_s)
 }
 
+/// `--bucket-bytes auto`: run the same sweep `scalecom tune` prints
+/// (calibrated unless a compute cost is given) and resolve the winner
+/// to the flag value a training run should apply — the winning cap for
+/// a bucketed plan, `0` for both monolithic candidates (the trainer
+/// only takes the bucketed path when the flag is positive). Returns the
+/// outcome too so callers can log the sweep they acted on.
+pub fn auto_bucket_bytes(
+    cfg: &TuneConfig,
+    profile: &TopologyProfile,
+    compute_per_elem_s: Option<f64>,
+) -> anyhow::Result<(TuneOutcome, usize)> {
+    let outcome = match compute_per_elem_s {
+        Some(c) => tune_with_compute(cfg, profile, c)?,
+        None => tune(cfg, profile)?,
+    };
+    let resolved = if outcome.best.overlapped {
+        0
+    } else {
+        outcome.best.bucket_bytes
+    };
+    Ok((outcome, resolved))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -308,6 +331,34 @@ mod tests {
         assert_eq!(counts, dedup, "one candidate per distinct plan");
         assert!(counts.contains(&1), "monolithic always swept");
         assert!(counts.contains(&cfg.layers), "finest plan always swept");
+    }
+
+    #[test]
+    fn auto_resolves_to_the_plan_tune_prints() {
+        let cfg = tcfg();
+        let profile = uniform_zero_latency(10.0);
+        // Deterministic compute cost so both paths sweep identically.
+        let cpe = 2e-9;
+        let printed = tune_with_compute(&cfg, &profile, cpe).unwrap();
+        let (outcome, resolved) = auto_bucket_bytes(&cfg, &profile, Some(cpe)).unwrap();
+        assert_eq!(
+            outcome.best.label(),
+            printed.best.label(),
+            "auto acts on the same winner tune prints"
+        );
+        let want = if printed.best.overlapped {
+            0
+        } else {
+            printed.best.bucket_bytes
+        };
+        assert_eq!(resolved, want, "resolved flag reproduces the printed plan");
+        // And the resolved flag round-trips onto the same bucket count.
+        let partition = engine::uniform_partition(cfg.dim, cfg.layers);
+        let buckets = BucketPlan::from_partition(&partition, resolved).num_buckets();
+        assert_eq!(
+            buckets,
+            if printed.best.overlapped { 1 } else { printed.best.buckets }
+        );
     }
 
     #[test]

@@ -8,6 +8,7 @@
 pub mod floats;
 pub mod rng;
 pub mod select;
+pub mod signal;
 pub mod timer;
 
 pub use floats::{approx_eq, approx_eq_eps, l2_norm};

@@ -1,0 +1,92 @@
+//! Process-wide SIGINT/SIGTERM handling without a libc crate: the
+//! handler flips one global `AtomicBool`, and long-running drivers
+//! (`scalecom node`, `scalecom serve`) poll it between steps to drain
+//! in-flight work, flush snapshots, and close mesh links cleanly (EOF,
+//! not RST) before exiting 0.
+//!
+//! Only the CLI entry points install the handler; library callers and
+//! in-process tests observe the flag solely through
+//! [`shutdown_requested`] (false unless someone called
+//! [`request_shutdown`]), so embedding the runtime never hijacks the
+//! host process's signal disposition.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+const SIGINT: i32 = 2;
+const SIGTERM: i32 = 15;
+
+// std already links the platform C runtime; `signal(2)` is all we need,
+// so declare it directly instead of gating a libc dependency. Handlers
+// installed via `signal` are async-signal-safe here because the handler
+// body is a single atomic store.
+extern "C" {
+    fn signal(signum: i32, handler: usize) -> usize;
+}
+
+extern "C" fn on_signal(_signum: i32) {
+    SHUTDOWN.store(true, Ordering::SeqCst);
+}
+
+/// Install the SIGINT/SIGTERM handler that latches the shutdown flag.
+/// Idempotent; call once from the CLI entry point before the run loop.
+pub fn install_shutdown_handler() {
+    let handler = on_signal as extern "C" fn(i32);
+    unsafe {
+        signal(SIGINT, handler as usize);
+        signal(SIGTERM, handler as usize);
+    }
+}
+
+/// Has a shutdown been requested (signal received, or
+/// [`request_shutdown`] called)? Step loops poll this at their
+/// boundaries and drain instead of starting new work.
+pub fn shutdown_requested() -> bool {
+    SHUTDOWN.load(Ordering::SeqCst)
+}
+
+/// Latch the shutdown flag programmatically — the daemon uses it to
+/// cascade a client-requested stop through the same drain path a signal
+/// takes, and tests use it instead of delivering real signals.
+pub fn request_shutdown() {
+    SHUTDOWN.store(true, Ordering::SeqCst);
+}
+
+/// Clear the latch (tests only: the flag is process-global, so a test
+/// that set it must clear it to avoid draining later runs).
+pub fn clear_shutdown() {
+    SHUTDOWN.store(false, Ordering::SeqCst);
+}
+
+/// Serialize tests that latch/clear the process-global flag — without
+/// this, two such tests on different harness threads would drain or
+/// un-drain each other mid-assertion.
+#[cfg(test)]
+pub(crate) fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flag_round_trips_and_install_is_idempotent() {
+        // `test_guard` serializes every test that touches the
+        // process-global flag. No real signal delivery here — the
+        // handler body is a one-line store, and the signal path proper
+        // is exercised by the serve-smoke CI job (SIGTERM to a live
+        // daemon).
+        let _guard = test_guard();
+        assert!(!shutdown_requested(), "no shutdown pending at entry");
+        install_shutdown_handler();
+        install_shutdown_handler();
+        assert!(!shutdown_requested(), "installing must not latch the flag");
+        request_shutdown();
+        assert!(shutdown_requested());
+        clear_shutdown();
+        assert!(!shutdown_requested());
+    }
+}

@@ -1,0 +1,271 @@
+//! End-to-end serve-plane tests: a real daemon on loopback ports, real
+//! framed TCP clients, a real `/metrics` scrape — the acceptance
+//! criteria of the serve subsystem, in-process.
+//!
+//! Everything binds port 0, so the tests are parallel-safe and need no
+//! fixed ports free.
+
+use scalecom::comm::codec::WireCodecConfig;
+use scalecom::comm::parallel::LaneTransport;
+use scalecom::comm::wire::{self, Purpose, WireMsg, WIRE_CODEC_VERSION};
+use scalecom::runtime::socket::{compare_digests, parse_digest};
+use scalecom::serve::protocol::parse_spec;
+use scalecom::serve::{run_local, ClientConn, Daemon, ServeConfig, SubmitOutcome};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+const CONNECT: Duration = Duration::from_secs(5);
+
+fn daemon(
+    workers: usize,
+    transport: LaneTransport,
+    max_queue: usize,
+    max_concurrent: usize,
+) -> Daemon {
+    Daemon::start(&ServeConfig {
+        bind: "127.0.0.1:0".into(),
+        metrics_bind: "127.0.0.1:0".into(),
+        workers,
+        group_size: 0,
+        transport,
+        max_queue,
+        max_concurrent,
+    })
+    .expect("daemon start")
+}
+
+/// Poll the daemon's summary line until it contains `needle`.
+fn wait_stats(c: &mut ClientConn, needle: &str) -> String {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let text = c.query_stats(0).expect("stats round-trip");
+        if text.contains(needle) {
+            return text;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "timed out waiting for '{needle}'; last: {text}"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+#[test]
+fn two_concurrent_jobs_on_shared_lanes_match_one_shot_digests() {
+    // The real thing: socket-transport lanes, two tenants with
+    // different schemes running concurrently on ONE mesh.
+    let d = daemon(2, LaneTransport::Socket(WireCodecConfig::default()), 8, 2);
+    let addr = d.control_addr();
+    let specs = [
+        "scheme=scalecom dim=96 rate=8 steps=6 warmup=1 seed=11",
+        "scheme=local-topk dim=64 rate=4 steps=6 seed=7",
+    ];
+    let outcomes: Vec<(&str, SubmitOutcome, String)> = std::thread::scope(|s| {
+        let handles: Vec<_> = specs
+            .iter()
+            .map(|&spec| {
+                let addr = addr.clone();
+                s.spawn(move || {
+                    let mut c = ClientConn::connect(&addr, CONNECT).expect("connect");
+                    let mut log = Vec::new();
+                    let out = c.submit(spec, true, &mut log).expect("submit");
+                    (spec, out, String::from_utf8(log).expect("utf8 log"))
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("client thread"))
+            .collect()
+    });
+    let mut ids = Vec::new();
+    for (spec, out, log) in &outcomes {
+        let SubmitOutcome::Done { job, digest } = out else {
+            panic!("{spec}: expected Done, got {out:?}");
+        };
+        ids.push(*job);
+        assert!(
+            !digest.starts_with("error:"),
+            "{spec}: served job failed: {digest}"
+        );
+        assert!(log.contains(&format!("accepted job={job}")), "{log}");
+        assert!(
+            log.contains(&format!("progress job={job} step=6/6")),
+            "per-step progress must stream to the client:\n{log}"
+        );
+        // Acceptance: the served digest is bit-identical to the one-shot
+        // run of the same spec (shared code path, same mesh width).
+        let wl = parse_spec(spec).expect("spec parses");
+        let local = run_local(&wl, 2).expect("one-shot run");
+        assert_eq!(
+            digest, &local,
+            "{spec}: served digest drifted from the one-shot run"
+        );
+        compare_digests(
+            &parse_digest(digest).expect("served digest parses"),
+            &parse_digest(&local).expect("local digest parses"),
+            0.0,
+            0.0,
+        )
+        .expect("structural digest parity");
+    }
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), 2, "concurrent jobs must get distinct ids");
+    assert_eq!(
+        d.shutdown(),
+        None,
+        "a multi-tenant run must leave no latched lane fault"
+    );
+}
+
+#[test]
+fn metrics_scrape_over_tcp_reports_queue_and_job_series() {
+    let d = daemon(2, LaneTransport::Channel, 8, 2);
+    let mut c = ClientConn::connect(&d.control_addr(), CONNECT).expect("connect");
+    let out = c
+        .submit("scheme=scalecom steps=4 seed=3", true, &mut Vec::<u8>::new())
+        .expect("submit");
+    assert!(matches!(out, SubmitOutcome::Done { .. }), "{out:?}");
+    let mut s = TcpStream::connect(d.metrics_addr()).expect("metrics connect");
+    s.write_all(b"GET /metrics HTTP/1.0\r\nHost: test\r\n\r\n")
+        .expect("request");
+    let mut body = String::new();
+    s.read_to_string(&mut body).expect("response");
+    assert!(body.starts_with("HTTP/1.0 200 OK\r\n"), "{body}");
+    for needle in [
+        "Content-Type: text/plain; version=0.0.4",
+        "scalecom_serve_queue_depth 0",
+        "scalecom_serve_running 0",
+        "scalecom_serve_jobs_submitted_total 1",
+        "scalecom_serve_jobs_completed_total 1",
+        "scalecom_serve_scheduler_wait_seconds_count 1",
+        "scalecom_job_steps_total{job=\"1\",scheme=\"scalecom\",state=\"done\"} 4",
+        "scalecom_job_comm_bytes_total{job=\"1\",direction=\"up\"}",
+        "scalecom_serve_lane_faulted 0",
+    ] {
+        assert!(body.contains(needle), "missing '{needle}' in scrape:\n{body}");
+    }
+    // Any other path 404s instead of dumping metrics.
+    let mut s = TcpStream::connect(d.metrics_addr()).expect("metrics connect");
+    s.write_all(b"GET /nope HTTP/1.0\r\n\r\n").expect("request");
+    let mut resp = String::new();
+    s.read_to_string(&mut resp).expect("response");
+    assert!(resp.starts_with("HTTP/1.0 404"), "{resp}");
+    assert_eq!(d.shutdown(), None);
+}
+
+#[test]
+fn queue_overflow_rejects_typed_and_cancel_hits_both_states() {
+    // One slot, one queue position: the third tenant must bounce with
+    // the typed backpressure reason, not an error or a hang.
+    let d = daemon(2, LaneTransport::Channel, 1, 1);
+    let addr = d.control_addr();
+    let slow = "scheme=scalecom steps=200 step-delay-ms=20 seed=1";
+    // The submitting connections keep receiving streamed JobProgress
+    // frames even un-followed, so stats and cancels go through a
+    // dedicated control connection with a quiet stream.
+    let mut ctl = ClientConn::connect(&addr, CONNECT).expect("control connect");
+    let mut c1 = ClientConn::connect(&addr, CONNECT).expect("connect 1");
+    let SubmitOutcome::Done { job: j1, .. } =
+        c1.submit(slow, false, &mut Vec::<u8>::new()).expect("submit 1")
+    else {
+        panic!("job 1 not admitted");
+    };
+    // Make sure job 1 actually occupies the running slot before filling
+    // the queue, so admission order is deterministic.
+    wait_stats(&mut ctl, "running=1");
+    let mut c2 = ClientConn::connect(&addr, CONNECT).expect("connect 2");
+    let SubmitOutcome::Done { job: j2, .. } =
+        c2.submit(slow, false, &mut Vec::<u8>::new()).expect("submit 2")
+    else {
+        panic!("job 2 not admitted");
+    };
+    let mut c3 = ClientConn::connect(&addr, CONNECT).expect("connect 3");
+    match c3.submit(slow, false, &mut Vec::<u8>::new()).expect("submit 3") {
+        SubmitOutcome::Rejected(reason) => {
+            assert!(
+                reason.contains("queue full (depth 1/1)"),
+                "typed backpressure reason, got: {reason}"
+            );
+        }
+        other => panic!("expected a typed rejection, got {other:?}"),
+    }
+    // Cancel both states: queued → dequeued (0), running → signalled (1).
+    assert_eq!(ctl.cancel(j2).expect("cancel queued"), 0);
+    assert_eq!(ctl.cancel(j1).expect("cancel running"), 1);
+    // The running job acknowledges at its next step boundary.
+    wait_stats(&mut ctl, "running=0");
+    let table = ctl.query_stats(1).expect("job table");
+    assert!(table.contains(&format!("job={j1} state=cancelled")), "{table}");
+    assert!(table.contains(&format!("job={j2} state=cancelled")), "{table}");
+    // An unknown id is refused, not invented.
+    let err = ctl.cancel(9999).expect_err("unknown job");
+    assert!(err.to_string().contains("unknown or already finished"), "{err:#}");
+    assert_eq!(d.shutdown(), None);
+}
+
+#[test]
+fn mid_run_shutdown_drains_cleanly_with_no_lane_fault() {
+    // Satellite: drained shutdown closes the socket mesh with EOFs, not
+    // RSTs — observable as the absence of a latched lane fault.
+    let d = daemon(3, LaneTransport::Socket(WireCodecConfig::default()), 4, 2);
+    let addr = d.control_addr();
+    let mut ctl = ClientConn::connect(&addr, CONNECT).expect("control connect");
+    let mut c = ClientConn::connect(&addr, CONNECT).expect("connect");
+    let out = c
+        .submit(
+            "scheme=scalecom steps=500 step-delay-ms=20 seed=2",
+            false,
+            &mut Vec::<u8>::new(),
+        )
+        .expect("submit");
+    assert!(matches!(out, SubmitOutcome::Done { .. }), "{out:?}");
+    // The submitting conn keeps receiving progress frames; poll from a
+    // quiet control connection instead.
+    wait_stats(&mut ctl, "running=1");
+    assert!(d.lane_fault().is_none(), "healthy before the drain");
+    // Shutdown mid-run: the job is signalled, stops at its next step
+    // boundary, every thread joins, the mesh tears down cleanly.
+    assert_eq!(
+        d.shutdown(),
+        None,
+        "drained shutdown must leave no latched lane fault"
+    );
+}
+
+#[test]
+fn bad_specs_and_foreign_hellos_bounce_typed() {
+    let d = daemon(2, LaneTransport::Channel, 4, 1);
+    let addr = d.control_addr();
+    let mut c = ClientConn::connect(&addr, CONNECT).expect("connect");
+    match c.submit("frobnicate=1", true, &mut Vec::<u8>::new()).expect("submit") {
+        SubmitOutcome::Rejected(reason) => {
+            assert!(reason.contains("bad job spec"), "{reason}");
+            assert!(reason.contains("unknown spec key"), "{reason}");
+        }
+        other => panic!("expected a typed rejection, got {other:?}"),
+    }
+    // The connection survives a rejection and still answers stats.
+    let stats = c.query_stats(0).expect("stats after rejection");
+    assert!(stats.contains("rejected=1"), "{stats}");
+    // A mesh-purpose hello on the client plane is version-gated away.
+    let mut s = TcpStream::connect(addr).expect("raw connect");
+    wire::write_msg(
+        &mut s,
+        &WireMsg::Hello {
+            rank: 0,
+            purpose: Purpose::Ring,
+            codec: WIRE_CODEC_VERSION,
+        },
+    )
+    .expect("hello");
+    match wire::read_msg(&mut s).expect("gate reply") {
+        WireMsg::JobRejected { reason } => {
+            assert!(reason.contains("client hello"), "{reason}");
+        }
+        other => panic!("expected JobRejected, got {other:?}"),
+    }
+    assert_eq!(d.shutdown(), None);
+}
