@@ -10,7 +10,9 @@
 //!   reads (a read timeout could desync mid-frame, and the process
 //!   exits regardless when `main` returns) and writing replies through
 //!   an `Arc<Mutex<TcpStream>>` clone so progress frames from job
-//!   threads interleave whole-frame with request replies;
+//!   threads interleave whole-frame with request replies; writes carry
+//!   [`WRITE_TIMEOUT`] and always happen outside the daemon's locks, so
+//!   a stalled client can cost a dropped frame but never a held lock;
 //! - one thread per running job (joined at shutdown), dispatched FIFO
 //!   by [`JobQueue`] under the concurrency cap;
 //! - the lane owner thread inside [`SharedLanes`], dropped last so the
@@ -31,6 +33,12 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+/// Upper bound on any single client-socket write (progress frames,
+/// replies, terminal frames): a client that stops reading eats timeouts
+/// and eventually loses its stream, but never wedges a daemon lock or a
+/// job's concurrency slot.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
 
 /// `--bind` default / override (flag wins over env, env over default).
 pub const ENV_SERVE_ADDR: &str = "SCALECOM_SERVE_ADDR";
@@ -214,9 +222,14 @@ impl Daemon {
     /// every thread, then drop the mesh (clean lane EOFs). Returns the
     /// latched lane fault, `None` when the mesh stayed healthy.
     pub fn shutdown(mut self) -> Option<String> {
-        self.shared.shutdown.store(true, Ordering::SeqCst);
+        let mut cancelled_conns: Vec<(Arc<Mutex<TcpStream>>, u32)> = Vec::new();
         {
             let mut q = self.shared.queue.lock().unwrap();
+            // The flag goes up under the queue lock because try_dispatch
+            // checks it under the same lock: once this scope owns the
+            // lock, no dispatch can slip a job past the drain, and any
+            // earlier dispatch has already pushed its JoinHandle.
+            self.shared.shutdown.store(true, Ordering::SeqCst);
             q.drain();
             let dropped = q.cancel_all_queued();
             let mut jobs = self.shared.jobs.lock().unwrap();
@@ -224,7 +237,7 @@ impl Daemon {
                 if let Some(j) = jobs.get_mut(&id) {
                     j.status = JobStatus::Cancelled;
                     if let Some(c) = &j.conn {
-                        let _ = write_frame(c, &WireMsg::JobCancelled { job: id, outcome: 0 });
+                        cancelled_conns.push((c.clone(), id));
                     }
                 }
             }
@@ -233,6 +246,17 @@ impl Daemon {
                     j.cancel.store(true, Ordering::SeqCst);
                 }
             }
+        }
+        // Socket writes only after the daemon locks drop: a stalled
+        // client may eat a write timeout, never wedge the queue.
+        for (c, id) in cancelled_conns {
+            let _ = write_frame(
+                &c,
+                &WireMsg::JobCancelled {
+                    job: id,
+                    outcome: CancelOutcome::Dequeued.to_byte(),
+                },
+            );
         }
         // Job threads re-dispatch on completion, so drain until the
         // handle list stays empty (dispatch early-returns once the
@@ -274,6 +298,13 @@ fn accept_loop(shared: Arc<Shared>, listener: TcpListener) {
         match listener.accept() {
             Ok((stream, _)) => {
                 let _ = stream.set_nodelay(true);
+                // A stalled client (full TCP send buffer) must never
+                // block a write forever — progress frames come from job
+                // threads and replies from conn threads, and an
+                // unbounded write_all there would pin a job or a lock.
+                // A timed-out write may leave that client's stream
+                // desynced; the writer drops the conn, never the daemon.
+                let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
                 if stream.set_nonblocking(false).is_err() {
                     continue;
                 }
@@ -358,96 +389,129 @@ fn handle_submit(shared: &Arc<Shared>, writer: &Arc<Mutex<TcpStream>>, spec: Str
             return;
         }
     };
-    let sub = shared.queue.lock().unwrap().submit();
-    match sub {
-        Submission::Rejected(r) => {
-            let _ = write_frame(writer, &WireMsg::JobRejected { reason: r.render() });
+    // Admission and the state insert happen under ONE queue lock scope
+    // (queue → jobs nesting, same order as shutdown/snapshot): a
+    // concurrent try_dispatch serializes on the queue lock for
+    // `start_next`, so it can never pop an id whose JobState is not in
+    // the map yet.
+    //
+    // The conn's writer mutex is held across admission so JobAccepted
+    // is always the job's first frame on this connection — a dispatch
+    // racing from another completing job queues its progress frames
+    // behind it. Ordering stays acyclic because the writer mutex is
+    // only ever taken with no daemon locks held (every write_frame
+    // call site) or, here, *before* them — never after.
+    let mut w = writer.lock().unwrap();
+    let (reply, admitted) = {
+        let mut q = shared.queue.lock().unwrap();
+        match q.submit() {
+            Submission::Rejected(r) => (WireMsg::JobRejected { reason: r.render() }, false),
+            Submission::Admitted { id, queue_pos } => {
+                shared.jobs.lock().unwrap().insert(
+                    id,
+                    JobState {
+                        spec,
+                        wl,
+                        status: JobStatus::Queued,
+                        submitted_at: Instant::now(),
+                        steps_done: 0,
+                        step_seconds_sum: 0.0,
+                        comm_bytes_up: 0,
+                        comm_bytes_down: 0,
+                        comm_time_seconds: 0.0,
+                        cancel: Arc::new(AtomicBool::new(false)),
+                        conn: Some(writer.clone()),
+                        error: None,
+                    },
+                );
+                (WireMsg::JobAccepted { job: id, queue_pos }, true)
+            }
         }
-        Submission::Admitted { id, queue_pos } => {
-            shared.jobs.lock().unwrap().insert(
-                id,
-                JobState {
-                    spec,
-                    wl,
-                    status: JobStatus::Queued,
-                    submitted_at: Instant::now(),
-                    steps_done: 0,
-                    step_seconds_sum: 0.0,
-                    comm_bytes_up: 0,
-                    comm_bytes_down: 0,
-                    comm_time_seconds: 0.0,
-                    cancel: Arc::new(AtomicBool::new(false)),
-                    conn: Some(writer.clone()),
-                    error: None,
-                },
-            );
-            let _ = write_frame(writer, &WireMsg::JobAccepted { job: id, queue_pos });
-            try_dispatch(shared);
-        }
+    };
+    let _ = wire::write_msg(&mut *w, &reply);
+    drop(w);
+    if admitted {
+        try_dispatch(shared);
     }
 }
 
 fn handle_cancel(shared: &Arc<Shared>, writer: &Arc<Mutex<TcpStream>>, job: u32) {
-    let outcome = shared.queue.lock().unwrap().cancel(job);
-    match outcome {
-        Some(CancelOutcome::Dequeued) => {
-            if let Some(j) = shared.jobs.lock().unwrap().get_mut(&job) {
-                j.status = JobStatus::Cancelled;
-            }
-            let _ = write_frame(
-                writer,
-                &WireMsg::JobCancelled {
+    // The queue check and the cancel-flag store are one atomic step
+    // under the queue lock: job_thread picks its terminal frame under
+    // the same lock, so a Signalled ack here guarantees the submitter
+    // sees exactly one JobCancelled — never JobCancelled then JobDone,
+    // even when the job finishes its last step in a photo finish.
+    let reply = {
+        let mut q = shared.queue.lock().unwrap();
+        match q.cancel(job) {
+            Some(CancelOutcome::Dequeued) => {
+                if let Some(j) = shared.jobs.lock().unwrap().get_mut(&job) {
+                    j.status = JobStatus::Cancelled;
+                }
+                WireMsg::JobCancelled {
                     job,
                     outcome: CancelOutcome::Dequeued.to_byte(),
-                },
-            );
-        }
-        Some(CancelOutcome::Signalled) => {
-            if let Some(j) = shared.jobs.lock().unwrap().get(&job) {
-                j.cancel.store(true, Ordering::SeqCst);
+                }
             }
-            let _ = write_frame(
-                writer,
-                &WireMsg::JobCancelled {
+            Some(CancelOutcome::Signalled) => {
+                if let Some(j) = shared.jobs.lock().unwrap().get(&job) {
+                    j.cancel.store(true, Ordering::SeqCst);
+                }
+                WireMsg::JobCancelled {
                     job,
                     outcome: CancelOutcome::Signalled.to_byte(),
-                },
-            );
+                }
+            }
+            None => WireMsg::JobRejected {
+                reason: format!("cancel: job {job} is unknown or already finished"),
+            },
         }
-        None => {
-            let _ = write_frame(
-                writer,
-                &WireMsg::JobRejected {
-                    reason: format!("cancel: job {job} is unknown or already finished"),
-                },
-            );
-        }
-    }
+    };
+    let _ = write_frame(writer, &reply);
 }
 
 /// Start every runnable job (FIFO under the concurrency cap). Called
 /// after each admission and each completion; a no-op once draining.
+///
+/// Each iteration — shutdown check, pop, spawn, handle push — runs
+/// under ONE queue lock scope. That pins down two races with
+/// `shutdown()` (which sets the flag under the same lock): no dispatch
+/// can start after shutdown owns the queue lock, and any dispatch that
+/// won the lock first has already pushed its `JoinHandle` by the time
+/// shutdown's join loop looks, so no job thread escapes the drain.
 fn try_dispatch(shared: &Arc<Shared>) {
     loop {
+        let mut q = shared.queue.lock().unwrap();
         if shared.shutdown.load(Ordering::SeqCst) {
             return;
         }
-        let Some(id) = shared.queue.lock().unwrap().start_next() else {
+        let Some(id) = q.start_next() else {
             return;
         };
         let Some(lanes) = shared.lanes.lock().unwrap().clone() else {
+            // Only shutdown takes the lanes, and it raises the flag
+            // first — unreachable, but free the slot rather than leak it.
+            q.complete_cancelled(id);
             return;
         };
-        let (wl, cancel, conn, waited_s) = {
+        let state = {
             let mut jobs = shared.jobs.lock().unwrap();
-            let j = jobs.get_mut(&id).expect("admitted job has a state entry");
-            j.status = JobStatus::Running;
-            (
-                j.wl.clone(),
-                j.cancel.clone(),
-                j.conn.clone(),
-                j.submitted_at.elapsed().as_secs_f64(),
-            )
+            jobs.get_mut(&id).map(|j| {
+                j.status = JobStatus::Running;
+                (
+                    j.wl.clone(),
+                    j.cancel.clone(),
+                    j.conn.clone(),
+                    j.submitted_at.elapsed().as_secs_f64(),
+                )
+            })
+        };
+        let Some((wl, cancel, conn, waited_s)) = state else {
+            // An admitted id must have a state entry (handle_submit
+            // inserts it under the queue lock); if the invariant ever
+            // breaks, free the slot instead of poisoning the daemon.
+            q.complete(id, false);
+            continue;
         };
         {
             let mut w = shared.wait.lock().unwrap();
@@ -468,31 +532,47 @@ fn job_thread(
     cancel: Arc<AtomicBool>,
     conn: Option<Arc<Mutex<TcpStream>>>,
 ) {
+    let mut conn = conn;
     let result = run_job(id, &wl, &lanes, &cancel, |done, total| {
         if let Some(j) = shared.jobs.lock().unwrap().get_mut(&id) {
             j.steps_done = done;
         }
-        if let Some(c) = &conn {
-            // A dead client must not kill the job; drop the frame.
-            let _ = write_frame(
+        // A dead or stalled client must not kill the job: the write
+        // times out (set at accept), and one failure drops the conn so
+        // later steps don't re-pay the timeout.
+        let client_died = match &conn {
+            Some(c) => write_frame(
                 c,
                 &WireMsg::JobProgress {
                     job: id,
                     step: done as u32,
                     total: total as u32,
                 },
-            );
+            )
+            .is_err(),
+            None => false,
+        };
+        if client_died {
+            conn = None;
         }
     });
+    // The terminal transition runs under the queue lock so it is atomic
+    // against handle_cancel: an acknowledged cancel wins even over a
+    // photo-finish completion, keeping the submitter's terminal frame
+    // unique (one JobCancelled, no trailing JobDone).
     let frame = match result {
         Ok(report) => {
-            let completed = report.completed;
-            let digest = if completed {
+            // Rendered before the lock (it formats every step); thrown
+            // away in the rare case an acknowledged cancel wins below.
+            let rendered = if report.completed {
                 render_digest(&report.digest)
                     .unwrap_or_else(|e| format!("error: digest render failed: {e:#}"))
             } else {
                 String::new()
             };
+            let mut q = shared.queue.lock().unwrap();
+            let completed = report.completed && !cancel.load(Ordering::SeqCst);
+            let digest = if completed { rendered } else { String::new() };
             {
                 let mut jobs = shared.jobs.lock().unwrap();
                 if let Some(j) = jobs.get_mut(&id) {
@@ -510,7 +590,6 @@ fn job_thread(
                     }
                 }
             }
-            let mut q = shared.queue.lock().unwrap();
             if completed {
                 q.complete(id, true);
                 WireMsg::JobDone { job: id, digest }
@@ -524,18 +603,32 @@ fn job_thread(
         }
         Err(e) => {
             let cause = format!("{e:#}");
+            let mut q = shared.queue.lock().unwrap();
+            let cancelled = cancel.load(Ordering::SeqCst);
             {
                 let mut jobs = shared.jobs.lock().unwrap();
                 if let Some(j) = jobs.get_mut(&id) {
-                    j.status = JobStatus::Failed;
+                    j.status = if cancelled {
+                        JobStatus::Cancelled
+                    } else {
+                        JobStatus::Failed
+                    };
                     j.error = Some(cause.clone());
                 }
             }
-            shared.queue.lock().unwrap().complete(id, false);
-            // Convention: a failed job's JobDone digest is "error: ...".
-            WireMsg::JobDone {
-                job: id,
-                digest: format!("error: {cause}"),
+            if cancelled {
+                q.complete_cancelled(id);
+                WireMsg::JobCancelled {
+                    job: id,
+                    outcome: CancelOutcome::Signalled.to_byte(),
+                }
+            } else {
+                q.complete(id, false);
+                // Convention: a failed job's JobDone digest is "error: ...".
+                WireMsg::JobDone {
+                    job: id,
+                    digest: format!("error: {cause}"),
+                }
             }
         }
     };
@@ -545,8 +638,8 @@ fn job_thread(
     try_dispatch(&shared);
 }
 
-/// Assemble the `/metrics` snapshot under the daemon's locks
-/// (queue → jobs, the one place both are held at once).
+/// Assemble the `/metrics` snapshot under the daemon's locks (in the
+/// queue → jobs → wait order every multi-lock path uses).
 fn snapshot(shared: &Shared) -> ServeMetrics {
     let lanes = shared.lanes.lock().unwrap().clone();
     let codec = lanes
@@ -649,6 +742,9 @@ fn metrics_loop(shared: Arc<Shared>, listener: TcpListener) {
 fn metrics_conn(shared: &Shared, mut stream: TcpStream) {
     let _ = stream.set_nonblocking(false);
     let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
+    // Scrapes are served inline on the accept thread; a scraper that
+    // stops reading must not block the whole metrics plane.
+    let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
     let mut head = Vec::new();
     let mut buf = [0u8; 1024];
     loop {

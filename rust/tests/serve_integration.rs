@@ -207,6 +207,60 @@ fn queue_overflow_rejects_typed_and_cancel_hits_both_states() {
 }
 
 #[test]
+fn admission_storm_survives_concurrent_dispatch() {
+    // Regression: admission and the JobState insert used to live in
+    // separate lock scopes, so a completing job's re-dispatch could pop
+    // a just-admitted id before its state entry existed and panic,
+    // poisoning the jobs mutex and wedging the daemon. Hammer exactly
+    // that interleaving — tiny jobs completing (and re-dispatching)
+    // while new ones are admitted from several connections at once.
+    let d = daemon(2, LaneTransport::Channel, 16, 2);
+    let addr = d.control_addr();
+    let outcomes: Vec<SubmitOutcome> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let addr = addr.clone();
+                s.spawn(move || {
+                    let mut c = ClientConn::connect(&addr, CONNECT).expect("connect");
+                    let mut seen = Vec::new();
+                    for i in 0..6 {
+                        let spec =
+                            format!("scheme=scalecom dim=32 rate=4 steps=1 seed={}", t * 10 + i);
+                        seen.push(
+                            c.submit(&spec, true, &mut Vec::<u8>::new()).expect("submit"),
+                        );
+                    }
+                    seen
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("client thread"))
+            .collect()
+    });
+    for out in &outcomes {
+        match out {
+            SubmitOutcome::Done { digest, .. } => {
+                assert!(!digest.starts_with("error:"), "served job failed: {digest}");
+            }
+            // Backpressure is a legal answer under the storm — but only
+            // the typed one.
+            SubmitOutcome::Rejected(reason) => {
+                assert!(reason.contains("queue full"), "{reason}");
+            }
+            other => panic!("unexpected outcome {other:?}"),
+        }
+    }
+    // The daemon is still healthy afterwards: the jobs mutex was never
+    // poisoned, stats answer, and shutdown drains without a fault.
+    let mut c = ClientConn::connect(&addr, CONNECT).expect("post-storm connect");
+    let stats = c.query_stats(0).expect("stats after the storm");
+    assert!(stats.contains("running="), "{stats}");
+    assert_eq!(d.shutdown(), None);
+}
+
+#[test]
 fn mid_run_shutdown_drains_cleanly_with_no_lane_fault() {
     // Satellite: drained shutdown closes the socket mesh with EOFs, not
     // RSTs — observable as the absence of a latched lane fault.
