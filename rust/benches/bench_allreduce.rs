@@ -7,7 +7,18 @@
 //!
 //! Usage:
 //!   cargo bench --bench bench_allreduce [-- --quick] [-- --backend sequential|threaded|pipelined|socket]
-//!     [-- --codec] [-- --assert-codec] [-- --bucketed] [-- --hier] [-- --simnet] [-- --json path]
+//!     [-- --codec] [-- --assert-codec] [-- --bucketed] [-- --hier] [-- --simnet] [-- --obs]
+//!     [-- --assert-trace-overhead] [-- --json path]
+//!
+//! The `obs/*` section measures the tracing spine's overhead contract:
+//! the disabled span guard's per-call cost (one relaxed load — the
+//! "tracing off is a no-op" half), the n=8 pipelined step with tracing
+//! off vs on (the ≤5% half), and the per-step latency distribution
+//! through the log-bucketed `obs::Histogram` with p50/p95/p99 derived
+//! entries in the JSON artifact. `--obs` runs only this section;
+//! `--assert-trace-overhead` turns the contract into a CI gate
+//! (lenient 1.15x vs the 1.05 quiet-hardware target, same policy as
+//! the overlap gate).
 //!
 //! The `hier/*` section re-runs the chunked CLT-k pipeline on the pooled
 //! backends with the dense ring collective on the two-level
@@ -267,6 +278,13 @@ fn main() {
     // top-k rate, or when codec encode+decode overhead exceeds 10% of
     // the raw frame's wire time at the 1 GbE reference.
     let assert_codec = args.iter().any(|a| a == "--assert-codec");
+    // Run ONLY the tracing-overhead + step-distribution section.
+    let obs_only = args.iter().any(|a| a == "--obs");
+    // CI gate on the tracing spine's overhead contract: fail when the
+    // n=8 pipelined step with recording on exceeds 1.15x the recording-
+    // off step (lenient vs the 1.05 quiet-hardware target), or when the
+    // disabled span guard stops being a near-free call.
+    let assert_trace_overhead = args.iter().any(|a| a == "--assert-trace-overhead");
     // Machine-readable results: every bench median + the derived
     // speedups/efficiencies, so the perf trajectory is tracked across
     // PRs (CI uploads the file as an artifact).
@@ -301,6 +319,12 @@ fn main() {
         let violations = run_codec_section(&mut b, quick, &mut derived, assert_codec);
         write_json(json_path.as_deref(), &b, &derived);
         fail_on_codec_violations(&violations);
+        return;
+    }
+    if obs_only {
+        let violations = run_obs_section(&mut b, quick, dim, rate, &mut derived, assert_trace_overhead);
+        write_json(json_path.as_deref(), &b, &derived);
+        fail_on_trace_violations(&violations);
         return;
     }
 
@@ -433,11 +457,144 @@ fn main() {
     // --- wire entropy codec: bytes-on-wire + encode/decode cost ---------
     let violations = run_codec_section(&mut b, quick, &mut derived, assert_codec);
 
+    // --- tracing spine: off = no-op, on = bounded overhead ---------------
+    let trace_violations =
+        run_obs_section(&mut b, quick, dim, rate, &mut derived, assert_trace_overhead);
+
     // --- simnet: the paper-style scaling curve in virtual time ----------
     run_simnet_section(quick, &mut derived);
 
     write_json(json_path.as_deref(), &b, &derived);
     fail_on_codec_violations(&violations);
+    fail_on_trace_violations(&trace_violations);
+}
+
+/// Exit non-zero on `--assert-trace-overhead` violations — AFTER the
+/// JSON snapshot is flushed (same policy as the codec/overlap gates).
+fn fail_on_trace_violations(violations: &[String]) {
+    if violations.is_empty() {
+        return;
+    }
+    for v in violations {
+        eprintln!("TRACE OVERHEAD REGRESSION: {v}");
+    }
+    std::process::exit(1);
+}
+
+/// Tracing-spine section: the overhead contract plus the step-latency
+/// distribution.
+///
+/// 1. `obs/span_disabled` — the cost of an instrumentation site with
+///    recording off: build + drop a [`scalecom::obs::SpanGuard`]. This
+///    is one relaxed atomic load and must stay in the nanoseconds.
+/// 2. `obs/step_trace_{off,on}/n8` — the full n=8 pipelined compressed
+///    step with the recorder disarmed vs armed; the ratio is the price
+///    of `--trace-out` on a real run (contract: ≤ 5% on quiet
+///    hardware, gated at 15% to absorb shared-runner noise).
+/// 3. `allreduce/n8_step_p{50,95,99}_ns` — per-step wall time pushed
+///    through the same log-bucketed [`scalecom::obs::Histogram`] that
+///    backs serve `/metrics`, so the JSON artifact tracks the tail,
+///    not just the median.
+fn run_obs_section(
+    b: &mut Bencher,
+    quick: bool,
+    dim: usize,
+    rate: usize,
+    derived: &mut Vec<(String, f64)>,
+    assert_trace_overhead: bool,
+) -> Vec<String> {
+    use scalecom::obs;
+    println!("# obs = tracing spine overhead (off must be a no-op, on ≤ 5% step time) + step-latency tail");
+    let mut violations = Vec::new();
+
+    obs::set_enabled(false);
+    let disabled_ns = b
+        .bench("obs/span_disabled", || {
+            black_box(obs::span(obs::Category::Select).step(black_box(7)));
+        })
+        .median_ns;
+    println!("# obs: disabled span guard costs {disabled_ns:.1} ns/site");
+    derived.push(("obs/span_disabled_ns".into(), disabled_ns));
+    if assert_trace_overhead && disabled_ns > 100.0 {
+        violations.push(format!(
+            "disabled span guard costs {disabled_ns:.0} ns/site (> 100 ns) — \
+             the tracing-off path is no longer a no-op"
+        ));
+    }
+
+    let n = 8;
+    let mut rng = Rng::new(88);
+    let grads = rand_grads(&mut rng, n, dim);
+
+    let mut coord_off = pipeline_coord(Backend::Pipelined, n, dim, rate);
+    let mut t_off = 0usize;
+    let off_ns = b
+        .bench("obs/step_trace_off/n8", || {
+            black_box(coord_off.step_overlapped(t_off, &grads));
+            t_off += 1;
+        })
+        .median_ns;
+    let _ = coord_off.finish_overlapped();
+
+    obs::set_enabled(true);
+    let mut coord_on = pipeline_coord(Backend::Pipelined, n, dim, rate);
+    let mut t_on = 0usize;
+    let on_ns = b
+        .bench("obs/step_trace_on/n8", || {
+            black_box(coord_on.step_overlapped(t_on, &grads));
+            t_on += 1;
+        })
+        .median_ns;
+    let _ = coord_on.finish_overlapped();
+    obs::set_enabled(false);
+    // Free the spans the armed run recorded; the rings are bounded, but
+    // later sections shouldn't inherit a half-full recorder.
+    let _ = obs::span::drain_all();
+
+    let ratio = on_ns / off_ns;
+    println!(
+        "# obs n8 step: trace off {:.1} us, on {:.1} us — recording overhead {:+.1}% \
+         (target ≤ 5%, gate ≤ 15%)",
+        off_ns / 1e3,
+        on_ns / 1e3,
+        (ratio - 1.0) * 100.0
+    );
+    derived.push(("obs/n8_trace_overhead_ratio".into(), ratio));
+    if assert_trace_overhead {
+        if ratio > 1.15 {
+            violations.push(format!(
+                "tracing-on step time is {ratio:.3}x tracing-off at n=8 (> 1.15) — \
+                 recording is no longer cheap enough to leave armed"
+            ));
+        } else {
+            println!("# trace-overhead gate OK: on/off step-time ratio {ratio:.3} <= 1.15");
+        }
+    }
+
+    // Step-latency distribution through the serving-path histogram: the
+    // bench harness reports medians; the tail (p95/p99) is where pool
+    // hiccups and socket stalls live.
+    let hist = obs::Histogram::new();
+    let mut coord = pipeline_coord(Backend::Pipelined, n, dim, rate);
+    let steps = if quick { 30 } else { 100 };
+    for t in 0..steps {
+        let start = std::time::Instant::now();
+        black_box(coord.step_overlapped(t, &grads));
+        hist.record_ns(start.elapsed().as_nanos() as u64);
+    }
+    let _ = coord.finish_overlapped();
+    let snap = hist.snapshot();
+    for (label, p) in [("p50", 0.50), ("p95", 0.95), ("p99", 0.99)] {
+        let ns = snap.percentile_ns(p) as f64;
+        println!(
+            "# obs n8 step latency {label}: {:.1} us (log-bucket upper edge, {} samples)",
+            ns / 1e3,
+            snap.count
+        );
+        derived.push((format!("allreduce/n8_step_{label}_ns"), ns));
+    }
+
+    violations
 }
 
 /// Exit non-zero on `--assert-codec` violations — AFTER the JSON

@@ -138,6 +138,9 @@ SUBCOMMANDS:
                        leaders run a level-1 uplink ring (0 = flat ring;
                        G must divide the worker count and leave >= 2
                        groups)
+                     --trace-out FILE  record step phases + comm spans and
+                       write a Chrome-trace/Perfetto JSON on exit (tracing
+                       is off — a benched no-op — without this flag)
                      --config file.toml (flags override file)
   simulate         run the real coordination code at paper scale under
                    simulated link timing (deterministic virtual time)
@@ -146,7 +149,12 @@ SUBCOMMANDS:
                      --profile uniform|hetero|hier|straggler|path/to.toml
                      --dim N --rate R --steps N --layers L --seed S
                      --bucket-bytes N --overlapped --compute-per-elem-ns X
-                     --trace (print the per-bucket event timeline)
+                     --trace (print a per-op rollup of the virtual event
+                       timeline) --trace-out FILE (write the full event
+                       list as Chrome-trace JSON in the same schema the
+                       real runtimes emit — `scalecom trace diff` compares
+                       it against a measured trace; single scheme + worker
+                       count only)
                      --elastic-kill-step T  elastic membership: kill one
                        worker at step T's exchange and charge the whole
                        recovery wave (2x-heartbeat detection, restart,
@@ -202,6 +210,9 @@ SUBCOMMANDS:
                        runs intra-ring + leader uplink ring + downlink
                        broadcast (0 = flat ring; must match on every node,
                        divide the node count, and leave >= 2 groups)
+                     --trace-out FILE  per-process Chrome-trace JSON; the
+                       post-rendezvous point is the clock-sync anchor, so
+                       `scalecom trace merge` aligns the per-rank files
   serve            multi-tenant training daemon: one persistent shared
                    lane mesh, a bounded FIFO job queue with admission
                    control, the framed client protocol (wire codec v5),
@@ -218,6 +229,11 @@ SUBCOMMANDS:
                      --max-concurrent N  jobs sharing the lanes at once
                        (default 2)
                      --lane-transport channel|socket (default socket)
+                     --metrics-job-retention N  finished jobs keeping
+                       their per-job /metrics series (default 64; older
+                       finished series are pruned so scrape cardinality
+                       stays bounded)
+                     --trace-out FILE  scheduler + job-step trace
                      --group-size G --wire-compression ... as for train
   submit           submit a job spec to a serve daemon and stream its
                    progress + digest
@@ -232,6 +248,15 @@ SUBCOMMANDS:
   jobs             per-job table (state, progress, spec): --addr ...
   cancel           cancel a job: --job ID --addr ... (queued jobs are
                    dequeued; running jobs stop at a step boundary)
+  trace            offline tooling over --trace-out Chrome-trace files
+                     scalecom trace merge --out m.json r0.json r1.json ...
+                       (rebase per-rank files onto their handshake sync
+                       anchors, one pid track per rank)
+                     scalecom trace report f.json  (per-category totals +
+                       per-rank compute/comm overlap efficiency)
+                     scalecom trace diff measured.json predicted.json
+                       (per-phase predicted-vs-measured deltas, e.g. a
+                       real node run against `simulate --trace-out`)
   bench-trend      compare two bench_allreduce --json artifacts and fail
                    on median regressions past the budget (the CI perf
                    gate); a missing or empty baseline skips the gate

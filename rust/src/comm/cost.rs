@@ -19,6 +19,30 @@ pub struct CommCost {
     pub hops: usize,
 }
 
+/// Min/mean/max of the heartbeat round-trips measured so far (socket
+/// links with `--heartbeat-ms` only; all zero otherwise). Nanoseconds.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RttSnapshot {
+    pub count: u64,
+    pub min_ns: u64,
+    pub mean_ns: u64,
+    pub max_ns: u64,
+}
+
+impl RttSnapshot {
+    pub fn min_secs(&self) -> f64 {
+        self.min_ns as f64 * 1e-9
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        self.mean_ns as f64 * 1e-9
+    }
+
+    pub fn max_secs(&self) -> f64 {
+        self.max_ns as f64 * 1e-9
+    }
+}
+
 /// Accumulated statistics over a run.
 #[derive(Debug, Clone, Default)]
 pub struct CommStats {
@@ -27,6 +51,8 @@ pub struct CommStats {
     /// default for the in-process mesh and the modeled fabric, whose
     /// byte accounting is pre-codec by design).
     pub codec: CodecSnapshot,
+    /// Heartbeat round-trip stats (socket backend with heartbeats only).
+    pub rtt: RttSnapshot,
 }
 
 impl CommStats {
@@ -57,6 +83,7 @@ impl CommStats {
     pub fn reset(&mut self) {
         self.ops.clear();
         self.codec = CodecSnapshot::default();
+        self.rtt = RttSnapshot::default();
     }
 }
 

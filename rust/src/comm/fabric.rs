@@ -149,6 +149,12 @@ impl Fabric {
         self.stats.codec = snapshot;
     }
 
+    /// Install the heartbeat RTT stats measured by the socket liveness
+    /// monitors (zero when the transport has no heartbeat links).
+    pub fn update_rtt_stats(&mut self, snapshot: crate::comm::cost::RttSnapshot) {
+        self.stats.rtt = snapshot;
+    }
+
     pub fn config(&self) -> &FabricConfig {
         &self.cfg
     }

@@ -26,7 +26,7 @@ pub mod wire;
 
 pub use bucket::{Bucket, BucketPlan};
 pub use codec::{CodecSnapshot, CodecStats, WireCodecConfig, WireCompression};
-pub use cost::{CommCost, CommStats};
+pub use cost::{CommCost, CommStats, RttSnapshot};
 pub use fabric::{Fabric, FabricConfig, FaultSpec, GatherStats, Topology};
 pub use parallel::Backend;
 

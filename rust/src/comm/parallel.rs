@@ -720,6 +720,7 @@ impl CommLanes {
     /// Returns as soon as the jobs are enqueued — the exchange runs on
     /// the lane threads while the caller computes.
     pub fn submit(&self, jobs: Vec<CommJob>) {
+        let _sp = crate::obs::span(crate::obs::Category::LaneSubmit);
         assert_eq!(jobs.len(), self.jobs.len(), "one job per worker");
         for (tx, job) in self.jobs.iter().zip(jobs) {
             tx.send(job).expect("comm lane send");
@@ -734,6 +735,7 @@ impl CommLanes {
 
     /// Block until the oldest in-flight collective completes.
     pub fn wait(&self) -> CollectiveResult {
+        let _sp = crate::obs::span(crate::obs::Category::LaneWait);
         self.results.recv().expect("comm lane result")
     }
 }

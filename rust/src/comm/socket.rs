@@ -43,13 +43,15 @@
 //!   parity contract vs sequential (rtol 1e-5 / atol 1e-6 on ring f32).
 
 use crate::comm::codec::{CodecStats, FrameCodec, WireCodecConfig};
+use crate::comm::cost::RttSnapshot;
 use crate::comm::parallel::ring_allreduce_generic;
 use crate::comm::wire::{self, Purpose, WireMsg};
 use crate::compress::SparseGrad;
+use crate::obs;
 use std::collections::VecDeque;
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -85,6 +87,53 @@ pub fn parse_timeout_secs(raw: Option<&str>) -> anyhow::Result<Duration> {
             );
             Ok(Duration::from_secs(secs))
         }
+    }
+}
+
+// ----------------------------------------------------------------------
+// Heartbeat RTT accounting
+// ----------------------------------------------------------------------
+
+/// Process-global heartbeat round-trip accumulator. The Ping/Pong seq
+/// exchange (wire v3) already round-trips on every heartbeat link; the
+/// liveness monitors feed the measured RTTs here, and the coordinator /
+/// serve snapshot paths pull [`rtt_snapshot`] into `CommStats.rtt` and
+/// the `/metrics` gauge. Process-global on purpose: links come and go
+/// (reconnect, mesh teardown) and the monitors are deep inside the
+/// sender machinery — a shared atomic accumulator needs no plumbing
+/// through the mesh constructors and costs four relaxed adds per pong.
+struct GlobalRtt {
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    min_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+static RTT: GlobalRtt = GlobalRtt {
+    count: AtomicU64::new(0),
+    sum_ns: AtomicU64::new(0),
+    min_ns: AtomicU64::new(u64::MAX),
+    max_ns: AtomicU64::new(0),
+};
+
+fn rtt_record_ns(ns: u64) {
+    RTT.count.fetch_add(1, Ordering::Relaxed);
+    RTT.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    RTT.min_ns.fetch_min(ns, Ordering::Relaxed);
+    RTT.max_ns.fetch_max(ns, Ordering::Relaxed);
+}
+
+/// Min/mean/max of every heartbeat RTT measured in this process so far.
+pub fn rtt_snapshot() -> RttSnapshot {
+    let count = RTT.count.load(Ordering::Relaxed);
+    if count == 0 {
+        return RttSnapshot::default();
+    }
+    RttSnapshot {
+        count,
+        min_ns: RTT.min_ns.load(Ordering::Relaxed),
+        mean_ns: RTT.sum_ns.load(Ordering::Relaxed) / count,
+        max_ns: RTT.max_ns.load(Ordering::Relaxed),
     }
 }
 
@@ -268,6 +317,7 @@ impl FramedSender {
             let mut frame = Vec::new();
             loop {
                 let msg = {
+                    let _qw = obs::span(obs::Category::QueueWait);
                     let mut st = wshared.state.lock().expect("sender queue state");
                     loop {
                         if st.err.is_some() {
@@ -283,10 +333,16 @@ impl FramedSender {
                         st = wshared.not_empty.wait(st).expect("sender queue state");
                     }
                 };
-                let res = codec
-                    .encode_frame_into(&msg, &mut frame)
-                    .and_then(|()| w.write_all(&frame).map_err(anyhow::Error::from))
-                    .and_then(|()| w.flush().map_err(anyhow::Error::from));
+                let encoded = {
+                    let _enc = obs::span(obs::Category::CodecEncode);
+                    codec.encode_frame_into(&msg, &mut frame)
+                };
+                let res = encoded.and_then(|()| {
+                    let _ww = obs::span(obs::Category::WireWrite);
+                    w.write_all(&frame)
+                        .and_then(|()| w.flush())
+                        .map_err(anyhow::Error::from)
+                });
                 if let Err(e) = res {
                     wshared.latch(format!("{e:#}"));
                     return;
@@ -392,12 +448,20 @@ fn spawn_sender_liveness(
         let mut seq: u32 = 0;
         let mut next_ping = Instant::now();
         let mut last_pong = Instant::now();
+        // Send instants of the pings still awaiting their pong, oldest
+        // first, for the RTT measurement. Bounded: a ping whose pong
+        // never arrives (skipped enqueue, overloaded peer) ages out.
+        let mut in_flight: VecDeque<(u32, Instant)> = VecDeque::new();
         loop {
             if stop.load(Ordering::Relaxed) {
                 return;
             }
             if Instant::now() >= next_ping {
                 shared.try_push(queue_cap, WireMsg::Ping { seq });
+                if in_flight.len() >= 64 {
+                    in_flight.pop_front();
+                }
+                in_flight.push_back((seq, Instant::now()));
                 seq = seq.wrapping_add(1);
                 next_ping = Instant::now() + interval;
             }
@@ -408,8 +472,20 @@ fn spawn_sender_liveness(
                 }
                 Ok(k) => match dec.push(&tmp[..k]) {
                     Ok(msgs) => {
-                        if msgs.iter().any(|m| matches!(m, WireMsg::Pong { .. })) {
-                            last_pong = Instant::now();
+                        for m in &msgs {
+                            if let WireMsg::Pong { seq: pong_seq } = m {
+                                last_pong = Instant::now();
+                                if let Some(pos) =
+                                    in_flight.iter().position(|(s, _)| s == pong_seq)
+                                {
+                                    rtt_record_ns(
+                                        in_flight[pos].1.elapsed().as_nanos() as u64
+                                    );
+                                    // The peer answers in order: earlier
+                                    // pings without a pong are lost.
+                                    in_flight.drain(..=pos);
+                                }
+                            }
                         }
                     }
                     Err(e) => {
@@ -530,7 +606,13 @@ impl FramedReceiver {
                 let len = wire::check_body_len(u32::from_le_bytes(header))?;
                 body.clear();
                 body.resize(len, 0);
-                r.read_exact(body)?;
+                {
+                    // Body bytes are in flight once the header arrived —
+                    // the header wait itself is idle time, not wire time.
+                    let _rr = obs::span(obs::Category::WireRead);
+                    r.read_exact(body)?;
+                }
+                let _cd = obs::span(obs::Category::CodecDecode);
                 codec.decode_body(body)
             }
             ReceiverImpl::Threaded { rx, .. } => match rx.recv_timeout(self.timeout) {
@@ -604,7 +686,11 @@ fn receiver_loop(
                     }
                 };
                 for body in frames {
-                    match codec.decode_body(&body) {
+                    let decoded = {
+                        let _cd = obs::span(obs::Category::CodecDecode);
+                        codec.decode_body(&body)
+                    };
+                    match decoded {
                         Ok(WireMsg::Ping { seq }) => {
                             if let Err(e) = wire::write_msg(&mut stream, &WireMsg::Pong { seq })
                             {
@@ -2905,7 +2991,10 @@ mod tests {
     fn heartbeat_link_stays_healthy_and_filters_pings() {
         // Full ping/pong plumbing: sender pings, receiver answers on the
         // reverse direction, data frames pass through untouched, and
-        // neither side faults across several idle intervals.
+        // neither side faults across several idle intervals. Each pong
+        // must also land an RTT sample in the process-global accumulator
+        // (the /metrics gauge and `CommStats.rtt` read it).
+        let rtt_before = rtt_snapshot().count;
         let (w, r) = loopback_pair().expect("loopback pair");
         let interval = Duration::from_millis(100);
         let sender = FramedSender::with_heartbeat(
@@ -2933,6 +3022,23 @@ mod tests {
             std::thread::sleep(Duration::from_millis(250));
         }
         assert!(sender.fault().is_none(), "{:?}", sender.fault());
+        // ~10 pings answered over the four idle gaps; the accumulator is
+        // shared process-wide, so assert growth, not an absolute count.
+        let snap = rtt_snapshot();
+        assert!(
+            snap.count > rtt_before,
+            "no RTT sample recorded: {} before, {} after",
+            rtt_before,
+            snap.count
+        );
+        assert!(snap.min_ns > 0, "a loopback round-trip cannot take 0 ns");
+        assert!(
+            snap.min_ns <= snap.mean_ns && snap.mean_ns <= snap.max_ns,
+            "min {} / mean {} / max {} out of order",
+            snap.min_ns,
+            snap.mean_ns,
+            snap.max_ns
+        );
     }
 
     #[test]

@@ -692,12 +692,24 @@ impl Coordinator {
                 for &b in &order {
                     let bucket = *plan.bucket(b);
                     let (sub_partition, sub_ks) = plan.bucket_config(b, partition, ks);
-                    let slices: Vec<Vec<f32>> =
-                        grads.iter().map(|g| g[bucket.range()].to_vec()).collect();
-                    let efs = pool.begin_bucket(b as u32, bucket.offset, slices);
+                    let efs = {
+                        let _sp = crate::obs::span(crate::obs::Category::EfUpdate)
+                            .step(t as u32)
+                            .bucket(b as u32);
+                        let slices: Vec<Vec<f32>> =
+                            grads.iter().map(|g| g[bucket.range()].to_vec()).collect();
+                        pool.begin_bucket(b as u32, bucket.offset, slices)
+                    };
                     let ef_views: Vec<&[f32]> = efs.iter().map(|e| e.as_slice()).collect();
-                    let sel =
-                        select_layered(compressor, t, &ef_views, &sub_partition, &sub_ks, threads);
+                    let sel = {
+                        let _sp = crate::obs::span(crate::obs::Category::Select)
+                            .step(t as u32)
+                            .bucket(b as u32);
+                        select_layered(compressor, t, &ef_views, &sub_partition, &sub_ks, threads)
+                    };
+                    let _sp = crate::obs::span(crate::obs::Category::Encode)
+                        .step(t as u32)
+                        .bucket(b as u32);
                     match &sel {
                         Selection::Shared(idx) => {
                             let vals: Vec<Vec<f32>> = efs
@@ -715,12 +727,16 @@ impl Coordinator {
                             pool.finish_gather_bucket(b as u32, sparses);
                         }
                     }
+                    drop(_sp);
                     selections[b] = Some(sel);
                 }
                 // Completion sweep: lanes complete FIFO, so buckets land
                 // in submission order; each is applied as it arrives.
                 for &b in &order {
                     let bucket = *plan.bucket(b);
+                    let _sp = crate::obs::span(crate::obs::Category::Collective)
+                        .step(t as u32)
+                        .bucket(b as u32);
                     match selections[b].as_ref().expect("submitted above") {
                         Selection::Shared(idx) => {
                             let (tag, vals) = pool.try_wait_reduced()?;
@@ -860,8 +876,15 @@ impl Coordinator {
             });
             return;
         }
-        let efs = self.pool().begin_step(grads);
-        let selection = self.select_indices(t, &efs);
+        let efs = {
+            let _sp = crate::obs::span(crate::obs::Category::EfUpdate).step(t as u32);
+            self.pool().begin_step(grads)
+        };
+        let selection = {
+            let _sp = crate::obs::span(crate::obs::Category::Select).step(t as u32);
+            self.select_indices(t, &efs)
+        };
+        let _sp = crate::obs::span(crate::obs::Category::Encode).step(t as u32);
         match &selection {
             Selection::Shared(idx) => {
                 let vals: Vec<Vec<f32>> = efs
@@ -879,6 +902,7 @@ impl Coordinator {
                 self.pool().finish_gather(sparses);
             }
         }
+        drop(_sp);
         self.pending.push_back(Pending {
             leader,
             selection: Some(selection),
@@ -911,10 +935,13 @@ impl Coordinator {
     fn refresh_codec_stats(&mut self) {
         if let Workers::Pool(p) = &self.workers {
             self.fabric.update_codec_stats(p.codec_snapshot());
+            self.fabric
+                .update_rtt_stats(crate::comm::socket::rtt_snapshot());
         }
     }
 
     fn wait_pending(&mut self, p: Pending) -> anyhow::Result<StepResult> {
+        let _sp = crate::obs::span(crate::obs::Category::Collective);
         if p.dense {
             let (bucket, update) = self.pool().try_wait_reduced()?;
             debug_assert_eq!(bucket, 0, "monolithic steps carry bucket 0");
@@ -1021,17 +1048,24 @@ impl Coordinator {
         }
 
         // --- compressed path -------------------------------------------
-        let efs = match self.backend {
-            Backend::Sequential => self.ef_grads(grads),
-            Backend::Threaded => threaded::parallel_ef_grads(self.memories(), grads),
-            Backend::Pipelined | Backend::Socket => {
-                unreachable!("pooled-backend steps go through submit")
+        let efs = {
+            let _sp = crate::obs::span(crate::obs::Category::EfUpdate).step(t as u32);
+            match self.backend {
+                Backend::Sequential => self.ef_grads(grads),
+                Backend::Threaded => threaded::parallel_ef_grads(self.memories(), grads),
+                Backend::Pipelined | Backend::Socket => {
+                    unreachable!("pooled-backend steps go through submit")
+                }
             }
         };
         let backend = self.backend;
         let n = self.n;
-        let selection = self.select_indices(t, &efs);
+        let selection = {
+            let _sp = crate::obs::span(crate::obs::Category::Select).step(t as u32);
+            self.select_indices(t, &efs)
+        };
 
+        let _sp = crate::obs::span(crate::obs::Category::Collective).step(t as u32);
         let (update, comm, sent) = match (&selection, backend) {
             (Selection::Shared(idx), Backend::Sequential) => {
                 let sparses: Vec<SparseGrad> =
@@ -1081,6 +1115,7 @@ impl Coordinator {
                 unreachable!("pooled-backend steps go through submit")
             }
         };
+        drop(_sp);
 
         // memory update (Eqn. 5) with each worker's transmitted indices —
         // the threaded exchanges already updated each memory on its

@@ -26,6 +26,7 @@ pub mod experiments;
 pub mod json;
 pub mod metrics;
 pub mod models;
+pub mod obs;
 pub mod perfmodel;
 pub mod proptest;
 pub mod runtime;

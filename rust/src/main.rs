@@ -1,8 +1,8 @@
 //! `scalecom` — launcher CLI for the ScaleCom (NeurIPS 2020) reproduction.
 //!
 //! Subcommands: train, simulate, tune, node, serve, submit, status,
-//! jobs, cancel, bench-trend, experiment, perf-model, compress-bench,
-//! artifacts-check, list. See `cli::USAGE`.
+//! jobs, cancel, trace, bench-trend, experiment, perf-model,
+//! compress-bench, artifacts-check, list. See `cli::USAGE`.
 
 use anyhow::Result;
 use scalecom::cli::{Args, USAGE};
@@ -44,6 +44,7 @@ fn run() -> Result<()> {
         Some("status") => cmd_status(&mut args),
         Some("jobs") => cmd_jobs(&mut args),
         Some("cancel") => cmd_cancel(&mut args),
+        Some("trace") => cmd_trace(&mut args),
         Some("bench-trend") => cmd_bench_trend(&mut args),
         Some("experiment") => cmd_experiment(&mut args),
         Some("perf-model") => cmd_perf_model(&mut args),
@@ -149,7 +150,12 @@ fn cmd_train(args: &mut Args) -> Result<()> {
     let use_kernel = args.flag("kernel-compress");
     let lr_warmup = args.usize_or("lr-warmup", 0)?;
     let quiet = args.flag("quiet");
+    let trace_out = args.str_opt("trace-out");
     args.finish()?;
+    if trace_out.is_some() {
+        scalecom::obs::set_enabled(true);
+        scalecom::obs::mark_sync();
+    }
 
     // `--bucket-bytes auto`: run the calibrated tune sweep with this
     // run's workers/scheme/rate (tune-grade defaults elsewhere — the
@@ -239,6 +245,10 @@ fn cmd_train(args: &mut Args) -> Result<()> {
     );
     let path = log.save_csv(std::path::Path::new("results"))?;
     println!("metrics: {}", path.display());
+    if let Some(p) = &trace_out {
+        scalecom::obs::chrome::export(p, "train")?;
+        println!("trace written: {p}");
+    }
     Ok(())
 }
 
@@ -293,6 +303,7 @@ fn cmd_simulate(args: &mut Args) -> Result<()> {
         overlapped: args.flag("overlapped"),
     };
     let show_trace = args.flag("trace");
+    let trace_out = args.str_opt("trace-out");
     // Elastic membership: inject one fail-stop fault and charge the
     // recovery wave (detect, restart, re-rendezvous, resume, replay) in
     // virtual time. Selections stay bit-identical to the fault-free run.
@@ -331,6 +342,13 @@ fn cmd_simulate(args: &mut Args) -> Result<()> {
             ns
         }
     };
+    if trace_out.is_some() {
+        anyhow::ensure!(
+            schemes.len() == 1 && worker_counts.len() == 1,
+            "--trace-out writes one run's trace: pass a single --scheme \
+             (not 'all') and drop --sweep-workers"
+        );
+    }
     println!(
         "simnet | profile={} dim={} rate={}x steps={} layers={} bucket-bytes={}{}",
         profile.name,
@@ -404,17 +422,11 @@ fn cmd_simulate(args: &mut Args) -> Result<()> {
                 r.selection_digest(),
             ]);
             if show_trace {
-                for e in &r.trace {
-                    println!(
-                        "trace step={} bucket={} {:<16} [{:.3}us .. {:.3}us] {} bytes",
-                        e.step,
-                        e.bucket,
-                        e.op,
-                        e.start_s * 1e6,
-                        e.end_s * 1e6,
-                        e.bytes
-                    );
-                }
+                print!("{}", r.trace_summary());
+            }
+            if let Some(p) = &trace_out {
+                scalecom::obs::chrome::from_sim(&r).write(p)?;
+                println!("trace written: {p}");
             }
         }
     }
@@ -556,7 +568,14 @@ fn cmd_node(args: &mut Args) -> Result<()> {
     // Hierarchical ring-of-rings (0 = flat). Must match on every node
     // of the fleet and tile the peer count — validated at launch.
     let group_size = args.usize_or("group-size", 0)?;
+    let trace_out = args.str_opt("trace-out");
     args.finish()?;
+    // The sync anchor is marked inside run_node at the post-rendezvous
+    // point (right after the Hello handshakes), so per-rank files merge
+    // on a shared clock event.
+    if trace_out.is_some() {
+        scalecom::obs::set_enabled(true);
+    }
     let wire_codec =
         scalecom::comm::WireCodecConfig::from_strings(&wire_mode, &wire_dense, &wire_sparse)?;
     let mut spec =
@@ -571,7 +590,12 @@ fn cmd_node(args: &mut Args) -> Result<()> {
     scalecom::util::signal::install_shutdown_handler();
     let spec = spec.with_graceful(true);
     let stdout = std::io::stdout();
-    run_node(&spec, &wl, &mut stdout.lock())
+    run_node(&spec, &wl, &mut stdout.lock())?;
+    if let Some(p) = &trace_out {
+        scalecom::obs::chrome::export(p, "node")?;
+        println!("trace written: {p}");
+    }
+    Ok(())
 }
 
 /// Control-plane address with the serve precedence: `--addr` flag >
@@ -605,6 +629,9 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
         None => scalecom::serve::daemon::env_serve_max_queue()?.unwrap_or(d.max_queue),
     };
     let max_concurrent = args.usize_or("max-concurrent", d.max_concurrent)?;
+    let metrics_job_retention =
+        args.usize_or("metrics-job-retention", d.metrics_job_retention)?;
+    let trace_out = args.str_opt("trace-out");
     // Lane wire codec, same precedence as `train`/`node` (socket
     // transport only; inert on channels).
     let wire_mode = match args.str_opt("wire-compression") {
@@ -625,6 +652,12 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
         other => anyhow::bail!("--lane-transport expects channel|socket, got '{other}'"),
     };
     scalecom::util::signal::install_shutdown_handler();
+    // No handshake on the serve plane — the daemon's startup instant is
+    // the clock-sync anchor for its (single-process) trace.
+    if trace_out.is_some() {
+        scalecom::obs::set_enabled(true);
+        scalecom::obs::mark_sync();
+    }
     let daemon = scalecom::serve::Daemon::start(&scalecom::serve::ServeConfig {
         bind,
         metrics_bind,
@@ -633,6 +666,7 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
         transport,
         max_queue,
         max_concurrent,
+        metrics_job_retention,
     })?;
     println!(
         "serve listening addr={} metrics={} workers={} transport={} \
@@ -648,7 +682,12 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
         std::thread::sleep(Duration::from_millis(100));
     }
     println!("serve draining: queued jobs cancelled, running jobs stop at a step boundary");
-    match daemon.shutdown() {
+    let fault = daemon.shutdown();
+    if let Some(p) = &trace_out {
+        scalecom::obs::chrome::export(p, "serve")?;
+        println!("trace written: {p}");
+    }
+    match fault {
         None => {
             println!("serve drained cleanly");
             Ok(())
@@ -739,6 +778,64 @@ fn cmd_cancel(args: &mut Args) -> Result<()> {
         _ => println!("job {job} signalled; it stops at its next step boundary"),
     }
     Ok(())
+}
+
+/// Offline tooling over the Chrome-trace files every runtime emits via
+/// `--trace-out`: merge per-rank files on their handshake sync anchors,
+/// print a per-category report, or diff a measured trace against a
+/// simnet prediction.
+fn cmd_trace(args: &mut Args) -> Result<()> {
+    use scalecom::obs::chrome::{self, TraceFile};
+    let verb = args.positional.first().cloned();
+    match verb.as_deref() {
+        Some("merge") => {
+            let out = args.str_or("out", "trace-merged.json");
+            args.finish()?;
+            let inputs = &args.positional[1..];
+            anyhow::ensure!(
+                inputs.len() >= 2,
+                "trace merge wants two or more per-rank trace files"
+            );
+            let files = inputs
+                .iter()
+                .map(|p| TraceFile::read(p))
+                .collect::<Result<Vec<_>>>()?;
+            let merged = chrome::merge(&files);
+            merged.write(&out)?;
+            println!(
+                "merged {} files ({} events, {} dropped) into {out}",
+                files.len(),
+                merged.events.len(),
+                merged.dropped
+            );
+            Ok(())
+        }
+        Some("report") => {
+            args.finish()?;
+            anyhow::ensure!(
+                args.positional.len() == 2,
+                "trace report wants exactly one trace file"
+            );
+            let f = TraceFile::read(&args.positional[1])?;
+            print!("{}", chrome::report(&f));
+            Ok(())
+        }
+        Some("diff") => {
+            args.finish()?;
+            anyhow::ensure!(
+                args.positional.len() == 3,
+                "trace diff wants <measured.json> <predicted.json>"
+            );
+            let real = TraceFile::read(&args.positional[1])?;
+            let sim = TraceFile::read(&args.positional[2])?;
+            print!("{}", chrome::diff(&real, &sim));
+            Ok(())
+        }
+        _ => anyhow::bail!(
+            "trace wants a verb: merge [--out F] <a.json> <b.json> ... | \
+             report <f.json> | diff <measured.json> <predicted.json>"
+        ),
+    }
 }
 
 /// Bench-trend gate: compare a current `bench_allreduce --json` artifact

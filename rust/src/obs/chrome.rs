@@ -1,0 +1,601 @@
+//! Chrome-trace/Perfetto JSON export for recorded spans, plus the
+//! `scalecom trace merge|report|diff` operations over those files.
+//!
+//! One process writes one file (`--trace-out`): the standard
+//! `{"traceEvents": [...]}` object with complete (`"ph":"X"`) events —
+//! `ts`/`dur` in microseconds, `pid` = rank, `tid` = recorder thread —
+//! plus a `metadata` object carrying the rank, role, clock-sync anchor
+//! ([`crate::obs::span::mark_sync`], recorded when the Hello handshake
+//! completes) and the overflow-drop count. `chrome://tracing` and
+//! Perfetto open the files directly.
+//!
+//! `merge` aligns per-rank files by rebasing every file so the sync
+//! anchors coincide (ranks reach mesh formation at nearly the same
+//! wall-clock instant). `report` prints per-category totals and the
+//! comm/compute overlap efficiency. `diff` compares a real trace
+//! against a `simulate --trace-out` file phase by phase — simnet
+//! events are converted through [`from_sim`] into the same schema.
+
+use crate::json::{obj, Json};
+use crate::obs::span::{self, Category};
+use crate::simnet::{SimReport, TraceEvent};
+use std::collections::BTreeMap;
+
+/// One complete event, schema-equal between real runs and simnet.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChromeEvent {
+    /// Phase name: a [`Category::label`] for real runs, the simnet op
+    /// string for simulated ones.
+    pub name: String,
+    /// Aggregation kind: `compute` | `comm` | `sched`.
+    pub cat: String,
+    pub ts_us: f64,
+    pub dur_us: f64,
+    pub pid: u32,
+    pub tid: u32,
+    /// Numeric tags (step/bucket/job/level, simnet adds bytes).
+    pub args: BTreeMap<String, f64>,
+}
+
+/// A parsed/authored trace file.
+#[derive(Debug, Clone, Default)]
+pub struct TraceFile {
+    pub events: Vec<ChromeEvent>,
+    pub rank: u32,
+    pub role: String,
+    /// Clock-sync anchor in trace-local nanoseconds.
+    pub sync_ns: u64,
+    pub dropped: u64,
+}
+
+fn event_json(e: &ChromeEvent) -> Json {
+    let args = Json::Obj(
+        e.args
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::Num(*v)))
+            .collect(),
+    );
+    obj(vec![
+        ("name", Json::from(e.name.as_str())),
+        ("cat", Json::from(e.cat.as_str())),
+        ("ph", Json::from("X")),
+        ("ts", Json::Num(e.ts_us)),
+        ("dur", Json::Num(e.dur_us)),
+        ("pid", Json::Num(e.pid as f64)),
+        ("tid", Json::Num(e.tid as f64)),
+        ("args", args),
+    ])
+}
+
+impl TraceFile {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            (
+                "traceEvents",
+                Json::Arr(self.events.iter().map(event_json).collect()),
+            ),
+            (
+                "metadata",
+                obj(vec![
+                    ("rank", Json::Num(self.rank as f64)),
+                    ("role", Json::from(self.role.as_str())),
+                    ("sync_ns", Json::Num(self.sync_ns as f64)),
+                    ("dropped", Json::Num(self.dropped as f64)),
+                ]),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<TraceFile> {
+        let events_json = v
+            .req("traceEvents")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("traceEvents is not an array"))?;
+        let mut events = Vec::with_capacity(events_json.len());
+        for (i, e) in events_json.iter().enumerate() {
+            let num = |key: &str| -> anyhow::Result<f64> {
+                e.req(key)?
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("event {i}: '{key}' is not a number"))
+            };
+            let args = match e.get("args").and_then(|a| a.as_obj()) {
+                Some(m) => m
+                    .iter()
+                    .filter_map(|(k, v)| v.as_f64().map(|n| (k.clone(), n)))
+                    .collect(),
+                None => BTreeMap::new(),
+            };
+            events.push(ChromeEvent {
+                name: e
+                    .req("name")?
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("event {i}: 'name' is not a string"))?
+                    .to_string(),
+                cat: e
+                    .get("cat")
+                    .and_then(|c| c.as_str())
+                    .unwrap_or("compute")
+                    .to_string(),
+                ts_us: num("ts")?,
+                dur_us: num("dur")?,
+                pid: num("pid")? as u32,
+                tid: num("tid")? as u32,
+                args,
+            });
+        }
+        let meta = v.get("metadata");
+        let meta_num = |key: &str| -> f64 {
+            meta.and_then(|m| m.get(key)).and_then(|x| x.as_f64()).unwrap_or(0.0)
+        };
+        Ok(TraceFile {
+            events,
+            rank: meta_num("rank") as u32,
+            role: meta
+                .and_then(|m| m.get("role"))
+                .and_then(|r| r.as_str())
+                .unwrap_or("")
+                .to_string(),
+            sync_ns: meta_num("sync_ns") as u64,
+            dropped: meta_num("dropped") as u64,
+        })
+    }
+
+    pub fn write(&self, path: &str) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .map_err(|e| anyhow::anyhow!("write trace {path}: {e}"))
+    }
+
+    pub fn read(path: &str) -> anyhow::Result<TraceFile> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("read trace {path}: {e}"))?;
+        let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("parse trace {path}: {e}"))?;
+        TraceFile::from_json(&v)
+    }
+}
+
+/// Drain the global recorder into a [`TraceFile`] stamped with this
+/// process's rank/role/sync anchor.
+pub fn drain_to_file(role: &str) -> TraceFile {
+    let drained = span::drain_all();
+    let rank = span::rank();
+    let mut events = Vec::with_capacity(drained.spans.len());
+    for (tid, s) in drained.spans {
+        let mut args = BTreeMap::new();
+        args.insert("step".to_string(), s.step as f64);
+        args.insert("bucket".to_string(), s.bucket as f64);
+        args.insert("job".to_string(), s.job as f64);
+        args.insert("level".to_string(), s.level as f64);
+        events.push(ChromeEvent {
+            name: s.cat.label().to_string(),
+            cat: s.cat.kind().to_string(),
+            ts_us: s.start_ns as f64 / 1000.0,
+            dur_us: s.end_ns.saturating_sub(s.start_ns) as f64 / 1000.0,
+            pid: rank,
+            tid,
+            args,
+        });
+    }
+    events.sort_by(|a, b| a.ts_us.total_cmp(&b.ts_us));
+    TraceFile {
+        events,
+        rank,
+        role: role.to_string(),
+        sync_ns: span::sync_ns(),
+        dropped: drained.dropped,
+    }
+}
+
+/// Drain the recorder and write one process's trace file.
+pub fn export(path: &str, role: &str) -> anyhow::Result<()> {
+    drain_to_file(role).write(path)
+}
+
+/// Convert a simnet report into the shared schema: virtual seconds
+/// become microseconds, `pid` 0, `tid` 0, and the op string is the
+/// event name. Purely a projection of `report.trace` — the trace
+/// digest hashes the original events and is untouched.
+pub fn from_sim(report: &SimReport) -> TraceFile {
+    let events = report.trace.iter().map(sim_event).collect::<Vec<_>>();
+    TraceFile {
+        events,
+        rank: 0,
+        role: format!("simulate:{}", report.scheme),
+        sync_ns: 0,
+        dropped: 0,
+    }
+}
+
+fn sim_event(e: &TraceEvent) -> ChromeEvent {
+    let mut args = BTreeMap::new();
+    args.insert("step".to_string(), e.step as f64);
+    args.insert("bucket".to_string(), e.bucket as f64);
+    args.insert("bytes".to_string(), e.bytes as f64);
+    ChromeEvent {
+        name: e.op.to_string(),
+        cat: sim_kind(e.op).to_string(),
+        ts_us: e.start_s * 1e6,
+        dur_us: (e.end_s - e.start_s).max(0.0) * 1e6,
+        pid: 0,
+        tid: 0,
+        args,
+    }
+}
+
+/// Simnet ops that model CPU work; everything else is on-the-wire.
+fn sim_kind(op: &str) -> &'static str {
+    if op.starts_with("compute") {
+        "compute"
+    } else {
+        "comm"
+    }
+}
+
+/// Merge per-rank files into one timeline: every file is rebased so
+/// its sync anchor lands at the same merged-time instant (the maximum
+/// anchor across files, so no event goes negative for files that
+/// started recording at their anchor), and `pid` is forced to the
+/// file's rank so Perfetto shows one track group per rank.
+pub fn merge(files: &[TraceFile]) -> TraceFile {
+    let base_us = files
+        .iter()
+        .map(|f| f.sync_ns as f64 / 1000.0)
+        .fold(0.0f64, f64::max);
+    let mut events = Vec::new();
+    let mut dropped = 0;
+    for f in files {
+        let shift = base_us - f.sync_ns as f64 / 1000.0;
+        for e in &f.events {
+            let mut e = e.clone();
+            e.ts_us += shift;
+            e.pid = f.rank;
+            events.push(e);
+        }
+        dropped += f.dropped;
+    }
+    events.sort_by(|a, b| a.ts_us.total_cmp(&b.ts_us));
+    TraceFile {
+        events,
+        rank: 0,
+        role: "merged".to_string(),
+        sync_ns: (base_us * 1000.0) as u64,
+        dropped,
+    }
+}
+
+struct PhaseTotal {
+    count: usize,
+    total_us: f64,
+}
+
+fn totals_by_name(f: &TraceFile) -> BTreeMap<String, PhaseTotal> {
+    let mut m: BTreeMap<String, PhaseTotal> = BTreeMap::new();
+    for e in &f.events {
+        let t = m.entry(e.name.clone()).or_insert(PhaseTotal {
+            count: 0,
+            total_us: 0.0,
+        });
+        t.count += 1;
+        t.total_us += e.dur_us;
+    }
+    m
+}
+
+fn totals_by_kind(f: &TraceFile) -> BTreeMap<String, f64> {
+    let mut m = BTreeMap::new();
+    for e in &f.events {
+        *m.entry(e.cat.clone()).or_insert(0.0) += e.dur_us;
+    }
+    m
+}
+
+/// Length of the union of `[start, end)` intervals, microseconds.
+fn union_us(mut iv: Vec<(f64, f64)>) -> f64 {
+    iv.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let mut total = 0.0;
+    let mut cur: Option<(f64, f64)> = None;
+    for (s, e) in iv {
+        match &mut cur {
+            Some((_, ce)) if s <= *ce => *ce = ce.max(e),
+            _ => {
+                if let Some((cs, ce)) = cur {
+                    total += ce - cs;
+                }
+                cur = Some((s, e));
+            }
+        }
+    }
+    if let Some((cs, ce)) = cur {
+        total += ce - cs;
+    }
+    total
+}
+
+/// Per-pid comm/compute busy time and their overlap. Overlap
+/// efficiency = overlapped time / min(comm busy, compute busy): 1.0
+/// means the shorter side is fully hidden behind the longer one.
+fn overlap_by_pid(f: &TraceFile) -> BTreeMap<u32, (f64, f64, f64)> {
+    let mut per: BTreeMap<u32, (Vec<(f64, f64)>, Vec<(f64, f64)>)> = BTreeMap::new();
+    for e in &f.events {
+        let iv = (e.ts_us, e.ts_us + e.dur_us);
+        let entry = per.entry(e.pid).or_default();
+        match e.cat.as_str() {
+            "comm" => entry.0.push(iv),
+            "compute" => entry.1.push(iv),
+            _ => {}
+        }
+    }
+    per.into_iter()
+        .map(|(pid, (comm, compute))| {
+            let comm_busy = union_us(comm.clone());
+            let compute_busy = union_us(compute.clone());
+            // Overlap = |union(comm)| + |union(compute)| - |union(both)|.
+            let both: Vec<(f64, f64)> = comm.into_iter().chain(compute).collect();
+            let overlapped = (comm_busy + compute_busy - union_us(both)).max(0.0);
+            (pid, (comm_busy, compute_busy, overlapped))
+        })
+        .collect()
+}
+
+/// Human-readable per-category totals + overlap efficiency.
+pub fn report(f: &TraceFile) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "trace report: {} events, role={}, dropped={}\n",
+        f.events.len(),
+        if f.role.is_empty() { "?" } else { f.role.as_str() },
+        f.dropped
+    ));
+    out.push_str("category                 count      total ms      mean us\n");
+    for (name, t) in totals_by_name(f) {
+        let kind = Category::parse(&name)
+            .map(|c| c.kind())
+            .unwrap_or_else(|| sim_kind(&name));
+        out.push_str(&format!(
+            "{:<17}{:>7} {:>9} {:>13.3} {:>12.2}\n",
+            name,
+            format!("[{kind}]"),
+            t.count,
+            t.total_us / 1000.0,
+            t.total_us / t.count.max(1) as f64
+        ));
+    }
+    for (pid, (comm, compute, overlapped)) in overlap_by_pid(f) {
+        let denom = comm.min(compute);
+        let eff = if denom > 0.0 { overlapped / denom } else { 0.0 };
+        out.push_str(&format!(
+            "rank {pid}: comm busy {:.3} ms, compute busy {:.3} ms, \
+             overlapped {:.3} ms, overlap efficiency {:.1}%\n",
+            comm / 1000.0,
+            compute / 1000.0,
+            overlapped / 1000.0,
+            eff * 100.0
+        ));
+    }
+    out
+}
+
+fn delta_pct(real: f64, sim: f64) -> String {
+    if sim > 0.0 {
+        format!("{:+.1}%", (real - sim) / sim * 100.0)
+    } else {
+        "n/a".to_string()
+    }
+}
+
+/// Predicted-vs-measured: per-kind totals for both files, plus
+/// per-name rows for names present in both (the shared schema means
+/// simnet op names and real category labels only partially intersect,
+/// so the kind-level rows are the headline numbers).
+pub fn diff(real: &TraceFile, sim: &TraceFile) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "trace diff: measured '{}' ({} events) vs predicted '{}' ({} events)\n",
+        if real.role.is_empty() { "?" } else { real.role.as_str() },
+        real.events.len(),
+        if sim.role.is_empty() { "?" } else { sim.role.as_str() },
+        sim.events.len()
+    ));
+    out.push_str("phase          measured ms   predicted ms     delta\n");
+    let rk = totals_by_kind(real);
+    let sk = totals_by_kind(sim);
+    let mut kinds: Vec<&String> = rk.keys().chain(sk.keys()).collect();
+    kinds.sort();
+    kinds.dedup();
+    for kind in kinds {
+        let r = rk.get(kind).copied().unwrap_or(0.0);
+        let s = sk.get(kind).copied().unwrap_or(0.0);
+        out.push_str(&format!(
+            "{:<14}{:>12.3} {:>14.3} {:>9}\n",
+            kind,
+            r / 1000.0,
+            s / 1000.0,
+            delta_pct(r, s)
+        ));
+    }
+    let rt = totals_by_name(real);
+    let st = totals_by_name(sim);
+    let shared: Vec<&String> = rt.keys().filter(|k| st.contains_key(*k)).collect();
+    if !shared.is_empty() {
+        out.push_str("shared phases:\n");
+        for name in shared {
+            let r = rt[name].total_us;
+            let s = st[name].total_us;
+            out.push_str(&format!(
+                "  {:<12}{:>12.3} {:>14.3} {:>9}\n",
+                name,
+                r / 1000.0,
+                s / 1000.0,
+                delta_pct(r, s)
+            ));
+        }
+    }
+    let only_real: Vec<&String> = rt.keys().filter(|k| !st.contains_key(*k)).collect();
+    let only_sim: Vec<&String> = st.keys().filter(|k| !rt.contains_key(*k)).collect();
+    if !only_real.is_empty() {
+        out.push_str(&format!(
+            "measured-only phases: {}\n",
+            only_real.iter().map(|s| s.as_str()).collect::<Vec<_>>().join(", ")
+        ));
+    }
+    if !only_sim.is_empty() {
+        out.push_str(&format!(
+            "predicted-only phases: {}\n",
+            only_sim.iter().map(|s| s.as_str()).collect::<Vec<_>>().join(", ")
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(name: &str, cat: &str, ts: f64, dur: f64, pid: u32) -> ChromeEvent {
+        ChromeEvent {
+            name: name.to_string(),
+            cat: cat.to_string(),
+            ts_us: ts,
+            dur_us: dur,
+            pid,
+            tid: 1,
+            args: [("step".to_string(), 2.0)].into_iter().collect(),
+        }
+    }
+
+    fn tmp_path(tag: &str) -> String {
+        let dir = std::env::temp_dir().join(format!(
+            "scalecom-trace-{}-{tag}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join("t.json").to_string_lossy().into_owned()
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_events_and_metadata() {
+        let f = TraceFile {
+            events: vec![
+                ev("select", "compute", 10.0, 5.0, 3),
+                ev("wire-write", "comm", 12.0, 4.0, 3),
+            ],
+            rank: 3,
+            role: "node".to_string(),
+            sync_ns: 9000,
+            dropped: 2,
+        };
+        let parsed = TraceFile::from_json(&Json::parse(&f.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(parsed.events, f.events);
+        assert_eq!(parsed.rank, 3);
+        assert_eq!(parsed.role, "node");
+        assert_eq!(parsed.sync_ns, 9000);
+        assert_eq!(parsed.dropped, 2);
+    }
+
+    #[test]
+    fn merge_rebases_to_the_latest_sync_anchor() {
+        // Rank 0's anchor is at 2000 ns, rank 1's at 5000 ns: rank 0's
+        // events shift right by 3 us so the anchors coincide.
+        let a = TraceFile {
+            events: vec![ev("select", "compute", 2.0, 1.0, 0)],
+            rank: 0,
+            role: "node".into(),
+            sync_ns: 2000,
+            dropped: 1,
+        };
+        let b = TraceFile {
+            events: vec![ev("wire-write", "comm", 5.0, 1.0, 1)],
+            rank: 1,
+            role: "node".into(),
+            sync_ns: 5000,
+            dropped: 2,
+        };
+        let m = merge(&[a, b]);
+        assert_eq!(m.events.len(), 2);
+        assert_eq!(m.dropped, 3);
+        // Both events sat exactly at their file's anchor, so they land
+        // at the same merged timestamp.
+        assert!((m.events[0].ts_us - 5.0).abs() < 1e-9, "{:?}", m.events);
+        assert!((m.events[1].ts_us - 5.0).abs() < 1e-9, "{:?}", m.events);
+        let pids: Vec<u32> = m.events.iter().map(|e| e.pid).collect();
+        assert!(pids.contains(&0) && pids.contains(&1));
+    }
+
+    #[test]
+    fn file_roundtrip_through_merge() {
+        let pa = tmp_path("a");
+        let pb = tmp_path("b");
+        TraceFile {
+            events: vec![ev("select", "compute", 1.0, 2.0, 0)],
+            rank: 0,
+            role: "node".into(),
+            sync_ns: 0,
+            dropped: 0,
+        }
+        .write(&pa)
+        .unwrap();
+        TraceFile {
+            events: vec![ev("collective", "comm", 3.0, 2.0, 1)],
+            rank: 1,
+            role: "node".into(),
+            sync_ns: 0,
+            dropped: 0,
+        }
+        .write(&pb)
+        .unwrap();
+        let merged = merge(&[TraceFile::read(&pa).unwrap(), TraceFile::read(&pb).unwrap()]);
+        let pm = tmp_path("m");
+        merged.write(&pm).unwrap();
+        let back = TraceFile::read(&pm).unwrap();
+        assert_eq!(back.events.len(), 2);
+        assert_eq!(back.role, "merged");
+        let text = report(&back);
+        assert!(text.contains("select"), "{text}");
+        assert!(text.contains("collective"), "{text}");
+    }
+
+    #[test]
+    fn overlap_efficiency_counts_hidden_comm() {
+        // compute [0,10), comm [5,15): 5 us overlapped, min busy 10.
+        let f = TraceFile {
+            events: vec![
+                ev("select", "compute", 0.0, 10.0, 0),
+                ev("collective", "comm", 5.0, 10.0, 0),
+            ],
+            ..TraceFile::default()
+        };
+        let per = overlap_by_pid(&f);
+        let (comm, compute, overlapped) = per[&0];
+        assert!((comm - 10.0).abs() < 1e-9);
+        assert!((compute - 10.0).abs() < 1e-9);
+        assert!((overlapped - 5.0).abs() < 1e-9);
+        let text = report(&f);
+        assert!(text.contains("overlap efficiency 50.0%"), "{text}");
+    }
+
+    #[test]
+    fn union_merges_touching_and_nested_intervals() {
+        assert!((union_us(vec![]) - 0.0).abs() < 1e-12);
+        assert!((union_us(vec![(0.0, 2.0), (1.0, 3.0)]) - 3.0).abs() < 1e-12);
+        assert!((union_us(vec![(0.0, 10.0), (2.0, 3.0)]) - 10.0).abs() < 1e-12);
+        assert!((union_us(vec![(0.0, 1.0), (5.0, 6.0)]) - 2.0).abs() < 1e-12);
+        assert!((union_us(vec![(0.0, 1.0), (1.0, 2.0)]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn diff_reports_kind_deltas() {
+        let real = TraceFile {
+            events: vec![ev("select", "compute", 0.0, 11.0, 0)],
+            role: "node".into(),
+            ..TraceFile::default()
+        };
+        let sim = TraceFile {
+            events: vec![ev("compute", "compute", 0.0, 10.0, 0)],
+            role: "simulate:scalecom".into(),
+            ..TraceFile::default()
+        };
+        let text = diff(&real, &sim);
+        assert!(text.contains("compute"), "{text}");
+        assert!(text.contains("+10.0%"), "{text}");
+        assert!(text.contains("measured-only phases: select"), "{text}");
+    }
+}

@@ -1,0 +1,221 @@
+//! Log-bucketed latency histograms: power-of-two nanosecond buckets,
+//! lock-free recording (relaxed atomics), Prometheus histogram
+//! rendering, and percentile estimates off the bucket counts.
+//!
+//! Bucket `i` holds durations in `[2^i, 2^(i+1))` ns (bucket 0 also
+//! takes 0 and 1 ns), so 40 buckets cover one nanosecond to ~18 minutes
+//! with a fixed 2x resolution — good enough for p50/p95/p99 on step
+//! latencies and scheduler waits without any locking or rebinning.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of power-of-two buckets: the top bucket's upper edge is
+/// `2^BUCKETS` ns ≈ 1100 s.
+pub const BUCKETS: usize = 40;
+
+/// Upper edge of bucket `i` in nanoseconds (exclusive).
+fn upper_edge_ns(i: usize) -> u64 {
+    1u64 << (i + 1)
+}
+
+fn bucket_index(ns: u64) -> usize {
+    if ns < 2 {
+        0
+    } else {
+        ((63 - ns.leading_zeros()) as usize).min(BUCKETS - 1)
+    }
+}
+
+/// Shareable recorder: `record` is wait-free (three relaxed atomic
+/// adds), so the daemon can hand one `Arc<Histogram>` to every job
+/// thread.
+pub struct Histogram {
+    counts: [AtomicU64; BUCKETS],
+    sum_ns: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_ns: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record_ns(&self, ns: u64) {
+        self.counts[bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_secs(&self, s: f64) {
+        self.record_ns(if s <= 0.0 { 0 } else { (s * 1e9) as u64 });
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            counts: self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
+            sum_ns: self.sum_ns.load(Ordering::Relaxed),
+            count: self.count.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A point-in-time copy of a [`Histogram`], safe to carry across the
+/// daemon's snapshot path and render without further synchronization.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct HistSnapshot {
+    /// Per-bucket counts; empty means "never recorded" and renders as
+    /// an all-zero histogram.
+    pub counts: Vec<u64>,
+    pub sum_ns: u64,
+    pub count: u64,
+}
+
+impl HistSnapshot {
+    pub fn sum_seconds(&self) -> f64 {
+        self.sum_ns as f64 * 1e-9
+    }
+
+    /// Upper-edge estimate of the `p`-quantile (`0 < p <= 1`) in
+    /// nanoseconds; 0 when empty.
+    pub fn percentile_ns(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (p * self.count as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return upper_edge_ns(i);
+            }
+        }
+        upper_edge_ns(self.counts.len().saturating_sub(1).max(1) - 1)
+    }
+
+    pub fn percentile_secs(&self, p: f64) -> f64 {
+        self.percentile_ns(p) as f64 * 1e-9
+    }
+
+    /// Append Prometheus histogram exposition lines (`_bucket{le=...}`
+    /// cumulative counts up to the last nonempty bucket, `+Inf`,
+    /// `_sum`, `_count`). `labels` is either empty or a
+    /// `key="value",...` fragment merged into each bucket's label set.
+    pub fn render_prometheus(&self, out: &mut String, name: &str, labels: &str) {
+        let last = self
+            .counts
+            .iter()
+            .rposition(|&c| c > 0)
+            .map(|i| i + 1)
+            .unwrap_or(0);
+        let mut cum = 0u64;
+        for i in 0..last {
+            cum += self.counts[i];
+            let le = upper_edge_ns(i) as f64 * 1e-9;
+            if labels.is_empty() {
+                out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {cum}\n"));
+            } else {
+                out.push_str(&format!("{name}_bucket{{{labels},le=\"{le}\"}} {cum}\n"));
+            }
+        }
+        if labels.is_empty() {
+            out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", self.count));
+            out.push_str(&format!("{name}_sum {}\n", self.sum_seconds()));
+            out.push_str(&format!("{name}_count {}\n", self.count));
+        } else {
+            out.push_str(&format!(
+                "{name}_bucket{{{labels},le=\"+Inf\"}} {}\n",
+                self.count
+            ));
+            out.push_str(&format!("{name}_sum{{{labels}}} {}\n", self.sum_seconds()));
+            out.push_str(&format!("{name}_count{{{labels}}} {}\n", self.count));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_edges_are_powers_of_two() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 0);
+        assert_eq!(bucket_index(2), 1);
+        assert_eq!(bucket_index(3), 1);
+        assert_eq!(bucket_index(4), 2);
+        assert_eq!(bucket_index(1023), 9);
+        assert_eq!(bucket_index(1024), 10);
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+        for i in 0..BUCKETS {
+            // Every value in [2^i, 2^(i+1)) lands in bucket i.
+            let lo = if i == 0 { 0 } else { 1u64 << i };
+            assert_eq!(bucket_index(lo), i);
+            assert_eq!(bucket_index(upper_edge_ns(i) - 1), i);
+        }
+    }
+
+    #[test]
+    fn percentiles_walk_the_cumulative_counts() {
+        let h = Histogram::new();
+        for _ in 0..90 {
+            h.record_ns(100); // bucket 6, edge 128
+        }
+        for _ in 0..10 {
+            h.record_ns(10_000); // bucket 13, edge 16384
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 100);
+        assert_eq!(s.percentile_ns(0.50), 128);
+        assert_eq!(s.percentile_ns(0.90), 128);
+        assert_eq!(s.percentile_ns(0.95), 16_384);
+        assert_eq!(s.percentile_ns(0.99), 16_384);
+        assert_eq!(s.percentile_ns(1.0), 16_384);
+        assert!((s.sum_seconds() - (90.0 * 100.0 + 10.0 * 10_000.0) * 1e-9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_snapshot_renders_and_reports_zero() {
+        let s = HistSnapshot::default();
+        assert_eq!(s.percentile_ns(0.99), 0);
+        let mut out = String::new();
+        s.render_prometheus(&mut out, "x_seconds", "");
+        assert!(out.contains("x_seconds_bucket{le=\"+Inf\"} 0"), "{out}");
+        assert!(out.contains("x_seconds_count 0"), "{out}");
+    }
+
+    #[test]
+    fn prometheus_rendering_is_cumulative_and_labeled() {
+        let h = Histogram::new();
+        h.record_secs(0.001); // 1e6 ns → bucket 19, edge 2^20 ns
+        h.record_secs(0.004); // 4e6 ns → bucket 21
+        let s = h.snapshot();
+        let mut out = String::new();
+        s.render_prometheus(&mut out, "lat_seconds", "stage=\"wait\"");
+        assert!(
+            out.contains("lat_seconds_bucket{stage=\"wait\",le=\"0.002097152\"} 1"),
+            "{out}"
+        );
+        assert!(
+            out.contains("lat_seconds_bucket{stage=\"wait\",le=\"+Inf\"} 2"),
+            "{out}"
+        );
+        assert!(out.contains("lat_seconds_count{stage=\"wait\"} 2"), "{out}");
+        // Cumulative counts never decrease.
+        let mut prev = 0u64;
+        for line in out.lines().filter(|l| l.contains("_bucket{")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= prev, "{out}");
+            prev = v;
+        }
+    }
+}

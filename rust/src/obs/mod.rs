@@ -1,0 +1,29 @@
+//! Observability: the tracing spine for **real** runs.
+//!
+//! Three pieces:
+//!  - [`span`]: a lock-free, per-thread ring-buffer span recorder.
+//!    Instrumentation sites call [`span::span`] (RAII guard) or
+//!    [`span::record_span`]; with recording off (the default) every
+//!    site costs one relaxed atomic load and records nothing.
+//!  - [`chrome`]: Chrome-trace/Perfetto JSON export (`--trace-out` on
+//!    `train`, `node`, `serve`, `simulate`) plus the
+//!    `scalecom trace merge|report|diff` operations — simnet emits the
+//!    same event schema, so predicted and measured timelines diff
+//!    phase by phase.
+//!  - [`hist`]: power-of-two-bucketed latency histograms backing the
+//!    serve `/metrics` endpoint and the bench distribution section.
+//!
+//! Overhead contract: tracing off is a no-op (benched by
+//! `bench_allreduce obs/*`), tracing on stays within a few percent of
+//! step time — recording never blocks, never allocates, and drops
+//! spans (counted) instead of waiting when a ring fills.
+
+pub mod chrome;
+pub mod hist;
+pub mod span;
+
+pub use hist::{HistSnapshot, Histogram};
+pub use span::{
+    enabled, mark_sync, now_ns, rank, record_span, set_enabled, set_rank, span, sync_ns,
+    Category, Span, SpanGuard,
+};

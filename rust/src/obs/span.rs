@@ -1,0 +1,472 @@
+//! Lock-free, per-thread ring-buffer span recorder.
+//!
+//! The recorder is built so the *disabled* path costs one relaxed
+//! atomic load and the *enabled* path never blocks: every thread owns a
+//! single-producer/single-consumer ring of fixed capacity, pushes are a
+//! bounds check plus one release store, and overflow drops the new span
+//! and bumps a counter instead of waiting for the drain side. The only
+//! lock in the module guards the registry of rings, taken at thread
+//! registration and at drain time (export) — never on a hot path.
+//!
+//! Time is a process-local monotonic clock: nanoseconds since the first
+//! call to [`now_ns`] in this process. Cross-process alignment happens
+//! at export time via the sync anchor ([`mark_sync`] is called when the
+//! Hello handshake / mesh formation completes, and `trace merge`
+//! rebases every file so the anchors coincide).
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Spans buffered per thread before drop-and-count kicks in. At ~32
+/// bytes a span this bounds recorder memory at 512 KiB per thread.
+pub const RING_CAPACITY: usize = 1 << 14;
+
+/// What a span measures. The split into `compute`/`comm`/`sched` kinds
+/// (see [`Category::kind`]) is what the overlap-efficiency report and
+/// the simnet diff aggregate over.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Category {
+    /// Error-feedback memory update (`begin_step` / EF accumulate).
+    EfUpdate,
+    /// CLT-k / top-k index selection.
+    Select,
+    /// Sparse-value gather / sparsify into wire form.
+    Encode,
+    /// `CommLanes::submit` (handing jobs to the lane threads).
+    LaneSubmit,
+    /// `CommLanes::wait` / coordinator waiting on a collective result.
+    LaneWait,
+    /// Sender-side queue wait (writer thread idle on the send queue).
+    QueueWait,
+    /// Socket write of an encoded frame.
+    WireWrite,
+    /// Socket read of a frame body.
+    WireRead,
+    /// Wire-codec frame encode.
+    CodecEncode,
+    /// Wire-codec frame decode.
+    CodecDecode,
+    /// Serve scheduler: admission-to-dispatch wait.
+    SchedWait,
+    /// Serve scheduler: dispatch bookkeeping + job-thread spawn.
+    Dispatch,
+    /// One step of a served job.
+    JobStep,
+    /// A whole collective exchange (submit-to-reduced).
+    Collective,
+}
+
+impl Category {
+    pub const ALL: [Category; 14] = [
+        Category::EfUpdate,
+        Category::Select,
+        Category::Encode,
+        Category::LaneSubmit,
+        Category::LaneWait,
+        Category::QueueWait,
+        Category::WireWrite,
+        Category::WireRead,
+        Category::CodecEncode,
+        Category::CodecDecode,
+        Category::SchedWait,
+        Category::Dispatch,
+        Category::JobStep,
+        Category::Collective,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Category::EfUpdate => "ef-update",
+            Category::Select => "select",
+            Category::Encode => "encode",
+            Category::LaneSubmit => "lane-submit",
+            Category::LaneWait => "lane-wait",
+            Category::QueueWait => "queue-wait",
+            Category::WireWrite => "wire-write",
+            Category::WireRead => "wire-read",
+            Category::CodecEncode => "codec-encode",
+            Category::CodecDecode => "codec-decode",
+            Category::SchedWait => "sched-wait",
+            Category::Dispatch => "dispatch",
+            Category::JobStep => "job-step",
+            Category::Collective => "collective",
+        }
+    }
+
+    /// Aggregation kind: `compute` (CPU work), `comm` (waiting on or
+    /// moving bytes), `sched` (serve-plane bookkeeping).
+    pub fn kind(self) -> &'static str {
+        match self {
+            Category::EfUpdate
+            | Category::Select
+            | Category::Encode
+            | Category::CodecEncode
+            | Category::CodecDecode => "compute",
+            Category::LaneSubmit
+            | Category::LaneWait
+            | Category::QueueWait
+            | Category::WireWrite
+            | Category::WireRead
+            | Category::Collective => "comm",
+            Category::SchedWait | Category::Dispatch | Category::JobStep => "sched",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Category> {
+        Category::ALL.into_iter().find(|c| c.label() == s)
+    }
+}
+
+/// One recorded interval. `start_ns`/`end_ns` are [`now_ns`] readings;
+/// the tag fields default to 0 when a site has nothing to say.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Span {
+    pub cat: Category,
+    pub start_ns: u64,
+    pub end_ns: u64,
+    pub step: u32,
+    pub bucket: u32,
+    pub job: u32,
+    pub level: u8,
+}
+
+impl Span {
+    pub fn new(cat: Category, start_ns: u64, end_ns: u64) -> Span {
+        Span {
+            cat,
+            start_ns,
+            end_ns,
+            step: 0,
+            bucket: 0,
+            job: 0,
+            level: 0,
+        }
+    }
+}
+
+fn anchor() -> &'static Instant {
+    static ANCHOR: OnceLock<Instant> = OnceLock::new();
+    ANCHOR.get_or_init(Instant::now)
+}
+
+/// Monotonic nanoseconds since this process's first reading.
+#[inline]
+pub fn now_ns() -> u64 {
+    anchor().elapsed().as_nanos() as u64
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static RANK: AtomicU32 = AtomicU32::new(0);
+static SYNC_NS: AtomicU64 = AtomicU64::new(0);
+
+/// Turn recording on or off. Off is the default and costs one relaxed
+/// load per instrumentation site.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Process-global rank tag stamped into exported traces (`pid` in the
+/// Chrome schema).
+pub fn set_rank(rank: u32) {
+    RANK.store(rank, Ordering::Relaxed);
+}
+
+pub fn rank() -> u32 {
+    RANK.load(Ordering::Relaxed)
+}
+
+/// Record "now" as this process's clock-sync anchor. Called when the
+/// Hello handshake / mesh formation completes, which every rank reaches
+/// at (wall-clock) nearly the same instant — `trace merge` rebases all
+/// files so these anchors coincide.
+pub fn mark_sync() {
+    SYNC_NS.store(now_ns(), Ordering::Relaxed);
+}
+
+pub fn sync_ns() -> u64 {
+    SYNC_NS.load(Ordering::Relaxed)
+}
+
+/// One thread's SPSC span ring. The owning thread is the only producer
+/// (`push`); the drain side is the only consumer and is serialized by
+/// the registry lock. Cursors are monotonic; `tail - head` is the fill.
+pub(crate) struct ThreadRing {
+    tid: u32,
+    slots: Box<[UnsafeCell<MaybeUninit<Span>>]>,
+    /// Consumer cursor (next slot to read).
+    head: AtomicUsize,
+    /// Producer cursor (next slot to write).
+    tail: AtomicUsize,
+    dropped: AtomicU64,
+}
+
+// The per-slot UnsafeCells are only written by the producer thread for
+// slots in [tail, head + cap) and only read by the consumer for slots
+// in [head, tail); the Acquire/Release pairs on the cursors order the
+// slot accesses.
+unsafe impl Sync for ThreadRing {}
+unsafe impl Send for ThreadRing {}
+
+impl ThreadRing {
+    pub(crate) fn new(tid: u32, capacity: usize) -> ThreadRing {
+        assert!(capacity > 0);
+        let slots = (0..capacity)
+            .map(|_| UnsafeCell::new(MaybeUninit::uninit()))
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        ThreadRing {
+            tid,
+            slots,
+            head: AtomicUsize::new(0),
+            tail: AtomicUsize::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Producer side: never blocks; a full ring drops the new span.
+    pub(crate) fn push(&self, s: Span) {
+        let tail = self.tail.load(Ordering::Relaxed);
+        let head = self.head.load(Ordering::Acquire);
+        if tail - head == self.slots.len() {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let idx = tail % self.slots.len();
+        unsafe { (*self.slots[idx].get()).write(s) };
+        self.tail.store(tail + 1, Ordering::Release);
+    }
+
+    /// Consumer side (one caller at a time — the registry lock).
+    pub(crate) fn drain_into(&self, out: &mut Vec<(u32, Span)>) {
+        let tail = self.tail.load(Ordering::Acquire);
+        let mut head = self.head.load(Ordering::Relaxed);
+        while head < tail {
+            let idx = head % self.slots.len();
+            let s = unsafe { (*self.slots[idx].get()).assume_init_read() };
+            out.push((self.tid, s));
+            head += 1;
+        }
+        self.head.store(head, Ordering::Release);
+    }
+
+    pub(crate) fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+struct Registry {
+    rings: Mutex<Vec<Arc<ThreadRing>>>,
+}
+
+fn registry() -> &'static Registry {
+    static REGISTRY: OnceLock<Registry> = OnceLock::new();
+    REGISTRY.get_or_init(|| Registry {
+        rings: Mutex::new(Vec::new()),
+    })
+}
+
+static NEXT_TID: AtomicU32 = AtomicU32::new(1);
+
+thread_local! {
+    static LOCAL: Arc<ThreadRing> = {
+        let ring = Arc::new(ThreadRing::new(
+            NEXT_TID.fetch_add(1, Ordering::Relaxed),
+            RING_CAPACITY,
+        ));
+        registry().rings.lock().unwrap().push(ring.clone());
+        ring
+    };
+}
+
+/// Record a fully built span (used for retroactive intervals, e.g. the
+/// scheduler wait measured from a stored admission instant). A no-op
+/// when recording is disabled.
+pub fn record_span(s: Span) {
+    if !enabled() {
+        return;
+    }
+    // try_with: a span dropped during thread teardown is discarded
+    // rather than panicking in a destructor.
+    let _ = LOCAL.try_with(|ring| ring.push(s));
+}
+
+/// Everything drained from every thread ring: `(tid, span)` in
+/// per-thread record order, plus the cumulative overflow-drop count.
+pub struct Drained {
+    pub spans: Vec<(u32, Span)>,
+    pub dropped: u64,
+}
+
+/// Destructively drain every registered ring (export side).
+pub fn drain_all() -> Drained {
+    let rings = registry().rings.lock().unwrap();
+    let mut spans = Vec::new();
+    let mut dropped = 0;
+    for ring in rings.iter() {
+        ring.drain_into(&mut spans);
+        dropped += ring.dropped();
+    }
+    Drained { spans, dropped }
+}
+
+/// RAII span: created (un-armed and clock-free when recording is off)
+/// at the start of a phase, records on drop.
+pub struct SpanGuard {
+    cat: Category,
+    start_ns: u64,
+    step: u32,
+    bucket: u32,
+    job: u32,
+    level: u8,
+    armed: bool,
+}
+
+/// Open a span for `cat`. When recording is disabled this is one
+/// relaxed load — no clock read, nothing recorded on drop.
+#[inline]
+pub fn span(cat: Category) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard {
+            cat,
+            start_ns: 0,
+            step: 0,
+            bucket: 0,
+            job: 0,
+            level: 0,
+            armed: false,
+        };
+    }
+    SpanGuard {
+        cat,
+        start_ns: now_ns(),
+        step: 0,
+        bucket: 0,
+        job: 0,
+        level: 0,
+        armed: true,
+    }
+}
+
+impl SpanGuard {
+    pub fn step(mut self, t: u32) -> SpanGuard {
+        self.step = t;
+        self
+    }
+
+    pub fn bucket(mut self, b: u32) -> SpanGuard {
+        self.bucket = b;
+        self
+    }
+
+    pub fn job(mut self, j: u32) -> SpanGuard {
+        self.job = j;
+        self
+    }
+
+    pub fn level(mut self, l: u8) -> SpanGuard {
+        self.level = l;
+        self
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        record_span(Span {
+            cat: self.cat,
+            start_ns: self.start_ns,
+            end_ns: now_ns(),
+            step: self.step,
+            bucket: self.bucket,
+            job: self.job,
+            level: self.level,
+        });
+    }
+}
+
+/// Serializes tests that toggle the process-global `ENABLED` flag or
+/// drain the registry (the unit tests here and the recorder proptests
+/// in [`crate::proptest`]): cargo runs tests on parallel threads, and
+/// two tests racing on the flag would see each other's spans.
+#[cfg(test)]
+pub(crate) fn test_recorder_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(cat: Category, start: u64, end: u64) -> Span {
+        Span::new(cat, start, end)
+    }
+
+    #[test]
+    fn ring_fifo_below_capacity() {
+        let ring = ThreadRing::new(7, 8);
+        for i in 0..5 {
+            ring.push(mk(Category::Select, i, i + 1));
+        }
+        let mut out = Vec::new();
+        ring.drain_into(&mut out);
+        assert_eq!(out.len(), 5);
+        assert_eq!(ring.dropped(), 0);
+        for (i, (tid, s)) in out.iter().enumerate() {
+            assert_eq!(*tid, 7);
+            assert_eq!(s.start_ns, i as u64);
+        }
+        // Drained slots are reusable.
+        ring.push(mk(Category::Encode, 9, 10));
+        out.clear();
+        ring.drain_into(&mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].1.cat, Category::Encode);
+    }
+
+    #[test]
+    fn ring_drops_exactly_past_capacity() {
+        let ring = ThreadRing::new(1, 4);
+        for i in 0..10 {
+            ring.push(mk(Category::Select, i, i + 1));
+        }
+        assert_eq!(ring.dropped(), 6, "capacity 4, 10 pushes: 6 dropped");
+        let mut out = Vec::new();
+        ring.drain_into(&mut out);
+        assert_eq!(out.len(), 4);
+        // Drop-newest: the survivors are the FIRST four pushes.
+        let starts: Vec<u64> = out.iter().map(|(_, s)| s.start_ns).collect();
+        assert_eq!(starts, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn disabled_guard_records_nothing() {
+        let _lock = test_recorder_lock();
+        set_enabled(false);
+        let g = span(Category::Collective).step(3);
+        assert!(!g.armed);
+        drop(g);
+        // No panic, nothing armed; behavior of the global drain is
+        // covered by the proptests (which serialize on a shared lock).
+    }
+
+    #[test]
+    fn category_labels_roundtrip() {
+        for c in Category::ALL {
+            assert_eq!(Category::parse(c.label()), Some(c));
+            assert!(matches!(c.kind(), "compute" | "comm" | "sched"));
+        }
+        assert_eq!(Category::parse("nope"), None);
+    }
+}

@@ -1059,6 +1059,12 @@ pub fn run_node<W: Write>(spec: &NodeSpec, wl: &NodeWorkload, out: &mut W) -> an
         }
     };
     let (mut ring, mut star) = form(&listener)?;
+    // Post-rendezvous: every rank passes this point right after its
+    // Hello handshakes complete, so it is the shared clock event
+    // `trace merge` aligns per-rank files on. Unconditional stores —
+    // no-ops unless `--trace-out` armed the recorder.
+    crate::obs::set_rank(rank as u32);
+    crate::obs::mark_sync();
 
     let k = wl.k();
     let mut compressor = if wl.scheme == "none" {

@@ -20,8 +20,9 @@
 
 use crate::comm::parallel::LaneTransport;
 use crate::comm::wire::{self, Purpose, WireMsg, WIRE_CODEC_VERSION};
+use crate::obs::{self, Histogram};
 use crate::runtime::socket::{render_digest, NodeWorkload};
-use crate::serve::job::run_job;
+use crate::serve::job::{run_job, JobObs};
 use crate::serve::lanes::{LaneHandle, SharedLanes};
 use crate::serve::metrics::{self, JobMetrics, ServeMetrics};
 use crate::serve::protocol;
@@ -84,6 +85,11 @@ pub struct ServeConfig {
     pub transport: LaneTransport,
     pub max_queue: usize,
     pub max_concurrent: usize,
+    /// How many *finished* jobs keep their per-job `/metrics` series
+    /// (`--metrics-job-retention`). Queued/running jobs never count
+    /// against the cap; older finished jobs are pruned so scrape
+    /// cardinality stays bounded on a long-lived daemon.
+    pub metrics_job_retention: usize,
 }
 
 impl Default for ServeConfig {
@@ -96,6 +102,7 @@ impl Default for ServeConfig {
             transport: LaneTransport::Channel,
             max_queue: 8,
             max_concurrent: 2,
+            metrics_job_retention: 64,
         }
     }
 }
@@ -148,6 +155,14 @@ struct Shared {
     shutdown: AtomicBool,
     /// Scheduler wait summary: (sum of admission→start seconds, count).
     wait: Mutex<(f64, u64)>,
+    /// Log-bucketed latency distributions behind `/metrics` (wait-free
+    /// recording; job threads feed the job-scoped pair through
+    /// [`JobObs`]).
+    sched_wait: Histogram,
+    step_latency: Arc<Histogram>,
+    collective_wait: Arc<Histogram>,
+    /// Finished jobs kept visible in `/metrics` (the cardinality cap).
+    retention: usize,
     job_threads: Mutex<Vec<JoinHandle<()>>>,
 }
 
@@ -182,6 +197,10 @@ impl Daemon {
             lanes: Mutex::new(Some(lanes.handle())),
             shutdown: AtomicBool::new(false),
             wait: Mutex::new((0.0, 0)),
+            sched_wait: Histogram::default(),
+            step_latency: Arc::new(Histogram::default()),
+            collective_wait: Arc::new(Histogram::default()),
+            retention: cfg.metrics_job_retention,
             job_threads: Mutex::new(Vec::new()),
         });
         let s1 = shared.clone();
@@ -445,8 +464,12 @@ fn handle_cancel(shared: &Arc<Shared>, writer: &Arc<Mutex<TcpStream>>, job: u32)
         let mut q = shared.queue.lock().unwrap();
         match q.cancel(job) {
             Some(CancelOutcome::Dequeued) => {
-                if let Some(j) = shared.jobs.lock().unwrap().get_mut(&job) {
-                    j.status = JobStatus::Cancelled;
+                {
+                    let mut jobs = shared.jobs.lock().unwrap();
+                    if let Some(j) = jobs.get_mut(&job) {
+                        j.status = JobStatus::Cancelled;
+                    }
+                    prune_finished_jobs(&mut jobs, shared.retention);
                 }
                 WireMsg::JobCancelled {
                     job,
@@ -518,6 +541,17 @@ fn try_dispatch(shared: &Arc<Shared>) {
             w.0 += waited_s;
             w.1 += 1;
         }
+        shared.sched_wait.record_secs(waited_s);
+        // Retroactive span: the wait already happened (admission →
+        // this dispatch), so synthesize it from its measured length.
+        if obs::enabled() {
+            let end = obs::now_ns();
+            let start = end.saturating_sub((waited_s * 1e9) as u64);
+            let mut sp = obs::Span::new(obs::Category::SchedWait, start, end);
+            sp.job = id;
+            obs::record_span(sp);
+        }
+        let _sp = obs::span(obs::Category::Dispatch).job(id);
         let s = shared.clone();
         let handle = std::thread::spawn(move || job_thread(s, id, wl, lanes, cancel, conn));
         shared.job_threads.lock().unwrap().push(handle);
@@ -533,7 +567,11 @@ fn job_thread(
     conn: Option<Arc<Mutex<TcpStream>>>,
 ) {
     let mut conn = conn;
-    let result = run_job(id, &wl, &lanes, &cancel, |done, total| {
+    let hobs = JobObs {
+        step_latency: Some(shared.step_latency.clone()),
+        collective_wait: Some(shared.collective_wait.clone()),
+    };
+    let result = run_job(id, &wl, &lanes, &cancel, &hobs, |done, total, _secs| {
         if let Some(j) = shared.jobs.lock().unwrap().get_mut(&id) {
             j.steps_done = done;
         }
@@ -589,6 +627,7 @@ fn job_thread(
                         j.comm_time_seconds += s.comm.time_s;
                     }
                 }
+                prune_finished_jobs(&mut jobs, shared.retention);
             }
             if completed {
                 q.complete(id, true);
@@ -615,6 +654,7 @@ fn job_thread(
                     };
                     j.error = Some(cause.clone());
                 }
+                prune_finished_jobs(&mut jobs, shared.retention);
             }
             if cancelled {
                 q.complete_cancelled(id);
@@ -636,6 +676,28 @@ fn job_thread(
         let _ = write_frame(c, &frame);
     }
     try_dispatch(&shared);
+}
+
+/// Drop the oldest *finished* jobs past the retention cap so the
+/// per-job `/metrics` series stay bounded on a long-lived daemon.
+/// Queued/running jobs never count against the cap and are never
+/// pruned; ids ascend with submission order, so `BTreeMap` iteration
+/// order is age order. Called at every terminal transition, under the
+/// jobs lock.
+fn prune_finished_jobs(jobs: &mut BTreeMap<u32, JobState>, keep: usize) {
+    let finished: Vec<u32> = jobs
+        .iter()
+        .filter(|(_, j)| {
+            matches!(
+                j.status,
+                JobStatus::Done | JobStatus::Failed | JobStatus::Cancelled
+            )
+        })
+        .map(|(&id, _)| id)
+        .collect();
+    for id in finished.iter().take(finished.len().saturating_sub(keep)) {
+        jobs.remove(id);
+    }
 }
 
 /// Assemble the `/metrics` snapshot under the daemon's locks (in the
@@ -663,6 +725,10 @@ fn snapshot(shared: &Shared) -> ServeMetrics {
         cancelled: c.cancelled,
         wait_seconds_sum,
         wait_count,
+        sched_wait: shared.sched_wait.snapshot(),
+        step_latency: shared.step_latency.snapshot(),
+        collective_wait: shared.collective_wait.snapshot(),
+        rtt: crate::comm::socket::rtt_snapshot(),
         jobs: jobs
             .iter()
             .map(|(&id, j)| JobMetrics {
@@ -791,6 +857,42 @@ mod tests {
         assert!(env_serve_max_queue().is_err(), "set-but-invalid must be loud");
         std::env::remove_var(ENV_SERVE_MAX_QUEUE);
         assert_eq!(env_serve_max_queue().unwrap(), None);
+    }
+
+    fn state(status: JobStatus) -> JobState {
+        JobState {
+            spec: String::new(),
+            wl: NodeWorkload::default(),
+            status,
+            submitted_at: Instant::now(),
+            steps_done: 0,
+            step_seconds_sum: 0.0,
+            comm_bytes_up: 0,
+            comm_bytes_down: 0,
+            comm_time_seconds: 0.0,
+            cancel: Arc::new(AtomicBool::new(false)),
+            conn: None,
+            error: None,
+        }
+    }
+
+    #[test]
+    fn metrics_retention_prunes_oldest_finished_jobs_only() {
+        let mut jobs = BTreeMap::new();
+        for id in 1..=10u32 {
+            jobs.insert(id, state(JobStatus::Done));
+        }
+        jobs.insert(11, state(JobStatus::Running));
+        jobs.insert(12, state(JobStatus::Queued));
+        prune_finished_jobs(&mut jobs, 3);
+        let kept: Vec<u32> = jobs.keys().copied().collect();
+        assert_eq!(
+            kept,
+            vec![8, 9, 10, 11, 12],
+            "oldest finished pruned; running/queued untouched"
+        );
+        prune_finished_jobs(&mut jobs, 3);
+        assert_eq!(jobs.len(), 5, "idempotent at the bound");
     }
 
     #[test]

@@ -18,10 +18,12 @@ use crate::comm::{Fabric, FabricConfig};
 use crate::compress::{schemes::make_compressor, Selection};
 use crate::coordinator::{Coordinator, Mode};
 use crate::runtime::socket::{step_grads, NodeDigest, NodeWorkload, StepDigest, StepKind};
+use crate::obs::{self, Histogram};
 use crate::serve::lanes::LaneHandle;
 use crate::util::floats::allclose;
 use crate::util::rng::Rng;
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
 
 /// What the per-step hook tells the loop to do next.
@@ -107,6 +109,17 @@ pub fn run_steps(
     })
 }
 
+/// Shared latency histograms a served job records into as it runs.
+/// `None` fields skip recording, so unit tests and one-off callers pass
+/// `JobObs::default()`.
+#[derive(Default, Clone)]
+pub struct JobObs {
+    /// Wall seconds per completed step (compute + shared-lane exchange).
+    pub step_latency: Option<Arc<Histogram>>,
+    /// Wall seconds blocked inside `lanes.collective` per step.
+    pub collective_wait: Option<Arc<Histogram>>,
+}
+
 /// A finished (or stopped) served job.
 #[derive(Debug)]
 pub struct JobReport {
@@ -120,14 +133,16 @@ pub struct JobReport {
 /// Run job `id` on the daemon's shared lanes. Per step: one job-tagged
 /// dense ring average of the step's gradient stream crosses the shared
 /// mesh and is verified against the locally computed mean (ring f32
-/// tolerance), then `progress(done, total)` streams the advance. The
-/// `cancel` flag is polled at every step boundary.
+/// tolerance), then `progress(done, total, step_secs)` streams the
+/// advance with that step's wall seconds. The `cancel` flag is polled
+/// at every step boundary.
 pub fn run_job(
     id: u32,
     wl: &NodeWorkload,
     lanes: &LaneHandle,
     cancel: &AtomicBool,
-    mut progress: impl FnMut(usize, usize),
+    hobs: &JobObs,
+    mut progress: impl FnMut(usize, usize, f64),
 ) -> anyhow::Result<JobReport> {
     anyhow::ensure!(id != 0, "job id 0 is the legacy lane tag, never a served job");
     let n = lanes.workers();
@@ -137,6 +152,7 @@ pub fn run_job(
         wl,
         n,
         |t, grads, _step| {
+            let _step_sp = obs::span(obs::Category::JobStep).job(id).step(t as u32);
             let mut expect = vec![0.0f32; wl.dim];
             for g in grads {
                 for (a, b) in expect.iter_mut().zip(g) {
@@ -154,7 +170,15 @@ pub fn run_job(
                     buf: g.clone(),
                 })
                 .collect();
-            match lanes.collective(id, jobs)? {
+            let coll_clock = std::time::Instant::now();
+            let result = {
+                let _sp = obs::span(obs::Category::Collective).job(id).step(t as u32);
+                lanes.collective(id, jobs)?
+            };
+            if let Some(h) = &hobs.collective_wait {
+                h.record_ns(coll_clock.elapsed().as_nanos() as u64);
+            }
+            match result {
                 CollectiveResult::Reduced { job, bucket, vals } => {
                     anyhow::ensure!(
                         (job, bucket) == (id, t as u32),
@@ -171,9 +195,13 @@ pub fn run_job(
                 }
                 other => anyhow::bail!("job {id} step {t}: unexpected lane result {other:?}"),
             }
-            step_seconds.push(clock.elapsed().as_secs_f64());
+            let secs = clock.elapsed().as_secs_f64();
+            if let Some(h) = &hobs.step_latency {
+                h.record_secs(secs);
+            }
+            step_seconds.push(secs);
             clock = std::time::Instant::now();
-            progress(t + 1, wl.steps);
+            progress(t + 1, wl.steps, secs);
             Ok(StepVerdict::Continue)
         },
         |_t| {
@@ -227,17 +255,29 @@ mod tests {
             ..NodeWorkload::default()
         };
         let mut seen = Vec::new();
+        let hobs = JobObs {
+            step_latency: Some(Arc::new(Histogram::default())),
+            collective_wait: Some(Arc::new(Histogram::default())),
+        };
         let report = run_job(
             5,
             &wl,
             &lanes.handle(),
             &AtomicBool::new(false),
-            |done, total| seen.push((done, total)),
+            &hobs,
+            |done, total, secs| {
+                assert!(secs >= 0.0);
+                seen.push((done, total));
+            },
         )
         .unwrap();
         assert!(report.completed);
         assert_eq!(seen, (1..=6).map(|d| (d, 6)).collect::<Vec<_>>());
         assert_eq!(report.step_seconds.len(), 6);
+        let snap = hobs.step_latency.as_ref().unwrap().snapshot();
+        assert_eq!(snap.count, 6, "one step-latency sample per step");
+        let coll = hobs.collective_wait.as_ref().unwrap().snapshot();
+        assert_eq!(coll.count, 6, "one collective-wait sample per step");
         let want = sequential_digest(&wl, 2).unwrap();
         compare_digests(&report.digest, &want, 0.0, 0.0).unwrap();
         assert!(lanes.fault().is_none());
@@ -251,7 +291,7 @@ mod tests {
             ..NodeWorkload::default()
         };
         let cancel = AtomicBool::new(false);
-        let report = run_job(7, &wl, &lanes.handle(), &cancel, |done, _| {
+        let report = run_job(7, &wl, &lanes.handle(), &cancel, &JobObs::default(), |done, _, _| {
             if done == 3 {
                 cancel.store(true, Ordering::SeqCst);
             }

@@ -8,6 +8,8 @@
 //! the latency summaries, `job="N"` labels on the per-job series).
 
 use crate::comm::codec::CodecSnapshot;
+use crate::comm::RttSnapshot;
+use crate::obs::HistSnapshot;
 
 /// One job's slice of the scrape.
 #[derive(Debug, Clone)]
@@ -38,9 +40,17 @@ pub struct ServeMetrics {
     pub completed: u64,
     pub failed: u64,
     pub cancelled: u64,
-    /// Scheduler wait (admission → first step) summary.
+    /// Scheduler wait (admission → first step) summary (the `stats`
+    /// one-liner; the scrape renders the histogram below instead).
     pub wait_seconds_sum: f64,
     pub wait_count: u64,
+    /// Log-bucketed latency distributions (power-of-two second edges).
+    pub sched_wait: HistSnapshot,
+    pub step_latency: HistSnapshot,
+    pub collective_wait: HistSnapshot,
+    /// Heartbeat round-trip stats over the socket links (all zero on
+    /// the channel transport or with heartbeats off).
+    pub rtt: RttSnapshot,
     pub jobs: Vec<JobMetrics>,
     /// Shared-lane wire entropy-codec counters.
     pub codec: CodecSnapshot,
@@ -96,11 +106,25 @@ pub fn render(m: &ServeMetrics) -> String {
         header(&mut out, name, "counter", help);
         out.push_str(&format!("{name} {v}\n"));
     }
-    header(&mut out, "scalecom_serve_scheduler_wait_seconds", "summary", "Admission-to-first-step wait.");
+    header(&mut out, "scalecom_serve_scheduler_wait_seconds", "histogram", "Admission-to-first-step wait.");
+    m.sched_wait.render_prometheus(&mut out, "scalecom_serve_scheduler_wait_seconds", "");
+    header(&mut out, "scalecom_serve_step_latency_seconds", "histogram", "Wall seconds per served job step, all jobs pooled.");
+    m.step_latency.render_prometheus(&mut out, "scalecom_serve_step_latency_seconds", "");
+    header(&mut out, "scalecom_serve_collective_wait_seconds", "histogram", "Wall seconds blocked in the shared-lane collective per step.");
+    m.collective_wait.render_prometheus(&mut out, "scalecom_serve_collective_wait_seconds", "");
+    header(&mut out, "scalecom_heartbeat_rtt_seconds", "gauge", "Heartbeat ping-to-pong round trip over the socket links.");
     out.push_str(&format!(
-        "scalecom_serve_scheduler_wait_seconds_sum {}\n\
-         scalecom_serve_scheduler_wait_seconds_count {}\n",
-        m.wait_seconds_sum, m.wait_count
+        "scalecom_heartbeat_rtt_seconds{{stat=\"min\"}} {}\n\
+         scalecom_heartbeat_rtt_seconds{{stat=\"mean\"}} {}\n\
+         scalecom_heartbeat_rtt_seconds{{stat=\"max\"}} {}\n",
+        m.rtt.min_secs(),
+        m.rtt.mean_secs(),
+        m.rtt.max_secs()
+    ));
+    header(&mut out, "scalecom_heartbeat_rtt_samples_total", "counter", "Heartbeat round trips measured.");
+    out.push_str(&format!(
+        "scalecom_heartbeat_rtt_samples_total {}\n",
+        m.rtt.count
     ));
     if !m.jobs.is_empty() {
         header(&mut out, "scalecom_job_steps_total", "counter", "Steps completed per job.");
@@ -176,8 +200,13 @@ pub fn http_response(request_path: &str, m: &ServeMetrics) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::obs::Histogram;
 
     fn sample() -> ServeMetrics {
+        let h = Histogram::new();
+        for s in [0.1, 0.1, 0.025, 0.025] {
+            h.record_secs(s);
+        }
         ServeMetrics {
             queue_depth: 3,
             running: 2,
@@ -190,6 +219,15 @@ mod tests {
             cancelled: 0,
             wait_seconds_sum: 0.25,
             wait_count: 4,
+            sched_wait: h.snapshot(),
+            step_latency: HistSnapshot::default(),
+            collective_wait: HistSnapshot::default(),
+            rtt: RttSnapshot {
+                count: 3,
+                min_ns: 1_000_000,
+                mean_ns: 2_000_000,
+                max_ns: 4_000_000,
+            },
             jobs: vec![JobMetrics {
                 id: 3,
                 scheme: "scalecom".into(),
@@ -216,6 +254,17 @@ mod tests {
             "scalecom_serve_jobs_rejected_total 1",
             "scalecom_serve_scheduler_wait_seconds_sum 0.25",
             "scalecom_serve_scheduler_wait_seconds_count 4",
+            // 0.025 s lands in the 2^25 ns bucket, 0.1 s in the 2^27 one.
+            "scalecom_serve_scheduler_wait_seconds_bucket{le=\"0.033554432\"} 2",
+            "scalecom_serve_scheduler_wait_seconds_bucket{le=\"0.134217728\"} 4",
+            "scalecom_serve_scheduler_wait_seconds_bucket{le=\"+Inf\"} 4",
+            "# TYPE scalecom_serve_scheduler_wait_seconds histogram",
+            "scalecom_serve_step_latency_seconds_bucket{le=\"+Inf\"} 0",
+            "scalecom_serve_collective_wait_seconds_count 0",
+            "scalecom_heartbeat_rtt_seconds{stat=\"min\"} 0.001",
+            "scalecom_heartbeat_rtt_seconds{stat=\"mean\"} 0.002",
+            "scalecom_heartbeat_rtt_seconds{stat=\"max\"} 0.004",
+            "scalecom_heartbeat_rtt_samples_total 3",
             "scalecom_job_steps_total{job=\"3\",scheme=\"scalecom\",state=\"running\"} 17",
             "scalecom_job_step_latency_seconds_sum{job=\"3\"} 0.034",
             "scalecom_job_comm_bytes_total{job=\"3\",direction=\"up\"} 12000",

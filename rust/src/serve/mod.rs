@@ -24,7 +24,7 @@ pub mod storm;
 
 pub use client::{run_local, ClientConn, SubmitOutcome};
 pub use daemon::{Daemon, ServeConfig};
-pub use job::{run_job, run_steps, JobReport, StepVerdict};
+pub use job::{run_job, run_steps, JobObs, JobReport, StepVerdict};
 pub use lanes::{LaneHandle, SharedLanes};
 pub use metrics::{JobMetrics, ServeMetrics};
 pub use queue::{CancelOutcome, JobQueue, QueueCounters, RejectReason, Submission};

@@ -189,6 +189,29 @@ impl SimReport {
         }
     }
 
+    /// Per-op rollup of the virtual-time event trace, one line per op:
+    /// event count, total virtual milliseconds, total bytes. The
+    /// `--trace` printed form (the raw event list lives on in the
+    /// Chrome-trace file `--trace-out` writes).
+    pub fn trace_summary(&self) -> String {
+        let mut per_op: std::collections::BTreeMap<&'static str, (usize, f64, usize)> =
+            std::collections::BTreeMap::new();
+        for e in &self.trace {
+            let slot = per_op.entry(e.op).or_insert((0, 0.0, 0));
+            slot.0 += 1;
+            slot.1 += e.end_s - e.start_s;
+            slot.2 += e.bytes;
+        }
+        let mut out = format!("trace summary ({} events):\n", self.trace.len());
+        for (op, (count, total_s, bytes)) in &per_op {
+            out.push_str(&format!(
+                "  {op:<16} x{count:<6} {:>10.3} ms  {bytes} bytes\n",
+                total_s * 1e3
+            ));
+        }
+        out
+    }
+
     /// Canonical digest of the full event trace (same seed + same
     /// profile ⇒ byte-identical). Timestamps are formatted at 12
     /// significant digits, so the digest is stable across runs and

@@ -31,6 +31,7 @@ fn daemon(
         transport,
         max_queue,
         max_concurrent,
+        metrics_job_retention: 64,
     })
     .expect("daemon start")
 }
